@@ -1,0 +1,102 @@
+//! Serving scenario: the prediction service (coordinator) fronting the
+//! sarek-like workflow, with four SWMS worker threads submitting
+//! concurrently — the deployment shape of the paper's Fig. 2, with
+//! request latency measured at the client.
+//!
+//! Run: `cargo run --release --example sarek_serving`
+
+use std::time::Instant;
+
+use ksegments::coordinator::PredictionService;
+use ksegments::predictors::ksegments::{KSegmentsPredictor, RetryStrategy};
+use ksegments::sim::{simulate_attempt, AttemptOutcome};
+use ksegments::util::stats;
+use ksegments::workload::{generate_workflow_trace, sarek_workflow};
+
+fn main() {
+    let trace = generate_workflow_trace(&sarek_workflow(), 7);
+    println!(
+        "sarek trace: {} runs over {} task types",
+        trace.n_runs(),
+        trace.n_types()
+    );
+
+    let svc = PredictionService::spawn(Box::new(KSegmentsPredictor::native(
+        4,
+        RetryStrategy::Selective,
+    )));
+    for ty in trace.task_types() {
+        if let Some(mem) = trace.default_alloc(ty) {
+            svc.handle().prime(ty, mem);
+        }
+    }
+
+    // Four workers replay disjoint slices of the submission stream:
+    // predict -> execute (against ground truth) -> report failures ->
+    // feed the completion back. Client-side latency is recorded per
+    // request.
+    let runs: Vec<_> = trace.all_runs_ordered().into_iter().cloned().collect();
+    let n_workers = 4;
+    let chunk = runs.len().div_ceil(n_workers);
+    let start = Instant::now();
+    let mut joins = Vec::new();
+    for part in runs.chunks(chunk) {
+        let h = svc.handle();
+        let part = part.to_vec();
+        joins.push(std::thread::spawn(move || {
+            let mut latencies_us = Vec::with_capacity(part.len());
+            let mut retries = 0u64;
+            for run in part {
+                let t0 = Instant::now();
+                let mut alloc = h.predict(&run.task_type, run.input_mib);
+                latencies_us.push(t0.elapsed().as_nanos() as f64 / 1000.0);
+                let mut attempt = 1;
+                loop {
+                    match simulate_attempt(&run.series, &alloc, attempt) {
+                        AttemptOutcome::Success { .. } => break,
+                        AttemptOutcome::Failure { info, .. } => {
+                            retries += 1;
+                            attempt += 1;
+                            alloc =
+                                h.report_failure(&run.task_type, run.input_mib, alloc, info);
+                            if attempt > 40 {
+                                break;
+                            }
+                        }
+                    }
+                }
+                h.complete(run);
+            }
+            (latencies_us, retries)
+        }));
+    }
+
+    let mut all_lat = Vec::new();
+    let mut total_retries = 0;
+    for j in joins {
+        let (lat, retries) = j.join().expect("worker panicked");
+        all_lat.extend(lat);
+        total_retries += retries;
+    }
+    let wall = start.elapsed();
+    let stats_snapshot = svc.shutdown();
+
+    println!(
+        "\nserved {} predictions / {} completions / {} failure consults in {:.2} s ({:.0} req/s)",
+        stats_snapshot.predictions,
+        stats_snapshot.completions,
+        stats_snapshot.failures,
+        wall.as_secs_f64(),
+        stats_snapshot.predictions as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "prediction latency: p50 {:.1} µs  p95 {:.1} µs  p99 {:.1} µs  max {:.1} µs",
+        stats::percentile(&all_lat, 50.0),
+        stats::percentile(&all_lat, 95.0),
+        stats::percentile(&all_lat, 99.0),
+        stats::percentile(&all_lat, 100.0),
+    );
+    println!("task retries across the workflow: {total_retries}");
+    assert_eq!(stats_snapshot.completions as usize, runs.len());
+    println!("SERVING OK");
+}

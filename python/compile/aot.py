@@ -1,0 +1,90 @@
+"""AOT pipeline: lower the k-Segments fit graph to HLO text artifacts.
+
+Emits, for every k in ``model.K_RANGE``:
+
+    artifacts/ksegments_fit_k{K}.hlo.txt
+
+plus ``artifacts/manifest.json`` describing shapes, argument order and
+output order, which rust/src/runtime reads at load time.
+
+Interchange format is HLO **text**, NOT ``lowered.compile()`` /
+``.serialize()``: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``).  The text parser reassigns ids and
+round-trips cleanly — see /opt/xla-example/README.md.
+
+Lowered with ``return_tuple=True``; the rust side unwraps the 4-tuple.
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).  This is
+the ONLY place python runs; the rust binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import K_RANGE, N_HIST, T_MAX, make_fit_fn
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fit(k: int, n: int = N_HIST, t: int = T_MAX) -> str:
+    """Lower ksegments_fit for a static k to HLO text."""
+    vec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    mat = jax.ShapeDtypeStruct((n, t), jnp.float32)
+    lowered = jax.jit(make_fit_fn(k)).lower(vec, mat, vec, vec)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--out",
+        default="../artifacts/model.hlo.txt",
+        help="sentinel path; artifacts land in its directory",
+    )
+    parser.add_argument("--n", type=int, default=N_HIST)
+    parser.add_argument("--t", type=int, default=T_MAX)
+    args = parser.parse_args()
+
+    out_dir = pathlib.Path(args.out).parent
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    manifest = {
+        "n_hist": args.n,
+        "t_max": args.t,
+        "dtype": "f32",
+        "inputs": ["x[N]", "y[N,T]", "runtime[N]", "valid[N]"],
+        "outputs": ["rt_coef[2]", "rt_offset[]", "seg_coef[K,2]", "seg_off[K]"],
+        "fits": {},
+    }
+    for k in K_RANGE:
+        text = lower_fit(k, args.n, args.t)
+        name = f"ksegments_fit_k{k}.hlo.txt"
+        (out_dir / name).write_text(text)
+        manifest["fits"][str(k)] = name
+        print(f"wrote {name} ({len(text)} chars)")
+
+    # Sentinel file keeps the Makefile dependency simple: it is the k=4
+    # (paper default) module under the canonical name.
+    sentinel = pathlib.Path(args.out)
+    sentinel.write_text((out_dir / "ksegments_fit_k4.hlo.txt").read_text())
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote manifest.json + sentinel {sentinel.name}; dir={out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Pallas kernel: masked batched simple linear regression (closed form).
+
+Fits ``targets[:, m] ~ a_m + b_m * x`` by least squares over valid rows,
+for all M target columns at once.  This is the learning hot-spot of the
+k-Segments online loop: after every task completion the coordinator
+refits k segment models + 1 runtime model from the N most recent
+executions, so the fit is (k+1) simultaneous regressions over a shared
+design vector — exactly what this kernel computes.
+
+Kernel structure: a single program holds ``x [N]``, ``targets [N, M]``
+and ``valid [N]`` in VMEM (for the AOT shapes N=64, M<=17: ~5 KiB) and
+reduces the five masked sufficient statistics (sw, sx, sxx, sy, sxy)
+along the batch (sublane) dimension, then solves the 2x2 normal
+equations per column.  Degenerate designs (fewer than 2 distinct valid
+x) fall back to slope 0 / intercept = masked mean via a select, keeping
+the kernel free of data-dependent control flow.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["linfit", "linfit_kernel"]
+
+
+def linfit_kernel(x_ref, t_ref, v_ref, out_ref):
+    """Pallas kernel body: [N] x, [N, M] targets, [N] valid -> [M, 2]."""
+    x = x_ref[...]
+    targets = t_ref[...]
+    w = v_ref[...]
+
+    # Centered formulation (matches ref.linfit_ref and rust/src/ml):
+    # b = cov_w(x, y) / var_w(x) — stable in f32 where the uncentered
+    # normal equations cancel catastrophically.
+    sw = jnp.sum(w)
+    sw_safe = jnp.maximum(sw, 1.0)
+    xbar = jnp.sum(w * x) / sw_safe
+    ybar = jnp.sum(w[:, None] * targets, axis=0) / sw_safe  # [M]
+    xc = x - xbar
+    varx = jnp.sum(w * xc * xc)
+    cov = jnp.sum((w * xc)[:, None] * targets, axis=0)  # [M]
+
+    thresh = 1e-7 * sw_safe * (xbar * xbar + 1.0)
+    safe = (sw >= 1.5) & (varx > thresh)
+    b = jnp.where(safe, cov / jnp.where(safe, varx, 1.0), 0.0)
+    a = ybar - b * xbar
+
+    out_ref[:, 0] = a
+    out_ref[:, 1] = b
+
+
+def linfit(x: jnp.ndarray, targets: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """Masked batched linear fit via the Pallas kernel.
+
+    x: [N], targets: [N, M], valid: [N] in {0,1}.
+    Returns [M, 2] rows of (intercept, slope).
+    """
+    n, m = targets.shape
+    if x.shape != (n,) or valid.shape != (n,):
+        raise ValueError(
+            f"shape mismatch: x{x.shape}, targets{targets.shape}, valid{valid.shape}"
+        )
+    return pl.pallas_call(
+        linfit_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, 2), targets.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, targets, valid.astype(targets.dtype))

@@ -1,0 +1,107 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: ``pytest python/tests`` asserts the
+Pallas kernels (run under ``interpret=True``) match these implementations
+bit-for-bit (up to float tolerance) over a hypothesis-driven sweep of
+shapes and dtypes.  The rust-native implementation in ``rust/src/ml``
+mirrors the same math in f64 and is differential-tested against the AOT
+artifact produced from the kernel path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["segment_bounds", "segpeaks_ref", "linfit_ref", "fit_ref"]
+
+
+def segment_bounds(t: int, k: int) -> list[tuple[int, int]]:
+    """Paper §III-B change points: ``i = floor(T/k)``; segments are
+    ``[s*i, (s+1)*i)`` for ``s < k-1`` and the last segment absorbs the
+    remainder ``[(k-1)*i, T)``.
+
+    Requires ``k <= t`` so every segment is non-empty.
+    """
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    if t < k:
+        raise ValueError(f"series length {t} shorter than k={k}")
+    i = t // k
+    bounds = [(s * i, (s + 1) * i) for s in range(k - 1)]
+    bounds.append(((k - 1) * i, t))
+    return bounds
+
+
+def segpeaks_ref(y: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Per-segment peak extraction: ``Y** = (max(s_1), ..., max(s_k))``.
+
+    y: [N, T] batched memory-usage series.  Returns [N, k] peaks.
+    """
+    n, t = y.shape
+    peaks = []
+    for lo, hi in segment_bounds(t, k):
+        peaks.append(jnp.max(y[:, lo:hi], axis=1))
+    return jnp.stack(peaks, axis=1)
+
+
+def linfit_ref(x: jnp.ndarray, targets: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """Masked batched simple linear regression (closed form).
+
+    Fits ``target[:, m] ~ a_m + b_m * x`` by least squares over rows where
+    ``valid == 1``.  Degenerate designs (fewer than 2 valid rows, or all
+    x identical) fall back to slope 0 / intercept = masked mean, which is
+    what an online predictor should do with a single observation.
+
+    x: [N], targets: [N, M], valid: [N] in {0, 1}.  Returns [M, 2] rows
+    of ``(intercept a, slope b)``.
+    """
+    # Centered formulation: b = cov_w(x, y) / var_w(x).  The uncentered
+    # normal equations (sw*sxy - sx*sy) cancel catastrophically in f32
+    # when x values are large and close together; centering first keeps
+    # the subtraction exact-ish.  The rust mirror (rust/src/ml/linreg.rs)
+    # uses the identical formulation.
+    w = valid.astype(targets.dtype)
+    sw = jnp.sum(w)
+    sw_safe = jnp.maximum(sw, 1.0)
+    xbar = jnp.sum(w * x) / sw_safe
+    ybar = jnp.sum(w[:, None] * targets, axis=0) / sw_safe  # [M]
+    xc = x - xbar
+    varx = jnp.sum(w * xc * xc)
+    cov = jnp.sum((w * xc)[:, None] * targets, axis=0)  # [M] (ybar term cancels)
+
+    # Degenerate when <2 valid rows or x (relatively) constant.
+    thresh = 1e-7 * sw_safe * (xbar * xbar + 1.0)
+    safe = (sw >= 1.5) & (varx > thresh)
+    b = jnp.where(safe, cov / jnp.where(safe, varx, 1.0), 0.0)
+    a = ybar - b * xbar
+    return jnp.stack([a, b], axis=1)
+
+
+def fit_ref(x, y_series, runtime, valid, k: int):
+    """Full k-Segments fit (paper §III-B), pure jnp.
+
+    Returns (rt_coef [2], rt_offset scalar, seg_coef [k,2], seg_off [k]).
+
+    * runtime model: LR(input size -> runtime); offset = largest
+      historical OVERprediction (subtracted at predict time so the
+      runtime is under-predicted, per §III-B).
+    * segment models: LR(input size -> segment peak); offset = largest
+      historical UNDERprediction (added to the intercept at predict time
+      so memory is over-predicted).
+    """
+    peaks = segpeaks_ref(y_series, k)  # [N, k]
+    w = valid.astype(y_series.dtype)
+
+    rt_coef = linfit_ref(x, runtime[:, None], valid)[0]  # [2]
+    rt_pred = rt_coef[0] + rt_coef[1] * x
+    # overprediction = predicted - actual; only valid rows contribute.
+    rt_over = jnp.max(jnp.where(w > 0, rt_pred - runtime, -jnp.inf))
+    rt_offset = jnp.maximum(rt_over, 0.0)
+
+    seg_coef = linfit_ref(x, peaks, valid)  # [k, 2]
+    seg_pred = seg_coef[:, 0][None, :] + seg_coef[:, 1][None, :] * x[:, None]
+    # underprediction = actual - predicted
+    under = jnp.where(w[:, None] > 0, peaks - seg_pred, -jnp.inf)
+    seg_off = jnp.maximum(jnp.max(under, axis=0), 0.0)  # [k]
+
+    return rt_coef, rt_offset, seg_coef, seg_off

@@ -1,0 +1,80 @@
+"""Pallas kernel: masked per-segment peak extraction (paper §III-B, Y**).
+
+Given a batch of resampled memory-usage time series ``Y: [N, T]`` and a
+static segment count ``k``, computes ``P: [N, k]`` where ``P[n, s]`` is the
+maximum of segment ``s`` of row ``n``.  Change points follow the paper:
+``i = floor(T/k)``; the last segment absorbs the remainder.
+
+Kernel structure (written for the TPU memory hierarchy even though we
+execute under ``interpret=True`` on CPU — see DESIGN.md
+§Hardware-Adaptation):
+
+* The grid tiles the batch dimension into ``block_n``-row slabs; each
+  program instance holds one ``[block_n, T]`` slab in VMEM.  For the AOT
+  shapes (N=64, T=256, f32) a slab is 64 KiB — far below VMEM budget, so
+  one program sees whole rows and no cross-program reduction is needed.
+* Segment maxima are computed with an iota-derived column mask and a
+  lane-dimension ``max`` reduction — contiguous, vectorizable, and free of
+  data-dependent control flow (the k-loop is unrolled at trace time since
+  k is static).
+* Masked-out lanes contribute ``-inf`` so padding can never win the max.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["segpeaks", "segpeaks_kernel"]
+
+
+def segpeaks_kernel(y_ref, out_ref, *, k: int, t: int):
+    """Pallas kernel body: one [block_n, T] slab -> [block_n, k] peaks.
+
+    Work is O(block_n · T) independent of k (perf pass, EXPERIMENTS.md
+    §Perf): the first k·i columns (i = ⌊T/k⌋) reshape to
+    [block_n, k, i] and reduce along the lane tail in one pass; the
+    remainder columns [k·i, T) — which the paper's change-point formula
+    assigns to the LAST segment — reduce separately and fold into
+    column k−1. The previous version unrolled k full-width masked
+    reductions (O(block_n · T · k)), which at k=16 cost 16× the VPU
+    work for identical output.
+    """
+    y = y_ref[...]  # [block_n, T] in VMEM
+    n = y.shape[0]
+    i = t // k
+    body = y[:, : k * i].reshape(n, k, i)
+    peaks = jnp.max(body, axis=2)  # [block_n, k]
+    if k * i < t:
+        tail = jnp.max(y[:, k * i :], axis=1)  # [block_n]
+        last = jnp.maximum(peaks[:, k - 1], tail)
+        peaks = jnp.concatenate([peaks[:, : k - 1], last[:, None]], axis=1)
+    out_ref[...] = peaks
+
+
+def segpeaks(y: jnp.ndarray, k: int, *, block_n: int | None = None) -> jnp.ndarray:
+    """Per-segment peaks of batched series via the Pallas kernel.
+
+    y: [N, T]; returns [N, k].  ``block_n`` tiles the batch dimension
+    (must divide N); defaults to min(N, 64).
+    """
+    n, t = y.shape
+    if t < k:
+        raise ValueError(f"series length {t} shorter than k={k}")
+    if block_n is None:
+        block_n = min(n, 64)
+    if n % block_n != 0:
+        raise ValueError(f"block_n={block_n} must divide N={n}")
+
+    kernel = functools.partial(segpeaks_kernel, k=k, t=t)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block_n,),
+        in_specs=[pl.BlockSpec((block_n, t), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_n, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), y.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(y)

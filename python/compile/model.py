@@ -1,0 +1,73 @@
+"""L2: the k-Segments fit graph (paper §III-B), built on the L1 kernels.
+
+``make_fit_fn(k)`` returns a jax function computing, in one fused module:
+
+  inputs  x       f32[N]     total input size per historical execution (MiB)
+          y       f32[N, T]  peak-preserving resampled usage series (MiB)
+          runtime f32[N]     actual runtime per execution (seconds)
+          valid   f32[N]     1.0 for real rows, 0.0 for padding
+
+  outputs rt_coef    f32[2]    runtime regression (intercept, slope)
+          rt_offset  f32[]     largest historical runtime OVERprediction
+                               (subtracted at predict time -> underpredict)
+          seg_coef   f32[k,2]  per-segment peak regressions
+          seg_off    f32[k]    largest historical segment UNDERprediction
+                               (added at predict time -> overpredict)
+
+This module is lowered once per k by ``aot.py`` to HLO text and executed
+from the rust coordinator's online-learning path (rust/src/runtime).
+Python never runs at request time.
+
+Prediction itself (evaluating the step function, monotonicity clamping,
+the 100 MB floor) is trivial scalar math and lives in rust
+(rust/src/predictors/ksegments.rs) — shipping it through XLA would cost
+more in dispatch than it computes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+from .kernels.linfit import linfit
+from .kernels.segpeaks import segpeaks
+
+# Shared padding constants — mirrored into artifacts/manifest.json by
+# aot.py and read by rust/src/runtime at load time.  Keep in sync with
+# DESIGN.md §4.
+N_HIST = 64  # most recent executions used per fit
+T_MAX = 256  # peak-preserving resample length
+K_RANGE = tuple(range(1, 17))  # artifact emitted per k in 1..=16
+
+__all__ = ["N_HIST", "T_MAX", "K_RANGE", "ksegments_fit", "make_fit_fn"]
+
+
+def ksegments_fit(x, y, runtime, valid, *, k: int):
+    """Full fit: segment peaks (L1) -> k+1 regressions (L1) -> offsets (L2)."""
+    w = valid.astype(y.dtype)
+
+    peaks = segpeaks(y, k)  # [N, k] via Pallas
+    # One fused solve for the k segment models and the runtime model:
+    # column 0..k-1 = segment peaks, column k = runtime.
+    targets = jnp.concatenate([peaks, runtime[:, None]], axis=1)  # [N, k+1]
+    coef = linfit(x, targets, w)  # [k+1, 2] via Pallas
+
+    seg_coef = coef[:k]  # [k, 2]
+    rt_coef = coef[k]  # [2]
+
+    # Residual offsets (paper: "largest historical prediction error").
+    rt_pred = rt_coef[0] + rt_coef[1] * x
+    rt_over = jnp.where(w > 0, rt_pred - runtime, -jnp.inf)
+    rt_offset = jnp.maximum(jnp.max(rt_over), 0.0)
+
+    seg_pred = seg_coef[:, 0][None, :] + seg_coef[:, 1][None, :] * x[:, None]
+    under = jnp.where(w[:, None] > 0, peaks - seg_pred, -jnp.inf)
+    seg_off = jnp.maximum(jnp.max(under, axis=0), 0.0)  # [k]
+
+    return rt_coef, rt_offset, seg_coef, seg_off
+
+
+def make_fit_fn(k: int):
+    """Bind the static segment count; the result is jit/lower-able."""
+    return functools.partial(ksegments_fit, k=k)

@@ -1,0 +1,71 @@
+"""AOT pipeline tests: HLO text generation + manifest consistency.
+
+These validate the build-time contract the rust runtime depends on; the
+rust side has a mirror-image integration test that loads the emitted
+artifacts and cross-checks numerics against its native fit.
+"""
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import lower_fit, to_hlo_text
+from compile.model import K_RANGE, N_HIST, T_MAX, make_fit_fn
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+
+class TestLowering:
+    def test_hlo_text_parses_back(self):
+        """Round-trip: the text we emit must be valid HLO text."""
+        text = lower_fit(k=2, n=8, t=16)
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+
+    def test_hlo_has_tuple_root_with_four_elements(self):
+        text = lower_fit(k=3, n=8, t=16)
+        # return_tuple=True -> root is a 4-tuple (rt_coef, rt_off, seg, off)
+        assert "(f32[2]" in text and "f32[3,2]" in text and "f32[3]" in text
+
+    def test_small_and_aot_shapes_produce_distinct_modules(self):
+        a = lower_fit(k=2, n=8, t=16)
+        b = lower_fit(k=2, n=16, t=32)
+        assert a != b
+
+    def test_numerics_survive_lowering(self):
+        """Execute the lowered module through jax and compare to eager."""
+        rng = np.random.default_rng(0)
+        n, t, k = 8, 16, 4
+        x = jnp.asarray(rng.uniform(1, 100, n), dtype=jnp.float32)
+        y = jnp.asarray(rng.uniform(0, 500, (n, t)), dtype=jnp.float32)
+        rt = jnp.asarray(rng.uniform(10, 50, n), dtype=jnp.float32)
+        v = jnp.ones(n, dtype=jnp.float32)
+        eager = make_fit_fn(k)(x, y, rt, v)
+        compiled = jax.jit(make_fit_fn(k))(x, y, rt, v)
+        for g, w in zip(compiled, eager):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.skipif(not (ARTIFACTS / "manifest.json").exists(), reason="run `make artifacts` first")
+class TestEmittedArtifacts:
+    def test_manifest_covers_k_range(self):
+        manifest = json.loads((ARTIFACTS / "manifest.json").read_text())
+        assert manifest["n_hist"] == N_HIST
+        assert manifest["t_max"] == T_MAX
+        assert sorted(int(k) for k in manifest["fits"]) == sorted(K_RANGE)
+
+    def test_artifact_files_exist_and_are_hlo_text(self):
+        manifest = json.loads((ARTIFACTS / "manifest.json").read_text())
+        for k, name in manifest["fits"].items():
+            text = (ARTIFACTS / name).read_text()
+            assert text.startswith("HloModule"), f"k={k} artifact is not HLO text"
+            assert f"f32[{k},2]" in text, f"k={k} artifact has wrong seg_coef shape"
+
+    def test_sentinel_matches_default_k(self):
+        sentinel = (ARTIFACTS / "model.hlo.txt").read_text()
+        k4 = (ARTIFACTS / "ksegments_fit_k4.hlo.txt").read_text()
+        assert sentinel == k4

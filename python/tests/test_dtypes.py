@@ -1,0 +1,96 @@
+"""Dtype and shape robustness for the Pallas kernels.
+
+The AOT artifacts ship f32, but the kernels must stay correct across
+the float dtypes Pallas supports on TPU (bf16 inputs are the realistic
+monitoring-precision case) and across block/grid decompositions —
+especially the remainder-tail path of the restructured segpeaks kernel
+(k ∤ T), which is where the perf-pass rewrite could have broken the
+paper's change-point semantics.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.linfit import linfit
+from compile.kernels.ref import linfit_ref, segpeaks_ref
+from compile.kernels.segpeaks import segpeaks
+
+
+class TestSegpeaksDtypes:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+    def test_matches_reference_in_dtype(self, dtype):
+        rng = np.random.default_rng(0)
+        y = jnp.asarray(rng.uniform(0, 1000, size=(8, 48)), dtype=dtype)
+        for k in (1, 3, 5, 7):
+            got = segpeaks(y, k)
+            want = segpeaks_ref(y, k)
+            assert got.dtype == dtype
+            np.testing.assert_array_equal(
+                np.asarray(got, dtype=np.float32), np.asarray(want, dtype=np.float32)
+            )
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_max_is_exact_in_low_precision(self, dtype):
+        # max is order-free: even bf16 must be bit-exact vs reference
+        y = jnp.asarray([[1.0, 2.0, 4.0, 8.0, 16.0, 32.0]], dtype=dtype)
+        got = np.asarray(segpeaks(y, 3), dtype=np.float32)
+        np.testing.assert_array_equal(got, [[2.0, 8.0, 32.0]])
+
+
+class TestSegpeaksTailPath:
+    """k ∤ T exercises the reshape + remainder-fold (perf rewrite)."""
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        st.integers(min_value=2, max_value=96),
+        st.integers(min_value=1, max_value=16),
+        st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_remainder_folds_into_last_segment(self, t, k, seed):
+        if k > t:
+            k = t
+        rng = np.random.default_rng(seed)
+        y = jnp.asarray(rng.uniform(-100, 100, size=(4, t)), dtype=jnp.float32)
+        got = segpeaks(y, k)
+        want = segpeaks_ref(y, k)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_tail_peak_wins_when_larger(self):
+        # t=10, k=4 -> i=2, last segment covers [6, 10); put the peak in
+        # the remainder columns [8, 10)
+        y = np.ones((1, 10), dtype=np.float32)
+        y[0, 9] = 99.0
+        got = np.asarray(segpeaks(jnp.asarray(y), 4))
+        assert got[0, 3] == 99.0
+
+    def test_tail_does_not_leak_into_earlier_segments(self):
+        y = np.zeros((1, 10), dtype=np.float32)
+        y[0, 9] = 99.0  # remainder column
+        got = np.asarray(segpeaks(jnp.asarray(y), 4))
+        np.testing.assert_array_equal(got[0, :3], [0.0, 0.0, 0.0])
+
+
+class TestLinfitDtypes:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_recovers_line_in_dtype(self, dtype):
+        x = jnp.asarray([1.0, 2.0, 3.0, 4.0], dtype=dtype)
+        t = (2.0 + 1.5 * x)[:, None].astype(dtype)
+        coef = np.asarray(
+            linfit(x, t, jnp.ones(4, dtype=dtype)), dtype=np.float32
+        )
+        np.testing.assert_allclose(coef, [[2.0, 1.5]], rtol=2e-2, atol=5e-2)
+
+    def test_f32_matches_ref_on_wide_m(self):
+        rng = np.random.default_rng(5)
+        x = jnp.asarray(rng.uniform(1, 100, 32), dtype=jnp.float32)
+        t = jnp.asarray(rng.uniform(0, 1000, (32, 17)), dtype=jnp.float32)
+        v = jnp.ones(32, dtype=jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(linfit(x, t, v)),
+            np.asarray(linfit_ref(x, t, v)),
+            rtol=1e-5,
+            atol=1e-4,
+        )

@@ -1,0 +1,184 @@
+"""Kernel-vs-reference correctness: the CORE signal for Layer 1.
+
+The Pallas kernels (interpret=True) must match the pure-jnp oracles in
+``compile.kernels.ref`` over a hypothesis-driven sweep of shapes, dtypes
+and value distributions, plus hand-picked edge cases.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.linfit import linfit
+from compile.kernels.ref import linfit_ref, segment_bounds, segpeaks_ref
+from compile.kernels.segpeaks import segpeaks
+
+# ---------------------------------------------------------------------------
+# segment_bounds (the paper's change-point formula)
+# ---------------------------------------------------------------------------
+
+
+class TestSegmentBounds:
+    def test_even_split(self):
+        assert segment_bounds(8, 4) == [(0, 2), (2, 4), (4, 6), (6, 8)]
+
+    def test_remainder_goes_to_last_segment(self):
+        # j=10, k=4 -> i=2; last segment is [6, 10)
+        assert segment_bounds(10, 4) == [(0, 2), (2, 4), (4, 6), (6, 10)]
+
+    def test_k_equals_one_is_whole_series(self):
+        assert segment_bounds(17, 1) == [(0, 17)]
+
+    def test_k_equals_t(self):
+        bounds = segment_bounds(5, 5)
+        assert bounds == [(0, 1), (1, 2), (2, 3), (3, 4), (4, 5)]
+
+    def test_covers_series_exactly(self):
+        for t in (4, 7, 16, 100, 256):
+            for k in range(1, min(t, 16) + 1):
+                bounds = segment_bounds(t, k)
+                assert bounds[0][0] == 0
+                assert bounds[-1][1] == t
+                for (_, hi), (lo2, _) in zip(bounds, bounds[1:]):
+                    assert hi == lo2  # contiguous, no gaps/overlap
+                assert all(hi > lo for lo, hi in bounds)  # non-empty
+
+    def test_rejects_bad_k(self):
+        with pytest.raises(ValueError):
+            segment_bounds(10, 0)
+        with pytest.raises(ValueError):
+            segment_bounds(3, 4)
+
+
+# ---------------------------------------------------------------------------
+# segpeaks kernel vs reference
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def series_batch(draw):
+    n = draw(st.sampled_from([1, 2, 4, 8, 16, 64]))
+    t = draw(st.sampled_from([4, 8, 17, 31, 64, 256]))
+    k = draw(st.integers(min_value=1, max_value=min(t, 16)))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    y = rng.uniform(0.0, 24_000.0, size=(n, t)).astype(np.float32)
+    return y, k
+
+
+class TestSegpeaksKernel:
+    @settings(max_examples=40, deadline=None)
+    @given(series_batch())
+    def test_matches_reference(self, case):
+        y, k = case
+        got = segpeaks(jnp.asarray(y), k)
+        want = segpeaks_ref(jnp.asarray(y), k)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_known_values(self):
+        y = jnp.asarray([[1.0, 5.0, 2.0, 3.0, 9.0, 0.0]], dtype=jnp.float32)
+        # t=6, k=3 -> segments [0,2) [2,4) [4,6)
+        got = np.asarray(segpeaks(y, 3))
+        np.testing.assert_array_equal(got, [[5.0, 3.0, 9.0]])
+
+    def test_k1_is_global_peak(self):
+        rng = np.random.default_rng(7)
+        y = rng.uniform(0, 100, size=(8, 33)).astype(np.float32)
+        got = np.asarray(segpeaks(jnp.asarray(y), 1))[:, 0]
+        np.testing.assert_array_equal(got, y.max(axis=1))
+
+    def test_negative_values_safe_vs_mask(self):
+        # masked lanes use -inf, so all-negative rows must still work
+        y = -jnp.abs(jnp.asarray(np.random.default_rng(0).normal(size=(4, 16)), dtype=jnp.float32))
+        got = segpeaks(y, 4)
+        want = segpeaks_ref(y, 4)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_blocked_grid_matches_single_block(self):
+        rng = np.random.default_rng(3)
+        y = jnp.asarray(rng.uniform(0, 50, size=(64, 64)), dtype=jnp.float32)
+        a = segpeaks(y, 5, block_n=16)
+        b = segpeaks(y, 5, block_n=64)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_rejects_nondivisible_block(self):
+        y = jnp.zeros((6, 8), dtype=jnp.float32)
+        with pytest.raises(ValueError):
+            segpeaks(y, 2, block_n=4)
+
+
+# ---------------------------------------------------------------------------
+# linfit kernel vs reference (and vs numpy lstsq on clean designs)
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def regression_case(draw):
+    n = draw(st.sampled_from([2, 3, 8, 16, 64]))
+    m = draw(st.integers(min_value=1, max_value=17))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    n_valid = draw(st.integers(min_value=0, max_value=n))
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(1.0, 10_000.0, size=n).astype(np.float32)
+    t = rng.uniform(0.0, 20_000.0, size=(n, m)).astype(np.float32)
+    valid = np.zeros(n, dtype=np.float32)
+    valid[:n_valid] = 1.0
+    return x, t, valid
+
+
+class TestLinfitKernel:
+    @settings(max_examples=40, deadline=None)
+    @given(regression_case())
+    def test_matches_reference(self, case):
+        x, t, valid = map(jnp.asarray, case)
+        got = np.asarray(linfit(x, t, valid))
+        want = np.asarray(linfit_ref(x, t, valid))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_recovers_exact_line(self):
+        x = jnp.asarray([1.0, 2.0, 3.0, 4.0], dtype=jnp.float32)
+        t = (3.0 + 2.0 * x)[:, None]
+        coef = np.asarray(linfit(x, t, jnp.ones(4, dtype=jnp.float32)))
+        np.testing.assert_allclose(coef, [[3.0, 2.0]], rtol=1e-5, atol=1e-4)
+
+    def test_matches_numpy_lstsq(self):
+        rng = np.random.default_rng(11)
+        x = rng.uniform(0, 100, size=32).astype(np.float32)
+        t = (5.0 + 0.7 * x + rng.normal(0, 3, size=32)).astype(np.float32)[:, None]
+        coef = np.asarray(
+            linfit(jnp.asarray(x), jnp.asarray(t), jnp.ones(32, dtype=jnp.float32))
+        )[0]
+        a_mat = np.stack([np.ones_like(x), x], axis=1)
+        want, *_ = np.linalg.lstsq(a_mat.astype(np.float64), t[:, 0].astype(np.float64))
+        np.testing.assert_allclose(coef, want, rtol=1e-3, atol=1e-2)
+
+    def test_single_valid_row_falls_back_to_mean(self):
+        x = jnp.asarray([5.0, 99.0], dtype=jnp.float32)
+        t = jnp.asarray([[42.0], [7.0]], dtype=jnp.float32)
+        valid = jnp.asarray([1.0, 0.0], dtype=jnp.float32)
+        coef = np.asarray(linfit(x, t, valid))
+        np.testing.assert_allclose(coef, [[42.0, 0.0]], rtol=1e-6)
+
+    def test_identical_x_falls_back_to_mean(self):
+        x = jnp.asarray([3.0, 3.0, 3.0], dtype=jnp.float32)
+        t = jnp.asarray([[1.0], [2.0], [3.0]], dtype=jnp.float32)
+        coef = np.asarray(linfit(x, t, jnp.ones(3, dtype=jnp.float32)))
+        np.testing.assert_allclose(coef, [[2.0, 0.0]], rtol=1e-6)
+
+    def test_invalid_rows_are_ignored(self):
+        # Garbage in masked rows must not change the fit.
+        x = jnp.asarray([1.0, 2.0, 3.0, 1e6], dtype=jnp.float32)
+        t = jnp.asarray([[2.0], [4.0], [6.0], [-1e9]], dtype=jnp.float32)
+        valid = jnp.asarray([1.0, 1.0, 1.0, 0.0], dtype=jnp.float32)
+        coef = np.asarray(linfit(x, t, valid))
+        np.testing.assert_allclose(coef, [[0.0, 2.0]], rtol=1e-4, atol=1e-3)
+
+    def test_shape_mismatch_rejected(self):
+        with pytest.raises(ValueError):
+            linfit(
+                jnp.zeros(3, dtype=jnp.float32),
+                jnp.zeros((4, 2), dtype=jnp.float32),
+                jnp.zeros(3, dtype=jnp.float32),
+            )

@@ -1,0 +1,101 @@
+"""L2 fit-graph tests: ksegments_fit vs the pure-jnp oracle and vs a
+straight numpy re-derivation of the paper's §III-B procedure."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.ref import fit_ref, segment_bounds
+from compile.model import K_RANGE, N_HIST, T_MAX, ksegments_fit, make_fit_fn
+
+
+def synth_case(seed, n=16, t=64, noise=0.05):
+    """A workload-shaped case: input-size-linear ramp-to-peak series."""
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(100.0, 5000.0, size=n).astype(np.float32)
+    runtime = (30.0 + 0.02 * x * (1 + rng.normal(0, noise, n))).astype(np.float32)
+    base = 50.0 + 0.5 * x  # peak scales with input size
+    tt = np.linspace(0.0, 1.0, t, dtype=np.float32)
+    y = np.outer(base, np.sqrt(tt)) * (1 + rng.normal(0, noise, (n, t)))
+    y = np.maximum(y, 0).astype(np.float32)
+    valid = np.ones(n, dtype=np.float32)
+    return x, y, runtime, valid
+
+
+class TestFitGraph:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        st.integers(0, 2**31 - 1),
+        st.sampled_from([1, 2, 4, 7, 13, 16]),
+    )
+    def test_matches_oracle(self, seed, k):
+        x, y, runtime, valid = synth_case(seed)
+        got = ksegments_fit(*map(jnp.asarray, (x, y, runtime, valid)), k=k)
+        want = fit_ref(*map(jnp.asarray, (x, y, runtime, valid)), k=k)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=2e-4, atol=1e-2)
+
+    def test_offsets_are_nonnegative(self):
+        x, y, runtime, valid = synth_case(0)
+        rt_coef, rt_off, seg_coef, seg_off = ksegments_fit(
+            *map(jnp.asarray, (x, y, runtime, valid)), k=4
+        )
+        assert float(rt_off) >= 0.0
+        assert np.all(np.asarray(seg_off) >= 0.0)
+
+    def test_offset_covers_every_training_row(self):
+        """Intercept + offset must make every historical segment peak
+        non-underpredicted (the paper's 'avoid underpredictions')."""
+        x, y, runtime, valid = synth_case(42)
+        k = 4
+        _, _, seg_coef, seg_off = map(
+            np.asarray, ksegments_fit(*map(jnp.asarray, (x, y, runtime, valid)), k=k)
+        )
+        bounds = segment_bounds(y.shape[1], k)
+        peaks = np.stack([y[:, lo:hi].max(axis=1) for lo, hi in bounds], axis=1)
+        pred = seg_coef[:, 0][None] + seg_off[None] + seg_coef[:, 1][None] * x[:, None]
+        assert np.all(pred >= peaks - 1e-2 * np.maximum(peaks, 1.0))
+
+    def test_runtime_offset_makes_prediction_conservative(self):
+        x, y, runtime, valid = synth_case(7)
+        rt_coef, rt_off, _, _ = map(
+            np.asarray, ksegments_fit(*map(jnp.asarray, (x, y, runtime, valid)), k=2)
+        )
+        pred = rt_coef[0] + rt_coef[1] * x - rt_off
+        # after subtracting the worst overprediction, no training row is
+        # overpredicted anymore
+        assert np.all(pred <= runtime + 1e-2 * runtime)
+
+    def test_padding_rows_are_inert(self):
+        x, y, runtime, valid = synth_case(3, n=8)
+        # embed in a padded batch with garbage in invalid rows
+        xp = np.concatenate([x, np.full(8, 1e9, np.float32)])
+        yp = np.concatenate([y, np.full((8, y.shape[1]), -1e9, np.float32)])
+        rp = np.concatenate([runtime, np.full(8, 1e9, np.float32)])
+        vp = np.concatenate([valid, np.zeros(8, np.float32)])
+        got = ksegments_fit(*map(jnp.asarray, (xp, yp, rp, vp)), k=4)
+        want = ksegments_fit(*map(jnp.asarray, (x, y, runtime, valid)), k=4)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-4, atol=1e-3)
+
+    def test_jit_and_eager_agree(self):
+        x, y, runtime, valid = synth_case(5)
+        args = tuple(map(jnp.asarray, (x, y, runtime, valid)))
+        eager = ksegments_fit(*args, k=4)
+        jitted = jax.jit(make_fit_fn(4))(*args)
+        for g, w in zip(jitted, eager):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-5, atol=1e-4)
+
+    def test_aot_shapes_lower(self):
+        """The exact padded shapes shipped to rust must trace."""
+        vec = jax.ShapeDtypeStruct((N_HIST,), jnp.float32)
+        mat = jax.ShapeDtypeStruct((N_HIST, T_MAX), jnp.float32)
+        lowered = jax.jit(make_fit_fn(4)).lower(vec, mat, vec, vec)
+        assert "func" in str(lowered.compiler_ir("stablehlo"))
+
+    def test_k_range_is_sane(self):
+        assert K_RANGE[0] == 1 and K_RANGE[-1] == 16
+        assert all(k <= T_MAX for k in K_RANGE)

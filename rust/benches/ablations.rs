@@ -1,0 +1,11 @@
+//! `cargo bench --bench ablations` — the design-choice ablation suite
+//! (DESIGN.md §6b, EXPERIMENTS.md §Ablations): error offsets, retry
+//! factor, history window, LR offset strategies, fixed-vs-adaptive k.
+
+use ksegments::bench_harness::ablation::run_all;
+use ksegments::bench_harness::time_once;
+
+fn main() {
+    let (tables, _dt) = time_once("ablation suite (seed 42, 50% training)", || run_all(42));
+    println!("\n{tables}");
+}

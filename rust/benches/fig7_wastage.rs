@@ -1,0 +1,48 @@
+//! `cargo bench --bench fig7_wastage` — regenerates the paper's
+//! Fig. 7a (average wastage), Fig. 7b (lowest-wastage wins) and
+//! Fig. 7c (average retries) across all 6 methods × 3 training
+//! fractions × 33 evaluated tasks, and times both the full grid and
+//! the per-method evaluation.
+//!
+//! The printed tables are the source of the numbers recorded in
+//! EXPERIMENTS.md.
+
+use ksegments::bench_harness::{
+    evaluate_method, paper_traces, run_fig7, time_once, FitterChoice,
+};
+use ksegments::predictors::ksegments::{KSegmentsPredictor, RetryStrategy};
+use ksegments::predictors::lr_witt::LrWittPredictor;
+use ksegments::predictors::ppm::PpmPredictor;
+use ksegments::predictors::MemoryPredictor;
+
+fn main() {
+    println!("== fig7 benchmark (seed 42, native fitter) ==\n");
+
+    // Per-method single-fraction timings (the unit of repeated work).
+    let traces = paper_traces(42);
+    let mk_list: Vec<(&str, Box<dyn Fn() -> Box<dyn MemoryPredictor>>)> = vec![
+        ("ppm_improved", Box::new(|| Box::new(PpmPredictor::improved()))),
+        ("lr_witt", Box::new(|| Box::new(LrWittPredictor::paper_baseline()))),
+        (
+            "ksegments_selective",
+            Box::new(|| Box::new(KSegmentsPredictor::native(4, RetryStrategy::Selective))),
+        ),
+    ];
+    for (name, mk) in &mk_list {
+        let (_rep, _dt) = time_once(&format!("evaluate_method/{name}@0.5"), || {
+            evaluate_method(mk.as_ref(), &traces, 0.5)
+        });
+    }
+    println!();
+
+    // The full grid, timed end to end, then the figure tables.
+    let (results, _dt) = time_once("fig7 full grid (6 methods x 3 fractions)", || {
+        run_fig7(42, FitterChoice::Native)
+    });
+    println!();
+    println!("{}", results.render_wastage());
+    println!("{}", results.render_wins());
+    println!("{}", results.render_retries());
+    println!("{}", results.headline(0.75));
+    println!("{}", results.headline(0.5));
+}

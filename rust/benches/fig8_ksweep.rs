@@ -1,0 +1,18 @@
+//! `cargo bench --bench fig8_ksweep` — regenerates the paper's Fig. 8:
+//! memory wastage as a function of the segment count k for the
+//! Qualimap-like task (8a, zigzag with local optima) and the
+//! AdapterRemoval-like task (8b, monotone-ish decrease), at 50 %
+//! training data, and times the sweep.
+
+use ksegments::bench_harness::{run_fig8, time_once, FitterChoice};
+
+fn main() {
+    println!("== fig8 benchmark (seed 42, 50% training, k = 1..15) ==\n");
+    let ks: Vec<usize> = (1..=15).collect();
+    for task in ["eager/qualimap", "eager/adapter_removal"] {
+        let (r, _dt) = time_once(&format!("fig8 sweep {task}"), || {
+            run_fig8(42, FitterChoice::Native, task, &ks)
+        });
+        println!("\n{}", r.render());
+    }
+}

@@ -1,0 +1,127 @@
+//! `cargo bench --bench hotpath` — micro-benchmarks of the L3 hot
+//! paths identified in EXPERIMENTS.md §Perf:
+//!
+//! * `simulate_attempt` (static & dynamic) — the simulator inner loop;
+//! * `NativeFitter::fit` — the per-completion online refit;
+//! * `XlaFitter::fit` — the same fit through the AOT PJRT module
+//!   (skipped with a notice if `make artifacts` has not run);
+//! * `KSegmentsPredictor::predict` — the submission-time path served
+//!   by the coordinator;
+//! * step-function construction and evaluation.
+
+use ksegments::bench_harness::{bench, black_box};
+use ksegments::ml::fitter::{FitInput, KsegFitter, NativeFitter};
+use ksegments::ml::step_fn::StepFunction;
+use ksegments::predictors::ksegments::{KSegmentsPredictor, RetryStrategy};
+use ksegments::predictors::{Allocation, MemoryPredictor};
+use ksegments::rng::Rng;
+use ksegments::runtime::XlaFitter;
+use ksegments::sim::simulate_attempt;
+use ksegments::trace::{TaskRun, UsageSeries};
+use ksegments::units::{MemMiB, Seconds};
+
+fn synth_series(n: usize, rng: &mut Rng) -> UsageSeries {
+    let peak = rng.uniform(500.0, 2000.0);
+    let samples: Vec<f64> = (0..n)
+        .map(|i| peak * ((i + 1) as f64 / n as f64).sqrt())
+        .collect();
+    UsageSeries::new(2.0, samples)
+}
+
+fn synth_fit_input(n: usize, t: usize, rng: &mut Rng) -> FitInput {
+    let mut input = FitInput::default();
+    for _ in 0..n {
+        let x = rng.uniform(100.0, 4000.0);
+        let peak = 50.0 + 0.8 * x * rng.uniform(0.9, 1.1);
+        input.x.push(x);
+        input.runtime.push(30.0 + 0.05 * x);
+        input
+            .series
+            .push((0..t).map(|j| peak * (j + 1) as f64 / t as f64).collect());
+    }
+    input
+}
+
+fn main() {
+    println!("== hotpath micro-benchmarks ==\n");
+    let mut rng = Rng::new(42);
+
+    // -- simulator inner loop ------------------------------------------
+    let series_1800 = synth_series(1800, &mut rng); // a 1-hour task at 2 s
+    let static_alloc = Allocation::Static(MemMiB(2500.0));
+    bench("simulate_attempt/static/1800-samples", 40, 200, || {
+        simulate_attempt(black_box(&series_1800), black_box(&static_alloc), 1)
+    });
+
+    let step = StepFunction::monotone_clamped(
+        Seconds(3600.0),
+        vec![600.0, 1200.0, 1900.0, 2500.0],
+        MemMiB(100.0),
+        MemMiB(131072.0),
+    );
+    let dyn_alloc = Allocation::Dynamic(step);
+    bench("simulate_attempt/dynamic-k4/1800-samples", 40, 200, || {
+        simulate_attempt(black_box(&series_1800), black_box(&dyn_alloc), 1)
+    });
+
+    // -- online refit ----------------------------------------------------
+    let fit_input = synth_fit_input(64, 256, &mut rng);
+    let mut native = NativeFitter;
+    bench("fit/native/n64-t256-k4", 30, 50, || {
+        native.fit(black_box(&fit_input), 4)
+    });
+    bench("fit/native/n64-t256-k16", 30, 50, || {
+        native.fit(black_box(&fit_input), 16)
+    });
+
+    match XlaFitter::load_default() {
+        Ok(mut xla) => {
+            // warm the executable cache (compile once)
+            let _ = xla.fit(&fit_input, 4);
+            bench("fit/xla-pjrt/n64-t256-k4", 20, 20, || {
+                xla.fit(black_box(&fit_input), 4)
+            });
+        }
+        Err(e) => println!("fit/xla-pjrt: SKIPPED ({e:#})"),
+    }
+
+    // -- submission-time predict -----------------------------------------
+    let mut predictor = KSegmentsPredictor::native(4, RetryStrategy::Selective);
+    predictor.prime("t", MemMiB(8192.0));
+    for i in 0..64 {
+        let series = synth_series(128, &mut rng);
+        predictor.observe(&TaskRun {
+            task_type: "t".into(),
+            input_mib: 100.0 + i as f64 * 10.0,
+            runtime: series.duration(),
+            series,
+            seq: i,
+        });
+    }
+    // cold predict = refit + build; warm predict = cached fit
+    bench("predict/ksegments/warm-cache", 30, 500, || {
+        predictor.predict(black_box("t"), black_box(1234.5))
+    });
+
+    // -- step-function primitives ----------------------------------------
+    let f = StepFunction::monotone_clamped(
+        Seconds(1000.0),
+        vec![100.0, 200.0, 300.0, 400.0],
+        MemMiB(100.0),
+        MemMiB(131072.0),
+    );
+    bench("step_fn/value_at", 20, 100_000, || {
+        black_box(f.value_at(black_box(567.8)))
+    });
+    bench("step_fn/monotone_clamped-k16", 20, 10_000, || {
+        StepFunction::monotone_clamped(
+            Seconds(1000.0),
+            black_box(vec![
+                1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0, 11.0, 12.0, 13.0, 14.0, 15.0,
+                16.0,
+            ]),
+            MemMiB(100.0),
+            MemMiB(131072.0),
+        )
+    });
+}

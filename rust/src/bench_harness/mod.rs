@@ -1,0 +1,17 @@
+//! Benchmark + figure-regeneration harness.
+//!
+//! * [`timer`] — minimal criterion-style measurement (offline cache has
+//!   no criterion);
+//! * [`figures`] — one entry point per paper figure (Fig. 1, 4, 7a–c,
+//!   8), shared by the CLI and the `cargo bench` targets.
+
+pub mod ablation;
+pub mod figures;
+pub mod report;
+pub mod timer;
+
+pub use figures::{
+    evaluate_method, method_names, method_roster, paper_traces, run_fig1, run_fig4, run_fig7,
+    run_fig8, Fig7Results, Fig8Results, FitterChoice,
+};
+pub use timer::{bench, black_box, time_once, Measurement};

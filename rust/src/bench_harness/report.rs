@@ -1,0 +1,66 @@
+//! One-shot report generation: every figure + the ablation suite +
+//! runtime validation, rendered into a single markdown document
+//! (`ksegments report --out FILE`). Useful for regenerating the data
+//! section of EXPERIMENTS.md after any change.
+
+use crate::bench_harness::ablation::run_all as run_ablations;
+use crate::bench_harness::figures::{run_fig1, run_fig4, run_fig7, run_fig8, FitterChoice};
+
+/// Build the complete experiments report (may take ~seconds).
+pub fn full_report(seed: u64, choice: FitterChoice) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "# ksegments experiment report\n\nseed = {seed}, fitter = {choice:?}\n\n"
+    ));
+
+    out.push_str(&run_fig1(seed));
+    out.push('\n');
+    out.push_str(&run_fig4(seed, choice));
+    out.push('\n');
+
+    let fig7 = run_fig7(seed, choice);
+    out.push_str(&fig7.render_wastage());
+    out.push('\n');
+    out.push_str(&fig7.render_wins());
+    out.push('\n');
+    out.push_str(&fig7.render_retries());
+    out.push('\n');
+    out.push_str("```\n");
+    out.push_str(&fig7.headline(0.75));
+    out.push_str(&fig7.headline(0.5));
+    out.push_str("```\n\n");
+
+    let ks: Vec<usize> = (1..=15).collect();
+    for task in ["eager/qualimap", "eager/adapter_removal"] {
+        out.push_str(&run_fig8(seed, choice, task, &ks).render());
+        out.push('\n');
+    }
+
+    out.push_str(&run_ablations(seed));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    // full_report is exercised end-to-end by the CLI; keep a cheap
+    // structural test here so regressions in any section surface fast.
+    use super::*;
+
+    #[test]
+    #[ignore = "runs the full grid (~10 s); covered by `ksegments report` in CI-style runs"]
+    fn report_contains_every_section() {
+        let r = full_report(42, FitterChoice::Native);
+        for needle in [
+            "Fig 1",
+            "Fig 4",
+            "Fig 7a",
+            "Fig 7b",
+            "Fig 7c",
+            "Fig 8",
+            "Ablation — error offsets",
+            "fixed vs adaptive k",
+        ] {
+            assert!(r.contains(needle), "missing section {needle}");
+        }
+    }
+}

@@ -1,0 +1,185 @@
+//! Cluster and resource-manager model.
+//!
+//! The paper's experiments ran on nodes with 128 GB of memory; the
+//! resource manager (Slurm/Kubernetes in the paper's framing) admits a
+//! task onto a node only if its requested memory fits, and the PPM
+//! baseline's failure policy is "assign a node's maximum amount of
+//! memory" — so node capacity is load-bearing for reproducing Fig. 7
+//! (it is exactly what makes original PPM waste so much, §IV-E).
+
+use crate::units::MemMiB;
+
+/// Static description of one node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeSpec {
+    pub mem: MemMiB,
+    pub cores: u32,
+}
+
+impl NodeSpec {
+    /// The paper's testbed: 128 GB DDR4, 16C/32T EPYC 7282.
+    pub fn paper_testbed() -> NodeSpec {
+        NodeSpec { mem: MemMiB::from_gib(128.0), cores: 32 }
+    }
+}
+
+/// A node with live memory accounting.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub spec: NodeSpec,
+    reserved: f64, // MiB
+    /// Monotone counters for observability.
+    pub admitted: u64,
+    pub rejected: u64,
+}
+
+impl Node {
+    pub fn new(spec: NodeSpec) -> Node {
+        Node { spec, reserved: 0.0, admitted: 0, rejected: 0 }
+    }
+
+    pub fn free(&self) -> MemMiB {
+        MemMiB((self.spec.mem.0 - self.reserved).max(0.0))
+    }
+
+    pub fn reserved(&self) -> MemMiB {
+        MemMiB(self.reserved)
+    }
+
+    /// Try to reserve `mem`; returns false (and counts a rejection) if
+    /// it does not fit.
+    pub fn reserve(&mut self, mem: MemMiB) -> bool {
+        if mem.0 <= 0.0 {
+            return true;
+        }
+        if self.reserved + mem.0 <= self.spec.mem.0 + 1e-9 {
+            self.reserved += mem.0;
+            self.admitted += 1;
+            true
+        } else {
+            self.rejected += 1;
+            false
+        }
+    }
+
+    pub fn release(&mut self, mem: MemMiB) {
+        self.reserved = (self.reserved - mem.0).max(0.0);
+    }
+}
+
+/// Reservation handle returned by the resource manager; releasing it
+/// returns the memory to its node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Reservation {
+    pub node_idx: usize,
+    pub mem: MemMiB,
+}
+
+/// A homogeneous cluster with first-fit placement — the substrate the
+/// simulated SWMS submits to.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    nodes: Vec<Node>,
+}
+
+impl Cluster {
+    pub fn new(n_nodes: usize, spec: NodeSpec) -> Cluster {
+        assert!(n_nodes > 0);
+        Cluster { nodes: (0..n_nodes).map(|_| Node::new(spec)).collect() }
+    }
+
+    /// Single paper-testbed node (the evaluation setup).
+    pub fn paper_testbed() -> Cluster {
+        Cluster::new(1, NodeSpec::paper_testbed())
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    /// Capacity of the largest node — what "assign the node's maximum
+    /// memory" resolves to for the PPM failure policy.
+    pub fn node_max_mem(&self) -> MemMiB {
+        self.nodes
+            .iter()
+            .map(|n| n.spec.mem)
+            .fold(MemMiB::ZERO, MemMiB::max)
+    }
+
+    /// First-fit reservation across nodes.
+    pub fn reserve(&mut self, mem: MemMiB) -> Option<Reservation> {
+        for (i, node) in self.nodes.iter_mut().enumerate() {
+            if node.free().0 >= mem.0 && node.reserve(mem) {
+                return Some(Reservation { node_idx: i, mem });
+            }
+        }
+        None
+    }
+
+    pub fn release(&mut self, r: Reservation) {
+        self.nodes[r.node_idx].release(r.mem);
+    }
+
+    /// Total free memory across nodes.
+    pub fn total_free(&self) -> MemMiB {
+        self.nodes.iter().map(|n| n.free()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_is_128_gib() {
+        let c = Cluster::paper_testbed();
+        assert_eq!(c.node_max_mem(), MemMiB::from_gib(128.0));
+        assert_eq!(c.n_nodes(), 1);
+    }
+
+    #[test]
+    fn reserve_and_release() {
+        let mut c = Cluster::new(1, NodeSpec { mem: MemMiB(1000.0), cores: 4 });
+        let r = c.reserve(MemMiB(600.0)).unwrap();
+        assert_eq!(c.total_free(), MemMiB(400.0));
+        assert!(c.reserve(MemMiB(500.0)).is_none());
+        c.release(r);
+        assert_eq!(c.total_free(), MemMiB(1000.0));
+    }
+
+    #[test]
+    fn first_fit_spills_to_second_node() {
+        let mut c = Cluster::new(2, NodeSpec { mem: MemMiB(1000.0), cores: 4 });
+        let _a = c.reserve(MemMiB(800.0)).unwrap();
+        let b = c.reserve(MemMiB(800.0)).unwrap();
+        assert_eq!(b.node_idx, 1);
+    }
+
+    #[test]
+    fn rejection_counting() {
+        let mut n = Node::new(NodeSpec { mem: MemMiB(100.0), cores: 1 });
+        assert!(n.reserve(MemMiB(80.0)));
+        assert!(!n.reserve(MemMiB(30.0)));
+        assert_eq!(n.admitted, 1);
+        assert_eq!(n.rejected, 1);
+        assert_eq!(n.free(), MemMiB(20.0));
+    }
+
+    #[test]
+    fn release_never_goes_negative() {
+        let mut n = Node::new(NodeSpec { mem: MemMiB(100.0), cores: 1 });
+        n.release(MemMiB(50.0));
+        assert_eq!(n.free(), MemMiB(100.0));
+    }
+
+    #[test]
+    fn zero_reservation_is_free() {
+        let mut n = Node::new(NodeSpec { mem: MemMiB(100.0), cores: 1 });
+        assert!(n.reserve(MemMiB(0.0)));
+        assert_eq!(n.reserved(), MemMiB(0.0));
+    }
+}

@@ -1,0 +1,263 @@
+//! The prediction service — the long-running coordinator a SWMS talks
+//! to (the deployment shape of Fig. 2/6).
+//!
+//! A dedicated model thread owns the predictor (and through it the
+//! PJRT runtime, which wants single-threaded use); SWMS-side clients
+//! hold a cheap clonable [`ServiceHandle`] and talk to it over
+//! channels:
+//!
+//! * [`ServiceHandle::predict`] — blocking request/response, the
+//!   submission-time path;
+//! * [`ServiceHandle::report_failure`] — blocking, returns the retry
+//!   allocation per the predictor's failure strategy;
+//! * [`ServiceHandle::complete`] — fire-and-forget completion
+//!   ingestion; the model thread folds finished runs into the model in
+//!   arrival order (the online loop), so prediction latency never
+//!   blocks on retraining more than one fit.
+//!
+//! The offline crate cache has no tokio; the service uses std threads
+//! and mpsc channels, which for this request pattern (single model
+//! owner, many blocking callers) is the same architecture tokio's
+//! actor pattern would express.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use crate::predictors::{Allocation, FailureInfo, MemoryPredictor};
+use crate::trace::TaskRun;
+use crate::units::MemMiB;
+
+/// Requests understood by the model thread.
+enum Request {
+    Prime { task_type: String, default: MemMiB },
+    Predict { task_type: String, input_mib: f64, reply: Sender<Allocation> },
+    Failure {
+        task_type: String,
+        input_mib: f64,
+        failed: Allocation,
+        info: FailureInfo,
+        reply: Sender<Allocation>,
+    },
+    Complete { run: Box<TaskRun> },
+    Stats { reply: Sender<ServiceStats> },
+    Shutdown,
+}
+
+/// Observability counters maintained by the model thread.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServiceStats {
+    pub predictions: u64,
+    pub completions: u64,
+    pub failures: u64,
+}
+
+/// Clonable client handle.
+#[derive(Clone)]
+pub struct ServiceHandle {
+    tx: Sender<Request>,
+}
+
+impl ServiceHandle {
+    pub fn prime(&self, task_type: &str, default: MemMiB) {
+        let _ = self.tx.send(Request::Prime {
+            task_type: task_type.to_string(),
+            default,
+        });
+    }
+
+    /// Submission-time allocation request (blocking).
+    pub fn predict(&self, task_type: &str, input_mib: f64) -> Allocation {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Predict { task_type: task_type.to_string(), input_mib, reply })
+            .expect("prediction service is down");
+        rx.recv().expect("prediction service dropped the reply")
+    }
+
+    /// Failure-strategy request (blocking).
+    pub fn report_failure(
+        &self,
+        task_type: &str,
+        input_mib: f64,
+        failed: Allocation,
+        info: FailureInfo,
+    ) -> Allocation {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Failure {
+                task_type: task_type.to_string(),
+                input_mib,
+                failed,
+                info,
+                reply,
+            })
+            .expect("prediction service is down");
+        rx.recv().expect("prediction service dropped the reply")
+    }
+
+    /// Completion ingestion (non-blocking).
+    pub fn complete(&self, run: TaskRun) {
+        let _ = self.tx.send(Request::Complete { run: Box::new(run) });
+    }
+
+    pub fn stats(&self) -> ServiceStats {
+        let (reply, rx) = channel();
+        self.tx.send(Request::Stats { reply }).expect("service down");
+        rx.recv().expect("service dropped stats reply")
+    }
+}
+
+/// The running service; join it via [`PredictionService::shutdown`].
+pub struct PredictionService {
+    handle: ServiceHandle,
+    thread: Option<JoinHandle<ServiceStats>>,
+}
+
+impl PredictionService {
+    /// Spawn the model thread around any predictor.
+    pub fn spawn(predictor: Box<dyn MemoryPredictor>) -> PredictionService {
+        let (tx, rx) = channel();
+        let thread = std::thread::Builder::new()
+            .name("ksegments-model".to_string())
+            .spawn(move || model_loop(predictor, rx))
+            .expect("spawning model thread");
+        PredictionService { handle: ServiceHandle { tx }, thread: Some(thread) }
+    }
+
+    pub fn handle(&self) -> ServiceHandle {
+        self.handle.clone()
+    }
+
+    /// Stop the model thread and return its final counters.
+    pub fn shutdown(mut self) -> ServiceStats {
+        let _ = self.handle.tx.send(Request::Shutdown);
+        self.thread
+            .take()
+            .expect("already shut down")
+            .join()
+            .expect("model thread panicked")
+    }
+}
+
+impl Drop for PredictionService {
+    fn drop(&mut self) {
+        if let Some(t) = self.thread.take() {
+            let _ = self.handle.tx.send(Request::Shutdown);
+            let _ = t.join();
+        }
+    }
+}
+
+fn model_loop(mut predictor: Box<dyn MemoryPredictor>, rx: Receiver<Request>) -> ServiceStats {
+    let mut stats = ServiceStats::default();
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Prime { task_type, default } => predictor.prime(&task_type, default),
+            Request::Predict { task_type, input_mib, reply } => {
+                stats.predictions += 1;
+                let _ = reply.send(predictor.predict(&task_type, input_mib));
+            }
+            Request::Failure { task_type, input_mib, failed, info, reply } => {
+                stats.failures += 1;
+                let _ = reply.send(predictor.on_failure(&task_type, input_mib, &failed, &info));
+            }
+            Request::Complete { run } => {
+                stats.completions += 1;
+                predictor.observe(&run);
+            }
+            Request::Stats { reply } => {
+                let _ = reply.send(stats);
+            }
+            Request::Shutdown => break,
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictors::default_config::DefaultConfigPredictor;
+    use crate::predictors::ksegments::{KSegmentsPredictor, RetryStrategy};
+    use crate::trace::UsageSeries;
+    use crate::units::Seconds;
+
+    fn run(input: f64, peak: f64) -> TaskRun {
+        let samples: Vec<f64> = (0..8).map(|j| peak * (j + 1) as f64 / 8.0).collect();
+        TaskRun {
+            task_type: "w/t".into(),
+            input_mib: input,
+            runtime: Seconds(16.0),
+            series: UsageSeries::new(2.0, samples),
+            seq: 0,
+        }
+    }
+
+    #[test]
+    fn predict_roundtrip() {
+        let svc = PredictionService::spawn(Box::new(DefaultConfigPredictor::new()));
+        let h = svc.handle();
+        h.prime("w/t", MemMiB(2048.0));
+        assert_eq!(h.predict("w/t", 10.0), Allocation::Static(MemMiB(2048.0)));
+        let stats = svc.shutdown();
+        assert_eq!(stats.predictions, 1);
+    }
+
+    #[test]
+    fn completions_train_the_model() {
+        let svc = PredictionService::spawn(Box::new(KSegmentsPredictor::native(
+            4,
+            RetryStrategy::Selective,
+        )));
+        let h = svc.handle();
+        h.prime("w/t", MemMiB(2048.0));
+        for i in 0..12 {
+            h.complete(run(100.0 + 10.0 * i as f64, 200.0 + 10.0 * i as f64));
+        }
+        // channel is FIFO: by the time predict is answered, all
+        // completions have been ingested
+        let alloc = h.predict("w/t", 150.0);
+        assert!(alloc.is_dynamic());
+        let stats = svc.shutdown();
+        assert_eq!(stats.completions, 12);
+    }
+
+    #[test]
+    fn failure_path_returns_escalated_allocation() {
+        let svc = PredictionService::spawn(Box::new(DefaultConfigPredictor::new()));
+        let h = svc.handle();
+        let failed = Allocation::Static(MemMiB(100.0));
+        let info = FailureInfo { time_s: 1.0, used_mib: 150.0, attempt: 1 };
+        let next = h.report_failure("w/t", 10.0, failed, info);
+        assert_eq!(next, Allocation::Static(MemMiB(200.0)));
+        assert_eq!(svc.shutdown().failures, 1);
+    }
+
+    #[test]
+    fn many_clients_share_the_service() {
+        let svc = PredictionService::spawn(Box::new(DefaultConfigPredictor::new()));
+        let mut joins = Vec::new();
+        for i in 0..8 {
+            let h = svc.handle();
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..50 {
+                    let _ = h.predict(&format!("w/t{i}"), 1.0);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(svc.shutdown().predictions, 400);
+    }
+
+    #[test]
+    fn drop_shuts_down_cleanly() {
+        let svc = PredictionService::spawn(Box::new(DefaultConfigPredictor::new()));
+        let h = svc.handle();
+        drop(svc);
+        // handle calls after shutdown must not panic the caller thread
+        // (send fails silently for fire-and-forget)
+        h.complete(run(1.0, 1.0));
+    }
+}

@@ -1,0 +1,152 @@
+//! Structured event log for the workflow engine — the observability
+//! surface a production SWMS integration would scrape (counters alone
+//! hide *which* task retried and why).
+
+use crate::units::MemMiB;
+
+/// One engine event, in occurrence order.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EngineEvent {
+    /// Task submitted with a predicted (peak) allocation.
+    Submitted { task_type: String, seq: u64, requested: MemMiB },
+    /// Resource manager could not place the request immediately.
+    Queued { task_type: String, seq: u64, requested: MemMiB },
+    /// Attempt failed by under-allocation at `time_s`.
+    Failed {
+        task_type: String,
+        seq: u64,
+        attempt: u32,
+        time_s: f64,
+        used: MemMiB,
+        allocated: MemMiB,
+    },
+    /// Run completed (possibly after retries).
+    Completed { task_type: String, seq: u64, attempts: u32 },
+}
+
+impl EngineEvent {
+    pub fn task_type(&self) -> &str {
+        match self {
+            EngineEvent::Submitted { task_type, .. }
+            | EngineEvent::Queued { task_type, .. }
+            | EngineEvent::Failed { task_type, .. }
+            | EngineEvent::Completed { task_type, .. } => task_type,
+        }
+    }
+
+    pub fn seq(&self) -> u64 {
+        match self {
+            EngineEvent::Submitted { seq, .. }
+            | EngineEvent::Queued { seq, .. }
+            | EngineEvent::Failed { seq, .. }
+            | EngineEvent::Completed { seq, .. } => *seq,
+        }
+    }
+}
+
+/// Append-only event log with query helpers.
+#[derive(Debug, Clone, Default)]
+pub struct EventLog {
+    events: Vec<EngineEvent>,
+    /// Cap to bound memory in long soaks (0 = unbounded). When hit, the
+    /// oldest half is dropped (coarse ring semantics; counters in
+    /// `EngineReport` stay exact).
+    cap: usize,
+}
+
+impl EventLog {
+    pub fn new() -> EventLog {
+        EventLog::default()
+    }
+
+    pub fn with_cap(cap: usize) -> EventLog {
+        EventLog { events: Vec::new(), cap }
+    }
+
+    pub fn push(&mut self, ev: EngineEvent) {
+        if self.cap > 0 && self.events.len() >= self.cap {
+            self.events.drain(..self.cap / 2);
+        }
+        self.events.push(ev);
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &EngineEvent> {
+        self.events.iter()
+    }
+
+    /// All failures of a task type, in order.
+    pub fn failures_of(&self, task_type: &str) -> Vec<&EngineEvent> {
+        self.events
+            .iter()
+            .filter(|e| matches!(e, EngineEvent::Failed { .. }) && e.task_type() == task_type)
+            .collect()
+    }
+
+    /// Runs that needed more than one attempt.
+    pub fn retried_runs(&self) -> Vec<(String, u64, u32)> {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                EngineEvent::Completed { task_type, seq, attempts } if *attempts > 1 => {
+                    Some((task_type.clone(), *seq, *attempts))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn failed(ty: &str, seq: u64, attempt: u32) -> EngineEvent {
+        EngineEvent::Failed {
+            task_type: ty.into(),
+            seq,
+            attempt,
+            time_s: 1.0,
+            used: MemMiB(200.0),
+            allocated: MemMiB(100.0),
+        }
+    }
+
+    #[test]
+    fn push_and_query() {
+        let mut log = EventLog::new();
+        log.push(EngineEvent::Submitted { task_type: "a".into(), seq: 0, requested: MemMiB(1.0) });
+        log.push(failed("a", 0, 1));
+        log.push(EngineEvent::Completed { task_type: "a".into(), seq: 0, attempts: 2 });
+        log.push(EngineEvent::Completed { task_type: "b".into(), seq: 1, attempts: 1 });
+        assert_eq!(log.len(), 4);
+        assert_eq!(log.failures_of("a").len(), 1);
+        assert!(log.failures_of("b").is_empty());
+        assert_eq!(log.retried_runs(), vec![("a".to_string(), 0, 2)]);
+    }
+
+    #[test]
+    fn accessors() {
+        let e = failed("x", 7, 3);
+        assert_eq!(e.task_type(), "x");
+        assert_eq!(e.seq(), 7);
+    }
+
+    #[test]
+    fn cap_drops_oldest_half() {
+        let mut log = EventLog::with_cap(4);
+        for i in 0..6 {
+            log.push(EngineEvent::Completed { task_type: "t".into(), seq: i, attempts: 1 });
+        }
+        assert!(log.len() <= 4 + 1);
+        // oldest events gone
+        assert!(log.iter().all(|e| e.seq() >= 2));
+    }
+}

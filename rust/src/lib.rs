@@ -1,0 +1,78 @@
+//! # ksegments — dynamic memory prediction for scientific workflow tasks
+//!
+//! Production-grade reproduction of Bader et al., *Predicting Dynamic
+//! Memory Requirements for Scientific Workflow Tasks* (2023).
+//!
+//! The crate implements the complete system the paper describes:
+//!
+//! * the **k-Segments** method — runtime prediction + per-segment peak
+//!   regressions merged into a monotone step allocation function, with
+//!   Selective and Partial retry strategies ([`predictors::ksegments`]);
+//! * every **baseline** it is evaluated against — workflow defaults,
+//!   Tovar et al.'s PPM (+ the paper's Improved variant), and Witt
+//!   et al.'s feedback-loop linear regression ([`predictors`]);
+//! * the **substrate**: a Nextflow-like workflow engine
+//!   ([`workflow`], [`engine`]), a cluster/resource-manager model
+//!   ([`cluster`]), a cgroup-style monitoring pipeline with an
+//!   in-memory time-series store ([`monitoring`], [`tsdb`]), and a
+//!   synthetic nf-core workload generator calibrated to the paper's
+//!   eager/sarek traces ([`workload`]);
+//! * the **evaluation harness**: the online simulator and wastage
+//!   accounting of §IV ([`sim`], [`metrics`]) and the figure
+//!   regeneration code ([`bench_harness`]);
+//! * the **AOT runtime bridge**: the batched model fit is lowered from
+//!   JAX + Pallas to HLO at build time and executed through the PJRT
+//!   CPU client on the online-learning path ([`runtime`]), with a
+//!   bit-mirrored native implementation in [`ml`] used for
+//!   differential testing and as a general-shape fallback.
+//!
+//! See `DESIGN.md` for the paper→module mapping and `EXPERIMENTS.md`
+//! for reproduced-vs-paper results.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use ksegments::prelude::*;
+//!
+//! // Generate an eager-like trace and evaluate k-Segments on it.
+//! let trace = ksegments::workload::generate_workflow_trace(
+//!     &ksegments::workload::eager_workflow(), 42);
+//! let cfg = ksegments::sim::SimConfig::default();
+//! let mut method = ksegments::predictors::ksegments::KSegmentsPredictor::native(
+//!     4, ksegments::predictors::ksegments::RetryStrategy::Selective);
+//! let report = ksegments::sim::simulate_trace(&trace, &mut method, &cfg);
+//! println!("wastage = {:.2} GB·s", report.total_wastage_gbs());
+//! ```
+
+pub mod bench_harness;
+pub mod cluster;
+pub mod coordinator;
+pub mod engine;
+pub mod metrics;
+pub mod ml;
+pub mod monitoring;
+pub mod predictors;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod trace;
+pub mod tsdb;
+pub mod units;
+pub mod util;
+pub mod workload;
+
+/// Workflow DAG specifications (re-export; lives in [`workload`]).
+pub mod workflow {
+    pub use crate::workload::{TaskTypeSpec, WorkflowSpec};
+}
+
+/// Most-used types, re-exported for downstream convenience.
+pub mod prelude {
+    pub use crate::metrics::{MethodReport, TaskReport};
+    pub use crate::ml::step_fn::StepFunction;
+    pub use crate::predictors::{Allocation, FailureInfo, MemoryPredictor};
+    pub use crate::sim::{simulate_trace, SimConfig};
+    pub use crate::trace::{TaskRun, Trace, UsageSeries};
+    pub use crate::units::{GbSeconds, MemMiB, Seconds};
+    pub use crate::workload::{eager_workflow, generate_workflow_trace, sarek_workflow};
+}

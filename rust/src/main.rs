@@ -1,0 +1,367 @@
+//! `ksegments` CLI — leader entrypoint for trace generation, the
+//! evaluation harness, figure regeneration, and the prediction service
+//! demo.
+//!
+//! Subcommands (run with no args for help):
+//!
+//! ```text
+//! ksegments generate  --workflow eager|sarek --seed N --out FILE [--format jsonl|csv]
+//! ksegments simulate  --method NAME --frac F [--seed N] [--xla]
+//! ksegments fig7      [--seed N] [--xla]          # Fig. 7a/7b/7c + headline
+//! ksegments fig8      [--seed N] [--xla]          # wastage vs k, both tasks
+//! ksegments fig4      [--seed N] [--xla]          # step-function example
+//! ksegments fig1      [--seed N]                  # optimization potential
+//! ksegments validate-runtime                      # XLA fit vs native fit
+//! ksegments serve     [--seed N]                  # prediction-service demo
+//! ```
+//!
+//! (Arg parsing is hand-rolled: the offline crate cache has no clap.)
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use ksegments::bench_harness::{run_fig1, run_fig4, run_fig7, run_fig8, FitterChoice};
+use ksegments::coordinator::PredictionService;
+use ksegments::ml::fitter::{KsegFitter, NativeFitter};
+use ksegments::predictors::default_config::DefaultConfigPredictor;
+use ksegments::predictors::ksegments::{KSegmentsPredictor, RetryStrategy};
+use ksegments::predictors::lr_witt::LrWittPredictor;
+use ksegments::predictors::ppm::PpmPredictor;
+use ksegments::predictors::MemoryPredictor;
+use ksegments::runtime::XlaFitter;
+use ksegments::sim::{simulate_trace, SimConfig};
+use ksegments::trace::{write_trace_csv, write_trace_jsonl};
+use ksegments::workload::{eager_workflow, generate_workflow_trace, sarek_workflow};
+
+const USAGE: &str = "\
+ksegments — dynamic memory prediction for scientific workflow tasks
+(reproduction of Bader et al., 2023)
+
+USAGE:
+  ksegments generate  --workflow eager|sarek [--seed N] --out FILE [--format jsonl|csv]
+  ksegments simulate  --method METHOD [--frac F] [--seed N] [--workflow W] [--xla]
+  ksegments fig7      [--seed N] [--xla]
+  ksegments fig8      [--seed N] [--xla]
+  ksegments fig4      [--seed N] [--xla]
+  ksegments fig1      [--seed N]
+  ksegments ablate    [--seed N]
+  ksegments report    [--seed N] [--xla] [--out FILE]
+  ksegments validate-runtime
+  ksegments serve     [--seed N]
+
+METHODS: default | ppm | ppm-improved | lr | ksegments-selective |
+         ksegments-partial | ksegments-adaptive
+";
+
+/// Hand-rolled `--key value` / `--flag` parser.
+struct Args {
+    cmd: String,
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    fn parse() -> Result<Args> {
+        let mut argv = std::env::args().skip(1);
+        let cmd = argv.next().unwrap_or_default();
+        let mut kv = BTreeMap::new();
+        let mut flags = Vec::new();
+        let rest: Vec<String> = argv.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let a = &rest[i];
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("unexpected positional argument {a:?}");
+            };
+            if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                kv.insert(key.to_string(), rest[i + 1].clone());
+                i += 2;
+            } else {
+                flags.push(key.to_string());
+                i += 1;
+            }
+        }
+        Ok(Args { cmd, kv, flags })
+    }
+
+    fn seed(&self) -> u64 {
+        self.kv.get("seed").and_then(|s| s.parse().ok()).unwrap_or(42)
+    }
+
+    fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    fn fitter(&self) -> FitterChoice {
+        if self.flag("xla") {
+            FitterChoice::Xla
+        } else {
+            FitterChoice::Native
+        }
+    }
+}
+
+fn workflow_by_name(name: &str) -> Result<ksegments::workload::WorkflowSpec> {
+    match name {
+        "eager" => Ok(eager_workflow()),
+        "sarek" => Ok(sarek_workflow()),
+        other => bail!("unknown workflow {other:?} (eager|sarek)"),
+    }
+}
+
+fn method_by_name(name: &str, choice: FitterChoice) -> Result<Box<dyn MemoryPredictor>> {
+    let kseg = |strategy| -> Box<dyn MemoryPredictor> {
+        match choice {
+            FitterChoice::Native => Box::new(KSegmentsPredictor::native(4, strategy)),
+            FitterChoice::Xla => {
+                let fitter: Box<dyn KsegFitter> = match XlaFitter::load_default() {
+                    Ok(f) => Box::new(f),
+                    Err(e) => {
+                        eprintln!("warning: {e:#}; using native fitter");
+                        Box::new(NativeFitter)
+                    }
+                };
+                Box::new(KSegmentsPredictor::with_fitter(
+                    fitter,
+                    Default::default(),
+                    strategy,
+                ))
+            }
+        }
+    };
+    Ok(match name {
+        "default" => Box::new(DefaultConfigPredictor::new()),
+        "ppm" => Box::new(PpmPredictor::original()),
+        "ppm-improved" => Box::new(PpmPredictor::improved()),
+        "lr" => Box::new(LrWittPredictor::paper_baseline()),
+        "ksegments-selective" => kseg(RetryStrategy::Selective),
+        "ksegments-partial" => kseg(RetryStrategy::Partial),
+        "ksegments-adaptive" => Box::new(
+            ksegments::predictors::adaptive_k::AdaptiveKPredictor::native(
+                RetryStrategy::Selective,
+            ),
+        ),
+        other => bail!("unknown method {other:?}"),
+    })
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let wf_name = args.kv.get("workflow").context("--workflow required")?;
+    let out = PathBuf::from(args.kv.get("out").context("--out required")?);
+    let format = args.kv.get("format").map(String::as_str).unwrap_or("jsonl");
+    let wf = workflow_by_name(wf_name)?;
+    let trace = generate_workflow_trace(&wf, args.seed());
+    match format {
+        "jsonl" => write_trace_jsonl(&trace, &out)?,
+        "csv" => write_trace_csv(&trace, &out)?,
+        other => bail!("unknown format {other:?} (jsonl|csv)"),
+    }
+    println!(
+        "wrote {} runs of {} task types ({} evaluated) to {}",
+        trace.n_runs(),
+        trace.n_types(),
+        trace.evaluated_types(ksegments::workload::EVAL_MIN_RUNS).len(),
+        out.display()
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let method = args.kv.get("method").context("--method required")?;
+    let frac: f64 = args
+        .kv
+        .get("frac")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(0.5);
+    let mut predictor = method_by_name(method, args.fitter())?;
+    let cfg = SimConfig::with_training_frac(frac);
+    let wf_names: Vec<&str> = match args.kv.get("workflow") {
+        Some(w) => vec![w.as_str()],
+        None => vec!["eager", "sarek"],
+    };
+    println!(
+        "method={} frac={frac} seed={} fitter={:?}",
+        predictor.name(),
+        args.seed(),
+        args.fitter()
+    );
+    for wf_name in wf_names {
+        let wf = workflow_by_name(wf_name)?;
+        let trace = generate_workflow_trace(&wf, args.seed());
+        let rep = simulate_trace(&trace, predictor.as_mut(), &cfg);
+        println!(
+            "\n[{}] {} evaluated tasks — avg wastage {:.3} GB·s, avg retries {:.3}",
+            wf_name,
+            rep.tasks.len(),
+            rep.avg_wastage_gbs(),
+            rep.avg_retries()
+        );
+        for t in &rep.tasks {
+            println!(
+                "  {:<32} runs {:>4}  wastage {:>10.3} GB·s  retries {:>6.3}",
+                t.task_type,
+                t.n_scored,
+                t.avg_wastage_gbs(),
+                t.avg_retries()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_fig7(args: &Args) -> Result<()> {
+    let results = run_fig7(args.seed(), args.fitter());
+    println!("{}", results.render_wastage());
+    println!("{}", results.render_wins());
+    println!("{}", results.render_retries());
+    println!("{}", results.headline(0.75));
+    Ok(())
+}
+
+fn cmd_fig8(args: &Args) -> Result<()> {
+    let ks: Vec<usize> = (1..=15).collect();
+    for task in ["eager/qualimap", "eager/adapter_removal"] {
+        let r = run_fig8(args.seed(), args.fitter(), task, &ks);
+        println!("{}", r.render());
+    }
+    Ok(())
+}
+
+fn cmd_validate_runtime() -> Result<()> {
+    use ksegments::ml::fitter::FitInput;
+    let mut xla = XlaFitter::load_default()?;
+    let (n_hist, t_max) = (xla.manifest().n_hist, xla.manifest().t_max);
+    println!(
+        "artifacts: n_hist={n_hist} t_max={t_max} ks={:?}",
+        xla.manifest().fits.keys().collect::<Vec<_>>()
+    );
+    let mut native = NativeFitter;
+    let mut rng = ksegments::rng::Rng::new(7);
+    let mut worst: f64 = 0.0;
+    for k in [1usize, 2, 4, 8, 16] {
+        let mut input = FitInput::default();
+        for _ in 0..24 {
+            let x = rng.uniform(100.0, 4000.0);
+            let peak = 50.0 + 0.8 * x * rng.uniform(0.9, 1.1);
+            input.x.push(x);
+            input.runtime.push(30.0 + 0.05 * x);
+            input
+                .series
+                .push((0..t_max).map(|j| peak * (j + 1) as f64 / t_max as f64).collect());
+        }
+        let a = xla.fit(&input, k);
+        let b = native.fit(&input, k);
+        let rel = |x: f64, y: f64| (x - y).abs() / y.abs().max(1.0);
+        let mut err = rel(a.rt.a, b.rt.a).max(rel(a.rt.b, b.rt.b));
+        for s in 0..k {
+            err = err.max(rel(a.seg[s].a, b.seg[s].a)).max(rel(a.seg[s].b, b.seg[s].b));
+            err = err.max(rel(a.seg_off[s], b.seg_off[s]));
+        }
+        worst = worst.max(err);
+        println!("k={k:>2}: max relative deviation xla-vs-native = {err:.2e}");
+    }
+    println!("xla fits: {}, native fallbacks: {}", xla.xla_fits, xla.native_fits);
+    if xla.native_fits > 0 {
+        bail!("some fits fell back to native — artifacts incomplete?");
+    }
+    if worst > 1e-3 {
+        bail!("deviation {worst:.2e} exceeds 1e-3 — backends diverged");
+    }
+    println!("VALIDATION OK (worst deviation {worst:.2e})");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    // Demo: run the eager workflow through the prediction service from
+    // multiple SWMS worker threads.
+    let trace = generate_workflow_trace(&eager_workflow(), args.seed());
+    let svc = PredictionService::spawn(Box::new(KSegmentsPredictor::native(
+        4,
+        RetryStrategy::Selective,
+    )));
+    let h = svc.handle();
+    for ty in trace.task_types() {
+        if let Some(mem) = trace.default_alloc(ty) {
+            h.prime(ty, mem);
+        }
+    }
+    let runs: Vec<_> = trace.all_runs_ordered().into_iter().cloned().collect();
+    let chunk = runs.len().div_ceil(4);
+    let mut joins = Vec::new();
+    for (w, part) in runs.chunks(chunk).enumerate() {
+        let h = svc.handle();
+        let part = part.to_vec();
+        joins.push(std::thread::spawn(move || {
+            for run in part {
+                let alloc = h.predict(&run.task_type, run.input_mib);
+                let _ = alloc.max_value();
+                h.complete(run);
+            }
+            println!("worker {w} done");
+        }));
+    }
+    for j in joins {
+        j.join().map_err(|_| anyhow!("worker panicked"))?;
+    }
+    let stats = svc.shutdown();
+    println!(
+        "service processed {} predictions, {} completions, {} failures",
+        stats.predictions, stats.completions, stats.failures
+    );
+    Ok(())
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::parse()?;
+    match args.cmd.as_str() {
+        "generate" => cmd_generate(&args),
+        "simulate" => cmd_simulate(&args),
+        "fig7" => cmd_fig7(&args),
+        "fig8" => cmd_fig8(&args),
+        "fig4" => {
+            println!("{}", run_fig4(args.seed(), args.fitter()));
+            Ok(())
+        }
+        "fig1" => {
+            println!("{}", run_fig1(args.seed()));
+            Ok(())
+        }
+        "ablate" => {
+            println!("{}", ksegments::bench_harness::ablation::run_all(args.seed()));
+            Ok(())
+        }
+        "report" => {
+            let text =
+                ksegments::bench_harness::report::full_report(args.seed(), args.fitter());
+            match args.kv.get("out") {
+                Some(path) => {
+                    std::fs::write(path, &text)?;
+                    println!("wrote report to {path}");
+                }
+                None => println!("{text}"),
+            }
+            Ok(())
+        }
+        "validate-runtime" => cmd_validate_runtime(),
+        "serve" => cmd_serve(&args),
+        "" | "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n\n{USAGE}"),
+    }
+}
+
+fn main() -> ExitCode {
+    match real_main() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

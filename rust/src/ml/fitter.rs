@@ -1,0 +1,254 @@
+//! The k-Segments fit: trait + native implementation.
+//!
+//! `KsegFitter` abstracts over the two backends that can produce a
+//! [`FitResult`] from task history:
+//!
+//! * [`NativeFitter`] (here): the f64 mirror of the JAX fit graph —
+//!   used by tests as the oracle and wherever artifact padding does
+//!   not fit;
+//! * [`crate::runtime::XlaFitter`]: executes the AOT-lowered
+//!   JAX + Pallas module (`artifacts/ksegments_fit_k{K}.hlo.txt`)
+//!   through the PJRT CPU client — the production online-learning path.
+
+use crate::ml::linreg::LinReg;
+use crate::ml::segmentation::seg_peaks;
+
+/// Training view of a task's history: parallel arrays, one row per
+/// historical execution (already resampled to a common length).
+#[derive(Debug, Clone, Default)]
+pub struct FitInput {
+    /// Total input size per execution (MiB).
+    pub x: Vec<f64>,
+    /// Actual runtime per execution (s).
+    pub runtime: Vec<f64>,
+    /// Peak-preserving resampled usage series, all rows the same length.
+    pub series: Vec<Vec<f64>>,
+}
+
+impl FitInput {
+    pub fn n(&self) -> usize {
+        self.x.len()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.x.len() != self.runtime.len() || self.x.len() != self.series.len() {
+            return Err(format!(
+                "row mismatch: x={} runtime={} series={}",
+                self.x.len(),
+                self.runtime.len(),
+                self.series.len()
+            ));
+        }
+        if let Some(first) = self.series.first() {
+            if self.series.iter().any(|s| s.len() != first.len()) {
+                return Err("ragged series rows".into());
+            }
+            if first.is_empty() {
+                return Err("empty series rows".into());
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Fitted k-Segments model (paper §III-B outputs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FitResult {
+    /// Runtime regression: input size (MiB) → runtime (s).
+    pub rt: LinReg,
+    /// Largest historical runtime OVERprediction — subtracted at predict
+    /// time so the runtime is under-predicted (paper: "negative offset").
+    pub rt_offset: f64,
+    /// Per-segment peak regressions: input size (MiB) → segment peak (MiB).
+    pub seg: Vec<LinReg>,
+    /// Largest historical segment UNDERprediction — added to each
+    /// segment's intercept at predict time.
+    pub seg_off: Vec<f64>,
+}
+
+impl FitResult {
+    pub fn k(&self) -> usize {
+        self.seg.len()
+    }
+
+    /// Offset runtime prediction (may be clamped by the caller).
+    pub fn predict_runtime(&self, x: f64) -> f64 {
+        self.rt.predict(x) - self.rt_offset
+    }
+
+    /// Offset per-segment memory predictions (raw, before monotone
+    /// clamping / flooring — that happens in the predictor).
+    pub fn predict_segments(&self, x: f64) -> Vec<f64> {
+        self.seg
+            .iter()
+            .zip(&self.seg_off)
+            .map(|(lr, off)| lr.predict(x) + off)
+            .collect()
+    }
+}
+
+/// A backend that fits the k-Segments model from task history.
+pub trait KsegFitter: Send {
+    /// Human-readable backend name (for logs / reports).
+    fn backend(&self) -> &'static str;
+
+    /// Fit with `k` segments. `input` must validate; `k >= 1` and the
+    /// series length must be ≥ k.
+    fn fit(&mut self, input: &FitInput, k: usize) -> FitResult;
+}
+
+/// Pure-rust fitter: line-for-line mirror of `python/compile/model.py`.
+#[derive(Debug, Clone, Default)]
+pub struct NativeFitter;
+
+impl KsegFitter for NativeFitter {
+    fn backend(&self) -> &'static str {
+        "native"
+    }
+
+    fn fit(&mut self, input: &FitInput, k: usize) -> FitResult {
+        input.validate().expect("invalid fit input");
+        assert!(k >= 1, "k must be >= 1");
+        let n = input.n();
+        assert!(n > 0, "cannot fit on empty history");
+
+        // Y** per row: [n, k] segment peaks.
+        let peaks: Vec<Vec<f64>> = input.series.iter().map(|s| seg_peaks(s, k)).collect();
+
+        // Runtime model + conservative offset.
+        let rt = LinReg::fit(&input.x, &input.runtime);
+        let mut rt_offset = 0.0f64;
+        for (&xi, &ri) in input.x.iter().zip(&input.runtime) {
+            rt_offset = rt_offset.max(rt.predict(xi) - ri);
+        }
+
+        // k segment models + per-segment max-underprediction offsets.
+        let mut seg = Vec::with_capacity(k);
+        let mut seg_off = Vec::with_capacity(k);
+        let mut col = vec![0.0; n];
+        for s in 0..k {
+            for (row, p) in peaks.iter().enumerate() {
+                col[row] = p[s];
+            }
+            let lr = LinReg::fit(&input.x, &col);
+            let mut off = 0.0f64;
+            for (&xi, &yi) in input.x.iter().zip(col.iter()) {
+                off = off.max(yi - lr.predict(xi));
+            }
+            seg.push(lr);
+            seg_off.push(off);
+        }
+
+        FitResult { rt, rt_offset, seg, seg_off }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthetic linear workload: runtime = 30 + 0.02 x, series ramps to
+    /// peak 50 + 0.5 x.
+    fn synth(n: usize, t: usize) -> FitInput {
+        let mut input = FitInput::default();
+        for i in 0..n {
+            let x = 100.0 + 40.0 * i as f64;
+            let peak = 50.0 + 0.5 * x;
+            let series: Vec<f64> = (0..t)
+                .map(|j| peak * ((j + 1) as f64 / t as f64).sqrt())
+                .collect();
+            input.x.push(x);
+            input.runtime.push(30.0 + 0.02 * x);
+            input.series.push(series);
+        }
+        input
+    }
+
+    #[test]
+    fn recovers_linear_structure() {
+        let input = synth(16, 64);
+        let fit = NativeFitter.fit(&input, 4);
+        assert_eq!(fit.k(), 4);
+        // runtime model exact on noiseless data
+        assert!((fit.rt.a - 30.0).abs() < 1e-6, "{:?}", fit.rt);
+        assert!((fit.rt.b - 0.02).abs() < 1e-9);
+        assert!(fit.rt_offset < 1e-6);
+        // last segment's peak is the global peak: 50 + 0.5 x
+        let last = fit.seg.last().unwrap();
+        assert!((last.a - 50.0).abs() < 1e-6);
+        assert!((last.b - 0.5).abs() < 1e-9);
+        // noiseless -> offsets ~ 0
+        assert!(fit.seg_off.iter().all(|&o| o < 1e-6));
+        // segment peaks increase over time for a ramp profile
+        let preds = fit.predict_segments(500.0);
+        assert!(preds.windows(2).all(|w| w[1] >= w[0] - 1e-9), "{preds:?}");
+    }
+
+    #[test]
+    fn offsets_cover_training_rows() {
+        // add an outlier row that the regression underpredicts
+        let mut input = synth(8, 16);
+        input.x.push(500.0);
+        input.runtime.push(10.0);
+        input.series.push(vec![10_000.0; 16]);
+        let fit = NativeFitter.fit(&input, 4);
+        for (row, &xi) in input.x.iter().enumerate() {
+            let preds = fit.predict_segments(xi);
+            let peaks = seg_peaks(&input.series[row], 4);
+            for (p, pk) in preds.iter().zip(peaks) {
+                assert!(
+                    *p >= pk - 1e-6,
+                    "row {row}: predicted {p} < historical peak {pk}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn runtime_offset_is_conservative() {
+        let mut input = synth(8, 16);
+        // one run much faster than the line -> forces rt_offset > 0
+        input.x.push(900.0);
+        input.runtime.push(1.0);
+        input.series.push(vec![1.0; 16]);
+        let fit = NativeFitter.fit(&input, 2);
+        assert!(fit.rt_offset > 0.0);
+        for (&xi, &ri) in input.x.iter().zip(&input.runtime) {
+            assert!(fit.predict_runtime(xi) <= ri + 1e-9);
+        }
+    }
+
+    #[test]
+    fn single_history_row_mean_fallback() {
+        let input = FitInput {
+            x: vec![100.0],
+            runtime: vec![60.0],
+            series: vec![vec![10.0, 50.0, 30.0, 20.0]],
+        };
+        let fit = NativeFitter.fit(&input, 2);
+        assert_eq!(fit.rt.b, 0.0);
+        assert_eq!(fit.rt.a, 60.0);
+        assert_eq!(fit.seg[0].a, 50.0); // max of first half
+        assert_eq!(fit.seg[1].a, 30.0);
+    }
+
+    #[test]
+    fn validate_catches_ragged_input() {
+        let input = FitInput {
+            x: vec![1.0, 2.0],
+            runtime: vec![1.0, 2.0],
+            series: vec![vec![1.0, 2.0], vec![1.0]],
+        };
+        assert!(input.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_row_mismatch() {
+        let input = FitInput {
+            x: vec![1.0],
+            runtime: vec![1.0, 2.0],
+            series: vec![vec![1.0]],
+        };
+        assert!(input.validate().is_err());
+    }
+}

@@ -1,0 +1,232 @@
+//! Simple (masked) linear regression — the learning primitive of every
+//! method in the paper's evaluation.
+//!
+//! Uses the **centered** closed form `b = cov(x,y)/var(x)` with the same
+//! degeneracy fallback as the Pallas kernel (`linfit.py`): fewer than 2
+//! points, or relatively-constant x, fall back to slope 0 / intercept =
+//! mean. Constants (`sw >= 1.5`, `var > 1e-7·sw·(x̄²+1)`) are identical
+//! so the native and XLA paths are differential-testable.
+
+/// A fitted line `y ≈ a + b·x`.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct LinReg {
+    /// Intercept.
+    pub a: f64,
+    /// Slope.
+    pub b: f64,
+}
+
+impl LinReg {
+    /// Fit from paired samples. Panics if lengths differ.
+    pub fn fit(x: &[f64], y: &[f64]) -> LinReg {
+        assert_eq!(x.len(), y.len(), "linreg: length mismatch");
+        Self::fit_masked(x, y, None)
+    }
+
+    /// Fit using only rows where `mask[i]` (None = all rows).
+    ///
+    /// Mirrors `linfit_kernel`: centered sums, identical thresholds.
+    pub fn fit_masked(x: &[f64], y: &[f64], mask: Option<&[bool]>) -> LinReg {
+        let included = |i: usize| mask.map_or(true, |m| m[i]);
+        let mut sw: f64 = 0.0;
+        let mut sx = 0.0;
+        let mut sy = 0.0;
+        for i in 0..x.len() {
+            if included(i) {
+                sw += 1.0;
+                sx += x[i];
+                sy += y[i];
+            }
+        }
+        let sw_safe = sw.max(1.0);
+        let xbar = sx / sw_safe;
+        let ybar = sy / sw_safe;
+
+        let mut varx = 0.0;
+        let mut cov = 0.0;
+        for i in 0..x.len() {
+            if included(i) {
+                let xc = x[i] - xbar;
+                varx += xc * xc;
+                cov += xc * y[i]; // ybar term cancels under the mask sum
+            }
+        }
+        let thresh = 1e-7 * sw_safe * (xbar * xbar + 1.0);
+        let safe = sw >= 1.5 && varx > thresh;
+        let b = if safe { cov / varx } else { 0.0 };
+        let a = ybar - b * xbar;
+        LinReg { a, b }
+    }
+
+    /// Predicted value at `x`.
+    pub fn predict(&self, x: f64) -> f64 {
+        self.a + self.b * x
+    }
+
+    /// Residual statistics of this fit over a training set.
+    pub fn residuals(&self, x: &[f64], y: &[f64]) -> ResidualStats {
+        let mut st = ResidualStats::default();
+        for (&xi, &yi) in x.iter().zip(y) {
+            st.update(yi - self.predict(xi));
+        }
+        st
+    }
+}
+
+/// Streaming residual statistics used by the offset strategies:
+/// Witt et al. add the stddev (LR mean±) or the largest observed
+/// underprediction (LR max); k-Segments uses the extreme errors.
+///
+/// Error convention: `e = actual − predicted`; `e > 0` is an
+/// UNDERprediction (actual exceeded the prediction).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ResidualStats {
+    n: usize,
+    mean: f64,
+    m2: f64,
+    /// Largest underprediction (max positive error), 0 if none.
+    pub max_under: f64,
+    /// Largest overprediction magnitude (−min negative error), 0 if none.
+    pub max_over: f64,
+    /// Mean of only the negative errors (overpredictions), for LR mean−.
+    neg_sum: f64,
+    neg_n: usize,
+}
+
+impl ResidualStats {
+    pub fn update(&mut self, e: f64) {
+        self.n += 1;
+        let d = e - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (e - self.mean);
+        if e > self.max_under {
+            self.max_under = e;
+        }
+        if -e > self.max_over {
+            self.max_over = -e;
+        }
+        if e < 0.0 {
+            self.neg_sum += e;
+            self.neg_n += 1;
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+
+    /// Population standard deviation of the errors.
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / self.n as f64).sqrt()
+        }
+    }
+
+    /// Mean magnitude of overpredictions only (Witt's LR mean−).
+    pub fn mean_neg_magnitude(&self) -> f64 {
+        if self.neg_n == 0 {
+            0.0
+        } else {
+            -self.neg_sum / self.neg_n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_line_recovery() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y: Vec<f64> = x.iter().map(|v| 3.0 + 2.0 * v).collect();
+        let f = LinReg::fit(&x, &y);
+        assert!((f.a - 3.0).abs() < 1e-9);
+        assert!((f.b - 2.0).abs() < 1e-9);
+        assert!((f.predict(10.0) - 23.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_point_falls_back_to_mean() {
+        let f = LinReg::fit(&[5.0], &[42.0]);
+        assert_eq!(f, LinReg { a: 42.0, b: 0.0 });
+    }
+
+    #[test]
+    fn empty_fit_is_zero() {
+        let f = LinReg::fit(&[], &[]);
+        assert_eq!(f, LinReg { a: 0.0, b: 0.0 });
+    }
+
+    #[test]
+    fn constant_x_falls_back_to_mean() {
+        let f = LinReg::fit(&[3.0, 3.0, 3.0], &[1.0, 2.0, 3.0]);
+        assert!((f.a - 2.0).abs() < 1e-12);
+        assert_eq!(f.b, 0.0);
+    }
+
+    #[test]
+    fn masked_rows_are_ignored() {
+        let x = [1.0, 2.0, 3.0, 1e9];
+        let y = [2.0, 4.0, 6.0, -5e9];
+        let mask = [true, true, true, false];
+        let f = LinReg::fit_masked(&x, &y, Some(&mask));
+        assert!((f.b - 2.0).abs() < 1e-9, "{f:?}");
+        assert!(f.a.abs() < 1e-9, "{f:?}");
+    }
+
+    #[test]
+    fn large_close_x_is_stable() {
+        // the f32 cancellation case that motivated centering; in f64 with
+        // centering the slope is exact
+        let x = [8322.689, 8706.586];
+        let y = [4367.238, 4601.943];
+        let f = LinReg::fit(&x, &y);
+        let slope = (y[1] - y[0]) / (x[1] - x[0]);
+        assert!((f.b - slope).abs() < 1e-9);
+    }
+
+    #[test]
+    fn residual_stats_moments() {
+        let mut st = ResidualStats::default();
+        for e in [1.0, -1.0, 3.0, -3.0] {
+            st.update(e);
+        }
+        assert_eq!(st.n(), 4);
+        assert!(st.mean().abs() < 1e-12);
+        assert!((st.std() - (5.0f64).sqrt()).abs() < 1e-12);
+        assert_eq!(st.max_under, 3.0);
+        assert_eq!(st.max_over, 3.0);
+        assert!((st.mean_neg_magnitude() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn residuals_of_perfect_fit_are_zero() {
+        let x = [1.0, 2.0, 3.0];
+        let y = [10.0, 20.0, 30.0];
+        let f = LinReg::fit(&x, &y);
+        let st = f.residuals(&x, &y);
+        assert!(st.max_under < 1e-9);
+        assert!(st.max_over < 1e-9);
+        assert!(st.std() < 1e-9);
+    }
+
+    #[test]
+    fn underprediction_tracking() {
+        // y actual above the line for one point
+        let f = LinReg { a: 0.0, b: 1.0 };
+        let st = f.residuals(&[1.0, 2.0], &[1.5, 1.5]);
+        assert!((st.max_under - 0.5).abs() < 1e-12); // 1.5 vs predicted 1.0
+        assert!((st.max_over - 0.5).abs() < 1e-12); // 1.5 vs predicted 2.0
+    }
+}

@@ -1,0 +1,23 @@
+//! Native ML building blocks, mirroring the JAX/Pallas fit graph.
+//!
+//! The math here is a line-for-line f64 mirror of
+//! `python/compile/kernels/{linfit,segpeaks}.py` and
+//! `python/compile/model.py`: the centered masked linear regression,
+//! the paper's change-point segmentation, and the full k-Segments fit
+//! (coefficients + historical-error offsets).
+//!
+//! It serves three roles (DESIGN.md §2):
+//! 1. differential-test oracle for the AOT XLA artifact
+//!    (`rust/tests/integration_runtime.rs`),
+//! 2. fallback fitter for shapes outside the artifact padding,
+//! 3. regression backend for the pure-rust baselines (LR-Witt).
+
+pub mod fitter;
+pub mod linreg;
+pub mod segmentation;
+pub mod step_fn;
+
+pub use fitter::{FitResult, KsegFitter, NativeFitter};
+pub use linreg::{LinReg, ResidualStats};
+pub use segmentation::{seg_peaks, segment_bounds};
+pub use step_fn::StepFunction;

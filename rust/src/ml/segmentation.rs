@@ -1,0 +1,114 @@
+//! The paper's §III-B change-point segmentation and per-segment peak
+//! extraction (`Y* → Y**`) — the f64 mirror of the `segpeaks` Pallas
+//! kernel.
+
+/// Change points evenly distributed over a series of length `t`:
+/// `i = floor(t/k)`; segment `s` is `[s·i, (s+1)·i)` for `s < k−1`, and
+/// the last segment absorbs the remainder `[(k−1)·i, t)`.
+///
+/// Panics when `k == 0` or `t < k` (some segment would be empty).
+pub fn segment_bounds(t: usize, k: usize) -> Vec<(usize, usize)> {
+    assert!(k >= 1, "k must be >= 1");
+    assert!(t >= k, "series length {t} shorter than k={k}");
+    let i = t / k;
+    let mut out = Vec::with_capacity(k);
+    for s in 0..k - 1 {
+        out.push((s * i, (s + 1) * i));
+    }
+    out.push(((k - 1) * i, t));
+    out
+}
+
+/// Time boundaries of the k segments over a predicted runtime `r_e`,
+/// mirrored from the index segmentation of a `t`-sample series: the
+/// paper's change points sit at `(s+1)·⌊t/k⌋` samples (§III-B/§III-C —
+/// the LAST segment absorbs the remainder), so in time the boundary of
+/// segment `s < k−1` is `r_e · (s+1)·⌊t/k⌋ / t` and the last is `r_e`.
+///
+/// Using equal splits of `r_e` instead would misalign the predicted
+/// values (trained on floor-segmented peaks) with the interval they
+/// cover whenever `k ∤ t` — a systematic underprediction at segment
+/// tails caught by the adaptive-k counterfactual tests.
+pub fn segment_time_bounds(r_e: f64, t: usize, k: usize) -> Vec<f64> {
+    assert!(r_e > 0.0, "non-positive runtime");
+    segment_bounds(t, k)
+        .into_iter()
+        .map(|(_, hi)| r_e * hi as f64 / t as f64)
+        .collect()
+}
+
+/// Per-segment peaks `Y** = (max(s_1), ..., max(s_k))` of one series.
+pub fn seg_peaks(samples: &[f64], k: usize) -> Vec<f64> {
+    segment_bounds(samples.len(), k)
+        .into_iter()
+        .map(|(lo, hi)| samples[lo..hi].iter().copied().fold(f64::MIN, f64::max))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn even_split() {
+        assert_eq!(segment_bounds(8, 4), vec![(0, 2), (2, 4), (4, 6), (6, 8)]);
+    }
+
+    #[test]
+    fn remainder_to_last() {
+        assert_eq!(segment_bounds(10, 4), vec![(0, 2), (2, 4), (4, 6), (6, 10)]);
+    }
+
+    #[test]
+    fn k1_whole_series() {
+        assert_eq!(segment_bounds(17, 1), vec![(0, 17)]);
+    }
+
+    #[test]
+    fn covers_exactly_no_overlap() {
+        for t in [4usize, 7, 16, 100, 256] {
+            for k in 1..=t.min(16) {
+                let b = segment_bounds(t, k);
+                assert_eq!(b.len(), k);
+                assert_eq!(b[0].0, 0);
+                assert_eq!(b[k - 1].1, t);
+                for w in b.windows(2) {
+                    assert_eq!(w[0].1, w[1].0);
+                }
+                assert!(b.iter().all(|(lo, hi)| hi > lo));
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn k_zero_panics() {
+        segment_bounds(10, 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn t_less_than_k_panics() {
+        segment_bounds(3, 4);
+    }
+
+    #[test]
+    fn peaks_known_values() {
+        let y = [1.0, 5.0, 2.0, 3.0, 9.0, 0.0];
+        assert_eq!(seg_peaks(&y, 3), vec![5.0, 3.0, 9.0]);
+    }
+
+    #[test]
+    fn peaks_k1_is_global_max() {
+        let y = [3.0, 7.0, 1.0];
+        assert_eq!(seg_peaks(&y, 1), vec![7.0]);
+    }
+
+    #[test]
+    fn peaks_match_python_reference_semantics() {
+        // same as ref.segpeaks_ref: uneven split, remainder in last
+        let y = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0];
+        // t=7, k=3 -> i=2: [0,2) [2,4) [4,7)
+        assert_eq!(seg_peaks(&y, 3), vec![2.0, 4.0, 7.0]);
+    }
+}

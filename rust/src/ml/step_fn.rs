@@ -1,0 +1,270 @@
+//! The monotone step allocation function (paper Eq. 1).
+//!
+//! `f(x) = v_s` for `r_{s-1} < x <= r_s`, extended with `f(x) = v_k` for
+//! `x > r_k`: if a task runs longer than its predicted runtime the last
+//! segment's allocation is held (the conservative reading of Eq. 1 —
+//! without it any runtime underprediction would instantly fail the
+//! task at memory 0).
+
+use crate::units::{MemMiB, Seconds};
+
+/// A right-continuous step function over time: `k` boundaries
+/// `r_1 < r_2 < … < r_k` and `k` values `v_1 … v_k` (MiB).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepFunction {
+    /// Segment end times, strictly increasing; `bounds[k-1]` is the
+    /// predicted runtime `r_e`.
+    bounds: Vec<f64>,
+    /// Allocation per segment (MiB).
+    values: Vec<f64>,
+}
+
+impl StepFunction {
+    /// Build from raw boundary/value vectors.
+    ///
+    /// Panics on empty input, mismatched lengths, or non-increasing
+    /// boundaries. Does NOT clamp values — see [`Self::monotone_clamped`]
+    /// for the paper's construction.
+    pub fn new(bounds: Vec<f64>, values: Vec<f64>) -> Self {
+        assert!(!bounds.is_empty(), "empty step function");
+        assert_eq!(bounds.len(), values.len(), "bounds/values length mismatch");
+        assert!(
+            bounds.windows(2).all(|w| w[1] > w[0]) && bounds[0] > 0.0,
+            "boundaries must be positive and strictly increasing: {bounds:?}"
+        );
+        StepFunction { bounds, values }
+    }
+
+    /// The paper's §III-C construction: split predicted runtime `r_e`
+    /// into k near-equal boundaries, clamp predictions to be
+    /// monotonically non-decreasing (`v_s < v_{s-1}` takes the previous
+    /// value), apply the floor (`v_1 < 0` → default 100 MB; every
+    /// segment respects the floor) and a capacity ceiling.
+    pub fn monotone_clamped(
+        runtime: Seconds,
+        values: Vec<f64>,
+        floor: MemMiB,
+        ceil: MemMiB,
+    ) -> Self {
+        assert!(!values.is_empty());
+        let k = values.len();
+        let r_e = runtime.0.max(1e-6);
+        // R = (r_s, 2 r_s, ..., r_e), r_s = r_e / k (the predictors use
+        // `monotone_clamped_with_bounds` to mirror the floor-based
+        // training segmentation exactly; this equal split is the
+        // generic construction).
+        let r_s = r_e / k as f64;
+        let bounds: Vec<f64> = (1..=k)
+            .map(|s| if s == k { r_e } else { s as f64 * r_s })
+            .collect();
+        Self::monotone_clamped_with_bounds(bounds, values, floor, ceil)
+    }
+
+    /// Same clamping with caller-supplied boundaries (see
+    /// [`crate::ml::segmentation::segment_time_bounds`]).
+    pub fn monotone_clamped_with_bounds(
+        bounds: Vec<f64>,
+        mut values: Vec<f64>,
+        floor: MemMiB,
+        ceil: MemMiB,
+    ) -> Self {
+        let mut prev = f64::MIN;
+        for v in values.iter_mut() {
+            *v = v.max(floor.0).min(ceil.0); // floor/cap first
+            *v = v.max(prev); // then monotone clamp
+            prev = *v;
+        }
+        StepFunction::new(bounds, values)
+    }
+
+    pub fn k(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    /// Predicted runtime `r_e = r_k`.
+    pub fn predicted_runtime(&self) -> Seconds {
+        Seconds(*self.bounds.last().unwrap())
+    }
+
+    /// Allocation at time `t` (MiB). Holds `v_k` past `r_k` and `v_1`
+    /// before 0.
+    pub fn value_at(&self, t: f64) -> f64 {
+        // segments are (r_{s-1}, r_s]; t=0 belongs to the first
+        match self.bounds.iter().position(|&b| t <= b) {
+            Some(idx) => self.values[idx],
+            None => *self.values.last().unwrap(),
+        }
+    }
+
+    /// Segment index active at time `t` (clamped to the last).
+    pub fn segment_at(&self, t: f64) -> usize {
+        self.bounds
+            .iter()
+            .position(|&b| t <= b)
+            .unwrap_or(self.values.len() - 1)
+    }
+
+    /// Peak allocation (= v_k after monotone clamping).
+    pub fn max_value(&self) -> f64 {
+        self.values.iter().copied().fold(f64::MIN, f64::max)
+    }
+
+    /// Multiply segment values in `[from, to)` by `factor` (used by the
+    /// retry strategies), re-applying ceiling and monotone clamping.
+    pub fn scale_segments(
+        &self,
+        from: usize,
+        to: usize,
+        factor: f64,
+        ceil: MemMiB,
+    ) -> StepFunction {
+        assert!(from < self.values.len() && to <= self.values.len() && from < to);
+        let mut values = self.values.clone();
+        for v in values[from..to].iter_mut() {
+            *v = (*v * factor).min(ceil.0);
+        }
+        let mut prev = f64::MIN;
+        for v in values.iter_mut() {
+            *v = v.max(prev);
+            prev = *v;
+        }
+        StepFunction::new(self.bounds.clone(), values)
+    }
+
+    /// True if `values` never decreases.
+    pub fn is_monotone(&self) -> bool {
+        self.values.windows(2).all(|w| w[1] >= w[0])
+    }
+
+    /// Time-integral of the allocation over `[0, horizon]` (MiB·s) —
+    /// used in wastage accounting and Fig. 1-style visualisations.
+    pub fn integral(&self, horizon: f64) -> f64 {
+        let mut total = 0.0;
+        let mut prev_t = 0.0;
+        for (i, &b) in self.bounds.iter().enumerate() {
+            if prev_t >= horizon {
+                return total;
+            }
+            let end = b.min(horizon);
+            total += self.values[i] * (end - prev_t).max(0.0);
+            prev_t = b;
+        }
+        if horizon > prev_t {
+            total += self.values.last().unwrap() * (horizon - prev_t);
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f() -> StepFunction {
+        StepFunction::new(vec![10.0, 20.0, 30.0, 40.0], vec![1.0, 2.0, 2.0, 5.0])
+    }
+
+    #[test]
+    fn value_lookup() {
+        let f = f();
+        assert_eq!(f.value_at(0.0), 1.0);
+        assert_eq!(f.value_at(10.0), 1.0); // right-closed segment
+        assert_eq!(f.value_at(10.1), 2.0);
+        assert_eq!(f.value_at(40.0), 5.0);
+        assert_eq!(f.value_at(100.0), 5.0); // held past r_k
+    }
+
+    #[test]
+    fn segment_lookup() {
+        let f = f();
+        assert_eq!(f.segment_at(0.0), 0);
+        assert_eq!(f.segment_at(15.0), 1);
+        assert_eq!(f.segment_at(999.0), 3);
+    }
+
+    #[test]
+    fn monotone_clamp_construction() {
+        // v2 dips below v1 -> takes previous; v1 below floor -> floor
+        let sf = StepFunction::monotone_clamped(
+            Seconds(40.0),
+            vec![-5.0, 3000.0, 2000.0, 4000.0],
+            MemMiB(100.0),
+            MemMiB(128.0 * 1024.0),
+        );
+        assert_eq!(sf.values(), &[100.0, 3000.0, 3000.0, 4000.0]);
+        assert_eq!(sf.bounds(), &[10.0, 20.0, 30.0, 40.0]);
+        assert!(sf.is_monotone());
+    }
+
+    #[test]
+    fn ceiling_applies_before_monotone() {
+        let sf = StepFunction::monotone_clamped(
+            Seconds(10.0),
+            vec![500_000.0, 1.0],
+            MemMiB(100.0),
+            MemMiB(1000.0),
+        );
+        assert_eq!(sf.values(), &[1000.0, 1000.0]);
+    }
+
+    #[test]
+    fn k1_function() {
+        let sf =
+            StepFunction::monotone_clamped(Seconds(30.0), vec![512.0], MemMiB(100.0), MemMiB(1e9));
+        assert_eq!(sf.k(), 1);
+        assert_eq!(sf.value_at(29.0), 512.0);
+        assert_eq!(sf.predicted_runtime(), Seconds(30.0));
+    }
+
+    #[test]
+    fn scale_selective_and_partial() {
+        let f = f();
+        let ceil = MemMiB(1e9);
+        // selective: only segment 1
+        let sel = f.scale_segments(1, 2, 2.0, ceil);
+        assert_eq!(sel.values(), &[1.0, 4.0, 4.0, 5.0]); // re-clamped
+        // partial: segment 1..end
+        let par = f.scale_segments(1, 4, 2.0, ceil);
+        assert_eq!(par.values(), &[1.0, 4.0, 4.0, 10.0]);
+        assert!(sel.is_monotone() && par.is_monotone());
+    }
+
+    #[test]
+    fn scale_respects_ceiling() {
+        let f = f();
+        let s = f.scale_segments(3, 4, 1e6, MemMiB(7.0));
+        assert_eq!(s.values()[3], 7.0);
+    }
+
+    #[test]
+    fn integral_piecewise() {
+        let f = f();
+        // 1*10 + 2*10 + 2*10 + 5*10 = 100
+        assert!((f.integral(40.0) - 100.0).abs() < 1e-9);
+        // stop mid-segment: 1*10 + 2*5 = 20
+        assert!((f.integral(15.0) - 20.0).abs() < 1e-9);
+        // beyond r_k holds v_k: 100 + 5*10
+        assert!((f.integral(50.0) - 150.0).abs() < 1e-9);
+        assert_eq!(f.integral(0.0), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_increasing_bounds_panic() {
+        StepFunction::new(vec![10.0, 10.0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_lengths_panic() {
+        StepFunction::new(vec![10.0], vec![1.0, 2.0]);
+    }
+}

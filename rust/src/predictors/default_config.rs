@@ -1,0 +1,93 @@
+//! The sanity baseline: workflow developers' static default
+//! allocations (paper §IV-C, "used when running the workflows out of
+//! the box").
+
+use crate::trace::TaskRun;
+use crate::units::MemMiB;
+
+use super::{Allocation, Defaults, FailureInfo, MemoryPredictor};
+
+/// Always allocates the configured default; never learns. On the rare
+/// failure (defaults are deliberately generous) it doubles, which
+/// matches how a user would bump a failing default.
+#[derive(Debug, Clone, Default)]
+pub struct DefaultConfigPredictor {
+    defaults: Defaults,
+}
+
+impl DefaultConfigPredictor {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl MemoryPredictor for DefaultConfigPredictor {
+    fn name(&self) -> String {
+        "Default".to_string()
+    }
+
+    fn prime(&mut self, task_type: &str, default: MemMiB) {
+        self.defaults.set(task_type, default);
+    }
+
+    fn predict(&mut self, task_type: &str, _input_mib: f64) -> Allocation {
+        Allocation::Static(self.defaults.get(task_type))
+    }
+
+    fn on_failure(
+        &mut self,
+        _task_type: &str,
+        _input_mib: f64,
+        failed: &Allocation,
+        _info: &FailureInfo,
+    ) -> Allocation {
+        Allocation::Static(MemMiB(failed.max_value() * 2.0))
+    }
+
+    fn observe(&mut self, _run: &TaskRun) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn returns_configured_default() {
+        let mut p = DefaultConfigPredictor::new();
+        p.prime("wf/a", MemMiB(2048.0));
+        assert_eq!(p.predict("wf/a", 123.0), Allocation::Static(MemMiB(2048.0)));
+    }
+
+    #[test]
+    fn unknown_type_gets_global_fallback() {
+        let mut p = DefaultConfigPredictor::new();
+        assert_eq!(
+            p.predict("nope", 1.0),
+            Allocation::Static(MemMiB::from_gib(8.0))
+        );
+    }
+
+    #[test]
+    fn never_learns() {
+        let mut p = DefaultConfigPredictor::new();
+        p.prime("wf/a", MemMiB(512.0));
+        let run = TaskRun {
+            task_type: "wf/a".into(),
+            input_mib: 10.0,
+            runtime: crate::units::Seconds(2.0),
+            series: crate::trace::UsageSeries::new(2.0, vec![400.0]),
+            seq: 0,
+        };
+        p.observe(&run);
+        assert_eq!(p.predict("wf/a", 10.0), Allocation::Static(MemMiB(512.0)));
+    }
+
+    #[test]
+    fn failure_doubles() {
+        let mut p = DefaultConfigPredictor::new();
+        let failed = Allocation::Static(MemMiB(100.0));
+        let info = FailureInfo { time_s: 1.0, used_mib: 150.0, attempt: 1 };
+        let next = p.on_failure("wf/a", 1.0, &failed, &info);
+        assert_eq!(next, Allocation::Static(MemMiB(200.0)));
+    }
+}

@@ -1,0 +1,176 @@
+//! Per-task execution history — the sliding training window shared by
+//! the learned predictors.
+
+use std::collections::BTreeMap;
+
+use crate::ml::fitter::FitInput;
+use crate::trace::TaskRun;
+
+/// Ring buffer of the most recent executions of one task type, already
+//  transformed into fit-ready arrays.
+#[derive(Debug, Clone)]
+pub struct TaskHistory {
+    cap: usize,
+    /// Resample length for series rows (all rows share it).
+    t_len: usize,
+    x: Vec<f64>,
+    runtime: Vec<f64>,
+    peaks: Vec<f64>,
+    series: Vec<Vec<f64>>,
+    /// Total completions ever observed (not capped).
+    total_seen: u64,
+}
+
+impl TaskHistory {
+    pub fn new(cap: usize, t_len: usize) -> TaskHistory {
+        assert!(cap > 0 && t_len > 0);
+        TaskHistory {
+            cap,
+            t_len,
+            x: Vec::new(),
+            runtime: Vec::new(),
+            peaks: Vec::new(),
+            series: Vec::new(),
+            total_seen: 0,
+        }
+    }
+
+    pub fn push(&mut self, run: &TaskRun) {
+        if self.x.len() == self.cap {
+            self.x.remove(0);
+            self.runtime.remove(0);
+            self.peaks.remove(0);
+            self.series.remove(0);
+        }
+        self.x.push(run.input_mib);
+        self.runtime.push(run.runtime.0);
+        self.peaks.push(run.series.peak());
+        self.series.push(run.series.resample_peaks(self.t_len));
+        self.total_seen += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.x.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.x.is_empty()
+    }
+
+    pub fn total_seen(&self) -> u64 {
+        self.total_seen
+    }
+
+    pub fn x(&self) -> &[f64] {
+        &self.x
+    }
+
+    pub fn runtime(&self) -> &[f64] {
+        &self.runtime
+    }
+
+    /// Whole-run peak per execution (what static baselines learn from).
+    pub fn peaks(&self) -> &[f64] {
+        &self.peaks
+    }
+
+    /// Fit-ready view for the k-Segments fitters.
+    pub fn fit_input(&self) -> FitInput {
+        FitInput {
+            x: self.x.clone(),
+            runtime: self.runtime.clone(),
+            series: self.series.clone(),
+        }
+    }
+}
+
+/// Histories for all task types.
+#[derive(Debug, Clone)]
+pub struct HistoryMap {
+    cap: usize,
+    t_len: usize,
+    map: BTreeMap<String, TaskHistory>,
+}
+
+impl HistoryMap {
+    pub fn new(cap: usize, t_len: usize) -> HistoryMap {
+        HistoryMap { cap, t_len, map: BTreeMap::new() }
+    }
+
+    pub fn push(&mut self, run: &TaskRun) {
+        self.map
+            .entry(run.task_type.clone())
+            .or_insert_with(|| TaskHistory::new(self.cap, self.t_len))
+            .push(run);
+    }
+
+    pub fn get(&self, task_type: &str) -> Option<&TaskHistory> {
+        self.map.get(task_type)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::UsageSeries;
+    use crate::units::Seconds;
+
+    fn run(input: f64, peak: f64) -> TaskRun {
+        TaskRun {
+            task_type: "t".into(),
+            input_mib: input,
+            runtime: Seconds(8.0),
+            series: UsageSeries::new(2.0, vec![peak / 2.0, peak, peak / 4.0, peak / 8.0]),
+            seq: 0,
+        }
+    }
+
+    #[test]
+    fn push_and_views() {
+        let mut h = TaskHistory::new(4, 8);
+        h.push(&run(10.0, 100.0));
+        h.push(&run(20.0, 200.0));
+        assert_eq!(h.len(), 2);
+        assert_eq!(h.x(), &[10.0, 20.0]);
+        assert_eq!(h.peaks(), &[100.0, 200.0]);
+        assert_eq!(h.runtime(), &[8.0, 8.0]);
+        let fi = h.fit_input();
+        fi.validate().unwrap();
+        assert_eq!(fi.series[0].len(), 8);
+    }
+
+    #[test]
+    fn ring_buffer_evicts_oldest() {
+        let mut h = TaskHistory::new(3, 4);
+        for i in 0..5 {
+            h.push(&run(i as f64, 1.0));
+        }
+        assert_eq!(h.len(), 3);
+        assert_eq!(h.x(), &[2.0, 3.0, 4.0]);
+        assert_eq!(h.total_seen(), 5);
+    }
+
+    #[test]
+    fn resample_preserves_peak_in_rows() {
+        let mut h = TaskHistory::new(2, 4);
+        h.push(&run(1.0, 777.0));
+        let fi = h.fit_input();
+        let row_max = fi.series[0].iter().copied().fold(f64::MIN, f64::max);
+        assert_eq!(row_max, 777.0);
+    }
+
+    #[test]
+    fn history_map_routes_by_type() {
+        let mut m = HistoryMap::new(8, 4);
+        let mut r1 = run(1.0, 10.0);
+        r1.task_type = "a".into();
+        let mut r2 = run(2.0, 20.0);
+        r2.task_type = "b".into();
+        m.push(&r1);
+        m.push(&r2);
+        m.push(&r1);
+        assert_eq!(m.get("a").unwrap().len(), 2);
+        assert_eq!(m.get("b").unwrap().len(), 1);
+        assert!(m.get("c").is_none());
+    }
+}

@@ -1,0 +1,442 @@
+//! The paper's contribution: the **k-Segments** time-series memory
+//! predictor (§III), with Selective and Partial retry strategies
+//! (§III-D).
+//!
+//! Pipeline per prediction (§III-C):
+//! 1. predict the task's runtime from its total input size, minus the
+//!    largest historical overprediction (conservative underprediction);
+//! 2. predict k per-segment peak values from the input size, each plus
+//!    its largest historical underprediction;
+//! 3. merge into a monotonically non-decreasing step function over the
+//!    predicted runtime, with the 100 MB floor and the node-capacity
+//!    ceiling.
+//!
+//! The model fit itself runs on one of two interchangeable backends
+//! ([`KsegFitter`]): the native f64 mirror, or the AOT-compiled
+//! JAX + Pallas module via PJRT ([`crate::runtime::XlaFitter`]) — the
+//! production path, where the fit executes as a single fused XLA
+//! computation.
+
+use std::collections::BTreeMap;
+
+use crate::ml::fitter::{FitResult, KsegFitter, NativeFitter};
+use crate::ml::step_fn::StepFunction;
+use crate::trace::TaskRun;
+use crate::units::MemMiB;
+#[cfg(test)]
+use crate::units::Seconds;
+
+use super::history::HistoryMap;
+use super::{Allocation, Defaults, FailureInfo, MemoryPredictor, MIN_ALLOC_MIB};
+
+/// §III-D failure-handling strategies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RetryStrategy {
+    /// Adjust only the segment that caused the failure.
+    Selective,
+    /// Adjust the failed segment and every later segment.
+    Partial,
+}
+
+impl RetryStrategy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RetryStrategy::Selective => "Selective",
+            RetryStrategy::Partial => "Partial",
+        }
+    }
+}
+
+/// Tunables (paper defaults from §IV-A).
+#[derive(Debug, Clone)]
+pub struct KSegmentsConfig {
+    /// Number of segments k (paper default 4).
+    pub k: usize,
+    /// Retry factor l multiplying failed segment allocations (default 2).
+    pub retry_factor: f64,
+    /// Minimum allocation when the model predicts ≤ 0 (default 100 MB).
+    pub min_alloc: MemMiB,
+    /// Node capacity ceiling for any allocation.
+    pub node_max: MemMiB,
+    /// Sliding training window (most recent executions kept).
+    pub n_hist: usize,
+    /// Peak-preserving resample length for history series.
+    pub t_resample: usize,
+    /// Executions required before the model replaces the default.
+    pub min_train: usize,
+    /// Apply the historical-error offsets (§III-B). Disabling them is
+    /// the ablation of the paper's "avoid underpredictions" mechanism
+    /// (`bench_harness::ablation`); production keeps them on.
+    pub use_offsets: bool,
+}
+
+impl Default for KSegmentsConfig {
+    fn default() -> Self {
+        KSegmentsConfig {
+            k: 4,
+            retry_factor: 2.0,
+            min_alloc: MemMiB(MIN_ALLOC_MIB),
+            node_max: MemMiB::from_gib(128.0),
+            n_hist: 64,
+            t_resample: 256,
+            min_train: 2,
+            use_offsets: true,
+        }
+    }
+}
+
+/// The k-Segments predictor.
+pub struct KSegmentsPredictor {
+    cfg: KSegmentsConfig,
+    strategy: RetryStrategy,
+    fitter: Box<dyn KsegFitter>,
+    defaults: Defaults,
+    histories: HistoryMap,
+    /// Fit cache per task, keyed by the history version that produced it.
+    fits: BTreeMap<String, (u64, FitResult)>,
+}
+
+impl KSegmentsPredictor {
+    pub fn with_fitter(
+        fitter: Box<dyn KsegFitter>,
+        cfg: KSegmentsConfig,
+        strategy: RetryStrategy,
+    ) -> Self {
+        assert!(cfg.k >= 1 && cfg.k <= cfg.t_resample);
+        assert!(cfg.retry_factor > 1.0, "retry factor must make progress");
+        let histories = HistoryMap::new(cfg.n_hist, cfg.t_resample);
+        KSegmentsPredictor {
+            cfg,
+            strategy,
+            fitter,
+            defaults: Defaults::default(),
+            histories,
+            fits: BTreeMap::new(),
+        }
+    }
+
+    /// Native-backend predictor with paper defaults and the given k.
+    pub fn native(k: usize, strategy: RetryStrategy) -> Self {
+        let cfg = KSegmentsConfig { k, ..KSegmentsConfig::default() };
+        Self::with_fitter(Box::new(NativeFitter), cfg, strategy)
+    }
+
+    pub fn config(&self) -> &KSegmentsConfig {
+        &self.cfg
+    }
+
+    pub fn strategy(&self) -> RetryStrategy {
+        self.strategy
+    }
+
+    /// Current fit for a task (fitting lazily if the history advanced).
+    fn fit_for(&mut self, task_type: &str) -> Option<FitResult> {
+        let h = self.histories.get(task_type)?;
+        if h.len() < self.cfg.min_train {
+            return None;
+        }
+        let version = h.total_seen();
+        if let Some((v, fit)) = self.fits.get(task_type) {
+            if *v == version {
+                return Some(fit.clone());
+            }
+        }
+        let input = h.fit_input();
+        let mut fit = self.fitter.fit(&input, self.cfg.k);
+        if !self.cfg.use_offsets {
+            fit.rt_offset = 0.0;
+            fit.seg_off.iter_mut().for_each(|o| *o = 0.0);
+        }
+        self.fits
+            .insert(task_type.to_string(), (version, fit.clone()));
+        Some(fit)
+    }
+}
+
+impl MemoryPredictor for KSegmentsPredictor {
+    fn name(&self) -> String {
+        format!("k-Segments {}", self.strategy.label())
+    }
+
+    fn prime(&mut self, task_type: &str, default: MemMiB) {
+        self.defaults.set(task_type, default);
+    }
+
+    fn predict(&mut self, task_type: &str, input_mib: f64) -> Allocation {
+        let default = self.defaults.get(task_type);
+        let Some(fit) = self.fit_for(task_type) else {
+            return Allocation::Static(default);
+        };
+        // Runtime prediction with the negative offset; never below one
+        // monitoring interval.
+        let rt = fit.predict_runtime(input_mib).max(1.0);
+        let values = fit.predict_segments(input_mib);
+        // Boundaries mirror the floor-based training segmentation over
+        // the resample grid (see segment_time_bounds).
+        let bounds =
+            crate::ml::segmentation::segment_time_bounds(rt, self.cfg.t_resample, self.cfg.k);
+        let f = StepFunction::monotone_clamped_with_bounds(
+            bounds,
+            values,
+            self.cfg.min_alloc,
+            self.cfg.node_max,
+        );
+        Allocation::Dynamic(f)
+    }
+
+    fn on_failure(
+        &mut self,
+        _task_type: &str,
+        _input_mib: f64,
+        failed: &Allocation,
+        info: &FailureInfo,
+    ) -> Allocation {
+        let l = self.cfg.retry_factor;
+        match failed {
+            // Untrained default failed: double it, like the baselines.
+            Allocation::Static(m) => {
+                Allocation::Static(MemMiB((m.0 * l).min(self.cfg.node_max.0)))
+            }
+            Allocation::Dynamic(f) => {
+                let seg = f.segment_at(info.time_s);
+                let k = f.k();
+                let (from, to) = match self.strategy {
+                    RetryStrategy::Selective => (seg, seg + 1),
+                    RetryStrategy::Partial => (seg, k),
+                };
+                let mut next = f.scale_segments(from, to, l, self.cfg.node_max);
+                // Guarantee progress even if the scaled value still sits
+                // below the observed usage (e.g. a deep underprediction):
+                // lift the failed segment to cover what was actually seen.
+                if next.value_at(info.time_s) <= info.used_mib {
+                    let need = (info.used_mib * 1.05).min(self.cfg.node_max.0);
+                    let mut values = next.values().to_vec();
+                    let hi = to.min(values.len());
+                    for v in values[from..hi].iter_mut() {
+                        *v = v.max(need);
+                    }
+                    next = StepFunction::monotone_clamped_with_bounds(
+                        next.bounds().to_vec(),
+                        values,
+                        self.cfg.min_alloc,
+                        self.cfg.node_max,
+                    );
+                }
+                Allocation::Dynamic(next)
+            }
+        }
+    }
+
+    fn observe(&mut self, run: &TaskRun) {
+        self.histories.push(run);
+        // fit cache is invalidated implicitly by the version check
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::UsageSeries;
+
+    /// Ramp workload: runtime 100 + 0.1·x, usage ramps linearly to peak
+    /// 200 + x.
+    fn ramp_run(input: f64) -> TaskRun {
+        let runtime = 100.0 + 0.1 * input;
+        let peak = 200.0 + input;
+        let n = (runtime / 2.0).ceil() as usize;
+        let series: Vec<f64> = (0..n)
+            .map(|i| peak * ((i + 1) as f64 / n as f64))
+            .collect();
+        TaskRun {
+            task_type: "t".into(),
+            input_mib: input,
+            runtime: Seconds(n as f64 * 2.0),
+            series: UsageSeries::new(2.0, series),
+            seq: 0,
+        }
+    }
+
+    fn trained(strategy: RetryStrategy) -> KSegmentsPredictor {
+        let mut p = KSegmentsPredictor::native(4, strategy);
+        p.prime("t", MemMiB(8192.0));
+        for i in 0..16 {
+            p.observe(&ramp_run(100.0 + 50.0 * i as f64));
+        }
+        p
+    }
+
+    #[test]
+    fn untrained_returns_default() {
+        let mut p = KSegmentsPredictor::native(4, RetryStrategy::Selective);
+        p.prime("t", MemMiB(4096.0));
+        assert_eq!(p.predict("t", 100.0), Allocation::Static(MemMiB(4096.0)));
+        // one observation is below min_train=2
+        p.observe(&ramp_run(100.0));
+        assert!(!p.predict("t", 100.0).is_dynamic());
+    }
+
+    #[test]
+    fn trained_returns_monotone_step_function() {
+        let mut p = trained(RetryStrategy::Selective);
+        let Allocation::Dynamic(f) = p.predict("t", 400.0) else {
+            panic!("expected dynamic allocation")
+        };
+        assert_eq!(f.k(), 4);
+        assert!(f.is_monotone());
+        // ramp profile: the step function must actually step up
+        assert!(f.values()[3] > f.values()[0]);
+        // final segment covers the true peak (200 + 400 = 600)
+        assert!(f.values()[3] >= 600.0 * 0.9, "{:?}", f.values());
+    }
+
+    #[test]
+    fn runtime_prediction_is_conservative() {
+        let mut p = trained(RetryStrategy::Selective);
+        let Allocation::Dynamic(f) = p.predict("t", 400.0) else {
+            panic!()
+        };
+        // true runtime 100 + 40 = 140; prediction must not exceed it by
+        // much (offset subtracts the max overprediction)
+        assert!(f.predicted_runtime().0 <= 145.0, "{}", f.predicted_runtime());
+    }
+
+    #[test]
+    fn dynamic_beats_static_peak_on_ramp() {
+        // the whole point of the paper: integral of the step function is
+        // well below peak * runtime
+        let mut p = trained(RetryStrategy::Selective);
+        let Allocation::Dynamic(f) = p.predict("t", 400.0) else {
+            panic!()
+        };
+        let rt = f.predicted_runtime().0;
+        let dynamic_area = f.integral(rt);
+        let static_area = f.max_value() * rt;
+        assert!(
+            dynamic_area < 0.8 * static_area,
+            "dynamic {dynamic_area} vs static {static_area}"
+        );
+    }
+
+    #[test]
+    fn selective_retry_scales_only_failed_segment() {
+        let mut p = trained(RetryStrategy::Selective);
+        let alloc = p.predict("t", 400.0);
+        let Allocation::Dynamic(f) = &alloc else { panic!() };
+        let t_fail = f.bounds()[1] * 0.9; // inside segment 1
+        let before = f.values().to_vec();
+        let info = FailureInfo { time_s: t_fail, used_mib: before[1] + 1.0, attempt: 1 };
+        let Allocation::Dynamic(g) = p.on_failure("t", 400.0, &alloc, &info) else {
+            panic!()
+        };
+        assert!(g.values()[1] >= before[1] * 2.0 * 0.999);
+        assert_eq!(g.values()[0], before[0]);
+        // later segments only move if monotone clamping requires it
+        assert!(g.values()[3] >= before[3] * 0.999);
+        assert!(g.is_monotone());
+    }
+
+    #[test]
+    fn partial_retry_scales_failed_and_later_segments() {
+        let mut p = trained(RetryStrategy::Partial);
+        let alloc = p.predict("t", 400.0);
+        let Allocation::Dynamic(f) = &alloc else { panic!() };
+        let before = f.values().to_vec();
+        let t_fail = f.bounds()[1] * 0.9;
+        let info = FailureInfo { time_s: t_fail, used_mib: before[1] + 1.0, attempt: 1 };
+        let Allocation::Dynamic(g) = p.on_failure("t", 400.0, &alloc, &info) else {
+            panic!()
+        };
+        assert_eq!(g.values()[0], before[0]);
+        for s in 1..4 {
+            assert!(
+                g.values()[s] >= before[s] * 2.0 * 0.999,
+                "segment {s}: {} vs {}",
+                g.values()[s],
+                before[s]
+            );
+        }
+    }
+
+    #[test]
+    fn failure_makes_progress_beyond_observed_usage() {
+        let mut p = trained(RetryStrategy::Selective);
+        let alloc = p.predict("t", 400.0);
+        let Allocation::Dynamic(f) = &alloc else { panic!() };
+        // usage wildly above 2x the segment value
+        let info = FailureInfo {
+            time_s: f.bounds()[0] * 0.5,
+            used_mib: f.values()[0] * 10.0,
+            attempt: 1,
+        };
+        let next = p.on_failure("t", 400.0, &alloc, &info);
+        assert!(next.value_at(info.time_s) > info.used_mib);
+    }
+
+    #[test]
+    fn static_default_failure_doubles() {
+        let mut p = KSegmentsPredictor::native(4, RetryStrategy::Partial);
+        p.prime("t", MemMiB(1000.0));
+        let alloc = p.predict("t", 50.0);
+        let info = FailureInfo { time_s: 3.0, used_mib: 1500.0, attempt: 1 };
+        let next = p.on_failure("t", 50.0, &alloc, &info);
+        assert_eq!(next, Allocation::Static(MemMiB(2000.0)));
+    }
+
+    #[test]
+    fn fit_cache_reuses_until_new_observation() {
+        let mut p = trained(RetryStrategy::Selective);
+        let a = p.predict("t", 300.0);
+        let b = p.predict("t", 300.0);
+        assert_eq!(a, b);
+        p.observe(&ramp_run(900.0));
+        // cache invalidated; new fit still valid (may or may not differ)
+        let _ = p.predict("t", 300.0);
+        assert_eq!(p.fits.len(), 1);
+    }
+
+    #[test]
+    fn respects_node_ceiling_and_floor() {
+        let cfg = KSegmentsConfig {
+            node_max: MemMiB(500.0),
+            ..KSegmentsConfig::default()
+        };
+        let mut p =
+            KSegmentsPredictor::with_fitter(Box::new(NativeFitter), cfg, RetryStrategy::Partial);
+        p.prime("t", MemMiB(100.0));
+        for i in 0..8 {
+            p.observe(&ramp_run(1000.0 + i as f64 * 200.0)); // peaks ≫ 500
+        }
+        let Allocation::Dynamic(f) = p.predict("t", 2000.0) else {
+            panic!()
+        };
+        assert!(f.max_value() <= 500.0);
+        assert!(f.values()[0] >= MIN_ALLOC_MIB);
+    }
+
+    #[test]
+    fn k1_degenerates_to_single_peak_prediction() {
+        let mut p = KSegmentsPredictor::native(1, RetryStrategy::Selective);
+        p.prime("t", MemMiB(8192.0));
+        for i in 0..8 {
+            p.observe(&ramp_run(100.0 + 100.0 * i as f64));
+        }
+        let Allocation::Dynamic(f) = p.predict("t", 500.0) else {
+            panic!()
+        };
+        assert_eq!(f.k(), 1);
+        // k=1 must cover the global peak (700)
+        assert!(f.values()[0] >= 700.0 * 0.9);
+    }
+
+    #[test]
+    fn name_reflects_strategy() {
+        assert_eq!(
+            KSegmentsPredictor::native(4, RetryStrategy::Selective).name(),
+            "k-Segments Selective"
+        );
+        assert_eq!(
+            KSegmentsPredictor::native(4, RetryStrategy::Partial).name(),
+            "k-Segments Partial"
+        );
+    }
+}

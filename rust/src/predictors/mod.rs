@@ -1,0 +1,193 @@
+//! Memory predictors: the k-Segments method and every baseline from
+//! the paper's evaluation (§IV-C).
+//!
+//! | Implementation | Paper baseline |
+//! |---|---|
+//! | [`default_config::DefaultConfigPredictor`] | workflow developers' defaults (sanity baseline) |
+//! | [`ppm::PpmPredictor`] (`FailurePolicy::NodeMax`) | Tovar et al. PPM |
+//! | [`ppm::PpmPredictor`] (`FailurePolicy::Double`) | PPM Improved (the paper's extension) |
+//! | [`lr_witt::LrWittPredictor`] | Witt et al. online LR (offsets: mean±σ / mean− / max) |
+//! | [`ksegments::KSegmentsPredictor`] | the paper's k-Segments (Selective / Partial retry) |
+//!
+//! All predictors implement [`MemoryPredictor`]: an **online** contract
+//! — `predict` before each execution, `on_failure` per failed attempt,
+//! `observe` after each successful completion.
+
+pub mod adaptive_k;
+pub mod default_config;
+pub mod history;
+pub mod ksegments;
+pub mod lr_witt;
+pub mod ppm;
+
+use crate::ml::step_fn::StepFunction;
+use crate::trace::TaskRun;
+use crate::units::MemMiB;
+
+/// Paper §IV-A: minimum allocation when a model predicts ≤ 0.
+pub const MIN_ALLOC_MIB: f64 = 100.0;
+
+/// A memory allocation for one task attempt: either a single static
+/// value for the whole runtime (all baselines) or the k-Segments step
+/// function over time.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Allocation {
+    Static(MemMiB),
+    Dynamic(StepFunction),
+}
+
+impl Allocation {
+    /// Allocated MiB at time `t` into the attempt.
+    pub fn value_at(&self, t: f64) -> f64 {
+        match self {
+            Allocation::Static(m) => m.0,
+            Allocation::Dynamic(f) => f.value_at(t),
+        }
+    }
+
+    /// Peak allocation over the attempt (what the resource manager
+    /// must be able to admit).
+    pub fn max_value(&self) -> f64 {
+        match self {
+            Allocation::Static(m) => m.0,
+            Allocation::Dynamic(f) => f.max_value(),
+        }
+    }
+
+    /// Segment index active at `t` (static allocations are one segment).
+    pub fn segment_at(&self, t: f64) -> usize {
+        match self {
+            Allocation::Static(_) => 0,
+            Allocation::Dynamic(f) => f.segment_at(t),
+        }
+    }
+
+    pub fn is_dynamic(&self) -> bool {
+        matches!(self, Allocation::Dynamic(_))
+    }
+}
+
+/// What the simulator reports when an attempt under-allocates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FailureInfo {
+    /// Time into the attempt at which `used > allocated`.
+    pub time_s: f64,
+    /// Usage at the failure instant (MiB).
+    pub used_mib: f64,
+    /// 1-based index of the failed attempt.
+    pub attempt: u32,
+}
+
+/// The online predictor contract shared by the paper's method and all
+/// baselines.
+pub trait MemoryPredictor: Send {
+    /// Display name used in reports ("k-Segments Selective", "PPM", ...).
+    fn name(&self) -> String;
+
+    /// Register a task type's developer-default allocation — returned
+    /// whenever the model has no history yet (the paper's online
+    /// setting: unknown tasks fall back to user defaults).
+    fn prime(&mut self, task_type: &str, default: MemMiB);
+
+    /// Allocation for the next execution of `task_type` with the given
+    /// total input size.
+    fn predict(&mut self, task_type: &str, input_mib: f64) -> Allocation;
+
+    /// The previous attempt failed (under-allocation at `info`);
+    /// produce the allocation for the retry.
+    fn on_failure(
+        &mut self,
+        task_type: &str,
+        input_mib: f64,
+        failed: &Allocation,
+        info: &FailureInfo,
+    ) -> Allocation;
+
+    /// A successful execution completed; fold it into the model.
+    fn observe(&mut self, run: &TaskRun);
+}
+
+impl MemoryPredictor for Box<dyn MemoryPredictor> {
+    fn name(&self) -> String {
+        (**self).name()
+    }
+    fn prime(&mut self, task_type: &str, default: MemMiB) {
+        (**self).prime(task_type, default)
+    }
+    fn predict(&mut self, task_type: &str, input_mib: f64) -> Allocation {
+        (**self).predict(task_type, input_mib)
+    }
+    fn on_failure(
+        &mut self,
+        task_type: &str,
+        input_mib: f64,
+        failed: &Allocation,
+        info: &FailureInfo,
+    ) -> Allocation {
+        (**self).on_failure(task_type, input_mib, failed, info)
+    }
+    fn observe(&mut self, run: &TaskRun) {
+        (**self).observe(run)
+    }
+}
+
+/// Shared helper: the developer-default fallback map.
+#[derive(Debug, Clone, Default)]
+pub struct Defaults {
+    map: std::collections::BTreeMap<String, MemMiB>,
+}
+
+impl Defaults {
+    pub fn set(&mut self, task_type: &str, mem: MemMiB) {
+        self.map.insert(task_type.to_string(), mem);
+    }
+
+    /// Default for a type; falls back to a conservative 8 GiB if the
+    /// workflow did not configure one.
+    pub fn get(&self, task_type: &str) -> MemMiB {
+        self.map
+            .get(task_type)
+            .copied()
+            .unwrap_or(MemMiB::from_gib(8.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::units::Seconds;
+
+    #[test]
+    fn static_allocation_accessors() {
+        let a = Allocation::Static(MemMiB(512.0));
+        assert_eq!(a.value_at(0.0), 512.0);
+        assert_eq!(a.value_at(1e9), 512.0);
+        assert_eq!(a.max_value(), 512.0);
+        assert_eq!(a.segment_at(55.0), 0);
+        assert!(!a.is_dynamic());
+    }
+
+    #[test]
+    fn dynamic_allocation_accessors() {
+        let f = StepFunction::monotone_clamped(
+            Seconds(40.0),
+            vec![100.0, 200.0, 300.0, 400.0],
+            MemMiB(100.0),
+            MemMiB(1e6),
+        );
+        let a = Allocation::Dynamic(f);
+        assert_eq!(a.value_at(5.0), 100.0);
+        assert_eq!(a.value_at(35.0), 400.0);
+        assert_eq!(a.max_value(), 400.0);
+        assert_eq!(a.segment_at(15.0), 1);
+        assert!(a.is_dynamic());
+    }
+
+    #[test]
+    fn defaults_fallback() {
+        let mut d = Defaults::default();
+        d.set("a", MemMiB(1000.0));
+        assert_eq!(d.get("a"), MemMiB(1000.0));
+        assert_eq!(d.get("unknown"), MemMiB::from_gib(8.0));
+    }
+}

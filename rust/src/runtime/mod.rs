@@ -1,0 +1,283 @@
+//! PJRT runtime bridge: load the AOT-lowered JAX + Pallas fit modules
+//! and execute them from the rust online-learning path.
+//!
+//! Build-time python (`make artifacts`) emits one HLO-text module per
+//! segment count k (`artifacts/ksegments_fit_k{K}.hlo.txt`) plus a
+//! `manifest.json` with the padded shapes. This module loads the text,
+//! compiles it once on the PJRT CPU client, and marshals task history
+//! in and [`FitResult`]s out. Python never runs at request time.
+//!
+//! Interchange is HLO **text**: jax ≥ 0.5 serialized protos use 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §2).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::ml::fitter::{FitInput, FitResult, KsegFitter, NativeFitter};
+use crate::ml::linreg::LinReg;
+use crate::util::json::Json;
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub n_hist: usize,
+    pub t_max: usize,
+    /// k -> artifact file name.
+    pub fits: BTreeMap<usize, String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("parsing manifest: {e}"))?;
+        let n_hist = v.get("n_hist").as_u64().context("manifest n_hist")? as usize;
+        let t_max = v.get("t_max").as_u64().context("manifest t_max")? as usize;
+        let mut fits = BTreeMap::new();
+        for (k, name) in v.get("fits").as_obj().context("manifest fits")? {
+            let k: usize = k.parse().map_err(|_| anyhow!("bad k {k:?}"))?;
+            fits.insert(k, name.as_str().context("fit name")?.to_string());
+        }
+        if fits.is_empty() {
+            bail!("manifest has no fit modules");
+        }
+        Ok(Manifest { n_hist, t_max, fits })
+    }
+}
+
+/// PJRT CPU client + lazily compiled per-k executables.
+pub struct ArtifactRegistry {
+    dir: PathBuf,
+    manifest: Manifest,
+    client: xla::PjRtClient,
+    exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: the registry is only ever used behind exclusive references
+// (&mut self on every entry point), so cross-thread use is serialized.
+// The PJRT CPU client itself is thread-compatible under that regime.
+unsafe impl Send for ArtifactRegistry {}
+
+impl ArtifactRegistry {
+    /// Load the manifest and start the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<ArtifactRegistry> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(ArtifactRegistry {
+            dir: dir.to_path_buf(),
+            manifest,
+            client,
+            exes: BTreeMap::new(),
+        })
+    }
+
+    /// Default artifact location (repo-root `artifacts/`).
+    pub fn load_default() -> Result<ArtifactRegistry> {
+        Self::load(Path::new("artifacts"))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn available_ks(&self) -> Vec<usize> {
+        self.manifest.fits.keys().copied().collect()
+    }
+
+    /// Compile (once) and return the executable for segment count `k`.
+    pub fn executable(&mut self, k: usize) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.exes.contains_key(&k) {
+            let name = self
+                .manifest
+                .fits
+                .get(&k)
+                .ok_or_else(|| anyhow!("no artifact for k={k}"))?;
+            let path = self.dir.join(name);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling k={k}: {e:?}"))?;
+            self.exes.insert(k, exe);
+        }
+        Ok(&self.exes[&k])
+    }
+
+    /// Execute the k-fit on padded history arrays.
+    ///
+    /// Rows beyond `n` are zero-padded with `valid = 0`; if the history
+    /// exceeds `n_hist`, the most recent rows are kept (matching the
+    /// sliding window of `predictors::history`).
+    pub fn fit(&mut self, input: &FitInput, k: usize) -> Result<FitResult> {
+        input.validate().map_err(|e| anyhow!("fit input: {e}"))?;
+        let n_hist = self.manifest.n_hist;
+        let t_max = self.manifest.t_max;
+        if input.series.first().map(Vec::len) != Some(t_max) {
+            bail!(
+                "series rows must be resampled to t_max={t_max} (got {:?})",
+                input.series.first().map(Vec::len)
+            );
+        }
+        let n = input.n();
+        let start = n.saturating_sub(n_hist);
+        let rows = n - start;
+
+        let mut x = vec![0f32; n_hist];
+        let mut rt = vec![0f32; n_hist];
+        let mut valid = vec![0f32; n_hist];
+        let mut y = vec![0f32; n_hist * t_max];
+        for (i, src) in (start..n).enumerate() {
+            x[i] = input.x[src] as f32;
+            rt[i] = input.runtime[src] as f32;
+            valid[i] = 1.0;
+            for (j, &v) in input.series[src].iter().enumerate() {
+                y[i * t_max + j] = v as f32;
+            }
+        }
+
+        let x_lit = xla::Literal::vec1(&x);
+        let y_lit = xla::Literal::vec1(&y).reshape(&[n_hist as i64, t_max as i64])?;
+        let rt_lit = xla::Literal::vec1(&rt);
+        let v_lit = xla::Literal::vec1(&valid);
+
+        let exe = self.executable(k)?;
+        let result = exe
+            .execute::<xla::Literal>(&[x_lit, y_lit, rt_lit, v_lit])
+            .map_err(|e| anyhow!("executing fit k={k}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching fit result: {e:?}"))?;
+
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling fit result: {e:?}"))?;
+        if parts.len() != 4 {
+            bail!("fit module returned {} outputs, expected 4", parts.len());
+        }
+        let rt_coef = parts[0].to_vec::<f32>()?;
+        let rt_offset = parts[1].to_vec::<f32>()?;
+        let seg_coef = parts[2].to_vec::<f32>()?;
+        let seg_off = parts[3].to_vec::<f32>()?;
+        if rt_coef.len() != 2 || rt_offset.len() != 1 || seg_coef.len() != 2 * k || seg_off.len() != k
+        {
+            bail!(
+                "fit output shapes off: rt={} off={} seg={} segoff={} (k={k}, rows={rows})",
+                rt_coef.len(),
+                rt_offset.len(),
+                seg_coef.len(),
+                seg_off.len()
+            );
+        }
+
+        Ok(FitResult {
+            rt: LinReg { a: rt_coef[0] as f64, b: rt_coef[1] as f64 },
+            rt_offset: rt_offset[0] as f64,
+            seg: (0..k)
+                .map(|s| LinReg { a: seg_coef[2 * s] as f64, b: seg_coef[2 * s + 1] as f64 })
+                .collect(),
+            seg_off: seg_off.iter().map(|&v| v as f64).collect(),
+        })
+    }
+}
+
+/// [`KsegFitter`] backend that executes the AOT JAX + Pallas module.
+///
+/// Falls back to the native fitter when the requested shape has no
+/// artifact (k outside the compiled range, or series length mismatch)
+/// — the fallback is bit-mirrored math, so behaviour is identical up
+/// to f32-vs-f64 rounding (bounded by the differential tests in
+/// rust/tests/integration_runtime.rs).
+pub struct XlaFitter {
+    registry: ArtifactRegistry,
+    native: NativeFitter,
+    /// Count of fits served by XLA vs the native fallback (observability).
+    pub xla_fits: u64,
+    pub native_fits: u64,
+}
+
+impl XlaFitter {
+    pub fn new(registry: ArtifactRegistry) -> XlaFitter {
+        XlaFitter { registry, native: NativeFitter, xla_fits: 0, native_fits: 0 }
+    }
+
+    pub fn load_default() -> Result<XlaFitter> {
+        Ok(XlaFitter::new(ArtifactRegistry::load_default()?))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        self.registry.manifest()
+    }
+}
+
+impl KsegFitter for XlaFitter {
+    fn backend(&self) -> &'static str {
+        "xla-pjrt"
+    }
+
+    fn fit(&mut self, input: &FitInput, k: usize) -> FitResult {
+        let usable = self.registry.manifest.fits.contains_key(&k)
+            && input.series.first().map(Vec::len) == Some(self.registry.manifest.t_max);
+        if usable {
+            match self.registry.fit(input, k) {
+                Ok(fit) => {
+                    self.xla_fits += 1;
+                    return fit;
+                }
+                Err(e) => {
+                    // Execution errors are unexpected; fall back loudly.
+                    eprintln!("XlaFitter: falling back to native fit: {e:#}");
+                }
+            }
+        }
+        self.native_fits += 1;
+        self.native.fit(input, k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_minimal() {
+        let dir = std::env::temp_dir().join("ksegments_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"n_hist": 8, "t_max": 16, "fits": {"2": "f2.hlo.txt", "4": "f4.hlo.txt"}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.n_hist, 8);
+        assert_eq!(m.t_max, 16);
+        assert_eq!(m.fits.get(&4).unwrap(), "f4.hlo.txt");
+    }
+
+    #[test]
+    fn manifest_missing_dir_errors() {
+        let err = Manifest::load(Path::new("/nonexistent/nope")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn manifest_rejects_empty_fits() {
+        let dir = std::env::temp_dir().join("ksegments_manifest_empty");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"n_hist": 8, "t_max": 16, "fits": {}}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    // Full execution tests against real artifacts live in
+    // rust/tests/integration_runtime.rs (they need `make artifacts`).
+}

@@ -1,0 +1,240 @@
+//! Simulation of a single task attempt against its ground-truth usage
+//! curve — the innermost loop of the evaluation (and the L3 hot path
+//! profiled in EXPERIMENTS.md §Perf).
+
+use crate::predictors::{Allocation, FailureInfo};
+use crate::trace::UsageSeries;
+
+/// Outcome of running one attempt under an allocation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AttemptOutcome {
+    /// The allocation covered the whole run. `wastage_mibs` is
+    /// `∫ (alloc(t) − used(t)) dt` over the full runtime.
+    Success { wastage_mibs: f64 },
+    /// Under-allocation at `info.time_s`. `wastage_mibs` is the FULL
+    /// allocation integral up to the failure instant: a failed attempt
+    /// produces no useful output, so every allocated byte-second of it
+    /// is wasted (this is the accounting that makes retries expensive,
+    /// consistent with the paper's discussion of failure-handling cost
+    /// and Tovar's slow-peaks model).
+    Failure { info: FailureInfo, wastage_mibs: f64 },
+}
+
+impl AttemptOutcome {
+    pub fn wastage_mibs(&self) -> f64 {
+        match self {
+            AttemptOutcome::Success { wastage_mibs } => *wastage_mibs,
+            AttemptOutcome::Failure { wastage_mibs, .. } => *wastage_mibs,
+        }
+    }
+
+    pub fn is_success(&self) -> bool {
+        matches!(self, AttemptOutcome::Success { .. })
+    }
+}
+
+/// Simulate one attempt: walk the usage curve at monitoring resolution
+/// and compare against the allocation function.
+///
+/// Semantics:
+/// * usage is sample-and-hold over each interval `[i·f, (i+1)·f)`;
+/// * the allocation is piecewise constant (static, or the k-Segments
+///   step function, which changes value at its segment boundaries);
+/// * within one usage sample the allocation may step; each piece is
+///   checked separately, so a failure lands at the exact boundary
+///   where `alloc` first drops below `used` (this matters for the
+///   k-Segments runtime-underprediction case: the function steps UP,
+///   so the dangerous instants are segment starts).
+/// * `attempt` is the 1-based attempt index recorded in failures.
+pub fn simulate_attempt(series: &UsageSeries, alloc: &Allocation, attempt: u32) -> AttemptOutcome {
+    let dt = series.interval().0;
+    let mut wastage = 0.0f64;
+
+    match alloc {
+        Allocation::Static(m) => {
+            let a = m.0;
+            for (i, &used) in series.samples().iter().enumerate() {
+                if used > a {
+                    // failure at the start of this sample interval
+                    let t = i as f64 * dt;
+                    return AttemptOutcome::Failure {
+                        info: FailureInfo { time_s: t, used_mib: used, attempt },
+                        wastage_mibs: wastage + 0.0, // failure at piece start
+                    };
+                }
+                wastage += a * dt; // full-allocation accounting (see below)
+            }
+            // success: wastage is alloc − used
+            let used_integral: f64 = series.samples().iter().map(|u| u * dt).sum();
+            AttemptOutcome::Success { wastage_mibs: wastage - used_integral }
+        }
+        Allocation::Dynamic(f) => {
+            let bounds = f.bounds();
+            let values = f.values();
+            let k = values.len();
+            let mut seg = 0usize; // current allocation segment (two-pointer)
+            let mut used_integral = 0.0f64;
+            for (i, &used) in series.samples().iter().enumerate() {
+                let t0 = i as f64 * dt;
+                let t1 = t0 + dt;
+                // advance to the segment covering (t0, t0+ε): Eq. 1's
+                // segments are right-closed (r_{s-1}, r_s], so for the
+                // duration-based check the piece that matters at a
+                // boundary instant is the NEXT segment (a boundary has
+                // measure zero; the new allocation applies from it on)
+                while seg < k - 1 && bounds[seg] <= t0 {
+                    seg += 1;
+                }
+                // walk allocation pieces inside [t0, t1)
+                let mut piece_start = t0;
+                let mut s = seg;
+                loop {
+                    let piece_end = if s < k - 1 { bounds[s].min(t1) } else { t1 };
+                    let a = values[s.min(k - 1)];
+                    if used > a {
+                        return AttemptOutcome::Failure {
+                            info: FailureInfo { time_s: piece_start, used_mib: used, attempt },
+                            wastage_mibs: wastage,
+                        };
+                    }
+                    wastage += a * (piece_end - piece_start);
+                    used_integral += used * (piece_end - piece_start);
+                    if piece_end >= t1 - 1e-12 {
+                        break;
+                    }
+                    piece_start = piece_end;
+                    s += 1;
+                }
+            }
+            AttemptOutcome::Success { wastage_mibs: wastage - used_integral }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::step_fn::StepFunction;
+    use crate::units::MemMiB;
+
+    fn series(samples: Vec<f64>) -> UsageSeries {
+        UsageSeries::new(2.0, samples)
+    }
+
+    #[test]
+    fn static_success_wastage() {
+        // alloc 100 for 6 s; usage 10,20,30 -> waste (90+80+70)*2 = 480
+        let out = simulate_attempt(&series(vec![10.0, 20.0, 30.0]), &Allocation::Static(MemMiB(100.0)), 1);
+        match out {
+            AttemptOutcome::Success { wastage_mibs } => {
+                assert!((wastage_mibs - 480.0).abs() < 1e-9)
+            }
+            _ => panic!("{out:?}"),
+        }
+    }
+
+    #[test]
+    fn static_failure_at_right_sample() {
+        let out = simulate_attempt(
+            &series(vec![10.0, 20.0, 300.0, 5.0]),
+            &Allocation::Static(MemMiB(100.0)),
+            2,
+        );
+        match out {
+            AttemptOutcome::Failure { info, wastage_mibs } => {
+                assert_eq!(info.time_s, 4.0);
+                assert_eq!(info.used_mib, 300.0);
+                assert_eq!(info.attempt, 2);
+                // full allocation up to failure: 100 * 4 s
+                assert!((wastage_mibs - 400.0).abs() < 1e-9);
+            }
+            _ => panic!("{out:?}"),
+        }
+    }
+
+    #[test]
+    fn exact_fit_is_success() {
+        let out = simulate_attempt(&series(vec![100.0, 100.0]), &Allocation::Static(MemMiB(100.0)), 1);
+        assert!(out.is_success());
+        assert!(out.wastage_mibs().abs() < 1e-9);
+    }
+
+    fn step(bounds: Vec<f64>, values: Vec<f64>) -> Allocation {
+        Allocation::Dynamic(StepFunction::new(bounds, values))
+    }
+
+    #[test]
+    fn dynamic_success_tracks_pieces() {
+        // alloc: 50 on (0,4], 100 on (4,8]; usage 40,40,80,80
+        let out = simulate_attempt(
+            &series(vec![40.0, 40.0, 80.0, 80.0]),
+            &step(vec![4.0, 8.0], vec![50.0, 100.0]),
+            1,
+        );
+        match out {
+            AttemptOutcome::Success { wastage_mibs } => {
+                // waste = (10+10+20+20)*2 = 120
+                assert!((wastage_mibs - 120.0).abs() < 1e-9, "{wastage_mibs}");
+            }
+            _ => panic!("{out:?}"),
+        }
+    }
+
+    #[test]
+    fn dynamic_failure_when_segment_too_low() {
+        // usage 80 in the first segment that only allows 50
+        let out = simulate_attempt(
+            &series(vec![80.0, 10.0]),
+            &step(vec![4.0, 8.0], vec![50.0, 100.0]),
+            1,
+        );
+        match out {
+            AttemptOutcome::Failure { info, wastage_mibs } => {
+                assert_eq!(info.time_s, 0.0);
+                assert_eq!(wastage_mibs, 0.0);
+            }
+            _ => panic!("{out:?}"),
+        }
+    }
+
+    #[test]
+    fn dynamic_failure_mid_sample_at_boundary() {
+        // usage sample [2,4) = 80; allocation steps DOWN is impossible
+        // after monotone clamp, but StepFunction::new allows it for this
+        // accounting test: alloc 100 on (0,3], 50 on (3,6] -> failure at
+        // exactly t=3 inside the second usage sample
+        let out = simulate_attempt(
+            &series(vec![60.0, 80.0, 10.0]),
+            &step(vec![3.0, 6.0], vec![100.0, 50.0]),
+            1,
+        );
+        match out {
+            AttemptOutcome::Failure { info, wastage_mibs } => {
+                assert_eq!(info.time_s, 3.0);
+                // 100 MiB held for 3 s
+                assert!((wastage_mibs - 300.0).abs() < 1e-9);
+            }
+            _ => panic!("{out:?}"),
+        }
+    }
+
+    #[test]
+    fn runtime_underprediction_holds_last_value() {
+        // allocation predicted only 4 s but the task runs 8 s: v_k held
+        let out = simulate_attempt(
+            &series(vec![10.0, 10.0, 10.0, 10.0]),
+            &step(vec![2.0, 4.0], vec![20.0, 20.0]),
+            1,
+        );
+        assert!(out.is_success());
+        // waste = 10 MiB * 8 s
+        assert!((out.wastage_mibs() - 80.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_series_is_trivial_success() {
+        let out = simulate_attempt(&series(vec![]), &Allocation::Static(MemMiB(10.0)), 1);
+        assert!(out.is_success());
+        assert_eq!(out.wastage_mibs(), 0.0);
+    }
+}

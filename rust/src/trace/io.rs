@@ -1,0 +1,237 @@
+//! Trace persistence: CSV (one row per sample, like the paper's
+//! published k-Segments-traces repository) and JSON-lines (one object
+//! per run, convenient for tooling).
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{TaskRun, Trace, UsageSeries};
+use crate::units::{MemMiB, Seconds};
+use crate::util::json::Json;
+
+/// Write a trace as JSON lines: a `default` record per task type with a
+/// configured default, then a `run` record per execution.
+pub fn write_trace_jsonl(trace: &Trace, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path).context("creating jsonl trace")?);
+    for ty in trace.task_types().map(String::from).collect::<Vec<_>>() {
+        if let Some(mem) = trace.default_alloc(&ty) {
+            let rec = Json::obj(vec![
+                ("kind", "default".into()),
+                ("task_type", ty.as_str().into()),
+                ("default_mib", mem.0.into()),
+            ]);
+            writeln!(w, "{rec}")?;
+        }
+        for run in trace.runs_of(&ty) {
+            let rec = Json::obj(vec![
+                ("kind", "run".into()),
+                ("task_type", run.task_type.as_str().into()),
+                ("seq", run.seq.into()),
+                ("input_mib", run.input_mib.into()),
+                ("runtime_s", run.runtime.0.into()),
+                ("interval_s", run.series.interval().0.into()),
+                ("samples_mib", Json::arr_f64(run.series.samples())),
+            ]);
+            writeln!(w, "{rec}")?;
+        }
+    }
+    Ok(())
+}
+
+/// Read a JSONL trace written by [`write_trace_jsonl`].
+pub fn read_trace_jsonl(path: &Path) -> Result<Trace> {
+    let r = BufReader::new(File::open(path).context("opening jsonl trace")?);
+    let mut trace = Trace::new();
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let rec = Json::parse(&line)
+            .map_err(|e| anyhow::anyhow!("jsonl line {}: {}", lineno + 1, e))?;
+        let kind = rec.get("kind").as_str().unwrap_or("");
+        let ty = rec
+            .get("task_type")
+            .as_str()
+            .context("missing task_type")?
+            .to_string();
+        match kind {
+            "default" => {
+                let mem = rec.get("default_mib").as_f64().context("default_mib")?;
+                trace.set_default(&ty, MemMiB(mem));
+            }
+            "run" => {
+                let samples: Vec<f64> = rec
+                    .get("samples_mib")
+                    .as_arr()
+                    .context("samples_mib")?
+                    .iter()
+                    .map(|v| v.as_f64().context("non-numeric sample"))
+                    .collect::<Result<_>>()?;
+                trace.push(TaskRun {
+                    task_type: ty,
+                    input_mib: rec.get("input_mib").as_f64().context("input_mib")?,
+                    runtime: Seconds(rec.get("runtime_s").as_f64().context("runtime_s")?),
+                    series: UsageSeries::new(
+                        rec.get("interval_s").as_f64().context("interval_s")?,
+                        samples,
+                    ),
+                    seq: rec.get("seq").as_u64().context("seq")?,
+                });
+            }
+            other => bail!("jsonl line {}: unknown kind {:?}", lineno + 1, other),
+        }
+    }
+    trace.sort();
+    Ok(trace)
+}
+
+/// Write a trace as CSV with one row per monitoring sample:
+/// `task_type,seq,input_mib,runtime_s,interval_s,sample_idx,mem_mib`.
+pub fn write_trace_csv(trace: &Trace, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path).context("creating csv trace")?);
+    writeln!(w, "task_type,seq,input_mib,runtime_s,interval_s,sample_idx,mem_mib")?;
+    for ty in trace.task_types().map(String::from).collect::<Vec<_>>() {
+        for run in trace.runs_of(&ty) {
+            for (i, v) in run.series.samples().iter().enumerate() {
+                writeln!(
+                    w,
+                    "{},{},{},{},{},{},{}",
+                    run.task_type,
+                    run.seq,
+                    run.input_mib,
+                    run.runtime.0,
+                    run.series.interval().0,
+                    i,
+                    v
+                )?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Read a CSV trace written by [`write_trace_csv`].
+pub fn read_trace_csv(path: &Path) -> Result<Trace> {
+    let r = BufReader::new(File::open(path).context("opening csv trace")?);
+    let mut lines = r.lines();
+    let header = lines.next().transpose()?.unwrap_or_default();
+    if !header.starts_with("task_type,seq,") {
+        bail!("unrecognized trace csv header: {header:?}");
+    }
+    // accumulate rows into runs keyed by (type, seq)
+    let mut current: Option<(String, u64, f64, f64, f64, Vec<f64>)> = None;
+    let mut trace = Trace::new();
+    fn flush(cur: &mut Option<(String, u64, f64, f64, f64, Vec<f64>)>, trace: &mut Trace) {
+        if let Some((ty, seq, input, rt, iv, samples)) = cur.take() {
+            trace.push(TaskRun {
+                task_type: ty,
+                input_mib: input,
+                runtime: Seconds(rt),
+                series: UsageSeries::new(iv, samples),
+                seq,
+            });
+        }
+    }
+    for (lineno, line) in lines.enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let f: Vec<&str> = line.split(',').collect();
+        if f.len() != 7 {
+            bail!("csv line {}: expected 7 fields, got {}", lineno + 2, f.len());
+        }
+        let (ty, seq) = (f[0].to_string(), f[1].parse::<u64>()?);
+        let (input, rt, iv) = (f[2].parse()?, f[3].parse()?, f[4].parse()?);
+        let mem: f64 = f[6].parse()?;
+        match &mut current {
+            Some((cty, cseq, _, _, _, samples)) if *cty == ty && *cseq == seq => {
+                samples.push(mem)
+            }
+            _ => {
+                flush(&mut current, &mut trace);
+                current = Some((ty, seq, input, rt, iv, vec![mem]));
+            }
+        }
+    }
+    flush(&mut current, &mut trace);
+    trace.sort();
+    Ok(trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace() -> Trace {
+        let mut t = Trace::new();
+        t.set_default("wf/a", MemMiB(4096.0));
+        for seq in 0..3u64 {
+            t.push(TaskRun {
+                task_type: "wf/a".into(),
+                input_mib: 100.0 + seq as f64,
+                runtime: Seconds(6.0),
+                series: UsageSeries::new(2.0, vec![1.0, 5.0 + seq as f64, 2.0]),
+                seq,
+            });
+        }
+        t.push(TaskRun {
+            task_type: "wf/b".into(),
+            input_mib: 9.0,
+            runtime: Seconds(2.0),
+            series: UsageSeries::new(2.0, vec![7.0]),
+            seq: 3,
+        });
+        t
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let dir = std::env::temp_dir().join("ksegments_test_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.jsonl");
+        let t = sample_trace();
+        write_trace_jsonl(&t, &path).unwrap();
+        let back = read_trace_jsonl(&path).unwrap();
+        assert_eq!(back.n_types(), 2);
+        assert_eq!(back.n_runs(), 4);
+        assert_eq!(back.runs_of("wf/a"), t.runs_of("wf/a"));
+        assert_eq!(back.default_alloc("wf/a"), Some(MemMiB(4096.0)));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("ksegments_test_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.csv");
+        let t = sample_trace();
+        write_trace_csv(&t, &path).unwrap();
+        let back = read_trace_csv(&path).unwrap();
+        assert_eq!(back.n_runs(), 4);
+        assert_eq!(back.runs_of("wf/b")[0].series.samples(), &[7.0]);
+        // CSV does not carry defaults
+        assert_eq!(back.default_alloc("wf/a"), None);
+    }
+
+    #[test]
+    fn csv_rejects_bad_header() {
+        let dir = std::env::temp_dir().join("ksegments_test_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.csv");
+        std::fs::write(&path, "nope\n1,2,3\n").unwrap();
+        assert!(read_trace_csv(&path).is_err());
+    }
+
+    #[test]
+    fn jsonl_rejects_unknown_kind() {
+        let dir = std::env::temp_dir().join("ksegments_test_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.jsonl");
+        std::fs::write(&path, "{\"kind\":\"wat\",\"task_type\":\"x\"}\n").unwrap();
+        assert!(read_trace_jsonl(&path).is_err());
+    }
+}

@@ -1,0 +1,193 @@
+//! Task-execution traces: the data model shared by the monitoring
+//! pipeline, the predictors, and the simulator.
+//!
+//! A [`UsageSeries`] is what the paper's monitoring extension records
+//! per task container (cgroup memory samples at a fixed interval); a
+//! [`TaskRun`] bundles one execution's series with its metadata (total
+//! input size, runtime); a [`Trace`] is the per-task-type ordered
+//! collection the online simulator replays.
+
+mod io;
+mod series;
+
+pub use io::{read_trace_csv, read_trace_jsonl, write_trace_csv, write_trace_jsonl};
+pub use series::UsageSeries;
+
+use std::collections::BTreeMap;
+
+use crate::units::{MemMiB, Seconds};
+
+/// One observed execution of a workflow task.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskRun {
+    /// Task type name, e.g. `"eager/adapter_removal"`.
+    pub task_type: String,
+    /// Total size of all input files (the predictor's independent
+    /// variable, paper §III-B).
+    pub input_mib: f64,
+    /// Wall-clock runtime of the successful execution.
+    pub runtime: Seconds,
+    /// Interval-sampled memory usage over the execution.
+    pub series: UsageSeries,
+    /// Global submission order within the workflow execution — the
+    /// online simulator replays runs in this order.
+    pub seq: u64,
+}
+
+impl TaskRun {
+    /// Peak memory over the whole execution (what static baselines learn).
+    pub fn peak(&self) -> MemMiB {
+        MemMiB(self.series.peak())
+    }
+}
+
+/// An ordered collection of task runs, grouped by task type.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    /// Per task type, runs sorted by `seq`. BTreeMap keeps iteration
+    /// order deterministic across platforms.
+    runs: BTreeMap<String, Vec<TaskRun>>,
+    /// Workflow developer defaults (paper's sanity baseline): the static
+    /// allocation used when running the workflow out of the box.
+    defaults: BTreeMap<String, MemMiB>,
+}
+
+impl Trace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, run: TaskRun) {
+        self.runs.entry(run.task_type.clone()).or_default().push(run);
+    }
+
+    /// Record the workflow developers' default allocation for a type.
+    pub fn set_default(&mut self, task_type: &str, mem: MemMiB) {
+        self.defaults.insert(task_type.to_string(), mem);
+    }
+
+    pub fn default_alloc(&self, task_type: &str) -> Option<MemMiB> {
+        self.defaults.get(task_type).copied()
+    }
+
+    pub fn task_types(&self) -> impl Iterator<Item = &str> {
+        self.runs.keys().map(String::as_str)
+    }
+
+    pub fn runs_of(&self, task_type: &str) -> &[TaskRun] {
+        self.runs.get(task_type).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    pub fn n_types(&self) -> usize {
+        self.runs.len()
+    }
+
+    pub fn n_runs(&self) -> usize {
+        self.runs.values().map(Vec::len).sum()
+    }
+
+    /// All runs across types, sorted by submission order — the replay
+    /// order of the online evaluation protocol.
+    pub fn all_runs_ordered(&self) -> Vec<&TaskRun> {
+        let mut all: Vec<&TaskRun> = self.runs.values().flatten().collect();
+        all.sort_by_key(|r| r.seq);
+        all
+    }
+
+    /// Finalize: sort each type's runs by sequence number.
+    pub fn sort(&mut self) {
+        for runs in self.runs.values_mut() {
+            runs.sort_by_key(|r| r.seq);
+        }
+    }
+
+    /// Restrict to task types satisfying `keep` (used by the Fig. 8
+    /// per-task sweeps).
+    pub fn filtered(&self, keep: impl Fn(&str) -> bool) -> Trace {
+        Trace {
+            runs: self
+                .runs
+                .iter()
+                .filter(|(k, _)| keep(k))
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect(),
+            defaults: self
+                .defaults
+                .iter()
+                .filter(|(k, _)| keep(k))
+                .map(|(k, v)| (k.clone(), *v))
+                .collect(),
+        }
+    }
+
+    /// Task types with at least `min_runs` executions — the paper
+    /// evaluates the 33 types that have enough history to learn from.
+    pub fn evaluated_types(&self, min_runs: usize) -> Vec<&str> {
+        self.runs
+            .iter()
+            .filter(|(_, v)| v.len() >= min_runs)
+            .map(|(k, _)| k.as_str())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(task: &str, seq: u64, peak: f64) -> TaskRun {
+        TaskRun {
+            task_type: task.to_string(),
+            input_mib: 100.0,
+            runtime: Seconds(10.0),
+            series: UsageSeries::new(2.0, vec![peak / 2.0, peak, peak / 4.0]),
+            seq,
+        }
+    }
+
+    #[test]
+    fn push_and_group() {
+        let mut t = Trace::new();
+        t.push(run("a", 0, 100.0));
+        t.push(run("b", 1, 50.0));
+        t.push(run("a", 2, 200.0));
+        assert_eq!(t.n_types(), 2);
+        assert_eq!(t.n_runs(), 3);
+        assert_eq!(t.runs_of("a").len(), 2);
+        assert_eq!(t.runs_of("missing").len(), 0);
+    }
+
+    #[test]
+    fn ordered_replay() {
+        let mut t = Trace::new();
+        t.push(run("a", 5, 1.0));
+        t.push(run("b", 2, 1.0));
+        t.push(run("a", 9, 1.0));
+        let seqs: Vec<u64> = t.all_runs_ordered().iter().map(|r| r.seq).collect();
+        assert_eq!(seqs, vec![2, 5, 9]);
+    }
+
+    #[test]
+    fn peak_of_run() {
+        assert_eq!(run("a", 0, 80.0).peak(), MemMiB(80.0));
+    }
+
+    #[test]
+    fn evaluated_types_threshold() {
+        let mut t = Trace::new();
+        for i in 0..5 {
+            t.push(run("common", i, 1.0));
+        }
+        t.push(run("rare", 99, 1.0));
+        assert_eq!(t.evaluated_types(3), vec!["common"]);
+        assert_eq!(t.evaluated_types(1).len(), 2);
+    }
+
+    #[test]
+    fn defaults_roundtrip() {
+        let mut t = Trace::new();
+        t.set_default("a", MemMiB::from_gib(8.0));
+        assert_eq!(t.default_alloc("a"), Some(MemMiB(8192.0)));
+        assert_eq!(t.default_alloc("b"), None);
+    }
+}

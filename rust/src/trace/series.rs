@@ -1,0 +1,174 @@
+//! Interval-sampled memory-usage time series.
+
+use crate::units::Seconds;
+
+/// A memory-usage time series sampled at a fixed interval, as produced
+/// by the cgroup monitoring pipeline (paper §IV-A: default 2 s).
+///
+/// Sample `i` is the usage over `[i*interval, (i+1)*interval)`; values
+/// are MiB. The series of a run with runtime `r` has
+/// `ceil(r / interval)` samples (the last one possibly covering a
+/// partial interval).
+#[derive(Debug, Clone, PartialEq)]
+pub struct UsageSeries {
+    interval_s: f64,
+    samples: Vec<f64>,
+}
+
+impl UsageSeries {
+    pub fn new(interval_s: f64, samples: Vec<f64>) -> Self {
+        assert!(interval_s > 0.0, "non-positive monitoring interval");
+        UsageSeries { interval_s, samples }
+    }
+
+    pub fn interval(&self) -> Seconds {
+        Seconds(self.interval_s)
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    /// Duration covered by the samples (`j · f` in the paper's runtime
+    /// model, §III-B).
+    pub fn duration(&self) -> Seconds {
+        Seconds(self.samples.len() as f64 * self.interval_s)
+    }
+
+    /// Global peak (MiB); 0 for an empty series.
+    pub fn peak(&self) -> f64 {
+        self.samples.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Usage at time `t` seconds (sample-and-hold; clamps to the ends).
+    pub fn value_at(&self, t: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let idx = (t / self.interval_s).floor() as isize;
+        let idx = idx.clamp(0, self.samples.len() as isize - 1) as usize;
+        self.samples[idx]
+    }
+
+    /// Peak-preserving resample to exactly `t_max` buckets.
+    ///
+    /// This is the padding transform feeding the AOT fit artifact
+    /// (fixed `[N_HIST, T_MAX]` shapes): each output bucket takes the
+    /// **max** of its covered input samples, so no memory peak can be
+    /// smoothed away (resampling with means would make every predictor
+    /// look better than it is). Series shorter than `t_max` repeat
+    /// samples (nearest); empty series give zeros.
+    pub fn resample_peaks(&self, t_max: usize) -> Vec<f64> {
+        assert!(t_max > 0);
+        let n = self.samples.len();
+        if n == 0 {
+            return vec![0.0; t_max];
+        }
+        let mut out = Vec::with_capacity(t_max);
+        for b in 0..t_max {
+            // input range covered by bucket b: [b*n/t_max, (b+1)*n/t_max)
+            let lo = b * n / t_max;
+            let hi = (((b + 1) * n).div_ceil(t_max)).min(n).max(lo + 1);
+            let m = self.samples[lo..hi].iter().copied().fold(f64::MIN, f64::max);
+            out.push(m);
+        }
+        out
+    }
+
+    /// Iterate `(start_time_s, usage_mib)` pairs.
+    pub fn iter_timed(&self) -> impl Iterator<Item = (f64, f64)> + '_ {
+        self.samples
+            .iter()
+            .enumerate()
+            .map(move |(i, &v)| (i as f64 * self.interval_s, v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: Vec<f64>) -> UsageSeries {
+        UsageSeries::new(2.0, v)
+    }
+
+    #[test]
+    fn peak_and_duration() {
+        let u = s(vec![1.0, 9.0, 3.0]);
+        assert_eq!(u.peak(), 9.0);
+        assert_eq!(u.duration(), Seconds(6.0));
+        assert_eq!(u.len(), 3);
+    }
+
+    #[test]
+    fn empty_series() {
+        let u = s(vec![]);
+        assert_eq!(u.peak(), 0.0);
+        assert_eq!(u.value_at(5.0), 0.0);
+        assert_eq!(u.resample_peaks(4), vec![0.0; 4]);
+    }
+
+    #[test]
+    fn value_at_sample_and_hold() {
+        let u = s(vec![10.0, 20.0, 30.0]);
+        assert_eq!(u.value_at(0.0), 10.0);
+        assert_eq!(u.value_at(1.99), 10.0);
+        assert_eq!(u.value_at(2.0), 20.0);
+        assert_eq!(u.value_at(100.0), 30.0); // clamps to last
+        assert_eq!(u.value_at(-1.0), 10.0); // clamps to first
+    }
+
+    #[test]
+    fn resample_preserves_global_peak() {
+        let u = s(vec![1.0, 2.0, 100.0, 3.0, 4.0, 5.0, 6.0]);
+        for t_max in [1, 2, 3, 4, 7, 16] {
+            let r = u.resample_peaks(t_max);
+            assert_eq!(r.len(), t_max);
+            assert_eq!(
+                r.iter().copied().fold(f64::MIN, f64::max),
+                100.0,
+                "t_max={t_max}"
+            );
+        }
+    }
+
+    #[test]
+    fn resample_identity_when_lengths_match() {
+        let u = s(vec![5.0, 7.0, 6.0, 8.0]);
+        assert_eq!(u.resample_peaks(4), vec![5.0, 7.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn upsample_repeats_values() {
+        let u = s(vec![5.0, 9.0]);
+        let r = u.resample_peaks(4);
+        assert_eq!(r, vec![5.0, 5.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn downsample_buckets_are_maxes() {
+        let u = s(vec![1.0, 4.0, 2.0, 8.0]);
+        assert_eq!(u.resample_peaks(2), vec![4.0, 8.0]);
+    }
+
+    #[test]
+    fn iter_timed_times() {
+        let u = s(vec![1.0, 2.0]);
+        let v: Vec<(f64, f64)> = u.iter_timed().collect();
+        assert_eq!(v, vec![(0.0, 1.0), (2.0, 2.0)]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_interval_panics() {
+        UsageSeries::new(0.0, vec![1.0]);
+    }
+}

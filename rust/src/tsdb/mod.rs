@@ -1,0 +1,179 @@
+//! In-memory time-series database — the InfluxDB substitute
+//! (DESIGN.md §3).
+//!
+//! The paper's monitoring extension stores periodic cgroup metrics in
+//! InfluxDB keyed by task execution; the memory predictor later
+//! retrieves a completed run's series. This store provides exactly
+//! that contract: append-only points per (task type, run id, metric),
+//! range queries, and series export, all deterministic.
+
+use std::collections::BTreeMap;
+
+/// A single monitored data point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Point {
+    /// Seconds since the run started.
+    pub t: f64,
+    pub value: f64,
+}
+
+/// Identifies one metric stream of one task execution.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct SeriesKey {
+    pub task_type: String,
+    pub run_id: u64,
+    /// Metric name, e.g. `"mem_mib"`, `"cpu_frac"`, `"blkio_mib"`.
+    pub metric: String,
+}
+
+impl SeriesKey {
+    pub fn mem(task_type: &str, run_id: u64) -> SeriesKey {
+        SeriesKey {
+            task_type: task_type.to_string(),
+            run_id,
+            metric: "mem_mib".to_string(),
+        }
+    }
+}
+
+/// Append-only in-memory TSDB.
+#[derive(Debug, Default, Clone)]
+pub struct TsDb {
+    series: BTreeMap<SeriesKey, Vec<Point>>,
+}
+
+impl TsDb {
+    pub fn new() -> TsDb {
+        TsDb::default()
+    }
+
+    /// Append a point; points must arrive in time order per series
+    /// (the monitoring sampler guarantees this).
+    pub fn append(&mut self, key: &SeriesKey, p: Point) {
+        let s = self.series.entry(key.clone()).or_default();
+        if let Some(last) = s.last() {
+            assert!(
+                p.t >= last.t,
+                "out-of-order append to {key:?}: {} after {}",
+                p.t,
+                last.t
+            );
+        }
+        s.push(p);
+    }
+
+    pub fn n_series(&self) -> usize {
+        self.series.len()
+    }
+
+    pub fn n_points(&self) -> usize {
+        self.series.values().map(Vec::len).sum()
+    }
+
+    /// Full series for a key (empty if unknown).
+    pub fn get(&self, key: &SeriesKey) -> &[Point] {
+        self.series.get(key).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Range query: points with `t ∈ [from, to)`.
+    pub fn range(&self, key: &SeriesKey, from: f64, to: f64) -> Vec<Point> {
+        self.get(key)
+            .iter()
+            .filter(|p| p.t >= from && p.t < to)
+            .copied()
+            .collect()
+    }
+
+    /// Max value over a range (None if empty) — the segment-peak query.
+    pub fn range_max(&self, key: &SeriesKey, from: f64, to: f64) -> Option<f64> {
+        self.get(key)
+            .iter()
+            .filter(|p| p.t >= from && p.t < to)
+            .map(|p| p.value)
+            .fold(None, |acc, v| Some(acc.map_or(v, |a: f64| a.max(v))))
+    }
+
+    /// All run ids recorded for a task type + metric, in order.
+    pub fn run_ids(&self, task_type: &str, metric: &str) -> Vec<u64> {
+        self.series
+            .keys()
+            .filter(|k| k.task_type == task_type && k.metric == metric)
+            .map(|k| k.run_id)
+            .collect()
+    }
+
+    /// Drop all series of a run (retention management).
+    pub fn drop_run(&mut self, task_type: &str, run_id: u64) {
+        self.series
+            .retain(|k, _| !(k.task_type == task_type && k.run_id == run_id));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(run: u64) -> SeriesKey {
+        SeriesKey::mem("wf/task", run)
+    }
+
+    #[test]
+    fn append_and_get() {
+        let mut db = TsDb::new();
+        db.append(&key(0), Point { t: 0.0, value: 10.0 });
+        db.append(&key(0), Point { t: 2.0, value: 20.0 });
+        assert_eq!(db.get(&key(0)).len(), 2);
+        assert_eq!(db.n_series(), 1);
+        assert_eq!(db.n_points(), 2);
+        assert!(db.get(&key(1)).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "out-of-order")]
+    fn out_of_order_append_panics() {
+        let mut db = TsDb::new();
+        db.append(&key(0), Point { t: 5.0, value: 1.0 });
+        db.append(&key(0), Point { t: 1.0, value: 2.0 });
+    }
+
+    #[test]
+    fn range_queries() {
+        let mut db = TsDb::new();
+        for i in 0..10 {
+            db.append(&key(0), Point { t: i as f64, value: i as f64 * 10.0 });
+        }
+        let r = db.range(&key(0), 2.0, 5.0);
+        assert_eq!(r.len(), 3);
+        assert_eq!(r[0].value, 20.0);
+        assert_eq!(db.range_max(&key(0), 2.0, 5.0), Some(40.0));
+        assert_eq!(db.range_max(&key(0), 100.0, 200.0), None);
+    }
+
+    #[test]
+    fn run_ids_per_type() {
+        let mut db = TsDb::new();
+        db.append(&key(3), Point { t: 0.0, value: 1.0 });
+        db.append(&key(1), Point { t: 0.0, value: 1.0 });
+        db.append(&SeriesKey::mem("other", 9), Point { t: 0.0, value: 1.0 });
+        assert_eq!(db.run_ids("wf/task", "mem_mib"), vec![1, 3]);
+    }
+
+    #[test]
+    fn drop_run_retention() {
+        let mut db = TsDb::new();
+        db.append(&key(1), Point { t: 0.0, value: 1.0 });
+        db.append(&key(2), Point { t: 0.0, value: 1.0 });
+        db.drop_run("wf/task", 1);
+        assert_eq!(db.run_ids("wf/task", "mem_mib"), vec![2]);
+    }
+
+    #[test]
+    fn distinct_metrics_are_distinct_series() {
+        let mut db = TsDb::new();
+        let mem = SeriesKey::mem("t", 0);
+        let cpu = SeriesKey { metric: "cpu_frac".into(), ..mem.clone() };
+        db.append(&mem, Point { t: 0.0, value: 1.0 });
+        db.append(&cpu, Point { t: 0.0, value: 0.5 });
+        assert_eq!(db.n_series(), 2);
+    }
+}

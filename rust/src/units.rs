@@ -1,0 +1,220 @@
+//! Typed quantities used across the crate.
+//!
+//! The paper reports memory in MB/GB and **wastage in GB·s** (Fig. 7a).
+//! Internally everything is f64 MiB / seconds; these newtypes keep unit
+//! conversions at API boundaries explicit and impossible to mix up.
+
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub, SubAssign};
+
+/// Mebibytes of memory (f64).
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd, Default)]
+pub struct MemMiB(pub f64);
+
+/// Seconds of wall-clock time (f64).
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd, Default)]
+pub struct Seconds(pub f64);
+
+/// Gigabyte-seconds of memory wastage — the paper's headline metric.
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd, Default)]
+pub struct GbSeconds(pub f64);
+
+pub const MIB_PER_GB: f64 = 1e9 / (1024.0 * 1024.0); // 1 GB in MiB ≈ 953.67
+
+impl MemMiB {
+    pub const ZERO: MemMiB = MemMiB(0.0);
+
+    pub fn from_gib(g: f64) -> Self {
+        MemMiB(g * 1024.0)
+    }
+    pub fn from_gb(g: f64) -> Self {
+        MemMiB(g * MIB_PER_GB)
+    }
+    pub fn as_gb(self) -> f64 {
+        self.0 / MIB_PER_GB
+    }
+    pub fn as_gib(self) -> f64 {
+        self.0 / 1024.0
+    }
+    pub fn max(self, other: Self) -> Self {
+        MemMiB(self.0.max(other.0))
+    }
+    pub fn min(self, other: Self) -> Self {
+        MemMiB(self.0.min(other.0))
+    }
+    pub fn clamp(self, lo: Self, hi: Self) -> Self {
+        MemMiB(self.0.clamp(lo.0, hi.0))
+    }
+    pub fn is_finite(self) -> bool {
+        self.0.is_finite()
+    }
+}
+
+impl Seconds {
+    pub const ZERO: Seconds = Seconds(0.0);
+
+    pub fn from_minutes(m: f64) -> Self {
+        Seconds(m * 60.0)
+    }
+    pub fn from_hours(h: f64) -> Self {
+        Seconds(h * 3600.0)
+    }
+    pub fn max(self, other: Self) -> Self {
+        Seconds(self.0.max(other.0))
+    }
+    pub fn min(self, other: Self) -> Self {
+        Seconds(self.0.min(other.0))
+    }
+}
+
+impl GbSeconds {
+    pub const ZERO: GbSeconds = GbSeconds(0.0);
+
+    /// Wastage accrued by holding `mem` for `dur`.
+    pub fn accrue(mem: MemMiB, dur: Seconds) -> Self {
+        GbSeconds(mem.as_gb() * dur.0)
+    }
+}
+
+// --- arithmetic -----------------------------------------------------------
+
+macro_rules! impl_linear_ops {
+    ($t:ident) => {
+        impl Add for $t {
+            type Output = $t;
+            fn add(self, rhs: $t) -> $t {
+                $t(self.0 + rhs.0)
+            }
+        }
+        impl Sub for $t {
+            type Output = $t;
+            fn sub(self, rhs: $t) -> $t {
+                $t(self.0 - rhs.0)
+            }
+        }
+        impl AddAssign for $t {
+            fn add_assign(&mut self, rhs: $t) {
+                self.0 += rhs.0;
+            }
+        }
+        impl SubAssign for $t {
+            fn sub_assign(&mut self, rhs: $t) {
+                self.0 -= rhs.0;
+            }
+        }
+        impl Mul<f64> for $t {
+            type Output = $t;
+            fn mul(self, rhs: f64) -> $t {
+                $t(self.0 * rhs)
+            }
+        }
+        impl Div<f64> for $t {
+            type Output = $t;
+            fn div(self, rhs: f64) -> $t {
+                $t(self.0 / rhs)
+            }
+        }
+        impl Neg for $t {
+            type Output = $t;
+            fn neg(self) -> $t {
+                $t(-self.0)
+            }
+        }
+        impl Sum for $t {
+            fn sum<I: Iterator<Item = $t>>(iter: I) -> $t {
+                $t(iter.map(|v| v.0).sum())
+            }
+        }
+    };
+}
+
+impl_linear_ops!(MemMiB);
+impl_linear_ops!(Seconds);
+impl_linear_ops!(GbSeconds);
+
+impl fmt::Display for MemMiB {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0 >= 1024.0 {
+            write!(f, "{:.2} GiB", self.as_gib())
+        } else {
+            write!(f, "{:.1} MiB", self.0)
+        }
+    }
+}
+
+impl fmt::Display for Seconds {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0 >= 3600.0 {
+            write!(f, "{:.2} h", self.0 / 3600.0)
+        } else if self.0 >= 60.0 {
+            write!(f, "{:.1} min", self.0 / 60.0)
+        } else {
+            write!(f, "{:.1} s", self.0)
+        }
+    }
+}
+
+impl fmt::Display for GbSeconds {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.2} GB·s", self.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gib_gb_conversions() {
+        let one_gib = MemMiB::from_gib(1.0);
+        assert_eq!(one_gib.0, 1024.0);
+        let one_gb = MemMiB::from_gb(1.0);
+        assert!((one_gb.0 - 953.674).abs() < 1e-2);
+        assert!((one_gb.as_gb() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wastage_accrual() {
+        // Holding 2 GB for 10 s wastes 20 GB·s.
+        let w = GbSeconds::accrue(MemMiB::from_gb(2.0), Seconds(10.0));
+        assert!((w.0 - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn arithmetic_ops() {
+        let a = MemMiB(100.0) + MemMiB(28.0) - MemMiB(28.0);
+        assert_eq!(a, MemMiB(100.0));
+        assert_eq!(MemMiB(100.0) * 2.0, MemMiB(200.0));
+        assert_eq!(Seconds(120.0) / 2.0, Seconds(60.0));
+        let total: GbSeconds = [GbSeconds(1.0), GbSeconds(2.5)].into_iter().sum();
+        assert_eq!(total, GbSeconds(3.5));
+    }
+
+    #[test]
+    fn clamping() {
+        assert_eq!(
+            MemMiB(5000.0).clamp(MemMiB(100.0), MemMiB(1024.0)),
+            MemMiB(1024.0)
+        );
+        assert_eq!(
+            MemMiB(5.0).clamp(MemMiB(100.0), MemMiB(1024.0)),
+            MemMiB(100.0)
+        );
+    }
+
+    #[test]
+    fn display_formats() {
+        assert_eq!(format!("{}", MemMiB(512.0)), "512.0 MiB");
+        assert_eq!(format!("{}", MemMiB(2048.0)), "2.00 GiB");
+        assert_eq!(format!("{}", Seconds(30.0)), "30.0 s");
+        assert_eq!(format!("{}", Seconds(7200.0)), "2.00 h");
+        assert_eq!(format!("{}", GbSeconds(1.234)), "1.23 GB·s");
+    }
+
+    #[test]
+    fn time_constructors() {
+        assert_eq!(Seconds::from_minutes(2.0).0, 120.0);
+        assert_eq!(Seconds::from_hours(1.5).0, 5400.0);
+    }
+}

@@ -1,0 +1,300 @@
+//! Task-type catalogs calibrated to the paper's §IV-B workload
+//! description.
+//!
+//! * **eager** (ancient-DNA reconstruction): 18 task types, average
+//!   runtimes 8 s – 4 h, peaks 19 MB – 14 GB, up to 136 executions of
+//!   the same task.
+//! * **sarek** (variant calling): 29 task types, average runtimes
+//!   2 s – 1 h, peaks 10 MB – 23 GB, up to 1512 executions of the same
+//!   task.
+//!
+//! Of the 47 types, exactly **33** have at least [`EVAL_MIN_RUNS`]
+//! executions and form the evaluated set (the paper evaluates "33
+//! different tasks in total"). Task names follow the real nf-core
+//! pipelines; scaling-law parameters are synthetic but keep each type
+//! inside the paper's reported ranges.
+
+use crate::units::{MemMiB, Seconds};
+use crate::workload::profiles::ProfileShape;
+use crate::workload::spec::{TaskTypeSpec, WorkflowSpec};
+
+/// Minimum executions for a type to enter the evaluated set.
+pub const EVAL_MIN_RUNS: usize = 20;
+
+#[allow(clippy::too_many_arguments)]
+fn t(
+    wf: &str,
+    name: &str,
+    profile: ProfileShape,
+    rt_base_s: f64,
+    rt_per_mib: f64,
+    peak_base_mib: f64,
+    peak_per_mib: f64,
+    input_mu: f64,
+    input_sigma: f64,
+    n_executions: usize,
+    default_gib: f64,
+) -> TaskTypeSpec {
+    TaskTypeSpec {
+        name: format!("{wf}/{name}"),
+        profile,
+        rt_base: Seconds(rt_base_s),
+        rt_per_mib,
+        peak_base: MemMiB(peak_base_mib),
+        peak_per_mib,
+        noise_sigma: 0.12,
+        // genomics tools routinely show data-dependent memory blowups;
+        // the tail is what separates quantile-style allocators (PPM)
+        // from mean+σ offsetting (LR) — see DESIGN.md §3
+        spike_prob: 0.05,
+        wiggle_sigma: 0.03,
+        input_mu,
+        input_sigma,
+        n_executions,
+        default_mem: MemMiB::from_gib(default_gib),
+    }
+}
+
+/// The 18-type eager-like workflow.
+pub fn eager_workflow() -> WorkflowSpec {
+    use ProfileShape as P;
+    let w = "eager";
+    let tasks = vec![
+        // 0: input QC — tiny, short, many runs
+        t(w, "fastqc", P::Plateau { rise_frac: 0.55 }, 8.0, 0.02, 180.0, 0.05, 6.2, 0.6, 136, 4.0),
+        // 1: the Fig. 4 / Fig. 8b task — smooth ramp, wastage falls with k
+        t(w, "adapter_removal", P::RampUp { alpha: 0.8 }, 60.0, 0.35, 250.0, 0.55, 7.0, 0.5, 136, 8.0),
+        // 2: long aligner — the 4 h-scale type, large memory; grows in
+        // stages as read buffers and index pages accumulate
+        t(w, "bwa_align", P::Staged { levels: &[0.3, 0.55, 0.8, 1.0] }, 900.0, 1.9, 6000.0, 0.4, 7.6, 0.4, 34, 48.0),
+        // 3
+        t(w, "samtools_filter", P::Bell { center: 0.45, width: 0.22 }, 30.0, 0.10, 300.0, 0.35, 7.2, 0.5, 68, 6.0),
+        // 4
+        t(w, "samtools_flagstat", P::RampUp { alpha: 1.0 }, 10.0, 0.015, 64.0, 0.02, 7.2, 0.5, 68, 2.0),
+        // 5: dedup — staged
+        t(w, "dedup", P::Staged { levels: &[0.25, 0.7, 1.0, 0.55] }, 120.0, 0.30, 800.0, 0.75, 7.3, 0.45, 68, 12.0),
+        // 6: markduplicates — late spike (sort/write phase)
+        t(w, "markduplicates", P::LateSpike { spike_start: 0.75, base: 0.3 }, 150.0, 0.40, 1200.0, 0.9, 7.3, 0.45, 34, 14.0),
+        // 7: damage profiler — bell
+        t(w, "damageprofiler", P::Bell { center: 0.55, width: 0.25 }, 90.0, 0.22, 600.0, 0.5, 7.0, 0.5, 34, 8.0),
+        // 8: the Fig. 8a task — sawtooth ⇒ zigzag wastage vs k
+        t(w, "qualimap", P::Sawtooth { cycles: 7.3, base: 0.35 }, 180.0, 0.5, 900.0, 0.85, 7.0, 0.45, 68, 12.0),
+        // 9
+        t(w, "preseq", P::RampUp { alpha: 1.4 }, 45.0, 0.12, 350.0, 0.30, 6.8, 0.5, 34, 4.0),
+        // 10: genotyper — the biggest-memory eager task (≈14 GiB peaks);
+        // ramps as the variant graph is built
+        t(w, "genotyping_ug", P::RampUp { alpha: 0.7 }, 600.0, 1.1, 6000.0, 2.2, 7.4, 0.4, 24, 56.0),
+        // 11
+        t(w, "mtnucratio", P::Bell { center: 0.5, width: 0.3 }, 12.0, 0.01, 96.0, 0.03, 7.0, 0.5, 34, 2.0),
+        // 12
+        t(w, "sexdeterrmine", P::Bell { center: 0.4, width: 0.3 }, 25.0, 0.05, 200.0, 0.12, 7.0, 0.5, 24, 3.0),
+        // ---- below the evaluation threshold (rare tasks) ----
+        t(w, "endorspy", P::Constant, 9.0, 0.008, 48.0, 0.02, 6.5, 0.5, 12, 1.0),
+        t(w, "bcftools_stats", P::RampUp { alpha: 1.0 }, 20.0, 0.03, 150.0, 0.08, 6.6, 0.5, 12, 2.0),
+        t(w, "multiqc", P::RampUp { alpha: 1.8 }, 60.0, 0.05, 700.0, 0.25, 6.8, 0.4, 2, 8.0),
+        t(w, "fastp", P::Plateau { rise_frac: 0.25 }, 40.0, 0.1, 400.0, 0.3, 6.9, 0.5, 8, 6.0),
+        t(w, "kraken2", P::RampDown { alpha: 0.6 }, 300.0, 0.6, 8000.0, 1.2, 7.2, 0.4, 6, 64.0),
+    ];
+    // A plausible eager DAG: QC → trimming → alignment → filtering →
+    // dedup/markdup → downstream stats & genotyping → reporting.
+    let edges = vec![
+        (0, 1),   // fastqc -> adapter_removal
+        (16, 1),  // fastp -> adapter_removal
+        (1, 2),   // adapter_removal -> bwa_align
+        (2, 3),   // bwa -> samtools_filter
+        (3, 4),   // -> flagstat
+        (3, 5),   // -> dedup
+        (3, 6),   // -> markduplicates
+        (5, 7),   // dedup -> damageprofiler
+        (5, 8),   // dedup -> qualimap
+        (6, 8),   // markduplicates -> qualimap
+        (5, 9),   // -> preseq
+        (6, 10),  // markduplicates -> genotyping
+        (10, 14), // genotyping -> bcftools_stats
+        (5, 11),  // -> mtnucratio
+        (5, 12),  // -> sexdeterrmine
+        (12, 13), // -> endorspy
+        (1, 17),  // adapter_removal -> kraken2
+        (4, 15),  // everything reports into multiqc
+        (8, 15),
+        (14, 15),
+    ];
+    WorkflowSpec { name: "eager".into(), tasks, edges }
+}
+
+/// The 29-type sarek-like workflow.
+pub fn sarek_workflow() -> WorkflowSpec {
+    use ProfileShape as P;
+    let w = "sarek";
+    let tasks = vec![
+        // ---- high-frequency scatter tasks (the 1512-execution scale) ----
+        // 0
+        t(w, "fastqc", P::Plateau { rise_frac: 0.55 }, 6.0, 0.015, 170.0, 0.04, 6.0, 0.6, 512, 4.0),
+        // 1
+        t(w, "fastp", P::Plateau { rise_frac: 0.45 }, 15.0, 0.06, 350.0, 0.25, 6.4, 0.5, 512, 6.0),
+        // 2: scattered base recalibration — the 1512-execution task
+        t(w, "gatk4_baserecalibrator", P::Bell { center: 0.5, width: 0.25 }, 25.0, 0.08, 900.0, 0.45, 6.0, 0.5, 1512, 8.0),
+        // 3: scattered BQSR apply
+        t(w, "gatk4_applybqsr", P::RampUp { alpha: 1.1 }, 20.0, 0.07, 700.0, 0.4, 6.0, 0.5, 1024, 8.0),
+        // 4: the big aligner — staged growth like eager's bwa
+        t(w, "bwamem2_mem", P::Staged { levels: &[0.35, 0.6, 0.85, 1.0] }, 400.0, 1.2, 12000.0, 0.4, 7.4, 0.4, 96, 96.0),
+        // 5: markduplicates — biggest sarek memory (≈23 GB peaks)
+        t(w, "gatk4_markduplicates", P::LateSpike { spike_start: 0.7, base: 0.35 }, 200.0, 0.5, 10000.0, 2.9, 7.4, 0.4, 96, 96.0),
+        // 6
+        t(w, "samtools_convert", P::RampUp { alpha: 0.9 }, 12.0, 0.03, 150.0, 0.06, 7.0, 0.5, 192, 2.0),
+        // 7
+        t(w, "samtools_stats", P::Bell { center: 0.5, width: 0.3 }, 18.0, 0.02, 130.0, 0.05, 7.0, 0.5, 192, 2.0),
+        // 8
+        t(w, "mosdepth", P::RampUp { alpha: 0.9 }, 40.0, 0.07, 420.0, 0.22, 7.0, 0.5, 96, 4.0),
+        // 9: variant callers
+        t(w, "strelka_germline", P::Bell { center: 0.55, width: 0.2 }, 300.0, 0.5, 2400.0, 0.9, 7.2, 0.4, 48, 24.0),
+        // 10
+        t(w, "manta_germline", P::Staged { levels: &[0.3, 0.8, 1.0, 0.6] }, 350.0, 0.55, 3200.0, 1.0, 7.2, 0.4, 48, 24.0),
+        // 11: deepvariant — make_examples ramps, call_variants plateaus
+        t(w, "deepvariant", P::RampUp { alpha: 0.55 }, 500.0, 0.9, 8000.0, 0.3, 7.2, 0.4, 32, 64.0),
+        // 12: scattered haplotypecaller
+        t(w, "haplotypecaller", P::Sawtooth { cycles: 5.7, base: 0.4 }, 60.0, 0.15, 1800.0, 0.7, 6.4, 0.5, 768, 16.0),
+        // 13
+        t(w, "genotypegvcfs", P::RampUp { alpha: 1.2 }, 90.0, 0.2, 1500.0, 0.6, 6.6, 0.5, 96, 12.0),
+        // 14
+        t(w, "mutect2", P::Sawtooth { cycles: 4.3, base: 0.45 }, 80.0, 0.18, 2000.0, 0.8, 6.4, 0.5, 384, 16.0),
+        // 15
+        t(w, "getpileupsummaries", P::RampUp { alpha: 1.0 }, 30.0, 0.05, 500.0, 0.2, 6.4, 0.5, 96, 4.0),
+        // 16
+        t(w, "calculatecontamination", P::RampUp { alpha: 1.2 }, 15.0, 0.01, 220.0, 0.06, 6.0, 0.5, 48, 2.0),
+        // 17
+        t(w, "filtermutectcalls", P::Bell { center: 0.5, width: 0.3 }, 25.0, 0.04, 600.0, 0.25, 6.2, 0.5, 48, 6.0),
+        // 18: annotation — front-loaded cache load
+        t(w, "vep", P::RampDown { alpha: 0.4 }, 120.0, 0.25, 4200.0, 0.15, 6.8, 0.4, 64, 32.0),
+        // 19
+        t(w, "snpeff", P::RampDown { alpha: 0.5 }, 90.0, 0.2, 3300.0, 0.15, 6.8, 0.4, 64, 24.0),
+        // ---- below the evaluation threshold ----
+        t(w, "bcftools_sort", P::LateSpike { spike_start: 0.8, base: 0.25 }, 20.0, 0.04, 300.0, 0.15, 6.4, 0.5, 16, 4.0),
+        t(w, "tabix_bgziptabix", P::Constant, 5.0, 0.005, 24.0, 0.01, 6.0, 0.5, 16, 0.5),
+        t(w, "vcftools", P::RampUp { alpha: 1.0 }, 25.0, 0.03, 180.0, 0.08, 6.2, 0.5, 12, 2.0),
+        t(w, "multiqc", P::RampUp { alpha: 1.7 }, 90.0, 0.06, 900.0, 0.3, 6.8, 0.4, 2, 8.0),
+        t(w, "msisensorpro", P::Bell { center: 0.5, width: 0.25 }, 60.0, 0.1, 700.0, 0.3, 6.6, 0.4, 12, 8.0),
+        t(w, "tiddit_sv", P::Staged { levels: &[0.4, 1.0, 0.7] }, 200.0, 0.3, 2600.0, 0.8, 7.0, 0.4, 12, 24.0),
+        t(w, "ascat", P::Plateau { rise_frac: 0.3 }, 300.0, 0.4, 3400.0, 1.0, 7.0, 0.4, 8, 32.0),
+        t(w, "freebayes", P::Sawtooth { cycles: 3.6, base: 0.5 }, 100.0, 0.2, 1600.0, 0.6, 6.6, 0.5, 16, 16.0),
+        t(w, "cnvkit_batch", P::Bell { center: 0.6, width: 0.2 }, 150.0, 0.25, 1900.0, 0.7, 6.8, 0.4, 12, 16.0),
+    ];
+    let edges = vec![
+        (0, 1),   // fastqc -> fastp
+        (1, 4),   // fastp -> bwamem2
+        (4, 5),   // -> markduplicates
+        (5, 2),   // -> baserecalibrator (scattered)
+        (2, 3),   // -> applybqsr
+        (3, 6),   // -> samtools_convert
+        (3, 7),   // -> samtools_stats
+        (3, 8),   // -> mosdepth
+        (3, 9),   // -> strelka
+        (3, 10),  // -> manta
+        (3, 11),  // -> deepvariant
+        (3, 12),  // -> haplotypecaller
+        (12, 13), // -> genotypegvcfs
+        (3, 14),  // -> mutect2
+        (3, 15),  // -> getpileupsummaries
+        (15, 16), // -> calculatecontamination
+        (14, 17), // mutect2 -> filtermutectcalls
+        (16, 17),
+        (13, 18), // genotypegvcfs -> vep
+        (13, 19), // -> snpeff
+        (17, 18),
+        (9, 20),  // strelka -> bcftools_sort
+        (20, 21), // -> tabix
+        (18, 22), // vep -> vcftools
+        (3, 24),  // -> msisensorpro
+        (3, 25),  // -> tiddit
+        (3, 26),  // -> ascat
+        (3, 27),  // -> freebayes
+        (3, 28),  // -> cnvkit
+        (7, 23),  // stats -> multiqc
+        (8, 23),
+        (22, 23),
+    ];
+    WorkflowSpec { name: "sarek".into(), tasks, edges }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalogs_validate() {
+        eager_workflow().validate().unwrap();
+        sarek_workflow().validate().unwrap();
+    }
+
+    #[test]
+    fn type_counts_match_paper() {
+        assert_eq!(eager_workflow().tasks.len(), 18);
+        assert_eq!(sarek_workflow().tasks.len(), 29);
+    }
+
+    #[test]
+    fn exactly_33_evaluated_types() {
+        let n_eval = |wf: &WorkflowSpec| {
+            wf.tasks.iter().filter(|t| t.n_executions >= EVAL_MIN_RUNS).count()
+        };
+        let eager = n_eval(&eager_workflow());
+        let sarek = n_eval(&sarek_workflow());
+        assert_eq!(eager + sarek, 33, "eager={eager} sarek={sarek}");
+    }
+
+    #[test]
+    fn execution_count_bounds_match_paper() {
+        let eager_max = eager_workflow().tasks.iter().map(|t| t.n_executions).max().unwrap();
+        let sarek_max = sarek_workflow().tasks.iter().map(|t| t.n_executions).max().unwrap();
+        assert_eq!(eager_max, 136);
+        assert_eq!(sarek_max, 1512);
+    }
+
+    #[test]
+    fn nominal_ranges_match_paper() {
+        // eager: runtimes up to the hours scale, peaks up to ~14 GiB
+        let eager = eager_workflow();
+        let max_rt = eager.tasks.iter().map(|t| t.nominal_runtime().0).fold(0.0, f64::max);
+        let max_peak = eager.tasks.iter().map(|t| t.nominal_peak().0).fold(0.0, f64::max);
+        assert!(max_rt > 3600.0, "eager max nominal runtime {max_rt}");
+        assert!(max_peak > 8000.0 && max_peak < 20000.0, "eager max peak {max_peak} MiB");
+
+        // sarek: peaks up to ~23 GB, short-to-1 h runtimes
+        let sarek = sarek_workflow();
+        let max_peak = sarek.tasks.iter().map(|t| t.nominal_peak().0).fold(0.0, f64::max);
+        assert!(max_peak > 12000.0 && max_peak < 26000.0, "sarek max peak {max_peak} MiB");
+        let min_rt = sarek.tasks.iter().map(|t| t.nominal_runtime().0).fold(f64::MAX, f64::min);
+        assert!(min_rt < 30.0, "sarek min nominal runtime {min_rt}");
+    }
+
+    #[test]
+    fn dags_are_acyclic() {
+        // levels() panics on cycles
+        assert!(eager_workflow().levels().len() > 2);
+        assert!(sarek_workflow().levels().len() > 2);
+    }
+
+    #[test]
+    fn fig8_tasks_present_with_right_profiles() {
+        let eager = eager_workflow();
+        let q = &eager.tasks[eager.task_index("eager/qualimap").unwrap()];
+        assert!(matches!(q.profile, ProfileShape::Sawtooth { .. }));
+        let a = &eager.tasks[eager.task_index("eager/adapter_removal").unwrap()];
+        assert!(matches!(a.profile, ProfileShape::RampUp { .. }));
+    }
+
+    #[test]
+    fn defaults_overprovision_generously() {
+        for wf in [eager_workflow(), sarek_workflow()] {
+            for t in &wf.tasks {
+                assert!(
+                    t.default_mem.0 >= 2.0 * t.nominal_peak().0,
+                    "{}: default {} < 2x nominal peak {}",
+                    t.name,
+                    t.default_mem,
+                    t.nominal_peak()
+                );
+            }
+        }
+    }
+}

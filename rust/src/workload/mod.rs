@@ -1,0 +1,33 @@
+//! Synthetic nf-core-like workload generation — the substitute for the
+//! paper's eager/sarek trace recordings (DESIGN.md §3).
+//!
+//! The paper gathered traces by running two real bioinformatics
+//! workflows for days on an EPYC 7282 box. We cannot re-run nf-core
+//! here, so this module generates traces with the same *statistical
+//! structure* the k-Segments method exploits:
+//!
+//! * per-task-type **temporal memory profiles** (ramp, plateau, bell,
+//!   multi-phase, late-spike, sawtooth, ...) — usage varies over time
+//!   within a task, which is the entire optimization potential of
+//!   Fig. 1;
+//! * **input-size-linear** runtime and peak scaling with
+//!   heteroscedastic noise — the regression signal every learned
+//!   method (LR-Witt, k-Segments) assumes;
+//! * per-type execution counts, runtime ranges and peak ranges
+//!   calibrated to the paper's §IV-B description (eager: 18 types,
+//!   8 s–4 h, 19 MB–14 GB, ≤136 executions; sarek: 29 types, 2 s–1 h,
+//!   10 MB–23 GB, ≤1512 executions; 33 evaluated types in total);
+//! * developer **default allocations** that overprovision generously
+//!   and never fail (the paper's sanity baseline shows zero retries).
+
+mod catalog;
+mod generate;
+mod profiles;
+mod spec;
+
+pub use catalog::{eager_workflow, sarek_workflow, EVAL_MIN_RUNS};
+pub use generate::{
+    generate_paper_traces, generate_workflow_trace, ground_truth_curve, MONITOR_INTERVAL_S,
+};
+pub use profiles::ProfileShape;
+pub use spec::{TaskTypeSpec, WorkflowSpec};

@@ -1,0 +1,195 @@
+//! Temporal memory-usage profiles for synthetic task types.
+//!
+//! A profile maps normalized task phase `p ∈ [0, 1]` to relative memory
+//! usage `∈ (0, 1]` (1 = the run's peak). Shapes are chosen to span the
+//! behaviours seen in the paper's published traces: the adapter-removal
+//! ramp of Fig. 4, plateau-heavy aligners, bell-shaped variant callers,
+//! staged multi-tool wrappers, and periodic (sawtooth) scan/merge tasks
+//! whose wastage-vs-k curve zigzags (Fig. 8a).
+
+/// Relative usage as a function of normalized phase.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ProfileShape {
+    /// Near-constant usage from the start (e.g. fixed-buffer tools).
+    Constant,
+    /// Smooth monotone ramp `p^alpha` to the peak at the end — the
+    /// adapter-removal shape of Fig. 4.
+    RampUp { alpha: f64 },
+    /// Fast rise then flat plateau at the peak.
+    Plateau { rise_frac: f64 },
+    /// Bell: grows to a mid-run maximum, then releases (Fig. 1's shape).
+    Bell { center: f64, width: f64 },
+    /// Discrete phases with increasing levels (multi-tool wrappers).
+    Staged { levels: &'static [f64] },
+    /// Low usage for most of the run, spike near the end (merge/sort
+    /// finalization) — the adversarial case for runtime underprediction.
+    LateSpike { spike_start: f64, base: f64 },
+    /// Periodic sawtooth riding on a base level (chunked scans). The
+    /// period intentionally mis-aligns with segment boundaries for most
+    /// k, producing the zigzag wastage-vs-k of Fig. 8a.
+    Sawtooth { cycles: f64, base: f64 },
+    /// Ramp down from an early peak (front-loaded index loads).
+    RampDown { alpha: f64 },
+}
+
+impl ProfileShape {
+    /// Relative usage at phase `p ∈ [0,1]`; clamped outside. Guaranteed
+    /// to return a value in `(0, 1]` and to reach 1.0 at some phase.
+    pub fn value(&self, p: f64) -> f64 {
+        let p = p.clamp(0.0, 1.0);
+        let v = match *self {
+            ProfileShape::Constant => 1.0,
+            ProfileShape::RampUp { alpha } => p.powf(alpha).max(0.02),
+            ProfileShape::Plateau { rise_frac } => {
+                if p < rise_frac {
+                    (p / rise_frac).max(0.02)
+                } else {
+                    1.0
+                }
+            }
+            ProfileShape::Bell { center, width } => {
+                let z = (p - center) / width;
+                (-0.5 * z * z).exp().max(0.02)
+            }
+            ProfileShape::Staged { levels } => {
+                debug_assert!(!levels.is_empty());
+                let idx = ((p * levels.len() as f64) as usize).min(levels.len() - 1);
+                levels[idx].max(0.02)
+            }
+            ProfileShape::LateSpike { spike_start, base } => {
+                if p < spike_start {
+                    base
+                } else {
+                    // linear blow-up from base to 1 over the spike window
+                    let q = (p - spike_start) / (1.0 - spike_start).max(1e-9);
+                    base + (1.0 - base) * q.min(1.0)
+                }
+            }
+            ProfileShape::Sawtooth { cycles, base } => {
+                let saw = (p * cycles).fract();
+                base + (1.0 - base) * saw
+            }
+            ProfileShape::RampDown { alpha } => (1.0 - p).powf(alpha).max(0.02),
+        };
+        v.clamp(0.001, 1.0)
+    }
+
+    /// Phase at which the profile attains (approximately) its maximum —
+    /// used in tests and Fig. 1 rendering.
+    pub fn argmax(&self) -> f64 {
+        match *self {
+            ProfileShape::Constant => 0.0,
+            ProfileShape::RampUp { .. } => 1.0,
+            ProfileShape::Plateau { rise_frac } => rise_frac,
+            ProfileShape::Bell { center, .. } => center,
+            ProfileShape::Staged { levels } => {
+                let (idx, _) = levels
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap();
+                (idx as f64 + 0.5) / levels.len() as f64
+            }
+            ProfileShape::LateSpike { .. } => 1.0,
+            // just before the end of the last complete cycle the
+            // sawtooth's fract() approaches 1
+            ProfileShape::Sawtooth { cycles, .. } => (cycles.floor() / cycles - 1e-9).min(1.0),
+            ProfileShape::RampDown { .. } => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_shapes() -> Vec<ProfileShape> {
+        vec![
+            ProfileShape::Constant,
+            ProfileShape::RampUp { alpha: 0.5 },
+            ProfileShape::RampUp { alpha: 2.0 },
+            ProfileShape::Plateau { rise_frac: 0.2 },
+            ProfileShape::Bell { center: 0.5, width: 0.2 },
+            ProfileShape::Staged { levels: &[0.2, 0.6, 1.0, 0.4] },
+            ProfileShape::LateSpike { spike_start: 0.8, base: 0.15 },
+            ProfileShape::Sawtooth { cycles: 5.3, base: 0.3 },
+            ProfileShape::RampDown { alpha: 1.0 },
+        ]
+    }
+
+    #[test]
+    fn values_in_unit_range() {
+        for shape in all_shapes() {
+            for i in 0..=1000 {
+                let p = i as f64 / 1000.0;
+                let v = shape.value(p);
+                assert!((0.0..=1.0).contains(&v), "{shape:?} at {p}: {v}");
+                assert!(v > 0.0, "{shape:?} at {p} not positive");
+            }
+        }
+    }
+
+    #[test]
+    fn reaches_peak_near_one() {
+        for shape in all_shapes() {
+            let peak = (0..=2000)
+                .map(|i| shape.value(i as f64 / 2000.0))
+                .fold(f64::MIN, f64::max);
+            assert!(peak > 0.95, "{shape:?}: peak only {peak}");
+        }
+    }
+
+    #[test]
+    fn clamps_out_of_range_phase() {
+        let s = ProfileShape::RampUp { alpha: 1.0 };
+        assert_eq!(s.value(-1.0), s.value(0.0));
+        assert_eq!(s.value(2.0), s.value(1.0));
+    }
+
+    #[test]
+    fn ramp_is_monotone() {
+        let s = ProfileShape::RampUp { alpha: 1.3 };
+        let mut prev = 0.0;
+        for i in 0..=100 {
+            let v = s.value(i as f64 / 100.0);
+            assert!(v >= prev - 1e-12);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn bell_peaks_at_center() {
+        let s = ProfileShape::Bell { center: 0.4, width: 0.15 };
+        assert!(s.value(0.4) > s.value(0.1));
+        assert!(s.value(0.4) > s.value(0.9));
+        assert!((s.value(0.4) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn late_spike_stays_low_then_rises() {
+        let s = ProfileShape::LateSpike { spike_start: 0.8, base: 0.1 };
+        assert!((s.value(0.5) - 0.1).abs() < 1e-12);
+        assert!(s.value(0.9) > 0.5);
+        assert!((s.value(1.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sawtooth_oscillates() {
+        let s = ProfileShape::Sawtooth { cycles: 4.0, base: 0.2 };
+        // within one cycle it rises then resets
+        let a = s.value(0.1);
+        let b = s.value(0.24);
+        let c = s.value(0.26); // just past the 1/4 reset
+        assert!(b > a);
+        assert!(c < b);
+    }
+
+    #[test]
+    fn argmax_consistent_with_values() {
+        for shape in all_shapes() {
+            let am = shape.argmax();
+            let v = shape.value(am);
+            assert!(v > 0.9, "{shape:?}: value at argmax {am} = {v}");
+        }
+    }
+}

@@ -1,0 +1,185 @@
+//! Integration: the AOT JAX + Pallas fit modules executed through the
+//! PJRT runtime, differential-tested against the native f64 mirror.
+//!
+//! Requires `make artifacts`; every test is skipped (with a notice)
+//! when the artifacts directory is absent so `cargo test` stays green
+//! on a fresh checkout.
+
+use std::path::Path;
+
+use ksegments::ml::fitter::{FitInput, KsegFitter, NativeFitter};
+use ksegments::predictors::ksegments::{KSegmentsConfig, KSegmentsPredictor, RetryStrategy};
+use ksegments::predictors::MemoryPredictor;
+use ksegments::rng::Rng;
+use ksegments::runtime::{ArtifactRegistry, XlaFitter};
+use ksegments::sim::{simulate_trace, SimConfig};
+use ksegments::units::MemMiB;
+use ksegments::workload::{eager_workflow, generate_workflow_trace};
+
+fn artifacts_available() -> bool {
+    let ok = Path::new("artifacts/manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
+    }
+    ok
+}
+
+fn synth_input(n: usize, t: usize, seed: u64) -> FitInput {
+    let mut rng = Rng::new(seed);
+    let mut input = FitInput::default();
+    for _ in 0..n {
+        let x = rng.uniform(50.0, 8000.0);
+        let peak = 20.0 + 0.6 * x * rng.uniform(0.8, 1.25);
+        input.x.push(x);
+        input.runtime.push(10.0 + 0.04 * x * rng.uniform(0.9, 1.1));
+        input
+            .series
+            .push((0..t).map(|j| peak * ((j + 1) as f64 / t as f64).powf(0.7)).collect());
+    }
+    input
+}
+
+#[test]
+fn manifest_matches_python_constants() {
+    if !artifacts_available() {
+        return;
+    }
+    let reg = ArtifactRegistry::load_default().unwrap();
+    // python/compile/model.py: N_HIST = 64, T_MAX = 256, K_RANGE = 1..=16
+    assert_eq!(reg.manifest().n_hist, 64);
+    assert_eq!(reg.manifest().t_max, 256);
+    assert_eq!(reg.available_ks(), (1..=16).collect::<Vec<_>>());
+}
+
+#[test]
+fn xla_fit_matches_native_across_k() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut xla = XlaFitter::load_default().unwrap();
+    let mut native = NativeFitter;
+    let t_max = xla.manifest().t_max;
+    for (seed, k) in [(1u64, 1usize), (2, 2), (3, 4), (4, 7), (5, 12), (6, 16)] {
+        let input = synth_input(32, t_max, seed);
+        let a = xla.fit(&input, k);
+        let b = native.fit(&input, k);
+        let rel = |x: f64, y: f64| (x - y).abs() / y.abs().max(1.0);
+        assert!(rel(a.rt.a, b.rt.a) < 1e-3, "k={k}: rt.a {} vs {}", a.rt.a, b.rt.a);
+        assert!(rel(a.rt.b, b.rt.b) < 1e-3, "k={k}: rt.b");
+        assert!(rel(a.rt_offset, b.rt_offset) < 1e-2, "k={k}: rt_offset");
+        for s in 0..k {
+            assert!(rel(a.seg[s].a, b.seg[s].a) < 1e-3, "k={k} s={s}: seg.a");
+            assert!(rel(a.seg[s].b, b.seg[s].b) < 1e-3, "k={k} s={s}: seg.b");
+            assert!(rel(a.seg_off[s], b.seg_off[s]) < 1e-2, "k={k} s={s}: seg_off");
+        }
+    }
+    assert_eq!(xla.native_fits, 0, "all fits must run on the XLA path");
+}
+
+#[test]
+fn xla_fit_handles_short_history_padding() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut xla = XlaFitter::load_default().unwrap();
+    let mut native = NativeFitter;
+    let t_max = xla.manifest().t_max;
+    for n in [1usize, 2, 3, 63, 64] {
+        let input = synth_input(n, t_max, 100 + n as u64);
+        let a = xla.fit(&input, 4);
+        let b = native.fit(&input, 4);
+        let rel = |x: f64, y: f64| (x - y).abs() / y.abs().max(1.0);
+        assert!(rel(a.seg[3].a, b.seg[3].a) < 2e-3, "n={n}: {} vs {}", a.seg[3].a, b.seg[3].a);
+        assert!(rel(a.seg[3].b, b.seg[3].b) < 2e-3, "n={n}");
+    }
+}
+
+#[test]
+fn xla_fit_windows_history_beyond_n_hist() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut xla = XlaFitter::load_default().unwrap();
+    let t_max = xla.manifest().t_max;
+    let n_hist = xla.manifest().n_hist;
+    // 100 rows: the artifact keeps the most recent 64; compare against
+    // native fit on exactly those rows
+    let input = synth_input(100, t_max, 9);
+    let a = xla.fit(&input, 4);
+    let tail = FitInput {
+        x: input.x[100 - n_hist..].to_vec(),
+        runtime: input.runtime[100 - n_hist..].to_vec(),
+        series: input.series[100 - n_hist..].to_vec(),
+    };
+    let b = NativeFitter.fit(&tail, 4);
+    let rel = |x: f64, y: f64| (x - y).abs() / y.abs().max(1.0);
+    assert!(rel(a.seg[3].a, b.seg[3].a) < 2e-3);
+    assert!(rel(a.rt.b, b.rt.b) < 2e-3);
+}
+
+#[test]
+fn unsupported_shapes_fall_back_to_native() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut xla = XlaFitter::load_default().unwrap();
+    // wrong series length -> native fallback, still correct
+    let input = synth_input(8, 64, 11);
+    let a = xla.fit(&input, 4);
+    let b = NativeFitter.fit(&input, 4);
+    assert_eq!(a, b);
+    assert_eq!(xla.native_fits, 1);
+    assert_eq!(xla.xla_fits, 0);
+}
+
+#[test]
+fn end_to_end_sim_with_xla_backed_predictor_matches_native_shape() {
+    if !artifacts_available() {
+        return;
+    }
+    // The full evaluation protocol with the production (XLA) fitter:
+    // results must be within a whisker of the native-fit run (f32 vs
+    // f64 only).
+    let trace = generate_workflow_trace(&eager_workflow(), 42)
+        .filtered(|ty| ty == "eager/adapter_removal" || ty == "eager/qualimap");
+    let cfg = SimConfig::with_training_frac(0.5);
+
+    let xla_fitter: Box<dyn KsegFitter> = Box::new(XlaFitter::load_default().unwrap());
+    let mut with_xla = KSegmentsPredictor::with_fitter(
+        xla_fitter,
+        KSegmentsConfig::default(),
+        RetryStrategy::Selective,
+    );
+    let mut with_native = KSegmentsPredictor::native(4, RetryStrategy::Selective);
+
+    let rep_xla = simulate_trace(&trace, &mut with_xla, &cfg);
+    let rep_native = simulate_trace(&trace, &mut with_native, &cfg);
+    let (a, b) = (rep_xla.avg_wastage_gbs(), rep_native.avg_wastage_gbs());
+    assert!(
+        (a - b).abs() / b < 0.02,
+        "xla-backed wastage {a} deviates from native {b}"
+    );
+}
+
+#[test]
+fn predictor_with_xla_fitter_serves_dynamic_allocations() {
+    if !artifacts_available() {
+        return;
+    }
+    let fitter: Box<dyn KsegFitter> = Box::new(XlaFitter::load_default().unwrap());
+    let mut p = KSegmentsPredictor::with_fitter(
+        fitter,
+        KSegmentsConfig::default(),
+        RetryStrategy::Partial,
+    );
+    p.prime("t", MemMiB(4096.0));
+    let trace = generate_workflow_trace(&eager_workflow(), 1);
+    for run in &trace.runs_of("eager/adapter_removal")[..16] {
+        let mut r = run.clone();
+        r.task_type = "t".into();
+        p.observe(&r);
+    }
+    let alloc = p.predict("t", 1000.0);
+    assert!(alloc.is_dynamic());
+    assert!(alloc.max_value() >= 100.0);
+}

@@ -1,0 +1,206 @@
+//! Integration: the full evaluation pipeline over both paper
+//! workflows — asserts the *shape* results the reproduction must hold
+//! (DESIGN.md §5 "shape expectations") plus cross-module behaviours:
+//! trace I/O round-trips through the simulator, the engine agrees with
+//! the protocol, determinism end to end.
+
+use ksegments::bench_harness::{evaluate_method, paper_traces};
+use ksegments::cluster::Cluster;
+use ksegments::engine::WorkflowEngine;
+use ksegments::metrics::count_wins;
+use ksegments::predictors::default_config::DefaultConfigPredictor;
+use ksegments::predictors::ksegments::{KSegmentsPredictor, RetryStrategy};
+use ksegments::predictors::lr_witt::LrWittPredictor;
+use ksegments::predictors::ppm::PpmPredictor;
+use ksegments::predictors::MemoryPredictor;
+use ksegments::sim::{simulate_trace, SimConfig};
+use ksegments::trace::{read_trace_jsonl, write_trace_jsonl};
+use ksegments::workload::{
+    eager_workflow, generate_workflow_trace, sarek_workflow, EVAL_MIN_RUNS,
+};
+
+#[test]
+fn thirty_three_tasks_are_evaluated() {
+    let traces = paper_traces(42);
+    let n: usize = traces
+        .iter()
+        .map(|t| t.evaluated_types(EVAL_MIN_RUNS).len())
+        .sum();
+    assert_eq!(n, 33, "the paper evaluates 33 tasks");
+}
+
+/// The central ordering claim of Fig. 7a at 50 % training.
+#[test]
+fn method_ordering_matches_paper() {
+    let traces = paper_traces(42);
+    let frac = 0.5;
+    let w = |mk: &dyn Fn() -> Box<dyn MemoryPredictor>| {
+        evaluate_method(mk, &traces, frac).avg_wastage_gbs()
+    };
+    let default = w(&|| Box::new(DefaultConfigPredictor::new()));
+    let ppm = w(&|| Box::new(PpmPredictor::original()));
+    let ppm_improved = w(&|| Box::new(PpmPredictor::improved()));
+    let lr = w(&|| Box::new(LrWittPredictor::paper_baseline()));
+    let sel = w(&|| Box::new(KSegmentsPredictor::native(4, RetryStrategy::Selective)));
+    let par = w(&|| Box::new(KSegmentsPredictor::native(4, RetryStrategy::Partial)));
+
+    // default is the worst by a wide margin (paper: 2.5-3x the best)
+    assert!(default > 2.0 * ppm_improved, "default {default} vs ppm improved {ppm_improved}");
+    assert!(default > 5.0 * sel, "default {default} vs k-seg {sel}");
+    // original PPM's node-max failure policy is catastrophic vs Improved
+    assert!(ppm > 1.5 * ppm_improved, "ppm {ppm} vs improved {ppm_improved}");
+    // k-Segments (both strategies) beats every baseline
+    for (name, base) in [("ppm", ppm), ("ppm_improved", ppm_improved), ("lr", lr)] {
+        assert!(sel < base, "selective {sel} !< {name} {base}");
+        assert!(par < base, "partial {par} !< {name} {base}");
+    }
+    // and by a meaningful factor vs the best baseline (paper: 29.48%)
+    let best_base = ppm_improved.min(lr).min(ppm);
+    assert!(
+        sel < 0.9 * best_base,
+        "selective {sel} should be >=10% below best baseline {best_base}"
+    );
+}
+
+/// Fig. 7a trend: k-Segments improves with more training data.
+#[test]
+fn ksegments_improves_with_training_data() {
+    let traces = paper_traces(42);
+    let mk = || -> Box<dyn MemoryPredictor> {
+        Box::new(KSegmentsPredictor::native(4, RetryStrategy::Selective))
+    };
+    let w25 = evaluate_method(&mk, &traces, 0.25).avg_wastage_gbs();
+    let w75 = evaluate_method(&mk, &traces, 0.75).avg_wastage_gbs();
+    assert!(w75 < w25, "wastage should fall with training data: 25%={w25} 75%={w75}");
+}
+
+/// Fig. 7b: k-Segments collects the most lowest-wastage wins.
+#[test]
+fn ksegments_wins_most_tasks() {
+    let traces = paper_traces(42);
+    let reports = vec![
+        evaluate_method(&|| Box::new(PpmPredictor::improved()) as _, &traces, 0.5),
+        evaluate_method(&|| Box::new(LrWittPredictor::paper_baseline()) as _, &traces, 0.5),
+        evaluate_method(
+            &|| Box::new(KSegmentsPredictor::native(4, RetryStrategy::Selective)) as _,
+            &traces,
+            0.5,
+        ),
+    ];
+    let wins = count_wins(&reports);
+    let kseg_wins = wins.iter().find(|w| w.0.starts_with("k-Segments")).unwrap().1;
+    let max_other = wins
+        .iter()
+        .filter(|w| !w.0.starts_with("k-Segments"))
+        .map(|w| w.1)
+        .max()
+        .unwrap();
+    assert!(kseg_wins > max_other, "k-Segments wins {kseg_wins} vs best other {max_other}");
+}
+
+/// Fig. 7c trends: defaults never retry; k-Segments retries shrink
+/// with training data and end below LR's.
+#[test]
+fn retry_trends_match_paper() {
+    let traces = paper_traces(42);
+    let retries = |mk: &dyn Fn() -> Box<dyn MemoryPredictor>, frac: f64| {
+        evaluate_method(mk, &traces, frac).avg_retries()
+    };
+    let default_r = retries(&|| Box::new(DefaultConfigPredictor::new()), 0.5);
+    assert_eq!(default_r, 0.0, "defaults are sized to never fail");
+
+    let mk_kseg = || -> Box<dyn MemoryPredictor> {
+        Box::new(KSegmentsPredictor::native(4, RetryStrategy::Selective))
+    };
+    let k25 = retries(&mk_kseg, 0.25);
+    let k75 = retries(&mk_kseg, 0.75);
+    assert!(k75 < k25, "k-seg retries should fall with data: {k25} -> {k75}");
+
+    let lr75 = retries(&|| Box::new(LrWittPredictor::paper_baseline()), 0.75);
+    assert!(k75 < lr75, "at 75% k-seg ({k75}) must retry less than LR ({lr75})");
+}
+
+/// Selective vs Partial (paper: Selective lowest, Partial close).
+#[test]
+fn selective_edges_out_partial_overall() {
+    let traces = paper_traces(42);
+    let sel = evaluate_method(
+        &|| Box::new(KSegmentsPredictor::native(4, RetryStrategy::Selective)) as _,
+        &traces,
+        0.75,
+    )
+    .avg_wastage_gbs();
+    let par = evaluate_method(
+        &|| Box::new(KSegmentsPredictor::native(4, RetryStrategy::Partial)) as _,
+        &traces,
+        0.75,
+    )
+    .avg_wastage_gbs();
+    // close together, selective no worse than a couple % ahead
+    assert!((sel - par).abs() / par < 0.05, "sel {sel} vs par {par} diverged");
+    assert!(sel <= par * 1.01, "selective should be at least on par");
+}
+
+/// Trace I/O round-trips through the full simulator identically.
+#[test]
+fn persisted_trace_reproduces_simulation() {
+    let trace = generate_workflow_trace(&eager_workflow(), 7);
+    let dir = std::env::temp_dir().join("ksegments_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("eager.jsonl");
+    write_trace_jsonl(&trace, &path).unwrap();
+    let reloaded = read_trace_jsonl(&path).unwrap();
+
+    let cfg = SimConfig::with_training_frac(0.5);
+    let mut a = KSegmentsPredictor::native(4, RetryStrategy::Selective);
+    let mut b = KSegmentsPredictor::native(4, RetryStrategy::Selective);
+    let rep_a = simulate_trace(&trace, &mut a, &cfg);
+    let rep_b = simulate_trace(&reloaded, &mut b, &cfg);
+    assert_eq!(rep_a.avg_wastage_gbs(), rep_b.avg_wastage_gbs());
+    assert_eq!(rep_a.total_retries(), rep_b.total_retries());
+}
+
+/// The protocol is bit-deterministic for a given seed.
+#[test]
+fn simulation_is_deterministic() {
+    for _ in 0..2 {
+        let traces = paper_traces(13);
+        let rep = evaluate_method(
+            &|| Box::new(KSegmentsPredictor::native(4, RetryStrategy::Selective)) as _,
+            &traces,
+            0.5,
+        );
+        // spot-check a stable scalar
+        let w = rep.avg_wastage_gbs();
+        let again = evaluate_method(
+            &|| Box::new(KSegmentsPredictor::native(4, RetryStrategy::Selective)) as _,
+            &paper_traces(13),
+            0.5,
+        )
+        .avg_wastage_gbs();
+        assert_eq!(w, again);
+    }
+}
+
+/// The engine (cluster + monitoring loop) and the protocol agree on
+/// which method is better.
+#[test]
+fn engine_agrees_with_protocol_on_ordering() {
+    let trace = generate_workflow_trace(&sarek_workflow(), 3)
+        .filtered(|ty| ty == "sarek/haplotypecaller" || ty == "sarek/mosdepth");
+    let mut e_default =
+        WorkflowEngine::new(DefaultConfigPredictor::new(), Cluster::paper_testbed());
+    let mut e_kseg = WorkflowEngine::new(
+        KSegmentsPredictor::native(4, RetryStrategy::Selective),
+        Cluster::paper_testbed(),
+    );
+    let r_default = e_default.run_trace(&trace);
+    let r_kseg = e_kseg.run_trace(&trace);
+    assert_eq!(r_default.completed, r_kseg.completed);
+    assert!(
+        r_kseg.wastage.0 < r_default.wastage.0,
+        "k-seg {} vs default {}",
+        r_kseg.wastage.0,
+        r_default.wastage.0
+    );
+}

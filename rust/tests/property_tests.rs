@@ -1,0 +1,243 @@
+//! Randomized property tests over the core invariants (the offline
+//! crate cache has no proptest; cases are driven by the crate's own
+//! deterministic RNG — failures print the seed, so every case is
+//! replayable).
+
+use ksegments::ml::fitter::{FitInput, KsegFitter, NativeFitter};
+use ksegments::ml::segmentation::{seg_peaks, segment_bounds};
+use ksegments::ml::step_fn::StepFunction;
+use ksegments::predictors::ksegments::{KSegmentsPredictor, RetryStrategy};
+use ksegments::predictors::{Allocation, FailureInfo, MemoryPredictor};
+use ksegments::rng::Rng;
+use ksegments::sim::{simulate_attempt, AttemptOutcome};
+use ksegments::trace::{TaskRun, UsageSeries};
+use ksegments::units::{MemMiB, Seconds};
+
+const CASES: u64 = 300;
+
+fn random_series(rng: &mut Rng) -> UsageSeries {
+    let n = 1 + rng.below(400) as usize;
+    let peak = rng.uniform(1.0, 30_000.0);
+    let samples: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, peak)).collect();
+    UsageSeries::new(2.0, samples)
+}
+
+fn random_step_fn(rng: &mut Rng) -> StepFunction {
+    let k = 1 + rng.below(16) as usize;
+    let rt = rng.uniform(4.0, 4000.0);
+    let values: Vec<f64> = (0..k).map(|_| rng.uniform(-50.0, 20_000.0)).collect();
+    StepFunction::monotone_clamped(Seconds(rt), values, MemMiB(100.0), MemMiB(131_072.0))
+}
+
+/// segment_bounds: covers [0, t) exactly, contiguously, non-empty.
+#[test]
+fn prop_segment_bounds_partition() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let t = 1 + rng.below(5000) as usize;
+        let k = 1 + rng.below(t.min(64) as u64) as usize;
+        let b = segment_bounds(t, k);
+        assert_eq!(b.len(), k, "seed {seed}");
+        assert_eq!(b[0].0, 0, "seed {seed}");
+        assert_eq!(b[k - 1].1, t, "seed {seed}");
+        for w in b.windows(2) {
+            assert_eq!(w[0].1, w[1].0, "seed {seed}");
+        }
+        assert!(b.iter().all(|(lo, hi)| hi > lo), "seed {seed}");
+    }
+}
+
+/// seg_peaks: max of segment peaks == global peak; every segment peak
+/// is attained within its bounds.
+#[test]
+fn prop_seg_peaks_consistent() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed + 10_000);
+        let series = random_series(&mut rng);
+        let t = series.len();
+        let k = 1 + rng.below(t.min(16) as u64) as usize;
+        let peaks = seg_peaks(series.samples(), k);
+        let global = series.peak();
+        let max_peak = peaks.iter().copied().fold(f64::MIN, f64::max);
+        assert_eq!(max_peak, global, "seed {seed}");
+        for ((lo, hi), p) in segment_bounds(t, k).into_iter().zip(&peaks) {
+            assert!(series.samples()[lo..hi].contains(p), "seed {seed}");
+        }
+    }
+}
+
+/// Peak-preserving resample never loses the global peak and never
+/// invents values above it.
+#[test]
+fn prop_resample_preserves_peak() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed + 20_000);
+        let series = random_series(&mut rng);
+        let t_max = 1 + rng.below(512) as usize;
+        let r = series.resample_peaks(t_max);
+        assert_eq!(r.len(), t_max, "seed {seed}");
+        let rmax = r.iter().copied().fold(f64::MIN, f64::max);
+        assert_eq!(rmax, series.peak(), "seed {seed}");
+        let smin = series.samples().iter().copied().fold(f64::MAX, f64::min);
+        assert!(r.iter().all(|&v| v >= smin && v <= series.peak()), "seed {seed}");
+    }
+}
+
+/// monotone_clamped: monotone, floored, capped, k preserved; retry
+/// scaling keeps all three invariants and never lowers any segment.
+#[test]
+fn prop_step_fn_invariants() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed + 30_000);
+        let f = random_step_fn(&mut rng);
+        assert!(f.is_monotone(), "seed {seed}");
+        assert!(f.values().iter().all(|&v| (100.0..=131_072.0).contains(&v)), "seed {seed}");
+
+        let k = f.k();
+        let from = rng.below(k as u64) as usize;
+        let to = if rng.f64() < 0.5 { from + 1 } else { k }; // selective | partial
+        let g = f.scale_segments(from, to, 2.0, MemMiB(131_072.0));
+        assert!(g.is_monotone(), "seed {seed}");
+        assert_eq!(g.k(), k, "seed {seed}");
+        for s in 0..k {
+            assert!(g.values()[s] >= f.values()[s] - 1e-9, "seed {seed} segment {s} decreased");
+        }
+        // scaled segments actually doubled (unless already at the cap)
+        for s in from..to {
+            let expect = (f.values()[s] * 2.0).min(131_072.0);
+            assert!(g.values()[s] >= expect - 1e-6, "seed {seed} segment {s} under-scaled");
+        }
+    }
+}
+
+/// simulate_attempt: success wastage is non-negative and bounded by
+/// the allocation integral; failure implies the usage really exceeded
+/// the allocation at the failure instant.
+#[test]
+fn prop_attempt_accounting_sound() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed + 40_000);
+        let series = random_series(&mut rng);
+        let alloc = if rng.f64() < 0.5 {
+            Allocation::Static(MemMiB(rng.uniform(50.0, 40_000.0)))
+        } else {
+            Allocation::Dynamic(random_step_fn(&mut rng))
+        };
+        match simulate_attempt(&series, &alloc, 1) {
+            AttemptOutcome::Success { wastage_mibs } => {
+                assert!(wastage_mibs >= -1e-6, "seed {seed}: negative wastage");
+                // success means alloc covered usage at every sample
+                for (t, u) in series.iter_timed() {
+                    assert!(
+                        alloc.value_at(t + 1e-9) >= u - 1e-9,
+                        "seed {seed}: success but usage {u} above alloc at {t}"
+                    );
+                }
+            }
+            AttemptOutcome::Failure { info, wastage_mibs } => {
+                assert!(wastage_mibs >= -1e-6, "seed {seed}");
+                assert!(
+                    info.used_mib > alloc.value_at(info.time_s + 1e-9) - 1e-6,
+                    "seed {seed}: failure without excess usage"
+                );
+                assert!(info.time_s >= 0.0 && info.time_s <= series.duration().0, "seed {seed}");
+            }
+        }
+    }
+}
+
+/// NativeFitter: offsets always cover the training rows (no historical
+/// underprediction survives) and the runtime offset is conservative.
+#[test]
+fn prop_fit_offsets_cover_history() {
+    for seed in 0..100 {
+        let mut rng = Rng::new(seed + 50_000);
+        let n = 1 + rng.below(40) as usize;
+        let t = 8 + rng.below(128) as usize;
+        let k = 1 + rng.below(t.min(16) as u64) as usize;
+        let mut input = FitInput::default();
+        for _ in 0..n {
+            let x = rng.uniform(1.0, 10_000.0);
+            let peak = rng.uniform(10.0, 20_000.0);
+            input.x.push(x);
+            input.runtime.push(rng.uniform(2.0, 5_000.0));
+            input
+                .series
+                .push((0..t).map(|_| rng.uniform(0.0, peak)).collect());
+        }
+        let fit = NativeFitter.fit(&input, k);
+        for (row, series) in input.series.iter().enumerate() {
+            let x = input.x[row];
+            let preds = fit.predict_segments(x);
+            for (p, pk) in preds.iter().zip(seg_peaks(series, k)) {
+                assert!(
+                    *p >= pk - 1e-6 * pk.abs().max(1.0),
+                    "seed {seed} row {row}: prediction {p} under historical peak {pk}"
+                );
+            }
+            assert!(
+                fit.predict_runtime(x) <= input.runtime[row] + 1e-6 * input.runtime[row],
+                "seed {seed} row {row}: runtime overpredicted after offset"
+            );
+        }
+    }
+}
+
+/// The predictor's full retry loop always terminates and ends with an
+/// allocation that covers the observed failure.
+#[test]
+fn prop_retry_loop_progresses() {
+    for seed in 0..100 {
+        let mut rng = Rng::new(seed + 60_000);
+        let strategy = if rng.f64() < 0.5 {
+            RetryStrategy::Selective
+        } else {
+            RetryStrategy::Partial
+        };
+        let mut p = KSegmentsPredictor::native(1 + rng.below(8) as usize, strategy);
+        p.prime("t", MemMiB(rng.uniform(100.0, 2000.0)));
+        // train on a few random runs
+        for i in 0..(2 + rng.below(10)) {
+            let series = random_series(&mut rng);
+            p.observe(&TaskRun {
+                task_type: "t".into(),
+                input_mib: rng.uniform(10.0, 5000.0),
+                runtime: series.duration(),
+                series,
+                seq: i,
+            });
+        }
+        let victim = random_series(&mut rng);
+        let mut alloc = p.predict("t", rng.uniform(10.0, 5000.0));
+        let mut attempts = 0;
+        loop {
+            attempts += 1;
+            assert!(attempts <= 64, "seed {seed}: retry loop did not terminate");
+            match simulate_attempt(&victim, &alloc, attempts) {
+                AttemptOutcome::Success { .. } => break,
+                AttemptOutcome::Failure { info, .. } => {
+                    let next = p.on_failure("t", 100.0, &alloc, &info);
+                    assert!(
+                        next.value_at(info.time_s + 1e-9) > alloc.value_at(info.time_s + 1e-9)
+                            || next.value_at(info.time_s + 1e-9) > info.used_mib,
+                        "seed {seed}: no progress at failure point"
+                    );
+                    alloc = next;
+                }
+            }
+        }
+    }
+}
+
+/// FailureInfo attempt numbering is propagated untouched.
+#[test]
+fn prop_failure_attempt_number() {
+    let series = UsageSeries::new(2.0, vec![10.0, 1000.0]);
+    for attempt in 1..10 {
+        match simulate_attempt(&series, &Allocation::Static(MemMiB(100.0)), attempt) {
+            AttemptOutcome::Failure { info, .. } => assert_eq!(info.attempt, attempt),
+            _ => panic!("expected failure"),
+        }
+    }
+    let _ = FailureInfo { time_s: 0.0, used_mib: 0.0, attempt: 1 };
+}

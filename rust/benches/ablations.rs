@@ -6,6 +6,10 @@ use ksegments::bench_harness::ablation::run_all;
 use ksegments::bench_harness::time_once;
 
 fn main() {
-    let (tables, _dt) = time_once("ablation suite (seed 42, 50% training)", || run_all(42));
+    let workers = ksegments::sim::default_workers();
+    let (tables, _dt) = time_once(
+        &format!("ablation suite (seed 42, 50% training, workers={workers})"),
+        || run_all(42, workers),
+    );
     println!("\n{tables}");
 }

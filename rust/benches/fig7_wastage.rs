@@ -35,9 +35,15 @@ fn main() {
     }
     println!();
 
-    // The full grid, timed end to end, then the figure tables.
-    let (results, _dt) = time_once("fig7 full grid (6 methods x 3 fractions)", || {
-        run_fig7(42, FitterChoice::Native)
+    // The full grid through the parallel EvalGrid — timed at one
+    // worker and at all cores (identical tables either way), then
+    // rendered from the parallel run.
+    let workers = ksegments::sim::default_workers();
+    let (_seq, _dt) = time_once("fig7 full grid (workers=1)", || {
+        run_fig7(42, FitterChoice::Native, 1)
+    });
+    let (results, _dt) = time_once(&format!("fig7 full grid (workers={workers})"), || {
+        run_fig7(42, FitterChoice::Native, workers)
     });
     println!();
     println!("{}", results.render_wastage());

@@ -9,9 +9,10 @@ use ksegments::bench_harness::{run_fig8, time_once, FitterChoice};
 fn main() {
     println!("== fig8 benchmark (seed 42, 50% training, k = 1..15) ==\n");
     let ks: Vec<usize> = (1..=15).collect();
+    let workers = ksegments::sim::default_workers();
     for task in ["eager/qualimap", "eager/adapter_removal"] {
-        let (r, _dt) = time_once(&format!("fig8 sweep {task}"), || {
-            run_fig8(42, FitterChoice::Native, task, &ks)
+        let (r, _dt) = time_once(&format!("fig8 sweep {task} (workers={workers})"), || {
+            run_fig8(42, FitterChoice::Native, task, &ks, workers)
         });
         println!("\n{}", r.render());
     }

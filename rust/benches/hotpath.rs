@@ -7,18 +7,25 @@
 //!   (skipped with a notice if `make artifacts` has not run);
 //! * `KSegmentsPredictor::predict` — the submission-time path served
 //!   by the coordinator;
-//! * step-function construction and evaluation.
+//! * step-function construction and evaluation;
+//! * `EvalGrid` throughput — the parallel evaluation engine at 1
+//!   worker vs all cores;
+//! * `ShardedPredictionService` throughput — concurrent predict
+//!   traffic at 1 shard vs 4 shards.
 
-use ksegments::bench_harness::{bench, black_box};
+use ksegments::bench_harness::{bench, black_box, time_once};
+use ksegments::coordinator::ShardedPredictionService;
 use ksegments::ml::fitter::{FitInput, KsegFitter, NativeFitter};
 use ksegments::ml::step_fn::StepFunction;
+use ksegments::predictors::default_config::DefaultConfigPredictor;
 use ksegments::predictors::ksegments::{KSegmentsPredictor, RetryStrategy};
 use ksegments::predictors::{Allocation, MemoryPredictor};
 use ksegments::rng::Rng;
 use ksegments::runtime::XlaFitter;
-use ksegments::sim::simulate_attempt;
+use ksegments::sim::{default_workers, simulate_attempt, EvalGrid, PredictorFactory};
 use ksegments::trace::{TaskRun, UsageSeries};
 use ksegments::units::{MemMiB, Seconds};
+use ksegments::workload::{eager_workflow, generate_workflow_trace};
 
 fn synth_series(n: usize, rng: &mut Rng) -> UsageSeries {
     let peak = rng.uniform(500.0, 2000.0);
@@ -124,4 +131,61 @@ fn main() {
             MemMiB(131072.0),
         )
     });
+
+    // -- parallel grid throughput ----------------------------------------
+    // A reduced fig7-style grid (3 methods x 2 fractions x 1 trace);
+    // tables are bit-identical at any worker count, so the only thing
+    // that changes with workers is wall-clock.
+    let traces = vec![generate_workflow_trace(&eager_workflow(), 42)];
+    let grid_makers = || -> Vec<PredictorFactory> {
+        vec![
+            Box::new(|| Box::new(DefaultConfigPredictor::new()) as Box<dyn MemoryPredictor>),
+            Box::new(|| {
+                Box::new(KSegmentsPredictor::native(4, RetryStrategy::Selective))
+                    as Box<dyn MemoryPredictor>
+            }),
+            Box::new(|| {
+                Box::new(KSegmentsPredictor::native(4, RetryStrategy::Partial))
+                    as Box<dyn MemoryPredictor>
+            }),
+        ]
+    };
+    let grid = EvalGrid::new(grid_makers(), &traces, vec![0.25, 0.75]);
+    let (seq, _dt) = time_once("eval_grid/3x2x1 workers=1", || grid.run(1));
+    let workers = default_workers();
+    let (par, _dt) = time_once(&format!("eval_grid/3x2x1 workers={workers}"), || {
+        grid.run(workers)
+    });
+    assert_eq!(seq, par, "grid results must not depend on worker count");
+
+    // -- sharded prediction service throughput ---------------------------
+    for shards in [1usize, 4] {
+        let svc = ShardedPredictionService::spawn(shards, |_| {
+            Box::new(DefaultConfigPredictor::new())
+        });
+        let h = svc.handle();
+        for i in 0..32 {
+            h.prime(&format!("w/t{i}"), MemMiB(1024.0));
+        }
+        let (_, _dt) = time_once(
+            &format!("sharded_service/predict 4 clients x 2000 ({shards} shard(s))"),
+            || {
+                let mut joins = Vec::new();
+                for c in 0..4 {
+                    let h = h.clone();
+                    joins.push(std::thread::spawn(move || {
+                        for i in 0..2000u32 {
+                            let ty = format!("w/t{}", (c * 8 + i % 8) % 32);
+                            black_box(h.predict(&ty, i as f64));
+                        }
+                    }));
+                }
+                for j in joins {
+                    j.join().unwrap();
+                }
+            },
+        );
+        let stats = svc.shutdown();
+        assert_eq!(stats.predictions, 8000);
+    }
 }

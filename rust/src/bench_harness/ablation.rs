@@ -17,14 +17,15 @@ use crate::predictors::adaptive_k::AdaptiveKPredictor;
 use crate::predictors::ksegments::{KSegmentsConfig, KSegmentsPredictor, RetryStrategy};
 use crate::predictors::lr_witt::{LrWittPredictor, OffsetStrategy};
 use crate::predictors::MemoryPredictor;
+use crate::sim::parallel_map;
+use crate::trace::Trace;
 use crate::units::MemMiB;
 
 /// One ablation row: configuration label → (avg wastage GB·s, avg retries).
 pub type AblationRow = (String, f64, f64);
 
-fn run_one(mk: &dyn Fn() -> Box<dyn MemoryPredictor>, seed: u64, frac: f64) -> (f64, f64) {
-    let traces = paper_traces(seed);
-    let rep = evaluate_method(mk, &traces, frac);
+fn run_one(mk: &dyn Fn() -> Box<dyn MemoryPredictor>, traces: &[Trace], frac: f64) -> (f64, f64) {
+    let rep = evaluate_method(mk, traces, frac);
     (rep.avg_wastage_gbs(), rep.avg_retries())
 }
 
@@ -37,84 +38,94 @@ fn kseg_with(cfg: KSegmentsConfig, strategy: RetryStrategy) -> Box<dyn MemoryPre
 }
 
 /// Offsets on/off (both retry strategies).
-pub fn ablate_offsets(seed: u64, frac: f64) -> Vec<AblationRow> {
-    let mut rows = Vec::new();
-    for strategy in [RetryStrategy::Selective, RetryStrategy::Partial] {
-        for use_offsets in [true, false] {
-            let cfg = KSegmentsConfig { use_offsets, ..KSegmentsConfig::default() };
-            let (w, r) = run_one(&|| kseg_with(cfg.clone(), strategy), seed, frac);
-            rows.push((
-                format!(
-                    "{} / offsets {}",
-                    strategy.label(),
-                    if use_offsets { "ON " } else { "OFF" }
-                ),
-                w,
-                r,
-            ));
-        }
-    }
-    rows
+pub fn ablate_offsets(traces: &[Trace], frac: f64, workers: usize) -> Vec<AblationRow> {
+    let combos: Vec<(RetryStrategy, bool)> = [RetryStrategy::Selective, RetryStrategy::Partial]
+        .into_iter()
+        .flat_map(|s| [(s, true), (s, false)])
+        .collect();
+    parallel_map(combos.len(), workers, |i| {
+        let (strategy, use_offsets) = combos[i];
+        let cfg = KSegmentsConfig { use_offsets, ..KSegmentsConfig::default() };
+        let (w, r) = run_one(&|| kseg_with(cfg.clone(), strategy), traces, frac);
+        (
+            format!(
+                "{} / offsets {}",
+                strategy.label(),
+                if use_offsets { "ON " } else { "OFF" }
+            ),
+            w,
+            r,
+        )
+    })
 }
 
 /// Retry factor l sweep (paper default l = 2).
-pub fn ablate_retry_factor(seed: u64, frac: f64, ls: &[f64]) -> Vec<AblationRow> {
-    ls.iter()
-        .map(|&l| {
-            let cfg = KSegmentsConfig { retry_factor: l, ..KSegmentsConfig::default() };
-            let (w, r) = run_one(&|| kseg_with(cfg.clone(), RetryStrategy::Selective), seed, frac);
-            (format!("l = {l:.2}"), w, r)
-        })
-        .collect()
+pub fn ablate_retry_factor(
+    traces: &[Trace],
+    frac: f64,
+    ls: &[f64],
+    workers: usize,
+) -> Vec<AblationRow> {
+    parallel_map(ls.len(), workers, |i| {
+        let l = ls[i];
+        let cfg = KSegmentsConfig { retry_factor: l, ..KSegmentsConfig::default() };
+        let (w, r) = run_one(&|| kseg_with(cfg.clone(), RetryStrategy::Selective), traces, frac);
+        (format!("l = {l:.2}"), w, r)
+    })
 }
 
 /// History window sweep (paper's online setting keeps all history; our
 /// artifact pads to 64 — how much does the window matter?).
-pub fn ablate_history_window(seed: u64, frac: f64, windows: &[usize]) -> Vec<AblationRow> {
-    windows
-        .iter()
-        .map(|&n_hist| {
-            let cfg = KSegmentsConfig { n_hist, ..KSegmentsConfig::default() };
-            let (w, r) = run_one(&|| kseg_with(cfg.clone(), RetryStrategy::Selective), seed, frac);
-            (format!("n_hist = {n_hist}"), w, r)
-        })
-        .collect()
+pub fn ablate_history_window(
+    traces: &[Trace],
+    frac: f64,
+    windows: &[usize],
+    workers: usize,
+) -> Vec<AblationRow> {
+    parallel_map(windows.len(), workers, |i| {
+        let n_hist = windows[i];
+        let cfg = KSegmentsConfig { n_hist, ..KSegmentsConfig::default() };
+        let (w, r) = run_one(&|| kseg_with(cfg.clone(), RetryStrategy::Selective), traces, frac);
+        (format!("n_hist = {n_hist}"), w, r)
+    })
 }
 
 /// Witt et al.'s offset strategies head-to-head.
-pub fn ablate_lr_offsets(seed: u64, frac: f64) -> Vec<AblationRow> {
-    [
+pub fn ablate_lr_offsets(traces: &[Trace], frac: f64, workers: usize) -> Vec<AblationRow> {
+    let strategies = [
         OffsetStrategy::MeanPlusStd,
         OffsetStrategy::MeanNeg,
         OffsetStrategy::MaxUnder,
-    ]
-    .into_iter()
-    .map(|s| {
+    ];
+    parallel_map(strategies.len(), workers, |i| {
+        let s = strategies[i];
         let (w, r) = run_one(
             &|| Box::new(LrWittPredictor::new(s, MemMiB::from_gib(128.0))),
-            seed,
+            traces,
             frac,
         );
         (format!("LR offset {}", s.label()), w, r)
     })
-    .collect()
 }
 
 /// Fixed k vs adaptive per-task k (§V future work).
-pub fn ablate_adaptive_k(seed: u64, frac: f64) -> Vec<AblationRow> {
-    let mut rows = Vec::new();
-    for k in [1usize, 4, 8, 13] {
-        let cfg = KSegmentsConfig { k, ..KSegmentsConfig::default() };
-        let (w, r) = run_one(&|| kseg_with(cfg.clone(), RetryStrategy::Selective), seed, frac);
-        rows.push((format!("fixed k = {k}"), w, r));
-    }
-    let (w, r) = run_one(
-        &|| Box::new(AdaptiveKPredictor::native(RetryStrategy::Selective)),
-        seed,
-        frac,
-    );
-    rows.push(("adaptive per-task k".to_string(), w, r));
-    rows
+pub fn ablate_adaptive_k(traces: &[Trace], frac: f64, workers: usize) -> Vec<AblationRow> {
+    let fixed_ks = [1usize, 4, 8, 13];
+    parallel_map(fixed_ks.len() + 1, workers, |i| {
+        if let Some(&k) = fixed_ks.get(i) {
+            let cfg = KSegmentsConfig { k, ..KSegmentsConfig::default() };
+            let (w, r) =
+                run_one(&|| kseg_with(cfg.clone(), RetryStrategy::Selective), traces, frac);
+            (format!("fixed k = {k}"), w, r)
+        } else {
+            let (w, r) = run_one(
+                &|| Box::new(AdaptiveKPredictor::native(RetryStrategy::Selective)),
+                traces,
+                frac,
+            );
+            ("adaptive per-task k".to_string(), w, r)
+        }
+    })
 }
 
 /// Render rows as a markdown table.
@@ -126,25 +137,38 @@ pub fn render_ablation(title: &str, rows: &[AblationRow]) -> String {
     out
 }
 
-/// All ablations at the paper's mid setting (50 % training).
-pub fn run_all(seed: u64) -> String {
+/// All ablations at the paper's mid setting (50 % training), each
+/// family fanned out over `workers` threads; the paper traces are
+/// generated once and shared by every row (they are read-only, like
+/// the grid's cells).
+pub fn run_all(seed: u64, workers: usize) -> String {
     let frac = 0.5;
+    let traces = paper_traces(seed);
     let mut out = String::new();
-    out.push_str(&render_ablation("error offsets (§III-B)", &ablate_offsets(seed, frac)));
+    out.push_str(&render_ablation(
+        "error offsets (§III-B)",
+        &ablate_offsets(&traces, frac, workers),
+    ));
     out.push('\n');
     out.push_str(&render_ablation(
         "retry factor l (§III-D)",
-        &ablate_retry_factor(seed, frac, &[1.25, 1.5, 2.0, 3.0]),
+        &ablate_retry_factor(&traces, frac, &[1.25, 1.5, 2.0, 3.0], workers),
     ));
     out.push('\n');
     out.push_str(&render_ablation(
         "history window",
-        &ablate_history_window(seed, frac, &[8, 16, 32, 64]),
+        &ablate_history_window(&traces, frac, &[8, 16, 32, 64], workers),
     ));
     out.push('\n');
-    out.push_str(&render_ablation("LR offset strategies (Witt et al.)", &ablate_lr_offsets(seed, frac)));
+    out.push_str(&render_ablation(
+        "LR offset strategies (Witt et al.)",
+        &ablate_lr_offsets(&traces, frac, workers),
+    ));
     out.push('\n');
-    out.push_str(&render_ablation("fixed vs adaptive k (§V)", &ablate_adaptive_k(seed, frac)));
+    out.push_str(&render_ablation(
+        "fixed vs adaptive k (§V)",
+        &ablate_adaptive_k(&traces, frac, workers),
+    ));
     out
 }
 
@@ -157,7 +181,7 @@ mod tests {
 
     #[test]
     fn offsets_matter() {
-        let rows = ablate_offsets(42, 0.5);
+        let rows = ablate_offsets(&paper_traces(42), 0.5, 2);
         assert_eq!(rows.len(), 4);
         // offsets OFF must cost more retries (that is their purpose)
         let on = rows.iter().find(|r| r.0.contains("Selective / offsets ON")).unwrap();

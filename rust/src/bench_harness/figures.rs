@@ -11,7 +11,7 @@ use crate::predictors::ksegments::{KSegmentsConfig, KSegmentsPredictor, RetryStr
 use crate::predictors::lr_witt::LrWittPredictor;
 use crate::predictors::ppm::PpmPredictor;
 use crate::predictors::MemoryPredictor;
-use crate::sim::{simulate_attempt, simulate_trace, SimConfig};
+use crate::sim::{eval_cell, parallel_map, simulate_attempt, EvalGrid, PredictorFactory};
 use crate::trace::Trace;
 use crate::units::{GbSeconds, MemMiB};
 use crate::workload::{eager_workflow, generate_workflow_trace, sarek_workflow};
@@ -73,25 +73,18 @@ pub fn paper_traces(seed: u64) -> Vec<Trace> {
 
 /// One method × one fraction over all workflows, merged into one
 /// report covering all 33 evaluated tasks.
+///
+/// Each workflow gets a fresh predictor instance (the paper trains per
+/// task type and types are namespaced per workflow, but a fresh
+/// instance also resets any cross-task state) — the same per-cell unit
+/// the parallel [`EvalGrid`] executes, merged in trace order.
 pub fn evaluate_method(
     make: &dyn Fn() -> Box<dyn MemoryPredictor>,
     traces: &[Trace],
     frac: f64,
 ) -> MethodReport {
-    let cfg = SimConfig::with_training_frac(frac);
-    let mut merged: Option<MethodReport> = None;
-    for trace in traces {
-        // fresh predictor state per workflow: the paper trains per
-        // task type and task types are namespaced per workflow, but a
-        // fresh instance also resets any cross-task state
-        let mut m = make();
-        let rep = simulate_trace(trace, m.as_mut(), &cfg);
-        match &mut merged {
-            None => merged = Some(rep),
-            Some(acc) => acc.merge(rep),
-        }
-    }
-    merged.expect("at least one trace")
+    MethodReport::merged(traces.iter().map(|trace| eval_cell(make, trace, frac)))
+        .expect("at least one trace")
 }
 
 /// Full Fig. 7 grid: every method × every training fraction.
@@ -101,27 +94,27 @@ pub struct Fig7Results {
     pub by_fraction: Vec<Vec<MethodReport>>,
 }
 
-pub fn run_fig7(seed: u64, choice: FitterChoice) -> Fig7Results {
-    let traces = paper_traces(seed);
-    let fractions = vec![0.25, 0.5, 0.75];
-    let makers: Vec<Box<dyn Fn() -> Box<dyn MemoryPredictor>>> = vec![
+/// The Fig. 7 roster as thread-safe factories, in roster order — the
+/// method axis of the parallel [`EvalGrid`].
+pub fn fig7_makers(choice: FitterChoice) -> Vec<PredictorFactory> {
+    vec![
         Box::new(|| Box::new(DefaultConfigPredictor::new())),
         Box::new(|| Box::new(PpmPredictor::original())),
         Box::new(|| Box::new(PpmPredictor::improved())),
         Box::new(|| Box::new(LrWittPredictor::paper_baseline())),
         Box::new(move || ksegments(choice, 4, RetryStrategy::Selective)),
         Box::new(move || ksegments(choice, 4, RetryStrategy::Partial)),
-    ];
-    let by_fraction = fractions
-        .iter()
-        .map(|&frac| {
-            makers
-                .iter()
-                .map(|mk| evaluate_method(mk.as_ref(), &traces, frac))
-                .collect()
-        })
-        .collect();
-    Fig7Results { fractions, by_fraction }
+    ]
+}
+
+/// Run the full Fig. 7 grid (6 methods × 3 fractions × 2 workflows =
+/// 36 independent cells) on `workers` threads. Results are identical
+/// for any worker count (see `tests/parallel_determinism.rs`).
+pub fn run_fig7(seed: u64, choice: FitterChoice, workers: usize) -> Fig7Results {
+    let traces = paper_traces(seed);
+    let grid = EvalGrid::new(fig7_makers(choice), &traces, vec![0.25, 0.5, 0.75]);
+    let results = grid.run(workers);
+    Fig7Results { fractions: results.fractions, by_fraction: results.by_fraction }
 }
 
 impl Fig7Results {
@@ -222,19 +215,22 @@ pub struct Fig8Results {
     pub sweep: Vec<(usize, f64)>,
 }
 
-pub fn run_fig8(seed: u64, choice: FitterChoice, task: &str, ks: &[usize]) -> Fig8Results {
+pub fn run_fig8(
+    seed: u64,
+    choice: FitterChoice,
+    task: &str,
+    ks: &[usize],
+    workers: usize,
+) -> Fig8Results {
     let trace = generate_workflow_trace(&eager_workflow(), seed)
         .filtered(|ty| ty == task);
     assert!(trace.n_types() == 1, "task {task} not found in eager trace");
-    let cfg = SimConfig::with_training_frac(0.5);
-    let sweep = ks
-        .iter()
-        .map(|&k| {
-            let mut m = ksegments(choice, k, RetryStrategy::Selective);
-            let rep = simulate_trace(&trace, m.as_mut(), &cfg);
-            (k, rep.avg_wastage_gbs())
-        })
-        .collect();
+    // one independent cell per k, on the same worker pool as fig7
+    let sweep = parallel_map(ks.len(), workers, |i| {
+        let k = ks[i];
+        let rep = eval_cell(&|| ksegments(choice, k, RetryStrategy::Selective), &trace, 0.5);
+        (k, rep.avg_wastage_gbs())
+    });
     Fig8Results { task: task.to_string(), sweep }
 }
 
@@ -380,7 +376,7 @@ mod tests {
 
     #[test]
     fn fig8_sweep_shapes() {
-        let r = run_fig8(42, FitterChoice::Native, "eager/adapter_removal", &[1, 2, 4]);
+        let r = run_fig8(42, FitterChoice::Native, "eager/adapter_removal", &[1, 2, 4], 2);
         assert_eq!(r.sweep.len(), 3);
         // more segments must not be catastrophically worse on the ramp
         let w1 = r.sweep[0].1;

@@ -11,7 +11,7 @@ pub mod report;
 pub mod timer;
 
 pub use figures::{
-    evaluate_method, method_names, method_roster, paper_traces, run_fig1, run_fig4, run_fig7,
-    run_fig8, Fig7Results, Fig8Results, FitterChoice,
+    evaluate_method, fig7_makers, method_names, method_roster, paper_traces, run_fig1, run_fig4,
+    run_fig7, run_fig8, Fig7Results, Fig8Results, FitterChoice,
 };
 pub use timer::{bench, black_box, time_once, Measurement};

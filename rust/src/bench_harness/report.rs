@@ -6,8 +6,10 @@
 use crate::bench_harness::ablation::run_all as run_ablations;
 use crate::bench_harness::figures::{run_fig1, run_fig4, run_fig7, run_fig8, FitterChoice};
 
-/// Build the complete experiments report (may take ~seconds).
-pub fn full_report(seed: u64, choice: FitterChoice) -> String {
+/// Build the complete experiments report (may take ~seconds); the
+/// fig7/fig8 grids and the ablation suite fan out over `workers`
+/// threads — the rendered tables are identical for any worker count.
+pub fn full_report(seed: u64, choice: FitterChoice, workers: usize) -> String {
     let mut out = String::new();
     out.push_str(&format!(
         "# ksegments experiment report\n\nseed = {seed}, fitter = {choice:?}\n\n"
@@ -18,7 +20,7 @@ pub fn full_report(seed: u64, choice: FitterChoice) -> String {
     out.push_str(&run_fig4(seed, choice));
     out.push('\n');
 
-    let fig7 = run_fig7(seed, choice);
+    let fig7 = run_fig7(seed, choice, workers);
     out.push_str(&fig7.render_wastage());
     out.push('\n');
     out.push_str(&fig7.render_wins());
@@ -32,11 +34,11 @@ pub fn full_report(seed: u64, choice: FitterChoice) -> String {
 
     let ks: Vec<usize> = (1..=15).collect();
     for task in ["eager/qualimap", "eager/adapter_removal"] {
-        out.push_str(&run_fig8(seed, choice, task, &ks).render());
+        out.push_str(&run_fig8(seed, choice, task, &ks, workers).render());
         out.push('\n');
     }
 
-    out.push_str(&run_ablations(seed));
+    out.push_str(&run_ablations(seed, workers));
     out
 }
 
@@ -49,7 +51,7 @@ mod tests {
     #[test]
     #[ignore = "runs the full grid (~10 s); covered by `ksegments report` in CI-style runs"]
     fn report_contains_every_section() {
-        let r = full_report(42, FitterChoice::Native);
+        let r = full_report(42, FitterChoice::Native, crate::sim::default_workers());
         for needle in [
             "Fig 1",
             "Fig 4",

@@ -1,24 +1,29 @@
 //! The prediction service — the long-running coordinator a SWMS talks
-//! to (the deployment shape of Fig. 2/6).
+//! to (the deployment shape of Fig. 2/6), sharded for throughput.
 //!
-//! A dedicated model thread owns the predictor (and through it the
-//! PJRT runtime, which wants single-threaded use); SWMS-side clients
-//! hold a cheap clonable [`ServiceHandle`] and talk to it over
-//! channels:
+//! N model threads (shards) each own a private predictor (and through
+//! it the PJRT runtime, which wants single-threaded use). Task types
+//! are hash-partitioned across shards, so all traffic for one type
+//! flows through one shard's FIFO channel — which preserves the online
+//! contract: completions a client sends before a predict are ingested
+//! before that predict is answered. SWMS-side clients hold a cheap
+//! clonable [`ServiceHandle`] and talk to the shards over channels:
 //!
 //! * [`ServiceHandle::predict`] — blocking request/response, the
 //!   submission-time path;
 //! * [`ServiceHandle::report_failure`] — blocking, returns the retry
 //!   allocation per the predictor's failure strategy;
 //! * [`ServiceHandle::complete`] — fire-and-forget completion
-//!   ingestion; the model thread folds finished runs into the model in
-//!   arrival order (the online loop), so prediction latency never
-//!   blocks on retraining more than one fit.
+//!   ingestion; each shard drains all queued requests per wakeup, so a
+//!   burst of completions is folded into the model as one batch before
+//!   the thread sleeps again.
 //!
-//! The offline crate cache has no tokio; the service uses std threads
-//! and mpsc channels, which for this request pattern (single model
-//! owner, many blocking callers) is the same architecture tokio's
-//! actor pattern would express.
+//! [`PredictionService`] (the original single-model deployment) is the
+//! `shards = 1` case of the same code path. The offline crate cache
+//! has no tokio; the service uses std threads and mpsc channels, which
+//! for this request pattern (model owner per shard, many blocking
+//! callers) is the same architecture tokio's actor pattern would
+//! express.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
@@ -27,7 +32,7 @@ use crate::predictors::{Allocation, FailureInfo, MemoryPredictor};
 use crate::trace::TaskRun;
 use crate::units::MemMiB;
 
-/// Requests understood by the model thread.
+/// Requests understood by a shard's model thread.
 enum Request {
     Prime { task_type: String, default: MemMiB },
     Predict { task_type: String, input_mib: f64, reply: Sender<Allocation> },
@@ -43,38 +48,87 @@ enum Request {
     Shutdown,
 }
 
-/// Observability counters maintained by the model thread.
+/// Observability counters maintained per shard; aggregate across
+/// shards with [`ServiceStats::merge`].
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct ServiceStats {
     pub predictions: u64,
     pub completions: u64,
     pub failures: u64,
+    /// Model-thread wakeups: batched draining means this can be far
+    /// below the total request count under bursty traffic.
+    pub wakeups: u64,
 }
 
-/// Clonable client handle.
+impl ServiceStats {
+    /// Add another shard's counters into this one.
+    pub fn merge(&mut self, other: ServiceStats) {
+        self.predictions += other.predictions;
+        self.completions += other.completions;
+        self.failures += other.failures;
+        self.wakeups += other.wakeups;
+    }
+
+    /// Sum of per-shard stats.
+    pub fn aggregated(per_shard: &[ServiceStats]) -> ServiceStats {
+        let mut total = ServiceStats::default();
+        for s in per_shard {
+            total.merge(*s);
+        }
+        total
+    }
+}
+
+/// FNV-1a partition of task types over shards — the same type always
+/// lands on the same shard, which is what carries the per-type FIFO
+/// guarantee.
+fn shard_of(task_type: &str, n_shards: usize) -> usize {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in task_type.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    (h % n_shards as u64) as usize
+}
+
+/// Clonable client handle; routes every request to the owning shard.
 #[derive(Clone)]
 pub struct ServiceHandle {
-    tx: Sender<Request>,
+    txs: Vec<Sender<Request>>,
 }
 
 impl ServiceHandle {
+    fn tx_for(&self, task_type: &str) -> &Sender<Request> {
+        &self.txs[shard_of(task_type, self.txs.len())]
+    }
+
     pub fn prime(&self, task_type: &str, default: MemMiB) {
-        let _ = self.tx.send(Request::Prime {
+        let _ = self.tx_for(task_type).send(Request::Prime {
             task_type: task_type.to_string(),
             default,
         });
     }
 
-    /// Submission-time allocation request (blocking).
+    /// Submission-time allocation request (blocking). Panics if the
+    /// service is down; see [`ServiceHandle::try_predict`] for the
+    /// non-panicking variant.
     pub fn predict(&self, task_type: &str, input_mib: f64) -> Allocation {
-        let (reply, rx) = channel();
-        self.tx
-            .send(Request::Predict { task_type: task_type.to_string(), input_mib, reply })
-            .expect("prediction service is down");
-        rx.recv().expect("prediction service dropped the reply")
+        self.try_predict(task_type, input_mib)
+            .expect("prediction service is down")
     }
 
-    /// Failure-strategy request (blocking).
+    /// Submission-time allocation request; `None` once the service has
+    /// shut down (callers racing a shutdown fall back to defaults).
+    pub fn try_predict(&self, task_type: &str, input_mib: f64) -> Option<Allocation> {
+        let (reply, rx) = channel();
+        self.tx_for(task_type)
+            .send(Request::Predict { task_type: task_type.to_string(), input_mib, reply })
+            .ok()?;
+        rx.recv().ok()
+    }
+
+    /// Failure-strategy request (blocking). Panics if the service is
+    /// down; see [`ServiceHandle::try_report_failure`].
     pub fn report_failure(
         &self,
         task_type: &str,
@@ -82,8 +136,20 @@ impl ServiceHandle {
         failed: Allocation,
         info: FailureInfo,
     ) -> Allocation {
+        self.try_report_failure(task_type, input_mib, failed, info)
+            .expect("prediction service is down")
+    }
+
+    /// Failure-strategy request; `None` once the service has shut down.
+    pub fn try_report_failure(
+        &self,
+        task_type: &str,
+        input_mib: f64,
+        failed: Allocation,
+        info: FailureInfo,
+    ) -> Option<Allocation> {
         let (reply, rx) = channel();
-        self.tx
+        self.tx_for(task_type)
             .send(Request::Failure {
                 task_type: task_type.to_string(),
                 input_mib,
@@ -91,84 +157,170 @@ impl ServiceHandle {
                 info,
                 reply,
             })
-            .expect("prediction service is down");
-        rx.recv().expect("prediction service dropped the reply")
+            .ok()?;
+        rx.recv().ok()
     }
 
-    /// Completion ingestion (non-blocking).
+    /// Completion ingestion (non-blocking; silently dropped after
+    /// shutdown).
     pub fn complete(&self, run: TaskRun) {
-        let _ = self.tx.send(Request::Complete { run: Box::new(run) });
+        let _ = self.tx_for(&run.task_type).send(Request::Complete { run: Box::new(run) });
     }
 
+    /// Aggregated counters across all shards (blocking).
     pub fn stats(&self) -> ServiceStats {
-        let (reply, rx) = channel();
-        self.tx.send(Request::Stats { reply }).expect("service down");
-        rx.recv().expect("service dropped stats reply")
+        ServiceStats::aggregated(&self.per_shard_stats())
+    }
+
+    /// Per-shard counters (blocking; a shard that already shut down
+    /// reports zeros).
+    pub fn per_shard_stats(&self) -> Vec<ServiceStats> {
+        self.txs
+            .iter()
+            .map(|tx| {
+                let (reply, rx) = channel();
+                if tx.send(Request::Stats { reply }).is_err() {
+                    return ServiceStats::default();
+                }
+                rx.recv().unwrap_or_default()
+            })
+            .collect()
     }
 }
 
-/// The running service; join it via [`PredictionService::shutdown`].
-pub struct PredictionService {
+/// The running sharded service; join it via
+/// [`ShardedPredictionService::shutdown`] or let `Drop` do it.
+pub struct ShardedPredictionService {
     handle: ServiceHandle,
-    thread: Option<JoinHandle<ServiceStats>>,
+    threads: Vec<JoinHandle<ServiceStats>>,
 }
 
-impl PredictionService {
-    /// Spawn the model thread around any predictor.
-    pub fn spawn(predictor: Box<dyn MemoryPredictor>) -> PredictionService {
-        let (tx, rx) = channel();
-        let thread = std::thread::Builder::new()
-            .name("ksegments-model".to_string())
-            .spawn(move || model_loop(predictor, rx))
-            .expect("spawning model thread");
-        PredictionService { handle: ServiceHandle { tx }, thread: Some(thread) }
+impl ShardedPredictionService {
+    /// Spawn `n_shards` model threads, each owning the predictor the
+    /// factory builds for its shard index.
+    pub fn spawn(
+        n_shards: usize,
+        factory: impl Fn(usize) -> Box<dyn MemoryPredictor>,
+    ) -> ShardedPredictionService {
+        Self::spawn_with((0..n_shards).map(&factory).collect())
+    }
+
+    /// Spawn one shard per provided predictor (at least one).
+    pub fn spawn_with(predictors: Vec<Box<dyn MemoryPredictor>>) -> ShardedPredictionService {
+        assert!(!predictors.is_empty(), "service needs at least one shard");
+        let mut txs = Vec::with_capacity(predictors.len());
+        let mut threads = Vec::with_capacity(predictors.len());
+        for (s, predictor) in predictors.into_iter().enumerate() {
+            let (tx, rx) = channel();
+            let thread = std::thread::Builder::new()
+                .name(format!("ksegments-shard-{s}"))
+                .spawn(move || model_loop(predictor, rx))
+                .expect("spawning shard model thread");
+            txs.push(tx);
+            threads.push(thread);
+        }
+        ShardedPredictionService { handle: ServiceHandle { txs }, threads }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.handle.txs.len()
     }
 
     pub fn handle(&self) -> ServiceHandle {
         self.handle.clone()
     }
 
-    /// Stop the model thread and return its final counters.
+    /// Stop all shards and return their aggregated final counters.
     pub fn shutdown(mut self) -> ServiceStats {
-        let _ = self.handle.tx.send(Request::Shutdown);
-        self.thread
-            .take()
-            .expect("already shut down")
-            .join()
-            .expect("model thread panicked")
+        ServiceStats::aggregated(&self.join_shards())
+    }
+
+    /// Stop all shards and return the per-shard final counters, in
+    /// shard order.
+    pub fn shutdown_per_shard(mut self) -> Vec<ServiceStats> {
+        self.join_shards()
+    }
+
+    fn join_shards(&mut self) -> Vec<ServiceStats> {
+        for tx in &self.handle.txs {
+            let _ = tx.send(Request::Shutdown);
+        }
+        self.threads
+            .drain(..)
+            .map(|t| t.join().expect("shard model thread panicked"))
+            .collect()
     }
 }
 
-impl Drop for PredictionService {
+impl Drop for ShardedPredictionService {
     fn drop(&mut self) {
-        if let Some(t) = self.thread.take() {
-            let _ = self.handle.tx.send(Request::Shutdown);
-            let _ = t.join();
+        if !self.threads.is_empty() {
+            for tx in &self.handle.txs {
+                let _ = tx.send(Request::Shutdown);
+            }
+            for t in self.threads.drain(..) {
+                let _ = t.join();
+            }
         }
     }
 }
 
+/// The single-model deployment — exactly the sharded service with one
+/// shard (same model loop, same handle type).
+pub struct PredictionService {
+    inner: ShardedPredictionService,
+}
+
+impl PredictionService {
+    /// Spawn the model thread around any predictor.
+    pub fn spawn(predictor: Box<dyn MemoryPredictor>) -> PredictionService {
+        PredictionService { inner: ShardedPredictionService::spawn_with(vec![predictor]) }
+    }
+
+    pub fn handle(&self) -> ServiceHandle {
+        self.inner.handle()
+    }
+
+    /// Stop the model thread and return its final counters.
+    pub fn shutdown(self) -> ServiceStats {
+        self.inner.shutdown()
+    }
+}
+
+/// One shard's model loop: block on the first request of a wakeup,
+/// then drain everything already queued and process the batch in
+/// arrival order (so completion bursts cost one wakeup, and ordering
+/// guarantees are untouched).
 fn model_loop(mut predictor: Box<dyn MemoryPredictor>, rx: Receiver<Request>) -> ServiceStats {
     let mut stats = ServiceStats::default();
-    while let Ok(req) = rx.recv() {
-        match req {
-            Request::Prime { task_type, default } => predictor.prime(&task_type, default),
-            Request::Predict { task_type, input_mib, reply } => {
-                stats.predictions += 1;
-                let _ = reply.send(predictor.predict(&task_type, input_mib));
+    let mut batch = Vec::new();
+    'serve: while let Ok(first) = rx.recv() {
+        stats.wakeups += 1;
+        batch.clear();
+        batch.push(first);
+        while let Ok(more) = rx.try_recv() {
+            batch.push(more);
+        }
+        for req in batch.drain(..) {
+            match req {
+                Request::Prime { task_type, default } => predictor.prime(&task_type, default),
+                Request::Predict { task_type, input_mib, reply } => {
+                    stats.predictions += 1;
+                    let _ = reply.send(predictor.predict(&task_type, input_mib));
+                }
+                Request::Failure { task_type, input_mib, failed, info, reply } => {
+                    stats.failures += 1;
+                    let _ = reply.send(predictor.on_failure(&task_type, input_mib, &failed, &info));
+                }
+                Request::Complete { run } => {
+                    stats.completions += 1;
+                    predictor.observe(&run);
+                }
+                Request::Stats { reply } => {
+                    let _ = reply.send(stats);
+                }
+                Request::Shutdown => break 'serve,
             }
-            Request::Failure { task_type, input_mib, failed, info, reply } => {
-                stats.failures += 1;
-                let _ = reply.send(predictor.on_failure(&task_type, input_mib, &failed, &info));
-            }
-            Request::Complete { run } => {
-                stats.completions += 1;
-                predictor.observe(&run);
-            }
-            Request::Stats { reply } => {
-                let _ = reply.send(stats);
-            }
-            Request::Shutdown => break,
         }
     }
     stats
@@ -182,15 +334,19 @@ mod tests {
     use crate::trace::UsageSeries;
     use crate::units::Seconds;
 
-    fn run(input: f64, peak: f64) -> TaskRun {
+    fn run_of(ty: &str, input: f64, peak: f64) -> TaskRun {
         let samples: Vec<f64> = (0..8).map(|j| peak * (j + 1) as f64 / 8.0).collect();
         TaskRun {
-            task_type: "w/t".into(),
+            task_type: ty.into(),
             input_mib: input,
             runtime: Seconds(16.0),
             series: UsageSeries::new(2.0, samples),
             seq: 0,
         }
+    }
+
+    fn run(input: f64, peak: f64) -> TaskRun {
+        run_of("w/t", input, peak)
     }
 
     #[test]
@@ -259,5 +415,70 @@ mod tests {
         // handle calls after shutdown must not panic the caller thread
         // (send fails silently for fire-and-forget)
         h.complete(run(1.0, 1.0));
+        assert!(h.try_predict("w/t", 1.0).is_none());
+    }
+
+    #[test]
+    fn shard_routing_is_stable_and_total() {
+        for n in 1..8 {
+            for ty in ["a", "b/c", "eager/qualimap", "sarek/bwamem", ""] {
+                let s = shard_of(ty, n);
+                assert!(s < n);
+                assert_eq!(s, shard_of(ty, n), "routing must be deterministic");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_service_partitions_types_and_aggregates_stats() {
+        let svc = ShardedPredictionService::spawn(4, |_| Box::new(DefaultConfigPredictor::new()));
+        assert_eq!(svc.n_shards(), 4);
+        let h = svc.handle();
+        for i in 0..32 {
+            let ty = format!("w/t{i}");
+            h.prime(&ty, MemMiB(512.0));
+            assert_eq!(h.predict(&ty, 1.0), Allocation::Static(MemMiB(512.0)));
+            h.complete(run_of(&ty, 1.0, 100.0));
+        }
+        let per_shard = svc.shutdown_per_shard();
+        assert_eq!(per_shard.len(), 4);
+        let total = ServiceStats::aggregated(&per_shard);
+        assert_eq!(total.predictions, 32);
+        assert_eq!(total.completions, 32);
+        // with 32 hashed types over 4 shards, no shard should be idle
+        assert!(per_shard.iter().all(|s| s.predictions > 0), "{per_shard:?}");
+    }
+
+    #[test]
+    fn sharded_completions_before_predict_per_type() {
+        // FIFO per task type must hold with multiple shards: the
+        // completions routed to a type's shard are ingested before the
+        // predict sent afterwards by the same client.
+        let svc = ShardedPredictionService::spawn(3, |_| {
+            Box::new(KSegmentsPredictor::native(4, RetryStrategy::Selective))
+        });
+        let h = svc.handle();
+        for ty in ["w/a", "w/b", "w/c", "w/d"] {
+            h.prime(ty, MemMiB(2048.0));
+            for i in 0..12 {
+                h.complete(run_of(ty, 100.0 + 10.0 * i as f64, 200.0 + 10.0 * i as f64));
+            }
+            assert!(h.predict(ty, 150.0).is_dynamic(), "{ty} predict ran before completions");
+        }
+        assert_eq!(svc.shutdown().completions, 48);
+    }
+
+    #[test]
+    fn batched_draining_counts_fewer_wakeups_than_requests() {
+        let svc = PredictionService::spawn(Box::new(DefaultConfigPredictor::new()));
+        let h = svc.handle();
+        for i in 0..200 {
+            h.complete(run(i as f64, 100.0));
+        }
+        let stats = svc.shutdown();
+        assert_eq!(stats.completions, 200);
+        // batching can never take MORE wakeups than messages (+1 for
+        // the shutdown); under any real schedule it takes far fewer
+        assert!(stats.wakeups <= stats.completions + 1, "{stats:?}");
     }
 }

@@ -18,8 +18,14 @@
 //!   synthetic nf-core workload generator calibrated to the paper's
 //!   eager/sarek traces ([`workload`]);
 //! * the **evaluation harness**: the online simulator and wastage
-//!   accounting of §IV ([`sim`], [`metrics`]) and the figure
-//!   regeneration code ([`bench_harness`]);
+//!   accounting of §IV ([`sim`], [`metrics`]), the **parallel
+//!   evaluation engine** that runs the predictor × trace × fraction
+//!   grid on a worker pool with bit-identical results at any worker
+//!   count ([`sim::parallel`]), and the figure regeneration code
+//!   ([`bench_harness`]);
+//! * the **prediction service**: the long-running coordinator a SWMS
+//!   submits to, with task types hash-partitioned across N model
+//!   threads ([`coordinator`]);
 //! * the **AOT runtime bridge**: the batched model fit is lowered from
 //!   JAX + Pallas to HLO at build time and executed through the PJRT
 //!   CPU client on the online-learning path ([`runtime`]), with a

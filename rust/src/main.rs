@@ -24,7 +24,7 @@ use std::process::ExitCode;
 use anyhow::{anyhow, bail, Context, Result};
 
 use ksegments::bench_harness::{run_fig1, run_fig4, run_fig7, run_fig8, FitterChoice};
-use ksegments::coordinator::PredictionService;
+use ksegments::coordinator::ShardedPredictionService;
 use ksegments::ml::fitter::{KsegFitter, NativeFitter};
 use ksegments::predictors::default_config::DefaultConfigPredictor;
 use ksegments::predictors::ksegments::{KSegmentsPredictor, RetryStrategy};
@@ -43,17 +43,23 @@ ksegments — dynamic memory prediction for scientific workflow tasks
 USAGE:
   ksegments generate  --workflow eager|sarek [--seed N] --out FILE [--format jsonl|csv]
   ksegments simulate  --method METHOD [--frac F] [--seed N] [--workflow W] [--xla]
-  ksegments fig7      [--seed N] [--xla]
-  ksegments fig8      [--seed N] [--xla]
+  ksegments fig7      [--seed N] [--xla] [--workers N]
+  ksegments fig8      [--seed N] [--xla] [--workers N]
   ksegments fig4      [--seed N] [--xla]
   ksegments fig1      [--seed N]
-  ksegments ablate    [--seed N]
-  ksegments report    [--seed N] [--xla] [--out FILE]
+  ksegments ablate    [--seed N] [--workers N]
+  ksegments report    [--seed N] [--xla] [--out FILE] [--workers N]
   ksegments validate-runtime
-  ksegments serve     [--seed N]
+  ksegments serve     [--seed N] [--shards N] [--workers N]
 
 METHODS: default | ppm | ppm-improved | lr | ksegments-selective |
          ksegments-partial | ksegments-adaptive
+
+--workers defaults to the available cores. For fig7/fig8/ablate/report
+it sizes the evaluation pool and results are identical for any worker
+count; for serve it is the number of SWMS client threads driving demo
+traffic. --shards is the number of model threads the prediction
+service partitions task types across (default 4).
 ";
 
 /// Hand-rolled `--key value` / `--flag` parser.
@@ -101,6 +107,22 @@ impl Args {
         } else {
             FitterChoice::Native
         }
+    }
+
+    fn workers(&self) -> usize {
+        self.kv
+            .get("workers")
+            .and_then(|s| s.parse().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or_else(ksegments::sim::default_workers)
+    }
+
+    fn shards(&self) -> usize {
+        self.kv
+            .get("shards")
+            .and_then(|s| s.parse().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or(4)
     }
 }
 
@@ -214,7 +236,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_fig7(args: &Args) -> Result<()> {
-    let results = run_fig7(args.seed(), args.fitter());
+    let results = run_fig7(args.seed(), args.fitter(), args.workers());
     println!("{}", results.render_wastage());
     println!("{}", results.render_wins());
     println!("{}", results.render_retries());
@@ -225,7 +247,7 @@ fn cmd_fig7(args: &Args) -> Result<()> {
 fn cmd_fig8(args: &Args) -> Result<()> {
     let ks: Vec<usize> = (1..=15).collect();
     for task in ["eager/qualimap", "eager/adapter_removal"] {
-        let r = run_fig8(args.seed(), args.fitter(), task, &ks);
+        let r = run_fig8(args.seed(), args.fitter(), task, &ks, args.workers());
         println!("{}", r.render());
     }
     Ok(())
@@ -276,13 +298,14 @@ fn cmd_validate_runtime() -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    // Demo: run the eager workflow through the prediction service from
-    // multiple SWMS worker threads.
+    // Demo: run the eager workflow through the sharded prediction
+    // service from multiple SWMS worker threads.
     let trace = generate_workflow_trace(&eager_workflow(), args.seed());
-    let svc = PredictionService::spawn(Box::new(KSegmentsPredictor::native(
-        4,
-        RetryStrategy::Selective,
-    )));
+    let shards = args.shards();
+    let n_clients = args.workers();
+    let svc = ShardedPredictionService::spawn(shards, |_| {
+        Box::new(KSegmentsPredictor::native(4, RetryStrategy::Selective))
+    });
     let h = svc.handle();
     for ty in trace.task_types() {
         if let Some(mem) = trace.default_alloc(ty) {
@@ -290,7 +313,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     let runs: Vec<_> = trace.all_runs_ordered().into_iter().cloned().collect();
-    let chunk = runs.len().div_ceil(4);
+    let chunk = runs.len().div_ceil(n_clients).max(1);
     let mut joins = Vec::new();
     for (w, part) in runs.chunks(chunk).enumerate() {
         let h = svc.handle();
@@ -307,10 +330,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     for j in joins {
         j.join().map_err(|_| anyhow!("worker panicked"))?;
     }
-    let stats = svc.shutdown();
+    let per_shard = svc.shutdown_per_shard();
+    for (s, stats) in per_shard.iter().enumerate() {
+        println!(
+            "shard {s}: {} predictions, {} completions, {} failures, {} wakeups",
+            stats.predictions, stats.completions, stats.failures, stats.wakeups
+        );
+    }
+    let total = ksegments::coordinator::ServiceStats::aggregated(&per_shard);
     println!(
-        "service processed {} predictions, {} completions, {} failures",
-        stats.predictions, stats.completions, stats.failures
+        "service ({shards} shards) processed {} predictions, {} completions, {} failures",
+        total.predictions, total.completions, total.failures
     );
     Ok(())
 }
@@ -331,12 +361,18 @@ fn real_main() -> Result<()> {
             Ok(())
         }
         "ablate" => {
-            println!("{}", ksegments::bench_harness::ablation::run_all(args.seed()));
+            println!(
+                "{}",
+                ksegments::bench_harness::ablation::run_all(args.seed(), args.workers())
+            );
             Ok(())
         }
         "report" => {
-            let text =
-                ksegments::bench_harness::report::full_report(args.seed(), args.fitter());
+            let text = ksegments::bench_harness::report::full_report(
+                args.seed(),
+                args.fitter(),
+                args.workers(),
+            );
             match args.kv.get("out") {
                 Some(path) => {
                     std::fs::write(path, &text)?;

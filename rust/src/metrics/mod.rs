@@ -51,6 +51,17 @@ impl TaskReport {
             self.total_retries as f64 / self.n_scored as f64
         }
     }
+
+    /// Fold another report for the **same task type** into this one
+    /// (e.g. per-shard or per-cell partial reports). Totals add; the
+    /// per-run samples are concatenated in the order given.
+    pub fn merge(&mut self, other: TaskReport) {
+        assert_eq!(self.task_type, other.task_type, "merging different task types");
+        self.n_scored += other.n_scored;
+        self.total_wastage += other.total_wastage;
+        self.total_retries += other.total_retries;
+        self.per_run_wastage.extend(other.per_run_wastage);
+    }
 }
 
 /// All evaluated tasks for one method at one training fraction.
@@ -88,15 +99,36 @@ impl MethodReport {
         self.tasks.iter().find(|t| t.task_type == ty)
     }
 
-    /// Fold another report (same method, same fraction, disjoint task
-    /// set — e.g. the second workflow) into this one.
+    /// Fold another report (same method, same fraction) into this one.
+    ///
+    /// Task types present in both are combined via [`TaskReport::merge`]
+    /// (per-shard partials of one type); new types are appended in the
+    /// order they arrive, so disjoint task sets (e.g. the second
+    /// workflow's types) reproduce the old concatenation exactly.
     pub fn merge(&mut self, other: MethodReport) {
         assert_eq!(self.method, other.method, "merging different methods");
         assert!(
             (self.training_frac - other.training_frac).abs() < 1e-12,
             "merging different training fractions"
         );
-        self.tasks.extend(other.tasks);
+        for task in other.tasks {
+            match self.tasks.iter_mut().find(|t| t.task_type == task.task_type) {
+                Some(mine) => mine.merge(task),
+                None => self.tasks.push(task),
+            }
+        }
+    }
+
+    /// Merge an ordered sequence of per-cell reports into one; `None`
+    /// for an empty sequence. The grid uses this to combine per-trace
+    /// cells in deterministic trace order.
+    pub fn merged(reports: impl IntoIterator<Item = MethodReport>) -> Option<MethodReport> {
+        let mut it = reports.into_iter();
+        let mut acc = it.next()?;
+        for rep in it {
+            acc.merge(rep);
+        }
+        Some(acc)
     }
 }
 
@@ -198,6 +230,57 @@ mod tests {
         assert_eq!(r.avg_retries(), 2.0);
         assert!(r.task("a").is_some());
         assert!(r.task("zzz").is_none());
+    }
+
+    #[test]
+    fn task_report_merge_adds_totals() {
+        let mut a = task("a", &[1.0, 2.0], &[0, 1]);
+        let b = task("a", &[3.0], &[2]);
+        a.merge(b);
+        assert_eq!(a.n_scored, 3);
+        assert_eq!(a.total_wastage.0, 6.0);
+        assert_eq!(a.total_retries, 3);
+        assert_eq!(a.per_run_wastage, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "merging different task types")]
+    fn task_report_merge_rejects_mismatched_types() {
+        let mut a = task("a", &[1.0], &[0]);
+        a.merge(task("b", &[1.0], &[0]));
+    }
+
+    #[test]
+    fn method_report_merge_disjoint_appends() {
+        let mut a = MethodReport::new("m", 0.5, vec![task("a", &[1.0], &[0])]);
+        a.merge(MethodReport::new("m", 0.5, vec![task("b", &[2.0], &[1])]));
+        let types: Vec<&str> = a.tasks.iter().map(|t| t.task_type.as_str()).collect();
+        assert_eq!(types, vec!["a", "b"]);
+        assert_eq!(a.total_wastage_gbs(), 3.0);
+    }
+
+    #[test]
+    fn method_report_merge_combines_shared_types() {
+        let mut a = MethodReport::new("m", 0.5, vec![task("a", &[1.0], &[0])]);
+        a.merge(MethodReport::new("m", 0.5, vec![task("a", &[2.0], &[3])]));
+        assert_eq!(a.tasks.len(), 1);
+        assert_eq!(a.tasks[0].n_scored, 2);
+        assert_eq!(a.tasks[0].total_retries, 3);
+        assert_eq!(a.total_wastage_gbs(), 3.0);
+    }
+
+    #[test]
+    fn merged_over_sequence() {
+        assert!(MethodReport::merged(std::iter::empty()).is_none());
+        let reps = vec![
+            MethodReport::new("m", 0.5, vec![task("a", &[1.0], &[0])]),
+            MethodReport::new("m", 0.5, vec![task("b", &[2.0], &[0])]),
+            MethodReport::new("m", 0.5, vec![task("a", &[4.0], &[1])]),
+        ];
+        let m = MethodReport::merged(reps).unwrap();
+        assert_eq!(m.tasks.len(), 2);
+        assert_eq!(m.total_wastage_gbs(), 7.0);
+        assert_eq!(m.total_retries(), 1);
     }
 
     #[test]

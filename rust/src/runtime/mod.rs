@@ -10,13 +10,24 @@
 //! Interchange is HLO **text**: jax ≥ 0.5 serialized protos use 64-bit
 //! instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §2).
+//!
+//! The PJRT pieces need the `xla` crate (xla-rs bindings over a
+//! vendored `xla_extension`), which not every build environment
+//! carries — they are gated behind the `xla` cargo feature. Without
+//! it, [`ArtifactRegistry::load`]/[`XlaFitter::load_default`] return
+//! an error explaining the gate and every caller falls back to the
+//! bit-mirrored [`NativeFitter`], so the default build has no native
+//! dependencies beyond anyhow.
 
 use std::collections::BTreeMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
+#[cfg(feature = "xla")]
+use std::path::PathBuf;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::ml::fitter::{FitInput, FitResult, KsegFitter, NativeFitter};
+#[cfg(feature = "xla")]
 use crate::ml::linreg::LinReg;
 use crate::util::json::Json;
 
@@ -50,6 +61,7 @@ impl Manifest {
 }
 
 /// PJRT CPU client + lazily compiled per-k executables.
+#[cfg(feature = "xla")]
 pub struct ArtifactRegistry {
     dir: PathBuf,
     manifest: Manifest,
@@ -60,8 +72,10 @@ pub struct ArtifactRegistry {
 // SAFETY: the registry is only ever used behind exclusive references
 // (&mut self on every entry point), so cross-thread use is serialized.
 // The PJRT CPU client itself is thread-compatible under that regime.
+#[cfg(feature = "xla")]
 unsafe impl Send for ArtifactRegistry {}
 
+#[cfg(feature = "xla")]
 impl ArtifactRegistry {
     /// Load the manifest and start the PJRT CPU client.
     pub fn load(dir: &Path) -> Result<ArtifactRegistry> {
@@ -194,6 +208,7 @@ impl ArtifactRegistry {
 /// — the fallback is bit-mirrored math, so behaviour is identical up
 /// to f32-vs-f64 rounding (bounded by the differential tests in
 /// rust/tests/integration_runtime.rs).
+#[cfg(feature = "xla")]
 pub struct XlaFitter {
     registry: ArtifactRegistry,
     native: NativeFitter,
@@ -202,6 +217,7 @@ pub struct XlaFitter {
     pub native_fits: u64,
 }
 
+#[cfg(feature = "xla")]
 impl XlaFitter {
     pub fn new(registry: ArtifactRegistry) -> XlaFitter {
         XlaFitter { registry, native: NativeFitter, xla_fits: 0, native_fits: 0 }
@@ -216,6 +232,7 @@ impl XlaFitter {
     }
 }
 
+#[cfg(feature = "xla")]
 impl KsegFitter for XlaFitter {
     fn backend(&self) -> &'static str {
         "xla-pjrt"
@@ -236,6 +253,86 @@ impl KsegFitter for XlaFitter {
                 }
             }
         }
+        self.native_fits += 1;
+        self.native.fit(input, k)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Feature-gated stubs: same public API, but loading always fails with
+// a message naming the gate, so every caller takes its native-fallback
+// branch and the default build needs no xla crate.
+// ---------------------------------------------------------------------
+
+#[cfg(not(feature = "xla"))]
+const NO_XLA: &str = "built without the `xla` cargo feature — the PJRT runtime is \
+                      unavailable; rebuild with `--features xla` (requires the xla-rs \
+                      bindings and a vendored xla_extension, see DESIGN.md §2)";
+
+/// Stub registry (crate built without the `xla` feature): loading
+/// always fails after surfacing any artifact errors first.
+#[cfg(not(feature = "xla"))]
+pub struct ArtifactRegistry {
+    manifest: Manifest,
+}
+
+#[cfg(not(feature = "xla"))]
+impl ArtifactRegistry {
+    pub fn load(dir: &Path) -> Result<ArtifactRegistry> {
+        let _ = Manifest::load(dir)?;
+        bail!("{NO_XLA}");
+    }
+
+    pub fn load_default() -> Result<ArtifactRegistry> {
+        Self::load(Path::new("artifacts"))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn available_ks(&self) -> Vec<usize> {
+        self.manifest.fits.keys().copied().collect()
+    }
+
+    pub fn fit(&mut self, _input: &FitInput, k: usize) -> Result<FitResult> {
+        bail!("cannot run the k={k} fit: {NO_XLA}");
+    }
+}
+
+/// Stub fitter (crate built without the `xla` feature): never
+/// constructible via [`XlaFitter::load_default`]; fits, were one ever
+/// built, would all take the native path.
+#[cfg(not(feature = "xla"))]
+pub struct XlaFitter {
+    registry: ArtifactRegistry,
+    native: NativeFitter,
+    pub xla_fits: u64,
+    pub native_fits: u64,
+}
+
+#[cfg(not(feature = "xla"))]
+impl XlaFitter {
+    pub fn new(registry: ArtifactRegistry) -> XlaFitter {
+        XlaFitter { registry, native: NativeFitter, xla_fits: 0, native_fits: 0 }
+    }
+
+    pub fn load_default() -> Result<XlaFitter> {
+        Ok(XlaFitter::new(ArtifactRegistry::load_default()?))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        self.registry.manifest()
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+impl KsegFitter for XlaFitter {
+    fn backend(&self) -> &'static str {
+        "native-fallback (no xla feature)"
+    }
+
+    fn fit(&mut self, input: &FitInput, k: usize) -> FitResult {
         self.native_fits += 1;
         self.native.fit(input, k)
     }

@@ -2,8 +2,12 @@
 //! through a predictor, accounting wastage and retries.
 
 mod attempt;
+pub mod parallel;
 
 pub use attempt::{simulate_attempt, AttemptOutcome};
+pub use parallel::{
+    default_workers, eval_cell, parallel_map, EvalCell, EvalGrid, GridResults, PredictorFactory,
+};
 
 use crate::metrics::{MethodReport, TaskReport};
 use crate::predictors::{Allocation, MemoryPredictor};

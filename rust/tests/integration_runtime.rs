@@ -17,6 +17,10 @@ use ksegments::units::MemMiB;
 use ksegments::workload::{eager_workflow, generate_workflow_trace};
 
 fn artifacts_available() -> bool {
+    if !cfg!(feature = "xla") {
+        eprintln!("SKIP: built without the `xla` feature — PJRT runtime gated off");
+        return false;
+    }
     let ok = Path::new("artifacts/manifest.json").exists();
     if !ok {
         eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");

@@ -1,0 +1,83 @@
+//! Concurrency/determinism lockdown for the parallel evaluation
+//! engine: the `EvalGrid` must produce **bit-identical** reports for
+//! any worker count — parallelism is a wall-clock optimisation, never
+//! a source of numeric drift. Every figure in EXPERIMENTS.md depends
+//! on this.
+
+use ksegments::bench_harness::{fig7_makers, method_names, paper_traces, run_fig8, FitterChoice};
+use ksegments::sim::{parallel_map, EvalGrid};
+
+/// The headline satellite: the full fig7 grid (6 methods × 3 fractions
+/// × 2 workflows) at seed 42 is bit-identical at workers = 1 and
+/// workers = 8 — same wastage, same retries, same task ordering.
+#[test]
+fn fig7_grid_bit_identical_across_worker_counts() {
+    let traces = paper_traces(42);
+    let fractions = vec![0.25, 0.5, 0.75];
+    let grid = EvalGrid::new(fig7_makers(FitterChoice::Native), &traces, fractions);
+    let seq = grid.run(1);
+    let par = grid.run(8);
+
+    // whole-structure equality first (MethodReport is PartialEq all
+    // the way down to per-run wastage samples) ...
+    assert_eq!(seq, par, "workers=8 diverged from workers=1");
+
+    // ... then the paper-shaped spot checks, so a regression prints
+    // something legible instead of a giant struct diff.
+    assert_eq!(seq.by_fraction.len(), 3);
+    for (f, (s_row, p_row)) in seq.by_fraction.iter().zip(&par.by_fraction).enumerate() {
+        assert_eq!(s_row.len(), 6, "fraction {f} must cover the 6-method roster");
+        for (s, p) in s_row.iter().zip(p_row) {
+            assert_eq!(s.method, p.method);
+            assert_eq!(s.total_wastage_gbs().to_bits(), p.total_wastage_gbs().to_bits());
+            assert_eq!(s.total_retries(), p.total_retries());
+            let s_types: Vec<&str> = s.tasks.iter().map(|t| t.task_type.as_str()).collect();
+            let p_types: Vec<&str> = p.tasks.iter().map(|t| t.task_type.as_str()).collect();
+            assert_eq!(s_types, p_types, "task ordering changed under parallelism");
+        }
+    }
+
+    // method axis order must match the published roster order
+    let grid_methods: Vec<String> =
+        seq.by_fraction[0].iter().map(|r| r.method.clone()).collect();
+    assert_eq!(grid_methods, method_names());
+}
+
+/// The fig8 k-sweep goes through the same pool and must be equally
+/// scheduling-independent.
+#[test]
+fn fig8_sweep_identical_across_worker_counts() {
+    let ks: Vec<usize> = (1..=8).collect();
+    let seq = run_fig8(42, FitterChoice::Native, "eager/adapter_removal", &ks, 1);
+    let par = run_fig8(42, FitterChoice::Native, "eager/adapter_removal", &ks, 8);
+    assert_eq!(seq.task, par.task);
+    assert_eq!(seq.sweep.len(), par.sweep.len());
+    for ((k_s, w_s), (k_p, w_p)) in seq.sweep.iter().zip(&par.sweep) {
+        assert_eq!(k_s, k_p);
+        assert_eq!(w_s.to_bits(), w_p.to_bits(), "k={k_s} wastage differs by bits");
+    }
+}
+
+/// parallel_map under a worker pool larger than the work list, odd
+/// pool sizes, and heavy oversubscription keeps output order.
+#[test]
+fn parallel_map_order_under_contention() {
+    let n = 500;
+    let expect: Vec<usize> = (0..n).map(|i| i.wrapping_mul(2654435761)).collect();
+    for workers in [1, 2, 3, 7, 16, 64] {
+        let got = parallel_map(n, workers, |i| i.wrapping_mul(2654435761));
+        assert_eq!(got, expect, "workers={workers}");
+    }
+}
+
+/// Cells see an immutable trace: running the same grid twice (any
+/// worker counts) gives the same answer — no hidden shared state
+/// between runs or cells.
+#[test]
+fn grid_runs_are_repeatable() {
+    let traces = paper_traces(7);
+    let grid = EvalGrid::new(fig7_makers(FitterChoice::Native), &traces, vec![0.5]);
+    let a = grid.run(4);
+    let b = grid.run(3);
+    assert_eq!(a, b, "repeat run with different pool size diverged");
+}

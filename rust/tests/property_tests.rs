@@ -3,6 +3,7 @@
 //! deterministic RNG — failures print the seed, so every case is
 //! replayable).
 
+use ksegments::metrics::{MethodReport, TaskReport};
 use ksegments::ml::fitter::{FitInput, KsegFitter, NativeFitter};
 use ksegments::ml::segmentation::{seg_peaks, segment_bounds};
 use ksegments::ml::step_fn::StepFunction;
@@ -11,7 +12,7 @@ use ksegments::predictors::{Allocation, FailureInfo, MemoryPredictor};
 use ksegments::rng::Rng;
 use ksegments::sim::{simulate_attempt, AttemptOutcome};
 use ksegments::trace::{TaskRun, UsageSeries};
-use ksegments::units::{MemMiB, Seconds};
+use ksegments::units::{GbSeconds, MemMiB, Seconds};
 
 const CASES: u64 = 300;
 
@@ -225,6 +226,126 @@ fn prop_retry_loop_progresses() {
                     alloc = next;
                 }
             }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Report-merging properties (the parallel grid and the sharded service
+// both combine partial reports; order of combination must not matter).
+// ---------------------------------------------------------------------
+
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0)
+}
+
+/// TaskReport: merging per-run chunks in any permutation reproduces
+/// the single sequential pass — counts exactly, float totals to within
+/// addition-reordering tolerance, samples as a multiset.
+#[test]
+fn prop_task_report_merge_permutation_invariant() {
+    for seed in 0..200 {
+        let mut rng = Rng::new(seed + 70_000);
+        let n_runs = 1 + rng.below(60) as usize;
+        let runs: Vec<(f64, u32)> = (0..n_runs)
+            .map(|_| (rng.uniform(0.0, 500.0), rng.below(6) as u32))
+            .collect();
+
+        // single sequential pass
+        let mut sequential = TaskReport::new("t");
+        for &(w, r) in &runs {
+            sequential.record(GbSeconds(w), r);
+        }
+
+        // chop into chunks, shuffle the chunk order, merge
+        let n_chunks = 1 + rng.below(8) as usize;
+        let chunk_len = n_runs.div_ceil(n_chunks);
+        let mut chunks: Vec<TaskReport> = runs
+            .chunks(chunk_len)
+            .map(|chunk| {
+                let mut part = TaskReport::new("t");
+                for &(w, r) in chunk {
+                    part.record(GbSeconds(w), r);
+                }
+                part
+            })
+            .collect();
+        rng.shuffle(&mut chunks);
+        let mut merged = TaskReport::new("t");
+        for part in chunks {
+            merged.merge(part);
+        }
+
+        assert_eq!(merged.n_scored, sequential.n_scored, "seed {seed}");
+        assert_eq!(merged.total_retries, sequential.total_retries, "seed {seed}");
+        assert!(
+            close(merged.total_wastage.0, sequential.total_wastage.0),
+            "seed {seed}: {} vs {}",
+            merged.total_wastage.0,
+            sequential.total_wastage.0
+        );
+        assert!(close(merged.avg_wastage_gbs(), sequential.avg_wastage_gbs()), "seed {seed}");
+        assert!(close(merged.avg_retries(), sequential.avg_retries()), "seed {seed}");
+        let mut a = merged.per_run_wastage.clone();
+        let mut b = sequential.per_run_wastage.clone();
+        a.sort_by(f64::total_cmp);
+        b.sort_by(f64::total_cmp);
+        assert_eq!(a, b, "seed {seed}: per-run samples are not the same multiset");
+    }
+}
+
+/// MethodReport: merging per-(task, chunk) partial reports in any
+/// permutation matches the sequential single-report totals, per task
+/// type and overall.
+#[test]
+fn prop_method_report_merge_permutation_invariant() {
+    for seed in 0..200 {
+        let mut rng = Rng::new(seed + 80_000);
+        let n_types = 1 + rng.below(6) as usize;
+        let types: Vec<String> = (0..n_types).map(|i| format!("w/t{i}")).collect();
+
+        // sequential reference: one report, tasks recorded in type order
+        let mut parts: Vec<MethodReport> = Vec::new();
+        let mut reference_tasks: Vec<TaskReport> = Vec::new();
+        for ty in &types {
+            let n_runs = 1 + rng.below(30) as usize;
+            let runs: Vec<(f64, u32)> = (0..n_runs)
+                .map(|_| (rng.uniform(0.0, 300.0), rng.below(4) as u32))
+                .collect();
+            let mut whole = TaskReport::new(ty);
+            for &(w, r) in &runs {
+                whole.record(GbSeconds(w), r);
+            }
+            reference_tasks.push(whole);
+            // split this type's runs into partial single-task reports
+            let chunk_len = 1 + rng.below(n_runs as u64) as usize;
+            for chunk in runs.chunks(chunk_len) {
+                let mut part = TaskReport::new(ty);
+                for &(w, r) in chunk {
+                    part.record(GbSeconds(w), r);
+                }
+                parts.push(MethodReport::new("m", 0.5, vec![part]));
+            }
+        }
+        let reference = MethodReport::new("m", 0.5, reference_tasks);
+
+        rng.shuffle(&mut parts);
+        let merged = MethodReport::merged(parts).expect("non-empty");
+
+        assert_eq!(merged.tasks.len(), reference.tasks.len(), "seed {seed}");
+        assert_eq!(merged.total_retries(), reference.total_retries(), "seed {seed}");
+        assert!(
+            close(merged.total_wastage_gbs(), reference.total_wastage_gbs()),
+            "seed {seed}"
+        );
+        assert!(close(merged.avg_wastage_gbs(), reference.avg_wastage_gbs()), "seed {seed}");
+        assert!(close(merged.avg_retries(), reference.avg_retries()), "seed {seed}");
+        for ty in &types {
+            let m = merged.task(ty).expect("type present after merge");
+            let r = reference.task(ty).unwrap();
+            assert_eq!(m.n_scored, r.n_scored, "seed {seed} type {ty}");
+            assert_eq!(m.total_retries, r.total_retries, "seed {seed} type {ty}");
+            assert!(close(m.total_wastage.0, r.total_wastage.0), "seed {seed} type {ty}");
         }
     }
 }

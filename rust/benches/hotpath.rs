@@ -11,7 +11,11 @@
 //! * `EvalGrid` throughput — the parallel evaluation engine at 1
 //!   worker vs all cores;
 //! * `ShardedPredictionService` throughput — concurrent predict
-//!   traffic at 1 shard vs 4 shards.
+//!   traffic at 1 shard vs 4 shards;
+//! * `sched::schedule_trace` — the discrete-event scheduler loop under
+//!   both reservation policies;
+//! * `TsDb::range_max` — the segment-peak query (binary-searched
+//!   bounds vs the former linear scan).
 
 use ksegments::bench_harness::{bench, black_box, time_once};
 use ksegments::coordinator::ShardedPredictionService;
@@ -188,4 +192,35 @@ fn main() {
         let stats = svc.shutdown();
         assert_eq!(stats.predictions, 8000);
     }
+
+    // -- discrete-event scheduler loop -----------------------------------
+    use ksegments::cluster::NodeSpec;
+    use ksegments::sched::{schedule_trace, ReservationPolicy, SchedConfig};
+    let sched_trace = generate_workflow_trace(&eager_workflow(), 42);
+    for policy in [ReservationPolicy::StaticPeak, ReservationPolicy::SegmentWise] {
+        let cfg = SchedConfig {
+            policy,
+            nodes: vec![NodeSpec { mem: MemMiB::from_gib(32.0), cores: 32 }; 2],
+            seed: 42,
+            ..SchedConfig::default()
+        };
+        bench(&format!("sched/schedule_trace eager ({})", policy.name()), 5, 3, || {
+            let mut p = DefaultConfigPredictor::new();
+            schedule_trace(black_box(&sched_trace), &mut p, &cfg)
+        });
+    }
+
+    // -- tsdb range queries ----------------------------------------------
+    use ksegments::tsdb::{Point, SeriesKey, TsDb};
+    let mut db = TsDb::new();
+    let tkey = SeriesKey::mem("bench/task", 0);
+    for i in 0..100_000u64 {
+        db.append(&tkey, Point { t: i as f64 * 2.0, value: (i % 977) as f64 });
+    }
+    bench("tsdb/range_max 100k-points narrow-window", 20, 2_000, || {
+        db.range_max(black_box(&tkey), black_box(60_000.0), black_box(60_240.0))
+    });
+    bench("tsdb/range 100k-points narrow-window", 20, 2_000, || {
+        db.range(black_box(&tkey), black_box(60_000.0), black_box(60_240.0))
+    });
 }

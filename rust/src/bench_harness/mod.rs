@@ -3,15 +3,19 @@
 //! * [`timer`] — minimal criterion-style measurement (offline cache has
 //!   no criterion);
 //! * [`figures`] — one entry point per paper figure (Fig. 1, 4, 7a–c,
-//!   8), shared by the CLI and the `cargo bench` targets.
+//!   8), shared by the CLI and the `cargo bench` targets;
+//! * [`throughput`] — the scheduling sweep: makespan / queue-wait /
+//!   packing tables per (policy × predictor × arrival rate).
 
 pub mod ablation;
 pub mod figures;
 pub mod report;
+pub mod throughput;
 pub mod timer;
 
 pub use figures::{
     evaluate_method, fig7_makers, method_names, method_roster, paper_traces, run_fig1, run_fig4,
     run_fig7, run_fig8, Fig7Results, Fig8Results, FitterChoice,
 };
+pub use throughput::{run_throughput, throughput_makers, ThroughputResults};
 pub use timer::{bench, black_box, time_once, Measurement};

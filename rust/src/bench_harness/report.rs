@@ -5,6 +5,7 @@
 
 use crate::bench_harness::ablation::run_all as run_ablations;
 use crate::bench_harness::figures::{run_fig1, run_fig4, run_fig7, run_fig8, FitterChoice};
+use crate::bench_harness::throughput::run_throughput;
 
 /// Build the complete experiments report (may take ~seconds); the
 /// fig7/fig8 grids and the ablation suite fan out over `workers`
@@ -38,6 +39,14 @@ pub fn full_report(seed: u64, choice: FitterChoice, workers: usize) -> String {
         out.push('\n');
     }
 
+    let sweep = run_throughput(seed, &[2.0, 5.0, 10.0], workers);
+    out.push_str(&sweep.render_makespan());
+    out.push('\n');
+    out.push_str(&sweep.render_queue_wait());
+    out.push('\n');
+    out.push_str(&sweep.render_packing());
+    out.push('\n');
+
     out.push_str(&run_ablations(seed, workers));
     out
 }
@@ -59,6 +68,7 @@ mod tests {
             "Fig 7b",
             "Fig 7c",
             "Fig 8",
+            "Throughput — makespan",
             "Ablation — error offsets",
             "fixed vs adaptive k",
         ] {

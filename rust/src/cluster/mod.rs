@@ -6,6 +6,17 @@
 //! baseline's failure policy is "assign a node's maximum amount of
 //! memory" — so node capacity is load-bearing for reproducing Fig. 7
 //! (it is exactly what makes original PPM waste so much, §IV-E).
+//!
+//! Beyond the single-node evaluation setup, the cluster supports
+//! **heterogeneous** node specs and **grow-able** reservations: the
+//! discrete-event scheduler ([`crate::sched`]) places a task with its
+//! first-segment allocation and grows the reservation in place at each
+//! segment boundary of the k-Segments step function. Growing can fail
+//! under contention — that is the scheduler's `grow_denials` signal.
+
+mod profile;
+
+pub use profile::TimeProfile;
 
 use crate::units::MemMiB;
 
@@ -62,30 +73,55 @@ impl Node {
         }
     }
 
+    /// Grow an existing reservation in place by `delta` MiB. Unlike
+    /// [`Self::reserve`], a denied grow does not count as a rejection —
+    /// it is a contention event the scheduler accounts separately.
+    pub fn grow(&mut self, delta: MemMiB) -> bool {
+        if delta.0 <= 0.0 {
+            return true;
+        }
+        if self.reserved + delta.0 <= self.spec.mem.0 + 1e-9 {
+            self.reserved += delta.0;
+            true
+        } else {
+            false
+        }
+    }
+
     pub fn release(&mut self, mem: MemMiB) {
         self.reserved = (self.reserved - mem.0).max(0.0);
     }
 }
 
 /// Reservation handle returned by the resource manager; releasing it
-/// returns the memory to its node.
+/// returns the memory to its node. `mem` tracks the *current* size,
+/// including any grows applied since placement.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Reservation {
     pub node_idx: usize,
     pub mem: MemMiB,
 }
 
-/// A homogeneous cluster with first-fit placement — the substrate the
-/// simulated SWMS submits to.
+/// A cluster with first-fit placement — the substrate the simulated
+/// SWMS submits to. Nodes may be heterogeneous.
 #[derive(Debug, Clone)]
 pub struct Cluster {
     nodes: Vec<Node>,
+    /// Placement attempts that failed on **every** node (the
+    /// cluster-wide rejection the scheduler's queue-wait comes from).
+    pub failed_placements: u64,
 }
 
 impl Cluster {
+    /// Homogeneous cluster of `n_nodes` identical nodes.
     pub fn new(n_nodes: usize, spec: NodeSpec) -> Cluster {
-        assert!(n_nodes > 0);
-        Cluster { nodes: (0..n_nodes).map(|_| Node::new(spec)).collect() }
+        Self::heterogeneous((0..n_nodes).map(|_| spec).collect())
+    }
+
+    /// Cluster from an explicit (possibly heterogeneous) node list.
+    pub fn heterogeneous(specs: Vec<NodeSpec>) -> Cluster {
+        assert!(!specs.is_empty(), "cluster needs at least one node");
+        Cluster { nodes: specs.into_iter().map(Node::new).collect(), failed_placements: 0 }
     }
 
     /// Single paper-testbed node (the evaluation setup).
@@ -102,7 +138,8 @@ impl Cluster {
     }
 
     /// Capacity of the largest node — what "assign the node's maximum
-    /// memory" resolves to for the PPM failure policy.
+    /// memory" resolves to for the PPM failure policy, and the ceiling
+    /// any placeable allocation must respect.
     pub fn node_max_mem(&self) -> MemMiB {
         self.nodes
             .iter()
@@ -111,13 +148,48 @@ impl Cluster {
     }
 
     /// First-fit reservation across nodes.
+    ///
+    /// Every node probed before the successful one counts a rejection
+    /// on that node (previously the free-memory pre-check short-
+    /// circuited `Node::reserve`, making per-node rejections invisible);
+    /// an attempt that fits nowhere additionally increments
+    /// [`Self::failed_placements`].
     pub fn reserve(&mut self, mem: MemMiB) -> Option<Reservation> {
         for (i, node) in self.nodes.iter_mut().enumerate() {
-            if node.free().0 >= mem.0 && node.reserve(mem) {
+            if node.reserve(mem) {
                 return Some(Reservation { node_idx: i, mem });
             }
         }
+        self.failed_placements += 1;
         None
+    }
+
+    /// Targeted reservation on one node (the scheduler picks nodes via
+    /// its time-indexed ledgers, then reserves here); rejections count
+    /// on that node as with first-fit probing.
+    pub fn reserve_on(&mut self, node_idx: usize, mem: MemMiB) -> Option<Reservation> {
+        if self.nodes[node_idx].reserve(mem) {
+            Some(Reservation { node_idx, mem })
+        } else {
+            None
+        }
+    }
+
+    /// Mutable node access for scheduler-level accounting (e.g.
+    /// counting a ledger rejection on the node that was probed).
+    pub fn node_mut(&mut self, node_idx: usize) -> &mut Node {
+        &mut self.nodes[node_idx]
+    }
+
+    /// Grow `r` in place by `delta`; false (reservation unchanged) if
+    /// the node cannot supply the delta.
+    pub fn grow(&mut self, r: &mut Reservation, delta: MemMiB) -> bool {
+        if self.nodes[r.node_idx].grow(delta) {
+            r.mem += delta;
+            true
+        } else {
+            false
+        }
     }
 
     pub fn release(&mut self, r: Reservation) {
@@ -127,6 +199,21 @@ impl Cluster {
     /// Total free memory across nodes.
     pub fn total_free(&self) -> MemMiB {
         self.nodes.iter().map(|n| n.free()).sum()
+    }
+
+    /// Total reserved memory across nodes.
+    pub fn total_reserved(&self) -> MemMiB {
+        self.nodes.iter().map(|n| n.reserved()).sum()
+    }
+
+    /// Total memory capacity across nodes.
+    pub fn total_capacity(&self) -> MemMiB {
+        self.nodes.iter().map(|n| n.spec.mem).sum()
+    }
+
+    /// Sum of per-node rejection counters (probes that did not fit).
+    pub fn total_rejections(&self) -> u64 {
+        self.nodes.iter().map(|n| n.rejected).sum()
     }
 }
 
@@ -170,6 +257,76 @@ mod tests {
     }
 
     #[test]
+    fn probed_nodes_count_rejections() {
+        // Node 0 is full; a request that lands on node 1 must still
+        // count a rejection on node 0 (this was the invisible-rejection
+        // bug: the free() pre-check skipped Node::reserve entirely).
+        let mut c = Cluster::new(2, NodeSpec { mem: MemMiB(1000.0), cores: 4 });
+        let _ = c.reserve(MemMiB(900.0)).unwrap();
+        let r = c.reserve(MemMiB(500.0)).unwrap();
+        assert_eq!(r.node_idx, 1);
+        assert_eq!(c.nodes()[0].rejected, 1);
+        assert_eq!(c.nodes()[1].rejected, 0);
+        assert_eq!(c.total_rejections(), 1);
+        assert_eq!(c.failed_placements, 0);
+    }
+
+    #[test]
+    fn cluster_wide_failure_counts_every_node_and_the_attempt() {
+        let mut c = Cluster::new(3, NodeSpec { mem: MemMiB(100.0), cores: 1 });
+        assert!(c.reserve(MemMiB(500.0)).is_none());
+        assert_eq!(c.total_rejections(), 3);
+        assert_eq!(c.failed_placements, 1);
+        assert!(c.reserve(MemMiB(500.0)).is_none());
+        assert_eq!(c.total_rejections(), 6);
+        assert_eq!(c.failed_placements, 2);
+    }
+
+    #[test]
+    fn heterogeneous_nodes_and_first_fit() {
+        let mut c = Cluster::heterogeneous(vec![
+            NodeSpec { mem: MemMiB(100.0), cores: 1 },
+            NodeSpec { mem: MemMiB(1000.0), cores: 8 },
+        ]);
+        assert_eq!(c.node_max_mem(), MemMiB(1000.0));
+        assert_eq!(c.total_capacity(), MemMiB(1100.0));
+        // does not fit node 0, lands on node 1 and counts the probe
+        let r = c.reserve(MemMiB(400.0)).unwrap();
+        assert_eq!(r.node_idx, 1);
+        assert_eq!(c.nodes()[0].rejected, 1);
+        assert_eq!(c.total_reserved(), MemMiB(400.0));
+    }
+
+    #[test]
+    fn grow_reservation_in_place() {
+        let mut c = Cluster::new(1, NodeSpec { mem: MemMiB(1000.0), cores: 4 });
+        let mut r = c.reserve(MemMiB(300.0)).unwrap();
+        assert!(c.grow(&mut r, MemMiB(200.0)));
+        assert_eq!(r.mem, MemMiB(500.0));
+        assert_eq!(c.total_reserved(), MemMiB(500.0));
+        // over capacity: denied, reservation unchanged, no rejection
+        assert!(!c.grow(&mut r, MemMiB(600.0)));
+        assert_eq!(r.mem, MemMiB(500.0));
+        assert_eq!(c.total_rejections(), 0);
+        // releasing the grown reservation returns everything
+        c.release(r);
+        assert_eq!(c.total_free(), MemMiB(1000.0));
+    }
+
+    #[test]
+    fn reserve_on_targets_one_node() {
+        let mut c = Cluster::new(2, NodeSpec { mem: MemMiB(1000.0), cores: 4 });
+        let r = c.reserve_on(1, MemMiB(600.0)).unwrap();
+        assert_eq!(r.node_idx, 1);
+        assert_eq!(c.nodes()[0].reserved(), MemMiB(0.0));
+        // node 0 would fit, but a targeted reserve does not spill
+        assert!(c.reserve_on(1, MemMiB(600.0)).is_none());
+        assert_eq!(c.nodes()[1].rejected, 1);
+        c.node_mut(1).rejected += 1; // scheduler-level ledger rejection
+        assert_eq!(c.nodes()[1].rejected, 2);
+    }
+
+    #[test]
     fn release_never_goes_negative() {
         let mut n = Node::new(NodeSpec { mem: MemMiB(100.0), cores: 1 });
         n.release(MemMiB(50.0));
@@ -181,5 +338,6 @@ mod tests {
         let mut n = Node::new(NodeSpec { mem: MemMiB(100.0), cores: 1 });
         assert!(n.reserve(MemMiB(0.0)));
         assert_eq!(n.reserved(), MemMiB(0.0));
+        assert!(n.grow(MemMiB(0.0)));
     }
 }

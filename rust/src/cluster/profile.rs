@@ -1,0 +1,204 @@
+//! Time-indexed reservation ledger — the committed future memory load
+//! of one node, as a sparse step function.
+//!
+//! The discrete-event scheduler ([`crate::sched`]) admits a
+//! segment-wise task only if the node can carry its whole *planned*
+//! reservation profile (first-segment value, grows at each boundary,
+//! release at the predicted runtime) on top of everything already
+//! committed — otherwise step-function packing thrashes: co-admitted
+//! tasks all grow into the same headroom and kill each other at the
+//! first boundary. Admission against the committed profile makes grows
+//! conflict-free whenever runtime predictions hold; runtime
+//! *under*prediction (a task holding memory past its planned release)
+//! is caught later by the actual-reservation check and the scheduler's
+//! grow-denial path.
+//!
+//! The ledger is a multiset of `(time, delta_mib)` events kept sorted
+//! by time; the committed load at `t` is the sum of all deltas at or
+//! before `t`. Adding and removing a profile use the exact same event
+//! values, so removal cancels bit-exactly (same-time entries coalesce;
+//! entries below 1e-6 MiB are pruned).
+
+/// Sparse committed-load step function over time.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TimeProfile {
+    /// `(time, delta_mib)` sorted by time, one entry per distinct time.
+    deltas: Vec<(f64, f64)>,
+}
+
+/// Entries smaller than this (MiB) are float residue, not memory.
+const PRUNE_EPS: f64 = 1e-6;
+
+impl TimeProfile {
+    pub fn new() -> TimeProfile {
+        TimeProfile::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.deltas.is_empty()
+    }
+
+    pub fn n_events(&self) -> usize {
+        self.deltas.len()
+    }
+
+    /// Add one `(time, delta)` event, coalescing equal times.
+    pub fn add(&mut self, time: f64, delta: f64) {
+        debug_assert!(time.is_finite() && delta.is_finite());
+        match self.deltas.binary_search_by(|(t, _)| t.total_cmp(&time)) {
+            Ok(i) => {
+                self.deltas[i].1 += delta;
+                if self.deltas[i].1.abs() < PRUNE_EPS {
+                    self.deltas.remove(i);
+                }
+            }
+            Err(i) => {
+                if delta.abs() >= PRUNE_EPS {
+                    self.deltas.insert(i, (time, delta));
+                }
+            }
+        }
+    }
+
+    /// Commit a planned reservation profile (events in any order).
+    pub fn add_profile(&mut self, events: &[(f64, f64)]) {
+        for &(t, d) in events {
+            self.add(t, d);
+        }
+    }
+
+    /// Withdraw a previously committed profile (exact cancellation —
+    /// pass the same event list that was added).
+    pub fn subtract_profile(&mut self, events: &[(f64, f64)]) {
+        for &(t, d) in events {
+            self.add(t, -d);
+        }
+    }
+
+    /// Peak committed load over all time.
+    pub fn peak(&self) -> f64 {
+        self.peak_with(&[])
+    }
+
+    /// Peak of (committed + candidate) over all time; `cand` must be
+    /// sorted by time (planned profiles are generated sorted).
+    pub fn peak_with(&self, cand: &[(f64, f64)]) -> f64 {
+        debug_assert!(cand.windows(2).all(|w| w[0].0 <= w[1].0), "candidate not sorted");
+        let a = &self.deltas;
+        let (mut i, mut j) = (0usize, 0usize);
+        let (mut acc, mut peak) = (0.0f64, 0.0f64);
+        while i < a.len() || j < cand.len() {
+            let t = match (a.get(i), cand.get(j)) {
+                (Some(&(ta, _)), Some(&(tc, _))) => ta.min(tc),
+                (Some(&(ta, _)), None) => ta,
+                (None, Some(&(tc, _))) => tc,
+                (None, None) => unreachable!(),
+            };
+            while i < a.len() && a[i].0 <= t {
+                acc += a[i].1;
+                i += 1;
+            }
+            while j < cand.len() && cand[j].0 <= t {
+                acc += cand[j].1;
+                j += 1;
+            }
+            if acc > peak {
+                peak = acc;
+            }
+        }
+        peak
+    }
+
+    /// Whether (committed + candidate) stays within `capacity_mib` at
+    /// every instant (1e-6 MiB tolerance for exact fits).
+    pub fn fits(&self, cand: &[(f64, f64)], capacity_mib: f64) -> bool {
+        self.peak_with(cand) <= capacity_mib + PRUNE_EPS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp(start: f64) -> Vec<(f64, f64)> {
+        // 250 → 500 → 750 → 1000 over 20 s, released at start+20
+        vec![
+            (start, 250.0),
+            (start + 5.0, 250.0),
+            (start + 10.0, 250.0),
+            (start + 15.0, 250.0),
+            (start + 20.0, -1000.0),
+        ]
+    }
+
+    #[test]
+    fn empty_profile_peak_is_zero() {
+        let p = TimeProfile::new();
+        assert_eq!(p.peak(), 0.0);
+        assert!(p.fits(&[], 0.0));
+    }
+
+    #[test]
+    fn single_profile_peaks_at_its_max() {
+        let mut p = TimeProfile::new();
+        p.add_profile(&ramp(0.0));
+        assert_eq!(p.peak(), 1000.0);
+        assert!(p.fits(&[], 1000.0));
+    }
+
+    #[test]
+    fn overlapping_identical_ramps_stack() {
+        let mut p = TimeProfile::new();
+        p.add_profile(&ramp(0.0));
+        // simultaneous twin: peaks coincide, 2000 total
+        assert_eq!(p.peak_with(&ramp(0.0)), 2000.0);
+        // staggered by 15 s: 1000 + 250 in [15,20), 750+500 later... max 1250
+        assert_eq!(p.peak_with(&ramp(15.0)), 1250.0);
+        assert!(p.fits(&ramp(15.0), 1500.0));
+        assert!(!p.fits(&ramp(0.0), 1500.0));
+    }
+
+    #[test]
+    fn subtract_cancels_exactly() {
+        let mut p = TimeProfile::new();
+        p.add_profile(&ramp(3.0));
+        p.add_profile(&ramp(11.0));
+        p.subtract_profile(&ramp(3.0));
+        p.subtract_profile(&ramp(11.0));
+        assert!(p.is_empty(), "{p:?}");
+        assert_eq!(p.peak(), 0.0);
+    }
+
+    #[test]
+    fn coalesces_equal_times() {
+        let mut p = TimeProfile::new();
+        p.add(1.0, 100.0);
+        p.add(1.0, 50.0);
+        assert_eq!(p.n_events(), 1);
+        assert_eq!(p.peak(), 150.0);
+        p.add(1.0, -150.0);
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn peak_sees_interior_maximum() {
+        let mut p = TimeProfile::new();
+        // spike in the middle: +100 @1, +900 @2, -900 @3, -100 @4
+        p.add_profile(&[(1.0, 100.0), (2.0, 900.0), (3.0, -900.0), (4.0, -100.0)]);
+        assert_eq!(p.peak(), 1000.0);
+        // candidate spike overlapping the valley only
+        assert_eq!(p.peak_with(&[(3.0, 500.0), (4.0, -500.0)]), 1000.0);
+        // candidate overlapping the spike
+        assert_eq!(p.peak_with(&[(1.5, 500.0), (5.0, -500.0)]), 1500.0);
+    }
+
+    #[test]
+    fn exact_fit_tolerated() {
+        let mut p = TimeProfile::new();
+        p.add_profile(&ramp(0.0));
+        p.add_profile(&ramp(5.0));
+        // 1000 + 750 + 250 = 2000 exactly with a third at +15
+        assert!(p.fits(&ramp(15.0), 2000.0));
+        assert!(!p.fits(&ramp(15.0), 1999.0));
+    }
+}

@@ -22,6 +22,17 @@ pub enum EngineEvent {
     },
     /// Run completed (possibly after retries).
     Completed { task_type: String, seq: u64, attempts: u32 },
+    /// Scheduler: attempt placed on `node` at simulated time `time_s`
+    /// with its initial reservation ([`crate::sched`]).
+    Placed { task_type: String, seq: u64, node: usize, time_s: f64, reserved: MemMiB },
+    /// Scheduler: attempt OOM-killed at `time_s` (ground-truth usage
+    /// exceeded the reservation); the task is requeued with an
+    /// escalated allocation.
+    OomKilled { task_type: String, seq: u64, attempt: u32, time_s: f64 },
+    /// Scheduler: a segment-boundary grow request was denied by the
+    /// node (memory contention, not a misprediction); the task is
+    /// requeued with a full-peak reservation.
+    GrowDenied { task_type: String, seq: u64, segment: usize, time_s: f64 },
 }
 
 impl EngineEvent {
@@ -30,7 +41,10 @@ impl EngineEvent {
             EngineEvent::Submitted { task_type, .. }
             | EngineEvent::Queued { task_type, .. }
             | EngineEvent::Failed { task_type, .. }
-            | EngineEvent::Completed { task_type, .. } => task_type,
+            | EngineEvent::Completed { task_type, .. }
+            | EngineEvent::Placed { task_type, .. }
+            | EngineEvent::OomKilled { task_type, .. }
+            | EngineEvent::GrowDenied { task_type, .. } => task_type,
         }
     }
 
@@ -39,7 +53,10 @@ impl EngineEvent {
             EngineEvent::Submitted { seq, .. }
             | EngineEvent::Queued { seq, .. }
             | EngineEvent::Failed { seq, .. }
-            | EngineEvent::Completed { seq, .. } => *seq,
+            | EngineEvent::Completed { seq, .. }
+            | EngineEvent::Placed { seq, .. }
+            | EngineEvent::OomKilled { seq, .. }
+            | EngineEvent::GrowDenied { seq, .. } => *seq,
         }
     }
 }
@@ -137,6 +154,25 @@ mod tests {
         let e = failed("x", 7, 3);
         assert_eq!(e.task_type(), "x");
         assert_eq!(e.seq(), 7);
+    }
+
+    #[test]
+    fn scheduler_event_accessors() {
+        let placed = EngineEvent::Placed {
+            task_type: "s".into(),
+            seq: 9,
+            node: 2,
+            time_s: 4.0,
+            reserved: MemMiB(512.0),
+        };
+        let oom =
+            EngineEvent::OomKilled { task_type: "s".into(), seq: 9, attempt: 1, time_s: 8.0 };
+        let denied =
+            EngineEvent::GrowDenied { task_type: "s".into(), seq: 9, segment: 2, time_s: 6.0 };
+        for e in [&placed, &oom, &denied] {
+            assert_eq!(e.task_type(), "s");
+            assert_eq!(e.seq(), 9);
+        }
     }
 
     #[test]

@@ -23,6 +23,12 @@
 //!   grid on a worker pool with bit-identical results at any worker
 //!   count ([`sim::parallel`]), and the figure regeneration code
 //!   ([`bench_harness`]);
+//! * the **cluster scheduler**: a deterministic discrete-event
+//!   simulator that turns segment-wise predictions into throughput —
+//!   timed arrival streams, multi-node packing under static-peak vs
+//!   segment-wise reservation policies with time-indexed admission,
+//!   OOM-kill/requeue retry loops under real contention, and a
+//!   (policy × predictor × cluster × arrival) sweep grid ([`sched`]);
 //! * the **prediction service**: the long-running coordinator a SWMS
 //!   submits to, with task types hash-partitioned across N model
 //!   threads ([`coordinator`]);
@@ -60,6 +66,7 @@ pub mod monitoring;
 pub mod predictors;
 pub mod rng;
 pub mod runtime;
+pub mod sched;
 pub mod sim;
 pub mod trace;
 pub mod tsdb;
@@ -77,6 +84,7 @@ pub mod prelude {
     pub use crate::metrics::{MethodReport, TaskReport};
     pub use crate::ml::step_fn::StepFunction;
     pub use crate::predictors::{Allocation, FailureInfo, MemoryPredictor};
+    pub use crate::sched::{schedule_trace, ReservationPolicy, SchedConfig, SchedReport};
     pub use crate::sim::{simulate_trace, SimConfig};
     pub use crate::trace::{TaskRun, Trace, UsageSeries};
     pub use crate::units::{GbSeconds, MemMiB, Seconds};

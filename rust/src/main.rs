@@ -13,6 +13,7 @@
 //! ksegments fig1      [--seed N]                  # optimization potential
 //! ksegments validate-runtime                      # XLA fit vs native fit
 //! ksegments serve     [--seed N]                  # prediction-service demo
+//! ksegments schedule  [--nodes N] [--arrival S] [--policy P]  # cluster scheduler
 //! ```
 //!
 //! (Arg parsing is hand-rolled: the offline crate cache has no clap.)
@@ -51,6 +52,10 @@ USAGE:
   ksegments report    [--seed N] [--xla] [--out FILE] [--workers N]
   ksegments validate-runtime
   ksegments serve     [--seed N] [--shards N] [--workers N]
+  ksegments schedule  [--nodes N] [--node-gib G] [--arrival SECS]
+                      [--policy static|segment|both] [--method METHOD]
+                      [--frac F] [--seed N] [--workflow W]
+                      [--sweep] [--workers N]
 
 METHODS: default | ppm | ppm-improved | lr | ksegments-selective |
          ksegments-partial | ksegments-adaptive
@@ -60,6 +65,13 @@ it sizes the evaluation pool and results are identical for any worker
 count; for serve it is the number of SWMS client threads driving demo
 traffic. --shards is the number of model threads the prediction
 service partitions task types across (default 4).
+
+schedule runs the discrete-event cluster scheduler: tasks arrive as a
+timed stream (mean inter-arrival --arrival seconds, exponential) onto
+--nodes nodes of --node-gib GiB each, reserved per --policy
+(static-peak vs segment-wise step functions; both = comparison).
+--sweep renders the throughput tables over several arrival rates on
+the parallel grid instead.
 ";
 
 /// Hand-rolled `--key value` / `--flag` parser.
@@ -345,6 +357,123 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+const SCHEDULE_USAGE: &str = "\
+ksegments schedule — discrete-event cluster scheduling simulator
+
+  --nodes N       cluster size (default 2)
+  --node-gib G    memory per node in GiB (default 32)
+  --arrival SECS  mean inter-arrival gap of the task stream (default 5)
+  --policy P      static | segment | both (default both)
+  --method M      predictor driving the reservations
+                  (default ksegments-selective)
+  --frac F        warm-up training fraction (default 0.5)
+  --seed N        trace + arrival seed (default 42)
+  --workflow W    eager | sarek (default eager)
+  --sweep         render throughput tables over several arrival rates
+  --workers N     worker threads for --sweep (default: cores)
+";
+
+fn cmd_schedule(args: &Args) -> Result<()> {
+    use ksegments::cluster::NodeSpec;
+    use ksegments::sched::{schedule_trace, ReservationPolicy, SchedConfig};
+    use ksegments::units::{MemMiB, Seconds};
+
+    if args.flag("help") {
+        print!("{SCHEDULE_USAGE}");
+        return Ok(());
+    }
+    if args.flag("sweep") {
+        let sweep = ksegments::bench_harness::run_throughput(
+            args.seed(),
+            &[2.0, 5.0, 10.0],
+            args.workers(),
+        );
+        println!("{}", sweep.render_makespan());
+        println!("{}", sweep.render_queue_wait());
+        println!("{}", sweep.render_packing());
+        println!("{}", sweep.render_summaries());
+        return Ok(());
+    }
+
+    let n_nodes: usize = args
+        .kv
+        .get("nodes")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(2);
+    if n_nodes == 0 {
+        bail!("--nodes must be at least 1");
+    }
+    let node_gib: f64 = args
+        .kv
+        .get("node-gib")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(32.0);
+    let arrival: f64 = args
+        .kv
+        .get("arrival")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(5.0);
+    let frac: f64 = args
+        .kv
+        .get("frac")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(0.5);
+    if !(0.0..1.0).contains(&frac) {
+        bail!("--frac must be in [0, 1)");
+    }
+    let policy_arg = args.kv.get("policy").map(String::as_str).unwrap_or("both");
+    let policies: Vec<ReservationPolicy> = match policy_arg {
+        "both" => vec![ReservationPolicy::StaticPeak, ReservationPolicy::SegmentWise],
+        p => vec![ReservationPolicy::parse(p)
+            .ok_or_else(|| anyhow!("unknown policy {p:?} (static|segment|both)"))?],
+    };
+    let method = args
+        .kv
+        .get("method")
+        .map(String::as_str)
+        .unwrap_or("ksegments-selective");
+    let wf_name = args.kv.get("workflow").map(String::as_str).unwrap_or("eager");
+    let trace = generate_workflow_trace(&workflow_by_name(wf_name)?, args.seed());
+
+    println!(
+        "schedule: workflow={wf_name} method={method} nodes={n_nodes}x{node_gib}GiB \
+         arrival={arrival}s frac={frac} seed={}\n",
+        args.seed()
+    );
+    let mut reports = Vec::new();
+    for policy in policies {
+        let cfg = SchedConfig {
+            policy,
+            nodes: vec![NodeSpec { mem: MemMiB::from_gib(node_gib), cores: 32 }; n_nodes],
+            mean_interarrival: Seconds(arrival),
+            seed: args.seed(),
+            training_frac: frac,
+            ..SchedConfig::default()
+        };
+        let mut predictor = method_by_name(method, args.fitter())?;
+        let rep = schedule_trace(&trace, predictor.as_mut(), &cfg);
+        println!("{}", rep.summary());
+        reports.push(rep);
+    }
+    if let [stat, segw] = reports.as_slice() {
+        if stat.makespan.0 > 0.0 && segw.makespan.0 > 0.0 {
+            println!(
+                "\nsegment-wise vs static-peak: makespan x{:.3}, mean wait x{:.3}, \
+                 peak concurrency {} -> {}",
+                segw.makespan.0 / stat.makespan.0,
+                (segw.mean_queue_wait_s() / stat.mean_queue_wait_s().max(1e-9)),
+                stat.peak_running,
+                segw.peak_running,
+            );
+        }
+    }
+    Ok(())
+}
+
 fn real_main() -> Result<()> {
     let args = Args::parse()?;
     match args.cmd.as_str() {
@@ -384,6 +513,7 @@ fn real_main() -> Result<()> {
         }
         "validate-runtime" => cmd_validate_runtime(),
         "serve" => cmd_serve(&args),
+        "schedule" => cmd_schedule(&args),
         "" | "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())

@@ -1,0 +1,153 @@
+//! Deterministic discrete-event queue for the cluster scheduler.
+//!
+//! Events are ordered by `(time, rank, insertion order)`. The rank
+//! encodes the semantic ordering at equal timestamps: releases
+//! (`Finish`) are processed before grows (`SegmentBoundary`), which
+//! are processed before new work (`Arrival`) — freed memory is visible
+//! to everything that happens "at the same instant", which is both the
+//! packing-friendly and the reproducible choice. The insertion-order
+//! tie-breaker makes the pop order a pure function of the push
+//! sequence, so the whole simulation is deterministic.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// What happens when an event fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedEvent {
+    /// A running attempt reaches its precomputed end (completion or
+    /// OOM-kill instant). `exec` identifies the running execution.
+    Finish { exec: u64 },
+    /// A running attempt crosses a step-function boundary and must
+    /// grow its reservation to the next segment's value.
+    SegmentBoundary { exec: u64, segment: usize },
+    /// Task `task` (index into the scheduled run list) arrives.
+    Arrival { task: usize },
+}
+
+impl SchedEvent {
+    /// Same-timestamp processing rank (lower fires first).
+    fn rank(&self) -> u8 {
+        match self {
+            SchedEvent::Finish { .. } => 0,
+            SchedEvent::SegmentBoundary { .. } => 1,
+            SchedEvent::Arrival { .. } => 2,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    time: f64,
+    rank: u8,
+    tie: u64,
+    event: SchedEvent,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Entry {}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; reverse so the earliest event pops
+        // first. total_cmp keeps this a total order for any f64.
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.rank.cmp(&self.rank))
+            .then_with(|| other.tie.cmp(&self.tie))
+    }
+}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The scheduler's event heap.
+#[derive(Debug, Clone, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Entry>,
+    next_tie: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue::default()
+    }
+
+    pub fn push(&mut self, time: f64, event: SchedEvent) {
+        debug_assert!(time.is_finite(), "non-finite event time");
+        let tie = self.next_tie;
+        self.next_tie += 1;
+        self.heap.push(Entry { time, rank: event.rank(), tie, event });
+    }
+
+    /// Earliest event, ties broken by rank then insertion order.
+    pub fn pop(&mut self) -> Option<(f64, SchedEvent)> {
+        self.heap.pop().map(|e| (e.time, e.event))
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(5.0, SchedEvent::Arrival { task: 0 });
+        q.push(1.0, SchedEvent::Arrival { task: 1 });
+        q.push(3.0, SchedEvent::Arrival { task: 2 });
+        let order: Vec<f64> = std::iter::from_fn(|| q.pop()).map(|(t, _)| t).collect();
+        assert_eq!(order, vec![1.0, 3.0, 5.0]);
+    }
+
+    #[test]
+    fn equal_time_orders_finish_before_grow_before_arrival() {
+        let mut q = EventQueue::new();
+        q.push(2.0, SchedEvent::Arrival { task: 0 });
+        q.push(2.0, SchedEvent::SegmentBoundary { exec: 7, segment: 1 });
+        q.push(2.0, SchedEvent::Finish { exec: 7 });
+        assert_eq!(q.pop().unwrap().1, SchedEvent::Finish { exec: 7 });
+        assert_eq!(q.pop().unwrap().1, SchedEvent::SegmentBoundary { exec: 7, segment: 1 });
+        assert_eq!(q.pop().unwrap().1, SchedEvent::Arrival { task: 0 });
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn equal_time_and_rank_keeps_insertion_order() {
+        let mut q = EventQueue::new();
+        for task in 0..5 {
+            q.push(1.0, SchedEvent::Arrival { task });
+        }
+        for expect in 0..5 {
+            match q.pop().unwrap().1 {
+                SchedEvent::Arrival { task } => assert_eq!(task, expect),
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn len_and_empty() {
+        let mut q = EventQueue::new();
+        assert!(q.is_empty());
+        q.push(0.0, SchedEvent::Finish { exec: 0 });
+        assert_eq!(q.len(), 1);
+        let _ = q.pop();
+        assert!(q.is_empty());
+    }
+}

@@ -1,0 +1,264 @@
+//! Scheduler-level metrics: what a cluster operator sees — makespan,
+//! queue waits, admission/kill counters, utilization, wastage.
+//!
+//! [`SchedReport`] merges like [`crate::metrics::MethodReport`]: the
+//! parallel grid runs one cell per (policy × predictor × cluster ×
+//! arrival × trace) and folds per-trace partials together in trace
+//! order. Counters and integrals add, makespan and peak utilization
+//! take the max, queue-wait samples concatenate. All derived
+//! statistics (mean/percentile waits, utilization, throughput) are
+//! therefore permutation-invariant up to float-addition reordering —
+//! locked down by the property tests in `tests/sched_integration.rs`.
+
+use crate::units::{GbSeconds, Seconds};
+use crate::util::stats;
+
+/// Aggregate result of scheduling one trace (or several merged traces)
+/// on a simulated cluster.
+///
+/// Accounting identities (asserted by tests):
+///
+/// * every scheduled task eventually leaves the system:
+///   `completed == submitted`;
+/// * every admitted attempt ends exactly one way:
+///   `admitted == completed + oom_kills + grow_denials`;
+/// * every placement attempt either admits or rejects:
+///   `placement_attempts == admitted + rejected`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedReport {
+    /// Reservation policy name ("static-peak" / "segment-wise").
+    pub policy: String,
+    /// Predictor display name.
+    pub method: String,
+    /// Cluster size the cell ran with.
+    pub n_nodes: usize,
+    /// Mean inter-arrival time of the arrival stream (seconds).
+    pub mean_interarrival_s: f64,
+    /// Tasks submitted to the scheduler (the scored arrival stream).
+    pub submitted: u64,
+    /// Tasks that finished (every task does, via retry escalation).
+    pub completed: u64,
+    /// Successful placements (attempt starts).
+    pub admitted: u64,
+    /// Cluster-wide placement attempts that fit on no node.
+    pub rejected: u64,
+    /// Total placement attempts (`admitted + rejected`).
+    pub placement_attempts: u64,
+    /// Attempts killed by the OOM killer and requeued (ground-truth
+    /// usage exceeded the reservation before the attempt ended).
+    pub oom_kills: u64,
+    /// Attempts killed because a segment-boundary grow was denied
+    /// under contention and requeued with a full-peak reservation.
+    pub grow_denials: u64,
+    /// Maximum number of concurrently running attempts — the direct
+    /// "how many tasks co-locate" packing signal.
+    pub peak_running: u64,
+    /// Time from first arrival epoch (t = 0) to the last completion.
+    pub makespan: Seconds,
+    /// Reserved-minus-used wastage over all attempts (failed attempts
+    /// waste their full reservation integral, as in [`crate::sim`]).
+    pub total_wastage: GbSeconds,
+    /// Per-admission queue wait (seconds from enqueue to placement).
+    pub queue_waits: Vec<f64>,
+    /// Integral of reserved memory over time (GB·s).
+    pub reserved_integral_gbs: f64,
+    /// Cluster capacity × makespan (GB·s) — the utilization denominator.
+    pub capacity_integral_gbs: f64,
+    /// Peak of (reserved / capacity) over the run.
+    pub peak_util_frac: f64,
+}
+
+impl SchedReport {
+    pub fn new(
+        policy: &str,
+        method: &str,
+        n_nodes: usize,
+        mean_interarrival_s: f64,
+    ) -> SchedReport {
+        SchedReport {
+            policy: policy.to_string(),
+            method: method.to_string(),
+            n_nodes,
+            mean_interarrival_s,
+            submitted: 0,
+            completed: 0,
+            admitted: 0,
+            rejected: 0,
+            placement_attempts: 0,
+            oom_kills: 0,
+            grow_denials: 0,
+            peak_running: 0,
+            makespan: Seconds::ZERO,
+            total_wastage: GbSeconds::ZERO,
+            queue_waits: Vec::new(),
+            reserved_integral_gbs: 0.0,
+            capacity_integral_gbs: 0.0,
+            peak_util_frac: 0.0,
+        }
+    }
+
+    /// Mean queue wait per admission (seconds; 0 if nothing admitted).
+    pub fn mean_queue_wait_s(&self) -> f64 {
+        stats::mean(&self.queue_waits)
+    }
+
+    /// p-th percentile queue wait (seconds).
+    pub fn queue_wait_percentile_s(&self, p: f64) -> f64 {
+        stats::percentile(&self.queue_waits, p)
+    }
+
+    /// Time-averaged cluster memory utilization in [0, 1].
+    pub fn utilization(&self) -> f64 {
+        if self.capacity_integral_gbs <= 0.0 {
+            0.0
+        } else {
+            self.reserved_integral_gbs / self.capacity_integral_gbs
+        }
+    }
+
+    /// Completed tasks per hour of makespan — the throughput headline.
+    pub fn throughput_per_hour(&self) -> f64 {
+        if self.makespan.0 <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 * 3600.0 / self.makespan.0
+        }
+    }
+
+    /// Fold another report of the **same configuration** into this one
+    /// (per-trace partials of one grid cell).
+    pub fn merge(&mut self, other: SchedReport) {
+        assert_eq!(self.policy, other.policy, "merging different policies");
+        assert_eq!(self.method, other.method, "merging different methods");
+        assert_eq!(self.n_nodes, other.n_nodes, "merging different cluster sizes");
+        assert!(
+            (self.mean_interarrival_s - other.mean_interarrival_s).abs() < 1e-12,
+            "merging different arrival rates"
+        );
+        self.submitted += other.submitted;
+        self.completed += other.completed;
+        self.admitted += other.admitted;
+        self.rejected += other.rejected;
+        self.placement_attempts += other.placement_attempts;
+        self.oom_kills += other.oom_kills;
+        self.grow_denials += other.grow_denials;
+        self.peak_running = self.peak_running.max(other.peak_running);
+        self.makespan = self.makespan.max(other.makespan);
+        self.total_wastage += other.total_wastage;
+        self.queue_waits.extend(other.queue_waits);
+        self.reserved_integral_gbs += other.reserved_integral_gbs;
+        self.capacity_integral_gbs += other.capacity_integral_gbs;
+        self.peak_util_frac = self.peak_util_frac.max(other.peak_util_frac);
+    }
+
+    /// Merge an ordered sequence of per-trace reports; `None` for an
+    /// empty sequence.
+    pub fn merged(reports: impl IntoIterator<Item = SchedReport>) -> Option<SchedReport> {
+        let mut it = reports.into_iter();
+        let mut acc = it.next()?;
+        for rep in it {
+            acc.merge(rep);
+        }
+        Some(acc)
+    }
+
+    /// One-line operator summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} · {} · {} nodes · ia={:.1}s: {}/{} done, makespan {}, \
+             util {:.1}% (peak {:.1}%), peak-concurrent {}, wait mean {:.1}s p95 {:.1}s, \
+             {} oom, {} grow-denied, {} rejected, wastage {}",
+            self.policy,
+            self.method,
+            self.n_nodes,
+            self.mean_interarrival_s,
+            self.completed,
+            self.submitted,
+            self.makespan,
+            100.0 * self.utilization(),
+            100.0 * self.peak_util_frac,
+            self.peak_running,
+            self.mean_queue_wait_s(),
+            self.queue_wait_percentile_s(95.0),
+            self.oom_kills,
+            self.grow_denials,
+            self.rejected,
+            self.total_wastage,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rep(waits: &[f64], completed: u64, makespan: f64) -> SchedReport {
+        let mut r = SchedReport::new("segment-wise", "m", 4, 5.0);
+        r.submitted = completed;
+        r.completed = completed;
+        r.admitted = completed;
+        r.placement_attempts = completed;
+        r.makespan = Seconds(makespan);
+        r.queue_waits = waits.to_vec();
+        r.reserved_integral_gbs = 10.0;
+        r.capacity_integral_gbs = 40.0;
+        r.peak_util_frac = 0.5;
+        r
+    }
+
+    #[test]
+    fn derived_statistics() {
+        let r = rep(&[0.0, 2.0, 4.0], 30, 3600.0);
+        assert_eq!(r.mean_queue_wait_s(), 2.0);
+        assert_eq!(r.utilization(), 0.25);
+        assert_eq!(r.throughput_per_hour(), 30.0);
+        assert_eq!(r.queue_wait_percentile_s(100.0), 4.0);
+    }
+
+    #[test]
+    fn empty_report_is_zero() {
+        let r = SchedReport::new("static-peak", "m", 1, 1.0);
+        assert_eq!(r.mean_queue_wait_s(), 0.0);
+        assert_eq!(r.utilization(), 0.0);
+        assert_eq!(r.throughput_per_hour(), 0.0);
+    }
+
+    #[test]
+    fn merge_adds_counters_and_maxes_extremes() {
+        let mut a = rep(&[1.0], 10, 100.0);
+        let mut b = rep(&[3.0], 20, 250.0);
+        b.peak_util_frac = 0.9;
+        b.oom_kills = 2;
+        a.merge(b);
+        assert_eq!(a.completed, 30);
+        assert_eq!(a.oom_kills, 2);
+        assert_eq!(a.makespan, Seconds(250.0));
+        assert_eq!(a.peak_util_frac, 0.9);
+        assert_eq!(a.queue_waits, vec![1.0, 3.0]);
+        assert_eq!(a.reserved_integral_gbs, 20.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "merging different policies")]
+    fn merge_rejects_mismatched_policy() {
+        let mut a = rep(&[], 1, 1.0);
+        let mut b = rep(&[], 1, 1.0);
+        b.policy = "static-peak".into();
+        a.merge(b);
+    }
+
+    #[test]
+    fn merged_over_sequence() {
+        assert!(SchedReport::merged(std::iter::empty()).is_none());
+        let m = SchedReport::merged(vec![rep(&[1.0], 1, 10.0), rep(&[2.0], 2, 5.0)]).unwrap();
+        assert_eq!(m.completed, 3);
+        assert_eq!(m.makespan, Seconds(10.0));
+    }
+
+    #[test]
+    fn summary_renders() {
+        let s = rep(&[1.0], 5, 50.0).summary();
+        assert!(s.contains("segment-wise"));
+        assert!(s.contains("5/5 done"));
+    }
+}

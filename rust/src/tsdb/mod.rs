@@ -75,20 +75,29 @@ impl TsDb {
         self.series.get(key).map(Vec::as_slice).unwrap_or(&[])
     }
 
+    /// Index window of points with `t ∈ [from, to)`. Appends are
+    /// time-ordered (enforced in [`Self::append`]), so both ends are
+    /// found by binary search instead of a full scan — the segment-peak
+    /// query runs per completed execution on the online-learning path.
+    fn range_bounds(pts: &[Point], from: f64, to: f64) -> (usize, usize) {
+        let lo = pts.partition_point(|p| p.t < from);
+        let hi = pts.partition_point(|p| p.t < to);
+        (lo, hi.max(lo))
+    }
+
     /// Range query: points with `t ∈ [from, to)`.
     pub fn range(&self, key: &SeriesKey, from: f64, to: f64) -> Vec<Point> {
-        self.get(key)
-            .iter()
-            .filter(|p| p.t >= from && p.t < to)
-            .copied()
-            .collect()
+        let pts = self.get(key);
+        let (lo, hi) = Self::range_bounds(pts, from, to);
+        pts[lo..hi].to_vec()
     }
 
     /// Max value over a range (None if empty) — the segment-peak query.
     pub fn range_max(&self, key: &SeriesKey, from: f64, to: f64) -> Option<f64> {
-        self.get(key)
+        let pts = self.get(key);
+        let (lo, hi) = Self::range_bounds(pts, from, to);
+        pts[lo..hi]
             .iter()
-            .filter(|p| p.t >= from && p.t < to)
             .map(|p| p.value)
             .fold(None, |acc, v| Some(acc.map_or(v, |a: f64| a.max(v))))
     }
@@ -147,6 +156,48 @@ mod tests {
         assert_eq!(r[0].value, 20.0);
         assert_eq!(db.range_max(&key(0), 2.0, 5.0), Some(40.0));
         assert_eq!(db.range_max(&key(0), 100.0, 200.0), None);
+    }
+
+    #[test]
+    fn range_handles_duplicates_and_degenerate_windows() {
+        let mut db = TsDb::new();
+        // duplicate timestamps are legal (append only requires >=)
+        for v in [1.0, 2.0] {
+            db.append(&key(0), Point { t: 5.0, value: v });
+        }
+        db.append(&key(0), Point { t: 7.0, value: 3.0 });
+        assert_eq!(db.range(&key(0), 5.0, 7.0).len(), 2);
+        assert_eq!(db.range_max(&key(0), 5.0, 7.0), Some(2.0));
+        // inverted and empty windows
+        assert!(db.range(&key(0), 7.0, 5.0).is_empty());
+        assert_eq!(db.range_max(&key(0), 7.0, 5.0), None);
+        assert!(db.range(&key(0), 6.0, 6.0).is_empty());
+        // half-open: `to` excluded, `from` included
+        assert_eq!(db.range(&key(0), 7.0, 8.0).len(), 1);
+        assert!(db.range(&key(0), 7.1, 8.0).is_empty());
+    }
+
+    #[test]
+    fn range_agrees_with_linear_scan() {
+        let mut db = TsDb::new();
+        let mut rng = crate::rng::Rng::new(99);
+        let mut t = 0.0;
+        for _ in 0..500 {
+            t += rng.uniform(0.0, 2.0);
+            db.append(&key(0), Point { t, value: rng.uniform(0.0, 100.0) });
+        }
+        let pts: Vec<Point> = db.get(&key(0)).to_vec();
+        for _ in 0..200 {
+            let a = rng.uniform(-10.0, t + 10.0);
+            let b = rng.uniform(-10.0, t + 10.0);
+            let linear: Vec<Point> =
+                pts.iter().filter(|p| p.t >= a && p.t < b).copied().collect();
+            assert_eq!(db.range(&key(0), a, b), linear, "window [{a}, {b})");
+            let lmax = linear.iter().map(|p| p.value).fold(None, |acc: Option<f64>, v| {
+                Some(acc.map_or(v, |m| m.max(v)))
+            });
+            assert_eq!(db.range_max(&key(0), a, b), lmax, "window [{a}, {b})");
+        }
     }
 
     #[test]

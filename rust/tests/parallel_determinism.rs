@@ -5,7 +5,13 @@
 //! on this.
 
 use ksegments::bench_harness::{fig7_makers, method_names, paper_traces, run_fig8, FitterChoice};
-use ksegments::sim::{parallel_map, EvalGrid};
+use ksegments::cluster::NodeSpec;
+use ksegments::predictors::default_config::DefaultConfigPredictor;
+use ksegments::predictors::ppm::PpmPredictor;
+use ksegments::sched::{ReservationPolicy, SchedConfig, SchedGrid};
+use ksegments::sim::{parallel_map, EvalGrid, PredictorFactory};
+use ksegments::units::MemMiB;
+use ksegments::workload::{eager_workflow, generate_workflow_trace};
 
 /// The headline satellite: the full fig7 grid (6 methods × 3 fractions
 /// × 2 workflows) at seed 42 is bit-identical at workers = 1 and
@@ -67,6 +73,42 @@ fn parallel_map_order_under_contention() {
     for workers in [1, 2, 3, 7, 16, 64] {
         let got = parallel_map(n, workers, |i| i.wrapping_mul(2654435761));
         assert_eq!(got, expect, "workers={workers}");
+    }
+}
+
+/// The scheduling sweep rides the same pool: the full (policy ×
+/// predictor × cluster × arrival) grid over the eager trace at seed 42
+/// is bit-identical at workers = 1 and workers = 8 — every counter,
+/// every float, every queue-wait sample.
+#[test]
+fn sched_grid_bit_identical_across_worker_counts() {
+    let traces = vec![generate_workflow_trace(&eager_workflow(), 42)];
+    let methods: Vec<PredictorFactory> = vec![
+        Box::new(|| Box::new(DefaultConfigPredictor::new())),
+        Box::new(|| Box::new(PpmPredictor::improved())),
+    ];
+    let grid = SchedGrid::new(
+        vec![ReservationPolicy::StaticPeak, ReservationPolicy::SegmentWise],
+        methods,
+        &traces,
+        vec![2],
+        vec![3.0, 9.0],
+    )
+    .with_base(
+        SchedConfig { seed: 42, training_frac: 0.5, ..SchedConfig::default() },
+        NodeSpec { mem: MemMiB::from_gib(32.0), cores: 32 },
+    );
+    let seq = grid.run(1);
+    let par = grid.run(8);
+    assert_eq!(seq, par, "sched grid diverged under parallelism");
+    assert_eq!(seq.reports.len(), 2 * 2 * 2);
+    for (cell, rep) in seq.cells.iter().zip(&seq.reports) {
+        assert_eq!(rep.completed, rep.submitted, "cell {cell:?} lost tasks");
+        assert_eq!(
+            rep.admitted,
+            rep.completed + rep.oom_kills + rep.grow_denials,
+            "cell {cell:?} accounting broken"
+        );
     }
 }
 

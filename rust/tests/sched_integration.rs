@@ -1,0 +1,276 @@
+//! Integration lockdown for the cluster scheduler: the headline
+//! packing claim (segment-wise reservations beat static-peak on a
+//! ramp-profile workload at fixed capacity), the accounting
+//! conservation identities under randomized configs, permutation
+//! invariance of `SchedReport` merging, and end-to-end determinism
+//! with a real (learning) predictor.
+
+use ksegments::cluster::NodeSpec;
+use ksegments::ml::step_fn::StepFunction;
+use ksegments::predictors::default_config::DefaultConfigPredictor;
+use ksegments::predictors::ksegments::{KSegmentsPredictor, RetryStrategy};
+use ksegments::predictors::{Allocation, FailureInfo, MemoryPredictor};
+use ksegments::rng::Rng;
+use ksegments::sched::{schedule_trace, ReservationPolicy, SchedConfig, SchedReport};
+use ksegments::trace::{TaskRun, Trace, UsageSeries};
+use ksegments::units::{MemMiB, Seconds};
+use ksegments::workload::{eager_workflow, generate_workflow_trace};
+
+/// Ramp trace: every run climbs linearly to `peak` over `n_samples`
+/// 2-second samples.
+fn ramp_trace(n_runs: usize, peak: f64, n_samples: usize) -> Trace {
+    let mut t = Trace::new();
+    t.set_default("w/ramp", MemMiB(peak * 1.2));
+    for i in 0..n_runs {
+        let samples: Vec<f64> =
+            (0..n_samples).map(|j| peak * (j + 1) as f64 / n_samples as f64).collect();
+        t.push(TaskRun {
+            task_type: "w/ramp".into(),
+            input_mib: 100.0,
+            runtime: Seconds(n_samples as f64 * 2.0),
+            series: UsageSeries::new(2.0, samples),
+            seq: i as u64,
+        });
+    }
+    t.sort();
+    t
+}
+
+/// Oracle predictor: a k-step function whose segment values are the
+/// exact per-segment peaks of the reference series — isolates the
+/// reservation-policy effect from prediction error.
+struct OracleRamp {
+    series: UsageSeries,
+    k: usize,
+}
+impl OracleRamp {
+    fn for_trace(trace: &Trace, ty: &str, k: usize) -> OracleRamp {
+        OracleRamp { series: trace.runs_of(ty)[0].series.clone(), k }
+    }
+}
+impl MemoryPredictor for OracleRamp {
+    fn name(&self) -> String {
+        "oracle-ramp".into()
+    }
+    fn prime(&mut self, _: &str, _: MemMiB) {}
+    fn predict(&mut self, _: &str, _: f64) -> Allocation {
+        let rt = self.series.duration().0;
+        let dt = self.series.interval().0;
+        let samples = self.series.samples();
+        let values: Vec<f64> = (1..=self.k)
+            .map(|s| {
+                let lo = rt * (s - 1) as f64 / self.k as f64;
+                let hi = rt * s as f64 / self.k as f64;
+                samples
+                    .iter()
+                    .enumerate()
+                    .filter(|(j, _)| {
+                        let t0 = *j as f64 * dt;
+                        t0 < hi && t0 + dt > lo
+                    })
+                    .map(|(_, &u)| u)
+                    .fold(0.0f64, f64::max)
+            })
+            .collect();
+        Allocation::Dynamic(StepFunction::monotone_clamped(
+            Seconds(rt),
+            values,
+            MemMiB(1.0),
+            MemMiB(1e9),
+        ))
+    }
+    fn on_failure(&mut self, _: &str, _: f64, _: &Allocation, _: &FailureInfo) -> Allocation {
+        Allocation::Static(MemMiB(self.series.peak()))
+    }
+    fn observe(&mut self, _: &TaskRun) {}
+}
+
+fn identities(r: &SchedReport) {
+    assert_eq!(r.completed, r.submitted, "every task must leave the system");
+    assert_eq!(
+        r.admitted,
+        r.completed + r.oom_kills + r.grow_denials,
+        "every admitted attempt ends exactly one way"
+    );
+    assert_eq!(
+        r.placement_attempts,
+        r.admitted + r.rejected,
+        "every placement attempt admits or rejects"
+    );
+    assert_eq!(r.queue_waits.len() as u64, r.admitted);
+}
+
+/// The acceptance-criterion test: on a ramp-profile workload at fixed
+/// cluster capacity, segment-wise reservations admit strictly more
+/// concurrent tasks and finish the stream strictly sooner than
+/// static-peak reservations.
+#[test]
+fn segment_wise_beats_static_peak_on_ramp_workload() {
+    let trace = ramp_trace(8, 1000.0, 10); // peak 1 GB-ish, 20 s runtime
+    let cfg = |policy| SchedConfig {
+        policy,
+        nodes: vec![NodeSpec { mem: MemMiB(2000.0), cores: 8 }], // 2 static tasks max
+        mean_interarrival: Seconds(5.0),
+        deterministic_arrivals: true,
+        seed: 1,
+        training_frac: 0.0,
+        max_attempts: 10,
+        event_log_cap: 0,
+    };
+    let mk = || OracleRamp::for_trace(&trace, "w/ramp", 4);
+    let stat = schedule_trace(&trace, &mut mk(), &cfg(ReservationPolicy::StaticPeak));
+    let segw = schedule_trace(&trace, &mut mk(), &cfg(ReservationPolicy::SegmentWise));
+
+    identities(&stat);
+    identities(&segw);
+    assert_eq!(stat.completed, 8);
+    assert_eq!(segw.completed, 8);
+    assert_eq!(stat.oom_kills + segw.oom_kills, 0, "oracle predictions never OOM");
+
+    // static-peak can hold exactly 2 × 1000 MiB at once
+    assert_eq!(stat.peak_running, 2);
+    // step-function packing overlaps early small segments with late
+    // big ones — strictly more co-located tasks, strictly lower
+    // makespan, shorter queues, less reserved-but-unused memory
+    assert!(segw.peak_running > stat.peak_running, "{} !> {}", segw.peak_running, stat.peak_running);
+    assert!(segw.makespan.0 < stat.makespan.0, "{} !< {}", segw.makespan.0, stat.makespan.0);
+    assert!(segw.mean_queue_wait_s() < stat.mean_queue_wait_s());
+    assert!(segw.total_wastage.0 < stat.total_wastage.0);
+}
+
+/// Conservation identities under randomized traces, cluster shapes,
+/// policies and (sometimes undersized) defaults.
+#[test]
+fn conservation_identities_under_random_configs() {
+    for seed in 0..25u64 {
+        let mut rng = Rng::new(seed + 4000);
+        let mut trace = Trace::new();
+        let n_types = 1 + rng.below(3);
+        for ty in 0..n_types {
+            let name = format!("w/t{ty}");
+            let peak = rng.uniform(100.0, 2000.0);
+            // sometimes undersized -> OOM-kill/requeue paths exercised
+            let default = if rng.f64() < 0.5 { peak * 1.5 } else { peak * 0.1 };
+            trace.set_default(&name, MemMiB(default));
+            for i in 0..(3 + rng.below(10)) {
+                let n = 2 + rng.below(12) as usize;
+                let samples: Vec<f64> =
+                    (0..n).map(|j| peak * (j + 1) as f64 / n as f64).collect();
+                trace.push(TaskRun {
+                    task_type: name.clone(),
+                    input_mib: rng.uniform(10.0, 500.0),
+                    runtime: Seconds(n as f64 * 2.0),
+                    series: UsageSeries::new(2.0, samples),
+                    seq: ty * 1000 + i,
+                });
+            }
+        }
+        trace.sort();
+        let policy = if rng.f64() < 0.5 {
+            ReservationPolicy::StaticPeak
+        } else {
+            ReservationPolicy::SegmentWise
+        };
+        let cfg = SchedConfig {
+            policy,
+            nodes: vec![
+                NodeSpec { mem: MemMiB(rng.uniform(2000.0, 6000.0)), cores: 4 };
+                1 + rng.below(3) as usize
+            ],
+            mean_interarrival: Seconds(rng.uniform(0.0, 6.0)),
+            deterministic_arrivals: false,
+            seed,
+            training_frac: 0.0,
+            max_attempts: 8,
+            event_log_cap: 100,
+        };
+        let mut p = DefaultConfigPredictor::new();
+        let r = schedule_trace(&trace, &mut p, &cfg);
+        identities(&r);
+        assert!(r.makespan.0 >= 0.0, "seed {seed}");
+        assert!(r.peak_util_frac <= 1.0 + 1e-9, "seed {seed}: over-reserved");
+    }
+}
+
+/// Merging per-trace partial reports is permutation-invariant: exact
+/// for counters and extremes, float-reorder-tolerant for sums, and a
+/// multiset match for the queue-wait samples.
+#[test]
+fn sched_report_merge_is_permutation_invariant() {
+    let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0);
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(seed + 9000);
+        // several small per-trace reports from real scheduler runs
+        let mut parts: Vec<SchedReport> = (0..6)
+            .map(|i| {
+                let trace = ramp_trace(3 + (i % 3), 500.0 + 100.0 * i as f64, 6);
+                let mut p = OracleRamp::for_trace(&trace, "w/ramp", 3);
+                let cfg = SchedConfig {
+                    policy: ReservationPolicy::SegmentWise,
+                    nodes: vec![NodeSpec { mem: MemMiB(4000.0), cores: 4 }; 2],
+                    mean_interarrival: Seconds(2.0),
+                    seed: seed + i as u64,
+                    training_frac: 0.0,
+                    ..SchedConfig::default()
+                };
+                schedule_trace(&trace, &mut p, &cfg)
+            })
+            .collect();
+        let reference = SchedReport::merged(parts.clone()).unwrap();
+        rng.shuffle(&mut parts);
+        let shuffled = SchedReport::merged(parts).unwrap();
+
+        assert_eq!(shuffled.submitted, reference.submitted, "seed {seed}");
+        assert_eq!(shuffled.completed, reference.completed, "seed {seed}");
+        assert_eq!(shuffled.admitted, reference.admitted, "seed {seed}");
+        assert_eq!(shuffled.rejected, reference.rejected, "seed {seed}");
+        assert_eq!(shuffled.oom_kills, reference.oom_kills, "seed {seed}");
+        assert_eq!(shuffled.grow_denials, reference.grow_denials, "seed {seed}");
+        assert_eq!(shuffled.peak_running, reference.peak_running, "seed {seed}");
+        assert_eq!(shuffled.makespan, reference.makespan, "seed {seed}: max is order-free");
+        assert_eq!(shuffled.peak_util_frac, reference.peak_util_frac, "seed {seed}");
+        assert!(
+            close(shuffled.total_wastage.0, reference.total_wastage.0),
+            "seed {seed}"
+        );
+        assert!(
+            close(shuffled.reserved_integral_gbs, reference.reserved_integral_gbs),
+            "seed {seed}"
+        );
+        assert!(close(shuffled.mean_queue_wait_s(), reference.mean_queue_wait_s()), "seed {seed}");
+        let mut a = shuffled.queue_waits.clone();
+        let mut b = reference.queue_waits.clone();
+        a.sort_by(f64::total_cmp);
+        b.sort_by(f64::total_cmp);
+        assert_eq!(a, b, "seed {seed}: queue-wait samples are not the same multiset");
+    }
+}
+
+/// End-to-end with the paper's learning predictor on the eager-like
+/// workflow: deterministic replay, every task completes, and the
+/// scheduler exercises the online loop (observations flow back).
+#[test]
+fn ksegments_schedules_eager_workflow_deterministically() {
+    let trace = generate_workflow_trace(&eager_workflow(), 42);
+    let run = || {
+        let mut p = KSegmentsPredictor::native(4, RetryStrategy::Selective);
+        let cfg = SchedConfig {
+            policy: ReservationPolicy::SegmentWise,
+            nodes: vec![NodeSpec { mem: MemMiB::from_gib(32.0), cores: 32 }; 2],
+            mean_interarrival: Seconds(5.0),
+            seed: 42,
+            training_frac: 0.5,
+            ..SchedConfig::default()
+        };
+        schedule_trace(&trace, &mut p, &cfg)
+    };
+    let a = run();
+    identities(&a);
+    assert!(a.submitted > 100, "eager stream should be substantial");
+    assert_eq!(a.completed, a.submitted);
+    assert!(a.makespan.0 > 0.0);
+    assert!(a.peak_running >= 1);
+    // bit-identical replay (fresh predictor, same seeds)
+    let b = run();
+    assert_eq!(a, b, "scheduler must be deterministic end to end");
+}

@@ -1,6 +1,7 @@
 //! `cargo bench --bench ablations` — the design-choice ablation suite
-//! (DESIGN.md §6b, EXPERIMENTS.md §Ablations): error offsets, retry
-//! factor, history window, LR offset strategies, fixed-vs-adaptive k.
+//! (DESIGN.md §7, EXPERIMENTS.md §Ablations): error offsets, retry
+//! factor, history window, LR offset strategies, fixed-vs-adaptive k,
+//! the predictor-zoo head-to-head, and the ensemble's RAQ weight α.
 
 use ksegments::bench_harness::ablation::run_all;
 use ksegments::bench_harness::time_once;

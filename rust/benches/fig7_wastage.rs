@@ -1,8 +1,8 @@
 //! `cargo bench --bench fig7_wastage` — regenerates the paper's
 //! Fig. 7a (average wastage), Fig. 7b (lowest-wastage wins) and
-//! Fig. 7c (average retries) across all 6 methods × 3 training
-//! fractions × 33 evaluated tasks, and times both the full grid and
-//! the per-method evaluation.
+//! Fig. 7c (average retries) across the 8-method predictor zoo × 3
+//! training fractions × 33 evaluated tasks, and times both the full
+//! grid and the per-method evaluation.
 //!
 //! The printed tables are the source of the numbers recorded in
 //! EXPERIMENTS.md.

@@ -7,6 +7,8 @@
 //!   (skipped with a notice if `make artifacts` has not run);
 //! * `KSegmentsPredictor::predict` — the submission-time path served
 //!   by the coordinator;
+//! * `TaskHistory::push` on a full window — the per-completion
+//!   eviction (amortized O(1) ring vs the former O(cap) memmove);
 //! * step-function construction and evaluation;
 //! * `EvalGrid` throughput — the parallel evaluation engine at 1
 //!   worker vs all cores;
@@ -113,6 +115,30 @@ fn main() {
     bench("predict/ksegments/warm-cache", 30, 500, || {
         predictor.predict(black_box("t"), black_box(1234.5))
     });
+
+    // -- history ring eviction -------------------------------------------
+    // One push per completion on a FULL window is the online-learning
+    // hot path. Eviction is amortized O(1) (lazy head + periodic
+    // drain), so per-push cost must stay flat as the window capacity
+    // grows — before the ring it was four `Vec::remove(0)` memmoves,
+    // i.e. O(cap) per completion (the 64x-capacity row exposed it).
+    for cap in [64usize, 1024, 4096] {
+        let mut h = ksegments::predictors::history::TaskHistory::new(cap, 64);
+        let series = synth_series(128, &mut rng);
+        let warm = TaskRun {
+            task_type: "t".into(),
+            input_mib: 1000.0,
+            runtime: series.duration(),
+            series,
+            seq: 0,
+        };
+        for _ in 0..cap {
+            h.push(&warm); // fill: every bench push now evicts
+        }
+        bench(&format!("history/push-evict cap={cap}"), 20, 2_000, || {
+            h.push(black_box(&warm))
+        });
+    }
 
     // -- step-function primitives ----------------------------------------
     let f = StepFunction::monotone_clamped(

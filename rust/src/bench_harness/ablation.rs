@@ -7,13 +7,18 @@
 //! * the sliding **history window** feeding the fit;
 //! * Witt et al.'s three **LR offset strategies** (mean±σ / mean− / max);
 //! * fixed k = 4 vs the Fig. 8 best fixed k vs **adaptive per-task k**
-//!   (our implementation of the paper's §V proposal).
+//!   (our implementation of the paper's §V proposal);
+//! * the **predictor zoo** head-to-head (k-Segments vs Sizey ensemble
+//!   vs KS+ dynamic segmentation, DESIGN.md §6);
+//! * the ensemble's **RAQ interpolation weight** α (failure avoidance
+//!   vs allocation efficiency).
 //!
 //! Exposed through `ksegments ablate` and `cargo bench --bench
 //! ablations`; results recorded in EXPERIMENTS.md §Ablations.
 
-use crate::bench_harness::figures::{evaluate_method, paper_traces};
+use crate::bench_harness::figures::{evaluate_method, make_method, paper_traces, FitterChoice};
 use crate::predictors::adaptive_k::AdaptiveKPredictor;
+use crate::predictors::ensemble::{EnsembleConfig, EnsemblePredictor};
 use crate::predictors::ksegments::{KSegmentsConfig, KSegmentsPredictor, RetryStrategy};
 use crate::predictors::lr_witt::{LrWittPredictor, OffsetStrategy};
 use crate::predictors::MemoryPredictor;
@@ -128,6 +133,40 @@ pub fn ablate_adaptive_k(traces: &[Trace], frac: f64, workers: usize) -> Vec<Abl
     })
 }
 
+/// Predictor-zoo head-to-head: the paper's method against the
+/// follow-up-literature competitors at one training fraction (the
+/// ablation-sized companion of the full Fig. 7 grid).
+pub fn ablate_zoo(traces: &[Trace], frac: f64, workers: usize) -> Vec<AblationRow> {
+    let keys = ["ksegments-selective", "ksegments-partial", "ensemble", "dynseg", "ppm-improved"];
+    parallel_map(keys.len(), workers, |i| {
+        let key = keys[i];
+        let mk = || make_method(key, FitterChoice::Native).expect("zoo key");
+        let name = mk().name();
+        let (w, r) = run_one(&mk, traces, frac);
+        (name, w, r)
+    })
+}
+
+/// The ensemble's RAQ interpolation weight α: 0 scores pure allocation
+/// efficiency, 1 pure failure avoidance.
+pub fn ablate_ensemble_alpha(
+    traces: &[Trace],
+    frac: f64,
+    alphas: &[f64],
+    workers: usize,
+) -> Vec<AblationRow> {
+    parallel_map(alphas.len(), workers, |i| {
+        let alpha = alphas[i];
+        let cfg = EnsembleConfig { alpha, ..EnsembleConfig::default() };
+        let (w, r) = run_one(
+            &|| Box::new(EnsemblePredictor::with_config(cfg.clone())),
+            traces,
+            frac,
+        );
+        (format!("α = {alpha:.2}"), w, r)
+    })
+}
+
 /// Render rows as a markdown table.
 pub fn render_ablation(title: &str, rows: &[AblationRow]) -> String {
     let mut out = format!("## Ablation — {title}\n\n| configuration | avg wastage (GB·s) | avg retries |\n|---|---|---|\n");
@@ -169,6 +208,16 @@ pub fn run_all(seed: u64, workers: usize) -> String {
         "fixed vs adaptive k (§V)",
         &ablate_adaptive_k(&traces, frac, workers),
     ));
+    out.push('\n');
+    out.push_str(&render_ablation(
+        "predictor zoo head-to-head (DESIGN.md §6)",
+        &ablate_zoo(&traces, frac, workers),
+    ));
+    out.push('\n');
+    out.push_str(&render_ablation(
+        "ensemble RAQ weight α",
+        &ablate_ensemble_alpha(&traces, frac, &[0.0, 0.25, 0.5, 0.75, 1.0], workers),
+    ));
     out
 }
 
@@ -187,6 +236,17 @@ mod tests {
         let on = rows.iter().find(|r| r.0.contains("Selective / offsets ON")).unwrap();
         let off = rows.iter().find(|r| r.0.contains("Selective / offsets OFF")).unwrap();
         assert!(off.2 > on.2, "offsets off should retry more: {off:?} vs {on:?}");
+    }
+
+    #[test]
+    fn zoo_rows_cover_competitors() {
+        let rows = ablate_zoo(&paper_traces(42), 0.5, 4);
+        assert_eq!(rows.len(), 5);
+        assert!(rows.iter().any(|r| r.0 == "Sizey Ensemble"));
+        assert!(rows.iter().any(|r| r.0 == "KS+ DynSeg Selective"));
+        assert!(rows.iter().any(|r| r.0 == "k-Segments Selective"));
+        // every zoo member actually scored tasks
+        assert!(rows.iter().all(|r| r.1.is_finite() && r.1 > 0.0));
     }
 
     #[test]

@@ -6,7 +6,10 @@
 
 use crate::metrics::{count_wins, render_table, MethodReport};
 use crate::ml::fitter::KsegFitter;
+use crate::predictors::adaptive_k::AdaptiveKPredictor;
 use crate::predictors::default_config::DefaultConfigPredictor;
+use crate::predictors::dynseg::DynSegPredictor;
+use crate::predictors::ensemble::EnsemblePredictor;
 use crate::predictors::ksegments::{KSegmentsConfig, KSegmentsPredictor, RetryStrategy};
 use crate::predictors::lr_witt::LrWittPredictor;
 use crate::predictors::ppm::PpmPredictor;
@@ -42,17 +45,89 @@ fn ksegments(choice: FitterChoice, k: usize, strategy: RetryStrategy) -> Box<dyn
     }
 }
 
-/// The Fig. 7 method roster: defaults, both PPM variants, LR, and the
-/// two k-Segments strategies (paper §IV-C).
+/// CLI keys of the Fig. 7 predictor-zoo roster, in table-row order:
+/// the paper's §IV-C lineup plus the follow-up-literature competitors
+/// (Sizey ensemble, KS+ dynamic segmentation).
+pub const METHOD_KEYS: &[&str] = &[
+    "default",
+    "ppm",
+    "ppm-improved",
+    "lr",
+    "ksegments-selective",
+    "ksegments-partial",
+    "ensemble",
+    "dynseg",
+];
+
+/// Keys accepted by `--method` but not part of the default roster.
+pub const EXTRA_METHOD_KEYS: &[&str] = &["ksegments-adaptive"];
+
+/// Build one predictor by CLI key (`None` for unknown keys). The
+/// single source of truth for key → predictor, shared by the roster,
+/// the grid factories, and the CLI's `--method` plumbing.
+pub fn make_method(key: &str, choice: FitterChoice) -> Option<Box<dyn MemoryPredictor>> {
+    Some(match key {
+        "default" => Box::new(DefaultConfigPredictor::new()),
+        "ppm" => Box::new(PpmPredictor::original()),
+        "ppm-improved" => Box::new(PpmPredictor::improved()),
+        "lr" => Box::new(LrWittPredictor::paper_baseline()),
+        "ksegments-selective" => ksegments(choice, 4, RetryStrategy::Selective),
+        "ksegments-partial" => ksegments(choice, 4, RetryStrategy::Partial),
+        "ksegments-adaptive" => Box::new(AdaptiveKPredictor::native(RetryStrategy::Selective)),
+        "ensemble" => Box::new(EnsemblePredictor::new()),
+        "dynseg" => Box::new(DynSegPredictor::native(4, RetryStrategy::Selective)),
+        _ => return None,
+    })
+}
+
+/// Resolve a `--method` selection — `"all"`, one key, or a comma list —
+/// into canonical roster keys (errors on unknown names).
+pub fn resolve_methods(selection: &str) -> Result<Vec<&'static str>, String> {
+    if selection == "all" {
+        return Ok(METHOD_KEYS.to_vec());
+    }
+    let mut out = Vec::new();
+    for part in selection.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let key = METHOD_KEYS
+            .iter()
+            .chain(EXTRA_METHOD_KEYS)
+            .find(|k| **k == part)
+            .ok_or_else(|| {
+                format!(
+                    "unknown method {part:?} (expected \"all\" or any of: {}, {})",
+                    METHOD_KEYS.join(", "),
+                    EXTRA_METHOD_KEYS.join(", ")
+                )
+            })?;
+        out.push(*key);
+    }
+    if out.is_empty() {
+        return Err("empty method selection".into());
+    }
+    Ok(out)
+}
+
+/// Thread-safe factories for a resolved key list, in the given order.
+pub fn makers_for_keys(keys: &[&'static str], choice: FitterChoice) -> Vec<PredictorFactory> {
+    keys.iter()
+        .map(|&key| {
+            // membership check only — constructing a predictor here
+            // would load (and drop) the XLA artifacts once per key
+            assert!(
+                METHOD_KEYS.contains(&key) || EXTRA_METHOD_KEYS.contains(&key),
+                "unresolved method key {key:?}"
+            );
+            Box::new(move || make_method(key, choice).expect("resolved key")) as PredictorFactory
+        })
+        .collect()
+}
+
+/// The full Fig. 7 method roster (paper §IV-C + the predictor zoo).
 pub fn method_roster(choice: FitterChoice) -> Vec<Box<dyn MemoryPredictor>> {
-    vec![
-        Box::new(DefaultConfigPredictor::new()),
-        Box::new(PpmPredictor::original()),
-        Box::new(PpmPredictor::improved()),
-        Box::new(LrWittPredictor::paper_baseline()),
-        ksegments(choice, 4, RetryStrategy::Selective),
-        ksegments(choice, 4, RetryStrategy::Partial),
-    ]
+    METHOD_KEYS
+        .iter()
+        .map(|k| make_method(k, choice).expect("roster key"))
+        .collect()
 }
 
 /// Names in roster order (stable across runs; used by tables).
@@ -97,22 +172,26 @@ pub struct Fig7Results {
 /// The Fig. 7 roster as thread-safe factories, in roster order — the
 /// method axis of the parallel [`EvalGrid`].
 pub fn fig7_makers(choice: FitterChoice) -> Vec<PredictorFactory> {
-    vec![
-        Box::new(|| Box::new(DefaultConfigPredictor::new())),
-        Box::new(|| Box::new(PpmPredictor::original())),
-        Box::new(|| Box::new(PpmPredictor::improved())),
-        Box::new(|| Box::new(LrWittPredictor::paper_baseline())),
-        Box::new(move || ksegments(choice, 4, RetryStrategy::Selective)),
-        Box::new(move || ksegments(choice, 4, RetryStrategy::Partial)),
-    ]
+    makers_for_keys(METHOD_KEYS, choice)
 }
 
-/// Run the full Fig. 7 grid (6 methods × 3 fractions × 2 workflows =
-/// 36 independent cells) on `workers` threads. Results are identical
+/// Run the full Fig. 7 grid (8 methods × 3 fractions × 2 workflows =
+/// 48 independent cells) on `workers` threads. Results are identical
 /// for any worker count (see `tests/parallel_determinism.rs`).
 pub fn run_fig7(seed: u64, choice: FitterChoice, workers: usize) -> Fig7Results {
+    run_fig7_selected(seed, choice, workers, METHOD_KEYS)
+}
+
+/// [`run_fig7`] over a `--method` subset of the roster (resolved via
+/// [`resolve_methods`]), keeping the given key order as row order.
+pub fn run_fig7_selected(
+    seed: u64,
+    choice: FitterChoice,
+    workers: usize,
+    keys: &[&'static str],
+) -> Fig7Results {
     let traces = paper_traces(seed);
-    let grid = EvalGrid::new(fig7_makers(choice), &traces, vec![0.25, 0.5, 0.75]);
+    let grid = EvalGrid::new(makers_for_keys(keys, choice), &traces, vec![0.25, 0.5, 0.75]);
     let results = grid.run(workers);
     Fig7Results { fractions: results.fractions, by_fraction: results.by_fraction }
 }
@@ -184,12 +263,20 @@ impl Fig7Results {
             .expect("fraction not in grid");
         let reports = &self.by_fraction[idx];
         let is_ours = |name: &str| name.starts_with("k-Segments");
-        let (best_base, base_w) = reports
+        // competitors = everything that is neither ours nor the sanity
+        // default — including the zoo rows (Sizey, KS+), so the
+        // headline is a true head-to-head against the strongest rival
+        let Some((best_base, base_w)) = reports
             .iter()
             .filter(|r| !is_ours(&r.method) && r.method != "Default")
             .map(|r| (r.method.clone(), r.avg_wastage_gbs()))
             .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-            .expect("baselines present");
+        else {
+            return format!(
+                "headline @ {:.0}% training — no baseline rows in this method selection\n",
+                frac * 100.0
+            );
+        };
         let mut out = format!(
             "headline @ {:.0}% training — best baseline: {} ({:.3} GB·s)\n",
             frac * 100.0,
@@ -356,15 +443,41 @@ mod tests {
     use super::*;
 
     #[test]
-    fn roster_has_six_methods_with_unique_names() {
+    fn roster_has_eight_methods_with_unique_names() {
         let names = method_names();
-        assert_eq!(names.len(), 6);
+        assert_eq!(names.len(), METHOD_KEYS.len());
+        assert_eq!(names.len(), 8);
         let mut dedup = names.clone();
         dedup.sort();
         dedup.dedup();
-        assert_eq!(dedup.len(), 6);
+        assert_eq!(dedup.len(), 8);
         assert!(names.contains(&"PPM Improved".to_string()));
         assert!(names.contains(&"k-Segments Selective".to_string()));
+        assert!(names.contains(&"Sizey Ensemble".to_string()));
+        assert!(names.contains(&"KS+ DynSeg Selective".to_string()));
+    }
+
+    #[test]
+    fn method_keys_all_construct() {
+        for key in METHOD_KEYS.iter().chain(EXTRA_METHOD_KEYS) {
+            assert!(make_method(key, FitterChoice::Native).is_some(), "key {key}");
+        }
+        assert!(make_method("nope", FitterChoice::Native).is_none());
+    }
+
+    #[test]
+    fn method_selection_resolution() {
+        assert_eq!(resolve_methods("all").unwrap(), METHOD_KEYS.to_vec());
+        assert_eq!(
+            resolve_methods("ensemble,dynseg").unwrap(),
+            vec!["ensemble", "dynseg"]
+        );
+        assert_eq!(
+            resolve_methods(" ksegments-adaptive ").unwrap(),
+            vec!["ksegments-adaptive"]
+        );
+        assert!(resolve_methods("bogus").is_err());
+        assert!(resolve_methods("").is_err());
     }
 
     #[test]

@@ -14,8 +14,9 @@ pub mod throughput;
 pub mod timer;
 
 pub use figures::{
-    evaluate_method, fig7_makers, method_names, method_roster, paper_traces, run_fig1, run_fig4,
-    run_fig7, run_fig8, Fig7Results, Fig8Results, FitterChoice,
+    evaluate_method, fig7_makers, make_method, makers_for_keys, method_names, method_roster,
+    paper_traces, resolve_methods, run_fig1, run_fig4, run_fig7, run_fig7_selected, run_fig8,
+    Fig7Results, Fig8Results, FitterChoice, EXTRA_METHOD_KEYS, METHOD_KEYS,
 };
 pub use throughput::{run_throughput, throughput_makers, ThroughputResults};
 pub use timer::{bench, black_box, time_once, Measurement};

@@ -4,16 +4,24 @@
 //! section of EXPERIMENTS.md after any change.
 
 use crate::bench_harness::ablation::run_all as run_ablations;
-use crate::bench_harness::figures::{run_fig1, run_fig4, run_fig7, run_fig8, FitterChoice};
+use crate::bench_harness::figures::{run_fig1, run_fig4, run_fig7_selected, run_fig8, FitterChoice};
 use crate::bench_harness::throughput::run_throughput;
 
 /// Build the complete experiments report (may take ~seconds); the
 /// fig7/fig8 grids and the ablation suite fan out over `workers`
 /// threads — the rendered tables are identical for any worker count.
-pub fn full_report(seed: u64, choice: FitterChoice, workers: usize) -> String {
+/// `methods` selects the Fig. 7 rows (resolved from `--method`;
+/// [`crate::bench_harness::figures::METHOD_KEYS`] = `--method all`,
+/// the full predictor zoo).
+pub fn full_report(
+    seed: u64,
+    choice: FitterChoice,
+    workers: usize,
+    methods: &[&'static str],
+) -> String {
     let mut out = String::new();
     out.push_str(&format!(
-        "# ksegments experiment report\n\nseed = {seed}, fitter = {choice:?}\n\n"
+        "# ksegments experiment report\n\nseed = {seed}, fitter = {choice:?}, methods = {methods:?}\n\n"
     ));
 
     out.push_str(&run_fig1(seed));
@@ -21,7 +29,7 @@ pub fn full_report(seed: u64, choice: FitterChoice, workers: usize) -> String {
     out.push_str(&run_fig4(seed, choice));
     out.push('\n');
 
-    let fig7 = run_fig7(seed, choice, workers);
+    let fig7 = run_fig7_selected(seed, choice, workers, methods);
     out.push_str(&fig7.render_wastage());
     out.push('\n');
     out.push_str(&fig7.render_wins());
@@ -60,7 +68,12 @@ mod tests {
     #[test]
     #[ignore = "runs the full grid (~10 s); covered by `ksegments report` in CI-style runs"]
     fn report_contains_every_section() {
-        let r = full_report(42, FitterChoice::Native, crate::sim::default_workers());
+        let r = full_report(
+            42,
+            FitterChoice::Native,
+            crate::sim::default_workers(),
+            crate::bench_harness::figures::METHOD_KEYS,
+        );
         for needle in [
             "Fig 1",
             "Fig 4",
@@ -71,6 +84,10 @@ mod tests {
             "Throughput — makespan",
             "Ablation — error offsets",
             "fixed vs adaptive k",
+            "predictor zoo head-to-head",
+            "ensemble RAQ weight",
+            "Sizey Ensemble",
+            "KS+ DynSeg",
         ] {
             assert!(r.contains(needle), "missing section {needle}");
         }

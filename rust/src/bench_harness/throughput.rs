@@ -7,9 +7,9 @@
 //! concurrency and utilization as markdown tables. Shared by the CLI
 //! (`ksegments schedule --sweep`) and `ksegments report`.
 
+use crate::bench_harness::figures::{makers_for_keys, FitterChoice};
 use crate::cluster::NodeSpec;
-use crate::predictors::ksegments::{KSegmentsPredictor, RetryStrategy};
-use crate::predictors::ppm::PpmPredictor;
+use crate::predictors::MemoryPredictor;
 use crate::sched::{ReservationPolicy, SchedConfig, SchedGrid, SchedGridResults};
 use crate::sim::PredictorFactory;
 use crate::units::MemMiB;
@@ -23,19 +23,23 @@ pub struct ThroughputResults {
     pub results: SchedGridResults,
 }
 
-/// The sweep roster: the k-Segments method (whose Dynamic allocations
-/// the segment-wise policy exploits) and the strongest static
-/// baseline. Both run under both policies — static allocations are
-/// unaffected by the policy choice, which makes PPM the control.
+/// `--method` keys of the sweep roster: the two time-varying methods
+/// (whose Dynamic allocations the segment-wise policy exploits —
+/// k-Segments and KS+ DynSeg) and the strongest static competitors
+/// (PPM Improved, Sizey Ensemble). Every method runs under both
+/// policies — static allocations are unaffected by the policy choice,
+/// which makes the static rows the control.
+pub const THROUGHPUT_KEYS: &[&str] =
+    &["ksegments-selective", "dynseg", "ppm-improved", "ensemble"];
+
+/// The sweep roster as thread-safe factories, in [`THROUGHPUT_KEYS`]
+/// order.
 pub fn throughput_makers() -> Vec<PredictorFactory> {
-    vec![
-        Box::new(|| Box::new(KSegmentsPredictor::native(4, RetryStrategy::Selective))),
-        Box::new(|| Box::new(PpmPredictor::improved())),
-    ]
+    makers_for_keys(THROUGHPUT_KEYS, FitterChoice::Native)
 }
 
 /// Run the throughput sweep on the eager-like workflow: 2 policies ×
-/// 2 predictors × the given mean inter-arrival gaps, on a small
+/// 4 predictors × the given mean inter-arrival gaps, on a small
 /// cluster sized so that packing pressure is real (2 × 32 GiB).
 pub fn run_throughput(seed: u64, interarrivals: &[f64], workers: usize) -> ThroughputResults {
     let traces = vec![generate_workflow_trace(&eager_workflow(), seed)];
@@ -51,7 +55,8 @@ pub fn run_throughput(seed: u64, interarrivals: &[f64], workers: usize) -> Throu
     )
     .with_base(base, node);
     let results = grid.run(workers);
-    let methods = vec!["k-Segments Selective".to_string(), "PPM Improved".to_string()];
+    // row labels in THROUGHPUT_KEYS order (display names, not keys)
+    let methods = throughput_makers().iter().map(|mk| mk().name()).collect();
     ThroughputResults { interarrivals: interarrivals.to_vec(), policies, methods, results }
 }
 
@@ -132,9 +137,12 @@ mod tests {
     fn sweep_renders_all_tables() {
         // one arrival rate keeps this test cheap; report/CLI sweep more
         let t = run_throughput(42, &[2.0], 2);
+        assert_eq!(t.methods.len(), THROUGHPUT_KEYS.len());
         let mk = t.render_makespan();
         assert!(mk.contains("static-peak · k-Segments Selective"));
         assert!(mk.contains("segment-wise · PPM Improved"));
+        assert!(mk.contains("segment-wise · KS+ DynSeg Selective"));
+        assert!(mk.contains("static-peak · Sizey Ensemble"));
         assert!(mk.contains("ia=2s"));
         assert!(t.render_queue_wait().contains("queue wait"));
         assert!(t.render_packing().contains("peak concurrent"));

@@ -10,7 +10,10 @@
 //!   Selective and Partial retry strategies ([`predictors::ksegments`]);
 //! * every **baseline** it is evaluated against — workflow defaults,
 //!   Tovar et al.'s PPM (+ the paper's Improved variant), and Witt
-//!   et al.'s feedback-loop linear regression ([`predictors`]);
+//!   et al.'s feedback-loop linear regression — plus the follow-up
+//!   literature's **predictor zoo**: a Sizey-style scored model
+//!   ensemble and KS+-style dynamic change-point segmentation
+//!   ([`predictors`]);
 //! * the **substrate**: a Nextflow-like workflow engine
 //!   ([`workflow`], [`engine`]), a cluster/resource-manager model
 //!   ([`cluster`]), a cgroup-style monitoring pipeline with an

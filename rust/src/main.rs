@@ -24,13 +24,10 @@ use std::process::ExitCode;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use ksegments::bench_harness::{run_fig1, run_fig4, run_fig7, run_fig8, FitterChoice};
+use ksegments::bench_harness::{run_fig1, run_fig4, run_fig7_selected, run_fig8, FitterChoice};
 use ksegments::coordinator::ShardedPredictionService;
 use ksegments::ml::fitter::{KsegFitter, NativeFitter};
-use ksegments::predictors::default_config::DefaultConfigPredictor;
 use ksegments::predictors::ksegments::{KSegmentsPredictor, RetryStrategy};
-use ksegments::predictors::lr_witt::LrWittPredictor;
-use ksegments::predictors::ppm::PpmPredictor;
 use ksegments::predictors::MemoryPredictor;
 use ksegments::runtime::XlaFitter;
 use ksegments::sim::{simulate_trace, SimConfig};
@@ -44,12 +41,12 @@ ksegments — dynamic memory prediction for scientific workflow tasks
 USAGE:
   ksegments generate  --workflow eager|sarek [--seed N] --out FILE [--format jsonl|csv]
   ksegments simulate  --method METHOD [--frac F] [--seed N] [--workflow W] [--xla]
-  ksegments fig7      [--seed N] [--xla] [--workers N]
+  ksegments fig7      [--seed N] [--xla] [--workers N] [--method SEL]
   ksegments fig8      [--seed N] [--xla] [--workers N]
   ksegments fig4      [--seed N] [--xla]
   ksegments fig1      [--seed N]
   ksegments ablate    [--seed N] [--workers N]
-  ksegments report    [--seed N] [--xla] [--out FILE] [--workers N]
+  ksegments report    [--seed N] [--xla] [--out FILE] [--workers N] [--method SEL]
   ksegments validate-runtime
   ksegments serve     [--seed N] [--shards N] [--workers N]
   ksegments schedule  [--nodes N] [--node-gib G] [--arrival SECS]
@@ -58,7 +55,11 @@ USAGE:
                       [--sweep] [--workers N]
 
 METHODS: default | ppm | ppm-improved | lr | ksegments-selective |
-         ksegments-partial | ksegments-adaptive
+         ksegments-partial | ksegments-adaptive | ensemble | dynseg
+
+For fig7/report, --method SEL selects the comparison rows: "all" (the
+default — the whole predictor zoo) or a comma list of method names,
+e.g. --method ksegments-selective,ensemble,dynseg.
 
 --workers defaults to the available cores. For fig7/fig8/ablate/report
 it sizes the evaluation pool and results are identical for any worker
@@ -147,39 +148,17 @@ fn workflow_by_name(name: &str) -> Result<ksegments::workload::WorkflowSpec> {
 }
 
 fn method_by_name(name: &str, choice: FitterChoice) -> Result<Box<dyn MemoryPredictor>> {
-    let kseg = |strategy| -> Box<dyn MemoryPredictor> {
-        match choice {
-            FitterChoice::Native => Box::new(KSegmentsPredictor::native(4, strategy)),
-            FitterChoice::Xla => {
-                let fitter: Box<dyn KsegFitter> = match XlaFitter::load_default() {
-                    Ok(f) => Box::new(f),
-                    Err(e) => {
-                        eprintln!("warning: {e:#}; using native fitter");
-                        Box::new(NativeFitter)
-                    }
-                };
-                Box::new(KSegmentsPredictor::with_fitter(
-                    fitter,
-                    Default::default(),
-                    strategy,
-                ))
-            }
-        }
-    };
-    Ok(match name {
-        "default" => Box::new(DefaultConfigPredictor::new()),
-        "ppm" => Box::new(PpmPredictor::original()),
-        "ppm-improved" => Box::new(PpmPredictor::improved()),
-        "lr" => Box::new(LrWittPredictor::paper_baseline()),
-        "ksegments-selective" => kseg(RetryStrategy::Selective),
-        "ksegments-partial" => kseg(RetryStrategy::Partial),
-        "ksegments-adaptive" => Box::new(
-            ksegments::predictors::adaptive_k::AdaptiveKPredictor::native(
-                RetryStrategy::Selective,
-            ),
-        ),
-        other => bail!("unknown method {other:?}"),
-    })
+    // One source of truth for key → predictor: the bench harness
+    // roster (the same construction the fig7 grid and the scheduling
+    // sweep use), so every CLI surface sees the same zoo.
+    ksegments::bench_harness::make_method(name, choice)
+        .ok_or_else(|| anyhow!("unknown method {name:?} (see METHODS in --help)"))
+}
+
+/// Resolve the fig7/report `--method` selection (default "all").
+fn methods_arg(args: &Args) -> Result<Vec<&'static str>> {
+    let sel = args.kv.get("method").map(String::as_str).unwrap_or("all");
+    ksegments::bench_harness::resolve_methods(sel).map_err(|e| anyhow!(e))
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
@@ -248,7 +227,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_fig7(args: &Args) -> Result<()> {
-    let results = run_fig7(args.seed(), args.fitter(), args.workers());
+    let methods = methods_arg(args)?;
+    let results = run_fig7_selected(args.seed(), args.fitter(), args.workers(), &methods);
     println!("{}", results.render_wastage());
     println!("{}", results.render_wins());
     println!("{}", results.render_retries());
@@ -365,7 +345,8 @@ ksegments schedule — discrete-event cluster scheduling simulator
   --arrival SECS  mean inter-arrival gap of the task stream (default 5)
   --policy P      static | segment | both (default both)
   --method M      predictor driving the reservations
-                  (default ksegments-selective)
+                  (default ksegments-selective; any METHODS entry from
+                  `ksegments --help`, incl. ensemble and dynseg)
   --frac F        warm-up training fraction (default 0.5)
   --seed N        trace + arrival seed (default 42)
   --workflow W    eager | sarek (default eager)
@@ -497,10 +478,12 @@ fn real_main() -> Result<()> {
             Ok(())
         }
         "report" => {
+            let methods = methods_arg(&args)?;
             let text = ksegments::bench_harness::report::full_report(
                 args.seed(),
                 args.fitter(),
                 args.workers(),
+                &methods,
             );
             match args.kv.get("out") {
                 Some(path) => {

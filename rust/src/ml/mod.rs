@@ -19,5 +19,7 @@ pub mod step_fn;
 
 pub use fitter::{FitResult, KsegFitter, NativeFitter};
 pub use linreg::{LinReg, ResidualStats};
-pub use segmentation::{seg_peaks, segment_bounds};
+pub use segmentation::{
+    greedy_segment_bounds, index_bounds_to_time, seg_peaks, seg_peaks_with_bounds, segment_bounds,
+};
 pub use step_fn::StepFunction;

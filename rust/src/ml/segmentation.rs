@@ -39,10 +39,114 @@ pub fn segment_time_bounds(r_e: f64, t: usize, k: usize) -> Vec<f64> {
 
 /// Per-segment peaks `Y** = (max(s_1), ..., max(s_k))` of one series.
 pub fn seg_peaks(samples: &[f64], k: usize) -> Vec<f64> {
-    segment_bounds(samples.len(), k)
-        .into_iter()
-        .map(|(lo, hi)| samples[lo..hi].iter().copied().fold(f64::MIN, f64::max))
+    seg_peaks_with_bounds(samples, &segment_bounds(samples.len(), k))
+}
+
+/// Per-segment peaks over caller-supplied index bounds (the dynamic
+/// segmentation path: bounds come from change-point detection on the
+/// window's mean curve, not from the equal-width split).
+pub fn seg_peaks_with_bounds(samples: &[f64], bounds: &[(usize, usize)]) -> Vec<f64> {
+    bounds
+        .iter()
+        .map(|&(lo, hi)| samples[lo..hi].iter().copied().fold(f64::MIN, f64::max))
         .collect()
+}
+
+/// Map index bounds over a `t`-sample grid onto time boundaries of a
+/// predicted runtime `r_e` (same formula as [`segment_time_bounds`],
+/// generalized to arbitrary change points).
+pub fn index_bounds_to_time(r_e: f64, t: usize, bounds: &[(usize, usize)]) -> Vec<f64> {
+    assert!(r_e > 0.0, "non-positive runtime");
+    bounds.iter().map(|&(_, hi)| r_e * hi as f64 / t as f64).collect()
+}
+
+/// Wastage cost of covering `curve[lo..hi)` with one flat piece at the
+/// segment max: `Σ (max − y_i)` — exactly the over-allocation integral
+/// (in sample units) a step-function segment pays on this curve.
+fn segment_cost(curve: &[f64], lo: usize, hi: usize) -> f64 {
+    let max = curve[lo..hi].iter().copied().fold(f64::MIN, f64::max);
+    curve[lo..hi].iter().map(|y| max - y).sum()
+}
+
+/// Best interior split of `curve[lo..hi)`: the position `lo < p < hi`
+/// minimizing `cost(lo,p) + cost(p,hi)`, with the earliest such `p` on
+/// ties (deterministic). `None` when the segment is too short to split.
+///
+/// O(hi − lo): one backward pass builds suffix max/sum (the right
+/// piece), one forward pass sweeps the left piece's running max/sum.
+fn best_split(curve: &[f64], lo: usize, hi: usize) -> Option<(usize, f64)> {
+    let len = hi - lo;
+    if len < 2 {
+        return None;
+    }
+    // suffix[i] = (max, sum) of curve[lo+i..hi)
+    let mut suffix = vec![(f64::MIN, 0.0f64); len + 1];
+    for i in (0..len).rev() {
+        let y = curve[lo + i];
+        let (m, s) = suffix[i + 1];
+        suffix[i] = (m.max(y), s + y);
+    }
+    let mut best: Option<(usize, f64)> = None;
+    let mut left_max = f64::MIN;
+    let mut left_sum = 0.0f64;
+    for p in lo + 1..hi {
+        let y = curve[p - 1];
+        left_max = left_max.max(y);
+        left_sum += y;
+        let n_left = (p - lo) as f64;
+        let (r_max, r_sum) = suffix[p - lo];
+        let n_right = (hi - p) as f64;
+        let cost = (n_left * left_max - left_sum) + (n_right * r_max - r_sum);
+        let better = match best {
+            Some((_, c)) => cost < c,
+            None => true,
+        };
+        if better {
+            best = Some((p, cost));
+        }
+    }
+    best
+}
+
+/// KS+-style change-point segmentation: split the curve into at most
+/// `k` segments by **greedy error-minimizing binary splits** instead of
+/// `k` equal-width bins. Each round splits whichever existing segment
+/// yields the largest strictly-positive reduction of the total
+/// flat-piece wastage cost; ties break toward the earliest segment and
+/// earliest position, so the result is fully deterministic. A curve
+/// that no split can improve (e.g. constant usage) stops early with
+/// fewer than `k` segments — the budget is a ceiling, not a quota.
+///
+/// Returns contiguous half-open index ranges covering `[0, t)`.
+/// Panics when `k == 0` or the curve is empty.
+pub fn greedy_segment_bounds(curve: &[f64], k: usize) -> Vec<(usize, usize)> {
+    assert!(k >= 1, "k must be >= 1");
+    let t = curve.len();
+    assert!(t >= 1, "empty curve");
+    let mut segs: Vec<(usize, usize)> = vec![(0, t)];
+    while segs.len() < k.min(t) {
+        let mut winner: Option<(usize, usize, f64)> = None; // (seg idx, pos, reduction)
+        for (i, &(lo, hi)) in segs.iter().enumerate() {
+            let Some((p, split_cost)) = best_split(curve, lo, hi) else {
+                continue;
+            };
+            let reduction = segment_cost(curve, lo, hi) - split_cost;
+            let better = match winner {
+                Some((_, _, r)) => reduction > r,
+                None => true,
+            };
+            if reduction > 0.0 && better {
+                winner = Some((i, p, reduction));
+            }
+        }
+        let Some((i, p, _)) = winner else {
+            break; // nothing left to gain: fewer than k segments
+        };
+        let (lo, hi) = segs[i];
+        segs[i] = (lo, p);
+        segs.insert(i + 1, (p, hi));
+    }
+    segs
 }
 
 #[cfg(test)]
@@ -110,5 +214,72 @@ mod tests {
         let y = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0];
         // t=7, k=3 -> i=2: [0,2) [2,4) [4,7)
         assert_eq!(seg_peaks(&y, 3), vec![2.0, 4.0, 7.0]);
+    }
+
+    #[test]
+    fn peaks_with_custom_bounds() {
+        let y = [1.0, 5.0, 2.0, 3.0, 9.0, 0.0];
+        assert_eq!(
+            seg_peaks_with_bounds(&y, &[(0, 1), (1, 5), (5, 6)]),
+            vec![1.0, 9.0, 0.0]
+        );
+    }
+
+    #[test]
+    fn greedy_finds_the_change_point_of_a_step_profile() {
+        // flat 10 for 12 samples, then flat 100 for 4: one split at the
+        // jump removes ALL wastage — greedy must find index 12 exactly.
+        let mut y = vec![10.0; 12];
+        y.extend(vec![100.0; 4]);
+        let b = greedy_segment_bounds(&y, 2);
+        assert_eq!(b, vec![(0, 12), (12, 16)]);
+        // k budget above what helps: constant pieces can't be improved,
+        // so the result stays at 2 segments even with budget 4
+        assert_eq!(greedy_segment_bounds(&y, 4), vec![(0, 12), (12, 16)]);
+    }
+
+    #[test]
+    fn greedy_on_linear_ramp_matches_equal_width() {
+        // a straight line's optimal binary splits are midpoints, so the
+        // greedy bounds coincide with the equal-width segmentation when
+        // k divides t — the equal-k-budget differential anchor
+        let y: Vec<f64> = (0..256).map(|i| i as f64).collect();
+        assert_eq!(greedy_segment_bounds(&y, 4), segment_bounds(256, 4));
+    }
+
+    #[test]
+    fn greedy_flat_curve_stays_single_segment() {
+        let y = vec![7.0; 32];
+        assert_eq!(greedy_segment_bounds(&y, 8), vec![(0, 32)]);
+    }
+
+    #[test]
+    fn greedy_covers_exactly_and_respects_budget() {
+        let y: Vec<f64> = (0..100)
+            .map(|i| ((i * 2654435761usize) % 977) as f64)
+            .collect();
+        for k in 1..=16 {
+            let b = greedy_segment_bounds(&y, k);
+            assert!(!b.is_empty() && b.len() <= k);
+            assert_eq!(b[0].0, 0);
+            assert_eq!(b.last().unwrap().1, 100);
+            for w in b.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+            }
+            assert!(b.iter().all(|(lo, hi)| hi > lo));
+        }
+    }
+
+    #[test]
+    fn greedy_single_sample_and_k1() {
+        assert_eq!(greedy_segment_bounds(&[5.0], 3), vec![(0, 1)]);
+        assert_eq!(greedy_segment_bounds(&[1.0, 9.0, 1.0], 1), vec![(0, 3)]);
+    }
+
+    #[test]
+    fn index_bounds_map_to_time() {
+        let b = vec![(0usize, 3usize), (3, 4)];
+        let t = index_bounds_to_time(40.0, 4, &b);
+        assert_eq!(t, vec![30.0, 40.0]);
     }
 }

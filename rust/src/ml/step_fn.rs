@@ -20,19 +20,44 @@ pub struct StepFunction {
 }
 
 impl StepFunction {
-    /// Build from raw boundary/value vectors.
+    /// Build from raw boundary/value vectors, validating the invariants
+    /// `simulate_attempt`'s two-pointer piece walk relies on: non-empty,
+    /// equal lengths, and boundaries positive, finite and **strictly**
+    /// increasing. Duplicate boundaries would create zero-width pieces
+    /// (silently tolerated only by accident) and unsorted boundaries
+    /// would mis-attribute failure times, so both are rejected here at
+    /// construction instead of surfacing downstream.
     ///
-    /// Panics on empty input, mismatched lengths, or non-increasing
-    /// boundaries. Does NOT clamp values — see [`Self::monotone_clamped`]
-    /// for the paper's construction.
+    /// Does NOT clamp values — see [`Self::monotone_clamped`] for the
+    /// paper's construction.
+    pub fn try_new(bounds: Vec<f64>, values: Vec<f64>) -> Result<Self, String> {
+        if bounds.is_empty() {
+            return Err("empty step function".into());
+        }
+        if bounds.len() != values.len() {
+            return Err(format!(
+                "bounds/values length mismatch: {} vs {}",
+                bounds.len(),
+                values.len()
+            ));
+        }
+        if bounds.iter().any(|b| !b.is_finite()) {
+            return Err(format!("non-finite boundary: {bounds:?}"));
+        }
+        if !(bounds.windows(2).all(|w| w[1] > w[0]) && bounds[0] > 0.0) {
+            return Err(format!(
+                "boundaries must be positive and strictly increasing: {bounds:?}"
+            ));
+        }
+        debug_assert!(bounds.windows(2).all(|w| w[1] > w[0]));
+        Ok(StepFunction { bounds, values })
+    }
+
+    /// [`Self::try_new`], panicking on invalid input (the predictors'
+    /// internal constructions are valid by design; a panic here is a
+    /// bug in the caller, not bad data).
     pub fn new(bounds: Vec<f64>, values: Vec<f64>) -> Self {
-        assert!(!bounds.is_empty(), "empty step function");
-        assert_eq!(bounds.len(), values.len(), "bounds/values length mismatch");
-        assert!(
-            bounds.windows(2).all(|w| w[1] > w[0]) && bounds[0] > 0.0,
-            "boundaries must be positive and strictly increasing: {bounds:?}"
-        );
-        StepFunction { bounds, values }
+        Self::try_new(bounds, values).unwrap_or_else(|e| panic!("{e}"))
     }
 
     /// The paper's §III-C construction: split predicted runtime `r_e`
@@ -266,5 +291,35 @@ mod tests {
     #[should_panic]
     fn mismatched_lengths_panic() {
         StepFunction::new(vec![10.0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn try_new_rejects_duplicate_bounds() {
+        // Regression: duplicate boundaries produce zero-width pieces
+        // that the attempt walk only tolerated by accident.
+        let err = StepFunction::try_new(vec![5.0, 5.0, 10.0], vec![1.0, 2.0, 3.0]);
+        assert!(err.is_err(), "{err:?}");
+        assert!(err.unwrap_err().contains("strictly increasing"));
+    }
+
+    #[test]
+    fn try_new_rejects_unsorted_and_nonpositive_and_nonfinite() {
+        assert!(StepFunction::try_new(vec![20.0, 10.0], vec![1.0, 2.0]).is_err());
+        assert!(StepFunction::try_new(vec![0.0, 10.0], vec![1.0, 2.0]).is_err());
+        assert!(StepFunction::try_new(vec![-3.0], vec![1.0]).is_err());
+        assert!(StepFunction::try_new(vec![f64::NAN], vec![1.0]).is_err());
+        assert!(StepFunction::try_new(vec![], vec![]).is_err());
+    }
+
+    #[test]
+    fn try_new_accepts_single_segment() {
+        // k = 1 is the degenerate-but-valid case (a static allocation
+        // expressed as a one-piece step function).
+        let f = StepFunction::try_new(vec![30.0], vec![512.0]).unwrap();
+        assert_eq!(f.k(), 1);
+        assert_eq!(f.value_at(0.0), 512.0);
+        assert_eq!(f.value_at(1e9), 512.0);
+        assert_eq!(f.segment_at(29.0), 0);
+        assert!((f.integral(30.0) - 512.0 * 30.0).abs() < 1e-9);
     }
 }

@@ -1,0 +1,424 @@
+//! Ensemble — a Sizey-style scored model ensemble (arXiv 2407.16353),
+//! the strongest *static* competitor in the follow-up literature.
+//!
+//! Sizey maintains several cheap peak-memory sub-models per task type,
+//! scores each on the sliding training window with a **resource
+//! allocation quality** (RAQ) metric that interpolates between failure
+//! avoidance and wastage minimization, and predicts with whichever
+//! sub-model currently scores best. Our sub-model roster:
+//!
+//! * **Linear** — `peak ~ input size` regression (the Witt-style model);
+//! * **Percentile** — the q-th percentile of the window's peaks
+//!   (input-independent, robust to outliers);
+//! * **PeakMax** — the window maximum (the conservative envelope).
+//!
+//! Per window row `i` with prediction `p_i` and observed peak `y_i`:
+//!
+//! ```text
+//! raq_i = α·[p_i ≥ y_i]  +  (1−α)·min(p_i,y_i)/max(p_i,y_i)
+//! ```
+//!
+//! `α` weights failure avoidance (the indicator) against allocation
+//! efficiency (1 at a perfect fit, → 0 as over- or under-sizing
+//! grows); a sub-model's score is the mean RAQ over the window. The
+//! k-Segments paper's §III-B offset mechanism is applied **on top** of
+//! the winning sub-model: its largest historical underprediction over
+//! the window is added to the prediction, so the selected model is
+//! conservative the same way every other learned predictor here is.
+//!
+//! Failure handling doubles the failed allocation (capped at node
+//! max), like PPM Improved and LR.
+
+use std::collections::BTreeMap;
+
+use crate::ml::linreg::LinReg;
+use crate::trace::TaskRun;
+use crate::units::MemMiB;
+use crate::util::stats;
+
+use super::history::HistoryMap;
+use super::{Allocation, Defaults, FailureInfo, MemoryPredictor, MIN_ALLOC};
+
+/// The ensemble's sub-model roster, in deterministic tie-break order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubModel {
+    Linear,
+    Percentile,
+    PeakMax,
+}
+
+/// All sub-models, in scoring/tie-break order.
+pub const SUB_MODELS: [SubModel; 3] = [SubModel::Linear, SubModel::Percentile, SubModel::PeakMax];
+
+impl SubModel {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SubModel::Linear => "linear",
+            SubModel::Percentile => "percentile",
+            SubModel::PeakMax => "peak-max",
+        }
+    }
+}
+
+/// Tunables.
+#[derive(Debug, Clone)]
+pub struct EnsembleConfig {
+    /// RAQ interpolation weight: 1.0 scores pure failure avoidance,
+    /// 0.0 pure allocation efficiency (default 0.5).
+    pub alpha: f64,
+    /// Percentile used by the [`SubModel::Percentile`] model.
+    pub percentile: f64,
+    /// Sliding training window (most recent executions kept).
+    pub n_hist: usize,
+    /// Executions required before the ensemble replaces the default.
+    pub min_train: usize,
+    /// Retry factor multiplying a failed allocation (default 2).
+    pub retry_factor: f64,
+    /// Allocation floor (paper §IV-A: 100 MB).
+    pub min_alloc: MemMiB,
+    /// Node capacity ceiling.
+    pub node_max: MemMiB,
+    /// Apply the §III-B max-underprediction offset on top of the
+    /// winning sub-model (off = the scoring ablation).
+    pub use_offsets: bool,
+}
+
+impl Default for EnsembleConfig {
+    fn default() -> Self {
+        EnsembleConfig {
+            alpha: 0.5,
+            percentile: 95.0,
+            n_hist: 64,
+            min_train: 2,
+            retry_factor: 2.0,
+            min_alloc: MIN_ALLOC,
+            node_max: MemMiB::from_gib(128.0),
+            use_offsets: true,
+        }
+    }
+}
+
+/// One fitted ensemble state for a task type (cached per history
+/// version, like the k-Segments fit cache).
+#[derive(Debug, Clone)]
+pub struct EnsembleFit {
+    lr: LinReg,
+    percentile_value: f64,
+    peak_max: f64,
+    /// Mean window RAQ per sub-model, in [`SUB_MODELS`] order.
+    pub scores: [f64; 3],
+    /// The argmax sub-model (earliest wins ties).
+    pub chosen: SubModel,
+    /// Max historical underprediction of the chosen sub-model.
+    pub offset: f64,
+}
+
+impl EnsembleFit {
+    fn raw_predict(&self, model: SubModel, x: f64) -> f64 {
+        match model {
+            SubModel::Linear => self.lr.predict(x),
+            SubModel::Percentile => self.percentile_value,
+            SubModel::PeakMax => self.peak_max,
+        }
+    }
+
+    /// Score of the selected sub-model (== the max of `scores`).
+    pub fn chosen_score(&self) -> f64 {
+        let idx = SUB_MODELS.iter().position(|m| *m == self.chosen).unwrap();
+        self.scores[idx]
+    }
+}
+
+/// The Sizey-style ensemble predictor.
+#[derive(Debug, Clone)]
+pub struct EnsemblePredictor {
+    cfg: EnsembleConfig,
+    defaults: Defaults,
+    histories: HistoryMap,
+    fits: BTreeMap<String, (u64, EnsembleFit)>,
+}
+
+/// Mean RAQ of predictions `p` against observed peaks `y`.
+fn mean_raq(alpha: f64, p: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(p.len(), y.len());
+    let raq = |p: f64, y: f64| {
+        let p = p.max(1e-9);
+        let y = y.max(1e-9);
+        // within float noise of covering counts as covering: an exact
+        // in-window fit must score a full success term, not a coin flip
+        let success = if p >= y * (1.0 - 1e-9) { 1.0 } else { 0.0 };
+        let efficiency = p.min(y) / p.max(y);
+        alpha * success + (1.0 - alpha) * efficiency
+    };
+    stats::mean(&p.iter().zip(y).map(|(&p, &y)| raq(p, y)).collect::<Vec<_>>())
+}
+
+impl EnsemblePredictor {
+    pub fn with_config(cfg: EnsembleConfig) -> Self {
+        assert!((0.0..=1.0).contains(&cfg.alpha), "alpha in [0,1]");
+        assert!(cfg.retry_factor > 1.0, "retry factor must make progress");
+        let histories = HistoryMap::new(cfg.n_hist, 1); // peaks only
+        EnsemblePredictor { cfg, defaults: Defaults::default(), histories, fits: BTreeMap::new() }
+    }
+
+    pub fn new() -> Self {
+        Self::with_config(EnsembleConfig::default())
+    }
+
+    pub fn config(&self) -> &EnsembleConfig {
+        &self.cfg
+    }
+
+    /// Current fit for a task (refit lazily when the history advanced);
+    /// `None` below `min_train`. Public for observability and the
+    /// quality-metric differential tests.
+    pub fn fit_for(&mut self, task_type: &str) -> Option<EnsembleFit> {
+        let h = self.histories.get(task_type)?;
+        if h.len() < self.cfg.min_train {
+            return None;
+        }
+        let version = h.total_seen();
+        if let Some((v, fit)) = self.fits.get(task_type) {
+            if *v == version {
+                return Some(fit.clone());
+            }
+        }
+        let (x, y) = (h.x().to_vec(), h.peaks().to_vec());
+        let lr = LinReg::fit(&x, &y);
+        let mut fit = EnsembleFit {
+            lr,
+            percentile_value: stats::percentile(&y, self.cfg.percentile),
+            peak_max: y.iter().copied().fold(f64::MIN, f64::max),
+            scores: [0.0; 3],
+            chosen: SubModel::Linear,
+            offset: 0.0,
+        };
+        for (i, model) in SUB_MODELS.iter().enumerate() {
+            let preds: Vec<f64> = x.iter().map(|&xi| fit.raw_predict(*model, xi)).collect();
+            fit.scores[i] = mean_raq(self.cfg.alpha, &preds, &y);
+        }
+        // argmax with earliest-wins tie-break (strict > keeps it stable)
+        let mut best = 0usize;
+        for i in 1..SUB_MODELS.len() {
+            if fit.scores[i] > fit.scores[best] {
+                best = i;
+            }
+        }
+        fit.chosen = SUB_MODELS[best];
+        if self.cfg.use_offsets {
+            fit.offset = x
+                .iter()
+                .zip(&y)
+                .map(|(&xi, &yi)| yi - fit.raw_predict(fit.chosen, xi))
+                .fold(0.0f64, f64::max);
+        }
+        self.fits.insert(task_type.to_string(), (version, fit.clone()));
+        Some(fit)
+    }
+}
+
+impl Default for EnsemblePredictor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MemoryPredictor for EnsemblePredictor {
+    fn name(&self) -> String {
+        "Sizey Ensemble".to_string()
+    }
+
+    fn prime(&mut self, task_type: &str, default: MemMiB) {
+        self.defaults.set(task_type, default);
+    }
+
+    fn predict(&mut self, task_type: &str, input_mib: f64) -> Allocation {
+        let default = self.defaults.get(task_type);
+        let Some(fit) = self.fit_for(task_type) else {
+            return Allocation::Static(default);
+        };
+        let pred = (fit.raw_predict(fit.chosen, input_mib) + fit.offset)
+            .max(self.cfg.min_alloc.0)
+            .min(self.cfg.node_max.0);
+        Allocation::Static(MemMiB(pred))
+    }
+
+    fn on_failure(
+        &mut self,
+        _task_type: &str,
+        _input_mib: f64,
+        failed: &Allocation,
+        _info: &FailureInfo,
+    ) -> Allocation {
+        Allocation::Static(MemMiB(
+            (failed.max_value() * self.cfg.retry_factor).min(self.cfg.node_max.0),
+        ))
+    }
+
+    fn observe(&mut self, run: &TaskRun) {
+        self.histories.push(run);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::UsageSeries;
+    use crate::units::Seconds;
+
+    fn run(input: f64, peak: f64) -> TaskRun {
+        TaskRun {
+            task_type: "t".into(),
+            input_mib: input,
+            runtime: Seconds(4.0),
+            series: UsageSeries::new(2.0, vec![peak * 0.5, peak]),
+            seq: 0,
+        }
+    }
+
+    #[test]
+    fn warmup_returns_default() {
+        let mut p = EnsemblePredictor::new();
+        p.prime("t", MemMiB(4096.0));
+        assert_eq!(p.predict("t", 10.0), Allocation::Static(MemMiB(4096.0)));
+        p.observe(&run(10.0, 100.0));
+        assert_eq!(p.predict("t", 10.0), Allocation::Static(MemMiB(4096.0)));
+    }
+
+    #[test]
+    fn linear_workload_selects_linear_submodel() {
+        // strongly input-correlated peaks: the regression's in-window
+        // RAQ beats both flat models
+        let mut p = EnsemblePredictor::new();
+        for i in 1..=16 {
+            let x = 100.0 * i as f64;
+            p.observe(&run(x, 50.0 + 0.5 * x));
+        }
+        let fit = p.fit_for("t").unwrap();
+        assert_eq!(fit.chosen, SubModel::Linear);
+        // noiseless -> offset ~ 0, prediction ≈ 50 + 0.5 x
+        let Allocation::Static(m) = p.predict("t", 4000.0) else {
+            panic!()
+        };
+        assert!((m.0 - 2050.0).abs() < 1.0, "{m:?}");
+    }
+
+    #[test]
+    fn uncorrelated_peaks_prefer_flat_submodel() {
+        // peaks independent of input with an occasional tall run: the
+        // percentile/max models score better than a sloped line fitted
+        // to noise
+        let mut p = EnsemblePredictor::new();
+        let peaks = [100.0, 104.0, 98.0, 101.0, 160.0, 99.0, 103.0, 97.0];
+        for (i, &pk) in peaks.iter().enumerate() {
+            p.observe(&run(1000.0 + ((i * 7919) % 13) as f64, pk));
+        }
+        let fit = p.fit_for("t").unwrap();
+        assert_ne!(fit.chosen, SubModel::Linear, "scores {:?}", fit.scores);
+    }
+
+    #[test]
+    fn chosen_is_argmax_of_scores() {
+        let mut p = EnsemblePredictor::new();
+        for i in 1..=12 {
+            p.observe(&run(50.0 * i as f64, 20.0 + 3.0 * i as f64));
+        }
+        let fit = p.fit_for("t").unwrap();
+        let max = fit.scores.iter().copied().fold(f64::MIN, f64::max);
+        assert_eq!(fit.chosen_score(), max);
+        for s in fit.scores {
+            assert!(fit.chosen_score() >= s);
+            assert!((0.0..=1.0).contains(&s), "RAQ out of range: {s}");
+        }
+    }
+
+    #[test]
+    fn offset_covers_window_underpredictions() {
+        // one outlier the chosen model underpredicts: the offset must
+        // lift the prediction to cover every window peak at its own x
+        let mut p = EnsemblePredictor::new();
+        for i in 1..=10 {
+            p.observe(&run(100.0 * i as f64, 100.0));
+        }
+        p.observe(&run(550.0, 400.0));
+        let fit = p.fit_for("t").unwrap();
+        assert!(fit.offset > 0.0);
+        let Allocation::Static(m) = p.predict("t", 550.0) else {
+            panic!()
+        };
+        assert!(m.0 >= 400.0 - 1e-6, "{m:?}");
+    }
+
+    #[test]
+    fn offsets_off_disables_lift() {
+        let cfg = EnsembleConfig { use_offsets: false, ..EnsembleConfig::default() };
+        let mut p = EnsemblePredictor::with_config(cfg);
+        for i in 1..=10 {
+            p.observe(&run(100.0 * i as f64, 100.0));
+        }
+        p.observe(&run(550.0, 400.0));
+        assert_eq!(p.fit_for("t").unwrap().offset, 0.0);
+    }
+
+    #[test]
+    fn alpha_extremes_shift_selection_pressure() {
+        // α = 1 scores only failure avoidance: the max model (never
+        // underpredicts in-window) must win
+        let cfg = EnsembleConfig { alpha: 1.0, ..EnsembleConfig::default() };
+        let mut p = EnsemblePredictor::with_config(cfg);
+        let peaks = [100.0, 140.0, 90.0, 120.0, 80.0, 130.0];
+        for (i, &pk) in peaks.iter().enumerate() {
+            p.observe(&run(100.0 + i as f64, pk));
+        }
+        let fit = p.fit_for("t").unwrap();
+        assert_eq!(fit.chosen_score(), 1.0, "scores {:?}", fit.scores);
+    }
+
+    #[test]
+    fn floor_and_cap_apply() {
+        let cfg = EnsembleConfig { node_max: MemMiB(500.0), ..EnsembleConfig::default() };
+        let mut p = EnsemblePredictor::with_config(cfg);
+        for i in 1..=4 {
+            p.observe(&run(i as f64 * 100.0, 1.0)); // tiny peaks -> floor
+        }
+        let Allocation::Static(m) = p.predict("t", 100.0) else {
+            panic!()
+        };
+        assert_eq!(m.0, MIN_ALLOC.0);
+        for i in 1..=4 {
+            p.observe(&run(i as f64 * 100.0, i as f64 * 400.0)); // slope -> cap
+        }
+        let Allocation::Static(m) = p.predict("t", 1e7) else {
+            panic!()
+        };
+        assert_eq!(m.0, 500.0);
+    }
+
+    #[test]
+    fn failure_doubles_capped() {
+        let mut p = EnsemblePredictor::new();
+        let info = FailureInfo { time_s: 1.0, used_mib: 900.0, attempt: 1 };
+        let next = p.on_failure("t", 1.0, &Allocation::Static(MemMiB(600.0)), &info);
+        assert_eq!(next, Allocation::Static(MemMiB(1200.0)));
+        let huge = p.on_failure("t", 1.0, &Allocation::Static(MemMiB::from_gib(100.0)), &info);
+        assert_eq!(huge, Allocation::Static(MemMiB::from_gib(128.0)));
+    }
+
+    #[test]
+    fn fit_cache_invalidates_on_observation() {
+        let mut p = EnsemblePredictor::new();
+        for i in 1..=4 {
+            p.observe(&run(100.0 * i as f64, 10.0 * i as f64));
+        }
+        let a = p.fit_for("t").unwrap().peak_max;
+        p.observe(&run(900.0, 999.0));
+        let b = p.fit_for("t").unwrap().peak_max;
+        assert_eq!(a, 40.0);
+        assert_eq!(b, 999.0);
+    }
+
+    #[test]
+    fn name_is_stable() {
+        assert_eq!(EnsemblePredictor::new().name(), "Sizey Ensemble");
+    }
+}

@@ -8,11 +8,24 @@ use crate::trace::TaskRun;
 
 /// Ring buffer of the most recent executions of one task type, already
 //  transformed into fit-ready arrays.
+///
+/// Eviction is amortized O(1): the backing vectors keep up to `cap`
+/// dead rows at their front (tracked by `start`) and are compacted
+/// with a single `drain` once the slack fills, instead of an O(cap)
+/// memmove per completion (`Vec::remove(0)` — the former hot-path
+/// cost on every `observe`; see `hotpath` bench `history/push-evict`).
+/// The live window is always the contiguous tail `[start..]`, so the
+/// `x()`/`runtime()`/`peaks()` slice views stay free.
 #[derive(Debug, Clone)]
 pub struct TaskHistory {
     cap: usize,
     /// Resample length for series rows (all rows share it).
     t_len: usize,
+    /// Index of the first LIVE row in the backing vectors; rows before
+    /// it have been evicted but not yet compacted away. Invariant:
+    /// `start < cap` and `len() <= cap` (so the vectors never exceed
+    /// `2·cap − 1` rows).
+    start: usize,
     x: Vec<f64>,
     runtime: Vec<f64>,
     peaks: Vec<f64>,
@@ -27,6 +40,7 @@ impl TaskHistory {
         TaskHistory {
             cap,
             t_len,
+            start: 0,
             x: Vec::new(),
             runtime: Vec::new(),
             peaks: Vec::new(),
@@ -36,11 +50,17 @@ impl TaskHistory {
     }
 
     pub fn push(&mut self, run: &TaskRun) {
-        if self.x.len() == self.cap {
-            self.x.remove(0);
-            self.runtime.remove(0);
-            self.peaks.remove(0);
-            self.series.remove(0);
+        if self.x.len() - self.start == self.cap {
+            // Evict the oldest row by advancing the head; compact the
+            // dead prefix only once per `cap` evictions.
+            self.start += 1;
+            if self.start == self.cap {
+                self.x.drain(..self.start);
+                self.runtime.drain(..self.start);
+                self.peaks.drain(..self.start);
+                self.series.drain(..self.start);
+                self.start = 0;
+            }
         }
         self.x.push(run.input_mib);
         self.runtime.push(run.runtime.0);
@@ -50,11 +70,11 @@ impl TaskHistory {
     }
 
     pub fn len(&self) -> usize {
-        self.x.len()
+        self.x.len() - self.start
     }
 
     pub fn is_empty(&self) -> bool {
-        self.x.is_empty()
+        self.len() == 0
     }
 
     pub fn total_seen(&self) -> u64 {
@@ -62,24 +82,29 @@ impl TaskHistory {
     }
 
     pub fn x(&self) -> &[f64] {
-        &self.x
+        &self.x[self.start..]
     }
 
     pub fn runtime(&self) -> &[f64] {
-        &self.runtime
+        &self.runtime[self.start..]
     }
 
     /// Whole-run peak per execution (what static baselines learn from).
     pub fn peaks(&self) -> &[f64] {
-        &self.peaks
+        &self.peaks[self.start..]
+    }
+
+    /// Resampled usage rows of the live window (fit training rows).
+    pub fn series(&self) -> &[Vec<f64>] {
+        &self.series[self.start..]
     }
 
     /// Fit-ready view for the k-Segments fitters.
     pub fn fit_input(&self) -> FitInput {
         FitInput {
-            x: self.x.clone(),
-            runtime: self.runtime.clone(),
-            series: self.series.clone(),
+            x: self.x().to_vec(),
+            runtime: self.runtime().to_vec(),
+            series: self.series().to_vec(),
         }
     }
 }
@@ -148,6 +173,29 @@ mod tests {
         assert_eq!(h.len(), 3);
         assert_eq!(h.x(), &[2.0, 3.0, 4.0]);
         assert_eq!(h.total_seen(), 5);
+    }
+
+    #[test]
+    fn ring_views_stay_correct_across_many_compactions() {
+        // Push far past cap so the lazy head crosses several compaction
+        // boundaries; the window must always be the last `cap` rows and
+        // the backing storage must stay bounded by 2·cap − 1.
+        let cap = 7;
+        let mut h = TaskHistory::new(cap, 4);
+        for i in 0..10 * cap {
+            h.push(&run(i as f64, (i + 1) as f64));
+            let lo = (i + 1).saturating_sub(cap);
+            let expect: Vec<f64> = (lo..=i).map(|j| j as f64).collect();
+            assert_eq!(h.x(), &expect[..], "window wrong after push {i}");
+            assert_eq!(h.peaks().len(), h.len());
+            assert_eq!(h.runtime().len(), h.len());
+            assert_eq!(h.series().len(), h.len());
+            assert!(h.x.len() < 2 * cap, "backing storage grew unbounded");
+        }
+        assert_eq!(h.total_seen(), 10 * cap as u64);
+        let fi = h.fit_input();
+        fi.validate().unwrap();
+        assert_eq!(fi.x, h.x());
     }
 
     #[test]

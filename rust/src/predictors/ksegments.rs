@@ -27,7 +27,7 @@ use crate::units::MemMiB;
 use crate::units::Seconds;
 
 use super::history::HistoryMap;
-use super::{Allocation, Defaults, FailureInfo, MemoryPredictor, MIN_ALLOC_MIB};
+use super::{Allocation, Defaults, FailureInfo, MemoryPredictor, MIN_ALLOC};
 
 /// §III-D failure-handling strategies.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -54,7 +54,8 @@ pub struct KSegmentsConfig {
     pub k: usize,
     /// Retry factor l multiplying failed segment allocations (default 2).
     pub retry_factor: f64,
-    /// Minimum allocation when the model predicts ≤ 0 (default 100 MB).
+    /// Minimum allocation when the model predicts ≤ 0 (default 100 MB
+    /// ≈ 95.37 MiB, [`MIN_ALLOC`]).
     pub min_alloc: MemMiB,
     /// Node capacity ceiling for any allocation.
     pub node_max: MemMiB,
@@ -75,7 +76,7 @@ impl Default for KSegmentsConfig {
         KSegmentsConfig {
             k: 4,
             retry_factor: 2.0,
-            min_alloc: MemMiB(MIN_ALLOC_MIB),
+            min_alloc: MIN_ALLOC,
             node_max: MemMiB::from_gib(128.0),
             n_hist: 64,
             t_resample: 256,
@@ -410,7 +411,7 @@ mod tests {
             panic!()
         };
         assert!(f.max_value() <= 500.0);
-        assert!(f.values()[0] >= MIN_ALLOC_MIB);
+        assert!(f.values()[0] >= MIN_ALLOC.0);
     }
 
     #[test]

@@ -8,6 +8,8 @@
 //! | [`ppm::PpmPredictor`] (`FailurePolicy::Double`) | PPM Improved (the paper's extension) |
 //! | [`lr_witt::LrWittPredictor`] | Witt et al. online LR (offsets: mean±σ / mean− / max) |
 //! | [`ksegments::KSegmentsPredictor`] | the paper's k-Segments (Selective / Partial retry) |
+//! | [`ensemble::EnsemblePredictor`] | Sizey-style scored ensemble of static sub-models (arXiv 2407.16353) |
+//! | [`dynseg::DynSegPredictor`] | KS+-style data-driven dynamic segmentation (arXiv 2408.12290) |
 //!
 //! All predictors implement [`MemoryPredictor`]: an **online** contract
 //! — `predict` before each execution, `on_failure` per failed attempt,
@@ -15,6 +17,8 @@
 
 pub mod adaptive_k;
 pub mod default_config;
+pub mod dynseg;
+pub mod ensemble;
 pub mod history;
 pub mod ksegments;
 pub mod lr_witt;
@@ -24,8 +28,13 @@ use crate::ml::step_fn::StepFunction;
 use crate::trace::TaskRun;
 use crate::units::MemMiB;
 
-/// Paper §IV-A: minimum allocation when a model predicts ≤ 0.
-pub const MIN_ALLOC_MIB: f64 = 100.0;
+/// Paper §IV-A: minimum allocation when a model predicts ≤ 0 —
+/// **100 MB** (decimal, the unit the paper quotes), which is
+/// ≈ 95.37 MiB, not 100 MiB.
+pub const MIN_ALLOC: MemMiB = MemMiB::from_mb(100.0);
+
+/// [`MIN_ALLOC`] as raw MiB, for clamping in f64 arithmetic.
+pub const MIN_ALLOC_MIB: f64 = MIN_ALLOC.0;
 
 /// A memory allocation for one task attempt: either a single static
 /// value for the whole runtime (all baselines) or the k-Segments step
@@ -181,6 +190,16 @@ mod tests {
         assert_eq!(a.max_value(), 400.0);
         assert_eq!(a.segment_at(15.0), 1);
         assert!(a.is_dynamic());
+    }
+
+    #[test]
+    fn min_alloc_floor_is_100_decimal_megabytes() {
+        // Regression: the floor used to be hard-coded as 100.0 MiB; the
+        // paper's §IV-A floor is 100 MB = 100e6 bytes ≈ 95.37 MiB.
+        assert_eq!(MIN_ALLOC, MemMiB::from_mb(100.0));
+        assert!((MIN_ALLOC_MIB - 95.367431640625).abs() < 1e-9);
+        assert!(MIN_ALLOC_MIB < 100.0);
+        assert!((MIN_ALLOC.as_mb() - 100.0).abs() < 1e-12);
     }
 
     #[test]

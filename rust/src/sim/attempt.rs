@@ -124,7 +124,11 @@ mod tests {
     #[test]
     fn static_success_wastage() {
         // alloc 100 for 6 s; usage 10,20,30 -> waste (90+80+70)*2 = 480
-        let out = simulate_attempt(&series(vec![10.0, 20.0, 30.0]), &Allocation::Static(MemMiB(100.0)), 1);
+        let out = simulate_attempt(
+            &series(vec![10.0, 20.0, 30.0]),
+            &Allocation::Static(MemMiB(100.0)),
+            1,
+        );
         match out {
             AttemptOutcome::Success { wastage_mibs } => {
                 assert!((wastage_mibs - 480.0).abs() < 1e-9)
@@ -154,7 +158,11 @@ mod tests {
 
     #[test]
     fn exact_fit_is_success() {
-        let out = simulate_attempt(&series(vec![100.0, 100.0]), &Allocation::Static(MemMiB(100.0)), 1);
+        let out = simulate_attempt(
+            &series(vec![100.0, 100.0]),
+            &Allocation::Static(MemMiB(100.0)),
+            1,
+        );
         assert!(out.is_success());
         assert!(out.wastage_mibs().abs() < 1e-9);
     }
@@ -229,6 +237,49 @@ mod tests {
         assert!(out.is_success());
         // waste = 10 MiB * 8 s
         assert!((out.wastage_mibs() - 80.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_segment_dynamic_curve() {
+        // Regression (k = 1): the two-pointer walk must hold the single
+        // piece over the whole run, attribute failures at the exact
+        // sample start, and account wastage like the static path.
+        let ok = simulate_attempt(
+            &series(vec![30.0, 40.0, 20.0]),
+            &step(vec![6.0], vec![50.0]),
+            1,
+        );
+        match ok {
+            AttemptOutcome::Success { wastage_mibs } => {
+                // (20 + 10 + 30) * 2 = 120
+                assert!((wastage_mibs - 120.0).abs() < 1e-9, "{wastage_mibs}");
+            }
+            _ => panic!("{ok:?}"),
+        }
+        let fail = simulate_attempt(
+            &series(vec![30.0, 90.0, 20.0]),
+            &step(vec![6.0], vec![50.0]),
+            3,
+        );
+        match fail {
+            AttemptOutcome::Failure { info, wastage_mibs } => {
+                assert_eq!(info.time_s, 2.0);
+                assert_eq!(info.used_mib, 90.0);
+                assert_eq!(info.attempt, 3);
+                assert!((wastage_mibs - 100.0).abs() < 1e-9); // 50 MiB * 2 s
+            }
+            _ => panic!("{fail:?}"),
+        }
+    }
+
+    #[test]
+    fn duplicate_bounds_cannot_reach_the_walk() {
+        // Regression: the zero-width pieces the walk used to tolerate
+        // by accident are now rejected at StepFunction construction, so
+        // no allocation with duplicate boundaries can reach this loop.
+        assert!(
+            crate::ml::step_fn::StepFunction::try_new(vec![4.0, 4.0], vec![50.0, 100.0]).is_err()
+        );
     }
 
     #[test]

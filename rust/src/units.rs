@@ -21,6 +21,7 @@ pub struct Seconds(pub f64);
 pub struct GbSeconds(pub f64);
 
 pub const MIB_PER_GB: f64 = 1e9 / (1024.0 * 1024.0); // 1 GB in MiB ≈ 953.67
+pub const MIB_PER_MB: f64 = 1e6 / (1024.0 * 1024.0); // 1 MB in MiB ≈ 0.9537
 
 impl MemMiB {
     pub const ZERO: MemMiB = MemMiB(0.0);
@@ -30,6 +31,14 @@ impl MemMiB {
     }
     pub fn from_gb(g: f64) -> Self {
         MemMiB(g * MIB_PER_GB)
+    }
+    /// Decimal megabytes → MiB (`const` so paper constants quoted in MB
+    /// can be expressed in their original unit).
+    pub const fn from_mb(m: f64) -> Self {
+        MemMiB(m * MIB_PER_MB)
+    }
+    pub fn as_mb(self) -> f64 {
+        self.0 / MIB_PER_MB
     }
     pub fn as_gb(self) -> f64 {
         self.0 / MIB_PER_GB
@@ -172,6 +181,17 @@ mod tests {
         let one_gb = MemMiB::from_gb(1.0);
         assert!((one_gb.0 - 953.674).abs() < 1e-2);
         assert!((one_gb.as_gb() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mb_conversions() {
+        // 100 MB (decimal) is NOT 100 MiB — it is ≈ 95.37 MiB. The §IV-A
+        // allocation floor depends on this distinction.
+        let floor = MemMiB::from_mb(100.0);
+        assert!((floor.0 - 95.367431640625).abs() < 1e-9);
+        assert!((floor.as_mb() - 100.0).abs() < 1e-12);
+        // 1000 MB == 1 GB
+        assert_eq!(MemMiB::from_mb(1000.0).0, MemMiB::from_gb(1.0).0);
     }
 
     #[test]

@@ -4,7 +4,9 @@
 //! a source of numeric drift. Every figure in EXPERIMENTS.md depends
 //! on this.
 
-use ksegments::bench_harness::{fig7_makers, method_names, paper_traces, run_fig8, FitterChoice};
+use ksegments::bench_harness::{
+    fig7_makers, makers_for_keys, method_names, paper_traces, run_fig8, FitterChoice,
+};
 use ksegments::cluster::NodeSpec;
 use ksegments::predictors::default_config::DefaultConfigPredictor;
 use ksegments::predictors::ppm::PpmPredictor;
@@ -13,7 +15,7 @@ use ksegments::sim::{parallel_map, EvalGrid, PredictorFactory};
 use ksegments::units::MemMiB;
 use ksegments::workload::{eager_workflow, generate_workflow_trace};
 
-/// The headline satellite: the full fig7 grid (6 methods × 3 fractions
+/// The headline satellite: the full fig7 grid (8 methods × 3 fractions
 /// × 2 workflows) at seed 42 is bit-identical at workers = 1 and
 /// workers = 8 — same wastage, same retries, same task ordering.
 #[test]
@@ -32,7 +34,7 @@ fn fig7_grid_bit_identical_across_worker_counts() {
     // something legible instead of a giant struct diff.
     assert_eq!(seq.by_fraction.len(), 3);
     for (f, (s_row, p_row)) in seq.by_fraction.iter().zip(&par.by_fraction).enumerate() {
-        assert_eq!(s_row.len(), 6, "fraction {f} must cover the 6-method roster");
+        assert_eq!(s_row.len(), 8, "fraction {f} must cover the 8-method roster");
         for (s, p) in s_row.iter().zip(p_row) {
             assert_eq!(s.method, p.method);
             assert_eq!(s.total_wastage_gbs().to_bits(), p.total_wastage_gbs().to_bits());
@@ -47,6 +49,28 @@ fn fig7_grid_bit_identical_across_worker_counts() {
     let grid_methods: Vec<String> =
         seq.by_fraction[0].iter().map(|r| r.method.clone()).collect();
     assert_eq!(grid_methods, method_names());
+}
+
+/// Focused lockdown for the two zoo methods this PR adds: an
+/// ensemble+dynseg-only grid is bit-identical at workers = 1 and
+/// workers = 8 (the full-roster test above covers them too, but this
+/// isolates a regression to the new predictors).
+#[test]
+fn ensemble_and_dynseg_bit_identical_across_worker_counts() {
+    let traces = paper_traces(42);
+    let makers = makers_for_keys(&["ensemble", "dynseg"], FitterChoice::Native);
+    let grid = EvalGrid::new(makers, &traces, vec![0.25, 0.5, 0.75]);
+    let seq = grid.run(1);
+    let par = grid.run(8);
+    assert_eq!(seq, par, "zoo grid diverged under parallelism");
+    for row in &seq.by_fraction {
+        assert_eq!(row.len(), 2);
+        assert_eq!(row[0].method, "Sizey Ensemble");
+        assert_eq!(row[1].method, "KS+ DynSeg Selective");
+        for rep in row {
+            assert!(!rep.tasks.is_empty(), "{} scored no tasks", rep.method);
+        }
+    }
 }
 
 /// The fig8 k-sweep goes through the same pool and must be equally
@@ -83,10 +107,12 @@ fn parallel_map_order_under_contention() {
 #[test]
 fn sched_grid_bit_identical_across_worker_counts() {
     let traces = vec![generate_workflow_trace(&eager_workflow(), 42)];
-    let methods: Vec<PredictorFactory> = vec![
+    let mut methods: Vec<PredictorFactory> = vec![
         Box::new(|| Box::new(DefaultConfigPredictor::new())),
         Box::new(|| Box::new(PpmPredictor::improved())),
     ];
+    // the zoo methods ride the same deterministic sweep
+    methods.extend(makers_for_keys(&["ensemble", "dynseg"], FitterChoice::Native));
     let grid = SchedGrid::new(
         vec![ReservationPolicy::StaticPeak, ReservationPolicy::SegmentWise],
         methods,
@@ -101,7 +127,7 @@ fn sched_grid_bit_identical_across_worker_counts() {
     let seq = grid.run(1);
     let par = grid.run(8);
     assert_eq!(seq, par, "sched grid diverged under parallelism");
-    assert_eq!(seq.reports.len(), 2 * 2 * 2);
+    assert_eq!(seq.reports.len(), 2 * 4 * 2);
     for (cell, rep) in seq.cells.iter().zip(&seq.reports) {
         assert_eq!(rep.completed, rep.submitted, "cell {cell:?} lost tasks");
         assert_eq!(

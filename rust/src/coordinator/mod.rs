@@ -81,8 +81,11 @@ impl ServiceStats {
 
 /// FNV-1a partition of task types over shards — the same type always
 /// lands on the same shard, which is what carries the per-type FIFO
-/// guarantee.
-fn shard_of(task_type: &str, n_shards: usize) -> usize {
+/// guarantee. Public because the streaming replay engine
+/// ([`crate::ingest::replay`]) shards its workers with the same
+/// function, so a replayed type lands on the same shard index it would
+/// occupy in the live service.
+pub fn shard_of(task_type: &str, n_shards: usize) -> usize {
     let mut h: u64 = 0xcbf29ce484222325;
     for b in task_type.as_bytes() {
         h ^= *b as u64;
@@ -165,6 +168,37 @@ impl ServiceHandle {
     /// shutdown).
     pub fn complete(&self, run: TaskRun) {
         let _ = self.tx_for(&run.task_type).send(Request::Complete { run: Box::new(run) });
+    }
+
+    /// Stream a [`TraceSource`] through the service: prime its
+    /// defaults, then predict + complete every run in arrival order,
+    /// chunk by chunk — the service-side replay path, which never
+    /// materializes the trace. Returns the number of runs fed; errors
+    /// if the source fails or the service is already down.
+    ///
+    /// [`TraceSource`]: crate::ingest::TraceSource
+    pub fn replay_source(
+        &self,
+        src: &mut dyn crate::ingest::TraceSource,
+        chunk: usize,
+    ) -> anyhow::Result<u64> {
+        for (ty, mem) in src.defaults() {
+            self.prime(&ty, mem);
+        }
+        let mut fed = 0u64;
+        loop {
+            let batch = src.next_chunk(chunk.max(1))?;
+            if batch.is_empty() {
+                return Ok(fed);
+            }
+            for run in batch {
+                if self.try_predict(&run.task_type, run.input_mib).is_none() {
+                    anyhow::bail!("prediction service shut down mid-replay");
+                }
+                self.complete(run);
+                fed += 1;
+            }
+        }
     }
 
     /// Aggregated counters across all shards (blocking).
@@ -466,6 +500,30 @@ mod tests {
             assert!(h.predict(ty, 150.0).is_dynamic(), "{ty} predict ran before completions");
         }
         assert_eq!(svc.shutdown().completions, 48);
+    }
+
+    #[test]
+    fn replay_source_streams_defaults_and_runs() {
+        let mut trace = crate::trace::Trace::new();
+        trace.set_default("w/t", MemMiB(2048.0));
+        for i in 0..12u64 {
+            let mut r = run(100.0 + 10.0 * i as f64, 200.0 + 10.0 * i as f64);
+            r.seq = i;
+            trace.push(r);
+        }
+        trace.sort();
+        let mut src = crate::ingest::InMemorySource::from_trace(&trace);
+        let svc = ShardedPredictionService::spawn(2, |_| {
+            Box::new(KSegmentsPredictor::native(4, RetryStrategy::Selective))
+        });
+        let h = svc.handle();
+        let fed = h.replay_source(&mut src, 5).unwrap();
+        assert_eq!(fed, 12);
+        // all completions ingested before this predict (per-type FIFO)
+        assert!(h.predict("w/t", 150.0).is_dynamic());
+        let stats = svc.shutdown();
+        assert_eq!(stats.completions, 12);
+        assert_eq!(stats.predictions, 13);
     }
 
     #[test]

@@ -1,0 +1,242 @@
+//! Trace ingestion and streaming replay — the path from a real
+//! workflow engine's monitoring output into every evaluation surface.
+//!
+//! The paper evaluates on nf-core traces captured by a Nextflow
+//! monitoring extension; everything else in this crate consumes the
+//! [`Trace`] data model. This module closes the gap between the two
+//! and removes the requirement that a trace be fully materialized in
+//! memory before anything can run:
+//!
+//! * **parsers** ([`nextflow`]): Nextflow-style `trace.txt` TSV (task
+//!   names, `realtime`, `peak_rss`, requested `memory`, input-size
+//!   columns, with `KB`/`MB`/`GB` unit suffixes via
+//!   [`MemMiB::parse`]) plus per-task monitoring sample CSVs,
+//!   normalized into [`TaskRun`]/[`crate::trace::UsageSeries`];
+//! * **the [`TraceSource`] trait**: a chunked, rewindable iterator of
+//!   [`TaskRun`]s in arrival order, with [`InMemorySource`],
+//!   [`JsonlReader`] (streaming JSON-lines) and [`NextflowDirSource`]
+//!   implementations — consumed by the streaming replay engine
+//!   ([`replay_source`]), the scheduler's arrival stream
+//!   ([`crate::sched::schedule_stream`]) and the prediction service
+//!   ([`crate::coordinator::ServiceHandle::replay_source`]);
+//! * **predictor checkpointing** ([`Checkpoint`]): the fitted
+//!   per-task-type state — primed defaults plus the sliding window of
+//!   observed runs every predictor derives its fit and offsets from —
+//!   serialized as JSONL, so a replay (or a restarted service) can
+//!   warm-start instead of re-learning from scratch.
+//!
+//! CLI entry points: `ksegments ingest <dir>` (normalize a Nextflow
+//! trace directory to replay-ordered JSONL) and `ksegments replay
+//! --source <path> --method <key> [--checkpoint <path>]`.
+
+pub mod checkpoint;
+pub mod jsonl;
+pub mod nextflow;
+pub mod replay;
+
+pub use checkpoint::Checkpoint;
+pub use jsonl::JsonlReader;
+pub use nextflow::{read_nextflow_dir, NextflowDirSource};
+pub use replay::{replay_source, ReplayConfig, ReplayOutcome};
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::trace::{read_trace_csv, TaskRun, Trace};
+use crate::units::MemMiB;
+
+/// Default [`TraceSource::next_chunk`] request size used by the CLI
+/// and the replay surfaces.
+pub const DEFAULT_CHUNK: usize = 256;
+
+/// A streaming source of task runs in arrival order.
+///
+/// The contract every consumer relies on: runs of one task type are
+/// yielded oldest-first (the online-learning order), and the
+/// concatenation of all chunks is the full stream. Sources that read a
+/// `ksegments ingest` output file (or any
+/// [`crate::trace::write_trace_jsonl_ordered`] file) additionally
+/// yield the *global* submission order, which is what the scheduler's
+/// arrival stream consumes.
+pub trait TraceSource: Send {
+    /// Human-readable origin (a path, `"in-memory"`, ...).
+    fn origin(&self) -> String;
+
+    /// Developer-default allocations known for this source, sorted by
+    /// task type (may be empty; Nextflow traces carry the requested
+    /// `memory` per process).
+    fn defaults(&self) -> Vec<(String, MemMiB)>;
+
+    /// Pull the next chunk of at most `max` runs. An empty vector
+    /// means the stream is exhausted.
+    fn next_chunk(&mut self, max: usize) -> Result<Vec<TaskRun>>;
+
+    /// Restart the stream from the beginning (re-opens files).
+    fn rewind(&mut self) -> Result<()>;
+}
+
+/// A [`TraceSource`] over an already-materialized run list — the
+/// adapter that lets every streaming consumer also accept an in-memory
+/// [`Trace`] (and the reference implementation the streaming readers
+/// are tested against).
+#[derive(Debug, Clone)]
+pub struct InMemorySource {
+    defaults: Vec<(String, MemMiB)>,
+    runs: Vec<TaskRun>,
+    pos: usize,
+}
+
+impl InMemorySource {
+    /// Stream a trace's runs in global submission (`seq`) order.
+    pub fn from_trace(trace: &Trace) -> InMemorySource {
+        let defaults = trace
+            .task_types()
+            .filter_map(|ty| trace.default_alloc(ty).map(|m| (ty.to_string(), m)))
+            .collect();
+        let runs = trace.all_runs_ordered().into_iter().cloned().collect();
+        InMemorySource { defaults, runs, pos: 0 }
+    }
+
+    /// Stream an explicit run list in the order given.
+    pub fn from_runs(defaults: Vec<(String, MemMiB)>, runs: Vec<TaskRun>) -> InMemorySource {
+        InMemorySource { defaults, runs, pos: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.runs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.runs.is_empty()
+    }
+}
+
+impl TraceSource for InMemorySource {
+    fn origin(&self) -> String {
+        format!("in-memory ({} runs)", self.runs.len())
+    }
+
+    fn defaults(&self) -> Vec<(String, MemMiB)> {
+        self.defaults.clone()
+    }
+
+    fn next_chunk(&mut self, max: usize) -> Result<Vec<TaskRun>> {
+        let end = (self.pos + max.max(1)).min(self.runs.len());
+        let chunk = self.runs[self.pos..end].to_vec();
+        self.pos = end;
+        Ok(chunk)
+    }
+
+    fn rewind(&mut self) -> Result<()> {
+        self.pos = 0;
+        Ok(())
+    }
+}
+
+/// Open a path as a [`TraceSource`] by sniffing its shape: a directory
+/// is a Nextflow trace dir (`trace.txt` [+ `samples/`]), a `.jsonl`
+/// file streams through [`JsonlReader`], a `.csv` file is read whole
+/// (the CSV layout interleaves runs, so it cannot stream) and served
+/// from memory.
+pub fn open_source(path: &Path) -> Result<Box<dyn TraceSource>> {
+    if path.is_dir() {
+        return Ok(Box::new(NextflowDirSource::open(path)?));
+    }
+    match path.extension().and_then(|e| e.to_str()) {
+        Some("jsonl") => Ok(Box::new(JsonlReader::open(path)?)),
+        Some("csv") => {
+            let trace = read_trace_csv(path)
+                .with_context(|| format!("reading csv trace {}", path.display()))?;
+            Ok(Box::new(InMemorySource::from_trace(&trace)))
+        }
+        _ => bail!(
+            "cannot open {} as a trace source (expected a Nextflow trace \
+             directory, a .jsonl file or a .csv file)",
+            path.display()
+        ),
+    }
+}
+
+/// Drain a source into a fully materialized [`Trace`] (defaults
+/// applied, runs sorted per type) — the bridge back to the batch
+/// surfaces ([`crate::sim::EvalGrid`], figure regeneration).
+pub fn materialize(src: &mut dyn TraceSource) -> Result<Trace> {
+    let mut trace = Trace::new();
+    for (ty, mem) in src.defaults() {
+        trace.set_default(&ty, mem);
+    }
+    loop {
+        let chunk = src.next_chunk(DEFAULT_CHUNK)?;
+        if chunk.is_empty() {
+            break;
+        }
+        for run in chunk {
+            trace.push(run);
+        }
+    }
+    trace.sort();
+    Ok(trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::UsageSeries;
+    use crate::units::Seconds;
+
+    fn toy_trace() -> Trace {
+        let mut t = Trace::new();
+        t.set_default("w/a", MemMiB(1000.0));
+        for seq in 0..5u64 {
+            t.push(TaskRun {
+                task_type: if seq % 2 == 0 { "w/a".into() } else { "w/b".into() },
+                input_mib: 10.0 * seq as f64,
+                runtime: Seconds(4.0),
+                series: UsageSeries::new(2.0, vec![1.0, 2.0 + seq as f64]),
+                seq,
+            });
+        }
+        t.sort();
+        t
+    }
+
+    #[test]
+    fn in_memory_source_streams_in_seq_order() {
+        let t = toy_trace();
+        let mut src = InMemorySource::from_trace(&t);
+        assert_eq!(src.defaults(), vec![("w/a".to_string(), MemMiB(1000.0))]);
+        let mut seqs = Vec::new();
+        loop {
+            let chunk = src.next_chunk(2).unwrap();
+            if chunk.is_empty() {
+                break;
+            }
+            assert!(chunk.len() <= 2);
+            seqs.extend(chunk.iter().map(|r| r.seq));
+        }
+        assert_eq!(seqs, vec![0, 1, 2, 3, 4]);
+        // exhausted stays exhausted until rewind
+        assert!(src.next_chunk(8).unwrap().is_empty());
+        src.rewind().unwrap();
+        assert_eq!(src.next_chunk(8).unwrap().len(), 5);
+    }
+
+    #[test]
+    fn materialize_round_trips_the_trace() {
+        let t = toy_trace();
+        let mut src = InMemorySource::from_trace(&t);
+        let back = materialize(&mut src).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn open_source_rejects_unknown_shapes() {
+        let dir = std::env::temp_dir().join("ksegments_test_ingest");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.parquet");
+        std::fs::write(&path, b"nope").unwrap();
+        assert!(open_source(&path).is_err());
+        assert!(open_source(&dir.join("missing.jsonl")).is_err());
+    }
+}

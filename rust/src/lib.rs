@@ -32,6 +32,12 @@
 //!   segment-wise reservation policies with time-indexed admission,
 //!   OOM-kill/requeue retry loops under real contention, and a
 //!   (policy × predictor × cluster × arrival) sweep grid ([`sched`]);
+//! * the **ingestion & replay layer**: parsers for Nextflow-style
+//!   `trace.txt` + monitoring dumps, the streaming
+//!   [`ingest::TraceSource`] abstraction feeding the replay engine,
+//!   the scheduler and the service without materializing traces, and
+//!   JSONL predictor checkpoints for warm-started replays
+//!   ([`ingest`]);
 //! * the **prediction service**: the long-running coordinator a SWMS
 //!   submits to, with task types hash-partitioned across N model
 //!   threads ([`coordinator`]);
@@ -63,6 +69,7 @@ pub mod bench_harness;
 pub mod cluster;
 pub mod coordinator;
 pub mod engine;
+pub mod ingest;
 pub mod metrics;
 pub mod ml;
 pub mod monitoring;
@@ -84,10 +91,13 @@ pub mod workflow {
 
 /// Most-used types, re-exported for downstream convenience.
 pub mod prelude {
+    pub use crate::ingest::{replay_source, Checkpoint, InMemorySource, TraceSource};
     pub use crate::metrics::{MethodReport, TaskReport};
     pub use crate::ml::step_fn::StepFunction;
     pub use crate::predictors::{Allocation, FailureInfo, MemoryPredictor};
-    pub use crate::sched::{schedule_trace, ReservationPolicy, SchedConfig, SchedReport};
+    pub use crate::sched::{
+        schedule_stream, schedule_trace, ReservationPolicy, SchedConfig, SchedReport,
+    };
     pub use crate::sim::{simulate_trace, SimConfig};
     pub use crate::trace::{TaskRun, Trace, UsageSeries};
     pub use crate::units::{GbSeconds, MemMiB, Seconds};

@@ -14,6 +14,8 @@
 //! ksegments validate-runtime                      # XLA fit vs native fit
 //! ksegments serve     [--seed N]                  # prediction-service demo
 //! ksegments schedule  [--nodes N] [--arrival S] [--policy P]  # cluster scheduler
+//! ksegments ingest    DIR [--out FILE]            # Nextflow trace -> jsonl
+//! ksegments replay    --source PATH --method M    # streaming replay
 //! ```
 //!
 //! (Arg parsing is hand-rolled: the offline crate cache has no clap.)
@@ -31,7 +33,7 @@ use ksegments::predictors::ksegments::{KSegmentsPredictor, RetryStrategy};
 use ksegments::predictors::MemoryPredictor;
 use ksegments::runtime::XlaFitter;
 use ksegments::sim::{simulate_trace, SimConfig};
-use ksegments::trace::{write_trace_csv, write_trace_jsonl};
+use ksegments::trace::{write_trace_csv, write_trace_jsonl, write_trace_jsonl_ordered};
 use ksegments::workload::{eager_workflow, generate_workflow_trace, sarek_workflow};
 
 const USAGE: &str = "\
@@ -48,11 +50,15 @@ USAGE:
   ksegments ablate    [--seed N] [--workers N]
   ksegments report    [--seed N] [--xla] [--out FILE] [--workers N] [--method SEL]
   ksegments validate-runtime
-  ksegments serve     [--seed N] [--shards N] [--workers N]
+  ksegments serve     [--seed N] [--shards N] [--workers N] [--source PATH]
   ksegments schedule  [--nodes N] [--node-gib G] [--arrival SECS]
                       [--policy static|segment|both] [--method METHOD]
                       [--frac F] [--seed N] [--workflow W]
                       [--sweep] [--workers N]
+  ksegments ingest    DIR [--out FILE] [--format jsonl|csv]
+  ksegments replay    --source PATH [--method SEL] [--workers N]
+                      [--checkpoint FILE] [--checkpoint-out FILE]
+                      [--warmup N] [--chunk N]
 
 METHODS: default | ppm | ppm-improved | lr | ksegments-selective |
          ksegments-partial | ksegments-adaptive | ensemble | dynseg
@@ -73,13 +79,26 @@ timed stream (mean inter-arrival --arrival seconds, exponential) onto
 (static-peak vs segment-wise step functions; both = comparison).
 --sweep renders the throughput tables over several arrival rates on
 the parallel grid instead.
+
+ingest normalizes a Nextflow trace directory (trace.txt [+ samples/])
+into the crate's replay-ordered JSONL trace format.
+
+replay streams a trace source (a .jsonl/.csv file or a Nextflow trace
+dir) through a predictor online, sharded by task type across --workers
+threads (results are bit-identical for any worker count). --checkpoint
+warm-starts from a saved predictor state; --checkpoint-out persists
+the state after the replay; --warmup N (default 2) is the per-type
+unscored warm-up for previously unseen task types. serve --source
+replays the same sources through the sharded prediction service.
 ";
 
-/// Hand-rolled `--key value` / `--flag` parser.
+/// Hand-rolled `--key value` / `--flag` / positional parser.
 struct Args {
     cmd: String,
     kv: BTreeMap<String, String>,
     flags: Vec<String>,
+    /// Positional arguments (only `ingest` accepts one: its DIR).
+    pos: Vec<String>,
 }
 
 impl Args {
@@ -88,12 +107,15 @@ impl Args {
         let cmd = argv.next().unwrap_or_default();
         let mut kv = BTreeMap::new();
         let mut flags = Vec::new();
+        let mut pos = Vec::new();
         let rest: Vec<String> = argv.collect();
         let mut i = 0;
         while i < rest.len() {
             let a = &rest[i];
             let Some(key) = a.strip_prefix("--") else {
-                bail!("unexpected positional argument {a:?}");
+                pos.push(a.clone());
+                i += 1;
+                continue;
             };
             if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
                 kv.insert(key.to_string(), rest[i + 1].clone());
@@ -103,7 +125,7 @@ impl Args {
                 i += 1;
             }
         }
-        Ok(Args { cmd, kv, flags })
+        Ok(Args { cmd, kv, flags, pos })
     }
 
     fn seed(&self) -> u64 {
@@ -290,37 +312,45 @@ fn cmd_validate_runtime() -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    // Demo: run the eager workflow through the sharded prediction
-    // service from multiple SWMS worker threads.
-    let trace = generate_workflow_trace(&eager_workflow(), args.seed());
     let shards = args.shards();
-    let n_clients = args.workers();
     let svc = ShardedPredictionService::spawn(shards, |_| {
         Box::new(KSegmentsPredictor::native(4, RetryStrategy::Selective))
     });
     let h = svc.handle();
-    for ty in trace.task_types() {
-        if let Some(mem) = trace.default_alloc(ty) {
-            h.prime(ty, mem);
-        }
-    }
-    let runs: Vec<_> = trace.all_runs_ordered().into_iter().cloned().collect();
-    let chunk = runs.len().div_ceil(n_clients).max(1);
-    let mut joins = Vec::new();
-    for (w, part) in runs.chunks(chunk).enumerate() {
-        let h = svc.handle();
-        let part = part.to_vec();
-        joins.push(std::thread::spawn(move || {
-            for run in part {
-                let alloc = h.predict(&run.task_type, run.input_mib);
-                let _ = alloc.max_value();
-                h.complete(run);
+    if let Some(path) = args.kv.get("source") {
+        // Replay an ingested trace source through the service — the
+        // streaming deployment path (no materialized trace).
+        let mut src = ksegments::ingest::open_source(&PathBuf::from(path))?;
+        let fed = h.replay_source(src.as_mut(), ksegments::ingest::DEFAULT_CHUNK)?;
+        println!("replayed {} runs from {}", fed, src.origin());
+    } else {
+        // Demo: run the eager workflow through the sharded prediction
+        // service from multiple SWMS worker threads.
+        let trace = generate_workflow_trace(&eager_workflow(), args.seed());
+        let n_clients = args.workers();
+        for ty in trace.task_types() {
+            if let Some(mem) = trace.default_alloc(ty) {
+                h.prime(ty, mem);
             }
-            println!("worker {w} done");
-        }));
-    }
-    for j in joins {
-        j.join().map_err(|_| anyhow!("worker panicked"))?;
+        }
+        let runs: Vec<_> = trace.all_runs_ordered().into_iter().cloned().collect();
+        let chunk = runs.len().div_ceil(n_clients).max(1);
+        let mut joins = Vec::new();
+        for (w, part) in runs.chunks(chunk).enumerate() {
+            let h = svc.handle();
+            let part = part.to_vec();
+            joins.push(std::thread::spawn(move || {
+                for run in part {
+                    let alloc = h.predict(&run.task_type, run.input_mib);
+                    let _ = alloc.max_value();
+                    h.complete(run);
+                }
+                println!("worker {w} done");
+            }));
+        }
+        for j in joins {
+            j.join().map_err(|_| anyhow!("worker panicked"))?;
+        }
     }
     let per_shard = svc.shutdown_per_shard();
     for (s, stats) in per_shard.iter().enumerate() {
@@ -334,6 +364,129 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "service ({shards} shards) processed {} predictions, {} completions, {} failures",
         total.predictions, total.completions, total.failures
     );
+    Ok(())
+}
+
+fn cmd_ingest(args: &Args) -> Result<()> {
+    let dir = args
+        .pos
+        .first()
+        .cloned()
+        .or_else(|| args.kv.get("dir").cloned())
+        .context("usage: ksegments ingest <dir> [--out FILE] [--format jsonl|csv]")?;
+    let dir = PathBuf::from(dir);
+    let mut src = ksegments::ingest::NextflowDirSource::open(&dir)?;
+    let (indexed, skipped) = (src.n_rows(), src.skipped_rows());
+    let trace = ksegments::ingest::materialize(&mut src)?;
+    let format = args.kv.get("format").map(String::as_str).unwrap_or("jsonl");
+    // default to the working directory — never write into the source
+    // trace dir (it may be a pristine capture or a checked-in fixture)
+    let out = args
+        .kv
+        .get("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("trace.jsonl"));
+    match format {
+        "jsonl" => write_trace_jsonl_ordered(&trace, &out)?,
+        "csv" => write_trace_csv(&trace, &out)?,
+        other => bail!("unknown format {other:?} (jsonl|csv)"),
+    }
+    let n_defaults = trace
+        .task_types()
+        .filter(|ty| trace.default_alloc(ty).is_some())
+        .count();
+    println!(
+        "ingested {}: {} runs over {} task types ({} non-COMPLETED rows skipped, \
+         defaults for {} types)",
+        dir.display(),
+        indexed,
+        trace.n_types(),
+        skipped,
+        n_defaults
+    );
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+fn cmd_replay(args: &Args) -> Result<()> {
+    use ksegments::ingest::{open_source, replay_source, Checkpoint, ReplayConfig};
+
+    let path = PathBuf::from(
+        args.kv
+            .get("source")
+            .context("--source required (a .jsonl/.csv trace or a Nextflow trace dir)")?,
+    );
+    let sel = args
+        .kv
+        .get("method")
+        .map(String::as_str)
+        .unwrap_or("ksegments-selective");
+    let keys = ksegments::bench_harness::resolve_methods(sel).map_err(|e| anyhow!(e))?;
+    let mut cfg = ReplayConfig::default();
+    if let Some(w) = args.kv.get("warmup") {
+        cfg.warmup_per_type = w.parse().context("--warmup")?;
+    }
+    if let Some(c) = args.kv.get("chunk") {
+        cfg.chunk = c.parse::<usize>().context("--chunk")?.max(1);
+    }
+    let workers = args.workers();
+    let start = args
+        .kv
+        .get("checkpoint")
+        .map(|p| Checkpoint::load(&PathBuf::from(p)))
+        .transpose()?;
+    let ckpt_out = args.kv.get("checkpoint-out").map(PathBuf::from);
+    if (start.is_some() || ckpt_out.is_some()) && keys.len() > 1 {
+        bail!(
+            "checkpointing needs a single --method (selection resolved to {} methods)",
+            keys.len()
+        );
+    }
+    let mut src = open_source(&path)?;
+    println!(
+        "replay: source={} methods={} workers={workers} warmup={} chunk={}\n",
+        src.origin(),
+        keys.join(","),
+        cfg.warmup_per_type,
+        cfg.chunk
+    );
+    for (i, &key) in keys.iter().enumerate() {
+        if i > 0 {
+            src.rewind()?;
+        }
+        let choice = args.fitter();
+        let make =
+            move || ksegments::bench_harness::make_method(key, choice).expect("resolved key");
+        let out = replay_source(src.as_mut(), &make, &cfg, workers, start.as_ref())?;
+        println!(
+            "[{}] {} runs replayed ({} warm-up) over {} task types — avg wastage {:.3} GB·s, \
+             avg retries {:.3}",
+            out.report.method,
+            out.runs_replayed,
+            out.runs_warmup,
+            out.report.tasks.len(),
+            out.report.avg_wastage_gbs(),
+            out.report.avg_retries()
+        );
+        for t in &out.report.tasks {
+            println!(
+                "  {:<32} scored {:>4}  wastage {:>10.3} GB·s  retries {:>6.3}",
+                t.task_type,
+                t.n_scored,
+                t.avg_wastage_gbs(),
+                t.avg_retries()
+            );
+        }
+        if let Some(p) = &ckpt_out {
+            out.checkpoint.save(p)?;
+            println!(
+                "checkpoint ({} task types, {} runs seen) -> {}",
+                out.checkpoint.n_types(),
+                out.checkpoint.total_seen(),
+                p.display()
+            );
+        }
+    }
     Ok(())
 }
 
@@ -457,8 +610,13 @@ fn cmd_schedule(args: &Args) -> Result<()> {
 
 fn real_main() -> Result<()> {
     let args = Args::parse()?;
+    if !args.pos.is_empty() && args.cmd != "ingest" {
+        bail!("unexpected positional argument {:?}", args.pos[0]);
+    }
     match args.cmd.as_str() {
         "generate" => cmd_generate(&args),
+        "ingest" => cmd_ingest(&args),
+        "replay" => cmd_replay(&args),
         "simulate" => cmd_simulate(&args),
         "fig7" => cmd_fig7(&args),
         "fig8" => cmd_fig8(&args),

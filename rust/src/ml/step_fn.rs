@@ -10,6 +10,20 @@ use crate::units::{MemMiB, Seconds};
 
 /// A right-continuous step function over time: `k` boundaries
 /// `r_1 < r_2 < … < r_k` and `k` values `v_1 … v_k` (MiB).
+///
+/// # Example
+///
+/// ```
+/// use ksegments::ml::step_fn::StepFunction;
+///
+/// // 0–10 s → 100 MiB, 10–20 s → 300 MiB (held beyond 20 s).
+/// let f = StepFunction::new(vec![10.0, 20.0], vec![100.0, 300.0]);
+/// assert_eq!(f.value_at(5.0), 100.0);
+/// assert_eq!(f.value_at(15.0), 300.0);
+/// assert_eq!(f.value_at(99.0), 300.0);
+/// assert_eq!(f.max_value(), 300.0);
+/// assert_eq!(f.predicted_runtime().0, 20.0);
+/// ```
 #[derive(Debug, Clone, PartialEq)]
 pub struct StepFunction {
     /// Segment end times, strictly increasing; `bounds[k-1]` is the

@@ -89,6 +89,18 @@ pub struct FailureInfo {
 
 /// The online predictor contract shared by the paper's method and all
 /// baselines.
+///
+/// # Example
+///
+/// ```
+/// use ksegments::predictors::default_config::DefaultConfigPredictor;
+/// use ksegments::predictors::{Allocation, MemoryPredictor};
+/// use ksegments::units::MemMiB;
+///
+/// let mut p = DefaultConfigPredictor::new();
+/// p.prime("wf/align", MemMiB(2048.0));
+/// assert_eq!(p.predict("wf/align", 100.0), Allocation::Static(MemMiB(2048.0)));
+/// ```
 pub trait MemoryPredictor: Send {
     /// Display name used in reports ("k-Segments Selective", "PPM", ...).
     fn name(&self) -> String;

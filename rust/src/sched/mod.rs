@@ -59,6 +59,19 @@
 //! * `admitted == completed + oom_kills + grow_denials`;
 //! * `placement_attempts == admitted + rejected`;
 //! * the cluster is empty when the simulation ends.
+//!
+//! ## Streaming arrivals
+//!
+//! The event loop pulls its arrival stream lazily — exactly one
+//! not-yet-arrived run is held at a time, and a completed run's data
+//! is dropped with its last reference — so memory is bounded by the
+//! *in-flight* task set, not the trace. [`schedule_trace`] feeds it
+//! the materialized warm-up split (the paper's protocol);
+//! [`schedule_stream`] feeds it a [`TraceSource`] chunk by chunk, the
+//! path from `ksegments ingest` output (or a live engine) straight
+//! into the scheduler, with warm starts via
+//! [`crate::ingest::Checkpoint::restore_into`] instead of an offline
+//! training split.
 
 pub mod grid;
 pub mod queue;
@@ -69,9 +82,13 @@ pub use queue::{EventQueue, SchedEvent};
 pub use report::SchedReport;
 
 use std::collections::{BTreeMap, VecDeque};
+use std::rc::Rc;
+
+use anyhow::Result;
 
 use crate::cluster::{Cluster, NodeSpec, Reservation, TimeProfile};
 use crate::engine::{EngineEvent, EventLog};
+use crate::ingest::TraceSource;
 use crate::ml::step_fn::StepFunction;
 use crate::predictors::{Allocation, MemoryPredictor};
 use crate::rng::Rng;
@@ -152,7 +169,10 @@ impl Default for SchedConfig {
 /// A placement request waiting for (or attempting) admission.
 #[derive(Debug, Clone)]
 struct Pending {
-    task: usize,
+    /// The run's data, shared with the event loop (`Rc`: the engine is
+    /// single-threaded, and dropping the last reference after the
+    /// final completion is what keeps streaming memory bounded).
+    run: Rc<TaskRun>,
     attempt: u32,
     /// The predictor's (clamped) allocation for this attempt.
     alloc: Allocation,
@@ -167,7 +187,7 @@ struct Pending {
 /// An admitted attempt occupying cluster memory.
 #[derive(Debug, Clone)]
 struct Running {
-    task: usize,
+    run: Rc<TaskRun>,
     attempt: u32,
     /// Predictor allocation (fed back to `on_failure`).
     pred_alloc: Allocation,
@@ -238,7 +258,6 @@ fn planned_profile(alloc: &Allocation, now: f64) -> Vec<(f64, f64)> {
 struct Sim<'a> {
     cfg: &'a SchedConfig,
     predictor: &'a mut dyn MemoryPredictor,
-    stream: Vec<&'a TaskRun>,
     cluster: Cluster,
     /// Per-node committed-load ledgers (time-indexed reservations).
     ledgers: Vec<TimeProfile>,
@@ -263,7 +282,7 @@ impl Sim<'_> {
     /// Try to admit `p` now; on success the attempt starts running and
     /// its Finish (and grow) events are scheduled.
     fn try_place(&mut self, p: &Pending, now: f64) -> bool {
-        let run = self.stream[p.task];
+        let run = Rc::clone(&p.run);
         let res_alloc = self.reservation_alloc(p);
         let profile = planned_profile(&res_alloc, now);
         let initial = initial_request(&res_alloc);
@@ -319,7 +338,7 @@ impl Sim<'_> {
         self.running.insert(
             exec,
             Running {
-                task: p.task,
+                run,
                 attempt: p.attempt,
                 pred_alloc: p.alloc.clone(),
                 res_alloc,
@@ -335,10 +354,9 @@ impl Sim<'_> {
 
     fn place_or_queue(&mut self, p: Pending, now: f64) {
         if !self.try_place(&p, now) {
-            let run = self.stream[p.task];
             self.log.push(EngineEvent::Queued {
-                task_type: run.task_type.clone(),
-                seq: run.seq,
+                task_type: p.run.task_type.clone(),
+                seq: p.run.seq,
                 requested: initial_request(&self.reservation_alloc(&p)),
             });
             self.waiting.push_back(p);
@@ -357,8 +375,8 @@ impl Sim<'_> {
         self.waiting = still;
     }
 
-    fn on_arrival(&mut self, task: usize, now: f64) {
-        let run = self.stream[task];
+    fn on_arrival(&mut self, run: Rc<TaskRun>, now: f64) {
+        self.report.submitted += 1;
         let alloc = clamp_to_node_max(
             self.predictor.predict(&run.task_type, run.input_mib),
             self.node_max,
@@ -369,7 +387,7 @@ impl Sim<'_> {
             requested: MemMiB(alloc.max_value()),
         });
         let p = Pending {
-            task,
+            run,
             attempt: 1,
             alloc,
             reserve_static: self.cfg.policy == ReservationPolicy::StaticPeak,
@@ -397,7 +415,6 @@ impl Sim<'_> {
         // twice. This is not a misprediction, so the predictor's
         // failure path is not invoked and the attempt number is kept.
         let r = self.running.remove(&exec).unwrap();
-        let run = self.stream[r.task];
         self.report.grow_denials += 1;
         let elapsed = now - r.start;
         let held_mibs = match &r.res_alloc {
@@ -408,13 +425,13 @@ impl Sim<'_> {
         self.cluster.release(r.reservation);
         self.ledgers[r.reservation.node_idx].subtract_profile(&r.profile);
         self.log.push(EngineEvent::GrowDenied {
-            task_type: run.task_type.clone(),
-            seq: run.seq,
+            task_type: r.run.task_type.clone(),
+            seq: r.run.seq,
             segment,
             time_s: now,
         });
         let p = Pending {
-            task: r.task,
+            run: r.run,
             attempt: r.attempt,
             alloc: r.pred_alloc,
             reserve_static: true,
@@ -427,7 +444,6 @@ impl Sim<'_> {
 
     fn on_finish(&mut self, exec: u64, now: f64) {
         let Some(r) = self.running.remove(&exec) else { return };
-        let run = self.stream[r.task];
         self.cluster.release(r.reservation);
         self.ledgers[r.reservation.node_idx].subtract_profile(&r.profile);
         self.report.total_wastage += GbSeconds(MemMiB(r.outcome.wastage_mibs()).as_gb());
@@ -435,8 +451,8 @@ impl Sim<'_> {
             AttemptOutcome::Failure { info, .. } if !r.final_attempt => {
                 self.report.oom_kills += 1;
                 self.log.push(EngineEvent::OomKilled {
-                    task_type: run.task_type.clone(),
-                    seq: run.seq,
+                    task_type: r.run.task_type.clone(),
+                    seq: r.run.seq,
                     attempt: r.attempt,
                     time_s: now,
                 });
@@ -448,8 +464,8 @@ impl Sim<'_> {
                     (
                         clamp_to_node_max(
                             self.predictor.on_failure(
-                                &run.task_type,
-                                run.input_mib,
+                                &r.run.task_type,
+                                r.run.input_mib,
                                 &r.pred_alloc,
                                 info,
                             ),
@@ -459,7 +475,7 @@ impl Sim<'_> {
                     )
                 };
                 let p = Pending {
-                    task: r.task,
+                    run: r.run,
                     attempt: next_attempt,
                     alloc,
                     reserve_static: self.cfg.policy == ReservationPolicy::StaticPeak,
@@ -472,14 +488,50 @@ impl Sim<'_> {
                 // success, or a final attempt the manager forces through
                 self.report.completed += 1;
                 self.log.push(EngineEvent::Completed {
-                    task_type: run.task_type.clone(),
-                    seq: run.seq,
+                    task_type: r.run.task_type.clone(),
+                    seq: r.run.seq,
                     attempts: r.attempt,
                 });
-                self.predictor.observe(run);
+                // the run's last reference drops here in streaming mode
+                self.predictor.observe(&r.run);
             }
         }
         self.drain(now);
+    }
+}
+
+/// Where [`run_engine`] pulls its arrival stream from.
+enum RunFeed<'a> {
+    /// Materialized run list (the classic [`schedule_trace`] path).
+    Vec(VecDeque<TaskRun>),
+    /// Incremental pull from a streaming source.
+    Source { src: &'a mut dyn TraceSource, chunk: usize, buf: VecDeque<TaskRun> },
+}
+
+impl RunFeed<'_> {
+    fn next_run(&mut self) -> Result<Option<TaskRun>> {
+        match self {
+            RunFeed::Vec(q) => Ok(q.pop_front()),
+            RunFeed::Source { src, chunk, buf } => {
+                if buf.is_empty() {
+                    buf.extend(src.next_chunk(*chunk)?);
+                }
+                Ok(buf.pop_front())
+            }
+        }
+    }
+}
+
+/// Next inter-arrival gap (seconds); `rng` is consumed one draw per
+/// arrival, in arrival order, so the stream is a pure function of the
+/// seed regardless of how the runs are fed.
+fn arrival_gap(rng: &mut Rng, cfg: &SchedConfig) -> f64 {
+    if cfg.mean_interarrival.0 <= 0.0 {
+        0.0 // batch mode: everything arrives at t = 0
+    } else if cfg.deterministic_arrivals {
+        cfg.mean_interarrival.0
+    } else {
+        -(1.0 - rng.f64()).ln() * cfg.mean_interarrival.0
     }
 }
 
@@ -503,10 +555,6 @@ pub fn schedule_trace_logged(
         (0.0..1.0).contains(&cfg.training_frac),
         "training fraction in [0,1)"
     );
-    let cluster = Cluster::heterogeneous(cfg.nodes.clone());
-    let node_max = cluster.node_max_mem();
-    let capacity = cluster.total_capacity();
-
     // Prime developer defaults, then warm the model offline on the
     // first `training_frac` of each type (the sim protocol).
     for ty in trace.task_types() {
@@ -514,49 +562,73 @@ pub fn schedule_trace_logged(
             predictor.prime(ty, mem);
         }
     }
-    let mut stream: Vec<&TaskRun> = Vec::new();
+    let mut scored: Vec<TaskRun> = Vec::new();
     for ty in trace.task_types().map(String::from).collect::<Vec<_>>() {
         let runs = trace.runs_of(&ty);
         let n_train = ((runs.len() as f64) * cfg.training_frac).floor() as usize;
         for run in &runs[..n_train] {
             predictor.observe(run);
         }
-        stream.extend(&runs[n_train..]);
+        scored.extend(runs[n_train..].iter().cloned());
     }
-    stream.sort_by_key(|r| r.seq);
+    scored.sort_by_key(|r| r.seq);
+    run_engine(RunFeed::Vec(scored.into()), predictor, cfg)
+        .expect("in-memory run feed cannot fail")
+}
 
-    // Arrival stream: exponential (or fixed) gaps, deterministic from
-    // the seed.
-    let mut rng = Rng::new(cfg.seed);
-    let mut events = EventQueue::new();
-    let mut t = 0.0f64;
-    for task in 0..stream.len() {
-        if cfg.mean_interarrival.0 > 0.0 {
-            t += if cfg.deterministic_arrivals {
-                cfg.mean_interarrival.0
-            } else {
-                -(1.0 - rng.f64()).ln() * cfg.mean_interarrival.0
-            };
-        }
-        events.push(t, SchedEvent::Arrival { task });
+/// Schedule a **streaming** arrival stream: runs arrive in the order
+/// the source yields them, pulled chunk by chunk as the simulated
+/// clock advances — the whole trace is never materialized.
+///
+/// There is no offline warm-up split (a stream has no "first
+/// `training_frac`"); to start from trained state, restore a replay
+/// [`crate::ingest::Checkpoint`] into the predictor first. Source
+/// defaults are primed before the first arrival.
+pub fn schedule_stream(
+    src: &mut dyn TraceSource,
+    predictor: &mut dyn MemoryPredictor,
+    cfg: &SchedConfig,
+    chunk: usize,
+) -> Result<(SchedReport, EventLog)> {
+    for (ty, mem) in src.defaults() {
+        predictor.prime(&ty, mem);
     }
+    run_engine(
+        RunFeed::Source { src, chunk: chunk.max(1), buf: VecDeque::new() },
+        predictor,
+        cfg,
+    )
+}
 
-    let mut report = SchedReport::new(
+/// The discrete-event loop shared by [`schedule_trace`] and
+/// [`schedule_stream`]. Arrivals are generated lazily — exactly one
+/// not-yet-arrived run is pulled ahead, its arrival event scheduled at
+/// the previous arrival time plus [`arrival_gap`] — which is
+/// observably identical to pre-pushing the whole stream (arrival times
+/// are non-decreasing and same-instant ordering is by event rank), but
+/// bounds memory by the in-flight task set.
+fn run_engine(
+    mut feed: RunFeed<'_>,
+    predictor: &mut dyn MemoryPredictor,
+    cfg: &SchedConfig,
+) -> Result<(SchedReport, EventLog)> {
+    let cluster = Cluster::heterogeneous(cfg.nodes.clone());
+    let node_max = cluster.node_max_mem();
+    let capacity = cluster.total_capacity();
+    let n_nodes = cluster.n_nodes();
+
+    let report = SchedReport::new(
         cfg.policy.name(),
         &predictor.name(),
-        cluster.n_nodes(),
+        n_nodes,
         cfg.mean_interarrival.0,
     );
-    report.submitted = stream.len() as u64;
-
-    let n_nodes = cluster.n_nodes();
     let mut sim = Sim {
         cfg,
         predictor,
-        stream,
         cluster,
         ledgers: vec![TimeProfile::new(); n_nodes],
-        events,
+        events: EventQueue::new(),
         waiting: VecDeque::new(),
         running: BTreeMap::new(),
         next_exec: 0,
@@ -564,6 +636,17 @@ pub fn schedule_trace_logged(
         report,
         log: EventLog::with_cap(cfg.event_log_cap),
     };
+
+    // Arrival stream: exponential (or fixed) gaps, deterministic from
+    // the seed; one run pulled ahead of the clock.
+    let mut rng = Rng::new(cfg.seed);
+    let mut arrival_ordinal = 0usize;
+    let mut next_arrival_t = 0.0f64;
+    let mut upcoming: Option<TaskRun> = feed.next_run()?;
+    if upcoming.is_some() {
+        next_arrival_t += arrival_gap(&mut rng, cfg);
+        sim.events.push(next_arrival_t, SchedEvent::Arrival { task: 0 });
+    }
 
     let mut last_t = 0.0f64;
     let mut reserved_gb = 0.0f64;
@@ -576,7 +659,17 @@ pub fn schedule_trace_logged(
         match ev {
             SchedEvent::Finish { exec } => sim.on_finish(exec, now),
             SchedEvent::SegmentBoundary { exec, segment } => sim.on_boundary(exec, segment, now),
-            SchedEvent::Arrival { task } => sim.on_arrival(task, now),
+            SchedEvent::Arrival { .. } => {
+                let run = upcoming.take().expect("arrival event without a pulled run");
+                sim.on_arrival(Rc::new(run), now);
+                if let Some(next) = feed.next_run()? {
+                    arrival_ordinal += 1;
+                    next_arrival_t += arrival_gap(&mut rng, cfg);
+                    sim.events
+                        .push(next_arrival_t, SchedEvent::Arrival { task: arrival_ordinal });
+                    upcoming = Some(next);
+                }
+            }
         }
         reserved_gb = sim.cluster.total_reserved().as_gb();
         let running_now = sim.running.len() as u64;
@@ -598,7 +691,7 @@ pub fn schedule_trace_logged(
     report.makespan = Seconds(makespan);
     report.reserved_integral_gbs = reserved_integral;
     report.capacity_integral_gbs = capacity.as_gb() * makespan;
-    (report, sim.log)
+    Ok((report, sim.log))
 }
 
 #[cfg(test)]
@@ -782,6 +875,36 @@ mod tests {
         assert_eq!(r.oom_kills, 0);
         assert_eq!(r.admitted, r.completed + r.grow_denials);
         assert_eq!(r.placement_attempts, r.admitted + r.rejected);
+    }
+
+    /// A streamed source with no warm-up split must reproduce the
+    /// materialized `schedule_trace` at `training_frac = 0` bit for
+    /// bit: the lazy arrival generator consumes the same rng sequence
+    /// and sees the same run order.
+    #[test]
+    fn stream_matches_materialized_schedule() {
+        let trace = ramp_trace(10, 900.0, 8);
+        let cfg = SchedConfig {
+            nodes: vec![NodeSpec { mem: MemMiB(2500.0), cores: 4 }; 2],
+            mean_interarrival: Seconds(3.0),
+            training_frac: 0.0,
+            ..SchedConfig::default()
+        };
+        let mut p1 = crate::predictors::ppm::PpmPredictor::improved();
+        let a = schedule_trace(&trace, &mut p1, &cfg);
+        let mut src = crate::ingest::InMemorySource::from_trace(&trace);
+        let mut p2 = crate::predictors::ppm::PpmPredictor::improved();
+        let (b, _) = schedule_stream(&mut src, &mut p2, &cfg, 4).unwrap();
+        assert_eq!(a, b);
+        // batch mode streams identically too
+        let mut cfg = cfg;
+        cfg.mean_interarrival = Seconds(0.0);
+        let mut p3 = crate::predictors::ppm::PpmPredictor::improved();
+        let c = schedule_trace(&trace, &mut p3, &cfg);
+        src.rewind().unwrap();
+        let mut p4 = crate::predictors::ppm::PpmPredictor::improved();
+        let (d, _) = schedule_stream(&mut src, &mut p4, &cfg, 3).unwrap();
+        assert_eq!(c, d);
     }
 
     #[test]

@@ -6,7 +6,8 @@ pub mod parallel;
 
 pub use attempt::{simulate_attempt, AttemptOutcome};
 pub use parallel::{
-    default_workers, eval_cell, parallel_map, EvalCell, EvalGrid, GridResults, PredictorFactory,
+    default_workers, eval_cell, eval_sources, parallel_map, EvalCell, EvalGrid, GridResults,
+    PredictorFactory,
 };
 
 use crate::metrics::{MethodReport, TaskReport};

@@ -66,6 +66,30 @@ where
     pairs.into_iter().map(|(_, r)| r).collect()
 }
 
+/// Evaluate an [`EvalGrid`] over streaming [`TraceSource`]s.
+///
+/// The grid's protocol needs random access — every (method, fraction)
+/// cell re-reads every trace — so a one-pass stream cannot feed it
+/// directly (that is [`crate::ingest::replay_source`]'s job). What
+/// streaming buys the grid is *ingestion*: each source is drained
+/// exactly once into a shared immutable [`Trace`] here, and the
+/// parallel cells then read those; an ingested Nextflow directory and
+/// a generated workload are interchangeable grid axes.
+///
+/// [`TraceSource`]: crate::ingest::TraceSource
+pub fn eval_sources(
+    sources: &mut [Box<dyn crate::ingest::TraceSource>],
+    methods: Vec<PredictorFactory>,
+    fractions: Vec<f64>,
+    workers: usize,
+) -> anyhow::Result<GridResults> {
+    let traces = sources
+        .iter_mut()
+        .map(|s| crate::ingest::materialize(s.as_mut()))
+        .collect::<anyhow::Result<Vec<Trace>>>()?;
+    Ok(EvalGrid::new(methods, &traces, fractions).run(workers))
+}
+
 /// Evaluate one grid cell: a fresh predictor from `make`, run online
 /// over `trace` at training fraction `frac`.
 ///
@@ -234,6 +258,25 @@ mod tests {
         for workers in [2, 4, 8] {
             assert_eq!(grid.run(workers), seq, "workers={workers} diverged");
         }
+    }
+
+    #[test]
+    fn eval_sources_matches_direct_grid() {
+        let traces = vec![toy_trace("a/x", 30), toy_trace("b/y", 30)];
+        let direct = toy_grid(&traces).run(2);
+        let mut sources: Vec<Box<dyn crate::ingest::TraceSource>> = traces
+            .iter()
+            .map(|t| {
+                Box::new(crate::ingest::InMemorySource::from_trace(t))
+                    as Box<dyn crate::ingest::TraceSource>
+            })
+            .collect();
+        let methods: Vec<PredictorFactory> = vec![
+            Box::new(|| Box::new(DefaultConfigPredictor::new())),
+            Box::new(|| Box::new(PpmPredictor::improved())),
+        ];
+        let streamed = eval_sources(&mut sources, methods, vec![0.25, 0.5], 4).unwrap();
+        assert_eq!(streamed, direct);
     }
 
     #[test]

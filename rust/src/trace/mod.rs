@@ -10,7 +10,11 @@
 mod io;
 mod series;
 
-pub use io::{read_trace_csv, read_trace_jsonl, write_trace_csv, write_trace_jsonl};
+pub use io::{
+    parse_jsonl_record, read_trace_csv, read_trace_jsonl, write_trace_csv, write_trace_jsonl,
+    write_trace_jsonl_ordered, JsonlRecord,
+};
+pub(crate) use io::run_record;
 pub use series::UsageSeries;
 
 use std::collections::BTreeMap;
@@ -42,7 +46,26 @@ impl TaskRun {
 }
 
 /// An ordered collection of task runs, grouped by task type.
-#[derive(Debug, Clone, Default)]
+///
+/// # Example
+///
+/// ```
+/// use ksegments::trace::{TaskRun, Trace, UsageSeries};
+/// use ksegments::units::Seconds;
+///
+/// let mut trace = Trace::new();
+/// trace.push(TaskRun {
+///     task_type: "wf/align".into(),
+///     input_mib: 512.0,
+///     runtime: Seconds(4.0),
+///     series: UsageSeries::new(2.0, vec![100.0, 180.0]),
+///     seq: 0,
+/// });
+/// assert_eq!(trace.n_runs(), 1);
+/// assert_eq!(trace.runs_of("wf/align")[0].peak().0, 180.0);
+/// assert_eq!(trace.task_types().collect::<Vec<_>>(), vec!["wf/align"]);
+/// ```
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Trace {
     /// Per task type, runs sorted by `seq`. BTreeMap keeps iteration
     /// order deterministic across platforms.

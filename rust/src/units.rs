@@ -58,6 +58,55 @@ impl MemMiB {
     pub fn is_finite(self) -> bool {
         self.0.is_finite()
     }
+
+    /// Parse a human-readable memory value with an optional unit
+    /// suffix, as found in Nextflow `trace.txt` columns (`peak_rss`,
+    /// `memory`, `rchar`, ...): `"0"`, `"512 KB"`, `"12.5 GB"`,
+    /// `"1 GiB"`.
+    ///
+    /// Decimal suffixes (`KB`/`MB`/`GB`/`TB`) are powers of 1000,
+    /// binary suffixes (`KiB`/`MiB`/`GiB`/`TiB`) powers of 1024, both
+    /// case-insensitive, whitespace between number and unit optional.
+    /// A bare number is **bytes** (what Nextflow's raw trace mode
+    /// emits). Negative, non-finite and exponent-notation values are
+    /// rejected.
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use ksegments::units::MemMiB;
+    ///
+    /// assert_eq!(MemMiB::parse("1 GiB").unwrap(), MemMiB(1024.0));
+    /// assert_eq!(MemMiB::parse("0").unwrap(), MemMiB(0.0));
+    /// assert!(MemMiB::parse("twelve parsecs").is_err());
+    /// ```
+    pub fn parse(s: &str) -> Result<MemMiB, String> {
+        let t = s.trim();
+        if t.is_empty() {
+            return Err("empty memory value".to_string());
+        }
+        let split = t.find(|c: char| c.is_ascii_alphabetic()).unwrap_or(t.len());
+        let (num, unit) = (t[..split].trim(), t[split..].trim());
+        let v: f64 = num
+            .parse()
+            .map_err(|_| format!("bad number in memory value {s:?}"))?;
+        if !v.is_finite() || v < 0.0 {
+            return Err(format!("negative or non-finite memory value {s:?}"));
+        }
+        let bytes = match unit.to_ascii_uppercase().as_str() {
+            "" | "B" => v,
+            "KB" => v * 1e3,
+            "MB" => v * 1e6,
+            "GB" => v * 1e9,
+            "TB" => v * 1e12,
+            "KIB" => v * 1024.0,
+            "MIB" => v * 1024.0 * 1024.0,
+            "GIB" => v * 1024.0 * 1024.0 * 1024.0,
+            "TIB" => v * 1024.0 * 1024.0 * 1024.0 * 1024.0,
+            other => return Err(format!("unknown memory unit {other:?} in {s:?}")),
+        };
+        Ok(MemMiB(bytes / (1024.0 * 1024.0)))
+    }
 }
 
 impl Seconds {
@@ -236,5 +285,29 @@ mod tests {
     fn time_constructors() {
         assert_eq!(Seconds::from_minutes(2.0).0, 120.0);
         assert_eq!(Seconds::from_hours(1.5).0, 5400.0);
+    }
+
+    #[test]
+    fn parse_unit_suffixes() {
+        // the satellite edge cases: "0", "12.5 GB", "512 KB"
+        assert_eq!(MemMiB::parse("0").unwrap(), MemMiB(0.0));
+        let twelve_and_a_half_gb = MemMiB::parse("12.5 GB").unwrap();
+        assert!((twelve_and_a_half_gb.0 - 12.5e9 / (1024.0 * 1024.0)).abs() < 1e-9);
+        assert_eq!(MemMiB::parse("512 KB").unwrap(), MemMiB(512e3 / (1024.0 * 1024.0)));
+        // binary units, case-insensitivity, optional whitespace
+        assert_eq!(MemMiB::parse("1 GiB").unwrap(), MemMiB(1024.0));
+        assert_eq!(MemMiB::parse("2048KiB").unwrap(), MemMiB(2.0));
+        assert_eq!(MemMiB::parse(" 3 mb ").unwrap(), MemMiB::from_mb(3.0));
+        assert_eq!(MemMiB::parse("1 MiB").unwrap(), MemMiB(1.0));
+        // bare numbers are bytes (Nextflow raw trace mode)
+        assert_eq!(MemMiB::parse("1048576").unwrap(), MemMiB(1.0));
+        assert_eq!(MemMiB::parse("1048576 B").unwrap(), MemMiB(1.0));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for bad in ["", "   ", "GB", "nope", "-1 MB", "1 XB", "1..5 GB", "1e3 MB", "NaN"] {
+            assert!(MemMiB::parse(bad).is_err(), "{bad:?} should not parse");
+        }
     }
 }

@@ -1,0 +1,208 @@
+//! End-to-end ingestion + streaming-replay suite over the checked-in
+//! Nextflow fixture (`tests/fixtures/nextflow`): parser shape, the
+//! ingest → jsonl → read round-trip property, worker-count bit
+//! identity of the replay engine across every source kind, and
+//! warm-start-equals-cold checkpointing.
+
+use std::path::{Path, PathBuf};
+
+use ksegments::bench_harness::{make_method, FitterChoice};
+use ksegments::ingest::{
+    materialize, read_nextflow_dir, replay_source, Checkpoint, InMemorySource, JsonlReader,
+    NextflowDirSource, ReplayConfig, TraceSource,
+};
+use ksegments::predictors::ppm::PpmPredictor;
+use ksegments::predictors::MemoryPredictor;
+use ksegments::rng::Rng;
+use ksegments::sched::{schedule_stream, schedule_trace, SchedConfig};
+use ksegments::trace::{
+    read_trace_jsonl, write_trace_jsonl, write_trace_jsonl_ordered, TaskRun, Trace, UsageSeries,
+};
+use ksegments::units::{MemMiB, Seconds};
+
+fn fixture_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/nextflow")
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("ksegments_test_ingest_replay");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn kseg_factory() -> Box<dyn MemoryPredictor> {
+    make_method("ksegments-selective", FitterChoice::Native).expect("roster key")
+}
+
+#[test]
+fn fixture_parses_to_expected_shape() {
+    let mut src = NextflowDirSource::open(&fixture_dir()).unwrap();
+    assert_eq!(src.n_rows(), 12, "12 COMPLETED rows");
+    assert_eq!(src.skipped_rows(), 2, "FAILED + CACHED rows skipped");
+    // requested-memory defaults per process
+    let defaults = src.defaults();
+    let names: Vec<&str> = defaults.iter().map(|(ty, _)| ty.as_str()).collect();
+    assert_eq!(names, vec!["ALIGN", "FILTER", "QUANT"]);
+    assert_eq!(defaults[0].1, MemMiB::parse("2 GB").unwrap());
+
+    let trace = materialize(&mut src).unwrap();
+    assert_eq!(trace.n_types(), 3);
+    assert_eq!(trace.n_runs(), 12);
+    assert_eq!(trace.runs_of("ALIGN").len(), 5);
+    assert_eq!(trace.runs_of("QUANT").len(), 4);
+    assert_eq!(trace.runs_of("FILTER").len(), 3);
+
+    // submit-ordered seq: the first two arrivals are ALIGN then QUANT
+    let ordered = trace.all_runs_ordered();
+    assert_eq!(ordered[0].task_type, "ALIGN");
+    assert_eq!(ordered[1].task_type, "QUANT");
+    let seqs: Vec<u64> = ordered.iter().map(|r| r.seq).collect();
+    assert_eq!(seqs, (0..12).collect::<Vec<u64>>());
+
+    // ALIGN has real monitoring series (5 ramp samples at 2 s)
+    let align0 = &trace.runs_of("ALIGN")[0];
+    assert_eq!(align0.series.len(), 5);
+    assert_eq!(align0.series.interval().0, 2.0);
+    assert_eq!(align0.peak(), MemMiB::parse("400 MB").unwrap());
+    assert_eq!(align0.runtime, Seconds(10.0));
+    assert_eq!(align0.input_mib, MemMiB::parse("100 MB").unwrap().0);
+    // FILTER has no sample CSVs: flat fallback series at peak_rss
+    let filter0 = &trace.runs_of("FILTER")[0];
+    assert_eq!(filter0.series.len(), 1);
+    assert_eq!(filter0.peak(), MemMiB::parse("256 MB").unwrap());
+    assert_eq!(filter0.series.duration(), Seconds(5.0));
+}
+
+/// The satellite round-trip property on the fixture:
+/// ingest(NextflowDir) → write_trace_jsonl → read_trace_jsonl is the
+/// identity (both writers).
+#[test]
+fn nextflow_ingest_jsonl_roundtrip() {
+    let trace = read_nextflow_dir(&fixture_dir()).unwrap();
+    let grouped = tmp("fixture_grouped.jsonl");
+    write_trace_jsonl(&trace, &grouped).unwrap();
+    assert_eq!(read_trace_jsonl(&grouped).unwrap(), trace);
+    let ordered = tmp("fixture_ordered.jsonl");
+    write_trace_jsonl_ordered(&trace, &ordered).unwrap();
+    assert_eq!(read_trace_jsonl(&ordered).unwrap(), trace);
+}
+
+/// The same property over randomized traces (deterministic rng).
+#[test]
+fn randomized_jsonl_roundtrip_property() {
+    for seed in 0..5u64 {
+        let mut rng = Rng::new(seed);
+        let mut trace = Trace::new();
+        let n_types = 1 + (rng.f64() * 4.0) as usize;
+        for k in 0..n_types {
+            let ty = format!("wf/t{k}");
+            if rng.f64() < 0.7 {
+                trace.set_default(&ty, MemMiB(rng.uniform(100.0, 9000.0)));
+            }
+        }
+        // round-robin types so every type with a default also has runs
+        // (the jsonl writers only emit defaults of types that ran)
+        let n_runs = 5 + (rng.f64() * 20.0) as usize;
+        for seq in 0..n_runs {
+            let ty = format!("wf/t{}", seq % n_types);
+            let n_samples = 1 + (rng.f64() * 12.0) as usize;
+            let samples: Vec<f64> = (0..n_samples).map(|_| rng.uniform(0.0, 4000.0)).collect();
+            trace.push(TaskRun {
+                task_type: ty,
+                input_mib: rng.uniform(0.0, 5000.0),
+                runtime: Seconds(rng.uniform(0.1, 500.0)),
+                series: UsageSeries::new(rng.uniform(0.5, 5.0), samples),
+                seq: seq as u64,
+            });
+        }
+        trace.sort();
+        let path = tmp(&format!("random_{seed}.jsonl"));
+        write_trace_jsonl_ordered(&trace, &path).unwrap();
+        assert_eq!(read_trace_jsonl(&path).unwrap(), trace, "seed {seed}");
+    }
+}
+
+/// Acceptance criterion: `ksegments replay` over the fixture is
+/// bit-identical at workers = 1 vs 8 — and across all three source
+/// kinds (NextflowDir, streaming JsonlReader of the ingested file,
+/// InMemory).
+#[test]
+fn replay_fixture_bit_identical_across_workers_and_sources() {
+    let cfg = ReplayConfig { chunk: 3, ..ReplayConfig::default() };
+    let mut dir_src = NextflowDirSource::open(&fixture_dir()).unwrap();
+    let base = replay_source(&mut dir_src, &kseg_factory, &cfg, 1, None).unwrap();
+    assert_eq!(base.runs_replayed, 12);
+    assert_eq!(base.runs_warmup, 6, "2-run warm-up per type x 3 types");
+    assert_eq!(base.report.tasks.len(), 3);
+    assert!(base.report.tasks.iter().all(|t| t.n_scored > 0));
+
+    for workers in [2, 8] {
+        dir_src.rewind().unwrap();
+        let out = replay_source(&mut dir_src, &kseg_factory, &cfg, workers, None).unwrap();
+        assert_eq!(out, base, "workers={workers} diverged");
+    }
+
+    // the ingested jsonl file streams to the same outcome...
+    let trace = read_nextflow_dir(&fixture_dir()).unwrap();
+    let path = tmp("replay_fixture.jsonl");
+    write_trace_jsonl_ordered(&trace, &path).unwrap();
+    let mut jsonl_src = JsonlReader::open(&path).unwrap();
+    let via_jsonl = replay_source(&mut jsonl_src, &kseg_factory, &cfg, 8, None).unwrap();
+    assert_eq!(via_jsonl, base);
+    // ...and so does the in-memory adapter
+    let mut mem_src = InMemorySource::from_trace(&trace);
+    let via_mem = replay_source(&mut mem_src, &kseg_factory, &cfg, 4, None).unwrap();
+    assert_eq!(via_mem, base);
+}
+
+/// Acceptance criterion: a warm-start replay from a checkpoint ends in
+/// the same predictor state as one uninterrupted cold replay — both as
+/// a value and byte-for-byte on disk.
+#[test]
+fn warm_start_checkpoint_matches_cold_replay() {
+    let cfg = ReplayConfig::default();
+    let trace = read_nextflow_dir(&fixture_dir()).unwrap();
+
+    let mut cold_src = InMemorySource::from_trace(&trace);
+    let cold = replay_source(&mut cold_src, &kseg_factory, &cfg, 4, None).unwrap();
+
+    let defaults = InMemorySource::from_trace(&trace).defaults();
+    let all: Vec<TaskRun> = trace.all_runs_ordered().into_iter().cloned().collect();
+    let (first_half, second_half) = all.split_at(all.len() / 2);
+    let mut src_a = InMemorySource::from_runs(defaults.clone(), first_half.to_vec());
+    let session_a = replay_source(&mut src_a, &kseg_factory, &cfg, 2, None).unwrap();
+    let mut src_b = InMemorySource::from_runs(defaults, second_half.to_vec());
+    let session_b = replay_source(&mut src_b, &kseg_factory, &cfg, 8, Some(&session_a.checkpoint))
+        .unwrap();
+
+    assert_eq!(session_b.checkpoint, cold.checkpoint);
+    // serialized state is byte-identical (deterministic layout)
+    let p_cold = tmp("cold.ckpt.jsonl");
+    let p_warm = tmp("warm.ckpt.jsonl");
+    cold.checkpoint.save(&p_cold).unwrap();
+    session_b.checkpoint.save(&p_warm).unwrap();
+    assert_eq!(std::fs::read(&p_cold).unwrap(), std::fs::read(&p_warm).unwrap());
+    // and the save/load round trip preserves it exactly
+    assert_eq!(Checkpoint::load(&p_warm).unwrap(), cold.checkpoint);
+    // both paths saw every run
+    assert_eq!(session_a.runs_replayed + session_b.runs_replayed, cold.runs_replayed);
+}
+
+/// The scheduler consumes the same stream either way: materialized
+/// `schedule_trace` at `training_frac = 0` vs `schedule_stream` over
+/// the streaming JSONL reader.
+#[test]
+fn fixture_schedules_identically_from_stream_and_trace() {
+    let trace = read_nextflow_dir(&fixture_dir()).unwrap();
+    let cfg = SchedConfig { training_frac: 0.0, ..SchedConfig::default() };
+    let mut p1 = PpmPredictor::improved();
+    let materialized = schedule_trace(&trace, &mut p1, &cfg);
+    assert_eq!(materialized.completed, 12);
+
+    let path = tmp("sched_fixture.jsonl");
+    write_trace_jsonl_ordered(&trace, &path).unwrap();
+    let mut src = JsonlReader::open(&path).unwrap();
+    let mut p2 = PpmPredictor::improved();
+    let (streamed, _log) = schedule_stream(&mut src, &mut p2, &cfg, 4).unwrap();
+    assert_eq!(streamed, materialized);
+}

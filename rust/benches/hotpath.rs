@@ -17,7 +17,9 @@
 //! * `sched::schedule_trace` — the discrete-event scheduler loop under
 //!   both reservation policies;
 //! * `TsDb::range_max` — the segment-peak query (binary-searched
-//!   bounds vs the former linear scan).
+//!   bounds vs the former linear scan);
+//! * `stats::percentile` — per-call re-sort vs the sort-once
+//!   `SortedSamples` the report tables now query through.
 
 use ksegments::bench_harness::{bench, black_box, time_once};
 use ksegments::coordinator::ShardedPredictionService;
@@ -248,5 +250,21 @@ fn main() {
     });
     bench("tsdb/range 100k-points narrow-window", 20, 2_000, || {
         db.range(black_box(&tkey), black_box(60_000.0), black_box(60_240.0))
+    });
+
+    // -- percentile hot path ---------------------------------------------
+    // A SchedReport's queue-wait vector at cluster scale; the summary
+    // and every per-row table cell used to re-sort it per call. The
+    // sorted-once path must be orders of magnitude cheaper per query.
+    use ksegments::util::stats::{percentile, SortedSamples};
+    let waits: Vec<f64> = (0..100_000u64)
+        .map(|i| (i.wrapping_mul(2654435761) % 100_000) as f64 / 100.0)
+        .collect();
+    bench("stats/percentile re-sort-per-call 100k", 10, 20, || {
+        percentile(black_box(&waits), black_box(95.0))
+    });
+    let sorted = SortedSamples::new(&waits);
+    bench("stats/percentile sorted-once 100k", 20, 100_000, || {
+        sorted.percentile(black_box(95.0))
     });
 }

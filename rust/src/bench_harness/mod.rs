@@ -4,8 +4,10 @@
 //!   no criterion);
 //! * [`figures`] — one entry point per paper figure (Fig. 1, 4, 7a–c,
 //!   8), shared by the CLI and the `cargo bench` targets;
-//! * [`throughput`] — the scheduling sweep: makespan / queue-wait /
-//!   packing tables per (policy × predictor × arrival rate).
+//! * [`throughput`] — the scheduling sweeps: makespan / queue-wait /
+//!   packing tables per (policy × predictor × arrival rate), plus the
+//!   dependency-gated workflow tables per (policy × predictor ×
+//!   concurrent-instance count).
 
 pub mod ablation;
 pub mod figures;
@@ -18,5 +20,8 @@ pub use figures::{
     paper_traces, resolve_methods, run_fig1, run_fig4, run_fig7, run_fig7_selected, run_fig8,
     Fig7Results, Fig8Results, FitterChoice, EXTRA_METHOD_KEYS, METHOD_KEYS,
 };
-pub use throughput::{run_throughput, throughput_makers, ThroughputResults};
+pub use throughput::{
+    run_dag_throughput, run_throughput, throughput_makers, DagThroughputResults,
+    ThroughputResults,
+};
 pub use timer::{bench, black_box, time_once, Measurement};

@@ -5,7 +5,8 @@
 
 use crate::bench_harness::ablation::run_all as run_ablations;
 use crate::bench_harness::figures::{run_fig1, run_fig4, run_fig7_selected, run_fig8, FitterChoice};
-use crate::bench_harness::throughput::run_throughput;
+use crate::bench_harness::throughput::{run_dag_throughput, run_throughput};
+use crate::workload::eager_workflow;
 
 /// Build the complete experiments report (may take ~seconds); the
 /// fig7/fig8 grids and the ablation suite fan out over `workers`
@@ -55,6 +56,14 @@ pub fn full_report(
     out.push_str(&sweep.render_packing());
     out.push('\n');
 
+    let dag = run_dag_throughput(&eager_workflow(), seed, &[2, 4], workers);
+    out.push_str(&dag.render_workflow_makespan());
+    out.push('\n');
+    out.push_str(&dag.render_stretch());
+    out.push('\n');
+    out.push_str(&dag.render_stragglers());
+    out.push('\n');
+
     out.push_str(&run_ablations(seed, workers));
     out
 }
@@ -82,6 +91,8 @@ mod tests {
             "Fig 7c",
             "Fig 8",
             "Throughput — makespan",
+            "DAG throughput — mean workflow makespan",
+            "critical-path stretch",
             "Ablation — error offsets",
             "fixed vs adaptive k",
             "predictor zoo head-to-head",

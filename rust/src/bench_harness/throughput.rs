@@ -2,15 +2,24 @@
 //! Fig. 7 harness — what does segment-wise packing buy a cluster
 //! operator at different load levels?
 //!
-//! Sweeps (policy × predictor × arrival rate) at a fixed cluster via
-//! [`SchedGrid`] and renders makespan, mean queue wait, peak
-//! concurrency and utilization as markdown tables. Shared by the CLI
-//! (`ksegments schedule --sweep`) and `ksegments report`.
+//! Two row families, shared by the CLI (`ksegments schedule --sweep` /
+//! `schedule --dag ... --sweep`) and `ksegments report`:
+//!
+//! * [`run_throughput`] — independent arrivals: (policy × predictor ×
+//!   arrival rate) via [`SchedGrid`]; makespan, mean queue wait, peak
+//!   concurrency;
+//! * [`run_dag_throughput`] — dependency-gated workflow instances:
+//!   (policy × predictor × concurrent-instance count) via [`DagGrid`];
+//!   per-instance workflow makespan, critical-path stretch and
+//!   straggler counts, where an OOM-ing predictor now pays along the
+//!   critical path instead of just in per-task retries.
 
 use crate::bench_harness::figures::{makers_for_keys, FitterChoice};
 use crate::cluster::NodeSpec;
 use crate::predictors::MemoryPredictor;
-use crate::sched::{ReservationPolicy, SchedConfig, SchedGrid, SchedGridResults};
+use crate::sched::{
+    DagGrid, DagGridResults, ReservationPolicy, SchedConfig, SchedGrid, SchedGridResults,
+};
 use crate::sim::PredictorFactory;
 use crate::units::MemMiB;
 use crate::workload::{eager_workflow, generate_workflow_trace};
@@ -60,6 +69,38 @@ pub fn run_throughput(seed: u64, interarrivals: &[f64], workers: usize) -> Throu
     ThroughputResults { interarrivals: interarrivals.to_vec(), policies, methods, results }
 }
 
+/// Markdown table shared by both sweep families: one row per
+/// (policy · method), one column per swept point.
+fn render_sweep_table(
+    title: &str,
+    unit: &str,
+    col_labels: &[String],
+    policies: &[ReservationPolicy],
+    methods: &[String],
+    cell: impl Fn(usize, usize, usize) -> f64,
+) -> String {
+    let mut out = format!("## {title}\n\n| policy · method |");
+    for label in col_labels {
+        out.push_str(&format!(" {label} |"));
+    }
+    out.push_str("\n|---|");
+    for _ in col_labels {
+        out.push_str("---|");
+    }
+    out.push('\n');
+    for (p, policy) in policies.iter().enumerate() {
+        for (m, method) in methods.iter().enumerate() {
+            out.push_str(&format!("| {} · {} |", policy.name(), method));
+            for c in 0..col_labels.len() {
+                out.push_str(&format!(" {:.3} |", cell(p, m, c)));
+            }
+            out.push('\n');
+        }
+    }
+    out.push_str(&format!("\n(unit: {unit})\n"));
+    out
+}
+
 impl ThroughputResults {
     fn cell(&self, p: usize, m: usize, a: usize) -> &crate::sched::SchedReport {
         self.results.report(p, m, 0, a).expect("cell present")
@@ -71,26 +112,11 @@ impl ThroughputResults {
         unit: &str,
         get: impl Fn(&crate::sched::SchedReport) -> f64,
     ) -> String {
-        let mut out = format!("## {title}\n\n| policy · method |");
-        for ia in &self.interarrivals {
-            out.push_str(&format!(" ia={ia:.0}s |"));
-        }
-        out.push_str("\n|---|");
-        for _ in &self.interarrivals {
-            out.push_str("---|");
-        }
-        out.push('\n');
-        for (p, policy) in self.policies.iter().enumerate() {
-            for (m, method) in self.methods.iter().enumerate() {
-                out.push_str(&format!("| {} · {} |", policy.name(), method));
-                for a in 0..self.interarrivals.len() {
-                    out.push_str(&format!(" {:.3} |", get(self.cell(p, m, a))));
-                }
-                out.push('\n');
-            }
-        }
-        out.push_str(&format!("\n(unit: {unit})\n"));
-        out
+        let cols: Vec<String> =
+            self.interarrivals.iter().map(|ia| format!("ia={ia:.0}s")).collect();
+        render_sweep_table(title, unit, &cols, &self.policies, &self.methods, |p, m, a| {
+            get(self.cell(p, m, a))
+        })
     }
 
     /// The headline table: makespan per policy × arrival rate.
@@ -129,9 +155,129 @@ impl ThroughputResults {
     }
 }
 
+/// One DAG sweep's rendered axes plus the raw per-cell reports.
+pub struct DagThroughputResults {
+    pub workflow: String,
+    pub instance_counts: Vec<usize>,
+    pub policies: Vec<ReservationPolicy>,
+    pub methods: Vec<String>,
+    pub results: DagGridResults,
+}
+
+/// Run the dependency-gated sweep on a paper workflow: 2 policies ×
+/// the [`THROUGHPUT_KEYS`] roster × the given concurrent-instance
+/// counts, on the same packing-pressure cluster as [`run_throughput`]
+/// (2 × 32 GiB). Instances arrive gapped by the default
+/// inter-arrival; tasks inside an instance release only as their
+/// parents complete.
+pub fn run_dag_throughput(
+    wf: &crate::workload::WorkflowSpec,
+    seed: u64,
+    instance_counts: &[usize],
+    workers: usize,
+) -> DagThroughputResults {
+    let policies = vec![ReservationPolicy::StaticPeak, ReservationPolicy::SegmentWise];
+    let base = SchedConfig { seed, ..SchedConfig::default() };
+    let node = NodeSpec { mem: MemMiB::from_gib(32.0), cores: 32 };
+    let grid = DagGrid::new(
+        policies.clone(),
+        throughput_makers(),
+        wf,
+        vec![2],
+        instance_counts.to_vec(),
+    )
+    .with_base(base, node);
+    let results = grid.run(workers);
+    let methods = throughput_makers().iter().map(|mk| mk().name()).collect();
+    DagThroughputResults {
+        workflow: wf.name.clone(),
+        instance_counts: instance_counts.to_vec(),
+        policies,
+        methods,
+        results,
+    }
+}
+
+impl DagThroughputResults {
+    fn cell(&self, p: usize, m: usize, i: usize) -> &crate::sched::SchedReport {
+        self.results.report(p, m, 0, i).expect("cell present")
+    }
+
+    fn render_metric(
+        &self,
+        title: &str,
+        unit: &str,
+        get: impl Fn(&crate::sched::SchedReport) -> f64,
+    ) -> String {
+        let title = format!("{title} ({})", self.workflow);
+        let unit = format!("{unit}; N = concurrent workflow instances");
+        let cols: Vec<String> = self.instance_counts.iter().map(|n| format!("N={n}")).collect();
+        render_sweep_table(&title, &unit, &cols, &self.policies, &self.methods, |p, m, i| {
+            get(self.cell(p, m, i))
+        })
+    }
+
+    /// The headline table: mean per-instance workflow makespan.
+    pub fn render_workflow_makespan(&self) -> String {
+        self.render_metric(
+            "DAG throughput — mean workflow makespan by policy × instance count",
+            "seconds from instance arrival to its last completion, mean over instances",
+            |r| r.mean_workflow_makespan_s(),
+        )
+    }
+
+    /// Mean makespan / critical-path ratio (1.0 = DAG-speed).
+    pub fn render_stretch(&self) -> String {
+        self.render_metric(
+            "DAG throughput — critical-path stretch by policy × instance count",
+            "mean per-instance makespan / critical-path length",
+            |r| r.critical_path_stretch(),
+        )
+    }
+
+    /// Straggler instances (makespan > 2× critical path).
+    pub fn render_stragglers(&self) -> String {
+        self.render_metric(
+            "DAG throughput — straggler instances by policy × instance count",
+            "instances whose makespan exceeded 2x their critical path",
+            |r| r.workflow_stragglers as f64,
+        )
+    }
+
+    /// One-line summary per cell, for the CLI.
+    pub fn render_summaries(&self) -> String {
+        let mut out = String::new();
+        for r in &self.results.reports {
+            out.push_str(&r.summary());
+            out.push('\n');
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn dag_sweep_renders_all_tables() {
+        let t = run_dag_throughput(&eager_workflow(), 42, &[2], 2);
+        assert_eq!(t.methods.len(), THROUGHPUT_KEYS.len());
+        let mk = t.render_workflow_makespan();
+        assert!(mk.contains("static-peak · k-Segments Selective"));
+        assert!(mk.contains("segment-wise · Sizey Ensemble"));
+        assert!(mk.contains("N=2"));
+        assert!(mk.contains("(eager)"));
+        assert!(t.render_stretch().contains("critical-path stretch"));
+        assert!(t.render_stragglers().contains("straggler"));
+        assert!(t.render_summaries().contains("workflows: 2/2 done"));
+        for r in &t.results.reports {
+            assert_eq!(r.workflows_completed, 2);
+            assert_eq!(r.completed, r.submitted);
+            // stretch is a ratio ≥ 1 whenever instances completed
+            assert!(r.critical_path_stretch() >= 1.0 - 1e-9);
+        }
+    }
 
     #[test]
     fn sweep_renders_all_tables() {

@@ -33,6 +33,16 @@ pub enum EngineEvent {
     /// node (memory contention, not a misprediction); the task is
     /// requeued with a full-peak reservation.
     GrowDenied { task_type: String, seq: u64, segment: usize, time_s: f64 },
+    /// Scheduler (DAG mode): every parent of this task in workflow
+    /// instance `instance` has completed, so the task is released to
+    /// the resource manager at `time_s`. Roots are released when their
+    /// instance arrives.
+    Released { task_type: String, seq: u64, instance: u64, time_s: f64 },
+    /// Scheduler (DAG mode): the last task of workflow instance
+    /// `instance` completed at `time_s`; `makespan_s` is measured from
+    /// the instance's arrival. `task_type()` reports the workflow
+    /// name, `seq()` the instance ordinal.
+    WorkflowDone { workflow: String, instance: u64, tasks: u32, time_s: f64, makespan_s: f64 },
 }
 
 impl EngineEvent {
@@ -44,7 +54,9 @@ impl EngineEvent {
             | EngineEvent::Completed { task_type, .. }
             | EngineEvent::Placed { task_type, .. }
             | EngineEvent::OomKilled { task_type, .. }
-            | EngineEvent::GrowDenied { task_type, .. } => task_type,
+            | EngineEvent::GrowDenied { task_type, .. }
+            | EngineEvent::Released { task_type, .. } => task_type,
+            EngineEvent::WorkflowDone { workflow, .. } => workflow,
         }
     }
 
@@ -56,7 +68,9 @@ impl EngineEvent {
             | EngineEvent::Completed { seq, .. }
             | EngineEvent::Placed { seq, .. }
             | EngineEvent::OomKilled { seq, .. }
-            | EngineEvent::GrowDenied { seq, .. } => *seq,
+            | EngineEvent::GrowDenied { seq, .. }
+            | EngineEvent::Released { seq, .. } => *seq,
+            EngineEvent::WorkflowDone { instance, .. } => *instance,
         }
     }
 }
@@ -169,10 +183,25 @@ mod tests {
             EngineEvent::OomKilled { task_type: "s".into(), seq: 9, attempt: 1, time_s: 8.0 };
         let denied =
             EngineEvent::GrowDenied { task_type: "s".into(), seq: 9, segment: 2, time_s: 6.0 };
-        for e in [&placed, &oom, &denied] {
+        let released =
+            EngineEvent::Released { task_type: "s".into(), seq: 9, instance: 3, time_s: 2.0 };
+        for e in [&placed, &oom, &denied, &released] {
             assert_eq!(e.task_type(), "s");
             assert_eq!(e.seq(), 9);
         }
+    }
+
+    #[test]
+    fn workflow_done_reports_workflow_and_instance() {
+        let done = EngineEvent::WorkflowDone {
+            workflow: "eager".into(),
+            instance: 4,
+            tasks: 18,
+            time_s: 99.0,
+            makespan_s: 42.0,
+        };
+        assert_eq!(done.task_type(), "eager");
+        assert_eq!(done.seq(), 4);
     }
 
     #[test]

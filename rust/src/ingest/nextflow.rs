@@ -27,6 +27,15 @@
 //! task without one gets a flat single-sample series at `peak_rss`
 //! over `realtime` — peak-faithful, so static baselines and wastage
 //! accounting stay meaningful on plain `trace.txt`-only dumps.
+//!
+//! Real nf-core dumps are messy: durations come as `350ms`, `12.5s`
+//! or `1m 30s`; optional cells (`peak_rss`, `memory`, the input-size
+//! columns, `submit`) are `-` or empty for cached/virtual tasks. All
+//! of these parse; what cannot be made sense of — a malformed number,
+//! an unknown unit, or a row whose memory usage is unreconstructable
+//! (`-` peak_rss **and** no monitoring CSV) — fails with the
+//! `trace.txt` line number instead of being silently skipped or
+//! panicking downstream.
 
 use std::collections::BTreeMap;
 use std::fs::File;
@@ -80,7 +89,11 @@ struct IndexRow {
     task_type: String,
     input_mib: f64,
     runtime_s: f64,
-    peak_rss_mib: f64,
+    /// `None` when the cell was `-`/empty — fine as long as a
+    /// monitoring CSV exists, a line-numbered error otherwise.
+    peak_rss_mib: Option<f64>,
+    /// 1-based `trace.txt` line, for errors raised after indexing.
+    lineno: usize,
     seq: u64,
 }
 
@@ -191,12 +204,12 @@ impl NextflowDirSource {
                     .max(MIN_INTERVAL_S)
             };
             let peak_rss_mib = match field(&f, c_peak) {
-                Some(raw) => {
+                Some(raw) => Some(
                     MemMiB::parse(&raw)
                         .map_err(|e| anyhow::anyhow!("trace.txt line {lineno}: peak_rss: {e}"))?
-                        .0
-                }
-                None => 0.0,
+                        .0,
+                ),
+                None => None,
             };
             if let Some(raw) = field(&f, c_memory) {
                 let mem = MemMiB::parse(&raw)
@@ -229,6 +242,7 @@ impl NextflowDirSource {
                     input_mib,
                     runtime_s,
                     peak_rss_mib,
+                    lineno,
                     seq: 0,
                 },
             ));
@@ -268,6 +282,9 @@ impl NextflowDirSource {
 
     /// Load a row's usage series: its monitoring CSV when one exists,
     /// else a flat single-sample series at `peak_rss` over `realtime`.
+    /// A row with neither (`-` peak_rss, no CSV) has no memory
+    /// information at all — that is a line-numbered error, not a
+    /// silent zero-usage run.
     fn series_for(&self, row: &IndexRow) -> Result<UsageSeries> {
         for sub in ["samples", "monitoring"] {
             let path = self.dir.join(sub).join(format!("{}.csv", row.task_id));
@@ -275,7 +292,14 @@ impl NextflowDirSource {
                 return read_samples_csv(&path, row.runtime_s);
             }
         }
-        Ok(UsageSeries::new(row.runtime_s.max(MIN_INTERVAL_S), vec![row.peak_rss_mib]))
+        let peak = row.peak_rss_mib.with_context(|| {
+            format!(
+                "trace.txt line {}: peak_rss is missing and task {} has no \
+                 monitoring CSV — the row carries no memory information",
+                row.lineno, row.task_id
+            )
+        })?;
+        Ok(UsageSeries::new(row.runtime_s.max(MIN_INTERVAL_S), vec![peak]))
     }
 }
 
@@ -526,6 +550,69 @@ mod tests {
         let dir = write_dir("badfields", &format!("{HEADER}\na\tb\n"), &[]);
         let err = NextflowDirSource::open(&dir).unwrap_err();
         assert!(format!("{err:#}").contains("line 2"), "{err:#}");
+    }
+
+    /// The nf-core reality pass: `ms` durations, bare-second decimals
+    /// and `-` optional cells all parse through the full pipeline.
+    #[test]
+    fn real_nextflow_forms_parse_end_to_end() {
+        let trace_txt = format!(
+            "{HEADER}\n{}\n{}\n{}\n",
+            row(1, "A", "COMPLETED", 1000, "750ms", "100 MB", "1 GB", "10 MB"),
+            row(2, "A", "COMPLETED", 2000, "12.5s", "120 MB", "1 GB", "12 MB"),
+            // '-' in every optional column; the samples CSV supplies
+            // the usage series
+            "3\tha/sh3\tB\ts3\tB (s3)\tCOMPLETED\t0\t3000\t1m 30s\t-\t-\t-",
+        );
+        let dir = write_dir(
+            "nfforms",
+            &trace_txt,
+            &[("3", "time_s,rss\n0,600 MB\n45,900 MB\n")],
+        );
+        let mut src = NextflowDirSource::open(&dir).unwrap();
+        let runs = src.next_chunk(10).unwrap();
+        assert_eq!(runs.len(), 3);
+        assert!((runs[0].runtime.0 - 0.75).abs() < 1e-9, "750ms realtime");
+        assert!((runs[1].runtime.0 - 12.5).abs() < 1e-9, "12.5s realtime");
+        assert_eq!(runs[2].runtime, Seconds(90.0));
+        assert_eq!(runs[2].series.len(), 2, "series from the CSV despite '-' peak_rss");
+        assert!((runs[2].peak().0 - MemMiB::parse("900 MB").unwrap().0).abs() < 1e-9);
+        assert_eq!(runs[2].input_mib, 0.0, "'-' input defaults to 0");
+        // '-' memory contributes no default for B
+        assert!(src.defaults().iter().all(|(ty, _)| ty != "B"));
+    }
+
+    /// A row with neither a peak_rss value nor a monitoring CSV has no
+    /// memory information — that must be a line-numbered error, not a
+    /// silent zero-usage run.
+    #[test]
+    fn missing_peak_without_csv_is_a_line_numbered_error() {
+        let trace_txt = format!(
+            "{HEADER}\n{}\n{}\n",
+            row(1, "A", "COMPLETED", 1000, "4s", "100 MB", "1 GB", "10 MB"),
+            "2\tha/sh2\tA\ts2\tA (s2)\tCOMPLETED\t0\t2000\t4s\t-\t1 GB\t10 MB",
+        );
+        let dir = write_dir("nopeak", &trace_txt, &[]);
+        let mut src = NextflowDirSource::open(&dir).unwrap();
+        let err = src.next_chunk(10).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 3"), "{msg:?}");
+        assert!(msg.contains("peak_rss"), "{msg:?}");
+    }
+
+    /// `-` realtime on a COMPLETED row is unrecoverable and must carry
+    /// its line number too.
+    #[test]
+    fn missing_realtime_is_a_line_numbered_error() {
+        let trace_txt = format!(
+            "{HEADER}\n{}\n",
+            "2\tha/sh2\tA\ts2\tA (s2)\tCOMPLETED\t0\t2000\t-\t100 MB\t1 GB\t10 MB",
+        );
+        let dir = write_dir("nort", &trace_txt, &[]);
+        let err = NextflowDirSource::open(&dir).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 2"), "{msg:?}");
+        assert!(msg.contains("realtime"), "{msg:?}");
     }
 
     #[test]

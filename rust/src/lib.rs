@@ -96,7 +96,8 @@ pub mod prelude {
     pub use crate::ml::step_fn::StepFunction;
     pub use crate::predictors::{Allocation, FailureInfo, MemoryPredictor};
     pub use crate::sched::{
-        schedule_stream, schedule_trace, ReservationPolicy, SchedConfig, SchedReport,
+        schedule_stream, schedule_trace, schedule_workflows, ReservationPolicy, SchedConfig,
+        SchedReport, WorkflowSource,
     };
     pub use crate::sim::{simulate_trace, SimConfig};
     pub use crate::trace::{TaskRun, Trace, UsageSeries};

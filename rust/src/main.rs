@@ -54,7 +54,7 @@ USAGE:
   ksegments schedule  [--nodes N] [--node-gib G] [--arrival SECS]
                       [--policy static|segment|both] [--method METHOD]
                       [--frac F] [--seed N] [--workflow W]
-                      [--sweep] [--workers N]
+                      [--dag W --instances N] [--sweep] [--workers N]
   ksegments ingest    DIR [--out FILE] [--format jsonl|csv]
   ksegments replay    --source PATH [--method SEL] [--workers N]
                       [--checkpoint FILE] [--checkpoint-out FILE]
@@ -78,7 +78,11 @@ timed stream (mean inter-arrival --arrival seconds, exponential) onto
 --nodes nodes of --node-gib GiB each, reserved per --policy
 (static-peak vs segment-wise step functions; both = comparison).
 --sweep renders the throughput tables over several arrival rates on
-the parallel grid instead.
+the parallel grid instead. --dag W switches to dependency-gated
+workflow mode: --instances N concurrent executions of workflow W's
+DAG, each task released only when its parents complete (OOM retries
+of a parent delay its whole subtree); combined with --sweep it
+renders the workflow-makespan tables over instance counts.
 
 ingest normalizes a Nextflow trace directory (trace.txt [+ samples/])
 into the crate's replay-ordered JSONL trace format.
@@ -495,40 +499,42 @@ ksegments schedule — discrete-event cluster scheduling simulator
 
   --nodes N       cluster size (default 2)
   --node-gib G    memory per node in GiB (default 32)
-  --arrival SECS  mean inter-arrival gap of the task stream (default 5)
+  --arrival SECS  mean inter-arrival gap of the task (or workflow
+                  instance) stream (default 5)
   --policy P      static | segment | both (default both)
   --method M      predictor driving the reservations
                   (default ksegments-selective; any METHODS entry from
                   `ksegments --help`, incl. ensemble and dynseg)
-  --frac F        warm-up training fraction (default 0.5)
+  --frac F        warm-up training fraction (default 0.5; ignored in
+                  --dag mode, which always learns online)
   --seed N        trace + arrival seed (default 42)
   --workflow W    eager | sarek (default eager)
-  --sweep         render throughput tables over several arrival rates
+  --dag W         dependency-gated workflow mode: schedule N concurrent
+                  instances of workflow W's DAG, releasing a task only
+                  when its parents have completed
+  --instances N   concurrent workflow instances for --dag (default 4;
+                  with --sweep, the swept axis: N or N1,N2,...,
+                  default 2,4,8)
+  --sweep         render throughput tables on the parallel grid over
+                  several arrival rates (or, with --dag, over the
+                  --instances counts); the sweep itself runs the fixed
+                  roster on a fixed 2 x 32 GiB cluster — --nodes,
+                  --node-gib, --arrival and --method apply to the
+                  single-run modes only
   --workers N     worker threads for --sweep (default: cores)
 ";
 
-fn cmd_schedule(args: &Args) -> Result<()> {
-    use ksegments::cluster::NodeSpec;
-    use ksegments::sched::{schedule_trace, ReservationPolicy, SchedConfig};
-    use ksegments::units::{MemMiB, Seconds};
+/// Axes shared by the independent-arrivals and DAG schedule modes.
+struct SchedCliArgs {
+    n_nodes: usize,
+    node_gib: f64,
+    arrival: f64,
+    policies: Vec<ksegments::sched::ReservationPolicy>,
+    method: String,
+}
 
-    if args.flag("help") {
-        print!("{SCHEDULE_USAGE}");
-        return Ok(());
-    }
-    if args.flag("sweep") {
-        let sweep = ksegments::bench_harness::run_throughput(
-            args.seed(),
-            &[2.0, 5.0, 10.0],
-            args.workers(),
-        );
-        println!("{}", sweep.render_makespan());
-        println!("{}", sweep.render_queue_wait());
-        println!("{}", sweep.render_packing());
-        println!("{}", sweep.render_summaries());
-        return Ok(());
-    }
-
+fn parse_sched_cli(args: &Args) -> Result<SchedCliArgs> {
+    use ksegments::sched::ReservationPolicy;
     let n_nodes: usize = args
         .kv
         .get("nodes")
@@ -550,15 +556,6 @@ fn cmd_schedule(args: &Args) -> Result<()> {
         .map(|s| s.parse())
         .transpose()?
         .unwrap_or(5.0);
-    let frac: f64 = args
-        .kv
-        .get("frac")
-        .map(|s| s.parse())
-        .transpose()?
-        .unwrap_or(0.5);
-    if !(0.0..1.0).contains(&frac) {
-        bail!("--frac must be in [0, 1)");
-    }
     let policy_arg = args.kv.get("policy").map(String::as_str).unwrap_or("both");
     let policies: Vec<ReservationPolicy> = match policy_arg {
         "both" => vec![ReservationPolicy::StaticPeak, ReservationPolicy::SegmentWise],
@@ -569,26 +566,140 @@ fn cmd_schedule(args: &Args) -> Result<()> {
         .kv
         .get("method")
         .map(String::as_str)
-        .unwrap_or("ksegments-selective");
+        .unwrap_or("ksegments-selective")
+        .to_string();
+    Ok(SchedCliArgs { n_nodes, node_gib, arrival, policies, method })
+}
+
+/// `schedule --dag W`: dependency-gated workflow instances.
+fn cmd_schedule_dag(args: &Args, wf_name: &str) -> Result<()> {
+    use ksegments::cluster::NodeSpec;
+    use ksegments::sched::{schedule_workflows, SchedConfig, WorkflowSource};
+    use ksegments::units::{MemMiB, Seconds};
+
+    let wf = workflow_by_name(wf_name)?;
+    if args.flag("sweep") {
+        // the sweep's instance-count axis: --instances N or N1,N2,...
+        // (the cluster/method axes are fixed, like the arrival sweep)
+        let counts: Vec<usize> = match args.kv.get("instances") {
+            Some(s) => {
+                let v = s
+                    .split(',')
+                    .map(|t| t.trim().parse::<usize>())
+                    .collect::<Result<Vec<_>, _>>()
+                    .context("--instances (sweep mode takes N or a comma list, e.g. 2,4,8)")?;
+                if v.is_empty() || v.contains(&0) {
+                    bail!("--instances counts must be positive");
+                }
+                v
+            }
+            None => vec![2, 4, 8],
+        };
+        let sweep = ksegments::bench_harness::run_dag_throughput(
+            &wf,
+            args.seed(),
+            &counts,
+            args.workers(),
+        );
+        println!("{}", sweep.render_workflow_makespan());
+        println!("{}", sweep.render_stretch());
+        println!("{}", sweep.render_stragglers());
+        println!("{}", sweep.render_summaries());
+        return Ok(());
+    }
+    let cli = parse_sched_cli(args)?;
+    let instances: usize = args
+        .kv
+        .get("instances")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(4);
+    if instances == 0 {
+        bail!("--instances must be at least 1");
+    }
+    println!(
+        "schedule --dag: workflow={wf_name} instances={instances} method={} \
+         nodes={}x{}GiB arrival={}s seed={}\n",
+        cli.method,
+        cli.n_nodes,
+        cli.node_gib,
+        cli.arrival,
+        args.seed()
+    );
+    for policy in cli.policies {
+        let cfg = SchedConfig {
+            policy,
+            nodes: vec![NodeSpec { mem: MemMiB::from_gib(cli.node_gib), cores: 32 }; cli.n_nodes],
+            mean_interarrival: Seconds(cli.arrival),
+            seed: args.seed(),
+            ..SchedConfig::default()
+        };
+        let src = WorkflowSource::from_spec(&wf, args.seed(), instances);
+        let mut predictor = method_by_name(&cli.method, args.fitter())?;
+        let rep = schedule_workflows(src, predictor.as_mut(), &cfg);
+        println!("{}", rep.summary());
+    }
+    Ok(())
+}
+
+fn cmd_schedule(args: &Args) -> Result<()> {
+    use ksegments::cluster::NodeSpec;
+    use ksegments::sched::{schedule_trace, SchedConfig};
+    use ksegments::units::{MemMiB, Seconds};
+
+    if args.flag("help") {
+        print!("{SCHEDULE_USAGE}");
+        return Ok(());
+    }
+    if let Some(dag_wf) = args.kv.get("dag").cloned() {
+        return cmd_schedule_dag(args, &dag_wf);
+    }
+    if args.flag("sweep") {
+        let sweep = ksegments::bench_harness::run_throughput(
+            args.seed(),
+            &[2.0, 5.0, 10.0],
+            args.workers(),
+        );
+        println!("{}", sweep.render_makespan());
+        println!("{}", sweep.render_queue_wait());
+        println!("{}", sweep.render_packing());
+        println!("{}", sweep.render_summaries());
+        return Ok(());
+    }
+
+    let cli = parse_sched_cli(args)?;
+    let frac: f64 = args
+        .kv
+        .get("frac")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(0.5);
+    if !(0.0..1.0).contains(&frac) {
+        bail!("--frac must be in [0, 1)");
+    }
     let wf_name = args.kv.get("workflow").map(String::as_str).unwrap_or("eager");
     let trace = generate_workflow_trace(&workflow_by_name(wf_name)?, args.seed());
 
     println!(
-        "schedule: workflow={wf_name} method={method} nodes={n_nodes}x{node_gib}GiB \
-         arrival={arrival}s frac={frac} seed={}\n",
+        "schedule: workflow={wf_name} method={} nodes={}x{}GiB \
+         arrival={}s frac={frac} seed={}\n",
+        cli.method,
+        cli.n_nodes,
+        cli.node_gib,
+        cli.arrival,
         args.seed()
     );
     let mut reports = Vec::new();
-    for policy in policies {
+    for policy in cli.policies {
         let cfg = SchedConfig {
             policy,
-            nodes: vec![NodeSpec { mem: MemMiB::from_gib(node_gib), cores: 32 }; n_nodes],
-            mean_interarrival: Seconds(arrival),
+            nodes: vec![NodeSpec { mem: MemMiB::from_gib(cli.node_gib), cores: 32 }; cli.n_nodes],
+            mean_interarrival: Seconds(cli.arrival),
             seed: args.seed(),
             training_frac: frac,
             ..SchedConfig::default()
         };
-        let mut predictor = method_by_name(method, args.fitter())?;
+        let mut predictor = method_by_name(&cli.method, args.fitter())?;
         let rep = schedule_trace(&trace, predictor.as_mut(), &cfg);
         println!("{}", rep.summary());
         reports.push(rep);

@@ -1,17 +1,24 @@
-//! Parallel scheduling sweep: (policy × predictor × cluster size ×
-//! arrival rate) cells on the same worker pool as the evaluation grid.
+//! Parallel scheduling sweeps on the same worker pool as the
+//! evaluation grid: [`SchedGrid`] over (policy × predictor × cluster
+//! size × arrival rate) for independent arrivals, and [`DagGrid`] over
+//! (policy × predictor × cluster size × concurrent-workflow count) for
+//! dependency-gated workflow instances.
 //!
-//! Mirrors [`crate::sim::parallel::EvalGrid`]: cells are enumerated in
-//! a canonical policy-major order and executed via [`parallel_map`];
-//! every cell builds a fresh predictor and a fresh cluster, schedules
-//! each trace independently and merges per-trace [`SchedReport`]s in
-//! trace order — results are bit-identical for any worker count.
+//! Both mirror [`crate::sim::parallel::EvalGrid`]: cells are
+//! enumerated in a canonical policy-major order and executed via
+//! [`parallel_map`]; every cell builds a fresh predictor and a fresh
+//! cluster (and, for [`DagGrid`], regenerates its instances from the
+//! seed), so results are bit-identical for any worker count.
 
 use crate::cluster::NodeSpec;
-use crate::sched::{schedule_trace, ReservationPolicy, SchedConfig, SchedReport};
+use crate::sched::{
+    schedule_trace, schedule_workflows, ReservationPolicy, SchedConfig, SchedReport,
+    WorkflowSource,
+};
 use crate::sim::{parallel_map, PredictorFactory};
 use crate::trace::Trace;
 use crate::units::Seconds;
+use crate::workload::WorkflowSpec;
 
 /// Index quadruple identifying one cell of a [`SchedGrid`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -142,6 +149,133 @@ impl<'a> SchedGrid<'a> {
     }
 }
 
+/// Index quadruple identifying one cell of a [`DagGrid`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DagCell {
+    pub policy_idx: usize,
+    pub method_idx: usize,
+    pub nodes_idx: usize,
+    pub instances_idx: usize,
+}
+
+/// Results of a [`DagGrid`] run, in [`DagGrid::cells`] order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DagGridResults {
+    pub cells: Vec<DagCell>,
+    pub reports: Vec<SchedReport>,
+}
+
+impl DagGridResults {
+    /// Report of one cell by axis indices.
+    pub fn report(
+        &self,
+        policy_idx: usize,
+        method_idx: usize,
+        nodes_idx: usize,
+        instances_idx: usize,
+    ) -> Option<&SchedReport> {
+        self.cells
+            .iter()
+            .position(|c| {
+                c.policy_idx == policy_idx
+                    && c.method_idx == method_idx
+                    && c.nodes_idx == nodes_idx
+                    && c.instances_idx == instances_idx
+            })
+            .map(|i| &self.reports[i])
+    }
+}
+
+/// The dependency-gated sweep: reservation policies × predictor
+/// factories × cluster sizes × **concurrent workflow instance
+/// counts**, all scheduling DAG executions of one [`WorkflowSpec`]
+/// through [`schedule_workflows`].
+pub struct DagGrid<'a> {
+    policies: Vec<ReservationPolicy>,
+    methods: Vec<PredictorFactory>,
+    wf: &'a WorkflowSpec,
+    node_counts: Vec<usize>,
+    instance_counts: Vec<usize>,
+    base: SchedConfig,
+    node_spec: NodeSpec,
+}
+
+impl<'a> DagGrid<'a> {
+    pub fn new(
+        policies: Vec<ReservationPolicy>,
+        methods: Vec<PredictorFactory>,
+        wf: &'a WorkflowSpec,
+        node_counts: Vec<usize>,
+        instance_counts: Vec<usize>,
+    ) -> Self {
+        assert!(!policies.is_empty(), "grid needs at least one policy");
+        assert!(!methods.is_empty(), "grid needs at least one predictor factory");
+        assert!(!node_counts.is_empty(), "grid needs at least one cluster size");
+        assert!(!instance_counts.is_empty(), "grid needs at least one instance count");
+        DagGrid {
+            policies,
+            methods,
+            wf,
+            node_counts,
+            instance_counts,
+            base: SchedConfig::default(),
+            node_spec: NodeSpec::paper_testbed(),
+        }
+    }
+
+    /// Override the per-cell config template (seed, arrival shape, ...)
+    /// and the replicated node spec.
+    pub fn with_base(mut self, base: SchedConfig, node_spec: NodeSpec) -> Self {
+        self.base = base;
+        self.node_spec = node_spec;
+        self
+    }
+
+    pub fn n_cells(&self) -> usize {
+        self.policies.len()
+            * self.methods.len()
+            * self.node_counts.len()
+            * self.instance_counts.len()
+    }
+
+    /// Canonical policy-major cell order (then method, cluster size,
+    /// instance count).
+    pub fn cells(&self) -> Vec<DagCell> {
+        let mut out = Vec::with_capacity(self.n_cells());
+        for policy_idx in 0..self.policies.len() {
+            for method_idx in 0..self.methods.len() {
+                for nodes_idx in 0..self.node_counts.len() {
+                    for instances_idx in 0..self.instance_counts.len() {
+                        out.push(DagCell { policy_idx, method_idx, nodes_idx, instances_idx });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Execute every cell on `workers` threads. Each cell regenerates
+    /// its [`WorkflowSource`] from `base.seed` — the instances of two
+    /// cells with equal instance counts are identical draws, so the
+    /// policy/method axes compare like against like.
+    pub fn run(&self, workers: usize) -> DagGridResults {
+        let cells = self.cells();
+        let reports = parallel_map(cells.len(), workers, |i| {
+            let c = cells[i];
+            let cfg = SchedConfig {
+                policy: self.policies[c.policy_idx],
+                nodes: vec![self.node_spec; self.node_counts[c.nodes_idx]],
+                ..self.base.clone()
+            };
+            let src =
+                WorkflowSource::from_spec(self.wf, cfg.seed, self.instance_counts[c.instances_idx]);
+            let mut predictor = (self.methods[c.method_idx])();
+            schedule_workflows(src, predictor.as_mut(), &cfg)
+        });
+        DagGridResults { cells, reports }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -211,6 +345,78 @@ mod tests {
         for workers in [2, 4] {
             assert_eq!(grid.run(workers), seq, "workers={workers} diverged");
         }
+    }
+
+    fn tiny_workflow() -> WorkflowSpec {
+        use crate::units::Seconds as S;
+        use crate::workload::{ProfileShape, TaskTypeSpec};
+        let t = |name: &str| TaskTypeSpec {
+            name: format!("w/{name}"),
+            profile: ProfileShape::RampUp { alpha: 1.0 },
+            rt_base: S(10.0),
+            rt_per_mib: 0.01,
+            peak_base: MemMiB(200.0),
+            peak_per_mib: 0.3,
+            noise_sigma: 0.1,
+            spike_prob: 0.0,
+            wiggle_sigma: 0.02,
+            input_mu: 5.0,
+            input_sigma: 0.4,
+            n_executions: 4,
+            default_mem: MemMiB(2048.0),
+        };
+        WorkflowSpec {
+            name: "w".into(),
+            tasks: vec![t("a"), t("b"), t("c")],
+            edges: vec![(0, 1), (0, 2)],
+        }
+    }
+
+    #[test]
+    fn dag_grid_enumerates_and_runs_deterministically() {
+        let wf = tiny_workflow();
+        let methods: Vec<PredictorFactory> = vec![
+            Box::new(|| Box::new(DefaultConfigPredictor::new())),
+            Box::new(|| Box::new(PpmPredictor::improved())),
+        ];
+        let grid = DagGrid::new(
+            vec![ReservationPolicy::StaticPeak, ReservationPolicy::SegmentWise],
+            methods,
+            &wf,
+            vec![1],
+            vec![1, 3],
+        )
+        .with_base(
+            SchedConfig { seed: 7, ..SchedConfig::default() },
+            NodeSpec { mem: MemMiB(4096.0), cores: 8 },
+        );
+        assert_eq!(grid.n_cells(), 2 * 2 * 1 * 2);
+        let cells = grid.cells();
+        assert_eq!(
+            cells[0],
+            DagCell { policy_idx: 0, method_idx: 0, nodes_idx: 0, instances_idx: 0 }
+        );
+        assert_eq!(
+            cells[7],
+            DagCell { policy_idx: 1, method_idx: 1, nodes_idx: 0, instances_idx: 1 }
+        );
+        let seq = grid.run(1);
+        for workers in [2, 4] {
+            assert_eq!(grid.run(workers), seq, "workers={workers} diverged");
+        }
+        // every cell completes all its workflow instances and tasks
+        for (c, rep) in seq.cells.iter().zip(&seq.reports) {
+            let n_inst = [1u64, 3][c.instances_idx];
+            assert_eq!(rep.workflows_submitted, n_inst, "cell {c:?}");
+            assert_eq!(rep.workflows_completed, n_inst, "cell {c:?}");
+            assert_eq!(rep.submitted, n_inst * 3, "cell {c:?}");
+            assert_eq!(rep.completed, rep.submitted, "cell {c:?}");
+        }
+        // axis lookup
+        let r = seq.report(1, 0, 0, 1).unwrap();
+        assert_eq!(r.policy, "segment-wise");
+        assert_eq!(r.workflows_completed, 3);
+        assert!(seq.report(9, 0, 0, 0).is_none());
     }
 
     #[test]

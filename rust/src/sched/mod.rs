@@ -72,14 +72,39 @@
 //! into the scheduler, with warm starts via
 //! [`crate::ingest::Checkpoint::restore_into`] instead of an offline
 //! training split.
+//!
+//! ## Workflow DAG mode
+//!
+//! [`schedule_workflows`] replaces the independent arrival stream with
+//! **dependency-gated** releases: the feed yields whole
+//! [`WorkflowInstance`]s (N concurrent executions of a workflow DAG,
+//! gapped by `mean_interarrival` like single tasks are), and a task is
+//! submitted to the resource manager only when every parent in its
+//! instance has reached its *final* completion — an OOM-killed or
+//! grow-denied parent retries first, so memory underprediction delays
+//! everything downstream of it. "Final" is the same termination rule
+//! as the rest of the engine: normally a successful attempt, or — in
+//! the one unreachable-by-construction corner where a task's true peak
+//! exceeds the largest node and the retry budget runs out — the
+//! forced-through final attempt (children still release then; holding
+//! the gate shut would deadlock the event loop, and a real manager
+//! would cancel rather than hang). The engine logs
+//! [`EngineEvent::Released`] per gate opening and
+//! [`EngineEvent::WorkflowDone`] per finished instance, and the report
+//! gains per-instance workflow metrics (achieved makespan vs.
+//! critical-path length, time to first completion, straggler counts).
+//! Everything else — placement, ledgers, retries, determinism — is the
+//! same event loop.
 
 pub mod grid;
 pub mod queue;
 mod report;
+pub mod workflow;
 
-pub use grid::{SchedCell, SchedGrid, SchedGridResults};
+pub use grid::{DagCell, DagGrid, DagGridResults, SchedCell, SchedGrid, SchedGridResults};
 pub use queue::{EventQueue, SchedEvent};
-pub use report::SchedReport;
+pub use report::{SchedReport, STRAGGLER_FACTOR};
+pub use workflow::{DagTask, WorkflowInstance, WorkflowSource};
 
 use std::collections::{BTreeMap, VecDeque};
 use std::rc::Rc;
@@ -166,6 +191,15 @@ impl Default for SchedConfig {
     }
 }
 
+/// Which workflow-instance task a pending/running attempt belongs to
+/// (`None` for independent arrivals): index into `Sim::dag` plus the
+/// task's index within its instance.
+#[derive(Debug, Clone, Copy)]
+struct WfRef {
+    inst: usize,
+    task: usize,
+}
+
 /// A placement request waiting for (or attempting) admission.
 #[derive(Debug, Clone)]
 struct Pending {
@@ -182,6 +216,8 @@ struct Pending {
     /// Retry budget exhausted — complete whatever the outcome.
     final_attempt: bool,
     enqueued_at: f64,
+    /// DAG mode: the workflow task this attempt executes.
+    wf: Option<WfRef>,
 }
 
 /// An admitted attempt occupying cluster memory.
@@ -201,6 +237,28 @@ struct Running {
     /// Precomputed ground-truth outcome of this attempt.
     outcome: AttemptOutcome,
     final_attempt: bool,
+    /// DAG mode: the workflow task this attempt executes.
+    wf: Option<WfRef>,
+}
+
+/// Release-gating state of one arrived workflow instance.
+#[derive(Debug)]
+struct InstanceState {
+    name: String,
+    /// Instance ordinal (the `instance` field of emitted events).
+    index: u64,
+    /// Per task: parents not yet finally completed. A task is released
+    /// when this reaches 0.
+    remaining: Vec<usize>,
+    /// Per task: the tasks its completion unblocks.
+    children: Vec<Vec<usize>>,
+    /// Per task: the run, taken at release time.
+    runs: Vec<Option<Rc<TaskRun>>>,
+    /// Tasks not yet finally completed.
+    outstanding: usize,
+    arrived_at: f64,
+    critical_path_s: f64,
+    first_completion_at: Option<f64>,
 }
 
 /// Clamp an allocation to the largest node's capacity so every request
@@ -268,6 +326,8 @@ struct Sim<'a> {
     node_max: MemMiB,
     report: SchedReport,
     log: EventLog,
+    /// Arrived workflow instances (DAG mode; empty otherwise).
+    dag: Vec<InstanceState>,
 }
 
 impl Sim<'_> {
@@ -347,6 +407,7 @@ impl Sim<'_> {
                 start: now,
                 outcome,
                 final_attempt: p.final_attempt,
+                wf: p.wf,
             },
         );
         true
@@ -375,7 +436,10 @@ impl Sim<'_> {
         self.waiting = still;
     }
 
-    fn on_arrival(&mut self, run: Rc<TaskRun>, now: f64) {
+    /// Submit one run to the resource manager: predict, log, place or
+    /// queue. `wf` ties the attempt back to its workflow task in DAG
+    /// mode; independent arrivals pass `None`.
+    fn submit(&mut self, run: Rc<TaskRun>, wf: Option<WfRef>, now: f64) {
         self.report.submitted += 1;
         let alloc = clamp_to_node_max(
             self.predictor.predict(&run.task_type, run.input_mib),
@@ -393,8 +457,111 @@ impl Sim<'_> {
             reserve_static: self.cfg.policy == ReservationPolicy::StaticPeak,
             final_attempt: false,
             enqueued_at: now,
+            wf,
         };
         self.place_or_queue(p, now);
+    }
+
+    /// A workflow instance arrives: register its gating state and
+    /// release every root (a task with no parents) immediately.
+    fn on_instance(&mut self, inst: WorkflowInstance, now: f64) {
+        self.report.workflows_submitted += 1;
+        // computes the longest runtime chain and validates acyclicity
+        let critical_path_s = inst.critical_path_s();
+        let WorkflowInstance { name, index, tasks } = inst;
+        let n = tasks.len();
+        let mut remaining = vec![0usize; n];
+        let mut children: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut runs: Vec<Option<Rc<TaskRun>>> = Vec::with_capacity(n);
+        for (t, task) in tasks.into_iter().enumerate() {
+            for &p in &task.parents {
+                children[p].push(t);
+                remaining[t] += 1;
+            }
+            runs.push(Some(Rc::new(task.run)));
+        }
+        let idx = self.dag.len();
+        self.dag.push(InstanceState {
+            name,
+            index,
+            remaining,
+            children,
+            runs,
+            outstanding: n,
+            arrived_at: now,
+            critical_path_s,
+            first_completion_at: None,
+        });
+        for t in 0..n {
+            if self.dag[idx].remaining[t] == 0 {
+                self.release_task(idx, t, now);
+            }
+        }
+        if n == 0 {
+            self.finish_instance(idx, now);
+        }
+    }
+
+    /// Open a task's gate: log the release and submit it. Called for
+    /// roots at instance arrival and for children at their last
+    /// parent's final completion.
+    fn release_task(&mut self, inst: usize, task: usize, now: f64) {
+        let run = self.dag[inst].runs[task].take().expect("task released twice");
+        self.log.push(EngineEvent::Released {
+            task_type: run.task_type.clone(),
+            seq: run.seq,
+            instance: self.dag[inst].index,
+            time_s: now,
+        });
+        self.submit(run, Some(WfRef { inst, task }), now);
+    }
+
+    /// A workflow task reached its final successful completion:
+    /// unblock its children and close out the instance when it was the
+    /// last one.
+    fn on_workflow_task_done(&mut self, wf: WfRef, now: f64) {
+        let st = &mut self.dag[wf.inst];
+        st.outstanding -= 1;
+        if st.first_completion_at.is_none() {
+            st.first_completion_at = Some(now);
+        }
+        let kids = st.children[wf.task].clone();
+        let mut ready = Vec::new();
+        for c in kids {
+            st.remaining[c] -= 1;
+            if st.remaining[c] == 0 {
+                ready.push(c);
+            }
+        }
+        let instance_done = st.outstanding == 0;
+        for c in ready {
+            self.release_task(wf.inst, c, now);
+        }
+        if instance_done {
+            self.finish_instance(wf.inst, now);
+        }
+    }
+
+    /// The last task of an instance completed: emit the event and fold
+    /// the instance's workflow metrics into the report.
+    fn finish_instance(&mut self, inst: usize, now: f64) {
+        let st = &self.dag[inst];
+        let makespan_s = now - st.arrived_at;
+        let first_s = st.first_completion_at.unwrap_or(now) - st.arrived_at;
+        self.log.push(EngineEvent::WorkflowDone {
+            workflow: st.name.clone(),
+            instance: st.index,
+            tasks: st.children.len() as u32,
+            time_s: now,
+            makespan_s,
+        });
+        self.report.workflows_completed += 1;
+        self.report.workflow_makespans.push(makespan_s);
+        self.report.workflow_critical_paths.push(st.critical_path_s);
+        self.report.workflow_first_completions.push(first_s);
+        if st.critical_path_s > 0.0 && makespan_s > STRAGGLER_FACTOR * st.critical_path_s {
+            self.report.workflow_stragglers += 1;
+        }
     }
 
     fn on_boundary(&mut self, exec: u64, segment: usize, now: f64) {
@@ -437,6 +604,7 @@ impl Sim<'_> {
             reserve_static: true,
             final_attempt: r.final_attempt,
             enqueued_at: now,
+            wf: r.wf,
         };
         self.place_or_queue(p, now);
         self.drain(now);
@@ -447,6 +615,9 @@ impl Sim<'_> {
         self.cluster.release(r.reservation);
         self.ledgers[r.reservation.node_idx].subtract_profile(&r.profile);
         self.report.total_wastage += GbSeconds(MemMiB(r.outcome.wastage_mibs()).as_gb());
+        // A finally-completed workflow task, resolved after the drain:
+        // waiters see the freed memory before any newly gated child.
+        let mut completed_wf: Option<WfRef> = None;
         match &r.outcome {
             AttemptOutcome::Failure { info, .. } if !r.final_attempt => {
                 self.report.oom_kills += 1;
@@ -481,6 +652,7 @@ impl Sim<'_> {
                     reserve_static: self.cfg.policy == ReservationPolicy::StaticPeak,
                     final_attempt,
                     enqueued_at: now,
+                    wf: r.wf,
                 };
                 self.place_or_queue(p, now);
             }
@@ -494,10 +666,29 @@ impl Sim<'_> {
                 });
                 // the run's last reference drops here in streaming mode
                 self.predictor.observe(&r.run);
+                completed_wf = r.wf;
             }
         }
         self.drain(now);
+        // Dependency gate: children release only on the parent's FINAL
+        // completion (the requeue branch above keeps the gate shut),
+        // after this instant's backfill pass — so an OOM-killed
+        // parent's retries delay its whole subtree. A forced-through
+        // final attempt (retry budget exhausted at node max — only
+        // reachable when the true peak exceeds the largest node) also
+        // opens the gate: that is the engine-wide termination rule,
+        // and refusing would leave the children unreleased forever.
+        if let Some(wf) = completed_wf {
+            self.on_workflow_task_done(wf, now);
+        }
     }
+}
+
+/// One unit of the arrival stream: a lone task run, or a whole
+/// workflow instance whose roots release on arrival.
+enum FeedItem {
+    Run(TaskRun),
+    Instance(WorkflowInstance),
 }
 
 /// Where [`run_engine`] pulls its arrival stream from.
@@ -506,18 +697,21 @@ enum RunFeed<'a> {
     Vec(VecDeque<TaskRun>),
     /// Incremental pull from a streaming source.
     Source { src: &'a mut dyn TraceSource, chunk: usize, buf: VecDeque<TaskRun> },
+    /// Whole workflow instances (the [`schedule_workflows`] DAG path).
+    Instances(VecDeque<WorkflowInstance>),
 }
 
 impl RunFeed<'_> {
-    fn next_run(&mut self) -> Result<Option<TaskRun>> {
+    fn next_item(&mut self) -> Result<Option<FeedItem>> {
         match self {
-            RunFeed::Vec(q) => Ok(q.pop_front()),
+            RunFeed::Vec(q) => Ok(q.pop_front().map(FeedItem::Run)),
             RunFeed::Source { src, chunk, buf } => {
                 if buf.is_empty() {
                     buf.extend(src.next_chunk(*chunk)?);
                 }
-                Ok(buf.pop_front())
+                Ok(buf.pop_front().map(FeedItem::Run))
             }
+            RunFeed::Instances(q) => Ok(q.pop_front().map(FeedItem::Instance)),
         }
     }
 }
@@ -600,6 +794,37 @@ pub fn schedule_stream(
     )
 }
 
+/// Schedule N concurrent, **dependency-gated** executions of a
+/// workflow DAG (see the module docs' "Workflow DAG mode"). Instances
+/// arrive gapped by `cfg.mean_interarrival` (batch mode submits all of
+/// them at t = 0); within an instance a task is released only when
+/// every parent has finally completed. Developer defaults from the
+/// source are primed; there is no offline warm-up split — the
+/// predictor learns online across instances, exactly as a workflow
+/// engine would drive it.
+pub fn schedule_workflows(
+    src: WorkflowSource,
+    predictor: &mut dyn MemoryPredictor,
+    cfg: &SchedConfig,
+) -> SchedReport {
+    schedule_workflows_logged(src, predictor, cfg).0
+}
+
+/// [`schedule_workflows`] variant that also returns the engine-style
+/// event log (`Released` / `Placed` / `OomKilled` / `Completed` /
+/// `WorkflowDone`, capped at `cfg.event_log_cap`).
+pub fn schedule_workflows_logged(
+    src: WorkflowSource,
+    predictor: &mut dyn MemoryPredictor,
+    cfg: &SchedConfig,
+) -> (SchedReport, EventLog) {
+    for (ty, mem) in src.defaults() {
+        predictor.prime(ty, *mem);
+    }
+    run_engine(RunFeed::Instances(src.instances.into()), predictor, cfg)
+        .expect("in-memory instance feed cannot fail")
+}
+
 /// The discrete-event loop shared by [`schedule_trace`] and
 /// [`schedule_stream`]. Arrivals are generated lazily — exactly one
 /// not-yet-arrived run is pulled ahead, its arrival event scheduled at
@@ -635,14 +860,16 @@ fn run_engine(
         node_max,
         report,
         log: EventLog::with_cap(cfg.event_log_cap),
+        dag: Vec::new(),
     };
 
     // Arrival stream: exponential (or fixed) gaps, deterministic from
-    // the seed; one run pulled ahead of the clock.
+    // the seed; one item (run or whole instance) pulled ahead of the
+    // clock.
     let mut rng = Rng::new(cfg.seed);
     let mut arrival_ordinal = 0usize;
     let mut next_arrival_t = 0.0f64;
-    let mut upcoming: Option<TaskRun> = feed.next_run()?;
+    let mut upcoming: Option<FeedItem> = feed.next_item()?;
     if upcoming.is_some() {
         next_arrival_t += arrival_gap(&mut rng, cfg);
         sim.events.push(next_arrival_t, SchedEvent::Arrival { task: 0 });
@@ -660,9 +887,11 @@ fn run_engine(
             SchedEvent::Finish { exec } => sim.on_finish(exec, now),
             SchedEvent::SegmentBoundary { exec, segment } => sim.on_boundary(exec, segment, now),
             SchedEvent::Arrival { .. } => {
-                let run = upcoming.take().expect("arrival event without a pulled run");
-                sim.on_arrival(Rc::new(run), now);
-                if let Some(next) = feed.next_run()? {
+                match upcoming.take().expect("arrival event without a pulled item") {
+                    FeedItem::Run(run) => sim.submit(Rc::new(run), None, now),
+                    FeedItem::Instance(inst) => sim.on_instance(inst, now),
+                }
+                if let Some(next) = feed.next_item()? {
                     arrival_ordinal += 1;
                     next_arrival_t += arrival_gap(&mut rng, cfg);
                     sim.events
@@ -685,6 +914,8 @@ fn run_engine(
     }
     assert!(sim.waiting.is_empty(), "scheduler ended with queued tasks");
     assert!(sim.running.is_empty(), "scheduler ended with running tasks");
+    let ungated: usize = sim.dag.iter().map(|s| s.outstanding).sum();
+    assert_eq!(ungated, 0, "scheduler ended with {ungated} never-released workflow tasks");
     debug_assert!(sim.cluster.total_reserved().0 < 1e-6, "cluster not empty at end");
 
     let mut report = sim.report;
@@ -972,5 +1203,126 @@ mod tests {
         assert_eq!(r.submitted, 0);
         assert_eq!(r.completed, 0);
         assert_eq!(r.makespan, Seconds::ZERO);
+    }
+
+    /// A hand-built chain instance: parent → child. Runtime 20 s each.
+    fn chain_instance(index: u64, peak: f64) -> WorkflowInstance {
+        let run = |ty: &str, seq: u64| TaskRun {
+            task_type: ty.into(),
+            input_mib: 100.0,
+            runtime: Seconds(20.0),
+            series: UsageSeries::new(2.0, (1..=10).map(|j| peak * j as f64 / 10.0).collect()),
+            seq,
+        };
+        WorkflowInstance {
+            name: "w".into(),
+            index,
+            tasks: vec![
+                workflow::DagTask { run: run("w/parent", index * 2), parents: vec![] },
+                workflow::DagTask { run: run("w/child", index * 2 + 1), parents: vec![0] },
+            ],
+        }
+    }
+
+    #[test]
+    fn dependency_gate_serializes_a_chain() {
+        // plenty of capacity: without the gate both tasks would
+        // overlap and the makespan would be ~20 s
+        let src = WorkflowSource::from_instances(
+            vec![chain_instance(0, 500.0)],
+            vec![("w/parent".into(), MemMiB(800.0)), ("w/child".into(), MemMiB(800.0))],
+        );
+        let mut p = DefaultConfigPredictor::new();
+        let cfg = SchedConfig {
+            nodes: vec![NodeSpec { mem: MemMiB(8000.0), cores: 8 }],
+            mean_interarrival: Seconds(0.0),
+            ..SchedConfig::default()
+        };
+        let (r, log) = schedule_workflows_logged(src, &mut p, &cfg);
+        assert_eq!(r.workflows_submitted, 1);
+        assert_eq!(r.workflows_completed, 1);
+        assert_eq!(r.submitted, 2);
+        assert_eq!(r.completed, 2);
+        assert_eq!(r.oom_kills, 0);
+        // chain: 20 s parent + 20 s child, no overlap
+        assert!((r.makespan.0 - 40.0).abs() < 1e-9, "makespan {}", r.makespan.0);
+        assert_eq!(r.peak_running, 1, "child must not overlap its parent");
+        assert_eq!(r.workflow_makespans, vec![40.0]);
+        assert_eq!(r.workflow_critical_paths, vec![40.0]);
+        assert_eq!(r.workflow_first_completions, vec![20.0]);
+        assert_eq!(r.workflow_stragglers, 0);
+        assert!((r.critical_path_stretch() - 1.0).abs() < 1e-9);
+        // log order: child released strictly after parent completed
+        let pos = |pred: &dyn Fn(&EngineEvent) -> bool| {
+            log.iter().position(|e| pred(e)).expect("event present")
+        };
+        let completed = |ty: &'static str| {
+            move |e: &EngineEvent| {
+                matches!(e, EngineEvent::Completed { task_type, .. } if task_type == ty)
+            }
+        };
+        let released = |ty: &'static str| {
+            move |e: &EngineEvent| {
+                matches!(e, EngineEvent::Released { task_type, .. } if task_type == ty)
+            }
+        };
+        let parent_done = pos(&completed("w/parent"));
+        let child_released = pos(&released("w/child"));
+        let wf_done = pos(&|e: &EngineEvent| matches!(e, EngineEvent::WorkflowDone { .. }));
+        assert!(child_released > parent_done);
+        assert!(wf_done > child_released);
+    }
+
+    #[test]
+    fn workflow_accounting_and_determinism() {
+        let mk_src = || {
+            WorkflowSource::from_instances(
+                (0..4).map(|i| chain_instance(i, 900.0)).collect(),
+                vec![("w/parent".into(), MemMiB(1200.0)), ("w/child".into(), MemMiB(1200.0))],
+            )
+        };
+        let cfg = SchedConfig {
+            nodes: vec![NodeSpec { mem: MemMiB(2000.0), cores: 4 }],
+            mean_interarrival: Seconds(5.0),
+            seed: 11,
+            ..SchedConfig::default()
+        };
+        let run = || {
+            let mut p = DefaultConfigPredictor::new();
+            schedule_workflows(mk_src(), &mut p, &cfg)
+        };
+        let a = run();
+        assert_eq!(a.workflows_completed, 4);
+        assert_eq!(a.completed, a.submitted);
+        assert_eq!(a.admitted, a.completed + a.oom_kills + a.grow_denials);
+        assert_eq!(a.placement_attempts, a.admitted + a.rejected);
+        assert_eq!(a.workflow_makespans.len(), 4);
+        // achieved makespan can never beat the critical path
+        for (m, cp) in a.workflow_makespans.iter().zip(&a.workflow_critical_paths) {
+            assert!(*m >= *cp - 1e-9, "makespan {m} below critical path {cp}");
+        }
+        let b = run();
+        assert_eq!(a, b, "workflow scheduling must be deterministic");
+    }
+
+    #[test]
+    fn undersized_default_ooms_and_still_completes_the_workflow() {
+        // parent+child defaults far below the 1000 MiB true peak
+        let src = WorkflowSource::from_instances(
+            vec![chain_instance(0, 1000.0)],
+            vec![("w/parent".into(), MemMiB(50.0)), ("w/child".into(), MemMiB(50.0))],
+        );
+        let mut p = DefaultConfigPredictor::new();
+        let cfg = SchedConfig {
+            nodes: vec![NodeSpec { mem: MemMiB(4000.0), cores: 4 }],
+            mean_interarrival: Seconds(0.0),
+            ..SchedConfig::default()
+        };
+        let r = schedule_workflows(src, &mut p, &cfg);
+        assert_eq!(r.workflows_completed, 1);
+        assert_eq!(r.completed, 2);
+        assert!(r.oom_kills > 0, "undersized defaults must OOM");
+        // the parent's retries push the instance past its critical path
+        assert!(r.workflow_makespans[0] > r.workflow_critical_paths[0] + 1.0);
     }
 }

@@ -12,6 +12,12 @@
 
 use crate::units::{GbSeconds, Seconds};
 use crate::util::stats;
+use crate::util::stats::SortedSamples;
+
+/// An instance counts as a **straggler** when its achieved makespan
+/// exceeds this multiple of its critical-path length — it spent more
+/// time queued, retried or contended than actually computing.
+pub const STRAGGLER_FACTOR: f64 = 2.0;
 
 /// Aggregate result of scheduling one trace (or several merged traces)
 /// on a simulated cluster.
@@ -66,6 +72,24 @@ pub struct SchedReport {
     pub capacity_integral_gbs: f64,
     /// Peak of (reserved / capacity) over the run.
     pub peak_util_frac: f64,
+    /// Workflow instances that arrived (0 = independent-arrivals mode;
+    /// every field below is empty/zero then).
+    pub workflows_submitted: u64,
+    /// Workflow instances whose last task finally completed.
+    pub workflows_completed: u64,
+    /// Per completed instance, in completion order: seconds from the
+    /// instance's arrival to its last task's final completion.
+    pub workflow_makespans: Vec<f64>,
+    /// Per completed instance (same order): critical-path length — the
+    /// longest runtime chain through its DAG, the retry-free
+    /// infinite-cluster lower bound on the achieved makespan.
+    pub workflow_critical_paths: Vec<f64>,
+    /// Per completed instance (same order): seconds from arrival to
+    /// the instance's **first** task completion.
+    pub workflow_first_completions: Vec<f64>,
+    /// Instances whose makespan exceeded [`STRAGGLER_FACTOR`] × their
+    /// critical path.
+    pub workflow_stragglers: u64,
 }
 
 impl SchedReport {
@@ -94,6 +118,12 @@ impl SchedReport {
             reserved_integral_gbs: 0.0,
             capacity_integral_gbs: 0.0,
             peak_util_frac: 0.0,
+            workflows_submitted: 0,
+            workflows_completed: 0,
+            workflow_makespans: Vec::new(),
+            workflow_critical_paths: Vec::new(),
+            workflow_first_completions: Vec::new(),
+            workflow_stragglers: 0,
         }
     }
 
@@ -102,9 +132,50 @@ impl SchedReport {
         stats::mean(&self.queue_waits)
     }
 
-    /// p-th percentile queue wait (seconds).
+    /// p-th percentile queue wait (seconds). Sorts per call — querying
+    /// several quantiles of one report should go through
+    /// [`Self::queue_wait_percentiles`] instead.
     pub fn queue_wait_percentile_s(&self, p: f64) -> f64 {
         stats::percentile(&self.queue_waits, p)
+    }
+
+    /// The queue-wait samples sorted **once** for repeated quantile
+    /// queries — what the summary line and the per-row throughput
+    /// tables use instead of re-sorting the full vector per call.
+    pub fn queue_wait_percentiles(&self) -> SortedSamples {
+        SortedSamples::new(&self.queue_waits)
+    }
+
+    /// Mean achieved workflow makespan (seconds; 0 without instances).
+    pub fn mean_workflow_makespan_s(&self) -> f64 {
+        stats::mean(&self.workflow_makespans)
+    }
+
+    /// Mean critical-path length across completed instances.
+    pub fn mean_critical_path_s(&self) -> f64 {
+        stats::mean(&self.workflow_critical_paths)
+    }
+
+    /// Mean of per-instance `makespan / critical path` — 1.0 means
+    /// every instance ran as fast as its DAG allows; the excess is
+    /// queueing, contention and retry propagation. 0 without instances.
+    pub fn critical_path_stretch(&self) -> f64 {
+        if self.workflow_makespans.is_empty() {
+            return 0.0;
+        }
+        let ratios: Vec<f64> = self
+            .workflow_makespans
+            .iter()
+            .zip(&self.workflow_critical_paths)
+            .filter(|(_, &cp)| cp > 0.0)
+            .map(|(&m, &cp)| m / cp)
+            .collect();
+        stats::mean(&ratios)
+    }
+
+    /// Mean time from instance arrival to its first task completion.
+    pub fn mean_time_to_first_completion_s(&self) -> f64 {
+        stats::mean(&self.workflow_first_completions)
     }
 
     /// Time-averaged cluster memory utilization in [0, 1].
@@ -149,6 +220,12 @@ impl SchedReport {
         self.reserved_integral_gbs += other.reserved_integral_gbs;
         self.capacity_integral_gbs += other.capacity_integral_gbs;
         self.peak_util_frac = self.peak_util_frac.max(other.peak_util_frac);
+        self.workflows_submitted += other.workflows_submitted;
+        self.workflows_completed += other.workflows_completed;
+        self.workflow_makespans.extend(other.workflow_makespans);
+        self.workflow_critical_paths.extend(other.workflow_critical_paths);
+        self.workflow_first_completions.extend(other.workflow_first_completions);
+        self.workflow_stragglers += other.workflow_stragglers;
     }
 
     /// Merge an ordered sequence of per-trace reports; `None` for an
@@ -162,9 +239,10 @@ impl SchedReport {
         Some(acc)
     }
 
-    /// One-line operator summary.
+    /// One-line operator summary (plus a workflow line in DAG mode).
     pub fn summary(&self) -> String {
-        format!(
+        let waits = self.queue_wait_percentiles();
+        let mut s = format!(
             "{} · {} · {} nodes · ia={:.1}s: {}/{} done, makespan {}, \
              util {:.1}% (peak {:.1}%), peak-concurrent {}, wait mean {:.1}s p95 {:.1}s, \
              {} oom, {} grow-denied, {} rejected, wastage {}",
@@ -179,12 +257,29 @@ impl SchedReport {
             100.0 * self.peak_util_frac,
             self.peak_running,
             self.mean_queue_wait_s(),
-            self.queue_wait_percentile_s(95.0),
+            waits.percentile(95.0),
             self.oom_kills,
             self.grow_denials,
             self.rejected,
             self.total_wastage,
-        )
+        );
+        if self.workflows_submitted > 0 {
+            let spans = SortedSamples::new(&self.workflow_makespans);
+            s.push_str(&format!(
+                "\n  workflows: {}/{} done, wf-makespan mean {:.1}s p95 {:.1}s \
+                 (critical path mean {:.1}s, stretch x{:.2}), first-completion mean {:.1}s, \
+                 {} straggler(s)",
+                self.workflows_completed,
+                self.workflows_submitted,
+                self.mean_workflow_makespan_s(),
+                spans.percentile(95.0),
+                self.mean_critical_path_s(),
+                self.critical_path_stretch(),
+                self.mean_time_to_first_completion_s(),
+                self.workflow_stragglers,
+            ));
+        }
+        s
     }
 }
 
@@ -260,5 +355,56 @@ mod tests {
         let s = rep(&[1.0], 5, 50.0).summary();
         assert!(s.contains("segment-wise"));
         assert!(s.contains("5/5 done"));
+        assert!(!s.contains("workflows:"), "no workflow line without instances");
+    }
+
+    #[test]
+    fn queue_wait_percentiles_sort_once_and_agree() {
+        let r = rep(&[4.0, 0.0, 2.0, 6.0], 4, 10.0);
+        let sorted = r.queue_wait_percentiles();
+        for q in [0.0, 25.0, 50.0, 95.0, 100.0] {
+            assert_eq!(sorted.percentile(q), r.queue_wait_percentile_s(q), "q={q}");
+        }
+        // the interpolated even-length median
+        assert_eq!(sorted.percentile(50.0), 3.0);
+    }
+
+    fn wf_rep(makespans: &[f64], cps: &[f64], stragglers: u64) -> SchedReport {
+        let mut r = rep(&[], makespans.len() as u64, 100.0);
+        r.workflows_submitted = makespans.len() as u64;
+        r.workflows_completed = makespans.len() as u64;
+        r.workflow_makespans = makespans.to_vec();
+        r.workflow_critical_paths = cps.to_vec();
+        r.workflow_first_completions = makespans.iter().map(|m| m / 2.0).collect();
+        r.workflow_stragglers = stragglers;
+        r
+    }
+
+    #[test]
+    fn workflow_metrics_derive_and_merge() {
+        let r = wf_rep(&[100.0, 300.0], &[100.0, 100.0], 1);
+        assert_eq!(r.mean_workflow_makespan_s(), 200.0);
+        assert_eq!(r.mean_critical_path_s(), 100.0);
+        assert!((r.critical_path_stretch() - 2.0).abs() < 1e-12);
+        assert_eq!(r.mean_time_to_first_completion_s(), 100.0);
+        let s = r.summary();
+        assert!(s.contains("workflows: 2/2 done"), "{s}");
+        assert!(s.contains("1 straggler"), "{s}");
+
+        let mut a = wf_rep(&[100.0], &[50.0], 1);
+        a.merge(wf_rep(&[40.0], &[40.0], 0));
+        assert_eq!(a.workflows_submitted, 2);
+        assert_eq!(a.workflows_completed, 2);
+        assert_eq!(a.workflow_makespans, vec![100.0, 40.0]);
+        assert_eq!(a.workflow_critical_paths, vec![50.0, 40.0]);
+        assert_eq!(a.workflow_stragglers, 1);
+    }
+
+    #[test]
+    fn empty_workflow_metrics_are_zero() {
+        let r = SchedReport::new("static-peak", "m", 1, 1.0);
+        assert_eq!(r.mean_workflow_makespan_s(), 0.0);
+        assert_eq!(r.critical_path_stretch(), 0.0);
+        assert_eq!(r.mean_time_to_first_completion_s(), 0.0);
     }
 }

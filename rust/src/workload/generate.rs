@@ -35,6 +35,33 @@ pub fn ground_truth_curve(
     out
 }
 
+/// Synthesize one execution of a task type from an already-forked rng
+/// stream: input size, noised runtime and peak (with the occasional
+/// data-dependent blowup), and the interval-sampled ground-truth
+/// curve. Shared by [`generate_workflow_trace`] (wave-interleaved
+/// traces) and [`crate::sched::WorkflowSource`] (per-instance DAG
+/// executions) so both draw from the same distributions.
+pub fn synth_execution(spec: &TaskTypeSpec, rng: &mut Rng, seq: u64) -> TaskRun {
+    let input_mib = rng.lognormal(spec.input_mu, spec.input_sigma);
+    let rt_noise = (spec.noise_sigma * rng.normal()).exp();
+    let runtime_s =
+        ((spec.rt_base.0 + spec.rt_per_mib * input_mib) * rt_noise).max(MONITOR_INTERVAL_S);
+    let peak_noise = (spec.noise_sigma * rng.normal()).exp();
+    // occasional data-dependent blowup (heavy tail; see spec)
+    let spike = if rng.f64() < spec.spike_prob {
+        rng.uniform(1.2, 1.45)
+    } else {
+        1.0
+    };
+    let peak_mib = (spec.peak_base.0 + spec.peak_per_mib * input_mib) * peak_noise * spike;
+
+    let samples = ground_truth_curve(spec, peak_mib, runtime_s, MONITOR_INTERVAL_S, rng);
+    let series = UsageSeries::new(MONITOR_INTERVAL_S, samples);
+    // runtime := j·f, consistent with the paper's runtime model
+    let runtime = series.duration();
+    TaskRun { task_type: spec.name.clone(), input_mib, runtime, series, seq }
+}
+
 /// Generate the full trace of one workflow execution.
 ///
 /// Executions are interleaved in waves that respect the DAG's
@@ -72,31 +99,7 @@ pub fn generate_workflow_trace(wf: &WorkflowSpec, seed: u64) -> Trace {
                 continue;
             }
             let mut rng = root.fork(&format!("{}#{}", spec.name, wave));
-            let input_mib = rng.lognormal(spec.input_mu, spec.input_sigma);
-            let rt_noise = (spec.noise_sigma * rng.normal()).exp();
-            let runtime_s =
-                ((spec.rt_base.0 + spec.rt_per_mib * input_mib) * rt_noise).max(MONITOR_INTERVAL_S);
-            let peak_noise = (spec.noise_sigma * rng.normal()).exp();
-            // occasional data-dependent blowup (heavy tail; see spec)
-            let spike = if rng.f64() < spec.spike_prob {
-                rng.uniform(1.2, 1.45)
-            } else {
-                1.0
-            };
-            let peak_mib = (spec.peak_base.0 + spec.peak_per_mib * input_mib) * peak_noise * spike;
-
-            let samples =
-                ground_truth_curve(spec, peak_mib, runtime_s, MONITOR_INTERVAL_S, &mut rng);
-            let series = UsageSeries::new(MONITOR_INTERVAL_S, samples);
-            // runtime := j·f, consistent with the paper's runtime model
-            let runtime = series.duration();
-            trace.push(TaskRun {
-                task_type: spec.name.clone(),
-                input_mib,
-                runtime,
-                series,
-                seq,
-            });
+            trace.push(synth_execution(spec, &mut rng, seq));
             seq += 1;
         }
     }

@@ -27,7 +27,8 @@ mod spec;
 
 pub use catalog::{eager_workflow, sarek_workflow, EVAL_MIN_RUNS};
 pub use generate::{
-    generate_paper_traces, generate_workflow_trace, ground_truth_curve, MONITOR_INTERVAL_S,
+    generate_paper_traces, generate_workflow_trace, ground_truth_curve, synth_execution,
+    MONITOR_INTERVAL_S,
 };
 pub use profiles::ProfileShape;
 pub use spec::{TaskTypeSpec, WorkflowSpec};

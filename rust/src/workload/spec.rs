@@ -130,6 +130,19 @@ impl WorkflowSpec {
         self.tasks.iter().position(|t| t.name == name)
     }
 
+    /// Parent adjacency: `parents()[v]` lists every `u` with an edge
+    /// `(u, v)` — the tasks whose outputs `v` consumes, i.e. the
+    /// completions a dependency-gated scheduler waits for before
+    /// releasing `v` ([`crate::sched::WorkflowSource`]).
+    pub fn parents(&self) -> Vec<Vec<usize>> {
+        let mut parents: Vec<Vec<usize>> = vec![Vec::new(); self.tasks.len()];
+        for &(f, t) in &self.edges {
+            assert!(f < self.tasks.len() && t < self.tasks.len(), "edge index out of range");
+            parents[t].push(f);
+        }
+        parents
+    }
+
     pub fn validate(&self) -> Result<(), String> {
         for t in &self.tasks {
             t.validate()?;
@@ -202,6 +215,19 @@ mod tests {
         let lv = wf.levels();
         assert_eq!(lv, vec![vec![0], vec![1, 2], vec![3]]);
         assert!(wf.validate().is_ok());
+    }
+
+    #[test]
+    fn parents_of_diamond() {
+        let wf = WorkflowSpec {
+            name: "w".into(),
+            tasks: vec![spec("a"), spec("b"), spec("c"), spec("d")],
+            edges: vec![(0, 1), (0, 2), (1, 3), (2, 3)],
+        };
+        assert_eq!(
+            wf.parents(),
+            vec![vec![], vec![0], vec![0], vec![1, 2]]
+        );
     }
 
     #[test]

@@ -1,0 +1,338 @@
+//! Integration lockdown for dependency-gated workflow scheduling:
+//! the event-log gating invariant (no child is released/placed before
+//! its last parent's final completion — under OOM retries too), the
+//! DAG sweep's worker-count bit identity, and the oracle claim that an
+//! OOM-killed parent strictly delays its instance's makespan.
+
+use std::collections::HashMap;
+
+use ksegments::cluster::NodeSpec;
+use ksegments::engine::EngineEvent;
+use ksegments::predictors::default_config::DefaultConfigPredictor;
+use ksegments::predictors::{Allocation, FailureInfo, MemoryPredictor};
+use ksegments::rng::Rng;
+use ksegments::sched::{
+    schedule_workflows, schedule_workflows_logged, DagGrid, DagTask, ReservationPolicy,
+    SchedConfig, WorkflowInstance, WorkflowSource,
+};
+use ksegments::sim::PredictorFactory;
+use ksegments::trace::{TaskRun, UsageSeries};
+use ksegments::units::{MemMiB, Seconds};
+use ksegments::workload::{eager_workflow, sarek_workflow, ProfileShape, TaskTypeSpec, WorkflowSpec};
+
+fn flat_run(ty: &str, seq: u64, peak: f64, runtime_s: f64) -> TaskRun {
+    let n = (runtime_s / 2.0).max(1.0) as usize;
+    TaskRun {
+        task_type: ty.into(),
+        input_mib: 50.0,
+        runtime: Seconds(n as f64 * 2.0),
+        series: UsageSeries::new(2.0, vec![peak; n]),
+        seq,
+    }
+}
+
+/// Linear climb to `peak`: an under-half allocation burns real
+/// simulated time before its OOM instant.
+fn ramp_run(ty: &str, seq: u64, peak: f64, runtime_s: f64) -> TaskRun {
+    let n = (runtime_s / 2.0).max(1.0) as usize;
+    let samples: Vec<f64> = (1..=n).map(|j| peak * j as f64 / n as f64).collect();
+    TaskRun {
+        task_type: ty.into(),
+        input_mib: 50.0,
+        runtime: Seconds(n as f64 * 2.0),
+        series: UsageSeries::new(2.0, samples),
+        seq,
+    }
+}
+
+/// Random DAG instances: every task's parents are a random subset of
+/// the tasks before it (topological by construction).
+fn random_instances(rng: &mut Rng, n_instances: usize, n_tasks: usize) -> Vec<WorkflowInstance> {
+    (0..n_instances)
+        .map(|i| {
+            let tasks = (0..n_tasks)
+                .map(|t| {
+                    let parents: Vec<usize> = (0..t).filter(|_| rng.f64() < 0.4).collect();
+                    let peak = rng.uniform(100.0, 900.0);
+                    let rt = 2.0 * (1.0 + rng.below(5) as f64);
+                    let seq = (i * n_tasks + t) as u64;
+                    DagTask { run: flat_run(&format!("w/t{t}"), seq, peak, rt), parents }
+                })
+                .collect();
+            WorkflowInstance { name: "w".into(), index: i as u64, tasks }
+        })
+        .collect()
+}
+
+/// THE acceptance-criterion property: for every edge (u → v) of every
+/// instance, v's `Released` and first `Placed` events come strictly
+/// after u's final `Completed` event in the log — including when
+/// parents OOM-retry first (undersized defaults).
+#[test]
+fn no_child_starts_before_its_last_parent_completes() {
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(seed + 100);
+        let instances = random_instances(&mut rng, 3, 6);
+        // keep the parent edges for the assertion below
+        let edges: Vec<(u64, u64)> = instances
+            .iter()
+            .flat_map(|inst| {
+                inst.tasks.iter().enumerate().flat_map(move |(t, task)| {
+                    task.parents
+                        .iter()
+                        .map(move |&p| (inst.tasks[p].run.seq, inst.tasks[t].run.seq))
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        // undersized defaults on even seeds: the gate must hold across
+        // OOM-kill → requeue retries of the parents too
+        let default = if seed % 2 == 0 { MemMiB(60.0) } else { MemMiB(1200.0) };
+        let defaults: Vec<(String, MemMiB)> =
+            (0..6).map(|t| (format!("w/t{t}"), default)).collect();
+        let cfg = SchedConfig {
+            nodes: vec![NodeSpec { mem: MemMiB(3000.0), cores: 8 }; 2],
+            mean_interarrival: Seconds(4.0),
+            seed,
+            event_log_cap: 0, // unbounded: the property reads the log
+            ..SchedConfig::default()
+        };
+        let mut p = DefaultConfigPredictor::new();
+        let (r, log) = schedule_workflows_logged(
+            WorkflowSource::from_instances(instances, defaults),
+            &mut p,
+            &cfg,
+        );
+        assert_eq!(r.workflows_completed, 3, "seed {seed}");
+        assert_eq!(r.completed, 18, "seed {seed}");
+        if seed % 2 == 0 {
+            assert!(r.oom_kills > 0, "seed {seed}: undersized defaults must OOM");
+        }
+
+        let mut completed_at: HashMap<u64, usize> = HashMap::new();
+        let mut released_at: HashMap<u64, usize> = HashMap::new();
+        let mut first_placed_at: HashMap<u64, usize> = HashMap::new();
+        for (pos, ev) in log.iter().enumerate() {
+            match ev {
+                EngineEvent::Completed { seq, .. } => {
+                    completed_at.insert(*seq, pos);
+                }
+                EngineEvent::Released { seq, .. } => {
+                    assert!(
+                        released_at.insert(*seq, pos).is_none(),
+                        "seed {seed}: task {seq} released twice"
+                    );
+                }
+                EngineEvent::Placed { seq, .. } => {
+                    first_placed_at.entry(*seq).or_insert(pos);
+                }
+                _ => {}
+            }
+        }
+        for &(u, v) in &edges {
+            let u_done = completed_at[&u];
+            let v_rel = released_at[&v];
+            let v_placed = first_placed_at[&v];
+            assert!(
+                v_rel > u_done,
+                "seed {seed}: task {v} released (log pos {v_rel}) before parent {u} \
+                 completed (log pos {u_done})"
+            );
+            assert!(
+                v_placed > u_done,
+                "seed {seed}: task {v} placed (log pos {v_placed}) before parent {u} \
+                 completed (log pos {u_done})"
+            );
+        }
+        // every task released exactly once, every release placed later
+        assert_eq!(released_at.len(), 18, "seed {seed}");
+        for (seq, rel) in &released_at {
+            assert!(first_placed_at[seq] > *rel, "seed {seed}: task {seq} placed before release");
+        }
+    }
+}
+
+fn small_wf(n_exec: usize) -> WorkflowSpec {
+    let t = |name: &str, rt: f64, peak: f64| TaskTypeSpec {
+        name: format!("wf/{name}"),
+        profile: ProfileShape::RampUp { alpha: 1.0 },
+        rt_base: Seconds(rt),
+        rt_per_mib: 0.02,
+        peak_base: MemMiB(peak),
+        peak_per_mib: 0.4,
+        noise_sigma: 0.1,
+        spike_prob: 0.05,
+        wiggle_sigma: 0.02,
+        input_mu: 5.5,
+        input_sigma: 0.5,
+        n_executions: n_exec,
+        default_mem: MemMiB(4096.0),
+    };
+    WorkflowSpec {
+        name: "wf".into(),
+        tasks: vec![
+            t("qc", 15.0, 150.0),
+            t("align", 60.0, 900.0),
+            t("dedup", 30.0, 500.0),
+            t("call", 45.0, 700.0),
+        ],
+        edges: vec![(0, 1), (1, 2), (1, 3), (2, 3)],
+    }
+}
+
+/// Acceptance criterion: the DAG sweep is bit-identical at any worker
+/// count (the per-cell instances are regenerated from the seed, so
+/// cells share nothing).
+#[test]
+fn dag_grid_bit_identical_across_worker_counts() {
+    let wf = small_wf(4);
+    let mk_methods = || -> Vec<PredictorFactory> {
+        vec![
+            Box::new(|| Box::new(DefaultConfigPredictor::new())),
+            Box::new(|| Box::new(ksegments::predictors::ppm::PpmPredictor::improved())),
+        ]
+    };
+    let grid = DagGrid::new(
+        vec![ReservationPolicy::StaticPeak, ReservationPolicy::SegmentWise],
+        mk_methods(),
+        &wf,
+        vec![1, 2],
+        vec![2, 4],
+    )
+    .with_base(
+        SchedConfig { seed: 42, ..SchedConfig::default() },
+        NodeSpec { mem: MemMiB(6000.0), cores: 8 },
+    );
+    let seq = grid.run(1);
+    for workers in [2, 8] {
+        assert_eq!(grid.run(workers), seq, "workers={workers} diverged");
+    }
+    assert_eq!(seq.reports.len(), 2 * 2 * 2 * 2);
+    for (cell, rep) in seq.cells.iter().zip(&seq.reports) {
+        assert_eq!(rep.completed, rep.submitted, "cell {cell:?} lost tasks");
+        assert_eq!(rep.workflows_completed, rep.workflows_submitted, "cell {cell:?}");
+        assert_eq!(
+            rep.admitted,
+            rep.completed + rep.oom_kills + rep.grow_denials,
+            "cell {cell:?} accounting broken"
+        );
+    }
+}
+
+/// A predictor that undersizes one named task type on its first
+/// attempt and is exact everywhere else — the controlled failure
+/// injection for the delay oracle.
+struct Undersize {
+    victim: &'static str,
+    peaks: HashMap<String, f64>,
+    fail_first: bool,
+}
+impl MemoryPredictor for Undersize {
+    fn name(&self) -> String {
+        "undersize-oracle".into()
+    }
+    fn prime(&mut self, _: &str, _: MemMiB) {}
+    fn predict(&mut self, task_type: &str, _: f64) -> Allocation {
+        let peak = self.peaks[task_type];
+        if self.fail_first && task_type == self.victim {
+            // below the true peak: the first attempt OOMs mid-run
+            Allocation::Static(MemMiB(peak * 0.5))
+        } else {
+            Allocation::Static(MemMiB(peak * 1.01))
+        }
+    }
+    fn on_failure(
+        &mut self,
+        task_type: &str,
+        _: f64,
+        _: &Allocation,
+        _: &FailureInfo,
+    ) -> Allocation {
+        Allocation::Static(MemMiB(self.peaks[task_type] * 1.01))
+    }
+    fn observe(&mut self, _: &TaskRun) {}
+}
+
+/// The oracle delay claim: an OOM-killed parent strictly delays the
+/// workflow makespan vs. the failure-free run of the *same* instance —
+/// underprediction now propagates along the critical path.
+#[test]
+fn oom_killed_parent_strictly_delays_workflow_makespan() {
+    // parent (20 s ramp) → child (20 s); capacity is never the
+    // bottleneck, and the ramp makes the undersized first attempt die
+    // mid-run rather than at t = 0
+    let mk_src = || {
+        let parent = ramp_run("w/parent", 0, 800.0, 20.0);
+        let child = flat_run("w/child", 1, 800.0, 20.0);
+        WorkflowSource::from_instances(
+            vec![WorkflowInstance {
+                name: "w".into(),
+                index: 0,
+                tasks: vec![
+                    DagTask { run: parent, parents: vec![] },
+                    DagTask { run: child, parents: vec![0] },
+                ],
+            }],
+            vec![("w/parent".into(), MemMiB(1000.0)), ("w/child".into(), MemMiB(1000.0))],
+        )
+    };
+    let peaks: HashMap<String, f64> =
+        [("w/parent".to_string(), 800.0), ("w/child".to_string(), 800.0)].into();
+    let cfg = SchedConfig {
+        nodes: vec![NodeSpec { mem: MemMiB(8000.0), cores: 8 }],
+        mean_interarrival: Seconds(0.0),
+        ..SchedConfig::default()
+    };
+    let mut ok = Undersize { victim: "w/parent", peaks: peaks.clone(), fail_first: false };
+    let clean = schedule_workflows(mk_src(), &mut ok, &cfg);
+    let mut bad = Undersize { victim: "w/parent", peaks, fail_first: true };
+    let failed = schedule_workflows(mk_src(), &mut bad, &cfg);
+
+    assert_eq!(clean.oom_kills, 0);
+    assert!(failed.oom_kills >= 1, "the victim's first attempt must OOM");
+    assert_eq!(clean.workflows_completed, 1);
+    assert_eq!(failed.workflows_completed, 1);
+    // identical DAG, identical critical path ...
+    assert_eq!(clean.workflow_critical_paths, failed.workflow_critical_paths);
+    // ... but the parent's retry pushes the whole instance later
+    assert!(
+        failed.workflow_makespans[0] > clean.workflow_makespans[0] + 1e-9,
+        "OOM retry of a parent must delay the workflow: {} !> {}",
+        failed.workflow_makespans[0],
+        clean.workflow_makespans[0]
+    );
+    assert!(failed.critical_path_stretch() > clean.critical_path_stretch());
+}
+
+/// Both paper workflows schedule end to end in DAG mode under every
+/// policy, with all workflow metrics internally consistent.
+#[test]
+fn paper_workflows_schedule_as_dags() {
+    for wf in [eager_workflow(), sarek_workflow()] {
+        for policy in [ReservationPolicy::StaticPeak, ReservationPolicy::SegmentWise] {
+            let cfg = SchedConfig {
+                policy,
+                nodes: vec![NodeSpec { mem: MemMiB::from_gib(32.0), cores: 32 }; 2],
+                mean_interarrival: Seconds(5.0),
+                seed: 42,
+                ..SchedConfig::default()
+            };
+            let src = WorkflowSource::from_spec(&wf, 42, 2);
+            let n_tasks = src.n_tasks() as u64;
+            let mut p = DefaultConfigPredictor::new();
+            let r = schedule_workflows(src, &mut p, &cfg);
+            assert_eq!(r.workflows_submitted, 2, "{} {:?}", wf.name, policy);
+            assert_eq!(r.workflows_completed, 2, "{} {:?}", wf.name, policy);
+            assert_eq!(r.submitted, n_tasks, "{} {:?}", wf.name, policy);
+            assert_eq!(r.completed, r.submitted, "{} {:?}", wf.name, policy);
+            assert_eq!(r.workflow_makespans.len(), 2);
+            for (m, cp) in r.workflow_makespans.iter().zip(&r.workflow_critical_paths) {
+                assert!(cp > &0.0);
+                assert!(*m >= *cp - 1e-9, "{}: makespan {m} < critical path {cp}", wf.name);
+            }
+            for (f, m) in r.workflow_first_completions.iter().zip(&r.workflow_makespans) {
+                assert!(*f <= *m + 1e-9);
+            }
+        }
+    }
+}

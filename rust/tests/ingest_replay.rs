@@ -37,7 +37,7 @@ fn kseg_factory() -> Box<dyn MemoryPredictor> {
 #[test]
 fn fixture_parses_to_expected_shape() {
     let mut src = NextflowDirSource::open(&fixture_dir()).unwrap();
-    assert_eq!(src.n_rows(), 12, "12 COMPLETED rows");
+    assert_eq!(src.n_rows(), 14, "14 COMPLETED rows");
     assert_eq!(src.skipped_rows(), 2, "FAILED + CACHED rows skipped");
     // requested-memory defaults per process
     let defaults = src.defaults();
@@ -47,17 +47,27 @@ fn fixture_parses_to_expected_shape() {
 
     let trace = materialize(&mut src).unwrap();
     assert_eq!(trace.n_types(), 3);
-    assert_eq!(trace.n_runs(), 12);
+    assert_eq!(trace.n_runs(), 14);
     assert_eq!(trace.runs_of("ALIGN").len(), 5);
-    assert_eq!(trace.runs_of("QUANT").len(), 4);
-    assert_eq!(trace.runs_of("FILTER").len(), 3);
+    assert_eq!(trace.runs_of("QUANT").len(), 5);
+    assert_eq!(trace.runs_of("FILTER").len(), 4);
 
     // submit-ordered seq: the first two arrivals are ALIGN then QUANT
     let ordered = trace.all_runs_ordered();
     assert_eq!(ordered[0].task_type, "ALIGN");
     assert_eq!(ordered[1].task_type, "QUANT");
     let seqs: Vec<u64> = ordered.iter().map(|r| r.seq).collect();
-    assert_eq!(seqs, (0..12).collect::<Vec<u64>>());
+    assert_eq!(seqs, (0..14).collect::<Vec<u64>>());
+
+    // the nf-core-reality rows: an ms-duration FILTER and a QUANT with
+    // '-' peak_rss/rchar whose series comes from its monitoring CSV
+    let filter_ms = &trace.runs_of("FILTER")[3];
+    assert!((filter_ms.runtime.0 - 0.75).abs() < 1e-9, "750ms realtime");
+    let quant_dash = &trace.runs_of("QUANT")[4];
+    assert!((quant_dash.runtime.0 - 12.5).abs() < 1e-9, "12.5s realtime");
+    assert_eq!(quant_dash.series.len(), 3, "series from samples/16.csv");
+    assert_eq!(quant_dash.peak(), MemMiB::parse("1.44 GB").unwrap());
+    assert_eq!(quant_dash.input_mib, 0.0, "'-' rchar defaults to 0");
 
     // ALIGN has real monitoring series (5 ramp samples at 2 s)
     let align0 = &trace.runs_of("ALIGN")[0];
@@ -131,7 +141,7 @@ fn replay_fixture_bit_identical_across_workers_and_sources() {
     let cfg = ReplayConfig { chunk: 3, ..ReplayConfig::default() };
     let mut dir_src = NextflowDirSource::open(&fixture_dir()).unwrap();
     let base = replay_source(&mut dir_src, &kseg_factory, &cfg, 1, None).unwrap();
-    assert_eq!(base.runs_replayed, 12);
+    assert_eq!(base.runs_replayed, 14);
     assert_eq!(base.runs_warmup, 6, "2-run warm-up per type x 3 types");
     assert_eq!(base.report.tasks.len(), 3);
     assert!(base.report.tasks.iter().all(|t| t.n_scored > 0));
@@ -197,7 +207,7 @@ fn fixture_schedules_identically_from_stream_and_trace() {
     let cfg = SchedConfig { training_frac: 0.0, ..SchedConfig::default() };
     let mut p1 = PpmPredictor::improved();
     let materialized = schedule_trace(&trace, &mut p1, &cfg);
-    assert_eq!(materialized.completed, 12);
+    assert_eq!(materialized.completed, 14);
 
     let path = tmp("sched_fixture.jsonl");
     write_trace_jsonl_ordered(&trace, &path).unwrap();

@@ -10,7 +10,7 @@ use ksegments::bench_harness::{
 use ksegments::cluster::NodeSpec;
 use ksegments::predictors::default_config::DefaultConfigPredictor;
 use ksegments::predictors::ppm::PpmPredictor;
-use ksegments::sched::{ReservationPolicy, SchedConfig, SchedGrid};
+use ksegments::sched::{DagGrid, ReservationPolicy, SchedConfig, SchedGrid};
 use ksegments::sim::{parallel_map, EvalGrid, PredictorFactory};
 use ksegments::units::MemMiB;
 use ksegments::workload::{eager_workflow, generate_workflow_trace};
@@ -134,6 +134,44 @@ fn sched_grid_bit_identical_across_worker_counts() {
             rep.admitted,
             rep.completed + rep.oom_kills + rep.grow_denials,
             "cell {cell:?} accounting broken"
+        );
+    }
+}
+
+/// The dependency-gated DAG sweep rides the same pool: (policy ×
+/// predictor × concurrent-instance count) over the eager workflow at
+/// seed 42 is bit-identical at workers = 1 and workers = 8 — workflow
+/// makespans, critical paths and straggler counts included.
+#[test]
+fn dag_grid_bit_identical_across_worker_counts() {
+    let wf = eager_workflow();
+    let mut methods: Vec<PredictorFactory> = vec![
+        Box::new(|| Box::new(DefaultConfigPredictor::new())),
+        Box::new(|| Box::new(PpmPredictor::improved())),
+    ];
+    methods.extend(makers_for_keys(&["ensemble", "dynseg"], FitterChoice::Native));
+    let grid = DagGrid::new(
+        vec![ReservationPolicy::StaticPeak, ReservationPolicy::SegmentWise],
+        methods,
+        &wf,
+        vec![2],
+        vec![2, 4],
+    )
+    .with_base(
+        SchedConfig { seed: 42, ..SchedConfig::default() },
+        NodeSpec { mem: MemMiB::from_gib(32.0), cores: 32 },
+    );
+    let seq = grid.run(1);
+    let par = grid.run(8);
+    assert_eq!(seq, par, "DAG grid diverged under parallelism");
+    assert_eq!(seq.reports.len(), 2 * 4 * 1 * 2);
+    for (cell, rep) in seq.cells.iter().zip(&seq.reports) {
+        assert_eq!(rep.workflows_completed, rep.workflows_submitted, "cell {cell:?}");
+        assert_eq!(rep.completed, rep.submitted, "cell {cell:?} lost tasks");
+        assert_eq!(
+            rep.workflow_makespans.len() as u64,
+            rep.workflows_completed,
+            "cell {cell:?}"
         );
     }
 }

@@ -7,6 +7,7 @@
 use crate::metrics::{count_wins, render_table, MethodReport};
 use crate::ml::fitter::KsegFitter;
 use crate::predictors::adaptive_k::AdaptiveKPredictor;
+use crate::predictors::condor::CondorTriple;
 use crate::predictors::default_config::DefaultConfigPredictor;
 use crate::predictors::dynseg::DynSegPredictor;
 use crate::predictors::ensemble::EnsemblePredictor;
@@ -47,7 +48,8 @@ fn ksegments(choice: FitterChoice, k: usize, strategy: RetryStrategy) -> Box<dyn
 
 /// CLI keys of the Fig. 7 predictor-zoo roster, in table-row order:
 /// the paper's §IV-C lineup plus the follow-up-literature competitors
-/// (Sizey ensemble, KS+ dynamic segmentation).
+/// (Sizey ensemble, KS+ dynamic segmentation) and the HTCondor
+/// `3 * MemoryUsage` production heuristic.
 pub const METHOD_KEYS: &[&str] = &[
     "default",
     "ppm",
@@ -57,6 +59,7 @@ pub const METHOD_KEYS: &[&str] = &[
     "ksegments-partial",
     "ensemble",
     "dynseg",
+    "condor",
 ];
 
 /// Keys accepted by `--method` but not part of the default roster.
@@ -76,6 +79,7 @@ pub fn make_method(key: &str, choice: FitterChoice) -> Option<Box<dyn MemoryPred
         "ksegments-adaptive" => Box::new(AdaptiveKPredictor::native(RetryStrategy::Selective)),
         "ensemble" => Box::new(EnsemblePredictor::new()),
         "dynseg" => Box::new(DynSegPredictor::native(4, RetryStrategy::Selective)),
+        "condor" => Box::new(CondorTriple::new()),
         _ => return None,
     })
 }
@@ -175,8 +179,8 @@ pub fn fig7_makers(choice: FitterChoice) -> Vec<PredictorFactory> {
     makers_for_keys(METHOD_KEYS, choice)
 }
 
-/// Run the full Fig. 7 grid (8 methods × 3 fractions × 2 workflows =
-/// 48 independent cells) on `workers` threads. Results are identical
+/// Run the full Fig. 7 grid (9 methods × 3 fractions × 2 workflows =
+/// 54 independent cells) on `workers` threads. Results are identical
 /// for any worker count (see `tests/parallel_determinism.rs`).
 pub fn run_fig7(seed: u64, choice: FitterChoice, workers: usize) -> Fig7Results {
     run_fig7_selected(seed, choice, workers, METHOD_KEYS)
@@ -443,18 +447,19 @@ mod tests {
     use super::*;
 
     #[test]
-    fn roster_has_eight_methods_with_unique_names() {
+    fn roster_has_nine_methods_with_unique_names() {
         let names = method_names();
         assert_eq!(names.len(), METHOD_KEYS.len());
-        assert_eq!(names.len(), 8);
+        assert_eq!(names.len(), 9);
         let mut dedup = names.clone();
         dedup.sort();
         dedup.dedup();
-        assert_eq!(dedup.len(), 8);
+        assert_eq!(dedup.len(), 9);
         assert!(names.contains(&"PPM Improved".to_string()));
         assert!(names.contains(&"k-Segments Selective".to_string()));
         assert!(names.contains(&"Sizey Ensemble".to_string()));
         assert!(names.contains(&"KS+ DynSeg Selective".to_string()));
+        assert!(names.contains(&"HTCondor 3x".to_string()));
     }
 
     #[test]

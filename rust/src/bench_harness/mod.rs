@@ -5,9 +5,11 @@
 //! * [`figures`] — one entry point per paper figure (Fig. 1, 4, 7a–c,
 //!   8), shared by the CLI and the `cargo bench` targets;
 //! * [`throughput`] — the scheduling sweeps: makespan / queue-wait /
-//!   packing tables per (policy × predictor × arrival rate), plus the
+//!   packing tables per (policy × predictor × arrival rate), the
 //!   dependency-gated workflow tables per (policy × predictor ×
-//!   concurrent-instance count).
+//!   concurrent-instance count), and the failure-domain adversity
+//!   tables per (predictor × failure rate × autoscale lag) with the
+//!   `BENCH_sched.json` scheduler-throughput snapshot.
 
 pub mod ablation;
 pub mod figures;
@@ -21,7 +23,8 @@ pub use figures::{
     Fig7Results, Fig8Results, FitterChoice, EXTRA_METHOD_KEYS, METHOD_KEYS,
 };
 pub use throughput::{
-    run_dag_throughput, run_throughput, throughput_makers, DagThroughputResults,
-    ThroughputResults,
+    bench_sched_json, run_dag_throughput, run_failure_sweep, run_failure_sweep_axes,
+    run_throughput, throughput_makers, DagThroughputResults, FailureSweepResults,
+    ThroughputResults, FAILURE_SWEEP_LAGS, FAILURE_SWEEP_RATES,
 };
 pub use timer::{bench, black_box, time_once, Measurement};

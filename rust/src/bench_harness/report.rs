@@ -5,7 +5,7 @@
 
 use crate::bench_harness::ablation::run_all as run_ablations;
 use crate::bench_harness::figures::{run_fig1, run_fig4, run_fig7_selected, run_fig8, FitterChoice};
-use crate::bench_harness::throughput::{run_dag_throughput, run_throughput};
+use crate::bench_harness::throughput::{run_dag_throughput, run_failure_sweep, run_throughput};
 use crate::workload::eager_workflow;
 
 /// Build the complete experiments report (may take ~seconds); the
@@ -64,6 +64,14 @@ pub fn full_report(
     out.push_str(&dag.render_stragglers());
     out.push('\n');
 
+    let adversity = run_failure_sweep(seed, workers);
+    out.push_str(&adversity.render_makespan());
+    out.push('\n');
+    out.push_str(&adversity.render_disruption());
+    out.push('\n');
+    out.push_str(&adversity.render_wastage());
+    out.push('\n');
+
     out.push_str(&run_ablations(seed, workers));
     out
 }
@@ -93,6 +101,8 @@ mod tests {
             "Throughput — makespan",
             "DAG throughput — mean workflow makespan",
             "critical-path stretch",
+            "Failure domains — makespan",
+            "blameless kills",
             "Ablation — error offsets",
             "fixed vs adaptive k",
             "predictor zoo head-to-head",

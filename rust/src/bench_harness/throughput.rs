@@ -12,16 +12,24 @@
 //!   (policy × predictor × concurrent-instance count) via [`DagGrid`];
 //!   per-instance workflow makespan, critical-path stretch and
 //!   straggler counts, where an OOM-ing predictor now pays along the
-//!   critical path instead of just in per-task retries.
+//!   critical path instead of just in per-task retries;
+//! * [`run_failure_sweep`] — cluster adversity: (predictor × node
+//!   failure rate × autoscale lag) via [`FailureGrid`]; how much
+//!   makespan and wastage each predictor pays when nodes die under it
+//!   and how much an autoscaler claws back. Also the workload behind
+//!   the `BENCH_sched.json` scheduler-throughput snapshot
+//!   ([`bench_sched_json`]).
 
 use crate::bench_harness::figures::{makers_for_keys, FitterChoice};
 use crate::cluster::NodeSpec;
 use crate::predictors::MemoryPredictor;
 use crate::sched::{
-    DagGrid, DagGridResults, ReservationPolicy, SchedConfig, SchedGrid, SchedGridResults,
+    DagGrid, DagGridResults, FailureGrid, FailureGridResults, ReservationPolicy, SchedConfig,
+    SchedGrid, SchedGridResults,
 };
 use crate::sim::PredictorFactory;
 use crate::units::MemMiB;
+use crate::util::json::Json;
 use crate::workload::{eager_workflow, generate_workflow_trace};
 
 /// One sweep's rendered axes plus the raw per-cell reports.
@@ -34,12 +42,14 @@ pub struct ThroughputResults {
 
 /// `--method` keys of the sweep roster: the two time-varying methods
 /// (whose Dynamic allocations the segment-wise policy exploits —
-/// k-Segments and KS+ DynSeg) and the strongest static competitors
-/// (PPM Improved, Sizey Ensemble). Every method runs under both
-/// policies — static allocations are unaffected by the policy choice,
-/// which makes the static rows the control.
+/// k-Segments and KS+ DynSeg), the strongest static competitors
+/// (PPM Improved, Sizey Ensemble), and the HTCondor `3 * MemoryUsage`
+/// production heuristic (whose enormous static headroom is the
+/// packing-density anti-pattern the sweeps quantify). Every method
+/// runs under both policies — static allocations are unaffected by
+/// the policy choice, which makes the static rows the control.
 pub const THROUGHPUT_KEYS: &[&str] =
-    &["ksegments-selective", "dynseg", "ppm-improved", "ensemble"];
+    &["ksegments-selective", "dynseg", "ppm-improved", "ensemble", "condor"];
 
 /// The sweep roster as thread-safe factories, in [`THROUGHPUT_KEYS`]
 /// order.
@@ -69,17 +79,17 @@ pub fn run_throughput(seed: u64, interarrivals: &[f64], workers: usize) -> Throu
     ThroughputResults { interarrivals: interarrivals.to_vec(), policies, methods, results }
 }
 
-/// Markdown table shared by both sweep families: one row per
-/// (policy · method), one column per swept point.
+/// Markdown table shared by all sweep families: one labelled row per
+/// swept combination, one column per swept point.
 fn render_sweep_table(
     title: &str,
     unit: &str,
+    row_header: &str,
     col_labels: &[String],
-    policies: &[ReservationPolicy],
-    methods: &[String],
-    cell: impl Fn(usize, usize, usize) -> f64,
+    row_labels: &[String],
+    cell: impl Fn(usize, usize) -> f64,
 ) -> String {
-    let mut out = format!("## {title}\n\n| policy · method |");
+    let mut out = format!("## {title}\n\n| {row_header} |");
     for label in col_labels {
         out.push_str(&format!(" {label} |"));
     }
@@ -88,16 +98,25 @@ fn render_sweep_table(
         out.push_str("---|");
     }
     out.push('\n');
-    for (p, policy) in policies.iter().enumerate() {
-        for (m, method) in methods.iter().enumerate() {
-            out.push_str(&format!("| {} · {} |", policy.name(), method));
-            for c in 0..col_labels.len() {
-                out.push_str(&format!(" {:.3} |", cell(p, m, c)));
-            }
-            out.push('\n');
+    for (r, row) in row_labels.iter().enumerate() {
+        out.push_str(&format!("| {row} |"));
+        for c in 0..col_labels.len() {
+            out.push_str(&format!(" {:.3} |", cell(r, c)));
         }
+        out.push('\n');
     }
     out.push_str(&format!("\n(unit: {unit})\n"));
+    out
+}
+
+/// Row labels for the (policy × method) families.
+fn policy_method_rows(policies: &[ReservationPolicy], methods: &[String]) -> Vec<String> {
+    let mut out = Vec::with_capacity(policies.len() * methods.len());
+    for policy in policies {
+        for method in methods {
+            out.push(format!("{} · {}", policy.name(), method));
+        }
+    }
     out
 }
 
@@ -114,8 +133,10 @@ impl ThroughputResults {
     ) -> String {
         let cols: Vec<String> =
             self.interarrivals.iter().map(|ia| format!("ia={ia:.0}s")).collect();
-        render_sweep_table(title, unit, &cols, &self.policies, &self.methods, |p, m, a| {
-            get(self.cell(p, m, a))
+        let rows = policy_method_rows(&self.policies, &self.methods);
+        let n_methods = self.methods.len();
+        render_sweep_table(title, unit, "policy · method", &cols, &rows, |r, a| {
+            get(self.cell(r / n_methods, r % n_methods, a))
         })
     }
 
@@ -212,8 +233,10 @@ impl DagThroughputResults {
         let title = format!("{title} ({})", self.workflow);
         let unit = format!("{unit}; N = concurrent workflow instances");
         let cols: Vec<String> = self.instance_counts.iter().map(|n| format!("N={n}")).collect();
-        render_sweep_table(&title, &unit, &cols, &self.policies, &self.methods, |p, m, i| {
-            get(self.cell(p, m, i))
+        let rows = policy_method_rows(&self.policies, &self.methods);
+        let n_methods = self.methods.len();
+        render_sweep_table(&title, &unit, "policy · method", &cols, &rows, |r, i| {
+            get(self.cell(r / n_methods, r % n_methods, i))
         })
     }
 
@@ -255,6 +278,172 @@ impl DagThroughputResults {
     }
 }
 
+/// Default failure-rate axis (failures per second; 0 = none). The
+/// non-zero points are MTBF 500 s and MTBF 100 s — mild and harsh
+/// relative to the eager trace's ~20–200 s task runtimes.
+pub const FAILURE_SWEEP_RATES: &[f64] = &[0.0, 0.002, 0.01];
+
+/// Default autoscale-lag axis: fixed roster vs a 30 s provisioning lag.
+pub const FAILURE_SWEEP_LAGS: &[Option<f64>] = &[None, Some(30.0)];
+
+/// One failure sweep's rendered axes plus the raw per-cell reports.
+pub struct FailureSweepResults {
+    pub fail_rates: Vec<f64>,
+    pub lags: Vec<Option<f64>>,
+    pub methods: Vec<String>,
+    pub results: FailureGridResults,
+}
+
+/// Run the failure-domain sweep on the eager-like workflow trace: the
+/// [`THROUGHPUT_KEYS`] roster × [`FAILURE_SWEEP_RATES`] ×
+/// [`FAILURE_SWEEP_LAGS`], on the same packing-pressure cluster as
+/// [`run_throughput`] (2 × 32 GiB base roster).
+pub fn run_failure_sweep(seed: u64, workers: usize) -> FailureSweepResults {
+    run_failure_sweep_axes(seed, FAILURE_SWEEP_RATES, FAILURE_SWEEP_LAGS, workers)
+}
+
+/// [`run_failure_sweep`] with explicit axes (tests and the CLI's
+/// `--fail-rate` override).
+pub fn run_failure_sweep_axes(
+    seed: u64,
+    fail_rates: &[f64],
+    lags: &[Option<f64>],
+    workers: usize,
+) -> FailureSweepResults {
+    let traces = vec![generate_workflow_trace(&eager_workflow(), seed)];
+    let base = SchedConfig { seed, training_frac: 0.5, ..SchedConfig::default() };
+    let node = NodeSpec { mem: MemMiB::from_gib(32.0), cores: 32 };
+    let grid =
+        FailureGrid::new(throughput_makers(), &traces, fail_rates.to_vec(), lags.to_vec())
+            .with_base(base, node, 2);
+    let results = grid.run(workers);
+    let methods = throughput_makers().iter().map(|mk| mk().name()).collect();
+    FailureSweepResults {
+        fail_rates: fail_rates.to_vec(),
+        lags: lags.to_vec(),
+        methods,
+        results,
+    }
+}
+
+impl FailureSweepResults {
+    fn cell(&self, m: usize, r: usize, l: usize) -> &crate::sched::SchedReport {
+        self.results.report(m, r, l).expect("cell present")
+    }
+
+    fn roster_label(lag: Option<f64>) -> String {
+        match lag {
+            None => "fixed roster".to_string(),
+            Some(l) => format!("autoscale lag={l:.0}s"),
+        }
+    }
+
+    fn render_metric(
+        &self,
+        title: &str,
+        unit: &str,
+        get: impl Fn(&crate::sched::SchedReport) -> f64,
+    ) -> String {
+        let cols: Vec<String> = self
+            .fail_rates
+            .iter()
+            .map(|&r| {
+                if r > 0.0 {
+                    format!("mtbf={:.0}s", 1.0 / r)
+                } else {
+                    "no failures".to_string()
+                }
+            })
+            .collect();
+        let mut rows = Vec::with_capacity(self.methods.len() * self.lags.len());
+        for method in &self.methods {
+            for &lag in &self.lags {
+                rows.push(format!("{} · {}", method, Self::roster_label(lag)));
+            }
+        }
+        let n_lags = self.lags.len();
+        render_sweep_table(title, unit, "method · roster", &cols, &rows, |row, col| {
+            get(self.cell(row / n_lags, col, row % n_lags))
+        })
+    }
+
+    /// The headline table: makespan under increasing failure pressure.
+    pub fn render_makespan(&self) -> String {
+        self.render_metric(
+            "Failure domains — makespan by failure rate × roster policy",
+            "seconds until the last task completes",
+            |r| r.makespan.0,
+        )
+    }
+
+    /// Blameless kills absorbed (node-lost + preempted requeues).
+    pub fn render_disruption(&self) -> String {
+        self.render_metric(
+            "Failure domains — blameless kills by failure rate × roster policy",
+            "task attempts killed by node loss or preemption (requeued, not escalated)",
+            |r| (r.node_lost + r.preempted) as f64,
+        )
+    }
+
+    /// Wastage including the partial work thrown away by kills.
+    pub fn render_wastage(&self) -> String {
+        self.render_metric(
+            "Failure domains — wastage by failure rate × roster policy",
+            "GB·s reserved-but-unused plus work lost to kills",
+            |r| r.total_wastage.0,
+        )
+    }
+
+    /// One-line summary per cell, for the CLI.
+    pub fn render_summaries(&self) -> String {
+        let mut out = String::new();
+        for r in &self.results.reports {
+            out.push_str(&r.summary());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Run the failure sweep as a scheduler micro-benchmark and render a
+/// `BENCH_sched.json` snapshot: total engine events processed, wall
+/// time, and the headline events/s rate. CI runs this per release so
+/// scheduler-throughput regressions show up as a diffable number.
+pub fn bench_sched_json(seed: u64, workers: usize) -> String {
+    let start = std::time::Instant::now();
+    let sweep = run_failure_sweep(seed, workers);
+    let wall_s = start.elapsed().as_secs_f64();
+    sched_bench_json(&sweep, seed, workers, wall_s)
+}
+
+fn sched_bench_json(
+    sweep: &FailureSweepResults,
+    seed: u64,
+    workers: usize,
+    wall_s: f64,
+) -> String {
+    let events: u64 = sweep.results.reports.iter().map(|r| r.events_processed).sum();
+    let completed: u64 = sweep.results.reports.iter().map(|r| r.completed).sum();
+    let node_failures: u64 = sweep.results.reports.iter().map(|r| r.node_failures).sum();
+    Json::obj(vec![
+        ("bench", "sched_events".into()),
+        ("seed", seed.into()),
+        ("workers", (workers as u64).into()),
+        ("n_cells", (sweep.results.reports.len() as u64).into()),
+        (
+            "methods",
+            Json::Arr(sweep.methods.iter().map(|m| Json::Str(m.clone())).collect()),
+        ),
+        ("fail_rates", Json::arr_f64(&sweep.fail_rates)),
+        ("events_processed", events.into()),
+        ("tasks_completed", completed.into()),
+        ("node_failures", node_failures.into()),
+        ("wall_s", wall_s.into()),
+        ("events_per_s", (events as f64 / wall_s.max(1e-9)).into()),
+    ])
+    .to_string()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -289,6 +478,7 @@ mod tests {
         assert!(mk.contains("segment-wise · PPM Improved"));
         assert!(mk.contains("segment-wise · KS+ DynSeg Selective"));
         assert!(mk.contains("static-peak · Sizey Ensemble"));
+        assert!(mk.contains("static-peak · HTCondor 3x"));
         assert!(mk.contains("ia=2s"));
         assert!(t.render_queue_wait().contains("queue wait"));
         assert!(t.render_packing().contains("peak concurrent"));
@@ -297,5 +487,49 @@ mod tests {
         for r in &t.results.reports {
             assert_eq!(r.completed, r.submitted);
         }
+    }
+
+    #[test]
+    fn failure_sweep_renders_and_conserves() {
+        // small axes keep this cheap; report/CLI sweep the full grid
+        let t = run_failure_sweep_axes(42, &[0.0, 0.01], &[Some(30.0)], 2);
+        assert_eq!(t.methods.len(), THROUGHPUT_KEYS.len());
+        let mk = t.render_makespan();
+        assert!(mk.contains("no failures"));
+        assert!(mk.contains("mtbf=100s"));
+        assert!(mk.contains("k-Segments Selective · autoscale lag=30s"));
+        assert!(mk.contains("HTCondor 3x · autoscale lag=30s"));
+        assert!(t.render_disruption().contains("blameless kills"));
+        assert!(t.render_wastage().contains("wastage"));
+        assert!(!t.render_summaries().is_empty());
+        for (c, r) in t.results.cells.iter().zip(&t.results.reports) {
+            assert_eq!(r.completed, r.submitted, "cell {c:?}");
+            assert_eq!(
+                r.admitted,
+                r.completed + r.oom_kills + r.grow_denials + r.preempted + r.node_lost,
+                "cell {c:?}"
+            );
+            if c.rate_idx == 0 {
+                assert_eq!(r.node_failures, 0, "control cell saw failures: {c:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn sched_bench_json_is_valid_and_counts_events() {
+        let t = run_failure_sweep_axes(42, &[0.0, 0.01], &[None], 2);
+        let s = sched_bench_json(&t, 42, 2, 1.5);
+        let j = Json::parse(&s).expect("bench json parses");
+        assert_eq!(j.get("bench").as_str(), Some("sched_events"));
+        assert_eq!(j.get("seed").as_u64(), Some(42));
+        assert_eq!(j.get("n_cells").as_u64(), Some((THROUGHPUT_KEYS.len() * 2) as u64));
+        // every simulated event is counted — a scheduling run always
+        // processes at least one event per admitted task
+        let events = j.get("events_processed").as_u64().unwrap();
+        let tasks = j.get("tasks_completed").as_u64().unwrap();
+        assert!(events >= tasks, "{events} events < {tasks} tasks");
+        assert!(tasks > 0);
+        assert!((j.get("events_per_s").as_f64().unwrap() - events as f64 / 1.5).abs() < 1e-6);
+        assert_eq!(j.get("methods").as_arr().unwrap().len(), THROUGHPUT_KEYS.len());
     }
 }

@@ -13,6 +13,14 @@
 //! first-segment allocation and grows the reservation in place at each
 //! segment boundary of the k-Segments step function. Growing can fail
 //! under contention — that is the scheduler's `grow_denials` signal.
+//!
+//! Nodes also have a **lifecycle** ([`NodeState`]): the failure-domain
+//! scheduler takes nodes down (loss) and back up (rejoin), and the
+//! autoscaler appends new nodes and retires idle ones. Node indexes
+//! are stable forever — a vacated node stays in the roster as `Down`
+//! or `Retired` so outstanding [`Reservation`] handles and per-node
+//! ledgers never dangle; any reserve or grow against a non-`Up` node
+//! is a denial, never a panic or a silent success.
 
 mod profile;
 
@@ -34,11 +42,22 @@ impl NodeSpec {
     }
 }
 
+/// Lifecycle of a node in the roster. Indexes are stable: a node is
+/// never removed from the cluster's vector, only marked `Down`
+/// (failed, will rejoin) or `Retired` (autoscaled away, permanent).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeState {
+    Up,
+    Down,
+    Retired,
+}
+
 /// A node with live memory accounting.
 #[derive(Debug, Clone)]
 pub struct Node {
     pub spec: NodeSpec,
     reserved: f64, // MiB
+    state: NodeState,
     /// Monotone counters for observability.
     pub admitted: u64,
     pub rejected: u64,
@@ -46,7 +65,15 @@ pub struct Node {
 
 impl Node {
     pub fn new(spec: NodeSpec) -> Node {
-        Node { spec, reserved: 0.0, admitted: 0, rejected: 0 }
+        Node { spec, reserved: 0.0, state: NodeState::Up, admitted: 0, rejected: 0 }
+    }
+
+    pub fn state(&self) -> NodeState {
+        self.state
+    }
+
+    pub fn is_up(&self) -> bool {
+        self.state == NodeState::Up
     }
 
     pub fn free(&self) -> MemMiB {
@@ -58,8 +85,12 @@ impl Node {
     }
 
     /// Try to reserve `mem`; returns false (and counts a rejection) if
-    /// it does not fit.
+    /// it does not fit. A non-`Up` node denies without counting a
+    /// rejection — it was never really probed as capacity.
     pub fn reserve(&mut self, mem: MemMiB) -> bool {
+        if !self.is_up() {
+            return false;
+        }
         if mem.0 <= 0.0 {
             return true;
         }
@@ -76,7 +107,12 @@ impl Node {
     /// Grow an existing reservation in place by `delta` MiB. Unlike
     /// [`Self::reserve`], a denied grow does not count as a rejection —
     /// it is a contention event the scheduler accounts separately.
+    /// A grow against a vacated (down or retired) node is a denial,
+    /// never a panic or a silent success.
     pub fn grow(&mut self, delta: MemMiB) -> bool {
+        if !self.is_up() {
+            return false;
+        }
         if delta.0 <= 0.0 {
             return true;
         }
@@ -156,6 +192,9 @@ impl Cluster {
     /// [`Self::failed_placements`].
     pub fn reserve(&mut self, mem: MemMiB) -> Option<Reservation> {
         for (i, node) in self.nodes.iter_mut().enumerate() {
+            if !node.is_up() {
+                continue; // vacated nodes are not capacity, not probes
+            }
             if node.reserve(mem) {
                 return Some(Reservation { node_idx: i, mem });
             }
@@ -214,6 +253,60 @@ impl Cluster {
     /// Sum of per-node rejection counters (probes that did not fit).
     pub fn total_rejections(&self) -> u64 {
         self.nodes.iter().map(|n| n.rejected).sum()
+    }
+
+    // ---- node lifecycle (failure domains & autoscaling) ----
+
+    /// Append a new node to the roster, created `Down` (provisioning);
+    /// it becomes capacity when [`Self::set_up`] fires after the
+    /// autoscaler's lag. Returns the new node's stable index.
+    pub fn add_node(&mut self, spec: NodeSpec) -> usize {
+        let mut n = Node::new(spec);
+        n.state = NodeState::Down;
+        self.nodes.push(n);
+        self.nodes.len() - 1
+    }
+
+    /// Mark a node lost. Its reservations are the caller's problem —
+    /// the scheduler kills and requeues residents — but the node
+    /// itself denies all placement and grow traffic until it rejoins.
+    pub fn set_down(&mut self, node_idx: usize) {
+        let n = &mut self.nodes[node_idx];
+        if n.state == NodeState::Up {
+            n.state = NodeState::Down;
+        }
+    }
+
+    /// Bring a `Down` node back `Up`. A `Retired` node stays retired —
+    /// a rejoin scheduled before retirement must not resurrect it.
+    pub fn set_up(&mut self, node_idx: usize) {
+        let n = &mut self.nodes[node_idx];
+        if n.state == NodeState::Down {
+            n.state = NodeState::Up;
+        }
+    }
+
+    /// Permanently remove a node from service (autoscale-down). The
+    /// caller must only retire idle nodes; this is debug-asserted.
+    pub fn retire(&mut self, node_idx: usize) {
+        let n = &mut self.nodes[node_idx];
+        debug_assert!(n.reserved <= 1e-9, "retiring a node with live reservations");
+        n.state = NodeState::Retired;
+    }
+
+    /// Number of nodes currently serving (state `Up`).
+    pub fn n_up(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_up()).count()
+    }
+
+    /// Memory capacity of the nodes currently serving — the live
+    /// denominator for utilization under failures and autoscaling.
+    pub fn up_capacity(&self) -> MemMiB {
+        self.nodes
+            .iter()
+            .filter(|n| n.is_up())
+            .map(|n| n.spec.mem)
+            .sum()
     }
 }
 
@@ -339,5 +432,65 @@ mod tests {
         assert!(n.reserve(MemMiB(0.0)));
         assert_eq!(n.reserved(), MemMiB(0.0));
         assert!(n.grow(MemMiB(0.0)));
+    }
+
+    #[test]
+    fn grow_against_vacated_node_is_denied() {
+        // Satellite bugfix: a step-function grow landing after its node
+        // was lost (or autoscaled away) must be a denial — not a panic,
+        // not a silent success that inflates a dead node's ledger.
+        let mut c = Cluster::new(1, NodeSpec { mem: MemMiB(1000.0), cores: 4 });
+        let mut r = c.reserve(MemMiB(300.0)).unwrap();
+        c.set_down(0);
+        assert!(!c.grow(&mut r, MemMiB(1.0)), "grow on a down node must deny");
+        assert_eq!(r.mem, MemMiB(300.0), "denied grow must leave the handle unchanged");
+        assert_eq!(c.nodes()[0].reserved(), MemMiB(300.0));
+        // releasing the stranded reservation still works (accounting
+        // survives the node's death), and zero-delta grows deny too
+        assert!(!c.grow(&mut r, MemMiB(0.0)));
+        c.release(r);
+        assert_eq!(c.nodes()[0].reserved(), MemMiB(0.0));
+    }
+
+    #[test]
+    fn node_lifecycle_up_down_retired() {
+        let mut c = Cluster::new(2, NodeSpec { mem: MemMiB(1000.0), cores: 4 });
+        assert_eq!(c.n_up(), 2);
+        assert_eq!(c.up_capacity(), MemMiB(2000.0));
+        c.set_down(0);
+        assert_eq!(c.nodes()[0].state(), NodeState::Down);
+        assert_eq!(c.n_up(), 1);
+        assert_eq!(c.up_capacity(), MemMiB(1000.0));
+        // first-fit skips the down node without counting probes
+        let r = c.reserve(MemMiB(500.0)).unwrap();
+        assert_eq!(r.node_idx, 1);
+        assert_eq!(c.nodes()[0].rejected, 0);
+        // rejoin restores capacity at the same stable index
+        c.set_up(0);
+        assert!(c.nodes()[0].is_up());
+        assert_eq!(c.up_capacity(), MemMiB(2000.0));
+        // a retired node never rejoins, even if a rejoin fires later
+        c.release(r);
+        c.retire(1);
+        assert_eq!(c.nodes()[1].state(), NodeState::Retired);
+        c.set_up(1);
+        assert_eq!(c.nodes()[1].state(), NodeState::Retired);
+        assert_eq!(c.total_capacity(), MemMiB(2000.0), "roster indexes stay stable");
+        assert_eq!(c.up_capacity(), MemMiB(1000.0));
+    }
+
+    #[test]
+    fn autoscaled_node_joins_down_then_serves() {
+        let mut c = Cluster::new(1, NodeSpec { mem: MemMiB(1000.0), cores: 4 });
+        let idx = c.add_node(NodeSpec { mem: MemMiB(1000.0), cores: 4 });
+        assert_eq!(idx, 1);
+        // provisioning: not capacity yet
+        assert_eq!(c.n_up(), 1);
+        assert!(!c.nodes()[idx].is_up());
+        assert!(c.reserve_on(idx, MemMiB(100.0)).is_none());
+        assert_eq!(c.nodes()[idx].rejected, 0, "a provisioning node is not a probe");
+        c.set_up(idx);
+        assert_eq!(c.n_up(), 2);
+        assert!(c.reserve_on(idx, MemMiB(100.0)).is_some());
     }
 }

@@ -417,7 +417,7 @@ mod tests {
         let svc = PredictionService::spawn(Box::new(DefaultConfigPredictor::new()));
         let h = svc.handle();
         let failed = Allocation::Static(MemMiB(100.0));
-        let info = FailureInfo { time_s: 1.0, used_mib: 150.0, attempt: 1 };
+        let info = FailureInfo::oom(1.0, 150.0, 1);
         let next = h.report_failure("w/t", 10.0, failed, info);
         assert_eq!(next, Allocation::Static(MemMiB(200.0)));
         assert_eq!(svc.shutdown().failures, 1);

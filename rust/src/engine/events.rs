@@ -43,6 +43,21 @@ pub enum EngineEvent {
     /// the instance's arrival. `task_type()` reports the workflow
     /// name, `seq()` the instance ordinal.
     WorkflowDone { workflow: String, instance: u64, tasks: u32, time_s: f64, makespan_s: f64 },
+    /// Scheduler: attempt killed because its node was lost; the task
+    /// is requeued **blamelessly** (same allocation, same attempt
+    /// number — the predictor is never told).
+    NodeLost { task_type: String, seq: u64, attempt: u32, node: usize, time_s: f64 },
+    /// Scheduler: attempt evicted to make room for a higher-priority
+    /// task; requeued blamelessly like a node loss.
+    Preempted { task_type: String, seq: u64, attempt: u32, node: usize, time_s: f64 },
+    /// Scheduler: node `node` went down, killing `killed` resident
+    /// attempts. `task_type()` reports `"cluster"`, `seq()` the node.
+    NodeFailed { node: usize, killed: u32, time_s: f64 },
+    /// Scheduler: node `node` came (back) up — a post-failure rejoin
+    /// or an autoscaled node finishing provisioning.
+    NodeJoined { node: usize, time_s: f64 },
+    /// Scheduler: the autoscaler retired idle node `node`.
+    NodeRetired { node: usize, time_s: f64 },
 }
 
 impl EngineEvent {
@@ -55,8 +70,13 @@ impl EngineEvent {
             | EngineEvent::Placed { task_type, .. }
             | EngineEvent::OomKilled { task_type, .. }
             | EngineEvent::GrowDenied { task_type, .. }
-            | EngineEvent::Released { task_type, .. } => task_type,
+            | EngineEvent::Released { task_type, .. }
+            | EngineEvent::NodeLost { task_type, .. }
+            | EngineEvent::Preempted { task_type, .. } => task_type,
             EngineEvent::WorkflowDone { workflow, .. } => workflow,
+            EngineEvent::NodeFailed { .. }
+            | EngineEvent::NodeJoined { .. }
+            | EngineEvent::NodeRetired { .. } => "cluster",
         }
     }
 
@@ -69,8 +89,13 @@ impl EngineEvent {
             | EngineEvent::Placed { seq, .. }
             | EngineEvent::OomKilled { seq, .. }
             | EngineEvent::GrowDenied { seq, .. }
-            | EngineEvent::Released { seq, .. } => *seq,
+            | EngineEvent::Released { seq, .. }
+            | EngineEvent::NodeLost { seq, .. }
+            | EngineEvent::Preempted { seq, .. } => *seq,
             EngineEvent::WorkflowDone { instance, .. } => *instance,
+            EngineEvent::NodeFailed { node, .. }
+            | EngineEvent::NodeJoined { node, .. }
+            | EngineEvent::NodeRetired { node, .. } => *node as u64,
         }
     }
 }
@@ -188,6 +213,35 @@ mod tests {
         for e in [&placed, &oom, &denied, &released] {
             assert_eq!(e.task_type(), "s");
             assert_eq!(e.seq(), 9);
+        }
+    }
+
+    #[test]
+    fn failure_domain_event_accessors() {
+        let lost = EngineEvent::NodeLost {
+            task_type: "s".into(),
+            seq: 9,
+            attempt: 2,
+            node: 1,
+            time_s: 5.0,
+        };
+        let evicted = EngineEvent::Preempted {
+            task_type: "s".into(),
+            seq: 9,
+            attempt: 1,
+            node: 0,
+            time_s: 6.0,
+        };
+        for e in [&lost, &evicted] {
+            assert_eq!(e.task_type(), "s");
+            assert_eq!(e.seq(), 9);
+        }
+        let failed = EngineEvent::NodeFailed { node: 3, killed: 2, time_s: 7.0 };
+        let joined = EngineEvent::NodeJoined { node: 3, time_s: 8.0 };
+        let retired = EngineEvent::NodeRetired { node: 3, time_s: 9.0 };
+        for e in [&failed, &joined, &retired] {
+            assert_eq!(e.task_type(), "cluster");
+            assert_eq!(e.seq(), 3);
         }
     }
 

@@ -14,6 +14,8 @@
 //! ksegments validate-runtime                      # XLA fit vs native fit
 //! ksegments serve     [--seed N]                  # prediction-service demo
 //! ksegments schedule  [--nodes N] [--arrival S] [--policy P]  # cluster scheduler
+//!                     [--fail-rate R] [--preempt] [--autoscale]
+//! ksegments bench-sched [--out FILE]              # BENCH_sched.json snapshot
 //! ksegments ingest    DIR [--out FILE]            # Nextflow trace -> jsonl
 //! ksegments replay    --source PATH --method M    # streaming replay
 //! ```
@@ -54,14 +56,18 @@ USAGE:
   ksegments schedule  [--nodes N] [--node-gib G] [--arrival SECS]
                       [--policy static|segment|both] [--method METHOD]
                       [--frac F] [--seed N] [--workflow W]
-                      [--dag W --instances N] [--sweep] [--workers N]
+                      [--fail-rate R] [--preempt] [--autoscale [LAG]]
+                      [--dag W --instances N] [--sweep] [--fail-sweep]
+                      [--workers N]
+  ksegments bench-sched [--seed N] [--workers N] [--out FILE]
   ksegments ingest    DIR [--out FILE] [--format jsonl|csv]
   ksegments replay    --source PATH [--method SEL] [--workers N]
                       [--checkpoint FILE] [--checkpoint-out FILE]
                       [--warmup N] [--chunk N]
 
 METHODS: default | ppm | ppm-improved | lr | ksegments-selective |
-         ksegments-partial | ksegments-adaptive | ensemble | dynseg
+         ksegments-partial | ksegments-adaptive | ensemble | dynseg |
+         condor
 
 For fig7/report, --method SEL selects the comparison rows: "all" (the
 default — the whole predictor zoo) or a comma list of method names,
@@ -83,6 +89,16 @@ workflow mode: --instances N concurrent executions of workflow W's
 DAG, each task released only when its parents complete (OOM retries
 of a parent delay its whole subtree); combined with --sweep it
 renders the workflow-makespan tables over instance counts.
+
+schedule also injects cluster adversity: --fail-rate R kills a random
+up node R times per second on average (resident tasks requeue
+blamelessly — same allocation, no predictor escalation), --preempt
+lets high-priority arrivals evict low-priority tasks, --autoscale
+grows/shrinks the roster with the queue (optional provisioning LAG in
+seconds, default 30). --fail-sweep renders the failure-rate x
+autoscale-lag tables on the parallel grid. bench-sched runs that sweep
+as a scheduler micro-benchmark and writes a BENCH_sched.json snapshot
+(engine events/s).
 
 ingest normalizes a Nextflow trace directory (trace.txt [+ samples/])
 into the crate's replay-ordered JSONL trace format.
@@ -515,13 +531,28 @@ ksegments schedule — discrete-event cluster scheduling simulator
   --instances N   concurrent workflow instances for --dag (default 4;
                   with --sweep, the swept axis: N or N1,N2,...,
                   default 2,4,8)
+  --fail-rate R   inject node failures at R per second (mean; Poisson);
+                  resident tasks requeue blamelessly with their
+                  allocation unchanged, and the node rejoins after a
+                  60 s downtime (default 0 = no failures)
+  --preempt       draw task priorities and let a high-priority arrival
+                  that cannot place evict younger low-priority tasks
+                  (evictees requeue blamelessly)
+  --autoscale [LAG]
+                  scale the roster with queue pressure: add a node
+                  (joining after LAG seconds, default 30) when the
+                  queue outgrows the live roster, retire idle
+                  autoscaled nodes when it drains
   --sweep         render throughput tables on the parallel grid over
                   several arrival rates (or, with --dag, over the
                   --instances counts); the sweep itself runs the fixed
                   roster on a fixed 2 x 32 GiB cluster — --nodes,
                   --node-gib, --arrival and --method apply to the
                   single-run modes only
-  --workers N     worker threads for --sweep (default: cores)
+  --fail-sweep    render the failure-domain tables (method x failure
+                  rate x autoscale lag) on the parallel grid
+  --workers N     worker threads for --sweep/--fail-sweep (default:
+                  cores)
 ";
 
 /// Axes shared by the independent-arrivals and DAG schedule modes.
@@ -531,10 +562,40 @@ struct SchedCliArgs {
     arrival: f64,
     policies: Vec<ksegments::sched::ReservationPolicy>,
     method: String,
+    /// Node failures per second (0 = injection off).
+    fail_rate: f64,
+    preempt: bool,
+    autoscale: Option<ksegments::sched::AutoscaleConfig>,
+}
+
+impl SchedCliArgs {
+    /// Copy the adversity flags into a scheduling config.
+    fn apply_failure_domains(&self, cfg: &mut ksegments::sched::SchedConfig) {
+        use ksegments::units::Seconds;
+        cfg.fail_mtbf = Seconds(if self.fail_rate > 0.0 { 1.0 / self.fail_rate } else { 0.0 });
+        cfg.preempt = self.preempt;
+        cfg.autoscale = self.autoscale;
+    }
+
+    /// Human-readable suffix for the run banner ("" when all off).
+    fn adversity_summary(&self) -> String {
+        let mut out = String::new();
+        if self.fail_rate > 0.0 {
+            out.push_str(&format!(" fail-rate={}/s", self.fail_rate));
+        }
+        if self.preempt {
+            out.push_str(" preempt");
+        }
+        if let Some(a) = self.autoscale {
+            out.push_str(&format!(" autoscale(lag={}s)", a.lag.0));
+        }
+        out
+    }
 }
 
 fn parse_sched_cli(args: &Args) -> Result<SchedCliArgs> {
-    use ksegments::sched::ReservationPolicy;
+    use ksegments::sched::{AutoscaleConfig, ReservationPolicy};
+    use ksegments::units::Seconds;
     let n_nodes: usize = args
         .kv
         .get("nodes")
@@ -568,7 +629,42 @@ fn parse_sched_cli(args: &Args) -> Result<SchedCliArgs> {
         .map(String::as_str)
         .unwrap_or("ksegments-selective")
         .to_string();
-    Ok(SchedCliArgs { n_nodes, node_gib, arrival, policies, method })
+    let fail_rate: f64 = args
+        .kv
+        .get("fail-rate")
+        .map(|s| s.parse())
+        .transpose()
+        .context("--fail-rate takes failures per second, e.g. 0.1")?
+        .unwrap_or(0.0);
+    if fail_rate < 0.0 || !fail_rate.is_finite() {
+        bail!("--fail-rate must be a finite rate >= 0 (failures per second)");
+    }
+    let preempt = args.flag("preempt");
+    // `--autoscale` enables with the default 30 s lag;
+    // `--autoscale SECS` overrides the provisioning lag
+    let autoscale = if let Some(s) = args.kv.get("autoscale") {
+        let lag: f64 = s
+            .parse()
+            .context("--autoscale takes an optional provisioning lag in seconds")?;
+        if lag < 0.0 || !lag.is_finite() {
+            bail!("--autoscale lag must be a finite number of seconds >= 0");
+        }
+        Some(AutoscaleConfig { lag: Seconds(lag), ..AutoscaleConfig::default() })
+    } else if args.flag("autoscale") {
+        Some(AutoscaleConfig::default())
+    } else {
+        None
+    };
+    Ok(SchedCliArgs {
+        n_nodes,
+        node_gib,
+        arrival,
+        policies,
+        method,
+        fail_rate,
+        preempt,
+        autoscale,
+    })
 }
 
 /// `schedule --dag W`: dependency-gated workflow instances.
@@ -619,21 +715,23 @@ fn cmd_schedule_dag(args: &Args, wf_name: &str) -> Result<()> {
     }
     println!(
         "schedule --dag: workflow={wf_name} instances={instances} method={} \
-         nodes={}x{}GiB arrival={}s seed={}\n",
+         nodes={}x{}GiB arrival={}s seed={}{}\n",
         cli.method,
         cli.n_nodes,
         cli.node_gib,
         cli.arrival,
-        args.seed()
+        args.seed(),
+        cli.adversity_summary(),
     );
-    for policy in cli.policies {
-        let cfg = SchedConfig {
-            policy,
+    for policy in &cli.policies {
+        let mut cfg = SchedConfig {
+            policy: *policy,
             nodes: vec![NodeSpec { mem: MemMiB::from_gib(cli.node_gib), cores: 32 }; cli.n_nodes],
             mean_interarrival: Seconds(cli.arrival),
             seed: args.seed(),
             ..SchedConfig::default()
         };
+        cli.apply_failure_domains(&mut cfg);
         let src = WorkflowSource::from_spec(&wf, args.seed(), instances);
         let mut predictor = method_by_name(&cli.method, args.fitter())?;
         let rep = schedule_workflows(src, predictor.as_mut(), &cfg);
@@ -666,6 +764,14 @@ fn cmd_schedule(args: &Args) -> Result<()> {
         println!("{}", sweep.render_summaries());
         return Ok(());
     }
+    if args.flag("fail-sweep") {
+        let sweep = ksegments::bench_harness::run_failure_sweep(args.seed(), args.workers());
+        println!("{}", sweep.render_makespan());
+        println!("{}", sweep.render_disruption());
+        println!("{}", sweep.render_wastage());
+        println!("{}", sweep.render_summaries());
+        return Ok(());
+    }
 
     let cli = parse_sched_cli(args)?;
     let frac: f64 = args
@@ -682,23 +788,25 @@ fn cmd_schedule(args: &Args) -> Result<()> {
 
     println!(
         "schedule: workflow={wf_name} method={} nodes={}x{}GiB \
-         arrival={}s frac={frac} seed={}\n",
+         arrival={}s frac={frac} seed={}{}\n",
         cli.method,
         cli.n_nodes,
         cli.node_gib,
         cli.arrival,
-        args.seed()
+        args.seed(),
+        cli.adversity_summary(),
     );
     let mut reports = Vec::new();
-    for policy in cli.policies {
-        let cfg = SchedConfig {
-            policy,
+    for policy in &cli.policies {
+        let mut cfg = SchedConfig {
+            policy: *policy,
             nodes: vec![NodeSpec { mem: MemMiB::from_gib(cli.node_gib), cores: 32 }; cli.n_nodes],
             mean_interarrival: Seconds(cli.arrival),
             seed: args.seed(),
             training_frac: frac,
             ..SchedConfig::default()
         };
+        cli.apply_failure_domains(&mut cfg);
         let mut predictor = method_by_name(&cli.method, args.fitter())?;
         let rep = schedule_trace(&trace, predictor.as_mut(), &cfg);
         println!("{}", rep.summary());
@@ -766,6 +874,17 @@ fn real_main() -> Result<()> {
         "validate-runtime" => cmd_validate_runtime(),
         "serve" => cmd_serve(&args),
         "schedule" => cmd_schedule(&args),
+        "bench-sched" => {
+            let json = ksegments::bench_harness::bench_sched_json(args.seed(), args.workers());
+            match args.kv.get("out") {
+                Some(path) => {
+                    std::fs::write(path, format!("{json}\n"))?;
+                    println!("wrote scheduler benchmark snapshot to {path}");
+                }
+                None => println!("{json}"),
+            }
+            Ok(())
+        }
         "" | "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())

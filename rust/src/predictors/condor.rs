@@ -1,0 +1,159 @@
+//! HTCondor-style retry baseline: `request_memory =
+//! ifThenElse(isUndefined(MemoryUsage), default, 3 * MemoryUsage)`.
+//!
+//! This is the classic production heuristic the paper's related work
+//! measures dynamic methods against: until a task type has run once,
+//! ask for the configured default; afterwards ask for **three times
+//! the most recently observed peak** (`MemoryUsage` in the ClassAd).
+//! Failed attempts are handled like a periodic-release policy — the
+//! job goes back to the queue with the request bumped to three times
+//! the usage at the kill instant, so a genuinely underpredicted task
+//! converges in one retry at the cost of enormous headroom.
+//!
+//! The 3× factor makes this an interesting scheduling baseline: it
+//! almost never OOMs, but its wastage and packing density are terrible
+//! — exactly the trade-off the failure-domain sweeps quantify.
+
+use crate::trace::TaskRun;
+use crate::units::MemMiB;
+
+use super::history::HistoryMap;
+use super::{Allocation, Defaults, FailureInfo, MemoryPredictor, MIN_ALLOC_MIB};
+
+/// Multiplier applied to the last observed peak (HTCondor's canonical
+/// `3 * MemoryUsage` idiom).
+pub const CONDOR_FACTOR: f64 = 3.0;
+
+/// HTCondor `3 * MemoryUsage` baseline (see module docs).
+#[derive(Debug)]
+pub struct CondorTriple {
+    defaults: Defaults,
+    histories: HistoryMap,
+}
+
+impl Default for CondorTriple {
+    fn default() -> Self {
+        CondorTriple::new()
+    }
+}
+
+impl CondorTriple {
+    pub fn new() -> CondorTriple {
+        CondorTriple {
+            defaults: Defaults::default(),
+            // only the latest peak is ever read, but a short window
+            // keeps the memory profile flat on long streams
+            histories: HistoryMap::new(1024, 1),
+        }
+    }
+}
+
+impl MemoryPredictor for CondorTriple {
+    fn name(&self) -> String {
+        "HTCondor 3x".to_string()
+    }
+
+    fn prime(&mut self, task_type: &str, default: MemMiB) {
+        self.defaults.set(task_type, default);
+    }
+
+    fn predict(&mut self, task_type: &str, _input_mib: f64) -> Allocation {
+        let mib = match self.histories.get(task_type).and_then(|h| h.peaks().last()) {
+            // MemoryUsage is defined: 3 × the most recent peak
+            Some(&peak) => (CONDOR_FACTOR * peak).max(MIN_ALLOC_MIB),
+            // isUndefined(MemoryUsage): the submit-file default
+            None => self.defaults.get(task_type).0,
+        };
+        Allocation::Static(MemMiB(mib))
+    }
+
+    fn on_failure(
+        &mut self,
+        _task_type: &str,
+        _input_mib: f64,
+        failed: &Allocation,
+        info: &FailureInfo,
+    ) -> Allocation {
+        // periodic release: requeue at 3 × the usage that killed the
+        // attempt (never below what just failed — usage at the kill
+        // instant can undershoot the true peak on noisy curves)
+        let bumped = (CONDOR_FACTOR * info.used_mib).max(failed.max_value()).max(MIN_ALLOC_MIB);
+        Allocation::Static(MemMiB(bumped))
+    }
+
+    fn observe(&mut self, run: &TaskRun) {
+        self.histories.push(run);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::UsageSeries;
+    use crate::units::Seconds;
+
+    fn run(ty: &str, peak: f64, seq: u64) -> TaskRun {
+        TaskRun {
+            task_type: ty.into(),
+            input_mib: 10.0,
+            runtime: Seconds(4.0),
+            series: UsageSeries::new(2.0, vec![peak / 2.0, peak]),
+            seq,
+        }
+    }
+
+    #[test]
+    fn undefined_memory_usage_falls_back_to_default() {
+        let mut p = CondorTriple::new();
+        p.prime("wf/a", MemMiB(2048.0));
+        assert_eq!(p.predict("wf/a", 1.0), Allocation::Static(MemMiB(2048.0)));
+    }
+
+    #[test]
+    fn defined_memory_usage_triples_the_latest_peak() {
+        let mut p = CondorTriple::new();
+        p.prime("wf/a", MemMiB(2048.0));
+        p.observe(&run("wf/a", 400.0, 0));
+        assert_eq!(p.predict("wf/a", 1.0), Allocation::Static(MemMiB(1200.0)));
+        // the LATEST observation wins, not the max
+        p.observe(&run("wf/a", 100.0, 1));
+        assert_eq!(p.predict("wf/a", 1.0), Allocation::Static(MemMiB(300.0)));
+    }
+
+    #[test]
+    fn failure_retries_at_triple_usage() {
+        let mut p = CondorTriple::new();
+        let failed = Allocation::Static(MemMiB(500.0));
+        let next = p.on_failure("wf/a", 1.0, &failed, &FailureInfo::oom(2.0, 600.0, 1));
+        assert_eq!(next, Allocation::Static(MemMiB(1800.0)));
+    }
+
+    #[test]
+    fn failure_never_shrinks_below_the_failed_request() {
+        let mut p = CondorTriple::new();
+        // usage at the kill instant (120) × 3 < the 500 that failed
+        let failed = Allocation::Static(MemMiB(500.0));
+        let next = p.on_failure("wf/a", 1.0, &failed, &FailureInfo::oom(2.0, 120.0, 1));
+        assert_eq!(next, Allocation::Static(MemMiB(500.0)));
+    }
+
+    #[test]
+    fn floor_applies_to_tiny_peaks() {
+        let mut p = CondorTriple::new();
+        p.observe(&run("wf/a", 10.0, 0));
+        match p.predict("wf/a", 1.0) {
+            Allocation::Static(m) => assert_eq!(m.0, MIN_ALLOC_MIB),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn types_are_independent() {
+        let mut p = CondorTriple::new();
+        p.prime("wf/a", MemMiB(1000.0));
+        p.prime("wf/b", MemMiB(2000.0));
+        p.observe(&run("wf/a", 600.0, 0));
+        assert_eq!(p.predict("wf/a", 1.0), Allocation::Static(MemMiB(1800.0)));
+        assert_eq!(p.predict("wf/b", 1.0), Allocation::Static(MemMiB(2000.0)));
+    }
+}

@@ -86,7 +86,7 @@ mod tests {
     fn failure_doubles() {
         let mut p = DefaultConfigPredictor::new();
         let failed = Allocation::Static(MemMiB(100.0));
-        let info = FailureInfo { time_s: 1.0, used_mib: 150.0, attempt: 1 };
+        let info = FailureInfo::oom(1.0, 150.0, 1);
         let next = p.on_failure("wf/a", 1.0, &failed, &info);
         assert_eq!(next, Allocation::Static(MemMiB(200.0)));
     }

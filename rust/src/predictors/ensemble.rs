@@ -397,7 +397,7 @@ mod tests {
     #[test]
     fn failure_doubles_capped() {
         let mut p = EnsemblePredictor::new();
-        let info = FailureInfo { time_s: 1.0, used_mib: 900.0, attempt: 1 };
+        let info = FailureInfo::oom(1.0, 900.0, 1);
         let next = p.on_failure("t", 1.0, &Allocation::Static(MemMiB(600.0)), &info);
         assert_eq!(next, Allocation::Static(MemMiB(1200.0)));
         let huge = p.on_failure("t", 1.0, &Allocation::Static(MemMiB::from_gib(100.0)), &info);

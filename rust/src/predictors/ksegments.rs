@@ -325,7 +325,7 @@ mod tests {
         let Allocation::Dynamic(f) = &alloc else { panic!() };
         let t_fail = f.bounds()[1] * 0.9; // inside segment 1
         let before = f.values().to_vec();
-        let info = FailureInfo { time_s: t_fail, used_mib: before[1] + 1.0, attempt: 1 };
+        let info = FailureInfo::oom(t_fail, before[1] + 1.0, 1);
         let Allocation::Dynamic(g) = p.on_failure("t", 400.0, &alloc, &info) else {
             panic!()
         };
@@ -343,7 +343,7 @@ mod tests {
         let Allocation::Dynamic(f) = &alloc else { panic!() };
         let before = f.values().to_vec();
         let t_fail = f.bounds()[1] * 0.9;
-        let info = FailureInfo { time_s: t_fail, used_mib: before[1] + 1.0, attempt: 1 };
+        let info = FailureInfo::oom(t_fail, before[1] + 1.0, 1);
         let Allocation::Dynamic(g) = p.on_failure("t", 400.0, &alloc, &info) else {
             panic!()
         };
@@ -364,11 +364,7 @@ mod tests {
         let alloc = p.predict("t", 400.0);
         let Allocation::Dynamic(f) = &alloc else { panic!() };
         // usage wildly above 2x the segment value
-        let info = FailureInfo {
-            time_s: f.bounds()[0] * 0.5,
-            used_mib: f.values()[0] * 10.0,
-            attempt: 1,
-        };
+        let info = FailureInfo::oom(f.bounds()[0] * 0.5, f.values()[0] * 10.0, 1);
         let next = p.on_failure("t", 400.0, &alloc, &info);
         assert!(next.value_at(info.time_s) > info.used_mib);
     }
@@ -378,7 +374,7 @@ mod tests {
         let mut p = KSegmentsPredictor::native(4, RetryStrategy::Partial);
         p.prime("t", MemMiB(1000.0));
         let alloc = p.predict("t", 50.0);
-        let info = FailureInfo { time_s: 3.0, used_mib: 1500.0, attempt: 1 };
+        let info = FailureInfo::oom(3.0, 1500.0, 1);
         let next = p.on_failure("t", 50.0, &alloc, &info);
         assert_eq!(next, Allocation::Static(MemMiB(2000.0)));
     }

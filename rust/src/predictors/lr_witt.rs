@@ -200,7 +200,7 @@ mod tests {
     #[test]
     fn failure_doubles_capped() {
         let mut p = LrWittPredictor::paper_baseline();
-        let info = FailureInfo { time_s: 0.0, used_mib: 0.0, attempt: 1 };
+        let info = FailureInfo::oom(0.0, 0.0, 1);
         let next = p.on_failure("t", 1.0, &Allocation::Static(MemMiB(300.0)), &info);
         assert_eq!(next, Allocation::Static(MemMiB(600.0)));
     }

@@ -10,12 +10,14 @@
 //! | [`ksegments::KSegmentsPredictor`] | the paper's k-Segments (Selective / Partial retry) |
 //! | [`ensemble::EnsemblePredictor`] | Sizey-style scored ensemble of static sub-models (arXiv 2407.16353) |
 //! | [`dynseg::DynSegPredictor`] | KS+-style data-driven dynamic segmentation (arXiv 2408.12290) |
+//! | [`condor::CondorTriple`] | HTCondor `3 * MemoryUsage` retry heuristic (production baseline) |
 //!
 //! All predictors implement [`MemoryPredictor`]: an **online** contract
 //! — `predict` before each execution, `on_failure` per failed attempt,
 //! `observe` after each successful completion.
 
 pub mod adaptive_k;
+pub mod condor;
 pub mod default_config;
 pub mod dynseg;
 pub mod ensemble;
@@ -76,15 +78,61 @@ impl Allocation {
     }
 }
 
-/// What the simulator reports when an attempt under-allocates.
+/// Why an attempt was killed. Only [`FailureCause::Oom`] is the
+/// predictor's fault; the other causes are cluster adversity and must
+/// NOT escalate the estimate (the blameless-requeue rule — see
+/// DESIGN.md §11). The scheduler enforces this by construction: it
+/// calls [`MemoryPredictor::on_failure`] only for `Oom` kills, and the
+/// cause rides along in [`FailureInfo`] so any custom harness can do
+/// the same.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FailureCause {
+    /// Ground-truth usage exceeded the allocation — a genuine
+    /// underprediction the retry must correct.
+    #[default]
+    Oom,
+    /// The node hosting the attempt was lost; the allocation was fine.
+    NodeLost,
+    /// Evicted to make room for a higher-priority task.
+    Preempted,
+}
+
+impl FailureCause {
+    /// True for causes that are not the predictor's fault: the retry
+    /// keeps the same allocation and attempt number.
+    pub fn is_blameless(self) -> bool {
+        !matches!(self, FailureCause::Oom)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FailureCause::Oom => "oom",
+            FailureCause::NodeLost => "node-lost",
+            FailureCause::Preempted => "preempted",
+        }
+    }
+}
+
+/// What the simulator reports when an attempt is killed.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FailureInfo {
-    /// Time into the attempt at which `used > allocated`.
+    /// Time into the attempt at which the kill landed (for OOM: the
+    /// instant `used > allocated`).
     pub time_s: f64,
-    /// Usage at the failure instant (MiB).
+    /// Usage at the kill instant (MiB).
     pub used_mib: f64,
     /// 1-based index of the failed attempt.
     pub attempt: u32,
+    /// Why the attempt died.
+    pub cause: FailureCause,
+}
+
+impl FailureInfo {
+    /// A genuine under-allocation failure — the only cause for which
+    /// the scheduler invokes `on_failure`.
+    pub fn oom(time_s: f64, used_mib: f64, attempt: u32) -> FailureInfo {
+        FailureInfo { time_s, used_mib, attempt, cause: FailureCause::Oom }
+    }
 }
 
 /// The online predictor contract shared by the paper's method and all
@@ -115,7 +163,9 @@ pub trait MemoryPredictor: Send {
     fn predict(&mut self, task_type: &str, input_mib: f64) -> Allocation;
 
     /// The previous attempt failed (under-allocation at `info`);
-    /// produce the allocation for the retry.
+    /// produce the allocation for the retry. The scheduler only calls
+    /// this for [`FailureCause::Oom`] — blameless kills (node loss,
+    /// preemption) requeue with the allocation unchanged.
     fn on_failure(
         &mut self,
         task_type: &str,

@@ -223,7 +223,7 @@ mod tests {
     #[test]
     fn node_max_failure_policy() {
         let mut p = PpmPredictor::original();
-        let info = FailureInfo { time_s: 1.0, used_mib: 2000.0, attempt: 1 };
+        let info = FailureInfo::oom(1.0, 2000.0, 1);
         let next = p.on_failure("t", 1.0, &Allocation::Static(MemMiB(1000.0)), &info);
         assert_eq!(next, Allocation::Static(MemMiB::from_gib(128.0)));
     }
@@ -231,7 +231,7 @@ mod tests {
     #[test]
     fn double_failure_policy_caps_at_node_max() {
         let mut p = PpmPredictor::improved();
-        let info = FailureInfo { time_s: 1.0, used_mib: 2000.0, attempt: 1 };
+        let info = FailureInfo::oom(1.0, 2000.0, 1);
         let next = p.on_failure("t", 1.0, &Allocation::Static(MemMiB(1000.0)), &info);
         assert_eq!(next, Allocation::Static(MemMiB(2000.0)));
         let huge = p.on_failure("t", 1.0, &Allocation::Static(MemMiB::from_gib(100.0)), &info);

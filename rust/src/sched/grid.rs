@@ -1,19 +1,21 @@
 //! Parallel scheduling sweeps on the same worker pool as the
 //! evaluation grid: [`SchedGrid`] over (policy × predictor × cluster
-//! size × arrival rate) for independent arrivals, and [`DagGrid`] over
+//! size × arrival rate) for independent arrivals, [`DagGrid`] over
 //! (policy × predictor × cluster size × concurrent-workflow count) for
-//! dependency-gated workflow instances.
+//! dependency-gated workflow instances, and [`FailureGrid`] over
+//! (predictor × failure rate × autoscale lag) for the failure-domain
+//! adversity sweeps.
 //!
-//! Both mirror [`crate::sim::parallel::EvalGrid`]: cells are
-//! enumerated in a canonical policy-major order and executed via
+//! All mirror [`crate::sim::parallel::EvalGrid`]: cells are
+//! enumerated in a canonical major order and executed via
 //! [`parallel_map`]; every cell builds a fresh predictor and a fresh
 //! cluster (and, for [`DagGrid`], regenerates its instances from the
 //! seed), so results are bit-identical for any worker count.
 
 use crate::cluster::NodeSpec;
 use crate::sched::{
-    schedule_trace, schedule_workflows, ReservationPolicy, SchedConfig, SchedReport,
-    WorkflowSource,
+    schedule_trace, schedule_workflows, AutoscaleConfig, ReservationPolicy, SchedConfig,
+    SchedReport, WorkflowSource,
 };
 use crate::sim::{parallel_map, PredictorFactory};
 use crate::trace::Trace;
@@ -276,6 +278,132 @@ impl<'a> DagGrid<'a> {
     }
 }
 
+/// Index triple identifying one cell of a [`FailureGrid`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FailureCell {
+    pub method_idx: usize,
+    /// Index into the failure-rate axis (`fail_rates`).
+    pub rate_idx: usize,
+    /// Index into the autoscale-lag axis (`lags`).
+    pub lag_idx: usize,
+}
+
+/// The failure-domain sweep: predictor factories × node-failure rates
+/// × autoscale lags, at a fixed reservation policy. A rate of `0`
+/// disables injection (the control column); a lag of `None` disables
+/// the autoscaler (the fixed-roster control row).
+pub struct FailureGrid<'a> {
+    methods: Vec<PredictorFactory>,
+    traces: &'a [Trace],
+    /// Failures per second; `0.0` = injection off.
+    fail_rates: Vec<f64>,
+    /// Autoscaler provisioning lag in seconds; `None` = autoscaler off.
+    lags: Vec<Option<f64>>,
+    base: SchedConfig,
+    node_spec: NodeSpec,
+    n_nodes: usize,
+}
+
+/// Results of a [`FailureGrid`] run, in [`FailureGrid::cells`] order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FailureGridResults {
+    pub cells: Vec<FailureCell>,
+    pub reports: Vec<SchedReport>,
+}
+
+impl FailureGridResults {
+    /// Report of one cell by axis indices.
+    pub fn report(
+        &self,
+        method_idx: usize,
+        rate_idx: usize,
+        lag_idx: usize,
+    ) -> Option<&SchedReport> {
+        self.cells
+            .iter()
+            .position(|c| {
+                c.method_idx == method_idx && c.rate_idx == rate_idx && c.lag_idx == lag_idx
+            })
+            .map(|i| &self.reports[i])
+    }
+}
+
+impl<'a> FailureGrid<'a> {
+    pub fn new(
+        methods: Vec<PredictorFactory>,
+        traces: &'a [Trace],
+        fail_rates: Vec<f64>,
+        lags: Vec<Option<f64>>,
+    ) -> Self {
+        assert!(!methods.is_empty(), "grid needs at least one predictor factory");
+        assert!(!traces.is_empty(), "grid needs at least one trace");
+        assert!(!fail_rates.is_empty(), "grid needs at least one failure rate");
+        assert!(!lags.is_empty(), "grid needs at least one autoscale lag");
+        FailureGrid {
+            methods,
+            traces,
+            fail_rates,
+            lags,
+            base: SchedConfig::default(),
+            node_spec: NodeSpec::paper_testbed(),
+            n_nodes: 2,
+        }
+    }
+
+    /// Override the per-cell config template, node spec, and base
+    /// roster size.
+    pub fn with_base(mut self, base: SchedConfig, node_spec: NodeSpec, n_nodes: usize) -> Self {
+        self.base = base;
+        self.node_spec = node_spec;
+        self.n_nodes = n_nodes.max(1);
+        self
+    }
+
+    pub fn n_cells(&self) -> usize {
+        self.methods.len() * self.fail_rates.len() * self.lags.len()
+    }
+
+    /// Canonical method-major cell order (then rate, then lag).
+    pub fn cells(&self) -> Vec<FailureCell> {
+        let mut out = Vec::with_capacity(self.n_cells());
+        for method_idx in 0..self.methods.len() {
+            for rate_idx in 0..self.fail_rates.len() {
+                for lag_idx in 0..self.lags.len() {
+                    out.push(FailureCell { method_idx, rate_idx, lag_idx });
+                }
+            }
+        }
+        out
+    }
+
+    fn cell_config(&self, c: FailureCell) -> SchedConfig {
+        let rate = self.fail_rates[c.rate_idx];
+        SchedConfig {
+            nodes: vec![self.node_spec; self.n_nodes],
+            fail_mtbf: Seconds(if rate > 0.0 { 1.0 / rate } else { 0.0 }),
+            autoscale: self.lags[c.lag_idx]
+                .map(|lag| AutoscaleConfig { lag: Seconds(lag), ..AutoscaleConfig::default() }),
+            ..self.base.clone()
+        }
+    }
+
+    /// Execute every cell on `workers` threads; per-trace reports are
+    /// merged in trace order within each cell.
+    pub fn run(&self, workers: usize) -> FailureGridResults {
+        let cells = self.cells();
+        let reports = parallel_map(cells.len(), workers, |i| {
+            let c = cells[i];
+            let cfg = self.cell_config(c);
+            SchedReport::merged(self.traces.iter().map(|trace| {
+                let mut predictor = (self.methods[c.method_idx])();
+                schedule_trace(trace, predictor.as_mut(), &cfg)
+            }))
+            .expect("at least one trace per cell")
+        });
+        FailureGridResults { cells, reports }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -435,5 +563,74 @@ mod tests {
         assert_eq!(r.n_nodes, 2);
         assert_eq!(r.mean_interarrival_s, 8.0);
         assert!(res.report(5, 0, 0, 0).is_none());
+    }
+
+    #[test]
+    fn failure_grid_cell_order_and_config_wiring() {
+        let traces = vec![toy_trace("a/x", 20)];
+        let methods: Vec<PredictorFactory> = vec![
+            Box::new(|| Box::new(DefaultConfigPredictor::new())),
+            Box::new(|| Box::new(PpmPredictor::improved())),
+        ];
+        let grid = FailureGrid::new(methods, &traces, vec![0.0, 0.1], vec![None, Some(7.0)]);
+        assert_eq!(grid.n_cells(), 2 * 2 * 2);
+        let cells = grid.cells();
+        assert_eq!(cells[0], FailureCell { method_idx: 0, rate_idx: 0, lag_idx: 0 });
+        assert_eq!(cells[1], FailureCell { method_idx: 0, rate_idx: 0, lag_idx: 1 });
+        assert_eq!(cells[7], FailureCell { method_idx: 1, rate_idx: 1, lag_idx: 1 });
+        // axis values reach the per-cell config: rate 0 / lag None are
+        // the controls, rate 0.1 → mtbf 10 s, lag Some(7) → autoscaler
+        let clean = grid.cell_config(cells[0]);
+        assert_eq!(clean.fail_mtbf, Seconds(0.0));
+        assert_eq!(clean.autoscale, None);
+        let harsh = grid.cell_config(cells[7]);
+        assert!((harsh.fail_mtbf.0 - 10.0).abs() < 1e-12);
+        let auto = harsh.autoscale.expect("autoscale wired through");
+        assert_eq!(auto.lag, Seconds(7.0));
+        assert_eq!(auto.queue_per_node, AutoscaleConfig::default().queue_per_node);
+        assert_eq!(auto.max_nodes, AutoscaleConfig::default().max_nodes);
+    }
+
+    #[test]
+    fn failure_grid_conserves_and_is_worker_independent() {
+        let traces = vec![toy_trace("a/x", 20), toy_trace("b/y", 20)];
+        let mut any_failures = false;
+        for seed in [11u64, 12, 13] {
+            let methods: Vec<PredictorFactory> =
+                vec![Box::new(|| Box::new(PpmPredictor::improved()))];
+            let grid = FailureGrid::new(methods, &traces, vec![0.0, 0.05], vec![None, Some(10.0)])
+                .with_base(
+                    SchedConfig { seed, fail_downtime: Seconds(5.0), ..SchedConfig::default() },
+                    NodeSpec { mem: MemMiB(4096.0), cores: 8 },
+                    2,
+                );
+            let seq = grid.run(1);
+            for workers in [4, 8] {
+                assert_eq!(grid.run(workers), seq, "seed={seed} workers={workers} diverged");
+            }
+            for (c, r) in seq.cells.iter().zip(&seq.reports) {
+                // every admission ends in exactly one outcome, even
+                // under injected node loss
+                assert_eq!(r.completed, r.submitted, "cell {c:?}");
+                assert_eq!(
+                    r.admitted,
+                    r.completed + r.oom_kills + r.grow_denials + r.preempted + r.node_lost,
+                    "cell {c:?}"
+                );
+                if c.rate_idx == 0 {
+                    assert_eq!(r.node_failures, 0, "control column saw failures: {c:?}");
+                    assert_eq!(r.node_lost, 0, "control column lost tasks: {c:?}");
+                } else {
+                    any_failures |= r.node_failures > 0;
+                }
+                if c.lag_idx == 0 {
+                    assert_eq!(r.nodes_added, 0, "autoscaler off but nodes added: {c:?}");
+                }
+            }
+            // axis lookup
+            assert!(seq.report(0, 1, 1).is_some());
+            assert!(seq.report(1, 0, 0).is_none());
+        }
+        assert!(any_failures, "no seed produced a node failure at mtbf 20s");
     }
 }

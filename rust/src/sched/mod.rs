@@ -38,26 +38,64 @@
 //!
 //! ## Event model
 //!
-//! Three event kinds flow through a deterministic heap
+//! Five event kinds flow through a deterministic heap
 //! ([`queue::EventQueue`], ordered by time → kind rank → insertion):
 //! `Finish` (completion or OOM-kill instant, precomputed against the
-//! ground-truth usage curve via [`simulate_attempt`]), then
-//! `SegmentBoundary` (grow), then `Arrival` (predict + place or
-//! enqueue) — releases are visible to everything else at the same
-//! instant. An OOM-killed attempt re-enters the queue with the
-//! predictor's escalated [`MemoryPredictor::on_failure`] allocation —
-//! the `score_run` retry loop, under real contention. Placement is
-//! FIFO with backfill: every release re-scans the wait queue in order
-//! and admits whatever fits (a later small task may jump an earlier
-//! one that does not fit yet).
+//! ground-truth usage curve via [`simulate_attempt`]), then `NodeJoin`
+//! and `NodeFail` (failure-domain lifecycle), then `SegmentBoundary`
+//! (grow), then `Arrival` (predict + place or enqueue) — releases are
+//! visible to everything else at the same instant. An OOM-killed
+//! attempt re-enters the queue with the predictor's escalated
+//! [`MemoryPredictor::on_failure`] allocation — the `score_run` retry
+//! loop, under real contention. Placement is FIFO with backfill: every
+//! release re-scans the wait queue in order and admits whatever fits
+//! (a later small task may jump an earlier one that does not fit yet).
+//!
+//! ## Failure domains
+//!
+//! Three mechanisms model the cluster losing (and regaining) capacity
+//! underneath the workload; all are off by default so existing runs
+//! are untouched:
+//!
+//! * **Node loss** (`fail_mtbf > 0`): node failures arrive as a
+//!   Poisson process on a dedicated RNG stream. A failure takes one up
+//!   node down, killing every resident attempt; victims requeue
+//!   **blamelessly** — same allocation, same attempt number, and
+//!   critically *no* [`MemoryPredictor::on_failure`] call, because the
+//!   kill carries [`FailureCause::NodeLost`], not an OOM. Escalating a
+//!   node loss as if it were a misprediction would permanently inflate
+//!   the task's allocation (the bug class this module's tests pin
+//!   down). The node rejoins after `fail_downtime`. A node-lost
+//!   workflow task has not finally completed, so its subtree stays
+//!   gated.
+//! * **Priority preemption** (`preempt`): each submission draws a
+//!   priority (high with probability `hipri_frac`). A high-priority
+//!   task that cannot place may evict enough lower-priority running
+//!   attempts (youngest first, single node, dry-run against a cloned
+//!   ledger so eviction only happens when placement then succeeds).
+//!   Victims are killed blamelessly with [`FailureCause::Preempted`]
+//!   and requeued *after* the preemptor places.
+//! * **Autoscaling** (`autoscale`): queue pressure above
+//!   `queue_per_node` waiting tasks per effective node provisions a
+//!   new node (it joins `lag` seconds later); an empty queue retires
+//!   one idle autoscaled node. Base-roster nodes never retire, which
+//!   preserves the termination guarantee (`node_max` is snapshotted
+//!   from the base roster and every allocation is clamped to it).
 //!
 //! ## Invariants
 //!
 //! * same seed + same trace ⇒ bit-identical [`SchedReport`] (the heap
-//!   tie-breaks on insertion order; there is no other nondeterminism);
-//! * `completed == submitted` (retry escalation forces termination);
-//! * `admitted == completed + oom_kills + grow_denials`;
+//!   tie-breaks on insertion order; failure, priority, and arrival
+//!   draws come from independently forked RNG streams; there is no
+//!   other nondeterminism);
+//! * `completed == submitted` (retry escalation forces termination;
+//!   blameless kills never consume retry budget but arrivals, failure
+//!   injections, and preemptors are all finite);
+//! * `admitted == completed + oom_kills + grow_denials + preempted +
+//!   node_lost`;
 //! * `placement_attempts == admitted + rejected`;
+//! * the predictor's `on_failure` fires **only** for
+//!   [`FailureCause::Oom`];
 //! * the cluster is empty when the simulation ends.
 //!
 //! ## Streaming arrivals
@@ -101,12 +139,15 @@ pub mod queue;
 mod report;
 pub mod workflow;
 
-pub use grid::{DagCell, DagGrid, DagGridResults, SchedCell, SchedGrid, SchedGridResults};
+pub use grid::{
+    DagCell, DagGrid, DagGridResults, FailureCell, FailureGrid, FailureGridResults, SchedCell,
+    SchedGrid, SchedGridResults,
+};
 pub use queue::{EventQueue, SchedEvent};
 pub use report::{SchedReport, STRAGGLER_FACTOR};
 pub use workflow::{DagTask, WorkflowInstance, WorkflowSource};
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::rc::Rc;
 
 use anyhow::Result;
@@ -115,7 +156,7 @@ use crate::cluster::{Cluster, NodeSpec, Reservation, TimeProfile};
 use crate::engine::{EngineEvent, EventLog};
 use crate::ingest::TraceSource;
 use crate::ml::step_fn::StepFunction;
-use crate::predictors::{Allocation, MemoryPredictor};
+use crate::predictors::{Allocation, FailureCause, MemoryPredictor};
 use crate::rng::Rng;
 use crate::sim::{simulate_attempt, AttemptOutcome};
 use crate::trace::{TaskRun, Trace};
@@ -151,6 +192,25 @@ impl ReservationPolicy {
     }
 }
 
+/// Autoscaler policy: queue-pressure-driven node add/remove with a
+/// provisioning lag (cloud VMs do not boot instantly).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AutoscaleConfig {
+    /// Delay between deciding to add a node and it joining the roster.
+    pub lag: Seconds,
+    /// Scale up when more than this many tasks wait per effective
+    /// (up + provisioning) node.
+    pub queue_per_node: usize,
+    /// Lifetime cap on the roster size (base + autoscaled − retired).
+    pub max_nodes: usize,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig { lag: Seconds(30.0), queue_per_node: 4, max_nodes: 8 }
+    }
+}
+
 /// Scheduler parameters.
 #[derive(Debug, Clone)]
 pub struct SchedConfig {
@@ -174,6 +234,22 @@ pub struct SchedConfig {
     pub max_attempts: u32,
     /// Event-log ring cap (0 = unbounded).
     pub event_log_cap: usize,
+    /// Mean time between injected node failures; `<= 0` disables
+    /// failure injection. The CLI exposes this as `--fail-rate R`
+    /// (failures per second, mtbf = 1/R).
+    pub fail_mtbf: Seconds,
+    /// How long a failed node stays down before rejoining.
+    pub fail_downtime: Seconds,
+    /// Hard cap on injected failures (termination backstop for soak
+    /// configs with extreme rates).
+    pub max_node_failures: u64,
+    /// Enable priority preemption.
+    pub preempt: bool,
+    /// Probability a submission is high-priority (only drawn when
+    /// `preempt` is set, so disabled runs consume no RNG).
+    pub hipri_frac: f64,
+    /// Queue-pressure autoscaler; `None` keeps the roster fixed.
+    pub autoscale: Option<AutoscaleConfig>,
 }
 
 impl Default for SchedConfig {
@@ -187,6 +263,12 @@ impl Default for SchedConfig {
             training_frac: 0.5,
             max_attempts: 40,
             event_log_cap: 10_000,
+            fail_mtbf: Seconds(0.0),
+            fail_downtime: Seconds(60.0),
+            max_node_failures: 10_000,
+            preempt: false,
+            hipri_frac: 0.1,
+            autoscale: None,
         }
     }
 }
@@ -218,6 +300,8 @@ struct Pending {
     enqueued_at: f64,
     /// DAG mode: the workflow task this attempt executes.
     wf: Option<WfRef>,
+    /// Preemption priority (0 = normal; higher may evict lower).
+    priority: u8,
 }
 
 /// An admitted attempt occupying cluster memory.
@@ -239,6 +323,12 @@ struct Running {
     final_attempt: bool,
     /// DAG mode: the workflow task this attempt executes.
     wf: Option<WfRef>,
+    /// Preemption priority (0 = normal; higher may evict lower).
+    priority: u8,
+    /// The pending request reserved the full peak (StaticPeak policy
+    /// or post-grow-denial); a blameless requeue must restore this so
+    /// the re-placed attempt keeps its reservation shape.
+    reserve_static: bool,
 }
 
 /// Release-gating state of one arrived workflow instance.
@@ -328,6 +418,21 @@ struct Sim<'a> {
     log: EventLog,
     /// Arrived workflow instances (DAG mode; empty otherwise).
     dag: Vec<InstanceState>,
+    /// Failure-injection stream (forked from the seed; untouched when
+    /// injection is off, so legacy runs consume the same draws).
+    fail_rng: Rng,
+    /// Priority stream (only drawn when `cfg.preempt`).
+    pri_rng: Rng,
+    /// Nodes `0..n_base_nodes` are the configured roster; only nodes
+    /// at indices past this (autoscaled) may retire.
+    n_base_nodes: usize,
+    /// Autoscaled nodes added but not yet joined.
+    provisioning: BTreeSet<usize>,
+    /// Failure events injected so far (capped by `max_node_failures`).
+    failures_scheduled: u64,
+    /// The arrival feed still has items (failure injection stops
+    /// re-arming once all work is done, so the event loop terminates).
+    arrivals_open: bool,
 }
 
 impl Sim<'_> {
@@ -350,6 +455,9 @@ impl Sim<'_> {
 
         let mut placed: Option<Reservation> = None;
         for i in 0..self.cluster.n_nodes() {
+            if !self.cluster.nodes()[i].is_up() {
+                continue; // down/retired nodes are invisible, not probes
+            }
             let cap = self.cluster.nodes()[i].spec.mem.0;
             if !self.ledgers[i].fits(&profile, cap) {
                 self.cluster.node_mut(i).rejected += 1;
@@ -408,13 +516,15 @@ impl Sim<'_> {
                 outcome,
                 final_attempt: p.final_attempt,
                 wf: p.wf,
+                priority: p.priority,
+                reserve_static: p.reserve_static,
             },
         );
         true
     }
 
     fn place_or_queue(&mut self, p: Pending, now: f64) {
-        if !self.try_place(&p, now) {
+        if !self.try_place(&p, now) && !self.try_preempt_place(&p, now) {
             self.log.push(EngineEvent::Queued {
                 task_type: p.run.task_type.clone(),
                 seq: p.run.seq,
@@ -426,14 +536,233 @@ impl Sim<'_> {
 
     /// FIFO with backfill: try every waiting attempt in order. One pass
     /// suffices — placements only shrink capacity during the pass.
+    /// (Preemption victims evicted mid-pass append to `self.waiting`
+    /// and are picked up by the same `pop_front` loop.)
     fn drain(&mut self, now: f64) {
         let mut still = VecDeque::with_capacity(self.waiting.len());
         while let Some(p) = self.waiting.pop_front() {
-            if !self.try_place(&p, now) {
+            if !self.try_place(&p, now) && !self.try_preempt_place(&p, now) {
                 still.push_back(p);
             }
         }
         self.waiting = still;
+    }
+
+    /// Kill a running attempt through no fault of its own (node loss
+    /// or preemption): release everything it holds, waste its
+    /// reservation integral (a killed attempt produced nothing), and
+    /// hand back a Pending with the SAME allocation and attempt
+    /// number. The predictor is never told — `on_failure` escalation
+    /// is reserved for genuine OOMs ([`FailureCause::Oom`]); treating
+    /// a blameless kill as a misprediction would permanently inflate
+    /// the task's allocation.
+    ///
+    /// The caller decides when to requeue the returned Pending (node
+    /// loss requeues immediately; preemption requeues only after the
+    /// preemptor has placed, so victims cannot re-grab the freed
+    /// memory first).
+    fn kill_blameless(&mut self, exec: u64, cause: FailureCause, now: f64) -> Pending {
+        let r = self.running.remove(&exec).expect("blameless kill of a non-running exec");
+        let elapsed = now - r.start;
+        let held_mibs = match &r.res_alloc {
+            Allocation::Static(m) => m.0 * elapsed,
+            Allocation::Dynamic(f) => f.integral(elapsed),
+        };
+        self.report.total_wastage += GbSeconds(MemMiB(held_mibs).as_gb());
+        self.cluster.release(r.reservation);
+        self.ledgers[r.reservation.node_idx].subtract_profile(&r.profile);
+        match cause {
+            FailureCause::NodeLost => {
+                self.report.node_lost += 1;
+                self.log.push(EngineEvent::NodeLost {
+                    task_type: r.run.task_type.clone(),
+                    seq: r.run.seq,
+                    attempt: r.attempt,
+                    node: r.reservation.node_idx,
+                    time_s: now,
+                });
+            }
+            FailureCause::Preempted => {
+                self.report.preempted += 1;
+                self.log.push(EngineEvent::Preempted {
+                    task_type: r.run.task_type.clone(),
+                    seq: r.run.seq,
+                    attempt: r.attempt,
+                    node: r.reservation.node_idx,
+                    time_s: now,
+                });
+            }
+            FailureCause::Oom => unreachable!("OOM kills resolve through on_finish"),
+        }
+        Pending {
+            run: r.run,
+            attempt: r.attempt,
+            alloc: r.pred_alloc,
+            reserve_static: r.reserve_static,
+            final_attempt: r.final_attempt,
+            enqueued_at: now,
+            wf: r.wf,
+            priority: r.priority,
+        }
+    }
+
+    /// Arm the next injected node failure. Re-armed only while work
+    /// remains (open arrivals, running, or queued tasks) so the event
+    /// loop cannot chase an infinite failure chain past the workload.
+    fn schedule_next_failure(&mut self, now: f64) {
+        if self.cfg.fail_mtbf.0 <= 0.0
+            || self.failures_scheduled >= self.cfg.max_node_failures
+            || !(self.arrivals_open || !self.running.is_empty() || !self.waiting.is_empty())
+        {
+            return;
+        }
+        self.failures_scheduled += 1;
+        let gap = -(1.0 - self.fail_rng.f64()).ln() * self.cfg.fail_mtbf.0;
+        self.events.push(now + gap, SchedEvent::NodeFail);
+    }
+
+    /// An injected node loss fires: draw the victim among the nodes
+    /// that are up *now* (the roster may have changed since the event
+    /// was scheduled), take it down, blamelessly kill its residents,
+    /// and schedule both the rejoin and the next failure.
+    fn on_node_fail(&mut self, now: f64) {
+        let up: Vec<usize> =
+            (0..self.cluster.n_nodes()).filter(|&i| self.cluster.nodes()[i].is_up()).collect();
+        if !up.is_empty() {
+            let node = up[self.fail_rng.below(up.len() as u64) as usize];
+            self.cluster.set_down(node);
+            self.report.node_failures += 1;
+            let victims: Vec<u64> = self
+                .running
+                .iter()
+                .filter(|(_, r)| r.reservation.node_idx == node)
+                .map(|(&e, _)| e)
+                .collect();
+            self.log.push(EngineEvent::NodeFailed {
+                node,
+                killed: victims.len() as u32,
+                time_s: now,
+            });
+            let requeue: Vec<Pending> = victims
+                .into_iter()
+                .map(|exec| self.kill_blameless(exec, FailureCause::NodeLost, now))
+                .collect();
+            for p in requeue {
+                self.place_or_queue(p, now);
+            }
+            self.events
+                .push(now + self.cfg.fail_downtime.0.max(0.0), SchedEvent::NodeJoin { node });
+            self.drain(now);
+        }
+        self.schedule_next_failure(now);
+    }
+
+    /// A node comes (back) up: a post-failure rejoin or an autoscaled
+    /// node finishing provisioning. Retired nodes stay retired
+    /// ([`Cluster::set_up`] is a no-op for them).
+    fn on_node_join(&mut self, node: usize, now: f64) {
+        let was_provisioning = self.provisioning.remove(&node);
+        let was_down = !self.cluster.nodes()[node].is_up();
+        self.cluster.set_up(node);
+        if was_down && self.cluster.nodes()[node].is_up() {
+            if was_provisioning {
+                self.report.nodes_added += 1;
+            }
+            self.log.push(EngineEvent::NodeJoined { node, time_s: now });
+            self.drain(now);
+        }
+    }
+
+    /// Queue-pressure autoscaler, evaluated after every event: scale
+    /// up when the queue exceeds `queue_per_node` per effective node
+    /// (counting in-flight provisioning so one burst does not
+    /// over-provision), scale down by retiring one idle autoscaled
+    /// node when the queue is empty. Base-roster nodes never retire.
+    fn autoscale_tick(&mut self, now: f64) {
+        let Some(a) = self.cfg.autoscale else { return };
+        let effective = self.cluster.n_up() + self.provisioning.len();
+        let live = self.cluster.n_nodes() - self.report.nodes_retired as usize;
+        if !self.waiting.is_empty()
+            && self.waiting.len() > a.queue_per_node * effective.max(1)
+            && live < a.max_nodes
+        {
+            let node = self.cluster.add_node(self.cfg.nodes[0]);
+            self.ledgers.push(TimeProfile::new());
+            self.provisioning.insert(node);
+            self.events.push(now + a.lag.0.max(0.0), SchedEvent::NodeJoin { node });
+        }
+        if self.waiting.is_empty() {
+            let idle = (self.n_base_nodes..self.cluster.n_nodes()).find(|&i| {
+                self.cluster.nodes()[i].is_up()
+                    && self.cluster.nodes()[i].reserved().0 <= 1e-9
+                    && !self.running.values().any(|r| r.reservation.node_idx == i)
+            });
+            if let Some(i) = idle {
+                self.cluster.retire(i);
+                self.report.nodes_retired += 1;
+                self.log.push(EngineEvent::NodeRetired { node: i, time_s: now });
+            }
+        }
+    }
+
+    /// Last-resort placement for a high-priority request: find one up
+    /// node where evicting lower-priority running attempts (youngest
+    /// first — least work lost) frees enough ledger *and* live memory,
+    /// dry-run against a cloned ledger, and only then evict for real.
+    /// Victims requeue blamelessly after the preemptor has placed.
+    fn try_preempt_place(&mut self, p: &Pending, now: f64) -> bool {
+        if !self.cfg.preempt || p.priority == 0 {
+            return false;
+        }
+        let res_alloc = self.reservation_alloc(p);
+        let profile = planned_profile(&res_alloc, now);
+        let initial = initial_request(&res_alloc).0;
+        let mut plan: Option<Vec<u64>> = None;
+        for i in 0..self.cluster.n_nodes() {
+            if !self.cluster.nodes()[i].is_up() {
+                continue;
+            }
+            let cap = self.cluster.nodes()[i].spec.mem.0;
+            // youngest first: highest exec id = most recently placed
+            let mut victims: Vec<u64> = self
+                .running
+                .iter()
+                .filter(|(_, r)| r.reservation.node_idx == i && r.priority < p.priority)
+                .map(|(&e, _)| e)
+                .collect();
+            victims.sort_unstable_by(|a, b| b.cmp(a));
+            let mut ledger = self.ledgers[i].clone();
+            let mut freed = 0.0f64;
+            let mut take = 0usize;
+            loop {
+                let live_ok = self.cluster.nodes()[i].free().0 + freed + 1e-9 >= initial;
+                if live_ok && ledger.fits(&profile, cap) {
+                    plan = Some(victims[..take].to_vec());
+                    break;
+                }
+                if take >= victims.len() {
+                    break;
+                }
+                let v = &self.running[&victims[take]];
+                ledger.subtract_profile(&v.profile);
+                freed += v.reservation.mem.0;
+                take += 1;
+            }
+            if plan.is_some() {
+                break;
+            }
+        }
+        let Some(evict) = plan else { return false };
+        let requeue: Vec<Pending> = evict
+            .into_iter()
+            .map(|exec| self.kill_blameless(exec, FailureCause::Preempted, now))
+            .collect();
+        let placed = self.try_place(p, now);
+        debug_assert!(placed, "preemption dry-run promised a fit");
+        for v in requeue {
+            self.place_or_queue(v, now);
+        }
+        placed
     }
 
     /// Submit one run to the resource manager: predict, log, place or
@@ -450,6 +779,8 @@ impl Sim<'_> {
             seq: run.seq,
             requested: MemMiB(alloc.max_value()),
         });
+        let priority =
+            if self.cfg.preempt && self.pri_rng.f64() < self.cfg.hipri_frac { 1 } else { 0 };
         let p = Pending {
             run,
             attempt: 1,
@@ -458,6 +789,7 @@ impl Sim<'_> {
             final_attempt: false,
             enqueued_at: now,
             wf,
+            priority,
         };
         self.place_or_queue(p, now);
     }
@@ -605,6 +937,7 @@ impl Sim<'_> {
             final_attempt: r.final_attempt,
             enqueued_at: now,
             wf: r.wf,
+            priority: r.priority,
         };
         self.place_or_queue(p, now);
         self.drain(now);
@@ -620,6 +953,9 @@ impl Sim<'_> {
         let mut completed_wf: Option<WfRef> = None;
         match &r.outcome {
             AttemptOutcome::Failure { info, .. } if !r.final_attempt => {
+                // the only `on_failure` path: simulate_attempt produces
+                // OOMs exclusively; blameless kills never reach here
+                debug_assert_eq!(info.cause, FailureCause::Oom);
                 self.report.oom_kills += 1;
                 self.log.push(EngineEvent::OomKilled {
                     task_type: r.run.task_type.clone(),
@@ -653,6 +989,7 @@ impl Sim<'_> {
                     final_attempt,
                     enqueued_at: now,
                     wf: r.wf,
+                    priority: r.priority,
                 };
                 self.place_or_queue(p, now);
             }
@@ -838,8 +1175,10 @@ fn run_engine(
     cfg: &SchedConfig,
 ) -> Result<(SchedReport, EventLog)> {
     let cluster = Cluster::heterogeneous(cfg.nodes.clone());
+    // Snapshotted from the base roster: base nodes never retire and
+    // failed nodes rejoin, so clamping to this still guarantees every
+    // request is eventually placeable (termination).
     let node_max = cluster.node_max_mem();
-    let capacity = cluster.total_capacity();
     let n_nodes = cluster.n_nodes();
 
     let report = SchedReport::new(
@@ -861,6 +1200,12 @@ fn run_engine(
         report,
         log: EventLog::with_cap(cfg.event_log_cap),
         dag: Vec::new(),
+        fail_rng: Rng::new(cfg.seed).fork("node-failures"),
+        pri_rng: Rng::new(cfg.seed).fork("priorities"),
+        n_base_nodes: n_nodes,
+        provisioning: BTreeSet::new(),
+        failures_scheduled: 0,
+        arrivals_open: false,
     };
 
     // Arrival stream: exponential (or fixed) gaps, deterministic from
@@ -873,19 +1218,38 @@ fn run_engine(
     if upcoming.is_some() {
         next_arrival_t += arrival_gap(&mut rng, cfg);
         sim.events.push(next_arrival_t, SchedEvent::Arrival { task: 0 });
+        sim.arrivals_open = true;
+        sim.schedule_next_failure(0.0);
     }
 
     let mut last_t = 0.0f64;
     let mut reserved_gb = 0.0f64;
+    let mut cap_gb = sim.cluster.up_capacity().as_gb();
     let mut reserved_integral = 0.0f64;
+    let mut capacity_integral = 0.0f64;
+    // Utilization integrals snapshotted at the makespan: lifecycle
+    // events trailing the last task-driven event (a rejoin scheduled
+    // past the final completion) must not stretch the measured window.
+    let mut reserved_at_makespan = 0.0f64;
+    let mut capacity_at_makespan = 0.0f64;
     let mut makespan = 0.0f64;
     while let Some((now, ev)) = sim.events.pop() {
+        sim.report.events_processed += 1;
         reserved_integral += reserved_gb * (now - last_t);
+        capacity_integral += cap_gb * (now - last_t);
         last_t = now;
-        makespan = makespan.max(now);
+        let task_event =
+            !matches!(ev, SchedEvent::NodeFail | SchedEvent::NodeJoin { .. });
+        if task_event {
+            makespan = makespan.max(now);
+            reserved_at_makespan = reserved_integral;
+            capacity_at_makespan = capacity_integral;
+        }
         match ev {
             SchedEvent::Finish { exec } => sim.on_finish(exec, now),
             SchedEvent::SegmentBoundary { exec, segment } => sim.on_boundary(exec, segment, now),
+            SchedEvent::NodeFail => sim.on_node_fail(now),
+            SchedEvent::NodeJoin { node } => sim.on_node_join(node, now),
             SchedEvent::Arrival { .. } => {
                 match upcoming.take().expect("arrival event without a pulled item") {
                     FeedItem::Run(run) => sim.submit(Rc::new(run), None, now),
@@ -897,16 +1261,21 @@ fn run_engine(
                     sim.events
                         .push(next_arrival_t, SchedEvent::Arrival { task: arrival_ordinal });
                     upcoming = Some(next);
+                } else {
+                    sim.arrivals_open = false;
                 }
             }
         }
+        sim.autoscale_tick(now);
         reserved_gb = sim.cluster.total_reserved().as_gb();
+        let up_capacity = sim.cluster.up_capacity();
+        cap_gb = up_capacity.as_gb();
         let running_now = sim.running.len() as u64;
         if running_now > sim.report.peak_running {
             sim.report.peak_running = running_now;
         }
-        if capacity.0 > 0.0 {
-            let frac = sim.cluster.total_reserved().0 / capacity.0;
+        if up_capacity.0 > 0.0 {
+            let frac = sim.cluster.total_reserved().0 / up_capacity.0;
             if frac > sim.report.peak_util_frac {
                 sim.report.peak_util_frac = frac;
             }
@@ -920,8 +1289,8 @@ fn run_engine(
 
     let mut report = sim.report;
     report.makespan = Seconds(makespan);
-    report.reserved_integral_gbs = reserved_integral;
-    report.capacity_integral_gbs = capacity.as_gb() * makespan;
+    report.reserved_integral_gbs = reserved_at_makespan;
+    report.capacity_integral_gbs = capacity_at_makespan;
     Ok((report, sim.log))
 }
 
@@ -1012,6 +1381,7 @@ mod tests {
             training_frac: 0.0,
             max_attempts: 10,
             event_log_cap: 0,
+            ..SchedConfig::default()
         }
     }
 
@@ -1027,7 +1397,10 @@ mod tests {
         cfg.mean_interarrival = Seconds(0.0); // batch mode
         let r = schedule_trace(&trace, &mut p, &cfg);
         assert_eq!(r.completed, r.submitted);
-        assert_eq!(r.admitted, r.completed + r.oom_kills + r.grow_denials);
+        assert_eq!(
+            r.admitted,
+            r.completed + r.oom_kills + r.grow_denials + r.preempted + r.node_lost
+        );
         assert_eq!(r.placement_attempts, r.admitted + r.rejected);
         assert_eq!(r.queue_waits.len() as u64, r.admitted);
     }
@@ -1099,6 +1472,7 @@ mod tests {
             training_frac: 0.0,
             max_attempts: 10,
             event_log_cap: 0,
+            ..SchedConfig::default()
         };
         let r = schedule_trace(&trace, &mut FixedStep, &cfg);
         assert_eq!(r.completed, 2);
@@ -1324,5 +1698,219 @@ mod tests {
         assert!(r.oom_kills > 0, "undersized defaults must OOM");
         // the parent's retries push the instance past its critical path
         assert!(r.workflow_makespans[0] > r.workflow_critical_paths[0] + 1.0);
+    }
+
+    /// Records every escalation so tests can prove whether the
+    /// scheduler blamed the predictor for a kill.
+    struct Spy {
+        predict_mib: f64,
+        escalations: u32,
+    }
+    impl MemoryPredictor for Spy {
+        fn name(&self) -> String {
+            "spy".into()
+        }
+        fn prime(&mut self, _: &str, _: MemMiB) {}
+        fn predict(&mut self, _: &str, _: f64) -> Allocation {
+            Allocation::Static(MemMiB(self.predict_mib))
+        }
+        fn on_failure(&mut self, _: &str, _: f64, _: &Allocation, _: &FailureInfo) -> Allocation {
+            self.escalations += 1;
+            Allocation::Static(MemMiB(2000.0))
+        }
+        fn observe(&mut self, _: &TaskRun) {}
+    }
+
+    fn extended_identity(r: &SchedReport) {
+        assert_eq!(r.completed, r.submitted);
+        assert_eq!(
+            r.admitted,
+            r.completed + r.oom_kills + r.grow_denials + r.preempted + r.node_lost
+        );
+        assert_eq!(r.placement_attempts, r.admitted + r.rejected);
+        assert_eq!(r.queue_waits.len() as u64, r.admitted);
+    }
+
+    /// THE blameless-requeue regression: a node-lost attempt must come
+    /// back with the SAME allocation and attempt number, and the
+    /// predictor's escalation path must never fire. (The bug this
+    /// pins: treating a node loss like an OOM permanently triples the
+    /// task's allocation under retry-based baselines.)
+    #[test]
+    fn node_loss_requeues_blamelessly_without_escalation() {
+        let trace = ramp_trace(1, 400.0, 50); // one 100 s task
+        let mut p = Spy { predict_mib: 500.0, escalations: 0 };
+        let cfg = SchedConfig {
+            nodes: vec![NodeSpec { mem: MemMiB(1000.0), cores: 4 }],
+            mean_interarrival: Seconds(0.0),
+            training_frac: 0.0,
+            fail_mtbf: Seconds(5.0),
+            fail_downtime: Seconds(1.0),
+            max_node_failures: 30,
+            ..SchedConfig::default()
+        };
+        let (r, log) = schedule_trace_logged(&trace, &mut p, &cfg);
+        assert_eq!(r.completed, 1);
+        assert!(r.node_lost >= 1, "a 100 s task at mtbf 5 s must be hit at least once");
+        assert_eq!(r.oom_kills, 0);
+        assert_eq!(p.escalations, 0, "blameless kills must never reach on_failure");
+        // every re-placement kept the original 500 MiB request…
+        for e in log.iter() {
+            if let EngineEvent::Placed { reserved, .. } = e {
+                assert_eq!(*reserved, MemMiB(500.0), "blameless requeue changed the allocation");
+            }
+        }
+        // …and the task still completed on (logical) attempt 1
+        assert!(
+            log.iter().any(|e| matches!(e, EngineEvent::Completed { attempts: 1, .. })),
+            "node loss must not consume retry budget"
+        );
+        assert_eq!(r.node_failures as usize, log.iter()
+            .filter(|e| matches!(e, EngineEvent::NodeFailed { .. }))
+            .count());
+        extended_identity(&r);
+    }
+
+    /// Control for the regression above: a genuine OOM on the same
+    /// workload MUST escalate through `on_failure` exactly once.
+    #[test]
+    fn oom_kill_escalates_through_on_failure() {
+        let trace = ramp_trace(1, 400.0, 50);
+        let mut p = Spy { predict_mib: 300.0, escalations: 0 };
+        let cfg = SchedConfig {
+            nodes: vec![NodeSpec { mem: MemMiB(1000.0), cores: 4 }],
+            mean_interarrival: Seconds(0.0),
+            training_frac: 0.0,
+            ..SchedConfig::default()
+        };
+        let (r, log) = schedule_trace_logged(&trace, &mut p, &cfg);
+        assert_eq!(r.completed, 1);
+        assert_eq!(r.oom_kills, 1);
+        assert_eq!(r.node_lost, 0);
+        assert_eq!(p.escalations, 1, "an OOM must reach on_failure exactly once");
+        assert!(log.iter().any(|e| matches!(e, EngineEvent::Completed { attempts: 2, .. })));
+        extended_identity(&r);
+    }
+
+    /// Node loss keeps the dependency gate shut: a killed parent has
+    /// not finally completed, so its child stays unreleased until the
+    /// parent's re-run finishes. Seed-swept because whether a loss
+    /// lands inside a 20 s run is a property of the failure stream.
+    #[test]
+    fn node_lost_parent_keeps_subtree_gated() {
+        let mut any_loss = false;
+        for seed in 0..5 {
+            let src = WorkflowSource::from_instances(
+                vec![chain_instance(0, 500.0)],
+                vec![("w/parent".into(), MemMiB(800.0)), ("w/child".into(), MemMiB(800.0))],
+            );
+            let mut p = DefaultConfigPredictor::new();
+            let cfg = SchedConfig {
+                nodes: vec![NodeSpec { mem: MemMiB(4000.0), cores: 4 }],
+                mean_interarrival: Seconds(0.0),
+                seed,
+                fail_mtbf: Seconds(5.0),
+                fail_downtime: Seconds(1.0),
+                max_node_failures: 10,
+                ..SchedConfig::default()
+            };
+            let (r, log) = schedule_workflows_logged(src, &mut p, &cfg);
+            assert_eq!(r.workflows_completed, 1);
+            assert_eq!(r.completed, 2);
+            assert_eq!(r.oom_kills, 0);
+            extended_identity(&r);
+            any_loss |= r.node_lost > 0;
+            let parent_done = log
+                .iter()
+                .position(|e| {
+                    matches!(e, EngineEvent::Completed { task_type, .. } if task_type == "w/parent")
+                })
+                .expect("parent completes");
+            let child_released = log
+                .iter()
+                .position(|e| {
+                    matches!(e, EngineEvent::Released { task_type, .. } if task_type == "w/child")
+                })
+                .expect("child releases");
+            assert!(
+                child_released > parent_done,
+                "seed {seed}: child released before its parent finally completed"
+            );
+        }
+        assert!(any_loss, "no seed produced a node loss — failure injection is broken");
+    }
+
+    /// Preemption: high-priority arrivals evict running low-priority
+    /// work (counted separately, requeued blamelessly), and the
+    /// extended conservation identity absorbs it.
+    #[test]
+    fn preemption_evicts_low_priority_and_conserves() {
+        let mut any_preempt = false;
+        for seed in 0..5 {
+            let trace = ramp_trace(20, 900.0, 30); // 60 s tasks, whole-node
+            let mut p = Spy { predict_mib: 950.0, escalations: 0 };
+            let cfg = SchedConfig {
+                nodes: vec![NodeSpec { mem: MemMiB(1000.0), cores: 4 }],
+                mean_interarrival: Seconds(5.0),
+                seed,
+                training_frac: 0.0,
+                preempt: true,
+                hipri_frac: 0.5,
+                ..SchedConfig::default()
+            };
+            let (r, log) = schedule_trace_logged(&trace, &mut p, &cfg);
+            assert_eq!(r.completed, 20);
+            assert_eq!(p.escalations, 0, "preemption must not escalate allocations");
+            extended_identity(&r);
+            assert_eq!(
+                r.preempted as usize,
+                log.iter().filter(|e| matches!(e, EngineEvent::Preempted { .. })).count()
+            );
+            any_preempt |= r.preempted > 0;
+        }
+        assert!(any_preempt, "no seed preempted — eviction path is dead");
+    }
+
+    /// Autoscaling: queue pressure provisions nodes (after the lag),
+    /// the added capacity shortens the makespan, and idle autoscaled
+    /// nodes retire once the queue empties.
+    #[test]
+    fn autoscaler_adds_capacity_under_pressure_and_retires_idle() {
+        let trace = ramp_trace(12, 900.0, 10); // 20 s whole-node tasks
+        let mut p = Spy { predict_mib: 950.0, escalations: 0 };
+        let cfg = SchedConfig {
+            nodes: vec![NodeSpec { mem: MemMiB(1000.0), cores: 4 }],
+            mean_interarrival: Seconds(0.0), // batch: 11 queue instantly
+            training_frac: 0.0,
+            autoscale: Some(AutoscaleConfig {
+                lag: Seconds(10.0),
+                queue_per_node: 2,
+                max_nodes: 4,
+            }),
+            ..SchedConfig::default()
+        };
+        let r = schedule_trace(&trace, &mut p, &cfg);
+        assert_eq!(r.completed, 12);
+        assert!(r.nodes_added >= 1, "queue pressure must provision nodes");
+        assert!(r.nodes_added <= 3, "max_nodes caps the roster at 4");
+        assert!(r.nodes_retired >= 1, "idle autoscaled nodes must retire");
+        // serial on the base node alone: 12 × 20 s = 240 s
+        assert!(r.makespan.0 < 200.0, "autoscaled capacity must shorten the makespan");
+        extended_identity(&r);
+    }
+
+    /// With every failure-domain knob off, the report's new counters
+    /// stay zero — existing behavior is untouched.
+    #[test]
+    fn failure_domain_counters_zero_when_disabled() {
+        let trace = ramp_trace(6, 800.0, 6);
+        let mut p = OracleRamp::for_trace(&trace, "w/ramp", 3);
+        let r = schedule_trace(&trace, &mut p, &staggered_cfg(ReservationPolicy::SegmentWise));
+        assert_eq!(r.preempted, 0);
+        assert_eq!(r.node_lost, 0);
+        assert_eq!(r.node_failures, 0);
+        assert_eq!(r.nodes_added, 0);
+        assert_eq!(r.nodes_retired, 0);
+        assert!(r.events_processed > 0);
     }
 }

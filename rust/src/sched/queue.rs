@@ -2,12 +2,15 @@
 //!
 //! Events are ordered by `(time, rank, insertion order)`. The rank
 //! encodes the semantic ordering at equal timestamps: releases
-//! (`Finish`) are processed before grows (`SegmentBoundary`), which
-//! are processed before new work (`Arrival`) — freed memory is visible
-//! to everything that happens "at the same instant", which is both the
-//! packing-friendly and the reproducible choice. The insertion-order
-//! tie-breaker makes the pop order a pure function of the push
-//! sequence, so the whole simulation is deterministic.
+//! (`Finish`) are processed before node rejoins (`NodeJoin`), which
+//! are processed before node losses (`NodeFail`), then grows
+//! (`SegmentBoundary`), then new work (`Arrival`) — freed and rejoined
+//! memory is visible to everything that happens "at the same instant"
+//! (the packing-friendly and reproducible choice), a task finishing
+//! exactly when its node dies counts as finished, and a loss lands
+//! before the grows it must deny. The insertion-order tie-breaker
+//! makes the pop order a pure function of the push sequence, so the
+//! whole simulation is deterministic.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -23,6 +26,13 @@ pub enum SchedEvent {
     SegmentBoundary { exec: u64, segment: usize },
     /// Task `task` (index into the scheduled run list) arrives.
     Arrival { task: usize },
+    /// An injected node loss fires; the victim node is drawn (from the
+    /// failure RNG stream) when the event is processed, so the draw
+    /// always sees the then-current roster.
+    NodeFail,
+    /// Node `node` comes (back) up: a failed node rejoining after its
+    /// downtime, or an autoscaled node finishing provisioning.
+    NodeJoin { node: usize },
 }
 
 impl SchedEvent {
@@ -30,8 +40,10 @@ impl SchedEvent {
     fn rank(&self) -> u8 {
         match self {
             SchedEvent::Finish { .. } => 0,
-            SchedEvent::SegmentBoundary { .. } => 1,
-            SchedEvent::Arrival { .. } => 2,
+            SchedEvent::NodeJoin { .. } => 1,
+            SchedEvent::NodeFail => 2,
+            SchedEvent::SegmentBoundary { .. } => 3,
+            SchedEvent::Arrival { .. } => 4,
         }
     }
 }
@@ -139,6 +151,21 @@ mod tests {
                 other => panic!("{other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn equal_time_orders_node_events_between_finish_and_grow() {
+        let mut q = EventQueue::new();
+        q.push(2.0, SchedEvent::Arrival { task: 0 });
+        q.push(2.0, SchedEvent::SegmentBoundary { exec: 7, segment: 1 });
+        q.push(2.0, SchedEvent::NodeFail);
+        q.push(2.0, SchedEvent::NodeJoin { node: 3 });
+        q.push(2.0, SchedEvent::Finish { exec: 7 });
+        assert_eq!(q.pop().unwrap().1, SchedEvent::Finish { exec: 7 });
+        assert_eq!(q.pop().unwrap().1, SchedEvent::NodeJoin { node: 3 });
+        assert_eq!(q.pop().unwrap().1, SchedEvent::NodeFail);
+        assert_eq!(q.pop().unwrap().1, SchedEvent::SegmentBoundary { exec: 7, segment: 1 });
+        assert_eq!(q.pop().unwrap().1, SchedEvent::Arrival { task: 0 });
     }
 
     #[test]

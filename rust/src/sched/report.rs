@@ -27,7 +27,7 @@ pub const STRAGGLER_FACTOR: f64 = 2.0;
 /// * every scheduled task eventually leaves the system:
 ///   `completed == submitted`;
 /// * every admitted attempt ends exactly one way:
-///   `admitted == completed + oom_kills + grow_denials`;
+///   `admitted == completed + oom_kills + grow_denials + preempted + node_lost`;
 /// * every placement attempt either admits or rejects:
 ///   `placement_attempts == admitted + rejected`.
 #[derive(Debug, Clone, PartialEq)]
@@ -56,6 +56,21 @@ pub struct SchedReport {
     /// Attempts killed because a segment-boundary grow was denied
     /// under contention and requeued with a full-peak reservation.
     pub grow_denials: u64,
+    /// Attempts evicted by a higher-priority placement and requeued
+    /// **blamelessly** (same allocation, same attempt number).
+    pub preempted: u64,
+    /// Attempts killed because their node was lost; requeued
+    /// blamelessly like preemptions.
+    pub node_lost: u64,
+    /// Injected node-loss events (each takes one node down).
+    pub node_failures: u64,
+    /// Nodes the autoscaler brought into service (joins after lag).
+    pub nodes_added: u64,
+    /// Idle autoscaled nodes the autoscaler retired.
+    pub nodes_retired: u64,
+    /// Discrete events the engine processed — the denominator of the
+    /// scheduler events/s perf snapshot (`BENCH_sched.json`).
+    pub events_processed: u64,
     /// Maximum number of concurrently running attempts — the direct
     /// "how many tasks co-locate" packing signal.
     pub peak_running: u64,
@@ -68,7 +83,10 @@ pub struct SchedReport {
     pub queue_waits: Vec<f64>,
     /// Integral of reserved memory over time (GB·s).
     pub reserved_integral_gbs: f64,
-    /// Cluster capacity × makespan (GB·s) — the utilization denominator.
+    /// Integral of **up** cluster capacity over the run (GB·s) — the
+    /// utilization denominator. With a fixed, always-up roster this is
+    /// capacity × makespan; under failures and autoscaling the
+    /// denominator tracks the live roster.
     pub capacity_integral_gbs: f64,
     /// Peak of (reserved / capacity) over the run.
     pub peak_util_frac: f64,
@@ -111,6 +129,12 @@ impl SchedReport {
             placement_attempts: 0,
             oom_kills: 0,
             grow_denials: 0,
+            preempted: 0,
+            node_lost: 0,
+            node_failures: 0,
+            nodes_added: 0,
+            nodes_retired: 0,
+            events_processed: 0,
             peak_running: 0,
             makespan: Seconds::ZERO,
             total_wastage: GbSeconds::ZERO,
@@ -213,6 +237,12 @@ impl SchedReport {
         self.placement_attempts += other.placement_attempts;
         self.oom_kills += other.oom_kills;
         self.grow_denials += other.grow_denials;
+        self.preempted += other.preempted;
+        self.node_lost += other.node_lost;
+        self.node_failures += other.node_failures;
+        self.nodes_added += other.nodes_added;
+        self.nodes_retired += other.nodes_retired;
+        self.events_processed += other.events_processed;
         self.peak_running = self.peak_running.max(other.peak_running);
         self.makespan = self.makespan.max(other.makespan);
         self.total_wastage += other.total_wastage;
@@ -245,7 +275,7 @@ impl SchedReport {
         let mut s = format!(
             "{} · {} · {} nodes · ia={:.1}s: {}/{} done, makespan {}, \
              util {:.1}% (peak {:.1}%), peak-concurrent {}, wait mean {:.1}s p95 {:.1}s, \
-             {} oom, {} grow-denied, {} rejected, wastage {}",
+             {} oom, {} grow-denied, {} preempted, {} node-lost, {} rejected, wastage {}",
             self.policy,
             self.method,
             self.n_nodes,
@@ -260,9 +290,17 @@ impl SchedReport {
             waits.percentile(95.0),
             self.oom_kills,
             self.grow_denials,
+            self.preempted,
+            self.node_lost,
             self.rejected,
             self.total_wastage,
         );
+        if self.node_failures > 0 || self.nodes_added > 0 || self.nodes_retired > 0 {
+            s.push_str(&format!(
+                "\n  cluster: {} node failure(s), {} node(s) autoscaled in, {} retired",
+                self.node_failures, self.nodes_added, self.nodes_retired,
+            ));
+        }
         if self.workflows_submitted > 0 {
             let spans = SortedSamples::new(&self.workflow_makespans);
             s.push_str(&format!(
@@ -312,10 +350,80 @@ mod tests {
 
     #[test]
     fn empty_report_is_zero() {
+        // Satellite bugfix: every ratio metric on a degenerate report
+        // must be exactly 0.0 — never NaN/inf from a 0/0.
         let r = SchedReport::new("static-peak", "m", 1, 1.0);
         assert_eq!(r.mean_queue_wait_s(), 0.0);
         assert_eq!(r.utilization(), 0.0);
         assert_eq!(r.throughput_per_hour(), 0.0);
+        assert_eq!(r.critical_path_stretch(), 0.0);
+        assert_eq!(r.mean_workflow_makespan_s(), 0.0);
+        assert_eq!(r.queue_wait_percentile_s(95.0), 0.0);
+        assert!(r.summary().contains("0/0 done"), "empty summary must render");
+    }
+
+    #[test]
+    fn zero_makespan_merge_stays_finite() {
+        // Satellite bugfix: merging zero-duration partials (a trace
+        // whose every cell was empty) keeps makespan 0 and every
+        // derived ratio 0.0 — the 0-completed/0-makespan division is
+        // guarded, not propagated.
+        let a = SchedReport::new("segment-wise", "m", 2, 1.0);
+        let b = SchedReport::new("segment-wise", "m", 2, 1.0);
+        let m = SchedReport::merged(vec![a, b]).unwrap();
+        assert_eq!(m.makespan, Seconds::ZERO);
+        assert_eq!(m.throughput_per_hour(), 0.0);
+        assert_eq!(m.utilization(), 0.0);
+        assert_eq!(m.critical_path_stretch(), 0.0);
+        assert!(m.throughput_per_hour().is_finite());
+        assert!(m.summary().contains("makespan"), "zero-makespan summary must render");
+
+        // a zero-makespan partial merged into a real one is harmless
+        let mut real = rep(&[1.0], 5, 50.0);
+        real.merge(SchedReport::new("segment-wise", "m", 4, 5.0));
+        assert_eq!(real.makespan, Seconds(50.0));
+        assert_eq!(real.throughput_per_hour(), 360.0);
+    }
+
+    #[test]
+    fn zero_critical_path_is_skipped_not_divided() {
+        // An instance with cp == 0 must not poison the stretch mean.
+        let r = wf_rep(&[100.0, 200.0], &[0.0, 100.0], 0);
+        assert!((r.critical_path_stretch() - 2.0).abs() < 1e-12);
+        let all_zero = wf_rep(&[100.0], &[0.0], 0);
+        assert_eq!(all_zero.critical_path_stretch(), 0.0);
+        assert!(all_zero.critical_path_stretch().is_finite());
+    }
+
+    #[test]
+    fn failure_domain_counters_merge_and_render() {
+        let mut a = rep(&[1.0], 10, 100.0);
+        a.preempted = 2;
+        a.node_lost = 1;
+        a.node_failures = 1;
+        a.events_processed = 50;
+        let mut b = rep(&[2.0], 5, 80.0);
+        b.preempted = 1;
+        b.node_lost = 3;
+        b.node_failures = 2;
+        b.nodes_added = 1;
+        b.nodes_retired = 1;
+        b.events_processed = 30;
+        a.merge(b);
+        assert_eq!(a.preempted, 3);
+        assert_eq!(a.node_lost, 4);
+        assert_eq!(a.node_failures, 3);
+        assert_eq!(a.nodes_added, 1);
+        assert_eq!(a.nodes_retired, 1);
+        assert_eq!(a.events_processed, 80);
+        let s = a.summary();
+        assert!(s.contains("3 preempted"), "{s}");
+        assert!(s.contains("4 node-lost"), "{s}");
+        assert!(s.contains("3 node failure(s)"), "{s}");
+
+        // without failure-domain activity the cluster line is absent
+        let plain = rep(&[1.0], 5, 50.0).summary();
+        assert!(!plain.contains("cluster:"), "{plain}");
     }
 
     #[test]

@@ -58,7 +58,7 @@ pub fn simulate_attempt(series: &UsageSeries, alloc: &Allocation, attempt: u32) 
                     // failure at the start of this sample interval
                     let t = i as f64 * dt;
                     return AttemptOutcome::Failure {
-                        info: FailureInfo { time_s: t, used_mib: used, attempt },
+                        info: FailureInfo::oom(t, used, attempt),
                         wastage_mibs: wastage + 0.0, // failure at piece start
                     };
                 }
@@ -93,7 +93,7 @@ pub fn simulate_attempt(series: &UsageSeries, alloc: &Allocation, attempt: u32) 
                     let a = values[s.min(k - 1)];
                     if used > a {
                         return AttemptOutcome::Failure {
-                            info: FailureInfo { time_s: piece_start, used_mib: used, attempt },
+                            info: FailureInfo::oom(piece_start, used, attempt),
                             wastage_mibs: wastage,
                         };
                     }

@@ -15,7 +15,7 @@ use ksegments::sim::{parallel_map, EvalGrid, PredictorFactory};
 use ksegments::units::MemMiB;
 use ksegments::workload::{eager_workflow, generate_workflow_trace};
 
-/// The headline satellite: the full fig7 grid (8 methods × 3 fractions
+/// The headline satellite: the full fig7 grid (9 methods × 3 fractions
 /// × 2 workflows) at seed 42 is bit-identical at workers = 1 and
 /// workers = 8 — same wastage, same retries, same task ordering.
 #[test]
@@ -34,7 +34,7 @@ fn fig7_grid_bit_identical_across_worker_counts() {
     // something legible instead of a giant struct diff.
     assert_eq!(seq.by_fraction.len(), 3);
     for (f, (s_row, p_row)) in seq.by_fraction.iter().zip(&par.by_fraction).enumerate() {
-        assert_eq!(s_row.len(), 8, "fraction {f} must cover the 8-method roster");
+        assert_eq!(s_row.len(), 9, "fraction {f} must cover the 9-method roster");
         for (s, p) in s_row.iter().zip(p_row) {
             assert_eq!(s.method, p.method);
             assert_eq!(s.total_wastage_gbs().to_bits(), p.total_wastage_gbs().to_bits());
@@ -132,10 +132,49 @@ fn sched_grid_bit_identical_across_worker_counts() {
         assert_eq!(rep.completed, rep.submitted, "cell {cell:?} lost tasks");
         assert_eq!(
             rep.admitted,
-            rep.completed + rep.oom_kills + rep.grow_denials,
+            rep.completed + rep.oom_kills + rep.grow_denials + rep.preempted + rep.node_lost,
             "cell {cell:?} accounting broken"
         );
     }
+}
+
+/// The failure-domain sweep rides the same pool: (predictor × failure
+/// rate × autoscale lag) over the eager trace at seed 42 is
+/// bit-identical at workers = 1 and workers = 8 — forked RNG streams
+/// make the injected failures part of the cell, not of the schedule.
+#[test]
+fn failure_grid_bit_identical_across_worker_counts() {
+    use ksegments::sched::FailureGrid;
+    let traces = vec![generate_workflow_trace(&eager_workflow(), 42)];
+    let mut methods: Vec<PredictorFactory> = vec![
+        Box::new(|| Box::new(DefaultConfigPredictor::new())),
+        Box::new(|| Box::new(PpmPredictor::improved())),
+    ];
+    methods.extend(makers_for_keys(&["condor"], FitterChoice::Native));
+    let grid = FailureGrid::new(methods, &traces, vec![0.0, 0.01], vec![None, Some(30.0)])
+        .with_base(
+            SchedConfig { seed: 42, training_frac: 0.5, ..SchedConfig::default() },
+            NodeSpec { mem: MemMiB::from_gib(32.0), cores: 32 },
+            2,
+        );
+    let seq = grid.run(1);
+    let par = grid.run(8);
+    assert_eq!(seq, par, "failure grid diverged under parallelism");
+    assert_eq!(seq.reports.len(), 3 * 2 * 2);
+    let mut any_lost = false;
+    for (cell, rep) in seq.cells.iter().zip(&seq.reports) {
+        assert_eq!(rep.completed, rep.submitted, "cell {cell:?} lost tasks");
+        assert_eq!(
+            rep.admitted,
+            rep.completed + rep.oom_kills + rep.grow_denials + rep.preempted + rep.node_lost,
+            "cell {cell:?} accounting broken"
+        );
+        if cell.rate_idx == 0 {
+            assert_eq!(rep.node_failures, 0, "cell {cell:?}: failures in the control column");
+        }
+        any_lost |= rep.node_lost > 0;
+    }
+    assert!(any_lost, "mtbf 100s over the eager stream should kill at least one attempt");
 }
 
 /// The dependency-gated DAG sweep rides the same pool: (policy ×

@@ -360,5 +360,5 @@ fn prop_failure_attempt_number() {
             _ => panic!("expected failure"),
         }
     }
-    let _ = FailureInfo { time_s: 0.0, used_mib: 0.0, attempt: 1 };
+    let _ = FailureInfo::oom(0.0, 0.0, 1);
 }

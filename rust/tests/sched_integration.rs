@@ -89,7 +89,7 @@ fn identities(r: &SchedReport) {
     assert_eq!(r.completed, r.submitted, "every task must leave the system");
     assert_eq!(
         r.admitted,
-        r.completed + r.oom_kills + r.grow_denials,
+        r.completed + r.oom_kills + r.grow_denials + r.preempted + r.node_lost,
         "every admitted attempt ends exactly one way"
     );
     assert_eq!(
@@ -116,6 +116,7 @@ fn segment_wise_beats_static_peak_on_ramp_workload() {
         training_frac: 0.0,
         max_attempts: 10,
         event_log_cap: 0,
+        ..SchedConfig::default()
     };
     let mk = || OracleRamp::for_trace(&trace, "w/ramp", 4);
     let stat = schedule_trace(&trace, &mut mk(), &cfg(ReservationPolicy::StaticPeak));
@@ -183,6 +184,7 @@ fn conservation_identities_under_random_configs() {
             training_frac: 0.0,
             max_attempts: 8,
             event_log_cap: 100,
+            ..SchedConfig::default()
         };
         let mut p = DefaultConfigPredictor::new();
         let r = schedule_trace(&trace, &mut p, &cfg);
@@ -190,6 +192,68 @@ fn conservation_identities_under_random_configs() {
         assert!(r.makespan.0 >= 0.0, "seed {seed}");
         assert!(r.peak_util_frac <= 1.0 + 1e-9, "seed {seed}: over-reserved");
     }
+}
+
+/// Conservation identities under seeded failure injection: random
+/// traces and cluster shapes with node loss, preemption, and the
+/// autoscaler all randomly enabled. The extended identity
+/// (`admitted == completed + oom_kills + grow_denials + preempted +
+/// node_lost`) must hold exactly, every task must still finish, and
+/// the run must replay bit-identically.
+#[test]
+fn conservation_identities_under_seeded_failure_injection() {
+    use ksegments::sched::AutoscaleConfig;
+    let mut any_lost = false;
+    for seed in 0..25u64 {
+        let mut rng = Rng::new(seed + 7000);
+        let mut trace = Trace::new();
+        let peak = rng.uniform(200.0, 1500.0);
+        // sometimes undersized -> OOM paths interleave with blameless kills
+        let default = peak * if rng.f64() < 0.5 { 1.5 } else { 0.2 };
+        trace.set_default("w/f", MemMiB(default));
+        for i in 0..(5 + rng.below(15)) {
+            let n = 3 + rng.below(10) as usize;
+            let samples: Vec<f64> = (0..n).map(|j| peak * (j + 1) as f64 / n as f64).collect();
+            trace.push(TaskRun {
+                task_type: "w/f".into(),
+                input_mib: rng.uniform(10.0, 500.0),
+                runtime: Seconds(n as f64 * 2.0),
+                series: UsageSeries::new(2.0, samples),
+                seq: i,
+            });
+        }
+        trace.sort();
+        let cfg = SchedConfig {
+            policy: if rng.f64() < 0.5 {
+                ReservationPolicy::StaticPeak
+            } else {
+                ReservationPolicy::SegmentWise
+            },
+            nodes: vec![
+                NodeSpec { mem: MemMiB(rng.uniform(2000.0, 6000.0)), cores: 4 };
+                1 + rng.below(3) as usize
+            ],
+            mean_interarrival: Seconds(rng.uniform(0.0, 6.0)),
+            seed,
+            training_frac: 0.0,
+            max_attempts: 8,
+            fail_mtbf: Seconds(rng.uniform(5.0, 60.0)),
+            fail_downtime: Seconds(rng.uniform(1.0, 30.0)),
+            preempt: rng.f64() < 0.5,
+            autoscale: if rng.f64() < 0.5 { Some(AutoscaleConfig::default()) } else { None },
+            ..SchedConfig::default()
+        };
+        let mut p = DefaultConfigPredictor::new();
+        let r = schedule_trace(&trace, &mut p, &cfg);
+        identities(&r);
+        assert!(r.peak_util_frac <= 1.0 + 1e-9, "seed {seed}: over-reserved");
+        any_lost |= r.node_lost > 0;
+        // bit-identical replay under adversity (fresh predictor)
+        let mut p2 = DefaultConfigPredictor::new();
+        let r2 = schedule_trace(&trace, &mut p2, &cfg);
+        assert_eq!(r2, r, "seed {seed}: failure injection broke determinism");
+    }
+    assert!(any_lost, "25 seeds at mtbf 5-60s should requeue at least one task");
 }
 
 /// Merging per-trace partial reports is permutation-invariant: exact

@@ -63,11 +63,7 @@ fn sixteen_clients_mixed_traffic_exact_totals_and_fifo() {
                 }
                 for i in 0..FAILURES_PER_TYPE {
                     let failed = Allocation::Static(MemMiB(100.0 + i as f64));
-                    let info = FailureInfo {
-                        time_s: 1.0,
-                        used_mib: 400.0,
-                        attempt: 1 + i as u32,
-                    };
+                    let info = FailureInfo::oom(1.0, 400.0, 1 + i as u32);
                     let next = h.report_failure(&ty, 150.0, failed, info);
                     assert!(next.max_value() > 0.0);
                 }

@@ -1,0 +1,273 @@
+//! `ksegments bench` — the committed perf trajectory.
+//!
+//! One [`BenchSnapshot`] per *area* (`sched`, `replay`, `grid`,
+//! `service`). Each snapshot splits hard **counts** — deterministic
+//! functions of the seed that must match the committed
+//! `BENCH_<area>.json` exactly, at any worker count — from soft
+//! **throughput** — wall-clock dependent, compared with a noise
+//! threshold. CI runs `ksegments bench --area sched --area replay`
+//! per push and `tools/bench_check.py` diffs the result against the
+//! committed trajectory (exact on counts, ±20 % on throughput once a
+//! snapshot is calibrated; committed snapshots start `provisional`).
+//!
+//! All wall time flows through [`Stopwatch`] — the sim-time vs
+//! wall-time rule of DESIGN.md §12.
+
+use crate::bench_harness::figures::{make_method, run_fig7_selected, FitterChoice};
+use crate::bench_harness::throughput::{run_failure_sweep, FailureSweepResults};
+use crate::bench_harness::timer::Stopwatch;
+use crate::coordinator::ShardedPredictionService;
+use crate::ingest::{replay_source, InMemorySource, ReplayConfig};
+use crate::util::json::Json;
+use crate::workload::{eager_workflow, generate_workflow_trace};
+
+/// The benched areas, in `BENCH_<area>.json` naming order.
+pub const BENCH_AREAS: &[&str] = &["sched", "replay", "grid", "service"];
+
+/// Bumped whenever a snapshot's counts change meaning — the checker
+/// refuses to compare snapshots across schema versions.
+pub const BENCH_SCHEMA_VERSION: u64 = 1;
+
+/// The predictor every non-sweep area benches (the paper's headline
+/// method; the `sched` area sweeps the full roster instead).
+const BENCH_METHOD: &str = "ksegments-selective";
+
+/// One area's perf snapshot, rendered to `BENCH_<area>.json`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchSnapshot {
+    pub area: &'static str,
+    pub seed: u64,
+    pub workers: usize,
+    /// Deterministic work counters, in render order — CI requires an
+    /// exact match against the committed snapshot.
+    pub counts: Vec<(&'static str, u64)>,
+    /// Wall time of the benched section (seconds) — context only.
+    pub wall_s: f64,
+    /// The headline rate (work items per wall second) — compared with
+    /// a noise threshold, never exactly.
+    pub throughput: f64,
+    pub throughput_unit: &'static str,
+}
+
+impl BenchSnapshot {
+    pub fn count(&self, name: &str) -> Option<u64> {
+        self.counts.iter().find(|(k, _)| *k == name).map(|&(_, v)| v)
+    }
+
+    /// Canonical snapshot file name (`BENCH_sched.json`, ...).
+    pub fn file_name(&self) -> String {
+        format!("BENCH_{}.json", self.area)
+    }
+
+    /// The committed-snapshot JSON document. A freshly measured
+    /// snapshot is never provisional; committed placeholders flip the
+    /// flag by hand until a real CI runner calibrates them.
+    pub fn to_json(&self) -> String {
+        Json::obj(vec![
+            ("bench", self.area.into()),
+            ("schema", BENCH_SCHEMA_VERSION.into()),
+            ("seed", self.seed.into()),
+            ("workers", (self.workers as u64).into()),
+            ("provisional", false.into()),
+            (
+                "counts",
+                Json::Obj(
+                    self.counts.iter().map(|&(k, v)| (k.to_string(), Json::from(v))).collect(),
+                ),
+            ),
+            ("wall_s", self.wall_s.into()),
+            ("throughput", self.throughput.into()),
+            ("throughput_unit", self.throughput_unit.into()),
+        ])
+        .to_string()
+    }
+}
+
+/// Run one bench area. `Err` only for an unknown area name or a
+/// mid-bench I/O failure; the measured snapshot is otherwise total.
+pub fn run_bench_area(area: &str, seed: u64, workers: usize) -> Result<BenchSnapshot, String> {
+    match area {
+        "sched" => Ok(bench_sched(seed, workers)),
+        "replay" => bench_replay(seed, workers),
+        "grid" => Ok(bench_grid(seed, workers)),
+        "service" => bench_service(seed, workers),
+        other => Err(format!("unknown bench area {other:?} (expected one of {BENCH_AREAS:?})")),
+    }
+}
+
+/// Fold an already-run failure sweep into the `sched` snapshot — the
+/// testable seam ([`bench_sched`] adds the wall clock around it).
+pub fn sched_snapshot(
+    sweep: &FailureSweepResults,
+    seed: u64,
+    workers: usize,
+    wall_s: f64,
+) -> BenchSnapshot {
+    let events: u64 = sweep.results.reports.iter().map(|r| r.events_processed).sum();
+    let completed: u64 = sweep.results.reports.iter().map(|r| r.completed).sum();
+    let node_failures: u64 = sweep.results.reports.iter().map(|r| r.node_failures).sum();
+    BenchSnapshot {
+        area: "sched",
+        seed,
+        workers,
+        counts: vec![
+            ("n_cells", sweep.results.reports.len() as u64),
+            ("events_processed", events),
+            ("tasks_completed", completed),
+            ("node_failures", node_failures),
+        ],
+        wall_s,
+        throughput: events as f64 / wall_s.max(1e-9),
+        throughput_unit: "events_per_s",
+    }
+}
+
+/// Scheduler engine throughput over the full failure-domain sweep.
+fn bench_sched(seed: u64, workers: usize) -> BenchSnapshot {
+    let sw = Stopwatch::start();
+    let sweep = run_failure_sweep(seed, workers);
+    sched_snapshot(&sweep, seed, workers, sw.elapsed_s())
+}
+
+/// Streaming-replay throughput: the eager workflow trace through the
+/// sharded replay pipeline under the headline predictor.
+fn bench_replay(seed: u64, workers: usize) -> Result<BenchSnapshot, String> {
+    let trace = generate_workflow_trace(&eager_workflow(), seed);
+    let mut src = InMemorySource::from_trace(&trace);
+    let make = || make_method(BENCH_METHOD, FitterChoice::Native).expect("known method key");
+    let cfg = ReplayConfig::default();
+    let sw = Stopwatch::start();
+    let out = replay_source(&mut src, &make, &cfg, workers, None)
+        .map_err(|e| format!("replay bench failed: {e}"))?;
+    let wall_s = sw.elapsed_s();
+    let scored: u64 = out.report.tasks.iter().map(|t| t.n_scored as u64).sum();
+    Ok(BenchSnapshot {
+        area: "replay",
+        seed,
+        workers,
+        counts: vec![
+            ("runs_replayed", out.runs_replayed),
+            ("runs_warmup", out.runs_warmup),
+            ("tasks_scored", scored),
+            ("retries", out.report.total_retries()),
+        ],
+        wall_s,
+        throughput: out.runs_replayed as f64 / wall_s.max(1e-9),
+        throughput_unit: "runs_per_s",
+    })
+}
+
+/// Evaluation-grid throughput: a small Fig. 7 roster over the paper
+/// workflows at all three training fractions.
+fn bench_grid(seed: u64, workers: usize) -> BenchSnapshot {
+    let keys: &[&'static str] = &["default", BENCH_METHOD];
+    let sw = Stopwatch::start();
+    let fig7 = run_fig7_selected(seed, FitterChoice::Native, workers, keys);
+    let wall_s = sw.elapsed_s();
+    let n_cells = (fig7.fractions.len() * keys.len()) as u64;
+    let scored: u64 = fig7
+        .by_fraction
+        .iter()
+        .flatten()
+        .flat_map(|r| &r.tasks)
+        .map(|t| t.n_scored as u64)
+        .sum();
+    BenchSnapshot {
+        area: "grid",
+        seed,
+        workers,
+        counts: vec![("n_cells", n_cells), ("tasks_scored", scored)],
+        wall_s,
+        throughput: n_cells as f64 / wall_s.max(1e-9),
+        throughput_unit: "cells_per_s",
+    }
+}
+
+/// Sharded prediction-service throughput: the eager trace streamed
+/// through `workers` shards (predict + complete per run). Wakeup
+/// counts are scheduling-dependent and deliberately **not** counted.
+fn bench_service(seed: u64, workers: usize) -> Result<BenchSnapshot, String> {
+    let trace = generate_workflow_trace(&eager_workflow(), seed);
+    let mut src = InMemorySource::from_trace(&trace);
+    let sw = Stopwatch::start();
+    let svc = ShardedPredictionService::spawn(workers.max(1), |_| {
+        make_method(BENCH_METHOD, FitterChoice::Native).expect("known method key")
+    });
+    let fed = svc
+        .handle()
+        .replay_source(&mut src, 256)
+        .map_err(|e| format!("service bench failed: {e}"))?;
+    let stats = svc.shutdown();
+    let wall_s = sw.elapsed_s();
+    Ok(BenchSnapshot {
+        area: "service",
+        seed,
+        workers,
+        counts: vec![
+            ("runs_fed", fed),
+            ("predictions", stats.predictions),
+            ("completions", stats.completions),
+        ],
+        wall_s,
+        throughput: stats.predictions as f64 / wall_s.max(1e-9),
+        throughput_unit: "predictions_per_s",
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_harness::throughput::{run_failure_sweep_axes, THROUGHPUT_KEYS};
+
+    #[test]
+    fn unknown_area_is_rejected() {
+        let err = run_bench_area("nope", 42, 2).unwrap_err();
+        assert!(err.contains("unknown bench area"), "{err}");
+        assert!(err.contains("sched"), "{err}");
+    }
+
+    #[test]
+    fn sched_snapshot_is_valid_and_counts_events() {
+        let t = run_failure_sweep_axes(42, &[0.0, 0.01], &[None], 2);
+        let snap = sched_snapshot(&t, 42, 2, 1.5);
+        let j = Json::parse(&snap.to_json()).expect("bench json parses");
+        assert_eq!(j.get("bench").as_str(), Some("sched"));
+        assert_eq!(j.get("schema").as_u64(), Some(BENCH_SCHEMA_VERSION));
+        assert_eq!(j.get("seed").as_u64(), Some(42));
+        assert_eq!(j.get("provisional").as_bool(), Some(false));
+        let counts = j.get("counts");
+        assert_eq!(counts.get("n_cells").as_u64(), Some((THROUGHPUT_KEYS.len() * 2) as u64));
+        // every simulated event is counted — a scheduling run always
+        // processes at least one event per admitted task
+        let events = counts.get("events_processed").as_u64().unwrap();
+        let tasks = counts.get("tasks_completed").as_u64().unwrap();
+        assert!(events >= tasks, "{events} events < {tasks} tasks");
+        assert!(tasks > 0);
+        assert!((j.get("throughput").as_f64().unwrap() - events as f64 / 1.5).abs() < 1e-6);
+        assert_eq!(j.get("throughput_unit").as_str(), Some("events_per_s"));
+        assert_eq!(snap.count("events_processed"), Some(events));
+        assert_eq!(snap.count("missing"), None);
+        assert_eq!(snap.file_name(), "BENCH_sched.json");
+    }
+
+    #[test]
+    fn replay_counts_are_worker_count_independent() {
+        let a = run_bench_area("replay", 42, 1).expect("replay area runs");
+        let b = run_bench_area("replay", 42, 4).expect("replay area runs");
+        assert_eq!(a.counts, b.counts, "counts must not depend on shard count");
+        assert!(a.count("runs_replayed").unwrap() > 0);
+        assert!(a.throughput > 0.0);
+        let j = Json::parse(&a.to_json()).expect("valid json");
+        assert_eq!(j.get("bench").as_str(), Some("replay"));
+        assert_eq!(j.get("throughput_unit").as_str(), Some("runs_per_s"));
+    }
+
+    #[test]
+    fn service_counts_match_the_stream() {
+        let snap = run_bench_area("service", 42, 2).expect("service area runs");
+        let fed = snap.count("runs_fed").unwrap();
+        assert!(fed > 0);
+        assert_eq!(snap.count("predictions"), Some(fed));
+        assert_eq!(snap.count("completions"), Some(fed));
+    }
+}

@@ -1,7 +1,11 @@
 //! Benchmark + figure-regeneration harness.
 //!
 //! * [`timer`] — minimal criterion-style measurement (offline cache has
-//!   no criterion);
+//!   no criterion) and [`timer::Stopwatch`], the crate's only
+//!   sanctioned wall-clock;
+//! * [`bench`] — `ksegments bench`: one `BENCH_<area>.json` perf
+//!   snapshot per area (sched / replay / grid / service), the
+//!   committed perf trajectory CI diffs against;
 //! * [`figures`] — one entry point per paper figure (Fig. 1, 4, 7a–c,
 //!   8), shared by the CLI and the `cargo bench` targets;
 //! * [`throughput`] — the scheduling sweeps: makespan / queue-wait /
@@ -12,10 +16,13 @@
 //!   `BENCH_sched.json` scheduler-throughput snapshot.
 
 pub mod ablation;
+pub mod bench;
 pub mod figures;
 pub mod report;
 pub mod throughput;
 pub mod timer;
+
+pub use bench::{run_bench_area, sched_snapshot, BenchSnapshot, BENCH_AREAS, BENCH_SCHEMA_VERSION};
 
 pub use figures::{
     evaluate_method, fig7_makers, make_method, makers_for_keys, method_names, method_roster,
@@ -27,4 +34,4 @@ pub use throughput::{
     run_throughput, throughput_makers, DagThroughputResults, FailureSweepResults,
     ThroughputResults, FAILURE_SWEEP_LAGS, FAILURE_SWEEP_RATES,
 };
-pub use timer::{bench, black_box, time_once, Measurement};
+pub use timer::{bench, black_box, time_once, Measurement, Stopwatch};

@@ -29,7 +29,6 @@ use crate::sched::{
 };
 use crate::sim::PredictorFactory;
 use crate::units::MemMiB;
-use crate::util::json::Json;
 use crate::workload::{eager_workflow, generate_workflow_trace};
 
 /// One sweep's rendered axes plus the raw per-cell reports.
@@ -405,43 +404,15 @@ impl FailureSweepResults {
     }
 }
 
-/// Run the failure sweep as a scheduler micro-benchmark and render a
-/// `BENCH_sched.json` snapshot: total engine events processed, wall
-/// time, and the headline events/s rate. CI runs this per release so
+/// Run the failure sweep as a scheduler micro-benchmark and render the
+/// `BENCH_sched.json` snapshot — a thin alias of the `sched` area of
+/// [`crate::bench_harness::bench::run_bench_area`], kept for the
+/// `bench-sched` CLI spelling. CI runs this per push so
 /// scheduler-throughput regressions show up as a diffable number.
 pub fn bench_sched_json(seed: u64, workers: usize) -> String {
-    let start = std::time::Instant::now();
-    let sweep = run_failure_sweep(seed, workers);
-    let wall_s = start.elapsed().as_secs_f64();
-    sched_bench_json(&sweep, seed, workers, wall_s)
-}
-
-fn sched_bench_json(
-    sweep: &FailureSweepResults,
-    seed: u64,
-    workers: usize,
-    wall_s: f64,
-) -> String {
-    let events: u64 = sweep.results.reports.iter().map(|r| r.events_processed).sum();
-    let completed: u64 = sweep.results.reports.iter().map(|r| r.completed).sum();
-    let node_failures: u64 = sweep.results.reports.iter().map(|r| r.node_failures).sum();
-    Json::obj(vec![
-        ("bench", "sched_events".into()),
-        ("seed", seed.into()),
-        ("workers", (workers as u64).into()),
-        ("n_cells", (sweep.results.reports.len() as u64).into()),
-        (
-            "methods",
-            Json::Arr(sweep.methods.iter().map(|m| Json::Str(m.clone())).collect()),
-        ),
-        ("fail_rates", Json::arr_f64(&sweep.fail_rates)),
-        ("events_processed", events.into()),
-        ("tasks_completed", completed.into()),
-        ("node_failures", node_failures.into()),
-        ("wall_s", wall_s.into()),
-        ("events_per_s", (events as f64 / wall_s.max(1e-9)).into()),
-    ])
-    .to_string()
+    crate::bench_harness::bench::run_bench_area("sched", seed, workers)
+        .expect("sched is a known bench area")
+        .to_json()
 }
 
 #[cfg(test)]
@@ -515,21 +486,4 @@ mod tests {
         }
     }
 
-    #[test]
-    fn sched_bench_json_is_valid_and_counts_events() {
-        let t = run_failure_sweep_axes(42, &[0.0, 0.01], &[None], 2);
-        let s = sched_bench_json(&t, 42, 2, 1.5);
-        let j = Json::parse(&s).expect("bench json parses");
-        assert_eq!(j.get("bench").as_str(), Some("sched_events"));
-        assert_eq!(j.get("seed").as_u64(), Some(42));
-        assert_eq!(j.get("n_cells").as_u64(), Some((THROUGHPUT_KEYS.len() * 2) as u64));
-        // every simulated event is counted — a scheduling run always
-        // processes at least one event per admitted task
-        let events = j.get("events_processed").as_u64().unwrap();
-        let tasks = j.get("tasks_completed").as_u64().unwrap();
-        assert!(events >= tasks, "{events} events < {tasks} tasks");
-        assert!(tasks > 0);
-        assert!((j.get("events_per_s").as_f64().unwrap() - events as f64 / 1.5).abs() < 1e-6);
-        assert_eq!(j.get("methods").as_arr().unwrap().len(), THROUGHPUT_KEYS.len());
-    }
 }

@@ -1,7 +1,45 @@
 //! Minimal criterion-style timing harness (the offline crate cache has
 //! no criterion). Used by the `cargo bench` targets and the §Perf pass.
+//!
+//! Also home of [`Stopwatch`] — the crate's **only** sanctioned
+//! wall-clock. Every simulated result (SchedReport, MethodReport,
+//! trace events from the engine or replay) is a function of the seed
+//! alone; wall time may only appear in `BENCH_*.json` snapshots and in
+//! service-thread trace spans, and both must read it through a
+//! `Stopwatch` so the boundary stays greppable (DESIGN.md §12).
 
 use std::time::{Duration, Instant};
+
+/// The single sanctioned wall-clock. Construct with
+/// [`Stopwatch::start`] and read elapsed time in the unit you need —
+/// never call `Instant::now()` directly outside this type.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ns(&self) -> f64 {
+        self.start.elapsed().as_nanos() as f64
+    }
+
+    /// Whole microseconds since start — the unit of Chrome trace `ts`.
+    pub fn elapsed_us(&self) -> u64 {
+        self.start.elapsed().as_micros() as u64
+    }
+}
 
 /// One benchmark's measurements.
 #[derive(Debug, Clone)]
@@ -69,12 +107,11 @@ pub fn bench<T>(
     }
     let mut samples_ns = Vec::with_capacity(samples);
     for _ in 0..samples {
-        let start = Instant::now();
+        let sw = Stopwatch::start();
         for _ in 0..iters_per_sample {
             black_box(f());
         }
-        let dt = start.elapsed();
-        samples_ns.push(dt.as_nanos() as f64 / iters_per_sample as f64);
+        samples_ns.push(sw.elapsed_ns() / iters_per_sample as f64);
     }
     let m = Measurement { name: name.to_string(), iters: samples * iters_per_sample, samples_ns };
     println!("{}", m.report());
@@ -83,9 +120,9 @@ pub fn bench<T>(
 
 /// Time a single long-running call (for whole-figure benches).
 pub fn time_once<T>(name: &str, f: impl FnOnce() -> T) -> (T, Duration) {
-    let start = Instant::now();
+    let sw = Stopwatch::start();
     let out = black_box(f());
-    let dt = start.elapsed();
+    let dt = sw.elapsed();
     println!("{:<44} wall: {}", name, fmt_ns(dt.as_nanos() as f64));
     (out, dt)
 }
@@ -112,6 +149,19 @@ mod tests {
         let (v, dt) = time_once("t", || 42);
         assert_eq!(v, 42);
         assert!(dt.as_nanos() > 0);
+    }
+
+    #[test]
+    fn stopwatch_units_agree() {
+        let sw = Stopwatch::start();
+        let _ = black_box((0..1000).sum::<u64>());
+        let ns = sw.elapsed_ns();
+        let s = sw.elapsed_s();
+        let us = sw.elapsed_us();
+        assert!(ns >= 0.0);
+        // later reads see monotonically non-decreasing time
+        assert!(s * 1e9 >= ns * 0.5);
+        assert!(us as f64 >= ns / 1e3 - 1.0, "µs and ns reads must agree");
     }
 
     #[test]

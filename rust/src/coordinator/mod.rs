@@ -28,7 +28,9 @@
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 
+use crate::bench_harness::timer::Stopwatch;
 use crate::predictors::{Allocation, FailureInfo, MemoryPredictor};
+use crate::telemetry::{ArgValue, Registry, TraceEvent};
 use crate::trace::TaskRun;
 use crate::units::MemMiB;
 
@@ -77,6 +79,23 @@ impl ServiceStats {
         }
         total
     }
+}
+
+/// Export per-shard counters (labelled `shard="N"`) plus the
+/// aggregate into a metrics registry.
+pub fn export_service_metrics(per_shard: &[ServiceStats], reg: &mut Registry) {
+    for (s, st) in per_shard.iter().enumerate() {
+        reg.counter_add(&format!("service_predictions{{shard=\"{s}\"}}"), st.predictions);
+        reg.counter_add(&format!("service_completions{{shard=\"{s}\"}}"), st.completions);
+        reg.counter_add(&format!("service_failures{{shard=\"{s}\"}}"), st.failures);
+        reg.counter_add(&format!("service_wakeups{{shard=\"{s}\"}}"), st.wakeups);
+    }
+    let total = ServiceStats::aggregated(per_shard);
+    reg.counter_add("service_predictions_total", total.predictions);
+    reg.counter_add("service_completions_total", total.completions);
+    reg.counter_add("service_failures_total", total.failures);
+    reg.counter_add("service_wakeups_total", total.wakeups);
+    reg.gauge_set("service_shards", per_shard.len() as f64);
 }
 
 /// FNV-1a partition of task types over shards — the same type always
@@ -226,7 +245,7 @@ impl ServiceHandle {
 /// [`ShardedPredictionService::shutdown`] or let `Drop` do it.
 pub struct ShardedPredictionService {
     handle: ServiceHandle,
-    threads: Vec<JoinHandle<ServiceStats>>,
+    threads: Vec<JoinHandle<(ServiceStats, Vec<TraceEvent>)>>,
 }
 
 impl ShardedPredictionService {
@@ -236,19 +255,41 @@ impl ShardedPredictionService {
         n_shards: usize,
         factory: impl Fn(usize) -> Box<dyn MemoryPredictor>,
     ) -> ShardedPredictionService {
-        Self::spawn_with((0..n_shards).map(&factory).collect())
+        Self::spawn_opts((0..n_shards).map(&factory).collect(), false)
+    }
+
+    /// [`ShardedPredictionService::spawn`] with per-wakeup trace spans
+    /// collected on every shard; retrieve them with
+    /// [`ShardedPredictionService::shutdown_with_trace`]. Service
+    /// spans are **wall-clock**-stamped (the one sanctioned use of
+    /// wall time in a trace — DESIGN.md §12) and observation-only:
+    /// predictions and counters are unchanged.
+    pub fn spawn_traced(
+        n_shards: usize,
+        factory: impl Fn(usize) -> Box<dyn MemoryPredictor>,
+    ) -> ShardedPredictionService {
+        Self::spawn_opts((0..n_shards).map(&factory).collect(), true)
     }
 
     /// Spawn one shard per provided predictor (at least one).
     pub fn spawn_with(predictors: Vec<Box<dyn MemoryPredictor>>) -> ShardedPredictionService {
+        Self::spawn_opts(predictors, false)
+    }
+
+    fn spawn_opts(
+        predictors: Vec<Box<dyn MemoryPredictor>>,
+        traced: bool,
+    ) -> ShardedPredictionService {
         assert!(!predictors.is_empty(), "service needs at least one shard");
+        let epoch = Stopwatch::start();
         let mut txs = Vec::with_capacity(predictors.len());
         let mut threads = Vec::with_capacity(predictors.len());
         for (s, predictor) in predictors.into_iter().enumerate() {
             let (tx, rx) = channel();
+            let trace = traced.then_some((epoch, s as u32));
             let thread = std::thread::Builder::new()
                 .name(format!("ksegments-shard-{s}"))
-                .spawn(move || model_loop(predictor, rx))
+                .spawn(move || model_loop(predictor, rx, trace))
                 .expect("spawning shard model thread");
             txs.push(tx);
             threads.push(thread);
@@ -266,16 +307,35 @@ impl ShardedPredictionService {
 
     /// Stop all shards and return their aggregated final counters.
     pub fn shutdown(mut self) -> ServiceStats {
-        ServiceStats::aggregated(&self.join_shards())
+        ServiceStats::aggregated(&self.shutdown_stats())
     }
 
     /// Stop all shards and return the per-shard final counters, in
     /// shard order.
     pub fn shutdown_per_shard(mut self) -> Vec<ServiceStats> {
-        self.join_shards()
+        self.shutdown_stats()
     }
 
-    fn join_shards(&mut self) -> Vec<ServiceStats> {
+    /// Stop all shards, returning per-shard counters plus the merged
+    /// wakeup trace (empty unless spawned via
+    /// [`ShardedPredictionService::spawn_traced`]), sorted by
+    /// timestamp then shard track.
+    pub fn shutdown_with_trace(mut self) -> (Vec<ServiceStats>, Vec<TraceEvent>) {
+        let mut stats = Vec::with_capacity(self.threads.len());
+        let mut trace = Vec::new();
+        for (s, t) in self.join_shards() {
+            stats.push(s);
+            trace.extend(t);
+        }
+        trace.sort_by_key(|e| (e.ts_us, e.tid));
+        (stats, trace)
+    }
+
+    fn shutdown_stats(&mut self) -> Vec<ServiceStats> {
+        self.join_shards().into_iter().map(|(s, _)| s).collect()
+    }
+
+    fn join_shards(&mut self) -> Vec<(ServiceStats, Vec<TraceEvent>)> {
         for tx in &self.handle.txs {
             let _ = tx.send(Request::Shutdown);
         }
@@ -324,17 +384,25 @@ impl PredictionService {
 /// One shard's model loop: block on the first request of a wakeup,
 /// then drain everything already queued and process the batch in
 /// arrival order (so completion bursts cost one wakeup, and ordering
-/// guarantees are untouched).
-fn model_loop(mut predictor: Box<dyn MemoryPredictor>, rx: Receiver<Request>) -> ServiceStats {
+/// guarantees are untouched). With `trace` set, every wakeup is
+/// recorded as a wall-clock async span on the shard's track.
+fn model_loop(
+    mut predictor: Box<dyn MemoryPredictor>,
+    rx: Receiver<Request>,
+    trace: Option<(Stopwatch, u32)>,
+) -> (ServiceStats, Vec<TraceEvent>) {
     let mut stats = ServiceStats::default();
+    let mut events: Vec<TraceEvent> = Vec::new();
     let mut batch = Vec::new();
     'serve: while let Ok(first) = rx.recv() {
         stats.wakeups += 1;
+        let begin_us = trace.map(|(epoch, _)| epoch.elapsed_us());
         batch.clear();
         batch.push(first);
         while let Ok(more) = rx.try_recv() {
             batch.push(more);
         }
+        let n_batch = batch.len() as u64;
         for req in batch.drain(..) {
             match req {
                 Request::Prime { task_type, default } => predictor.prime(&task_type, default),
@@ -356,8 +424,28 @@ fn model_loop(mut predictor: Box<dyn MemoryPredictor>, rx: Receiver<Request>) ->
                 Request::Shutdown => break 'serve,
             }
         }
+        if let (Some((epoch, shard)), Some(ts_b)) = (trace, begin_us) {
+            let id = ((u64::from(shard) << 32) | (stats.wakeups - 1)) & 0xffff_ffff_ffff;
+            let ts_e = epoch.elapsed_us().max(ts_b);
+            for (ph, ts) in [('b', ts_b), ('e', ts_e)] {
+                events.push(TraceEvent {
+                    name: "wakeup".to_string(),
+                    cat: "service",
+                    ph,
+                    ts_us: ts,
+                    pid: 0,
+                    tid: shard,
+                    id: Some(id),
+                    args: if ph == 'b' {
+                        vec![("batch", ArgValue::U64(n_batch))]
+                    } else {
+                        Vec::new()
+                    },
+                });
+            }
+        }
     }
-    stats
+    (stats, events)
 }
 
 #[cfg(test)]
@@ -524,6 +612,53 @@ mod tests {
         let stats = svc.shutdown();
         assert_eq!(stats.completions, 12);
         assert_eq!(stats.predictions, 13);
+    }
+
+    #[test]
+    fn traced_service_records_wakeup_spans() {
+        let svc =
+            ShardedPredictionService::spawn_traced(2, |_| Box::new(DefaultConfigPredictor::new()));
+        let h = svc.handle();
+        h.prime("w/a", MemMiB(512.0));
+        for _ in 0..5 {
+            let _ = h.predict("w/a", 1.0);
+        }
+        let (stats, trace) = svc.shutdown_with_trace();
+        assert_eq!(ServiceStats::aggregated(&stats).predictions, 5);
+        assert!(!trace.is_empty());
+        let begins = trace.iter().filter(|e| e.ph == 'b').count();
+        let ends = trace.iter().filter(|e| e.ph == 'e').count();
+        assert_eq!(begins, ends, "every wakeup span must close");
+        assert!(trace.iter().all(|e| e.cat == "service"));
+        assert!(trace.windows(2).all(|w| w[0].ts_us <= w[1].ts_us), "merged trace sorted");
+    }
+
+    #[test]
+    fn untraced_service_collects_no_trace() {
+        let svc = ShardedPredictionService::spawn(2, |_| Box::new(DefaultConfigPredictor::new()));
+        let h = svc.handle();
+        h.prime("w/a", MemMiB(512.0));
+        let _ = h.predict("w/a", 1.0);
+        let (stats, trace) = svc.shutdown_with_trace();
+        assert!(trace.is_empty());
+        assert_eq!(ServiceStats::aggregated(&stats).predictions, 1);
+    }
+
+    #[test]
+    fn service_metrics_export_labels_shards() {
+        let per_shard = vec![
+            ServiceStats { predictions: 3, completions: 2, failures: 1, wakeups: 4 },
+            ServiceStats { predictions: 5, completions: 0, failures: 0, wakeups: 2 },
+        ];
+        let mut reg = crate::telemetry::Registry::new();
+        export_service_metrics(&per_shard, &mut reg);
+        assert_eq!(reg.counter("service_predictions{shard=\"0\"}"), 3);
+        assert_eq!(reg.counter("service_predictions{shard=\"1\"}"), 5);
+        assert_eq!(reg.counter("service_predictions_total"), 8);
+        assert_eq!(reg.counter("service_wakeups_total"), 6);
+        assert_eq!(reg.gauge("service_shards"), Some(2.0));
+        let prom = reg.to_prometheus();
+        assert!(prom.contains("service_predictions{shard=\"0\"} 3"), "{prom}");
     }
 
     #[test]

@@ -37,6 +37,7 @@ use crate::coordinator::shard_of;
 use crate::metrics::{MethodReport, TaskReport};
 use crate::predictors::MemoryPredictor;
 use crate::sim::{score_run, SimConfig};
+use crate::telemetry::{ArgValue, TraceEvent};
 use crate::trace::TaskRun;
 use crate::units::MemMiB;
 
@@ -62,6 +63,13 @@ pub struct ReplayConfig {
     pub node_max: MemMiB,
     /// Per-type window of the emitted checkpoint.
     pub checkpoint_window: usize,
+    /// Collect per-run trace events ([`ReplayOutcome::trace_events`]).
+    /// Off by default; purely observational — scores, checkpoints and
+    /// counters are bit-identical either way. Replay has no simulated
+    /// clock, so events are stamped with the run's arrival `seq`
+    /// (microsecond slot per run), which also makes the collected
+    /// trace worker-count independent.
+    pub collect_trace: bool,
 }
 
 impl Default for ReplayConfig {
@@ -72,6 +80,7 @@ impl Default for ReplayConfig {
             max_attempts: 40,
             node_max: MemMiB::from_gib(128.0),
             checkpoint_window: Checkpoint::DEFAULT_WINDOW,
+            collect_trace: false,
         }
     }
 }
@@ -101,6 +110,10 @@ pub struct ReplayOutcome {
     pub runs_replayed: u64,
     /// Of those, runs folded in unscored as warm-up.
     pub runs_warmup: u64,
+    /// Per-run trace events (only when [`ReplayConfig::collect_trace`]
+    /// is set), merged across shards and sorted by `(ts, name)` —
+    /// `seq`-stamped, so identical at any worker count.
+    pub trace_events: Vec<TraceEvent>,
 }
 
 enum ShardMsg {
@@ -117,6 +130,7 @@ struct ShardOut {
     checkpoint: Checkpoint,
     replayed: u64,
     warmup: u64,
+    trace: Vec<TraceEvent>,
 }
 
 fn shard_loop(
@@ -130,6 +144,7 @@ fn shard_loop(
     let mut tasks: BTreeMap<String, TaskReport> = BTreeMap::new();
     let mut seen: BTreeMap<String, u64> = BTreeMap::new();
     let (mut replayed, mut warmup) = (0u64, 0u64);
+    let mut trace: Vec<TraceEvent> = Vec::new();
     while let Ok(msg) = rx.recv() {
         match msg {
             ShardMsg::Restore(ty, st) => {
@@ -152,8 +167,20 @@ fn shard_loop(
                     if *n < cfg.warmup_per_type as u64 {
                         predictor.observe(&run);
                         warmup += 1;
+                        if cfg.collect_trace {
+                            trace.push(TraceEvent::instant(&run.task_type, "warmup", run.seq, 0));
+                        }
                     } else {
                         let score = score_run(predictor.as_mut(), &run, sim_cfg);
+                        if cfg.collect_trace {
+                            let mut ev = TraceEvent::instant(&run.task_type, "replay", run.seq, 0);
+                            ev.args = vec![
+                                ("seq", ArgValue::U64(run.seq)),
+                                ("wastage_gbs", ArgValue::F64(score.wastage.0)),
+                                ("retries", ArgValue::U64(u64::from(score.retries))),
+                            ];
+                            trace.push(ev);
+                        }
                         tasks
                             .entry(run.task_type.clone())
                             .or_insert_with(|| TaskReport::new(&run.task_type))
@@ -166,7 +193,7 @@ fn shard_loop(
             }
         }
     }
-    ShardOut { tasks, checkpoint, replayed, warmup }
+    ShardOut { tasks, checkpoint, replayed, warmup, trace }
 }
 
 /// Replay a source through `workers` type-sharded predictor instances;
@@ -190,6 +217,7 @@ pub fn replay_source(
     let mut tasks: BTreeMap<String, TaskReport> = BTreeMap::new();
     let mut checkpoint = Checkpoint::new(cfg.checkpoint_window);
     let (mut runs_replayed, mut runs_warmup) = (0u64, 0u64);
+    let mut trace_events: Vec<TraceEvent> = Vec::new();
 
     std::thread::scope(|scope| {
         let sim_ref = &sim_cfg;
@@ -239,14 +267,18 @@ pub fn replay_source(
             checkpoint.merge_disjoint(out.checkpoint);
             runs_replayed += out.replayed;
             runs_warmup += out.warmup;
+            trace_events.extend(out.trace);
         }
     });
     if let Some(e) = stream_err {
         return Err(e.context("replaying trace source"));
     }
+    // seq-stamped ts are unique per run, so this is a total order —
+    // the merged trace is identical at any worker count
+    trace_events.sort_by(|a, b| (a.ts_us, &a.name).cmp(&(b.ts_us, &b.name)));
 
     let report = MethodReport::new(&method, 0.0, tasks.into_values().collect());
-    Ok(ReplayOutcome { report, checkpoint, runs_replayed, runs_warmup })
+    Ok(ReplayOutcome { report, checkpoint, runs_replayed, runs_warmup, trace_events })
 }
 
 #[cfg(test)]

@@ -38,6 +38,10 @@
 //!   the scheduler and the service without materializing traces, and
 //!   JSONL predictor checkpoints for warm-started replays
 //!   ([`ingest`]);
+//! * the **telemetry layer**: structured run tracing in the Chrome
+//!   `trace_event` format (open any scheduler run in Perfetto), a
+//!   Prometheus/JSON metrics registry, and per-decision prediction
+//!   provenance logs ([`telemetry`]);
 //! * the **prediction service**: the long-running coordinator a SWMS
 //!   submits to, with task types hash-partitioned across N model
 //!   threads ([`coordinator`]);
@@ -78,6 +82,7 @@ pub mod rng;
 pub mod runtime;
 pub mod sched;
 pub mod sim;
+pub mod telemetry;
 pub mod trace;
 pub mod tsdb;
 pub mod units;
@@ -100,6 +105,9 @@ pub mod prelude {
         SchedReport, WorkflowSource,
     };
     pub use crate::sim::{simulate_trace, SimConfig};
+    pub use crate::telemetry::{
+        ChromeTraceSink, NullSink, Registry, RunTelemetry, TraceEvent, TraceSink, VecSink,
+    };
     pub use crate::trace::{TaskRun, Trace, UsageSeries};
     pub use crate::units::{GbSeconds, MemMiB, Seconds};
     pub use crate::workload::{eager_workflow, generate_workflow_trace, sarek_workflow};

@@ -15,6 +15,8 @@
 //! ksegments serve     [--seed N]                  # prediction-service demo
 //! ksegments schedule  [--nodes N] [--arrival S] [--policy P]  # cluster scheduler
 //!                     [--fail-rate R] [--preempt] [--autoscale]
+//!                     [--trace-out F] [--provenance-out F] [--metrics-out F]
+//! ksegments bench     [--area A]... [--out-dir D] # BENCH_<area>.json snapshots
 //! ksegments bench-sched [--out FILE]              # BENCH_sched.json snapshot
 //! ksegments ingest    DIR [--out FILE]            # Nextflow trace -> jsonl
 //! ksegments replay    --source PATH --method M    # streaming replay
@@ -53,17 +55,22 @@ USAGE:
   ksegments report    [--seed N] [--xla] [--out FILE] [--workers N] [--method SEL]
   ksegments validate-runtime
   ksegments serve     [--seed N] [--shards N] [--workers N] [--source PATH]
+                      [--trace-out FILE] [--metrics-out FILE]
   ksegments schedule  [--nodes N] [--node-gib G] [--arrival SECS]
                       [--policy static|segment|both] [--method METHOD]
                       [--frac F] [--seed N] [--workflow W]
                       [--fail-rate R] [--preempt] [--autoscale [LAG]]
                       [--dag W --instances N] [--sweep] [--fail-sweep]
-                      [--workers N]
+                      [--workers N] [--trace-out FILE]
+                      [--provenance-out FILE] [--metrics-out FILE]
+  ksegments bench     [--area sched|replay|grid|service]... [--seed N]
+                      [--workers N] [--out-dir DIR]
   ksegments bench-sched [--seed N] [--workers N] [--out FILE]
   ksegments ingest    DIR [--out FILE] [--format jsonl|csv]
   ksegments replay    --source PATH [--method SEL] [--workers N]
                       [--checkpoint FILE] [--checkpoint-out FILE]
-                      [--warmup N] [--chunk N]
+                      [--warmup N] [--chunk N] [--trace-out FILE]
+                      [--metrics-out FILE]
 
 METHODS: default | ppm | ppm-improved | lr | ksegments-selective |
          ksegments-partial | ksegments-adaptive | ensemble | dynseg |
@@ -96,9 +103,22 @@ blamelessly — same allocation, no predictor escalation), --preempt
 lets high-priority arrivals evict low-priority tasks, --autoscale
 grows/shrinks the roster with the queue (optional provisioning LAG in
 seconds, default 30). --fail-sweep renders the failure-rate x
-autoscale-lag tables on the parallel grid. bench-sched runs that sweep
-as a scheduler micro-benchmark and writes a BENCH_sched.json snapshot
-(engine events/s).
+autoscale-lag tables on the parallel grid.
+
+Observability (off by default; enabling it never changes results):
+--trace-out FILE writes a Chrome/Perfetto trace (schedule: simulated
+task spans; replay: per-run instants; serve: wall-clock wakeup spans
+— open at https://ui.perfetto.dev), --provenance-out FILE (schedule)
+writes one JSONL record per prediction/failure escalation with the
+chosen sub-model and scores, --metrics-out FILE writes a metrics
+snapshot (Prometheus text for .prom/.txt, JSON otherwise). With
+--policy both, trace/provenance record the first policy only.
+
+bench runs the perf areas (sched | replay | grid | service; repeat
+--area for several) and writes one BENCH_<area>.json snapshot each to
+--out-dir — the committed perf trajectory CI diffs against.
+bench-sched is the sched area under its original name (engine
+events/s).
 
 ingest normalizes a Nextflow trace directory (trace.txt [+ samples/])
 into the crate's replay-ordered JSONL trace format.
@@ -115,7 +135,11 @@ replays the same sources through the sharded prediction service.
 /// Hand-rolled `--key value` / `--flag` / positional parser.
 struct Args {
     cmd: String,
+    /// Last value per key (`--seed 1 --seed 2` keeps 2).
     kv: BTreeMap<String, String>,
+    /// Every `--key value` pair in argv order, for repeatable keys
+    /// like `bench --area sched --area replay`.
+    pairs: Vec<(String, String)>,
     flags: Vec<String>,
     /// Positional arguments (only `ingest` accepts one: its DIR).
     pos: Vec<String>,
@@ -126,6 +150,7 @@ impl Args {
         let mut argv = std::env::args().skip(1);
         let cmd = argv.next().unwrap_or_default();
         let mut kv = BTreeMap::new();
+        let mut pairs = Vec::new();
         let mut flags = Vec::new();
         let mut pos = Vec::new();
         let rest: Vec<String> = argv.collect();
@@ -139,13 +164,19 @@ impl Args {
             };
             if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
                 kv.insert(key.to_string(), rest[i + 1].clone());
+                pairs.push((key.to_string(), rest[i + 1].clone()));
                 i += 2;
             } else {
                 flags.push(key.to_string());
                 i += 1;
             }
         }
-        Ok(Args { cmd, kv, flags, pos })
+        Ok(Args { cmd, kv, pairs, flags, pos })
+    }
+
+    /// All values given for a repeatable key, in argv order.
+    fn all(&self, key: &str) -> Vec<String> {
+        self.pairs.iter().filter(|(k, _)| k == key).map(|(_, v)| v.clone()).collect()
     }
 
     fn seed(&self) -> u64 {
@@ -201,6 +232,47 @@ fn method_by_name(name: &str, choice: FitterChoice) -> Result<Box<dyn MemoryPred
 fn methods_arg(args: &Args) -> Result<Vec<&'static str>> {
     let sel = args.kv.get("method").map(String::as_str).unwrap_or("all");
     ksegments::bench_harness::resolve_methods(sel).map_err(|e| anyhow!(e))
+}
+
+/// Build a run's telemetry from `--trace-out` (Chrome/Perfetto trace
+/// JSON) and `--provenance-out` (per-decision JSONL). Off by default —
+/// the hot path then never allocates for telemetry.
+fn telemetry_from_args(args: &Args) -> Result<ksegments::telemetry::RunTelemetry> {
+    use ksegments::telemetry::{ChromeTraceSink, ProvenanceLog, RunTelemetry};
+    let mut tel = RunTelemetry::off();
+    if let Some(path) = args.kv.get("trace-out") {
+        tel.trace = Box::new(ChromeTraceSink::create(path).with_context(|| path.clone())?);
+    }
+    if let Some(path) = args.kv.get("provenance-out") {
+        tel.provenance = Some(ProvenanceLog::create(path).with_context(|| path.clone())?);
+    }
+    Ok(tel)
+}
+
+/// Close the sinks and report where the artifacts went.
+fn finish_telemetry(args: &Args, tel: &mut ksegments::telemetry::RunTelemetry) -> Result<()> {
+    let n_decisions = tel.provenance.as_ref().map(|p| p.len()).unwrap_or(0);
+    tel.finish().context("flushing telemetry sinks")?;
+    if let Some(path) = args.kv.get("trace-out") {
+        println!("wrote trace to {path} (open at https://ui.perfetto.dev)");
+    }
+    if let Some(path) = args.kv.get("provenance-out") {
+        println!("wrote {n_decisions} provenance records to {path}");
+    }
+    Ok(())
+}
+
+/// Write a metrics registry to `path`: Prometheus text exposition for
+/// `.prom`/`.txt`, the JSON snapshot otherwise.
+fn write_metrics(reg: &ksegments::telemetry::Registry, path: &str) -> Result<()> {
+    let text = if path.ends_with(".prom") || path.ends_with(".txt") {
+        reg.to_prometheus()
+    } else {
+        format!("{}\n", reg.to_json())
+    };
+    std::fs::write(path, text).with_context(|| path.to_string())?;
+    println!("wrote metrics to {path}");
+    Ok(())
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
@@ -333,9 +405,16 @@ fn cmd_validate_runtime() -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let shards = args.shards();
-    let svc = ShardedPredictionService::spawn(shards, |_| {
+    let factory = |_: usize| -> Box<dyn MemoryPredictor> {
         Box::new(KSegmentsPredictor::native(4, RetryStrategy::Selective))
-    });
+    };
+    // `--trace-out` records per-shard wakeup spans (wall clock — the
+    // service is real threads, not simulation)
+    let svc = if args.kv.contains_key("trace-out") {
+        ShardedPredictionService::spawn_traced(shards, factory)
+    } else {
+        ShardedPredictionService::spawn(shards, factory)
+    };
     let h = svc.handle();
     if let Some(path) = args.kv.get("source") {
         // Replay an ingested trace source through the service — the
@@ -372,7 +451,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             j.join().map_err(|_| anyhow!("worker panicked"))?;
         }
     }
-    let per_shard = svc.shutdown_per_shard();
+    let (per_shard, wakeup_trace) = svc.shutdown_with_trace();
     for (s, stats) in per_shard.iter().enumerate() {
         println!(
             "shard {s}: {} predictions, {} completions, {} failures, {} wakeups",
@@ -384,6 +463,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "service ({shards} shards) processed {} predictions, {} completions, {} failures",
         total.predictions, total.completions, total.failures
     );
+    if let Some(path) = args.kv.get("trace-out") {
+        ksegments::telemetry::write_chrome_trace(path, &wakeup_trace)
+            .with_context(|| path.clone())?;
+        println!(
+            "wrote service trace ({} events) to {path} (open at https://ui.perfetto.dev)",
+            wakeup_trace.len()
+        );
+    }
+    if let Some(path) = args.kv.get("metrics-out") {
+        let mut reg = ksegments::telemetry::Registry::new();
+        ksegments::coordinator::export_service_metrics(&per_shard, &mut reg);
+        write_metrics(&reg, path)?;
+    }
     Ok(())
 }
 
@@ -462,6 +554,11 @@ fn cmd_replay(args: &Args) -> Result<()> {
             keys.len()
         );
     }
+    let trace_out = args.kv.get("trace-out");
+    if trace_out.is_some() && keys.len() > 1 {
+        println!("note: --trace-out records the first method only\n");
+    }
+    let mut reg = ksegments::telemetry::Registry::new();
     let mut src = open_source(&path)?;
     println!(
         "replay: source={} methods={} workers={workers} warmup={} chunk={}\n",
@@ -474,10 +571,20 @@ fn cmd_replay(args: &Args) -> Result<()> {
         if i > 0 {
             src.rewind()?;
         }
+        cfg.collect_trace = trace_out.is_some() && i == 0;
         let choice = args.fitter();
         let make =
             move || ksegments::bench_harness::make_method(key, choice).expect("resolved key");
         let out = replay_source(src.as_mut(), &make, &cfg, workers, start.as_ref())?;
+        out.report.export_metrics(&mut reg);
+        if let (0, Some(path)) = (i, trace_out) {
+            ksegments::telemetry::write_chrome_trace(path, &out.trace_events)
+                .with_context(|| path.clone())?;
+            println!(
+                "wrote replay trace ({} events) to {path} (open at https://ui.perfetto.dev)",
+                out.trace_events.len()
+            );
+        }
         println!(
             "[{}] {} runs replayed ({} warm-up) over {} task types — avg wastage {:.3} GB·s, \
              avg retries {:.3}",
@@ -506,6 +613,9 @@ fn cmd_replay(args: &Args) -> Result<()> {
                 p.display()
             );
         }
+    }
+    if let Some(path) = args.kv.get("metrics-out") {
+        write_metrics(&reg, path)?;
     }
     Ok(())
 }
@@ -553,6 +663,21 @@ ksegments schedule — discrete-event cluster scheduling simulator
                   rate x autoscale lag) on the parallel grid
   --workers N     worker threads for --sweep/--fail-sweep (default:
                   cores)
+  --trace-out FILE
+                  write the run as Chrome trace-event JSON (task spans
+                  on node tracks, kills/arrivals as instants; open at
+                  https://ui.perfetto.dev). Purely observational —
+                  reports stay bit-identical
+  --provenance-out FILE
+                  write one JSONL record per prediction (chosen
+                  sub-model, RAQ scores, offset, segment bounds,
+                  window length) and per failure escalation
+  --metrics-out FILE
+                  write scheduler counters/gauges/queue-wait histogram
+                  (Prometheus text for .prom/.txt, JSON otherwise)
+
+With --policy both, --trace-out/--provenance-out record the first
+policy only; --metrics-out labels every policy's series.
 ";
 
 /// Axes shared by the independent-arrivals and DAG schedule modes.
@@ -670,7 +795,9 @@ fn parse_sched_cli(args: &Args) -> Result<SchedCliArgs> {
 /// `schedule --dag W`: dependency-gated workflow instances.
 fn cmd_schedule_dag(args: &Args, wf_name: &str) -> Result<()> {
     use ksegments::cluster::NodeSpec;
-    use ksegments::sched::{schedule_workflows, SchedConfig, WorkflowSource};
+    use ksegments::sched::{
+        schedule_workflows, schedule_workflows_telemetry, SchedConfig, WorkflowSource,
+    };
     use ksegments::units::{MemMiB, Seconds};
 
     let wf = workflow_by_name(wf_name)?;
@@ -723,7 +850,16 @@ fn cmd_schedule_dag(args: &Args, wf_name: &str) -> Result<()> {
         args.seed(),
         cli.adversity_summary(),
     );
-    for policy in &cli.policies {
+    let mut tel = telemetry_from_args(args)?;
+    let telemetry_on = tel.trace.enabled() || tel.provenance.is_some();
+    if telemetry_on && cli.policies.len() > 1 {
+        println!(
+            "note: --trace-out/--provenance-out record the first policy ({}) only\n",
+            cli.policies[0].name()
+        );
+    }
+    let mut reports = Vec::new();
+    for (i, policy) in cli.policies.iter().enumerate() {
         let mut cfg = SchedConfig {
             policy: *policy,
             nodes: vec![NodeSpec { mem: MemMiB::from_gib(cli.node_gib), cores: 32 }; cli.n_nodes],
@@ -734,15 +870,28 @@ fn cmd_schedule_dag(args: &Args, wf_name: &str) -> Result<()> {
         cli.apply_failure_domains(&mut cfg);
         let src = WorkflowSource::from_spec(&wf, args.seed(), instances);
         let mut predictor = method_by_name(&cli.method, args.fitter())?;
-        let rep = schedule_workflows(src, predictor.as_mut(), &cfg);
+        let rep = if i == 0 {
+            schedule_workflows_telemetry(src, predictor.as_mut(), &cfg, &mut tel).0
+        } else {
+            schedule_workflows(src, predictor.as_mut(), &cfg)
+        };
         println!("{}", rep.summary());
+        reports.push(rep);
+    }
+    finish_telemetry(args, &mut tel)?;
+    if let Some(path) = args.kv.get("metrics-out") {
+        let mut reg = ksegments::telemetry::Registry::new();
+        for rep in &reports {
+            rep.export_metrics(&mut reg);
+        }
+        write_metrics(&reg, path)?;
     }
     Ok(())
 }
 
 fn cmd_schedule(args: &Args) -> Result<()> {
     use ksegments::cluster::NodeSpec;
-    use ksegments::sched::{schedule_trace, SchedConfig};
+    use ksegments::sched::{schedule_trace, schedule_trace_telemetry, SchedConfig};
     use ksegments::units::{MemMiB, Seconds};
 
     if args.flag("help") {
@@ -796,8 +945,16 @@ fn cmd_schedule(args: &Args) -> Result<()> {
         args.seed(),
         cli.adversity_summary(),
     );
+    let mut tel = telemetry_from_args(args)?;
+    let telemetry_on = tel.trace.enabled() || tel.provenance.is_some();
+    if telemetry_on && cli.policies.len() > 1 {
+        println!(
+            "note: --trace-out/--provenance-out record the first policy ({}) only\n",
+            cli.policies[0].name()
+        );
+    }
     let mut reports = Vec::new();
-    for policy in &cli.policies {
+    for (i, policy) in cli.policies.iter().enumerate() {
         let mut cfg = SchedConfig {
             policy: *policy,
             nodes: vec![NodeSpec { mem: MemMiB::from_gib(cli.node_gib), cores: 32 }; cli.n_nodes],
@@ -808,9 +965,21 @@ fn cmd_schedule(args: &Args) -> Result<()> {
         };
         cli.apply_failure_domains(&mut cfg);
         let mut predictor = method_by_name(&cli.method, args.fitter())?;
-        let rep = schedule_trace(&trace, predictor.as_mut(), &cfg);
+        let rep = if i == 0 {
+            schedule_trace_telemetry(&trace, predictor.as_mut(), &cfg, &mut tel).0
+        } else {
+            schedule_trace(&trace, predictor.as_mut(), &cfg)
+        };
         println!("{}", rep.summary());
         reports.push(rep);
+    }
+    finish_telemetry(args, &mut tel)?;
+    if let Some(path) = args.kv.get("metrics-out") {
+        let mut reg = ksegments::telemetry::Registry::new();
+        for rep in &reports {
+            rep.export_metrics(&mut reg);
+        }
+        write_metrics(&reg, path)?;
     }
     if let [stat, segw] = reports.as_slice() {
         if stat.makespan.0 > 0.0 && segw.makespan.0 > 0.0 {
@@ -823,6 +992,32 @@ fn cmd_schedule(args: &Args) -> Result<()> {
                 segw.peak_running,
             );
         }
+    }
+    Ok(())
+}
+
+/// `ksegments bench`: run perf areas and write `BENCH_<area>.json`
+/// snapshots — the numbers CI diffs against the committed trajectory.
+fn cmd_bench(args: &Args) -> Result<()> {
+    let mut areas = args.all("area");
+    if areas.is_empty() {
+        areas.push("sched".to_string());
+    }
+    let out_dir = PathBuf::from(args.kv.get("out-dir").map(String::as_str).unwrap_or("."));
+    std::fs::create_dir_all(&out_dir).with_context(|| out_dir.display().to_string())?;
+    for area in &areas {
+        let snap = ksegments::bench_harness::run_bench_area(area, args.seed(), args.workers())
+            .map_err(|e| anyhow!(e))?;
+        let path = out_dir.join(snap.file_name());
+        std::fs::write(&path, format!("{}\n", snap.to_json()))
+            .with_context(|| path.display().to_string())?;
+        println!(
+            "[{area}] {:.0} {} over {:.2}s wall -> {}",
+            snap.throughput,
+            snap.throughput_unit,
+            snap.wall_s,
+            path.display()
+        );
     }
     Ok(())
 }
@@ -874,6 +1069,7 @@ fn real_main() -> Result<()> {
         "validate-runtime" => cmd_validate_runtime(),
         "serve" => cmd_serve(&args),
         "schedule" => cmd_schedule(&args),
+        "bench" => cmd_bench(&args),
         "bench-sched" => {
             let json = ksegments::bench_harness::bench_sched_json(args.seed(), args.workers());
             match args.kv.get("out") {

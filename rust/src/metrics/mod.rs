@@ -1,6 +1,7 @@
 //! Evaluation metrics and report tables — the quantities plotted in
 //! the paper's Fig. 7 (wastage, lowest-wastage wins, retries).
 
+use crate::telemetry::Registry;
 use crate::units::GbSeconds;
 use crate::util::stats;
 
@@ -117,6 +118,26 @@ impl MethodReport {
                 None => self.tasks.push(task),
             }
         }
+    }
+
+    /// Export replay results into a metrics [`Registry`] under
+    /// `{method,task}` labels: scored/retry counters plus an
+    /// average-wastage gauge per task type, and method-level rollups.
+    /// Purely observational — reads `&self`, writes only into `reg`.
+    pub fn export_metrics(&self, reg: &mut Registry) {
+        for t in &self.tasks {
+            let l = format!("{{method=\"{}\",task=\"{}\"}}", self.method, t.task_type);
+            reg.counter_add(&format!("replay_scored{l}"), t.n_scored as u64);
+            reg.counter_add(&format!("replay_retries{l}"), t.total_retries);
+            reg.gauge_set(&format!("replay_avg_wastage_gbs{l}"), t.avg_wastage_gbs());
+        }
+        let l = format!("{{method=\"{}\"}}", self.method);
+        reg.counter_add(
+            &format!("replay_scored_total{l}"),
+            self.tasks.iter().map(|t| t.n_scored as u64).sum(),
+        );
+        reg.counter_add(&format!("replay_retries_total{l}"), self.total_retries());
+        reg.gauge_set(&format!("replay_avg_wastage_gbs_mean{l}"), self.avg_wastage_gbs());
     }
 
     /// Merge an ordered sequence of per-cell reports into one; `None`
@@ -281,6 +302,25 @@ mod tests {
         assert_eq!(m.tasks.len(), 2);
         assert_eq!(m.total_wastage_gbs(), 7.0);
         assert_eq!(m.total_retries(), 1);
+    }
+
+    #[test]
+    fn export_metrics_labels_method_and_task() {
+        let r = MethodReport::new(
+            "k-Segments",
+            0.5,
+            vec![task("a", &[2.0, 4.0], &[1, 0]), task("b", &[6.0], &[2])],
+        );
+        let mut reg = Registry::new();
+        r.export_metrics(&mut reg);
+        assert_eq!(reg.counter("replay_scored{method=\"k-Segments\",task=\"a\"}"), 2);
+        assert_eq!(reg.counter("replay_retries{method=\"k-Segments\",task=\"b\"}"), 2);
+        assert_eq!(
+            reg.gauge("replay_avg_wastage_gbs{method=\"k-Segments\",task=\"a\"}"),
+            Some(3.0)
+        );
+        assert_eq!(reg.counter("replay_scored_total{method=\"k-Segments\"}"), 3);
+        assert_eq!(reg.gauge("replay_avg_wastage_gbs_mean{method=\"k-Segments\"}"), Some(4.5));
     }
 
     #[test]

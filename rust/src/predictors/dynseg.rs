@@ -240,6 +240,21 @@ impl MemoryPredictor for DynSegPredictor {
     fn observe(&mut self, run: &TaskRun) {
         self.histories.push(run);
     }
+
+    fn decision(&mut self, task_type: &str) -> Option<crate::telemetry::DecisionDetail> {
+        // fit_for() is cached per history version, so calling it here
+        // is deterministically idempotent — predict() is unaffected.
+        let window_len = self.histories.get(task_type).map_or(0, |h| h.len());
+        let fit = self.fit_for(task_type)?;
+        let t = self.cfg.t_resample as f64;
+        Some(crate::telemetry::DecisionDetail {
+            model: format!("dynseg-k{}", fit.k()),
+            scores: Vec::new(),
+            offset_mib: fit.seg_off.iter().copied().fold(0.0, f64::max),
+            segment_bounds: fit.bounds.iter().map(|&(_, hi)| hi as f64 / t).collect(),
+            window_len,
+        })
+    }
 }
 
 #[cfg(test)]

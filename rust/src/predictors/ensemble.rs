@@ -258,6 +258,25 @@ impl MemoryPredictor for EnsemblePredictor {
     fn observe(&mut self, run: &TaskRun) {
         self.histories.push(run);
     }
+
+    fn decision(&mut self, task_type: &str) -> Option<crate::telemetry::DecisionDetail> {
+        // fit_for() is cached per history version, so calling it here
+        // is deterministically idempotent — predict() is unaffected.
+        let window_len = self.histories.get(task_type).map_or(0, |h| h.len());
+        let fit = self.fit_for(task_type)?;
+        let scores = SUB_MODELS
+            .iter()
+            .zip(fit.scores)
+            .map(|(m, s)| (m.label().to_string(), s))
+            .collect();
+        Some(crate::telemetry::DecisionDetail {
+            model: fit.chosen.label().to_string(),
+            scores,
+            offset_mib: fit.offset,
+            segment_bounds: Vec::new(),
+            window_len,
+        })
+    }
 }
 
 #[cfg(test)]

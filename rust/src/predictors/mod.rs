@@ -176,6 +176,19 @@ pub trait MemoryPredictor: Send {
 
     /// A successful execution completed; fold it into the model.
     fn observe(&mut self, run: &TaskRun);
+
+    /// Introspect the current fit for `task_type` — which sub-model
+    /// is winning, its candidate scores, change points and offset —
+    /// for the provenance log (DESIGN.md §12). Purely observational:
+    /// implementations must not change what subsequent [`predict`]
+    /// calls return (fits may be computed and cached, but the cache
+    /// must be deterministically idempotent). Models with nothing to
+    /// report keep the default `None`.
+    ///
+    /// [`predict`]: MemoryPredictor::predict
+    fn decision(&mut self, _task_type: &str) -> Option<crate::telemetry::DecisionDetail> {
+        None
+    }
 }
 
 impl MemoryPredictor for Box<dyn MemoryPredictor> {
@@ -199,6 +212,9 @@ impl MemoryPredictor for Box<dyn MemoryPredictor> {
     }
     fn observe(&mut self, run: &TaskRun) {
         (**self).observe(run)
+    }
+    fn decision(&mut self, task_type: &str) -> Option<crate::telemetry::DecisionDetail> {
+        (**self).decision(task_type)
     }
 }
 

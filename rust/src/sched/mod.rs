@@ -159,6 +159,7 @@ use crate::ml::step_fn::StepFunction;
 use crate::predictors::{Allocation, FailureCause, MemoryPredictor};
 use crate::rng::Rng;
 use crate::sim::{simulate_attempt, AttemptOutcome};
+use crate::telemetry::{trace_engine_event, RunTelemetry};
 use crate::trace::{TaskRun, Trace};
 use crate::units::{GbSeconds, MemMiB, Seconds};
 
@@ -406,6 +407,9 @@ fn planned_profile(alloc: &Allocation, now: f64) -> Vec<(f64, f64)> {
 struct Sim<'a> {
     cfg: &'a SchedConfig,
     predictor: &'a mut dyn MemoryPredictor,
+    /// Observation-only attachments (trace sink + provenance log);
+    /// [`RunTelemetry::off`] on the plain entry points.
+    tel: &'a mut RunTelemetry,
     cluster: Cluster,
     /// Per-node committed-load ledgers (time-indexed reservations).
     ledgers: Vec<TimeProfile>,
@@ -436,6 +440,16 @@ struct Sim<'a> {
 }
 
 impl Sim<'_> {
+    /// Record an engine event, mirroring it to the trace sink when one
+    /// is attached (the default [`crate::telemetry::NullSink`] gates
+    /// this to a branch, so the hot path never builds a trace event).
+    fn emit(&mut self, now: f64, ev: EngineEvent) {
+        if self.tel.trace.enabled() {
+            trace_engine_event(self.tel.trace.as_mut(), &ev, now);
+        }
+        self.log.push(ev);
+    }
+
     fn reservation_alloc(&self, p: &Pending) -> Allocation {
         if p.reserve_static {
             Allocation::Static(MemMiB(p.alloc.max_value()))
@@ -496,13 +510,16 @@ impl Sim<'_> {
             }
         }
         self.events.push(now + end_elapsed, SchedEvent::Finish { exec });
-        self.log.push(EngineEvent::Placed {
-            task_type: run.task_type.clone(),
-            seq: run.seq,
-            node: reservation.node_idx,
-            time_s: now,
-            reserved: reservation.mem,
-        });
+        self.emit(
+            now,
+            EngineEvent::Placed {
+                task_type: run.task_type.clone(),
+                seq: run.seq,
+                node: reservation.node_idx,
+                time_s: now,
+                reserved: reservation.mem,
+            },
+        );
         self.running.insert(
             exec,
             Running {
@@ -525,11 +542,14 @@ impl Sim<'_> {
 
     fn place_or_queue(&mut self, p: Pending, now: f64) {
         if !self.try_place(&p, now) && !self.try_preempt_place(&p, now) {
-            self.log.push(EngineEvent::Queued {
-                task_type: p.run.task_type.clone(),
-                seq: p.run.seq,
-                requested: initial_request(&self.reservation_alloc(&p)),
-            });
+            self.emit(
+                now,
+                EngineEvent::Queued {
+                    task_type: p.run.task_type.clone(),
+                    seq: p.run.seq,
+                    requested: initial_request(&self.reservation_alloc(&p)),
+                },
+            );
             self.waiting.push_back(p);
         }
     }
@@ -574,23 +594,29 @@ impl Sim<'_> {
         match cause {
             FailureCause::NodeLost => {
                 self.report.node_lost += 1;
-                self.log.push(EngineEvent::NodeLost {
-                    task_type: r.run.task_type.clone(),
-                    seq: r.run.seq,
-                    attempt: r.attempt,
-                    node: r.reservation.node_idx,
-                    time_s: now,
-                });
+                self.emit(
+                    now,
+                    EngineEvent::NodeLost {
+                        task_type: r.run.task_type.clone(),
+                        seq: r.run.seq,
+                        attempt: r.attempt,
+                        node: r.reservation.node_idx,
+                        time_s: now,
+                    },
+                );
             }
             FailureCause::Preempted => {
                 self.report.preempted += 1;
-                self.log.push(EngineEvent::Preempted {
-                    task_type: r.run.task_type.clone(),
-                    seq: r.run.seq,
-                    attempt: r.attempt,
-                    node: r.reservation.node_idx,
-                    time_s: now,
-                });
+                self.emit(
+                    now,
+                    EngineEvent::Preempted {
+                        task_type: r.run.task_type.clone(),
+                        seq: r.run.seq,
+                        attempt: r.attempt,
+                        node: r.reservation.node_idx,
+                        time_s: now,
+                    },
+                );
             }
             FailureCause::Oom => unreachable!("OOM kills resolve through on_finish"),
         }
@@ -638,11 +664,10 @@ impl Sim<'_> {
                 .filter(|(_, r)| r.reservation.node_idx == node)
                 .map(|(&e, _)| e)
                 .collect();
-            self.log.push(EngineEvent::NodeFailed {
-                node,
-                killed: victims.len() as u32,
-                time_s: now,
-            });
+            self.emit(
+                now,
+                EngineEvent::NodeFailed { node, killed: victims.len() as u32, time_s: now },
+            );
             let requeue: Vec<Pending> = victims
                 .into_iter()
                 .map(|exec| self.kill_blameless(exec, FailureCause::NodeLost, now))
@@ -668,7 +693,7 @@ impl Sim<'_> {
             if was_provisioning {
                 self.report.nodes_added += 1;
             }
-            self.log.push(EngineEvent::NodeJoined { node, time_s: now });
+            self.emit(now, EngineEvent::NodeJoined { node, time_s: now });
             self.drain(now);
         }
     }
@@ -700,7 +725,7 @@ impl Sim<'_> {
             if let Some(i) = idle {
                 self.cluster.retire(i);
                 self.report.nodes_retired += 1;
-                self.log.push(EngineEvent::NodeRetired { node: i, time_s: now });
+                self.emit(now, EngineEvent::NodeRetired { node: i, time_s: now });
             }
         }
     }
@@ -770,15 +795,42 @@ impl Sim<'_> {
     /// mode; independent arrivals pass `None`.
     fn submit(&mut self, run: Rc<TaskRun>, wf: Option<WfRef>, now: f64) {
         self.report.submitted += 1;
+        // Snapshot the fit behind the upcoming prediction first. Both
+        // calls are observation-only (fit caches are deterministically
+        // idempotent), so predict() below returns exactly what it
+        // would have without the provenance log attached.
+        let detail = if self.tel.provenance.is_some() {
+            self.predictor.decision(&run.task_type)
+        } else {
+            None
+        };
         let alloc = clamp_to_node_max(
             self.predictor.predict(&run.task_type, run.input_mib),
             self.node_max,
         );
-        self.log.push(EngineEvent::Submitted {
-            task_type: run.task_type.clone(),
-            seq: run.seq,
-            requested: MemMiB(alloc.max_value()),
-        });
+        if let Some(log) = &mut self.tel.provenance {
+            let segments = match &alloc {
+                Allocation::Static(_) => 1,
+                Allocation::Dynamic(f) => f.k(),
+            };
+            log.record_predict(
+                now,
+                &run.task_type,
+                run.seq,
+                run.input_mib,
+                alloc.max_value(),
+                segments,
+                detail.as_ref(),
+            );
+        }
+        self.emit(
+            now,
+            EngineEvent::Submitted {
+                task_type: run.task_type.clone(),
+                seq: run.seq,
+                requested: MemMiB(alloc.max_value()),
+            },
+        );
         let priority =
             if self.cfg.preempt && self.pri_rng.f64() < self.cfg.hipri_frac { 1 } else { 0 };
         let p = Pending {
@@ -839,12 +891,15 @@ impl Sim<'_> {
     /// parent's final completion.
     fn release_task(&mut self, inst: usize, task: usize, now: f64) {
         let run = self.dag[inst].runs[task].take().expect("task released twice");
-        self.log.push(EngineEvent::Released {
-            task_type: run.task_type.clone(),
-            seq: run.seq,
-            instance: self.dag[inst].index,
-            time_s: now,
-        });
+        self.emit(
+            now,
+            EngineEvent::Released {
+                task_type: run.task_type.clone(),
+                seq: run.seq,
+                instance: self.dag[inst].index,
+                time_s: now,
+            },
+        );
         self.submit(run, Some(WfRef { inst, task }), now);
     }
 
@@ -880,13 +935,15 @@ impl Sim<'_> {
         let st = &self.dag[inst];
         let makespan_s = now - st.arrived_at;
         let first_s = st.first_completion_at.unwrap_or(now) - st.arrived_at;
-        self.log.push(EngineEvent::WorkflowDone {
+        let done = EngineEvent::WorkflowDone {
             workflow: st.name.clone(),
             instance: st.index,
             tasks: st.children.len() as u32,
             time_s: now,
             makespan_s,
-        });
+        };
+        self.emit(now, done);
+        let st = &self.dag[inst];
         self.report.workflows_completed += 1;
         self.report.workflow_makespans.push(makespan_s);
         self.report.workflow_critical_paths.push(st.critical_path_s);
@@ -923,12 +980,15 @@ impl Sim<'_> {
         self.report.total_wastage += GbSeconds(MemMiB(held_mibs).as_gb());
         self.cluster.release(r.reservation);
         self.ledgers[r.reservation.node_idx].subtract_profile(&r.profile);
-        self.log.push(EngineEvent::GrowDenied {
-            task_type: r.run.task_type.clone(),
-            seq: r.run.seq,
-            segment,
-            time_s: now,
-        });
+        self.emit(
+            now,
+            EngineEvent::GrowDenied {
+                task_type: r.run.task_type.clone(),
+                seq: r.run.seq,
+                segment,
+                time_s: now,
+            },
+        );
         let p = Pending {
             run: r.run,
             attempt: r.attempt,
@@ -957,12 +1017,15 @@ impl Sim<'_> {
                 // OOMs exclusively; blameless kills never reach here
                 debug_assert_eq!(info.cause, FailureCause::Oom);
                 self.report.oom_kills += 1;
-                self.log.push(EngineEvent::OomKilled {
-                    task_type: r.run.task_type.clone(),
-                    seq: r.run.seq,
-                    attempt: r.attempt,
-                    time_s: now,
-                });
+                self.emit(
+                    now,
+                    EngineEvent::OomKilled {
+                        task_type: r.run.task_type.clone(),
+                        seq: r.run.seq,
+                        attempt: r.attempt,
+                        time_s: now,
+                    },
+                );
                 let next_attempt = r.attempt + 1;
                 let (alloc, final_attempt) = if next_attempt > self.cfg.max_attempts {
                     // budget exhausted: node max, complete regardless
@@ -981,6 +1044,17 @@ impl Sim<'_> {
                         false,
                     )
                 };
+                if let Some(log) = &mut self.tel.provenance {
+                    log.record_failure(
+                        now,
+                        &r.run.task_type,
+                        r.run.seq,
+                        r.attempt,
+                        FailureCause::Oom.name(),
+                        info.used_mib,
+                        alloc.max_value(),
+                    );
+                }
                 let p = Pending {
                     run: r.run,
                     attempt: next_attempt,
@@ -996,11 +1070,14 @@ impl Sim<'_> {
             _ => {
                 // success, or a final attempt the manager forces through
                 self.report.completed += 1;
-                self.log.push(EngineEvent::Completed {
-                    task_type: r.run.task_type.clone(),
-                    seq: r.run.seq,
-                    attempts: r.attempt,
-                });
+                self.emit(
+                    now,
+                    EngineEvent::Completed {
+                        task_type: r.run.task_type.clone(),
+                        seq: r.run.seq,
+                        attempts: r.attempt,
+                    },
+                );
                 // the run's last reference drops here in streaming mode
                 self.predictor.observe(&r.run);
                 completed_wf = r.wf;
@@ -1082,6 +1159,19 @@ pub fn schedule_trace_logged(
     predictor: &mut dyn MemoryPredictor,
     cfg: &SchedConfig,
 ) -> (SchedReport, EventLog) {
+    schedule_trace_telemetry(trace, predictor, cfg, &mut RunTelemetry::off())
+}
+
+/// [`schedule_trace`] variant with telemetry attachments (trace sink
+/// and/or provenance log). Telemetry is observation-only: the returned
+/// report and event log are bit-identical to the untraced run
+/// (`tests/telemetry.rs` pins this). The caller finishes `tel`.
+pub fn schedule_trace_telemetry(
+    trace: &Trace,
+    predictor: &mut dyn MemoryPredictor,
+    cfg: &SchedConfig,
+    tel: &mut RunTelemetry,
+) -> (SchedReport, EventLog) {
     assert!(
         (0.0..1.0).contains(&cfg.training_frac),
         "training fraction in [0,1)"
@@ -1103,7 +1193,7 @@ pub fn schedule_trace_logged(
         scored.extend(runs[n_train..].iter().cloned());
     }
     scored.sort_by_key(|r| r.seq);
-    run_engine(RunFeed::Vec(scored.into()), predictor, cfg)
+    run_engine(RunFeed::Vec(scored.into()), predictor, cfg, tel)
         .expect("in-memory run feed cannot fail")
 }
 
@@ -1121,6 +1211,18 @@ pub fn schedule_stream(
     cfg: &SchedConfig,
     chunk: usize,
 ) -> Result<(SchedReport, EventLog)> {
+    schedule_stream_telemetry(src, predictor, cfg, chunk, &mut RunTelemetry::off())
+}
+
+/// [`schedule_stream`] variant with telemetry attachments; see
+/// [`schedule_trace_telemetry`] for the observation-only contract.
+pub fn schedule_stream_telemetry(
+    src: &mut dyn TraceSource,
+    predictor: &mut dyn MemoryPredictor,
+    cfg: &SchedConfig,
+    chunk: usize,
+    tel: &mut RunTelemetry,
+) -> Result<(SchedReport, EventLog)> {
     for (ty, mem) in src.defaults() {
         predictor.prime(&ty, mem);
     }
@@ -1128,6 +1230,7 @@ pub fn schedule_stream(
         RunFeed::Source { src, chunk: chunk.max(1), buf: VecDeque::new() },
         predictor,
         cfg,
+        tel,
     )
 }
 
@@ -1155,10 +1258,21 @@ pub fn schedule_workflows_logged(
     predictor: &mut dyn MemoryPredictor,
     cfg: &SchedConfig,
 ) -> (SchedReport, EventLog) {
+    schedule_workflows_telemetry(src, predictor, cfg, &mut RunTelemetry::off())
+}
+
+/// [`schedule_workflows`] variant with telemetry attachments; see
+/// [`schedule_trace_telemetry`] for the observation-only contract.
+pub fn schedule_workflows_telemetry(
+    src: WorkflowSource,
+    predictor: &mut dyn MemoryPredictor,
+    cfg: &SchedConfig,
+    tel: &mut RunTelemetry,
+) -> (SchedReport, EventLog) {
     for (ty, mem) in src.defaults() {
         predictor.prime(ty, *mem);
     }
-    run_engine(RunFeed::Instances(src.instances.into()), predictor, cfg)
+    run_engine(RunFeed::Instances(src.instances.into()), predictor, cfg, tel)
         .expect("in-memory instance feed cannot fail")
 }
 
@@ -1173,6 +1287,7 @@ fn run_engine(
     mut feed: RunFeed<'_>,
     predictor: &mut dyn MemoryPredictor,
     cfg: &SchedConfig,
+    tel: &mut RunTelemetry,
 ) -> Result<(SchedReport, EventLog)> {
     let cluster = Cluster::heterogeneous(cfg.nodes.clone());
     // Snapshotted from the base roster: base nodes never retire and
@@ -1190,6 +1305,7 @@ fn run_engine(
     let mut sim = Sim {
         cfg,
         predictor,
+        tel,
         cluster,
         ledgers: vec![TimeProfile::new(); n_nodes],
         events: EventQueue::new(),

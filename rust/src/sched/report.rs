@@ -10,9 +10,15 @@
 //! therefore permutation-invariant up to float-addition reordering —
 //! locked down by the property tests in `tests/sched_integration.rs`.
 
+use crate::telemetry::Registry;
 use crate::units::{GbSeconds, Seconds};
 use crate::util::stats;
 use crate::util::stats::SortedSamples;
+
+/// Queue-wait histogram buckets (seconds) used by
+/// [`SchedReport::export_metrics`] — fixed so that partial registries
+/// from different runs always merge.
+pub const QUEUE_WAIT_BUCKETS_S: &[f64] = &[0.5, 1.0, 2.0, 5.0, 10.0, 30.0, 60.0, 120.0];
 
 /// An instance counts as a **straggler** when its achieved makespan
 /// exceeds this multiple of its critical-path length — it spent more
@@ -269,6 +275,48 @@ impl SchedReport {
         Some(acc)
     }
 
+    /// Export the report into a metrics [`Registry`] under
+    /// `{policy,method}` labels — counters for the accounting
+    /// identities, gauges for the derived ratios and a fixed-bucket
+    /// queue-wait histogram ([`QUEUE_WAIT_BUCKETS_S`]). Purely
+    /// observational: reads `&self`, writes only into `reg`.
+    pub fn export_metrics(&self, reg: &mut Registry) {
+        let l = format!("{{policy=\"{}\",method=\"{}\"}}", self.policy, self.method);
+        for (name, v) in [
+            ("sched_submitted", self.submitted),
+            ("sched_completed", self.completed),
+            ("sched_admitted", self.admitted),
+            ("sched_rejected", self.rejected),
+            ("sched_placement_attempts", self.placement_attempts),
+            ("sched_oom_kills", self.oom_kills),
+            ("sched_grow_denials", self.grow_denials),
+            ("sched_preempted", self.preempted),
+            ("sched_node_lost", self.node_lost),
+            ("sched_node_failures", self.node_failures),
+            ("sched_nodes_added", self.nodes_added),
+            ("sched_nodes_retired", self.nodes_retired),
+            ("sched_events_processed", self.events_processed),
+            ("sched_workflows_submitted", self.workflows_submitted),
+            ("sched_workflows_completed", self.workflows_completed),
+            ("sched_workflow_stragglers", self.workflow_stragglers),
+        ] {
+            reg.counter_add(&format!("{name}{l}"), v);
+        }
+        for (name, v) in [
+            ("sched_makespan_s", self.makespan.0),
+            ("sched_utilization_frac", self.utilization()),
+            ("sched_peak_util_frac", self.peak_util_frac),
+            ("sched_peak_running", self.peak_running as f64),
+            ("sched_throughput_per_hour", self.throughput_per_hour()),
+            ("sched_total_wastage_gbs", self.total_wastage.0),
+        ] {
+            reg.gauge_set(&format!("{name}{l}"), v);
+        }
+        for &w in &self.queue_waits {
+            reg.observe(&format!("sched_queue_wait_s{l}"), QUEUE_WAIT_BUCKETS_S, w);
+        }
+    }
+
     /// One-line operator summary (plus a workflow line in DAG mode).
     pub fn summary(&self) -> String {
         let waits = self.queue_wait_percentiles();
@@ -506,6 +554,31 @@ mod tests {
         assert_eq!(a.workflow_makespans, vec![100.0, 40.0]);
         assert_eq!(a.workflow_critical_paths, vec![50.0, 40.0]);
         assert_eq!(a.workflow_stragglers, 1);
+    }
+
+    #[test]
+    fn export_metrics_labels_policy_and_method() {
+        let mut r = rep(&[0.4, 3.0, 200.0], 30, 3600.0);
+        r.oom_kills = 2;
+        let mut reg = Registry::new();
+        r.export_metrics(&mut reg);
+        let l = "{policy=\"segment-wise\",method=\"m\"}";
+        assert_eq!(reg.counter(&format!("sched_completed{l}")), 30);
+        assert_eq!(reg.counter(&format!("sched_oom_kills{l}")), 2);
+        assert_eq!(reg.gauge(&format!("sched_makespan_s{l}")), Some(3600.0));
+        assert_eq!(reg.gauge(&format!("sched_utilization_frac{l}")), Some(0.25));
+        let h = reg.histogram(&format!("sched_queue_wait_s{l}")).expect("wait histogram");
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.bounds(), QUEUE_WAIT_BUCKETS_S);
+        // 0.4 → le=0.5 bucket, 3.0 → le=5, 200.0 → overflow
+        assert_eq!(h.counts()[0], 1);
+        assert_eq!(*h.counts().last().unwrap(), 1);
+        // exposition renders the spliced-label histogram
+        let prom = reg.to_prometheus();
+        assert!(
+            prom.contains("sched_queue_wait_s_bucket{policy=\"segment-wise\",method=\"m\",le=\"0.5\"} 1"),
+            "{prom}"
+        );
     }
 
     #[test]

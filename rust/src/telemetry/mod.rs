@@ -1,0 +1,390 @@
+//! Cross-cutting observability: run tracing, metrics, provenance.
+//!
+//! Three pillars (DESIGN.md §12):
+//!
+//! * **Run tracing** ([`sink`]) — [`TraceSink`] + a streaming Chrome
+//!   `trace_event`/Perfetto JSON writer. The scheduler, the replay
+//!   engine and the sharded prediction service emit begin/end/instant
+//!   spans; `schedule --trace-out run.json` opens directly in
+//!   <https://ui.perfetto.dev> or `chrome://tracing`.
+//! * **Metrics** ([`registry`]) — counters/gauges/fixed-bucket
+//!   histograms with Prometheus text exposition and a JSON snapshot
+//!   (`--metrics-out FILE`).
+//! * **Provenance** ([`provenance`]) — optional per-decision JSONL
+//!   audit records (`--provenance-out FILE`).
+//!
+//! The golden rule: telemetry **observes, never influences**. Enabling
+//! any sink leaves every `SchedReport`/`MethodReport` bit-identical to
+//! the untraced run (`tests/telemetry.rs` pins this), and scheduler/
+//! replay events are stamped with **simulated** time — the wall clock
+//! appears only in bench snapshots and service-thread spans.
+
+pub mod provenance;
+pub mod registry;
+pub mod sink;
+
+pub use provenance::{DecisionDetail, ProvenanceLog};
+pub use registry::{Histogram, Registry};
+pub use sink::{
+    chrome_trace_to_string, write_chrome_trace, ArgValue, ChromeTraceSink, NullSink, TraceEvent,
+    TraceSink, VecSink,
+};
+
+use std::io;
+
+use crate::engine::events::EngineEvent;
+
+/// The telemetry attachments of one scheduler run: a trace sink
+/// (default [`NullSink`]) plus an optional provenance log. Owned by
+/// the run so the engine needs no lifetime plumbing.
+pub struct RunTelemetry {
+    pub trace: Box<dyn TraceSink>,
+    pub provenance: Option<ProvenanceLog>,
+}
+
+impl RunTelemetry {
+    /// Everything off — the allocation-free default.
+    pub fn off() -> RunTelemetry {
+        RunTelemetry { trace: Box::new(NullSink), provenance: None }
+    }
+
+    pub fn with_trace(sink: Box<dyn TraceSink>) -> RunTelemetry {
+        RunTelemetry { trace: sink, provenance: None }
+    }
+
+    /// Close both attachments, surfacing the first deferred I/O error.
+    pub fn finish(&mut self) -> io::Result<()> {
+        self.trace.finish()?;
+        if let Some(p) = &mut self.provenance {
+            p.finish()?;
+        }
+        Ok(())
+    }
+}
+
+impl Default for RunTelemetry {
+    fn default() -> Self {
+        RunTelemetry::off()
+    }
+}
+
+/// FNV-1a 64-bit hash (same constants as the coordinator's shard
+/// router).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
+/// Async-span id for one task run: type hash mixed with the run seq,
+/// masked to 48 bits so a JSON f64 round-trip is exact.
+pub fn span_id(task_type: &str, seq: u64) -> u64 {
+    (fnv1a64(task_type.as_bytes()) ^ seq.wrapping_mul(0x9e37_79b9_7f4a_7c15)) & 0xffff_ffff_ffff
+}
+
+/// Simulated seconds → trace microseconds.
+pub fn sim_ts_us(now_s: f64) -> u64 {
+    (now_s * 1e6).round().max(0.0) as u64
+}
+
+/// Map one engine event to its trace representation. Task lifecycles
+/// become async spans — `'b'` at placement, `'e'` at completion or
+/// kill (matched by `(cat, id)`) — and everything else becomes an
+/// instant, so OOM storms, preemption cascades, node churn and DAG
+/// gating all show up as timeline tracks per node (`tid`).
+pub fn trace_engine_event(sink: &mut dyn TraceSink, ev: &EngineEvent, now_s: f64) {
+    let ts = sim_ts_us(now_s);
+    match ev {
+        EngineEvent::Submitted { task_type, seq, requested } => {
+            sink.event(&TraceEvent {
+                name: task_type.clone(),
+                cat: "arrival",
+                ph: 'i',
+                ts_us: ts,
+                pid: 0,
+                tid: 0,
+                id: None,
+                args: vec![
+                    ("seq", ArgValue::U64(*seq)),
+                    ("requested_mib", ArgValue::F64(requested.0)),
+                ],
+            });
+        }
+        EngineEvent::Queued { task_type, seq, requested } => {
+            sink.event(&TraceEvent {
+                name: task_type.clone(),
+                cat: "queue",
+                ph: 'i',
+                ts_us: ts,
+                pid: 0,
+                tid: 0,
+                id: None,
+                args: vec![
+                    ("seq", ArgValue::U64(*seq)),
+                    ("requested_mib", ArgValue::F64(requested.0)),
+                ],
+            });
+        }
+        EngineEvent::Failed { task_type, seq, attempt, used, allocated, .. } => {
+            sink.event(&TraceEvent {
+                name: task_type.clone(),
+                cat: "kill",
+                ph: 'i',
+                ts_us: ts,
+                pid: 0,
+                tid: 0,
+                id: None,
+                args: vec![
+                    ("seq", ArgValue::U64(*seq)),
+                    ("attempt", ArgValue::U64(u64::from(*attempt))),
+                    ("used_mib", ArgValue::F64(used.0)),
+                    ("allocated_mib", ArgValue::F64(allocated.0)),
+                ],
+            });
+        }
+        EngineEvent::Placed { task_type, seq, node, reserved, .. } => {
+            sink.event(&TraceEvent {
+                name: task_type.clone(),
+                cat: "task",
+                ph: 'b',
+                ts_us: ts,
+                pid: 0,
+                tid: *node as u32,
+                id: Some(span_id(task_type, *seq)),
+                args: vec![
+                    ("seq", ArgValue::U64(*seq)),
+                    ("node", ArgValue::U64(*node as u64)),
+                    ("reserved_mib", ArgValue::F64(reserved.0)),
+                ],
+            });
+        }
+        EngineEvent::Completed { task_type, seq, attempts } => {
+            sink.event(&TraceEvent {
+                name: task_type.clone(),
+                cat: "task",
+                ph: 'e',
+                ts_us: ts,
+                pid: 0,
+                tid: 0,
+                id: Some(span_id(task_type, *seq)),
+                args: vec![
+                    ("seq", ArgValue::U64(*seq)),
+                    ("attempts", ArgValue::U64(u64::from(*attempts))),
+                ],
+            });
+        }
+        EngineEvent::OomKilled { task_type, seq, attempt, .. } => {
+            end_span_with_kill(sink, ts, task_type, *seq, *attempt, "oom-kill", 0);
+        }
+        EngineEvent::GrowDenied { task_type, seq, segment, .. } => {
+            end_span_with_kill(sink, ts, task_type, *seq, *segment as u32, "grow-denied", 0);
+        }
+        EngineEvent::NodeLost { task_type, seq, attempt, node, .. } => {
+            end_span_with_kill(sink, ts, task_type, *seq, *attempt, "node-lost-kill", *node as u32);
+        }
+        EngineEvent::Preempted { task_type, seq, attempt, node, .. } => {
+            end_span_with_kill(sink, ts, task_type, *seq, *attempt, "preempt-kill", *node as u32);
+        }
+        EngineEvent::Released { task_type, seq, instance, .. } => {
+            sink.event(&TraceEvent {
+                name: task_type.clone(),
+                cat: "dag",
+                ph: 'i',
+                ts_us: ts,
+                pid: 0,
+                tid: 0,
+                id: None,
+                args: vec![
+                    ("seq", ArgValue::U64(*seq)),
+                    ("instance", ArgValue::U64(*instance)),
+                ],
+            });
+        }
+        EngineEvent::WorkflowDone { workflow, instance, tasks, makespan_s, .. } => {
+            sink.event(&TraceEvent {
+                name: workflow.clone(),
+                cat: "dag",
+                ph: 'i',
+                ts_us: ts,
+                pid: 0,
+                tid: 0,
+                id: None,
+                args: vec![
+                    ("instance", ArgValue::U64(*instance)),
+                    ("tasks", ArgValue::U64(u64::from(*tasks))),
+                    ("makespan_s", ArgValue::F64(*makespan_s)),
+                ],
+            });
+        }
+        EngineEvent::NodeFailed { node, killed, .. } => {
+            let mut e = TraceEvent::instant("node-failed", "node", ts, *node as u32);
+            e.args = vec![("killed", ArgValue::U64(u64::from(*killed)))];
+            sink.event(&e);
+        }
+        EngineEvent::NodeJoined { node, .. } => {
+            sink.event(&TraceEvent::instant("node-joined", "node", ts, *node as u32));
+        }
+        EngineEvent::NodeRetired { node, .. } => {
+            sink.event(&TraceEvent::instant("node-retired", "node", ts, *node as u32));
+        }
+    }
+}
+
+/// A killed attempt: close its `'b'` span and drop a kill marker.
+fn end_span_with_kill(
+    sink: &mut dyn TraceSink,
+    ts: u64,
+    task_type: &str,
+    seq: u64,
+    detail: u32,
+    kill_name: &'static str,
+    tid: u32,
+) {
+    sink.event(&TraceEvent {
+        name: task_type.to_string(),
+        cat: "task",
+        ph: 'e',
+        ts_us: ts,
+        pid: 0,
+        tid,
+        id: Some(span_id(task_type, seq)),
+        args: Vec::new(),
+    });
+    sink.event(&TraceEvent {
+        name: kill_name.to_string(),
+        cat: "kill",
+        ph: 'i',
+        ts_us: ts,
+        pid: 0,
+        tid,
+        id: None,
+        args: vec![("seq", ArgValue::U64(seq)), ("detail", ArgValue::U64(u64::from(detail)))],
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::units::MemMiB;
+
+    #[test]
+    fn span_ids_are_stable_and_distinct() {
+        assert_eq!(span_id("a", 1), span_id("a", 1));
+        assert_ne!(span_id("a", 1), span_id("a", 2));
+        assert_ne!(span_id("a", 1), span_id("b", 1));
+        assert!(span_id("wf/align", u64::MAX) <= 0xffff_ffff_ffff);
+    }
+
+    #[test]
+    fn sim_time_maps_to_microseconds() {
+        assert_eq!(sim_ts_us(0.0), 0);
+        assert_eq!(sim_ts_us(1.5), 1_500_000);
+        assert_eq!(sim_ts_us(-1.0), 0, "clamped, never underflows");
+    }
+
+    #[test]
+    fn placement_and_completion_form_a_span() {
+        let mut sink = VecSink::new();
+        let placed = EngineEvent::Placed {
+            task_type: "t".into(),
+            seq: 9,
+            node: 2,
+            time_s: 4.0,
+            reserved: MemMiB(512.0),
+        };
+        let done = EngineEvent::Completed { task_type: "t".into(), seq: 9, attempts: 1 };
+        trace_engine_event(&mut sink, &placed, 4.0);
+        trace_engine_event(&mut sink, &done, 9.0);
+        assert_eq!(sink.events.len(), 2);
+        let (b, e) = (&sink.events[0], &sink.events[1]);
+        assert_eq!(b.ph, 'b');
+        assert_eq!(e.ph, 'e');
+        assert_eq!(b.id, e.id, "begin/end must share the span id");
+        assert_eq!(b.cat, e.cat);
+        assert_eq!(b.tid, 2, "placement is tracked on its node");
+        assert!(e.ts_us > b.ts_us);
+    }
+
+    #[test]
+    fn kills_end_the_span_and_mark_the_cause() {
+        let mut sink = VecSink::new();
+        let oom =
+            EngineEvent::OomKilled { task_type: "t".into(), seq: 3, attempt: 1, time_s: 8.0 };
+        trace_engine_event(&mut sink, &oom, 8.0);
+        assert_eq!(sink.events.len(), 2);
+        assert_eq!(sink.events[0].ph, 'e');
+        assert_eq!(sink.events[0].id, Some(span_id("t", 3)));
+        assert_eq!(sink.events[1].ph, 'i');
+        assert_eq!(sink.events[1].name, "oom-kill");
+        assert_eq!(sink.events[1].cat, "kill");
+    }
+
+    #[test]
+    fn every_variant_maps_to_at_least_one_event() {
+        let variants: Vec<EngineEvent> = vec![
+            EngineEvent::Submitted { task_type: "t".into(), seq: 0, requested: MemMiB(1.0) },
+            EngineEvent::Queued { task_type: "t".into(), seq: 0, requested: MemMiB(1.0) },
+            EngineEvent::Failed {
+                task_type: "t".into(),
+                seq: 0,
+                attempt: 1,
+                time_s: 1.0,
+                used: MemMiB(2.0),
+                allocated: MemMiB(1.0),
+            },
+            EngineEvent::Completed { task_type: "t".into(), seq: 0, attempts: 1 },
+            EngineEvent::Placed {
+                task_type: "t".into(),
+                seq: 0,
+                node: 0,
+                time_s: 1.0,
+                reserved: MemMiB(1.0),
+            },
+            EngineEvent::OomKilled { task_type: "t".into(), seq: 0, attempt: 1, time_s: 1.0 },
+            EngineEvent::GrowDenied { task_type: "t".into(), seq: 0, segment: 1, time_s: 1.0 },
+            EngineEvent::Released { task_type: "t".into(), seq: 0, instance: 0, time_s: 1.0 },
+            EngineEvent::WorkflowDone {
+                workflow: "w".into(),
+                instance: 0,
+                tasks: 3,
+                time_s: 9.0,
+                makespan_s: 9.0,
+            },
+            EngineEvent::NodeLost {
+                task_type: "t".into(),
+                seq: 0,
+                attempt: 1,
+                node: 0,
+                time_s: 1.0,
+            },
+            EngineEvent::Preempted {
+                task_type: "t".into(),
+                seq: 0,
+                attempt: 1,
+                node: 0,
+                time_s: 1.0,
+            },
+            EngineEvent::NodeFailed { node: 0, killed: 1, time_s: 1.0 },
+            EngineEvent::NodeJoined { node: 0, time_s: 1.0 },
+            EngineEvent::NodeRetired { node: 0, time_s: 1.0 },
+        ];
+        for ev in &variants {
+            let mut sink = VecSink::new();
+            trace_engine_event(&mut sink, ev, 1.0);
+            assert!(!sink.events.is_empty(), "{ev:?} produced no trace event");
+        }
+    }
+
+    #[test]
+    fn run_telemetry_off_is_disabled_and_finishes() {
+        let mut tel = RunTelemetry::off();
+        assert!(!tel.trace.enabled());
+        assert!(tel.provenance.is_none());
+        tel.finish().unwrap();
+        let def = RunTelemetry::default();
+        assert!(!def.trace.enabled());
+    }
+}

@@ -1,0 +1,277 @@
+//! Prediction provenance — an optional per-decision JSONL audit log.
+//!
+//! Every predict decision and every OOM escalation can be written as
+//! one JSON line, so the wastage of any eval cell can be traced back
+//! to the decision that caused it: which ensemble sub-model won (and
+//! the full RAQ score vector it beat), where the dynseg change points
+//! sat, how much §III-B offset was applied, and how a failure
+//! escalated the allocation.
+//!
+//! Like the trace sinks, the log is observation-only and defers I/O
+//! errors: recording never fails mid-run; [`ProvenanceLog::finish`]
+//! surfaces the first error at the end.
+
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+
+use crate::util::json::JsonWriter;
+
+/// What a predictor can report about its most recent fit for a task
+/// type — the introspection record behind one predict decision.
+/// Produced by [`crate::predictors::MemoryPredictor::decision`];
+/// static-only models leave the fields they lack empty.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecisionDetail {
+    /// Chosen (sub-)model label, e.g. `"linear"` or `"dynseg-k3"`.
+    pub model: String,
+    /// Candidate scores, e.g. the ensemble's per-sub-model RAQ values.
+    pub scores: Vec<(String, f64)>,
+    /// §III-B max-underprediction offset applied on top (MiB).
+    pub offset_mib: f64,
+    /// Segment upper bounds as fractions of the predicted runtime
+    /// (dynseg change points); empty for single-segment models.
+    pub segment_bounds: Vec<f64>,
+    /// Training-window length the fit was computed from.
+    pub window_len: usize,
+}
+
+/// JSONL audit writer. One line per record; see DESIGN.md §12 for the
+/// schema.
+pub struct ProvenanceLog {
+    w: Box<dyn Write>,
+    records: u64,
+    err: Option<io::Error>,
+}
+
+impl ProvenanceLog {
+    pub fn to_writer(w: Box<dyn Write>) -> ProvenanceLog {
+        ProvenanceLog { w, records: 0, err: None }
+    }
+
+    /// File-backed log (what `--provenance-out FILE` opens).
+    pub fn create(path: &str) -> io::Result<ProvenanceLog> {
+        Ok(ProvenanceLog::to_writer(Box::new(BufWriter::new(File::create(path)?))))
+    }
+
+    /// Records successfully written so far.
+    pub fn len(&self) -> u64 {
+        self.records
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records == 0
+    }
+
+    /// One predict decision: what was asked, what was allocated, and —
+    /// when the predictor exposes it — why.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_predict(
+        &mut self,
+        time_s: f64,
+        task_type: &str,
+        seq: u64,
+        input_mib: f64,
+        alloc_peak_mib: f64,
+        segments: usize,
+        detail: Option<&DecisionDetail>,
+    ) {
+        if self.err.is_some() {
+            return;
+        }
+        let r = write_predict(
+            &mut self.w,
+            time_s,
+            task_type,
+            seq,
+            input_mib,
+            alloc_peak_mib,
+            segments,
+            detail,
+        );
+        match r {
+            Ok(()) => self.records += 1,
+            Err(e) => self.err = Some(e),
+        }
+    }
+
+    /// One failure-driven escalation (the scheduler only reports OOM
+    /// causes here — blameless kills never change the allocation).
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_failure(
+        &mut self,
+        time_s: f64,
+        task_type: &str,
+        seq: u64,
+        attempt: u32,
+        cause: &str,
+        used_mib: f64,
+        new_peak_mib: f64,
+    ) {
+        if self.err.is_some() {
+            return;
+        }
+        let r = write_failure(
+            &mut self.w,
+            time_s,
+            task_type,
+            seq,
+            attempt,
+            cause,
+            used_mib,
+            new_peak_mib,
+        );
+        match r {
+            Ok(()) => self.records += 1,
+            Err(e) => self.err = Some(e),
+        }
+    }
+
+    /// Flush and surface the first deferred I/O error, if any.
+    pub fn finish(&mut self) -> io::Result<()> {
+        if let Some(e) = self.err.take() {
+            return Err(e);
+        }
+        self.w.flush()
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn write_predict(
+    w: &mut dyn Write,
+    time_s: f64,
+    task_type: &str,
+    seq: u64,
+    input_mib: f64,
+    alloc_peak_mib: f64,
+    segments: usize,
+    detail: Option<&DecisionDetail>,
+) -> io::Result<()> {
+    let mut j = JsonWriter::new(&mut *w);
+    j.begin_obj()?;
+    j.field_str("kind", "predict")?;
+    j.field_f64("time_s", time_s)?;
+    j.field_str("task", task_type)?;
+    j.field_u64("seq", seq)?;
+    j.field_f64("input_mib", input_mib)?;
+    j.field_f64("alloc_mib", alloc_peak_mib)?;
+    j.field_u64("segments", segments as u64)?;
+    if let Some(d) = detail {
+        j.field_str("model", &d.model)?;
+        if !d.scores.is_empty() {
+            j.key("scores")?;
+            j.begin_obj()?;
+            for (m, s) in &d.scores {
+                j.field_f64(m, *s)?;
+            }
+            j.end_obj()?;
+        }
+        j.field_f64("offset_mib", d.offset_mib)?;
+        if !d.segment_bounds.is_empty() {
+            j.key("segment_bounds")?;
+            j.begin_arr()?;
+            for b in &d.segment_bounds {
+                j.f64_val(*b)?;
+            }
+            j.end_arr()?;
+        }
+        j.field_u64("window", d.window_len as u64)?;
+    }
+    j.end_obj()?;
+    drop(j);
+    w.write_all(b"\n")
+}
+
+#[allow(clippy::too_many_arguments)]
+fn write_failure(
+    w: &mut dyn Write,
+    time_s: f64,
+    task_type: &str,
+    seq: u64,
+    attempt: u32,
+    cause: &str,
+    used_mib: f64,
+    new_peak_mib: f64,
+) -> io::Result<()> {
+    let mut j = JsonWriter::new(&mut *w);
+    j.begin_obj()?;
+    j.field_str("kind", "failure")?;
+    j.field_f64("time_s", time_s)?;
+    j.field_str("task", task_type)?;
+    j.field_u64("seq", seq)?;
+    j.field_u64("attempt", u64::from(attempt))?;
+    j.field_str("cause", cause)?;
+    j.field_f64("used_mib", used_mib)?;
+    j.field_f64("new_alloc_mib", new_peak_mib)?;
+    j.end_obj()?;
+    drop(j);
+    w.write_all(b"\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    /// Test writer sharing its buffer with the asserting side.
+    #[derive(Clone, Default)]
+    struct SharedBuf(Rc<RefCell<Vec<u8>>>);
+
+    impl Write for SharedBuf {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            self.0.borrow_mut().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn records_are_one_json_object_per_line() {
+        let buf = SharedBuf::default();
+        let mut log = ProvenanceLog::to_writer(Box::new(buf.clone()));
+        let detail = DecisionDetail {
+            model: "percentile".into(),
+            scores: vec![("linear".into(), 0.4), ("percentile".into(), 0.9)],
+            offset_mib: 12.5,
+            segment_bounds: vec![0.25, 1.0],
+            window_len: 8,
+        };
+        log.record_predict(3.5, "wf/align", 7, 100.0, 2048.0, 4, Some(&detail));
+        log.record_predict(4.0, "wf/sort", 8, 50.0, 512.0, 1, None);
+        log.record_failure(9.0, "wf/align", 7, 1, "oom", 2100.0, 4096.0);
+        log.finish().unwrap();
+        assert_eq!(log.len(), 3);
+
+        let raw = buf.0.borrow().clone();
+        let text = String::from_utf8(raw).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+
+        let p = Json::parse(lines[0]).expect("line 1 valid");
+        assert_eq!(p.get("kind").as_str(), Some("predict"));
+        assert_eq!(p.get("task").as_str(), Some("wf/align"));
+        assert_eq!(p.get("model").as_str(), Some("percentile"));
+        assert_eq!(p.get("scores").get("percentile").as_f64(), Some(0.9));
+        assert_eq!(p.get("segment_bounds").as_arr().unwrap().len(), 2);
+        assert_eq!(p.get("window").as_u64(), Some(8));
+
+        let q = Json::parse(lines[1]).expect("line 2 valid");
+        assert_eq!(q.get("model"), &Json::Null, "no detail -> no model field");
+        assert_eq!(q.get("alloc_mib").as_f64(), Some(512.0));
+
+        let f = Json::parse(lines[2]).expect("line 3 valid");
+        assert_eq!(f.get("kind").as_str(), Some("failure"));
+        assert_eq!(f.get("cause").as_str(), Some("oom"));
+        assert_eq!(f.get("new_alloc_mib").as_f64(), Some(4096.0));
+    }
+
+    #[test]
+    fn empty_log_finishes_clean() {
+        let mut log = ProvenanceLog::to_writer(Box::new(Vec::new()));
+        assert!(log.is_empty());
+        log.finish().unwrap();
+    }
+}

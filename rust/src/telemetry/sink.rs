@@ -1,0 +1,290 @@
+//! Trace sinks — structured run tracing in the Chrome `trace_event`
+//! format (the JSON Perfetto and `chrome://tracing` load directly).
+//!
+//! Emitters build a [`TraceEvent`] per interesting occurrence and hand
+//! it to a [`TraceSink`]. The default [`NullSink`] reports
+//! `enabled() == false`, so hot paths gate on that and never allocate
+//! an event when tracing is off. [`ChromeTraceSink`] streams events to
+//! any writer through [`crate::util::json::JsonWriter`] without
+//! buffering the run's event log in memory.
+
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+
+use crate::util::json::JsonWriter;
+
+/// One trace-event argument value (shows up under `args` in the UI).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArgValue {
+    U64(u64),
+    F64(f64),
+    Str(String),
+}
+
+/// One Chrome `trace_event` record.
+///
+/// * `ph` — the phase: `'b'`/`'e'` async span begin/end (matched by
+///   `(cat, id)`), `'i'` instant.
+/// * `ts_us` — timestamp in **microseconds**; scheduler/replay events
+///   use simulated time, service events the wall clock (the only
+///   place wall time is allowed — DESIGN.md §12).
+/// * `pid`/`tid` — track ids; the scheduler maps nodes to `tid`, the
+///   service maps shards.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub name: String,
+    pub cat: &'static str,
+    pub ph: char,
+    pub ts_us: u64,
+    pub pid: u32,
+    pub tid: u32,
+    /// Async span id (`'b'`/`'e'` phases); kept ≤ 48 bits so it stays
+    /// exactly representable after a JSON f64 round-trip.
+    pub id: Option<u64>,
+    pub args: Vec<(&'static str, ArgValue)>,
+}
+
+impl TraceEvent {
+    /// An instant event with no span id.
+    pub fn instant(name: &str, cat: &'static str, ts_us: u64, tid: u32) -> TraceEvent {
+        TraceEvent {
+            name: name.to_string(),
+            cat,
+            ph: 'i',
+            ts_us,
+            pid: 0,
+            tid,
+            id: None,
+            args: Vec::new(),
+        }
+    }
+
+    /// Serialize as one compact JSON object (no trailing newline).
+    pub fn write_json<W: Write>(&self, w: W) -> io::Result<()> {
+        let mut j = JsonWriter::new(w);
+        j.begin_obj()?;
+        j.field_str("name", &self.name)?;
+        j.field_str("cat", self.cat)?;
+        let mut ph = [0u8; 4];
+        j.field_str("ph", self.ph.encode_utf8(&mut ph))?;
+        j.field_u64("ts", self.ts_us)?;
+        j.field_u64("pid", u64::from(self.pid))?;
+        j.field_u64("tid", u64::from(self.tid))?;
+        if let Some(id) = self.id {
+            j.field_u64("id", id)?;
+        }
+        if !self.args.is_empty() {
+            j.key("args")?;
+            j.begin_obj()?;
+            for (k, v) in &self.args {
+                match v {
+                    ArgValue::U64(n) => j.field_u64(k, *n)?,
+                    ArgValue::F64(x) => j.field_f64(k, *x)?,
+                    ArgValue::Str(s) => j.field_str(k, s)?,
+                }
+            }
+            j.end_obj()?;
+        }
+        j.end_obj()
+    }
+}
+
+/// Where trace events go. Implementations must be observation-only:
+/// a sink never influences scheduling, prediction, or reports (the
+/// bit-identical-with-tracing tests in `tests/telemetry.rs` enforce
+/// this end to end).
+pub trait TraceSink {
+    /// Cheap gate emitters check before building a [`TraceEvent`].
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn event(&mut self, ev: &TraceEvent);
+
+    /// Write trailers, flush, and surface any deferred I/O error.
+    fn finish(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+/// The default sink: drops everything. `enabled()` is `false`, so
+/// emitters skip event construction entirely — the hot path stays
+/// allocation-free when tracing is off.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    fn enabled(&self) -> bool {
+        false
+    }
+
+    fn event(&mut self, _ev: &TraceEvent) {}
+}
+
+/// Collects events in memory — tests and per-shard collection.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct VecSink {
+    pub events: Vec<TraceEvent>,
+}
+
+impl VecSink {
+    pub fn new() -> VecSink {
+        VecSink::default()
+    }
+}
+
+impl TraceSink for VecSink {
+    fn event(&mut self, ev: &TraceEvent) {
+        self.events.push(ev.clone());
+    }
+}
+
+/// Streams `{"traceEvents":[...]}` to a writer, one event per line.
+/// I/O errors are deferred: the first error disables further writes
+/// and is surfaced by [`TraceSink::finish`].
+pub struct ChromeTraceSink<W: Write> {
+    w: W,
+    n: u64,
+    err: Option<io::Error>,
+}
+
+impl<W: Write> ChromeTraceSink<W> {
+    pub fn new(mut w: W) -> ChromeTraceSink<W> {
+        let err = w.write_all(b"{\"traceEvents\":[\n").err();
+        ChromeTraceSink { w, n: 0, err }
+    }
+
+    /// Events successfully written so far.
+    pub fn len(&self) -> u64 {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+}
+
+impl ChromeTraceSink<BufWriter<File>> {
+    /// File-backed sink (what `--trace-out FILE` opens).
+    pub fn create(path: &str) -> io::Result<ChromeTraceSink<BufWriter<File>>> {
+        Ok(ChromeTraceSink::new(BufWriter::new(File::create(path)?)))
+    }
+}
+
+impl<W: Write> TraceSink for ChromeTraceSink<W> {
+    fn event(&mut self, ev: &TraceEvent) {
+        if self.err.is_some() {
+            return;
+        }
+        if self.n > 0 {
+            if let Err(e) = self.w.write_all(b",\n") {
+                self.err = Some(e);
+                return;
+            }
+        }
+        if let Err(e) = ev.write_json(&mut self.w) {
+            self.err = Some(e);
+            return;
+        }
+        self.n += 1;
+    }
+
+    fn finish(&mut self) -> io::Result<()> {
+        if let Some(e) = self.err.take() {
+            return Err(e);
+        }
+        self.w.write_all(b"\n]}\n")?;
+        self.w.flush()
+    }
+}
+
+/// Render a finished event list as one Chrome trace JSON document.
+pub fn chrome_trace_to_string(events: &[TraceEvent]) -> String {
+    let mut sink = ChromeTraceSink::new(Vec::new());
+    for ev in events {
+        sink.event(ev);
+    }
+    sink.finish().expect("in-memory trace write cannot fail");
+    String::from_utf8(sink.w).expect("trace JSON is UTF-8")
+}
+
+/// Write a finished event list to `path` as Chrome trace JSON.
+pub fn write_chrome_trace(path: &str, events: &[TraceEvent]) -> io::Result<()> {
+    let mut sink = ChromeTraceSink::create(path)?;
+    for ev in events {
+        sink.event(ev);
+    }
+    sink.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn ev(name: &str, ph: char, ts: u64) -> TraceEvent {
+        TraceEvent {
+            name: name.to_string(),
+            cat: "task",
+            ph,
+            ts_us: ts,
+            pid: 0,
+            tid: 3,
+            id: Some(42),
+            args: vec![("seq", ArgValue::U64(7)), ("mem_mib", ArgValue::F64(512.5))],
+        }
+    }
+
+    #[test]
+    fn null_sink_is_disabled() {
+        let mut s = NullSink;
+        assert!(!s.enabled());
+        s.event(&ev("a", 'i', 1));
+        assert!(s.finish().is_ok());
+    }
+
+    #[test]
+    fn vec_sink_collects_in_order() {
+        let mut s = VecSink::new();
+        assert!(s.enabled());
+        s.event(&ev("a", 'b', 1));
+        s.event(&ev("b", 'e', 2));
+        assert_eq!(s.events.len(), 2);
+        assert_eq!(s.events[0].name, "a");
+        assert_eq!(s.events[1].ph, 'e');
+    }
+
+    #[test]
+    fn chrome_trace_parses_back() {
+        let events =
+            vec![ev("align \"x\"", 'b', 10), ev("align \"x\"", 'e', 250), ev("oom", 'i', 99)];
+        let doc = chrome_trace_to_string(&events);
+        let v = Json::parse(&doc).expect("valid JSON");
+        let arr = v.get("traceEvents").as_arr().expect("traceEvents array");
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[0].get("name").as_str(), Some("align \"x\""));
+        assert_eq!(arr[0].get("ph").as_str(), Some("b"));
+        assert_eq!(arr[0].get("id").as_u64(), Some(42));
+        assert_eq!(arr[1].get("ts").as_u64(), Some(250));
+        assert_eq!(arr[2].get("args").get("mem_mib").as_f64(), Some(512.5));
+        assert_eq!(arr[2].get("tid").as_u64(), Some(3));
+    }
+
+    #[test]
+    fn empty_trace_is_valid_json() {
+        let doc = chrome_trace_to_string(&[]);
+        let v = Json::parse(&doc).expect("valid JSON");
+        assert_eq!(v.get("traceEvents").as_arr().map(<[Json]>::len), Some(0));
+    }
+
+    #[test]
+    fn event_without_args_or_id_omits_them() {
+        let e = TraceEvent::instant("x", "node", 5, 1);
+        let mut buf = Vec::new();
+        e.write_json(&mut buf).unwrap();
+        let v = Json::parse(std::str::from_utf8(&buf).unwrap()).unwrap();
+        assert_eq!(v.get("id"), &Json::Null);
+        assert_eq!(v.get("args"), &Json::Null);
+        assert_eq!(v.get("cat").as_str(), Some("node"));
+    }
+}

@@ -8,6 +8,7 @@
 
 use std::collections::BTreeMap;
 use std::fmt;
+use std::io;
 
 /// A JSON value. Object keys are ordered (BTreeMap) for deterministic
 /// serialization.
@@ -379,6 +380,157 @@ impl fmt::Display for Json {
     }
 }
 
+/// Streaming JSON serializer over any [`io::Write`] — no intermediate
+/// [`Json`] tree, so arbitrarily long trace/provenance streams cost
+/// O(1) memory. Emits the exact same compact grammar as the [`Json`]
+/// [`fmt::Display`] impl (same escaping, same integer-vs-float number
+/// formatting), so anything it writes round-trips through
+/// [`Json::parse`]; the `writer_matches_tree_display` test pins the
+/// equivalence.
+///
+/// Commas and `key:` separators are inserted automatically from a
+/// container stack; the caller just issues `begin_obj`/`key`/values in
+/// document order. Malformed call sequences (a value where a key is
+/// required) are the caller's bug, not checked here.
+pub struct JsonWriter<W: io::Write> {
+    w: W,
+    /// Items already written in each open container (for commas).
+    stack: Vec<usize>,
+    /// A `key(..)` was just written; the next value needs no comma.
+    after_key: bool,
+}
+
+impl<W: io::Write> JsonWriter<W> {
+    pub fn new(w: W) -> JsonWriter<W> {
+        JsonWriter { w, stack: Vec::new(), after_key: false }
+    }
+
+    /// Comma/colon bookkeeping before any value or key.
+    fn sep(&mut self) -> io::Result<()> {
+        if self.after_key {
+            self.after_key = false;
+            return Ok(());
+        }
+        if let Some(n) = self.stack.last_mut() {
+            if *n > 0 {
+                self.w.write_all(b",")?;
+            }
+            *n += 1;
+        }
+        Ok(())
+    }
+
+    pub fn begin_obj(&mut self) -> io::Result<()> {
+        self.sep()?;
+        self.stack.push(0);
+        self.w.write_all(b"{")
+    }
+
+    pub fn end_obj(&mut self) -> io::Result<()> {
+        self.stack.pop();
+        self.w.write_all(b"}")
+    }
+
+    pub fn begin_arr(&mut self) -> io::Result<()> {
+        self.sep()?;
+        self.stack.push(0);
+        self.w.write_all(b"[")
+    }
+
+    pub fn end_arr(&mut self) -> io::Result<()> {
+        self.stack.pop();
+        self.w.write_all(b"]")
+    }
+
+    pub fn key(&mut self, k: &str) -> io::Result<()> {
+        self.sep()?;
+        write_json_str(&mut self.w, k)?;
+        self.w.write_all(b":")?;
+        self.after_key = true;
+        Ok(())
+    }
+
+    pub fn str_val(&mut self, s: &str) -> io::Result<()> {
+        self.sep()?;
+        write_json_str(&mut self.w, s)
+    }
+
+    pub fn f64_val(&mut self, n: f64) -> io::Result<()> {
+        self.sep()?;
+        write_json_f64(&mut self.w, n)
+    }
+
+    pub fn u64_val(&mut self, n: u64) -> io::Result<()> {
+        self.sep()?;
+        write!(self.w, "{n}")
+    }
+
+    pub fn bool_val(&mut self, b: bool) -> io::Result<()> {
+        self.sep()?;
+        write!(self.w, "{b}")
+    }
+
+    pub fn null_val(&mut self) -> io::Result<()> {
+        self.sep()?;
+        self.w.write_all(b"null")
+    }
+
+    // -- `key: value` conveniences ----------------------------------------
+
+    pub fn field_str(&mut self, k: &str, v: &str) -> io::Result<()> {
+        self.key(k)?;
+        self.str_val(v)
+    }
+
+    pub fn field_f64(&mut self, k: &str, v: f64) -> io::Result<()> {
+        self.key(k)?;
+        self.f64_val(v)
+    }
+
+    pub fn field_u64(&mut self, k: &str, v: u64) -> io::Result<()> {
+        self.key(k)?;
+        self.u64_val(v)
+    }
+
+    pub fn field_bool(&mut self, k: &str, v: bool) -> io::Result<()> {
+        self.key(k)?;
+        self.bool_val(v)
+    }
+
+    /// Flush and return the underlying writer.
+    pub fn finish(mut self) -> io::Result<W> {
+        self.w.flush()?;
+        Ok(self.w)
+    }
+}
+
+/// Escape + quote a string exactly like the [`Json`] Display impl.
+pub fn write_json_str<W: io::Write>(w: &mut W, s: &str) -> io::Result<()> {
+    w.write_all(b"\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => w.write_all(b"\\\"")?,
+            '\\' => w.write_all(b"\\\\")?,
+            '\n' => w.write_all(b"\\n")?,
+            '\r' => w.write_all(b"\\r")?,
+            '\t' => w.write_all(b"\\t")?,
+            c if (c as u32) < 0x20 => write!(w, "\\u{:04x}", c as u32)?,
+            c => write!(w, "{c}")?,
+        }
+    }
+    w.write_all(b"\"")
+}
+
+/// Format a number exactly like the [`Json`] Display impl: integral
+/// values below 1e15 print without a fractional part.
+pub fn write_json_f64<W: io::Write>(w: &mut W, n: f64) -> io::Result<()> {
+    if n.fract() == 0.0 && n.abs() < 1e15 {
+        write!(w, "{}", n as i64)
+    } else {
+        write!(w, "{n}")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -454,5 +606,83 @@ mod tests {
     fn whitespace_tolerance() {
         let v = Json::parse(" {\n\t\"a\" : [ 1 , 2 ] }\r\n").unwrap();
         assert_eq!(v.get("a").as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn writer_streams_nested_document() {
+        let mut w = JsonWriter::new(Vec::new());
+        w.begin_obj().unwrap();
+        w.field_str("name", "run").unwrap();
+        w.field_u64("n", 3).unwrap();
+        w.key("xs").unwrap();
+        w.begin_arr().unwrap();
+        w.f64_val(1.0).unwrap();
+        w.f64_val(2.5).unwrap();
+        w.begin_obj().unwrap();
+        w.field_bool("ok", true).unwrap();
+        w.key("none").unwrap();
+        w.null_val().unwrap();
+        w.end_obj().unwrap();
+        w.end_arr().unwrap();
+        w.end_obj().unwrap();
+        let out = String::from_utf8(w.finish().unwrap()).unwrap();
+        assert_eq!(out, r#"{"name":"run","n":3,"xs":[1,2.5,{"ok":true,"none":null}]}"#);
+    }
+
+    #[test]
+    fn writer_output_roundtrips_through_parse() {
+        let mut w = JsonWriter::new(Vec::new());
+        w.begin_obj().unwrap();
+        w.field_str("esc", "a\"b\\c\nd\te\u{1}").unwrap();
+        w.field_f64("f", -3.25).unwrap();
+        w.field_f64("i", 7.0).unwrap();
+        w.field_u64("big", 1_234_567_890_123).unwrap();
+        w.end_obj().unwrap();
+        let out = String::from_utf8(w.finish().unwrap()).unwrap();
+        let v = Json::parse(&out).unwrap();
+        assert_eq!(v.get("esc").as_str(), Some("a\"b\\c\nd\te\u{1}"));
+        assert_eq!(v.get("f").as_f64(), Some(-3.25));
+        assert_eq!(v.get("i").as_f64(), Some(7.0));
+        assert_eq!(v.get("big").as_u64(), Some(1_234_567_890_123));
+    }
+
+    #[test]
+    fn writer_matches_tree_display() {
+        // the streaming writer and the Json tree Display must emit the
+        // same bytes for the same document (escaping + number format)
+        let tricky = "GB·s \"x\"\\\n\t\u{2}";
+        let tree = Json::obj(vec![
+            ("a", Json::arr_f64(&[1.0, 2.5, -0.0])),
+            ("s", tricky.into()),
+            ("n", 42u64.into()),
+        ]);
+        let mut w = JsonWriter::new(Vec::new());
+        w.begin_obj().unwrap();
+        w.key("a").unwrap();
+        w.begin_arr().unwrap();
+        w.f64_val(1.0).unwrap();
+        w.f64_val(2.5).unwrap();
+        w.f64_val(-0.0).unwrap();
+        w.end_arr().unwrap();
+        w.field_u64("n", 42).unwrap();
+        w.field_str("s", tricky).unwrap();
+        w.end_obj().unwrap();
+        let streamed = String::from_utf8(w.finish().unwrap()).unwrap();
+        assert_eq!(streamed, tree.to_string());
+    }
+
+    #[test]
+    fn writer_top_level_scalar_and_empty_containers() {
+        let mut w = JsonWriter::new(Vec::new());
+        w.begin_arr().unwrap();
+        w.begin_obj().unwrap();
+        w.end_obj().unwrap();
+        w.begin_arr().unwrap();
+        w.end_arr().unwrap();
+        w.str_val("x").unwrap();
+        w.end_arr().unwrap();
+        let out = String::from_utf8(w.finish().unwrap()).unwrap();
+        assert_eq!(out, r#"[{},[],"x"]"#);
+        assert!(Json::parse(&out).is_ok());
     }
 }

@@ -1,0 +1,213 @@
+//! Telemetry lockdown: observation-only tracing (bit-identical
+//! reports and event logs with every sink attached), worker-count
+//! independent replay traces, permutation-invariant metrics merges,
+//! Chrome-trace validity of a failure-heavy DAG run (the `--trace-out`
+//! acceptance criterion), and provenance JSONL round-trips.
+
+use ksegments::ingest::{replay_source, InMemorySource, ReplayConfig};
+use ksegments::predictors::ksegments::{KSegmentsPredictor, RetryStrategy};
+use ksegments::predictors::MemoryPredictor;
+use ksegments::sched::{
+    schedule_trace_logged, schedule_trace_telemetry, schedule_workflows_telemetry, SchedConfig,
+    WorkflowSource,
+};
+use ksegments::telemetry::{ChromeTraceSink, ProvenanceLog, Registry, RunTelemetry};
+use ksegments::units::Seconds;
+use ksegments::util::json::Json;
+use ksegments::workload::{eager_workflow, generate_workflow_trace, sarek_workflow};
+
+/// Unique-per-test temp path (tests in this binary run in parallel).
+fn temp_path(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("ksegments_{}_{name}", std::process::id()))
+}
+
+/// A scheduling config that exercises the adversity machinery —
+/// node failures and preemption on top of OOM retries — so traced
+/// runs cover every kill path.
+fn adversity_cfg(seed: u64) -> SchedConfig {
+    SchedConfig {
+        seed,
+        training_frac: 0.4,
+        fail_mtbf: Seconds(900.0),
+        preempt: true,
+        ..SchedConfig::default()
+    }
+}
+
+/// THE golden rule: attaching a trace sink and a provenance log must
+/// leave the report and the engine event log bit-identical to the
+/// untraced run — telemetry observes, never influences.
+#[test]
+fn traced_run_is_bit_identical_to_untraced() {
+    let trace = generate_workflow_trace(&eager_workflow(), 42);
+    let cfg = adversity_cfg(42);
+
+    let mut plain_p = KSegmentsPredictor::native(4, RetryStrategy::Selective);
+    let (plain_rep, plain_log) = schedule_trace_logged(&trace, &mut plain_p, &cfg);
+
+    let path = temp_path("bitident_trace.json");
+    let sink = ChromeTraceSink::create(path.to_str().unwrap()).unwrap();
+    let mut tel = RunTelemetry::with_trace(Box::new(sink));
+    tel.provenance = Some(ProvenanceLog::to_writer(Box::new(std::io::sink())));
+    let mut traced_p = KSegmentsPredictor::native(4, RetryStrategy::Selective);
+    let (traced_rep, traced_log) = schedule_trace_telemetry(&trace, &mut traced_p, &cfg, &mut tel);
+    let prov_records = tel.provenance.as_ref().map_or(0, ProvenanceLog::len);
+    tel.finish().unwrap();
+
+    assert_eq!(plain_rep, traced_rep, "telemetry must never perturb the report");
+    assert_eq!(plain_log.len(), traced_log.len());
+    assert!(plain_log.iter().eq(traced_log.iter()), "telemetry must never perturb the event log");
+
+    // ... and the attachments really observed the run (not vacuous).
+    let doc = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let n_events = Json::parse(&doc).unwrap().get("traceEvents").as_arr().unwrap().len();
+    assert!(n_events > 0, "trace sink saw no events");
+    assert!(prov_records > 0, "provenance log saw no decisions");
+}
+
+/// Replay trace events are `run.seq`-stamped and merged
+/// deterministically, so the whole outcome — trace included — is
+/// identical at any worker count.
+#[test]
+fn replay_trace_is_worker_count_independent() {
+    let trace = generate_workflow_trace(&eager_workflow(), 42);
+    let make = || -> Box<dyn MemoryPredictor> {
+        Box::new(KSegmentsPredictor::native(4, RetryStrategy::Selective))
+    };
+    let cfg = ReplayConfig { collect_trace: true, ..ReplayConfig::default() };
+
+    let mut src1 = InMemorySource::from_trace(&trace);
+    let one = replay_source(&mut src1, &make, &cfg, 1, None).unwrap();
+    let mut src8 = InMemorySource::from_trace(&trace);
+    let eight = replay_source(&mut src8, &make, &cfg, 8, None).unwrap();
+
+    assert!(!one.trace_events.is_empty());
+    assert_eq!(
+        one.trace_events.len() as u64,
+        one.runs_replayed,
+        "one instant per replayed run (warm-up and scored alike)"
+    );
+    assert_eq!(one, eight, "replay outcome incl. trace must not depend on shard count");
+}
+
+/// Per-shard metric registries can be merged in any order: counters
+/// and histogram buckets are commutative sums, and the rendered
+/// Prometheus exposition is identical either way.
+#[test]
+fn registry_merge_is_permutation_invariant() {
+    let bounds = [1.0, 5.0, 10.0];
+    let parts: Vec<Registry> = (0..6u64)
+        .map(|i| {
+            let mut r = Registry::new();
+            r.counter_add("events_total", i + 1);
+            r.observe("wait_s", &bounds, i as f64 * 2.0);
+            r
+        })
+        .collect();
+
+    let mut fwd = Registry::new();
+    for p in &parts {
+        fwd.merge(p);
+    }
+    let mut rev = Registry::new();
+    for p in parts.iter().rev() {
+        rev.merge(p);
+    }
+
+    assert_eq!(fwd, rev, "merge order must not matter");
+    assert_eq!(fwd.counter("events_total"), 21);
+    let h = fwd.histogram("wait_s").expect("histogram merged");
+    assert_eq!(h.count(), 6);
+    assert_eq!(h.sum(), 30.0);
+    assert_eq!(fwd.to_prometheus(), rev.to_prometheus());
+}
+
+/// The acceptance criterion behind `schedule --dag sarek --fail-rate
+/// 0.1 --trace-out run.json`: a failure-heavy DAG run produces a
+/// Chrome trace JSON document that parses, carries the required
+/// fields, and keeps its async spans balanced — every placement
+/// (`'b'`) is closed by exactly one completion or kill (`'e'`).
+#[test]
+fn dag_run_with_failures_writes_valid_chrome_trace() {
+    let path = temp_path("sarek_trace.json");
+    let sink = ChromeTraceSink::create(path.to_str().unwrap()).unwrap();
+    let mut tel = RunTelemetry::with_trace(Box::new(sink));
+
+    let src = WorkflowSource::from_spec(&sarek_workflow(), 42, 3);
+    let mut p = KSegmentsPredictor::native(4, RetryStrategy::Selective);
+    let cfg = SchedConfig { seed: 42, fail_mtbf: Seconds(600.0), ..SchedConfig::default() };
+    let (rep, _log) = schedule_workflows_telemetry(src, &mut p, &cfg, &mut tel);
+    tel.finish().unwrap();
+    assert!(rep.completed > 0);
+
+    let doc = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let j = Json::parse(&doc).expect("trace file is valid JSON");
+    let events = j.get("traceEvents").as_arr().expect("traceEvents array");
+    assert!(!events.is_empty());
+
+    let (mut begins, mut ends) = (0u64, 0u64);
+    for ev in events {
+        assert!(ev.get("name").as_str().is_some(), "every event is named");
+        assert!(ev.get("cat").as_str().is_some());
+        assert!(ev.get("ts").as_u64().is_some(), "timestamps are whole microseconds");
+        assert!(ev.get("pid").as_u64().is_some());
+        assert!(ev.get("tid").as_u64().is_some());
+        match ev.get("ph").as_str().expect("phase present") {
+            "b" => {
+                assert!(ev.get("id").as_u64().is_some(), "span begins carry an id");
+                begins += 1;
+            }
+            "e" => {
+                assert!(ev.get("id").as_u64().is_some(), "span ends carry an id");
+                ends += 1;
+            }
+            "i" => {}
+            other => panic!("unexpected phase {other:?}"),
+        }
+    }
+    assert!(begins > 0, "a scheduler run places tasks");
+    assert_eq!(begins, ends, "every placed attempt must end exactly once");
+    assert!(begins >= rep.completed, "each completion closes one placement span");
+}
+
+/// Provenance JSONL round-trip: every line parses, `predict` records
+/// match submissions one-to-one, and `failure` records match OOM
+/// escalations one-to-one.
+#[test]
+fn provenance_jsonl_parses_and_matches_report() {
+    let path = temp_path("provenance.jsonl");
+    let trace = generate_workflow_trace(&eager_workflow(), 7);
+    let cfg = adversity_cfg(7);
+
+    let mut tel = RunTelemetry::off();
+    tel.provenance = Some(ProvenanceLog::create(path.to_str().unwrap()).unwrap());
+    let mut p = KSegmentsPredictor::native(4, RetryStrategy::Selective);
+    let (rep, _log) = schedule_trace_telemetry(&trace, &mut p, &cfg, &mut tel);
+    tel.finish().unwrap();
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let (mut predicts, mut failures) = (0u64, 0u64);
+    for line in text.lines() {
+        let j = Json::parse(line).expect("each provenance line is one JSON object");
+        assert!(j.get("time_s").as_f64().is_some());
+        assert!(j.get("task").as_str().is_some());
+        match j.get("kind").as_str().expect("kind present") {
+            "predict" => {
+                assert!(j.get("alloc_mib").as_f64().unwrap() > 0.0);
+                assert!(j.get("segments").as_u64().unwrap() >= 1);
+                predicts += 1;
+            }
+            "failure" => {
+                assert!(j.get("cause").as_str().is_some());
+                assert!(j.get("new_alloc_mib").as_f64().is_some());
+                failures += 1;
+            }
+            other => panic!("unknown record kind {other:?}"),
+        }
+    }
+    assert_eq!(predicts, rep.submitted, "one predict record per submission");
+    assert_eq!(failures, rep.oom_kills, "one failure record per OOM escalation");
+}

@@ -1,0 +1,101 @@
+#!/usr/bin/env python3
+"""Compare a fresh `ksegments bench` snapshot against the committed trajectory.
+
+Usage: bench_check.py BASELINE.json FRESH.json [--threshold 0.20]
+
+Policy (mirrors rust/src/bench_harness/bench.rs):
+  * schema + seed must match exactly (the counts are meaningless across
+    either);
+  * every count in the baseline must match the fresh run exactly --
+    counts are deterministic functions of the seed, independent of
+    worker count and wall clock;
+  * throughput is wall-clock dependent and only gated within a noise
+    threshold (default +/-20%), and only as a *regression* gate: a
+    faster run always passes;
+  * a baseline marked "provisional": true is a placeholder that has
+    never been measured on a CI runner -- the fresh snapshot is printed
+    for the log and the check passes (record-only mode). Replace the
+    placeholder with a measured snapshot to arm the gate.
+
+`workers` and `wall_s` are context, never compared.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    try:
+        with open(path, encoding="utf-8") as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        sys.exit(f"bench_check: cannot read {path}: {e}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="committed BENCH_<area>.json")
+    ap.add_argument("fresh", help="freshly measured BENCH_<area>.json")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.20,
+        help="allowed fractional throughput regression (default 0.20)",
+    )
+    args = ap.parse_args()
+
+    base = load(args.baseline)
+    fresh = load(args.fresh)
+    area = base.get("bench", "?")
+
+    if fresh.get("bench") != base.get("bench"):
+        sys.exit(f"bench_check[{area}]: area mismatch: {base.get('bench')!r} vs "
+                 f"{fresh.get('bench')!r}")
+
+    if base.get("provisional"):
+        print(f"bench_check[{area}]: baseline is provisional -- recording only, no gate.")
+        print(f"bench_check[{area}]: measured snapshot:")
+        print(json.dumps(fresh, indent=2, sort_keys=True))
+        print(f"bench_check[{area}]: commit this as {args.baseline} (with "
+              '"provisional": false) to arm the regression gate.')
+        return
+
+    failures = []
+    for key in ("schema", "seed"):
+        if base.get(key) != fresh.get(key):
+            failures.append(f"{key} mismatch: committed {base.get(key)!r}, "
+                            f"fresh {fresh.get(key)!r}")
+
+    base_counts = base.get("counts", {})
+    fresh_counts = fresh.get("counts", {})
+    for name, want in sorted(base_counts.items()):
+        got = fresh_counts.get(name)
+        if got != want:
+            failures.append(f"count {name}: committed {want}, fresh {got} "
+                            "(counts are deterministic -- this is a behavior change, "
+                            "not noise; recommit the snapshot if intended)")
+
+    want_tp = base.get("throughput", 0.0)
+    got_tp = fresh.get("throughput", 0.0)
+    if want_tp > 0:
+        drop = (want_tp - got_tp) / want_tp
+        if drop > args.threshold:
+            failures.append(
+                f"throughput regressed {drop:.0%} (committed {want_tp:.0f}, fresh "
+                f"{got_tp:.0f} {fresh.get('throughput_unit', '')}; "
+                f"threshold {args.threshold:.0%})")
+        else:
+            print(f"bench_check[{area}]: throughput {got_tp:.0f} vs committed "
+                  f"{want_tp:.0f} ({-drop:+.0%}) -- within threshold.")
+
+    if failures:
+        for f in failures:
+            print(f"bench_check[{area}]: FAIL: {f}", file=sys.stderr)
+        sys.exit(1)
+    print(f"bench_check[{area}]: OK ({len(base_counts)} counts exact, "
+          f"throughput within {args.threshold:.0%}).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,312 @@
+//! Hand-rolled argument parsing for the `ksegments` binary (the
+//! offline crate cache has no clap), plus the `schedule` subcommand's
+//! typed argument bundle.
+//!
+//! Extracted from `main.rs` so the parsing rules are unit-testable:
+//! [`Args::from_vec`] is the pure core ([`Args::parse`] just feeds it
+//! `std::env::args`), and [`parse_sched_cli`] / [`methods_arg`] carry
+//! all the validation that used to be inlined in the command handlers.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use ksegments::bench_harness::FitterChoice;
+
+/// Hand-rolled `--key value` / `--flag` / positional parser.
+pub struct Args {
+    pub cmd: String,
+    /// Last value per key (`--seed 1 --seed 2` keeps 2).
+    pub kv: BTreeMap<String, String>,
+    /// Every `--key value` pair in argv order, for repeatable keys
+    /// like `bench --area sched --area replay`.
+    pub pairs: Vec<(String, String)>,
+    pub flags: Vec<String>,
+    /// Positional arguments (only `ingest` accepts one: its DIR).
+    pub pos: Vec<String>,
+}
+
+impl Args {
+    /// Parse the process argv (everything after the program name).
+    pub fn parse() -> Args {
+        Args::from_vec(std::env::args().skip(1).collect())
+    }
+
+    /// Parse an explicit argument vector: the first element is the
+    /// subcommand, the rest are `--key value` pairs, `--flag`s (a
+    /// `--key` with no following value, or followed by another
+    /// `--option`), and positionals. Never fails: validation belongs
+    /// to the typed accessors and per-command parsers.
+    pub fn from_vec(argv: Vec<String>) -> Args {
+        let mut argv = argv.into_iter();
+        let cmd = argv.next().unwrap_or_default();
+        let mut kv = BTreeMap::new();
+        let mut pairs = Vec::new();
+        let mut flags = Vec::new();
+        let mut pos = Vec::new();
+        let rest: Vec<String> = argv.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let a = &rest[i];
+            let Some(key) = a.strip_prefix("--") else {
+                pos.push(a.clone());
+                i += 1;
+                continue;
+            };
+            if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                kv.insert(key.to_string(), rest[i + 1].clone());
+                pairs.push((key.to_string(), rest[i + 1].clone()));
+                i += 2;
+            } else {
+                flags.push(key.to_string());
+                i += 1;
+            }
+        }
+        Args { cmd, kv, pairs, flags, pos }
+    }
+
+    /// All values given for a repeatable key, in argv order.
+    pub fn all(&self, key: &str) -> Vec<String> {
+        self.pairs.iter().filter(|(k, _)| k == key).map(|(_, v)| v.clone()).collect()
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.kv.get("seed").and_then(|s| s.parse().ok()).unwrap_or(42)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn fitter(&self) -> FitterChoice {
+        if self.flag("xla") {
+            FitterChoice::Xla
+        } else {
+            FitterChoice::Native
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.kv
+            .get("workers")
+            .and_then(|s| s.parse().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or_else(ksegments::sim::default_workers)
+    }
+
+    pub fn shards(&self) -> usize {
+        self.kv
+            .get("shards")
+            .and_then(|s| s.parse().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or(4)
+    }
+}
+
+/// Resolve the fig7/report/replay `--method` selection (default
+/// "all"): either the whole roster or a comma list of method keys.
+pub fn methods_arg(args: &Args) -> Result<Vec<&'static str>> {
+    let sel = args.kv.get("method").map(String::as_str).unwrap_or("all");
+    ksegments::bench_harness::resolve_methods(sel).map_err(|e| anyhow!(e))
+}
+
+/// Axes shared by the independent-arrivals and DAG schedule modes.
+pub struct SchedCliArgs {
+    pub n_nodes: usize,
+    pub node_gib: f64,
+    pub arrival: f64,
+    pub policies: Vec<ksegments::sched::ReservationPolicy>,
+    pub method: String,
+    /// Node failures per second (0 = injection off).
+    pub fail_rate: f64,
+    pub preempt: bool,
+    pub autoscale: Option<ksegments::sched::AutoscaleConfig>,
+}
+
+impl SchedCliArgs {
+    /// Copy the adversity flags into a scheduling config.
+    pub fn apply_failure_domains(&self, cfg: &mut ksegments::sched::SchedConfig) {
+        use ksegments::units::Seconds;
+        cfg.fail_mtbf = Seconds(if self.fail_rate > 0.0 { 1.0 / self.fail_rate } else { 0.0 });
+        cfg.preempt = self.preempt;
+        cfg.autoscale = self.autoscale;
+    }
+
+    /// Human-readable suffix for the run banner ("" when all off).
+    pub fn adversity_summary(&self) -> String {
+        let mut out = String::new();
+        if self.fail_rate > 0.0 {
+            out.push_str(&format!(" fail-rate={}/s", self.fail_rate));
+        }
+        if self.preempt {
+            out.push_str(" preempt");
+        }
+        if let Some(a) = self.autoscale {
+            out.push_str(&format!(" autoscale(lag={}s)", a.lag.0));
+        }
+        out
+    }
+}
+
+pub fn parse_sched_cli(args: &Args) -> Result<SchedCliArgs> {
+    use ksegments::sched::{AutoscaleConfig, ReservationPolicy};
+    use ksegments::units::Seconds;
+    let n_nodes: usize = args
+        .kv
+        .get("nodes")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(2);
+    if n_nodes == 0 {
+        bail!("--nodes must be at least 1");
+    }
+    let node_gib: f64 = args
+        .kv
+        .get("node-gib")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(32.0);
+    let arrival: f64 = args
+        .kv
+        .get("arrival")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(5.0);
+    let policy_arg = args.kv.get("policy").map(String::as_str).unwrap_or("both");
+    let policies: Vec<ReservationPolicy> = match policy_arg {
+        "both" => vec![ReservationPolicy::StaticPeak, ReservationPolicy::SegmentWise],
+        p => vec![ReservationPolicy::parse(p)
+            .ok_or_else(|| anyhow!("unknown policy {p:?} (static|segment|both)"))?],
+    };
+    let method = args
+        .kv
+        .get("method")
+        .map(String::as_str)
+        .unwrap_or("ksegments-selective")
+        .to_string();
+    let fail_rate: f64 = args
+        .kv
+        .get("fail-rate")
+        .map(|s| s.parse())
+        .transpose()
+        .context("--fail-rate takes failures per second, e.g. 0.1")?
+        .unwrap_or(0.0);
+    if fail_rate < 0.0 || !fail_rate.is_finite() {
+        bail!("--fail-rate must be a finite rate >= 0 (failures per second)");
+    }
+    let preempt = args.flag("preempt");
+    // `--autoscale` enables with the default 30 s lag;
+    // `--autoscale SECS` overrides the provisioning lag
+    let autoscale = if let Some(s) = args.kv.get("autoscale") {
+        let lag: f64 = s
+            .parse()
+            .context("--autoscale takes an optional provisioning lag in seconds")?;
+        if lag < 0.0 || !lag.is_finite() {
+            bail!("--autoscale lag must be a finite number of seconds >= 0");
+        }
+        Some(AutoscaleConfig { lag: Seconds(lag), ..AutoscaleConfig::default() })
+    } else if args.flag("autoscale") {
+        Some(AutoscaleConfig::default())
+    } else {
+        None
+    };
+    Ok(SchedCliArgs {
+        n_nodes,
+        node_gib,
+        arrival,
+        policies,
+        method,
+        fail_rate,
+        preempt,
+        autoscale,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(words: &[&str]) -> Args {
+        Args::from_vec(words.iter().map(|s| s.to_string()).collect())
+    }
+
+    #[test]
+    fn parses_kv_flags_and_positionals() {
+        let a = argv(&["ingest", "traces/run1", "--out", "t.jsonl", "--preempt"]);
+        assert_eq!(a.cmd, "ingest");
+        assert_eq!(a.pos, vec!["traces/run1".to_string()]);
+        assert_eq!(a.kv.get("out").map(String::as_str), Some("t.jsonl"));
+        assert!(a.flag("preempt"));
+        assert!(!a.flag("out"), "a key with a value is not a flag");
+    }
+
+    #[test]
+    fn repeatable_keys_keep_argv_order_and_last_wins_in_kv() {
+        let a = argv(&["bench", "--area", "sched", "--area", "replay", "--seed", "7"]);
+        assert_eq!(a.all("area"), vec!["sched".to_string(), "replay".to_string()]);
+        assert_eq!(a.kv.get("area").map(String::as_str), Some("replay"));
+        assert_eq!(a.seed(), 7);
+    }
+
+    #[test]
+    fn missing_value_demotes_key_to_flag() {
+        // `--nodes` with no value (or followed by another option) is
+        // recorded as a flag, so the typed accessor falls back to its
+        // default instead of eating the next option as a value.
+        let a = argv(&["schedule", "--nodes", "--preempt"]);
+        assert!(a.flag("nodes"));
+        assert!(a.kv.get("nodes").is_none());
+        let cli = parse_sched_cli(&a).unwrap();
+        assert_eq!(cli.n_nodes, 2, "default cluster size");
+        assert!(cli.preempt);
+    }
+
+    #[test]
+    fn sched_defaults_and_overrides() {
+        let cli = parse_sched_cli(&argv(&["schedule"])).unwrap();
+        assert_eq!(cli.n_nodes, 2);
+        assert_eq!(cli.node_gib, 32.0);
+        assert_eq!(cli.arrival, 5.0);
+        assert_eq!(cli.policies.len(), 2, "--policy both is the default");
+        assert_eq!(cli.method, "ksegments-selective");
+        assert_eq!(cli.fail_rate, 0.0);
+        assert!(cli.autoscale.is_none());
+
+        let cli = parse_sched_cli(&argv(&[
+            "schedule", "--nodes", "4", "--policy", "segment", "--fail-rate", "0.01",
+            "--autoscale", "10",
+        ]))
+        .unwrap();
+        assert_eq!(cli.n_nodes, 4);
+        assert_eq!(cli.policies.len(), 1);
+        assert_eq!(cli.fail_rate, 0.01);
+        assert_eq!(cli.autoscale.unwrap().lag.0, 10.0);
+    }
+
+    #[test]
+    fn unknown_policy_is_rejected() {
+        let err = parse_sched_cli(&argv(&["schedule", "--policy", "bogus"])).unwrap_err();
+        assert!(err.to_string().contains("unknown policy"), "{err}");
+    }
+
+    #[test]
+    fn malformed_values_error_with_context() {
+        let err = parse_sched_cli(&argv(&["schedule", "--fail-rate", "often"])).unwrap_err();
+        assert!(format!("{err:#}").contains("--fail-rate"), "{err:#}");
+        let err = parse_sched_cli(&argv(&["schedule", "--autoscale", "-5"])).unwrap_err();
+        assert!(err.to_string().contains("autoscale lag"), "{err}");
+        assert!(parse_sched_cli(&argv(&["schedule", "--nodes", "0"])).is_err());
+    }
+
+    #[test]
+    fn method_selection_parses_lists() {
+        let all = methods_arg(&argv(&["fig7"])).unwrap();
+        assert!(all.len() >= 8, "default \"all\" resolves the whole roster");
+
+        let some =
+            methods_arg(&argv(&["fig7", "--method", "ksegments-selective, ensemble"])).unwrap();
+        assert_eq!(some, vec!["ksegments-selective", "ensemble"]);
+
+        assert!(methods_arg(&argv(&["fig7", "--method", "bogus"])).is_err());
+    }
+}

@@ -1,0 +1,906 @@
+//! `ksegments` CLI — leader entrypoint for trace generation, the
+//! evaluation harness, figure regeneration, and the prediction service
+//! demo.
+//!
+//! Subcommands (run with no args for help):
+//!
+//! ```text
+//! ksegments generate  --workflow eager|sarek --seed N --out FILE [--format jsonl|csv]
+//! ksegments simulate  --method NAME --frac F [--seed N] [--xla]
+//! ksegments fig7      [--seed N] [--xla]          # Fig. 7a/7b/7c + headline
+//! ksegments fig8      [--seed N] [--xla]          # wastage vs k, both tasks
+//! ksegments fig4      [--seed N] [--xla]          # step-function example
+//! ksegments fig1      [--seed N]                  # optimization potential
+//! ksegments validate-runtime                      # XLA fit vs native fit
+//! ksegments serve     [--seed N]                  # prediction-service demo
+//! ksegments schedule  [--nodes N] [--arrival S] [--policy P]  # cluster scheduler
+//!                     [--fail-rate R] [--preempt] [--autoscale]
+//!                     [--trace-out F] [--provenance-out F] [--metrics-out F]
+//! ksegments bench     [--area A]... [--out-dir D] # BENCH_<area>.json snapshots
+//! ksegments bench-sched [--out FILE]              # BENCH_sched.json snapshot
+//! ksegments ingest    DIR [--out FILE]            # Nextflow trace -> jsonl
+//! ksegments replay    --source PATH --method M    # streaming replay
+//! ```
+//!
+//! (Arg parsing is hand-rolled: the offline crate cache has no clap;
+//! the parser and the `schedule` argument bundle live in [`args`].)
+
+mod args;
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::args::{methods_arg, parse_sched_cli, Args};
+
+use ksegments::bench_harness::{run_fig1, run_fig4, run_fig7_selected, run_fig8, FitterChoice};
+use ksegments::coordinator::ShardedPredictionService;
+use ksegments::ml::fitter::{KsegFitter, NativeFitter};
+use ksegments::predictors::ksegments::{KSegmentsPredictor, RetryStrategy};
+use ksegments::predictors::MemoryPredictor;
+use ksegments::runtime::XlaFitter;
+use ksegments::sim::{simulate_trace, SimConfig};
+use ksegments::trace::{write_trace_csv, write_trace_jsonl, write_trace_jsonl_ordered};
+use ksegments::workload::{eager_workflow, generate_workflow_trace, sarek_workflow};
+
+const USAGE: &str = "\
+ksegments — dynamic memory prediction for scientific workflow tasks
+(reproduction of Bader et al., 2023)
+
+USAGE:
+  ksegments generate  --workflow eager|sarek [--seed N] --out FILE [--format jsonl|csv]
+  ksegments simulate  --method METHOD [--frac F] [--seed N] [--workflow W] [--xla]
+  ksegments fig7      [--seed N] [--xla] [--workers N] [--method SEL]
+  ksegments fig8      [--seed N] [--xla] [--workers N]
+  ksegments fig4      [--seed N] [--xla]
+  ksegments fig1      [--seed N]
+  ksegments ablate    [--seed N] [--workers N]
+  ksegments report    [--seed N] [--xla] [--out FILE] [--workers N] [--method SEL]
+  ksegments validate-runtime
+  ksegments serve     [--seed N] [--shards N] [--workers N] [--source PATH]
+                      [--trace-out FILE] [--metrics-out FILE]
+  ksegments schedule  [--nodes N] [--node-gib G] [--arrival SECS]
+                      [--policy static|segment|both] [--method METHOD]
+                      [--frac F] [--seed N] [--workflow W]
+                      [--fail-rate R] [--preempt] [--autoscale [LAG]]
+                      [--dag W --instances N] [--sweep] [--fail-sweep]
+                      [--workers N] [--trace-out FILE]
+                      [--provenance-out FILE] [--metrics-out FILE]
+  ksegments bench     [--area sched|replay|grid|service]... [--seed N]
+                      [--workers N] [--out-dir DIR]
+  ksegments bench-sched [--seed N] [--workers N] [--out FILE]
+  ksegments ingest    DIR [--out FILE] [--format jsonl|csv]
+  ksegments replay    --source PATH [--method SEL] [--workers N]
+                      [--checkpoint FILE] [--checkpoint-out FILE]
+                      [--warmup N] [--chunk N] [--trace-out FILE]
+                      [--metrics-out FILE]
+
+METHODS: default | ppm | ppm-improved | lr | ksegments-selective |
+         ksegments-partial | ksegments-adaptive | ensemble | dynseg |
+         condor
+
+For fig7/report, --method SEL selects the comparison rows: "all" (the
+default — the whole predictor zoo) or a comma list of method names,
+e.g. --method ksegments-selective,ensemble,dynseg.
+
+--workers defaults to the available cores. For fig7/fig8/ablate/report
+it sizes the evaluation pool and results are identical for any worker
+count; for serve it is the number of SWMS client threads driving demo
+traffic. --shards is the number of model threads the prediction
+service partitions task types across (default 4).
+
+schedule runs the discrete-event cluster scheduler: tasks arrive as a
+timed stream (mean inter-arrival --arrival seconds, exponential) onto
+--nodes nodes of --node-gib GiB each, reserved per --policy
+(static-peak vs segment-wise step functions; both = comparison).
+--sweep renders the throughput tables over several arrival rates on
+the parallel grid instead. --dag W switches to dependency-gated
+workflow mode: --instances N concurrent executions of workflow W's
+DAG, each task released only when its parents complete (OOM retries
+of a parent delay its whole subtree); combined with --sweep it
+renders the workflow-makespan tables over instance counts.
+
+schedule also injects cluster adversity: --fail-rate R kills a random
+up node R times per second on average (resident tasks requeue
+blamelessly — same allocation, no predictor escalation), --preempt
+lets high-priority arrivals evict low-priority tasks, --autoscale
+grows/shrinks the roster with the queue (optional provisioning LAG in
+seconds, default 30). --fail-sweep renders the failure-rate x
+autoscale-lag tables on the parallel grid.
+
+Observability (off by default; enabling it never changes results):
+--trace-out FILE writes a Chrome/Perfetto trace (schedule: simulated
+task spans; replay: per-run instants; serve: wall-clock wakeup spans
+— open at https://ui.perfetto.dev), --provenance-out FILE (schedule)
+writes one JSONL record per prediction/failure escalation with the
+chosen sub-model and scores, --metrics-out FILE writes a metrics
+snapshot (Prometheus text for .prom/.txt, JSON otherwise). With
+--policy both, trace/provenance record the first policy only.
+
+bench runs the perf areas (sched | replay | grid | service; repeat
+--area for several) and writes one BENCH_<area>.json snapshot each to
+--out-dir — the committed perf trajectory CI diffs against.
+bench-sched is the sched area under its original name (engine
+events/s).
+
+ingest normalizes a Nextflow trace directory (trace.txt [+ samples/])
+into the crate's replay-ordered JSONL trace format.
+
+replay streams a trace source (a .jsonl/.csv file or a Nextflow trace
+dir) through a predictor online, sharded by task type across --workers
+threads (results are bit-identical for any worker count). --checkpoint
+warm-starts from a saved predictor state; --checkpoint-out persists
+the state after the replay; --warmup N (default 2) is the per-type
+unscored warm-up for previously unseen task types. serve --source
+replays the same sources through the sharded prediction service.
+";
+
+fn workflow_by_name(name: &str) -> Result<ksegments::workload::WorkflowSpec> {
+    match name {
+        "eager" => Ok(eager_workflow()),
+        "sarek" => Ok(sarek_workflow()),
+        other => bail!("unknown workflow {other:?} (eager|sarek)"),
+    }
+}
+
+fn method_by_name(name: &str, choice: FitterChoice) -> Result<Box<dyn MemoryPredictor>> {
+    // One source of truth for key → predictor: the bench harness
+    // roster (the same construction the fig7 grid and the scheduling
+    // sweep use), so every CLI surface sees the same zoo.
+    ksegments::bench_harness::make_method(name, choice)
+        .ok_or_else(|| anyhow!("unknown method {name:?} (see METHODS in --help)"))
+}
+
+/// Build a run's telemetry from `--trace-out` (Chrome/Perfetto trace
+/// JSON) and `--provenance-out` (per-decision JSONL). Off by default —
+/// the hot path then never allocates for telemetry.
+fn telemetry_from_args(args: &Args) -> Result<ksegments::telemetry::RunTelemetry> {
+    use ksegments::telemetry::{ChromeTraceSink, ProvenanceLog, RunTelemetry};
+    let mut tel = RunTelemetry::off();
+    if let Some(path) = args.kv.get("trace-out") {
+        tel.trace = Box::new(ChromeTraceSink::create(path).with_context(|| path.clone())?);
+    }
+    if let Some(path) = args.kv.get("provenance-out") {
+        tel.provenance = Some(ProvenanceLog::create(path).with_context(|| path.clone())?);
+    }
+    Ok(tel)
+}
+
+/// Close the sinks and report where the artifacts went.
+fn finish_telemetry(args: &Args, tel: &mut ksegments::telemetry::RunTelemetry) -> Result<()> {
+    let n_decisions = tel.provenance.as_ref().map(|p| p.len()).unwrap_or(0);
+    tel.finish().context("flushing telemetry sinks")?;
+    if let Some(path) = args.kv.get("trace-out") {
+        println!("wrote trace to {path} (open at https://ui.perfetto.dev)");
+    }
+    if let Some(path) = args.kv.get("provenance-out") {
+        println!("wrote {n_decisions} provenance records to {path}");
+    }
+    Ok(())
+}
+
+/// Write a metrics registry to `path`: Prometheus text exposition for
+/// `.prom`/`.txt`, the JSON snapshot otherwise.
+fn write_metrics(reg: &ksegments::telemetry::Registry, path: &str) -> Result<()> {
+    let text = if path.ends_with(".prom") || path.ends_with(".txt") {
+        reg.to_prometheus()
+    } else {
+        format!("{}\n", reg.to_json())
+    };
+    std::fs::write(path, text).with_context(|| path.to_string())?;
+    println!("wrote metrics to {path}");
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let wf_name = args.kv.get("workflow").context("--workflow required")?;
+    let out = PathBuf::from(args.kv.get("out").context("--out required")?);
+    let format = args.kv.get("format").map(String::as_str).unwrap_or("jsonl");
+    let wf = workflow_by_name(wf_name)?;
+    let trace = generate_workflow_trace(&wf, args.seed());
+    match format {
+        "jsonl" => write_trace_jsonl(&trace, &out)?,
+        "csv" => write_trace_csv(&trace, &out)?,
+        other => bail!("unknown format {other:?} (jsonl|csv)"),
+    }
+    println!(
+        "wrote {} runs of {} task types ({} evaluated) to {}",
+        trace.n_runs(),
+        trace.n_types(),
+        trace.evaluated_types(ksegments::workload::EVAL_MIN_RUNS).len(),
+        out.display()
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let method = args.kv.get("method").context("--method required")?;
+    let frac: f64 = args
+        .kv
+        .get("frac")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(0.5);
+    let mut predictor = method_by_name(method, args.fitter())?;
+    let cfg = SimConfig::with_training_frac(frac);
+    let wf_names: Vec<&str> = match args.kv.get("workflow") {
+        Some(w) => vec![w.as_str()],
+        None => vec!["eager", "sarek"],
+    };
+    println!(
+        "method={} frac={frac} seed={} fitter={:?}",
+        predictor.name(),
+        args.seed(),
+        args.fitter()
+    );
+    for wf_name in wf_names {
+        let wf = workflow_by_name(wf_name)?;
+        let trace = generate_workflow_trace(&wf, args.seed());
+        let rep = simulate_trace(&trace, predictor.as_mut(), &cfg);
+        println!(
+            "\n[{}] {} evaluated tasks — avg wastage {:.3} GB·s, avg retries {:.3}",
+            wf_name,
+            rep.tasks.len(),
+            rep.avg_wastage_gbs(),
+            rep.avg_retries()
+        );
+        for t in &rep.tasks {
+            println!(
+                "  {:<32} runs {:>4}  wastage {:>10.3} GB·s  retries {:>6.3}",
+                t.task_type,
+                t.n_scored,
+                t.avg_wastage_gbs(),
+                t.avg_retries()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_fig7(args: &Args) -> Result<()> {
+    let methods = methods_arg(args)?;
+    let results = run_fig7_selected(args.seed(), args.fitter(), args.workers(), &methods);
+    println!("{}", results.render_wastage());
+    println!("{}", results.render_wins());
+    println!("{}", results.render_retries());
+    println!("{}", results.headline(0.75));
+    Ok(())
+}
+
+fn cmd_fig8(args: &Args) -> Result<()> {
+    let ks: Vec<usize> = (1..=15).collect();
+    for task in ["eager/qualimap", "eager/adapter_removal"] {
+        let r = run_fig8(args.seed(), args.fitter(), task, &ks, args.workers());
+        println!("{}", r.render());
+    }
+    Ok(())
+}
+
+fn cmd_validate_runtime() -> Result<()> {
+    use ksegments::ml::fitter::FitInput;
+    let mut xla = XlaFitter::load_default()?;
+    let (n_hist, t_max) = (xla.manifest().n_hist, xla.manifest().t_max);
+    println!(
+        "artifacts: n_hist={n_hist} t_max={t_max} ks={:?}",
+        xla.manifest().fits.keys().collect::<Vec<_>>()
+    );
+    let mut native = NativeFitter;
+    let mut rng = ksegments::rng::Rng::new(7);
+    let mut worst: f64 = 0.0;
+    for k in [1usize, 2, 4, 8, 16] {
+        let mut input = FitInput::default();
+        for _ in 0..24 {
+            let x = rng.uniform(100.0, 4000.0);
+            let peak = 50.0 + 0.8 * x * rng.uniform(0.9, 1.1);
+            input.x.push(x);
+            input.runtime.push(30.0 + 0.05 * x);
+            input
+                .series
+                .push((0..t_max).map(|j| peak * (j + 1) as f64 / t_max as f64).collect());
+        }
+        let a = xla.fit(&input, k);
+        let b = native.fit(&input, k);
+        let rel = |x: f64, y: f64| (x - y).abs() / y.abs().max(1.0);
+        let mut err = rel(a.rt.a, b.rt.a).max(rel(a.rt.b, b.rt.b));
+        for s in 0..k {
+            err = err.max(rel(a.seg[s].a, b.seg[s].a)).max(rel(a.seg[s].b, b.seg[s].b));
+            err = err.max(rel(a.seg_off[s], b.seg_off[s]));
+        }
+        worst = worst.max(err);
+        println!("k={k:>2}: max relative deviation xla-vs-native = {err:.2e}");
+    }
+    println!("xla fits: {}, native fallbacks: {}", xla.xla_fits, xla.native_fits);
+    if xla.native_fits > 0 {
+        bail!("some fits fell back to native — artifacts incomplete?");
+    }
+    if worst > 1e-3 {
+        bail!("deviation {worst:.2e} exceeds 1e-3 — backends diverged");
+    }
+    println!("VALIDATION OK (worst deviation {worst:.2e})");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let shards = args.shards();
+    let factory = |_: usize| -> Box<dyn MemoryPredictor> {
+        Box::new(KSegmentsPredictor::native(4, RetryStrategy::Selective))
+    };
+    // `--trace-out` records per-shard wakeup spans (wall clock — the
+    // service is real threads, not simulation)
+    let svc = if args.kv.contains_key("trace-out") {
+        ShardedPredictionService::spawn_traced(shards, factory)
+    } else {
+        ShardedPredictionService::spawn(shards, factory)
+    };
+    let h = svc.handle();
+    if let Some(path) = args.kv.get("source") {
+        // Replay an ingested trace source through the service — the
+        // streaming deployment path (no materialized trace).
+        let mut src = ksegments::ingest::open_source(&PathBuf::from(path))?;
+        let fed = h.replay_source(src.as_mut(), ksegments::ingest::DEFAULT_CHUNK)?;
+        println!("replayed {} runs from {}", fed, src.origin());
+    } else {
+        // Demo: run the eager workflow through the sharded prediction
+        // service from multiple SWMS worker threads.
+        let trace = generate_workflow_trace(&eager_workflow(), args.seed());
+        let n_clients = args.workers();
+        for ty in trace.task_types() {
+            if let Some(mem) = trace.default_alloc(ty) {
+                h.prime(ty, mem);
+            }
+        }
+        let runs: Vec<_> = trace.all_runs_ordered().into_iter().cloned().collect();
+        let chunk = runs.len().div_ceil(n_clients).max(1);
+        let mut joins = Vec::new();
+        for (w, part) in runs.chunks(chunk).enumerate() {
+            let h = svc.handle();
+            let part = part.to_vec();
+            joins.push(std::thread::spawn(move || {
+                for run in part {
+                    let alloc = h.predict(&run.task_type, run.input_mib);
+                    let _ = alloc.max_value();
+                    h.complete(run);
+                }
+                println!("worker {w} done");
+            }));
+        }
+        for j in joins {
+            j.join().map_err(|_| anyhow!("worker panicked"))?;
+        }
+    }
+    let (per_shard, wakeup_trace) = svc.shutdown_with_trace();
+    for (s, stats) in per_shard.iter().enumerate() {
+        println!(
+            "shard {s}: {} predictions, {} completions, {} failures, {} wakeups",
+            stats.predictions, stats.completions, stats.failures, stats.wakeups
+        );
+    }
+    let total = ksegments::coordinator::ServiceStats::aggregated(&per_shard);
+    println!(
+        "service ({shards} shards) processed {} predictions, {} completions, {} failures",
+        total.predictions, total.completions, total.failures
+    );
+    if let Some(path) = args.kv.get("trace-out") {
+        ksegments::telemetry::write_chrome_trace(path, &wakeup_trace)
+            .with_context(|| path.clone())?;
+        println!(
+            "wrote service trace ({} events) to {path} (open at https://ui.perfetto.dev)",
+            wakeup_trace.len()
+        );
+    }
+    if let Some(path) = args.kv.get("metrics-out") {
+        let mut reg = ksegments::telemetry::Registry::new();
+        ksegments::coordinator::export_service_metrics(&per_shard, &mut reg);
+        write_metrics(&reg, path)?;
+    }
+    Ok(())
+}
+
+fn cmd_ingest(args: &Args) -> Result<()> {
+    let dir = args
+        .pos
+        .first()
+        .cloned()
+        .or_else(|| args.kv.get("dir").cloned())
+        .context("usage: ksegments ingest <dir> [--out FILE] [--format jsonl|csv]")?;
+    let dir = PathBuf::from(dir);
+    let mut src = ksegments::ingest::NextflowDirSource::open(&dir)?;
+    let (indexed, skipped) = (src.n_rows(), src.skipped_rows());
+    let trace = ksegments::ingest::materialize(&mut src)?;
+    let format = args.kv.get("format").map(String::as_str).unwrap_or("jsonl");
+    // default to the working directory — never write into the source
+    // trace dir (it may be a pristine capture or a checked-in fixture)
+    let out = args
+        .kv
+        .get("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("trace.jsonl"));
+    match format {
+        "jsonl" => write_trace_jsonl_ordered(&trace, &out)?,
+        "csv" => write_trace_csv(&trace, &out)?,
+        other => bail!("unknown format {other:?} (jsonl|csv)"),
+    }
+    let n_defaults = trace
+        .task_types()
+        .filter(|ty| trace.default_alloc(ty).is_some())
+        .count();
+    println!(
+        "ingested {}: {} runs over {} task types ({} non-COMPLETED rows skipped, \
+         defaults for {} types)",
+        dir.display(),
+        indexed,
+        trace.n_types(),
+        skipped,
+        n_defaults
+    );
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+fn cmd_replay(args: &Args) -> Result<()> {
+    use ksegments::ingest::{open_source, replay_source, Checkpoint, ReplayConfig};
+
+    let path = PathBuf::from(
+        args.kv
+            .get("source")
+            .context("--source required (a .jsonl/.csv trace or a Nextflow trace dir)")?,
+    );
+    let sel = args
+        .kv
+        .get("method")
+        .map(String::as_str)
+        .unwrap_or("ksegments-selective");
+    let keys = ksegments::bench_harness::resolve_methods(sel).map_err(|e| anyhow!(e))?;
+    let mut cfg = ReplayConfig::default();
+    if let Some(w) = args.kv.get("warmup") {
+        cfg.warmup_per_type = w.parse().context("--warmup")?;
+    }
+    if let Some(c) = args.kv.get("chunk") {
+        cfg.chunk = c.parse::<usize>().context("--chunk")?.max(1);
+    }
+    let workers = args.workers();
+    let start = args
+        .kv
+        .get("checkpoint")
+        .map(|p| Checkpoint::load(&PathBuf::from(p)))
+        .transpose()?;
+    let ckpt_out = args.kv.get("checkpoint-out").map(PathBuf::from);
+    if (start.is_some() || ckpt_out.is_some()) && keys.len() > 1 {
+        bail!(
+            "checkpointing needs a single --method (selection resolved to {} methods)",
+            keys.len()
+        );
+    }
+    let trace_out = args.kv.get("trace-out");
+    if trace_out.is_some() && keys.len() > 1 {
+        println!("note: --trace-out records the first method only\n");
+    }
+    let mut reg = ksegments::telemetry::Registry::new();
+    let mut src = open_source(&path)?;
+    println!(
+        "replay: source={} methods={} workers={workers} warmup={} chunk={}\n",
+        src.origin(),
+        keys.join(","),
+        cfg.warmup_per_type,
+        cfg.chunk
+    );
+    for (i, &key) in keys.iter().enumerate() {
+        if i > 0 {
+            src.rewind()?;
+        }
+        cfg.collect_trace = trace_out.is_some() && i == 0;
+        let choice = args.fitter();
+        let make =
+            move || ksegments::bench_harness::make_method(key, choice).expect("resolved key");
+        let out = replay_source(src.as_mut(), &make, &cfg, workers, start.as_ref())?;
+        out.report.export_metrics(&mut reg);
+        if let (0, Some(path)) = (i, trace_out) {
+            ksegments::telemetry::write_chrome_trace(path, &out.trace_events)
+                .with_context(|| path.clone())?;
+            println!(
+                "wrote replay trace ({} events) to {path} (open at https://ui.perfetto.dev)",
+                out.trace_events.len()
+            );
+        }
+        println!(
+            "[{}] {} runs replayed ({} warm-up) over {} task types — avg wastage {:.3} GB·s, \
+             avg retries {:.3}",
+            out.report.method,
+            out.runs_replayed,
+            out.runs_warmup,
+            out.report.tasks.len(),
+            out.report.avg_wastage_gbs(),
+            out.report.avg_retries()
+        );
+        for t in &out.report.tasks {
+            println!(
+                "  {:<32} scored {:>4}  wastage {:>10.3} GB·s  retries {:>6.3}",
+                t.task_type,
+                t.n_scored,
+                t.avg_wastage_gbs(),
+                t.avg_retries()
+            );
+        }
+        if let Some(p) = &ckpt_out {
+            out.checkpoint.save(p)?;
+            println!(
+                "checkpoint ({} task types, {} runs seen) -> {}",
+                out.checkpoint.n_types(),
+                out.checkpoint.total_seen(),
+                p.display()
+            );
+        }
+    }
+    if let Some(path) = args.kv.get("metrics-out") {
+        write_metrics(&reg, path)?;
+    }
+    Ok(())
+}
+
+const SCHEDULE_USAGE: &str = "\
+ksegments schedule — discrete-event cluster scheduling simulator
+
+  --nodes N       cluster size (default 2)
+  --node-gib G    memory per node in GiB (default 32)
+  --arrival SECS  mean inter-arrival gap of the task (or workflow
+                  instance) stream (default 5)
+  --policy P      static | segment | both (default both)
+  --method M      predictor driving the reservations
+                  (default ksegments-selective; any METHODS entry from
+                  `ksegments --help`, incl. ensemble and dynseg)
+  --frac F        warm-up training fraction (default 0.5; ignored in
+                  --dag mode, which always learns online)
+  --seed N        trace + arrival seed (default 42)
+  --workflow W    eager | sarek (default eager)
+  --dag W         dependency-gated workflow mode: schedule N concurrent
+                  instances of workflow W's DAG, releasing a task only
+                  when its parents have completed
+  --instances N   concurrent workflow instances for --dag (default 4;
+                  with --sweep, the swept axis: N or N1,N2,...,
+                  default 2,4,8)
+  --fail-rate R   inject node failures at R per second (mean; Poisson);
+                  resident tasks requeue blamelessly with their
+                  allocation unchanged, and the node rejoins after a
+                  60 s downtime (default 0 = no failures)
+  --preempt       draw task priorities and let a high-priority arrival
+                  that cannot place evict younger low-priority tasks
+                  (evictees requeue blamelessly)
+  --autoscale [LAG]
+                  scale the roster with queue pressure: add a node
+                  (joining after LAG seconds, default 30) when the
+                  queue outgrows the live roster, retire idle
+                  autoscaled nodes when it drains
+  --sweep         render throughput tables on the parallel grid over
+                  several arrival rates (or, with --dag, over the
+                  --instances counts); the sweep itself runs the fixed
+                  roster on a fixed 2 x 32 GiB cluster — --nodes,
+                  --node-gib, --arrival and --method apply to the
+                  single-run modes only
+  --fail-sweep    render the failure-domain tables (method x failure
+                  rate x autoscale lag) on the parallel grid
+  --workers N     worker threads for --sweep/--fail-sweep (default:
+                  cores)
+  --trace-out FILE
+                  write the run as Chrome trace-event JSON (task spans
+                  on node tracks, kills/arrivals as instants; open at
+                  https://ui.perfetto.dev). Purely observational —
+                  reports stay bit-identical
+  --provenance-out FILE
+                  write one JSONL record per prediction (chosen
+                  sub-model, RAQ scores, offset, segment bounds,
+                  window length) and per failure escalation
+  --metrics-out FILE
+                  write scheduler counters/gauges/queue-wait histogram
+                  (Prometheus text for .prom/.txt, JSON otherwise)
+
+With --policy both, --trace-out/--provenance-out record the first
+policy only; --metrics-out labels every policy's series.
+";
+
+/// `schedule --dag W`: dependency-gated workflow instances.
+fn cmd_schedule_dag(args: &Args, wf_name: &str) -> Result<()> {
+    use ksegments::cluster::NodeSpec;
+    use ksegments::sched::{
+        schedule_workflows, schedule_workflows_telemetry, SchedConfig, WorkflowSource,
+    };
+    use ksegments::units::{MemMiB, Seconds};
+
+    let wf = workflow_by_name(wf_name)?;
+    if args.flag("sweep") {
+        // the sweep's instance-count axis: --instances N or N1,N2,...
+        // (the cluster/method axes are fixed, like the arrival sweep)
+        let counts: Vec<usize> = match args.kv.get("instances") {
+            Some(s) => {
+                let v = s
+                    .split(',')
+                    .map(|t| t.trim().parse::<usize>())
+                    .collect::<Result<Vec<_>, _>>()
+                    .context("--instances (sweep mode takes N or a comma list, e.g. 2,4,8)")?;
+                if v.is_empty() || v.contains(&0) {
+                    bail!("--instances counts must be positive");
+                }
+                v
+            }
+            None => vec![2, 4, 8],
+        };
+        let sweep = ksegments::bench_harness::run_dag_throughput(
+            &wf,
+            args.seed(),
+            &counts,
+            args.workers(),
+        );
+        println!("{}", sweep.render_workflow_makespan());
+        println!("{}", sweep.render_stretch());
+        println!("{}", sweep.render_stragglers());
+        println!("{}", sweep.render_summaries());
+        return Ok(());
+    }
+    let cli = parse_sched_cli(args)?;
+    let instances: usize = args
+        .kv
+        .get("instances")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(4);
+    if instances == 0 {
+        bail!("--instances must be at least 1");
+    }
+    println!(
+        "schedule --dag: workflow={wf_name} instances={instances} method={} \
+         nodes={}x{}GiB arrival={}s seed={}{}\n",
+        cli.method,
+        cli.n_nodes,
+        cli.node_gib,
+        cli.arrival,
+        args.seed(),
+        cli.adversity_summary(),
+    );
+    let mut tel = telemetry_from_args(args)?;
+    let telemetry_on = tel.trace.enabled() || tel.provenance.is_some();
+    if telemetry_on && cli.policies.len() > 1 {
+        println!(
+            "note: --trace-out/--provenance-out record the first policy ({}) only\n",
+            cli.policies[0].name()
+        );
+    }
+    let mut reports = Vec::new();
+    for (i, policy) in cli.policies.iter().enumerate() {
+        let mut cfg = SchedConfig {
+            policy: *policy,
+            nodes: vec![NodeSpec { mem: MemMiB::from_gib(cli.node_gib), cores: 32 }; cli.n_nodes],
+            mean_interarrival: Seconds(cli.arrival),
+            seed: args.seed(),
+            ..SchedConfig::default()
+        };
+        cli.apply_failure_domains(&mut cfg);
+        let src = WorkflowSource::from_spec(&wf, args.seed(), instances);
+        let mut predictor = method_by_name(&cli.method, args.fitter())?;
+        let rep = if i == 0 {
+            schedule_workflows_telemetry(src, predictor.as_mut(), &cfg, &mut tel).0
+        } else {
+            schedule_workflows(src, predictor.as_mut(), &cfg)
+        };
+        println!("{}", rep.summary());
+        reports.push(rep);
+    }
+    finish_telemetry(args, &mut tel)?;
+    if let Some(path) = args.kv.get("metrics-out") {
+        let mut reg = ksegments::telemetry::Registry::new();
+        for rep in &reports {
+            rep.export_metrics(&mut reg);
+        }
+        write_metrics(&reg, path)?;
+    }
+    Ok(())
+}
+
+fn cmd_schedule(args: &Args) -> Result<()> {
+    use ksegments::cluster::NodeSpec;
+    use ksegments::sched::{schedule_trace, schedule_trace_telemetry, SchedConfig};
+    use ksegments::units::{MemMiB, Seconds};
+
+    if args.flag("help") {
+        print!("{SCHEDULE_USAGE}");
+        return Ok(());
+    }
+    if let Some(dag_wf) = args.kv.get("dag").cloned() {
+        return cmd_schedule_dag(args, &dag_wf);
+    }
+    if args.flag("sweep") {
+        let sweep = ksegments::bench_harness::run_throughput(
+            args.seed(),
+            &[2.0, 5.0, 10.0],
+            args.workers(),
+        );
+        println!("{}", sweep.render_makespan());
+        println!("{}", sweep.render_queue_wait());
+        println!("{}", sweep.render_packing());
+        println!("{}", sweep.render_summaries());
+        return Ok(());
+    }
+    if args.flag("fail-sweep") {
+        let sweep = ksegments::bench_harness::run_failure_sweep(args.seed(), args.workers());
+        println!("{}", sweep.render_makespan());
+        println!("{}", sweep.render_disruption());
+        println!("{}", sweep.render_wastage());
+        println!("{}", sweep.render_summaries());
+        return Ok(());
+    }
+
+    let cli = parse_sched_cli(args)?;
+    let frac: f64 = args
+        .kv
+        .get("frac")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(0.5);
+    if !(0.0..1.0).contains(&frac) {
+        bail!("--frac must be in [0, 1)");
+    }
+    let wf_name = args.kv.get("workflow").map(String::as_str).unwrap_or("eager");
+    let trace = generate_workflow_trace(&workflow_by_name(wf_name)?, args.seed());
+
+    println!(
+        "schedule: workflow={wf_name} method={} nodes={}x{}GiB \
+         arrival={}s frac={frac} seed={}{}\n",
+        cli.method,
+        cli.n_nodes,
+        cli.node_gib,
+        cli.arrival,
+        args.seed(),
+        cli.adversity_summary(),
+    );
+    let mut tel = telemetry_from_args(args)?;
+    let telemetry_on = tel.trace.enabled() || tel.provenance.is_some();
+    if telemetry_on && cli.policies.len() > 1 {
+        println!(
+            "note: --trace-out/--provenance-out record the first policy ({}) only\n",
+            cli.policies[0].name()
+        );
+    }
+    let mut reports = Vec::new();
+    for (i, policy) in cli.policies.iter().enumerate() {
+        let mut cfg = SchedConfig {
+            policy: *policy,
+            nodes: vec![NodeSpec { mem: MemMiB::from_gib(cli.node_gib), cores: 32 }; cli.n_nodes],
+            mean_interarrival: Seconds(cli.arrival),
+            seed: args.seed(),
+            training_frac: frac,
+            ..SchedConfig::default()
+        };
+        cli.apply_failure_domains(&mut cfg);
+        let mut predictor = method_by_name(&cli.method, args.fitter())?;
+        let rep = if i == 0 {
+            schedule_trace_telemetry(&trace, predictor.as_mut(), &cfg, &mut tel).0
+        } else {
+            schedule_trace(&trace, predictor.as_mut(), &cfg)
+        };
+        println!("{}", rep.summary());
+        reports.push(rep);
+    }
+    finish_telemetry(args, &mut tel)?;
+    if let Some(path) = args.kv.get("metrics-out") {
+        let mut reg = ksegments::telemetry::Registry::new();
+        for rep in &reports {
+            rep.export_metrics(&mut reg);
+        }
+        write_metrics(&reg, path)?;
+    }
+    if let [stat, segw] = reports.as_slice() {
+        if stat.makespan.0 > 0.0 && segw.makespan.0 > 0.0 {
+            println!(
+                "\nsegment-wise vs static-peak: makespan x{:.3}, mean wait x{:.3}, \
+                 peak concurrency {} -> {}",
+                segw.makespan.0 / stat.makespan.0,
+                (segw.mean_queue_wait_s() / stat.mean_queue_wait_s().max(1e-9)),
+                stat.peak_running,
+                segw.peak_running,
+            );
+        }
+    }
+    Ok(())
+}
+
+/// `ksegments bench`: run perf areas and write `BENCH_<area>.json`
+/// snapshots — the numbers CI diffs against the committed trajectory.
+fn cmd_bench(args: &Args) -> Result<()> {
+    let mut areas = args.all("area");
+    if areas.is_empty() {
+        areas.push("sched".to_string());
+    }
+    let out_dir = PathBuf::from(args.kv.get("out-dir").map(String::as_str).unwrap_or("."));
+    std::fs::create_dir_all(&out_dir).with_context(|| out_dir.display().to_string())?;
+    for area in &areas {
+        let snap = ksegments::bench_harness::run_bench_area(area, args.seed(), args.workers())
+            .map_err(|e| anyhow!(e))?;
+        let path = out_dir.join(snap.file_name());
+        std::fs::write(&path, format!("{}\n", snap.to_json()))
+            .with_context(|| path.display().to_string())?;
+        println!(
+            "[{area}] {:.0} {} over {:.2}s wall -> {}",
+            snap.throughput,
+            snap.throughput_unit,
+            snap.wall_s,
+            path.display()
+        );
+    }
+    Ok(())
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::parse();
+    if !args.pos.is_empty() && args.cmd != "ingest" {
+        bail!("unexpected positional argument {:?}", args.pos[0]);
+    }
+    match args.cmd.as_str() {
+        "generate" => cmd_generate(&args),
+        "ingest" => cmd_ingest(&args),
+        "replay" => cmd_replay(&args),
+        "simulate" => cmd_simulate(&args),
+        "fig7" => cmd_fig7(&args),
+        "fig8" => cmd_fig8(&args),
+        "fig4" => {
+            println!("{}", run_fig4(args.seed(), args.fitter()));
+            Ok(())
+        }
+        "fig1" => {
+            println!("{}", run_fig1(args.seed()));
+            Ok(())
+        }
+        "ablate" => {
+            println!(
+                "{}",
+                ksegments::bench_harness::ablation::run_all(args.seed(), args.workers())
+            );
+            Ok(())
+        }
+        "report" => {
+            let methods = methods_arg(&args)?;
+            let text = ksegments::bench_harness::report::full_report(
+                args.seed(),
+                args.fitter(),
+                args.workers(),
+                &methods,
+            );
+            match args.kv.get("out") {
+                Some(path) => {
+                    std::fs::write(path, &text)?;
+                    println!("wrote report to {path}");
+                }
+                None => println!("{text}"),
+            }
+            Ok(())
+        }
+        "validate-runtime" => cmd_validate_runtime(),
+        "serve" => cmd_serve(&args),
+        "schedule" => cmd_schedule(&args),
+        "bench" => cmd_bench(&args),
+        "bench-sched" => {
+            let json = ksegments::bench_harness::bench_sched_json(args.seed(), args.workers());
+            match args.kv.get("out") {
+                Some(path) => {
+                    std::fs::write(path, format!("{json}\n"))?;
+                    println!("wrote scheduler benchmark snapshot to {path}");
+                }
+                None => println!("{json}"),
+            }
+            Ok(())
+        }
+        "" | "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n\n{USAGE}"),
+    }
+}
+
+fn main() -> ExitCode {
+    match real_main() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,58 @@
+//! Prediction-side foundation of the ksegments workspace — the only
+//! layer a scientific workflow management system has to link.
+//!
+//! This crate reproduces the modeling core of Bader et al.,
+//! *Predicting Dynamic Memory Requirements for Scientific Workflow
+//! Tasks* (2023): the [`trace`] data model for task runs and their
+//! time-resolved memory-usage series, the [`ml`] segmented-regression
+//! machinery, the [`predictors`] roster (k-Segments and the baselines
+//! it is evaluated against), the single-run [`scoring`] kernel that
+//! accounts wastage and retries, and the [`wastage`] report types the
+//! paper's Fig. 7 plots.
+//!
+//! Everything here is dependency-light and engine-agnostic: no thread
+//! pools, no discrete-event engine, no file-format sniffing. Those
+//! live in the higher workspace layers — `ksegments-sim` (parallel
+//! evaluation grids, figure regeneration), `ksegments-sched` (cluster
+//! + scheduler), `ksegments-serve` (ingestion, replay, the prediction
+//! service) — and the `ksegments` facade crate re-exports all of them
+//! under the historical single-crate paths.
+//!
+//! Module map:
+//!
+//! * [`units`], [`rng`], [`util`] — shared vocabulary: MiB/GB·s/s
+//!   newtypes, the deterministic splittable rng, stats/json helpers
+//!   and the bench stopwatch.
+//! * [`trace`], [`source`], [`tsdb`], [`monitoring`] — task runs,
+//!   usage series, the streaming [`source::TraceSource`] seam,
+//!   Gorilla-style series compression and the monitoring pipeline
+//!   that downsamples raw samples into [`trace::UsageSeries`].
+//! * [`ml`], [`runtime`] — piecewise-constant step functions, the
+//!   k-segments dynamic-programming fitter (native, plus the
+//!   XLA-backed drop-in behind the `xla` feature), and fitter
+//!   selection.
+//! * [`predictors`] — the paper's method roster behind one
+//!   [`predictors::MemoryPredictor`] trait.
+//! * [`scoring`] — the online evaluation protocol (predict → attempt
+//!   → retry) for a single predictor over a single trace.
+//! * [`wastage`] — per-task and per-method wastage/retry reports
+//!   (formerly the top-level `metrics` module; see the module docs for
+//!   the rename rationale).
+//! * [`telemetry`] — engine-agnostic observability primitives: trace
+//!   sinks, the metrics registry, provenance logs.
+//! * [`workload`] — synthetic workflow specs and trace generators.
+
+pub mod monitoring;
+pub mod ml;
+pub mod predictors;
+pub mod rng;
+pub mod runtime;
+pub mod scoring;
+pub mod source;
+pub mod telemetry;
+pub mod trace;
+pub mod tsdb;
+pub mod units;
+pub mod util;
+pub mod wastage;
+pub mod workload;

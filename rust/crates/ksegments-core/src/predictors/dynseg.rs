@@ -1,0 +1,440 @@
+//! DynSeg — KS+-style **data-driven dynamic segmentation** of the
+//! memory curve (arXiv 2408.12290), the time-aware competitor to the
+//! paper's fixed equal-width k-Segments.
+//!
+//! KS+ observes that equal-width segments waste allocation whenever a
+//! task's usage curve has change points that do not fall on the k-grid
+//! (long flat prefix, late spike, plateaus). Instead of `k` equal bins
+//! it places segment boundaries at change points of the usage curve.
+//!
+//! Our reproduction: average the window's peak-resampled usage rows
+//! into one mean curve, find at most `k` segments by greedy
+//! error-minimizing binary splits
+//! ([`crate::ml::segmentation::greedy_segment_bounds`] — each split
+//! maximally reduces the flat-piece over-allocation cost), then train
+//! exactly the k-Segments per-segment machinery over those bounds:
+//! per-segment `peak ~ input` regressions with max-underprediction
+//! offsets, a runtime regression with the conservative negative
+//! offset, and a monotone clamped [`StepFunction`] — so
+//! `simulate_attempt`, the retry strategies, and the `sched`
+//! segment-wise reservation policy consume DynSeg allocations
+//! completely unchanged.
+
+use std::collections::BTreeMap;
+
+use crate::ml::linreg::LinReg;
+use crate::ml::segmentation::{greedy_segment_bounds, index_bounds_to_time, seg_peaks_with_bounds};
+use crate::ml::step_fn::StepFunction;
+use crate::trace::TaskRun;
+use crate::units::MemMiB;
+
+use super::history::HistoryMap;
+use super::ksegments::{KSegmentsConfig, RetryStrategy};
+use super::{Allocation, Defaults, FailureInfo, MemoryPredictor};
+
+/// A fitted DynSeg model: change-point index bounds shared by all
+/// window rows, plus the standard per-segment/runtime regressions.
+#[derive(Debug, Clone)]
+pub struct DynSegFit {
+    rt: LinReg,
+    rt_offset: f64,
+    /// Change-point segmentation of the resample grid (≤ k segments).
+    pub bounds: Vec<(usize, usize)>,
+    seg: Vec<LinReg>,
+    seg_off: Vec<f64>,
+}
+
+impl DynSegFit {
+    pub fn k(&self) -> usize {
+        self.seg.len()
+    }
+
+    pub fn predict_runtime(&self, x: f64) -> f64 {
+        self.rt.predict(x) - self.rt_offset
+    }
+
+    pub fn predict_segments(&self, x: f64) -> Vec<f64> {
+        self.seg
+            .iter()
+            .zip(&self.seg_off)
+            .map(|(lr, off)| lr.predict(x) + off)
+            .collect()
+    }
+}
+
+/// The KS+-style dynamic-segmentation predictor. Reuses
+/// [`KSegmentsConfig`] — `k` is the segment *budget* (the greedy
+/// splitter may stop below it when the curve has fewer change points).
+pub struct DynSegPredictor {
+    cfg: KSegmentsConfig,
+    strategy: RetryStrategy,
+    defaults: Defaults,
+    histories: HistoryMap,
+    fits: BTreeMap<String, (u64, DynSegFit)>,
+}
+
+impl DynSegPredictor {
+    pub fn with_config(cfg: KSegmentsConfig, strategy: RetryStrategy) -> Self {
+        assert!(cfg.k >= 1 && cfg.k <= cfg.t_resample);
+        assert!(cfg.retry_factor > 1.0, "retry factor must make progress");
+        let histories = HistoryMap::new(cfg.n_hist, cfg.t_resample);
+        DynSegPredictor {
+            cfg,
+            strategy,
+            defaults: Defaults::default(),
+            histories,
+            fits: BTreeMap::new(),
+        }
+    }
+
+    /// Paper-default configuration with the given segment budget.
+    pub fn native(k: usize, strategy: RetryStrategy) -> Self {
+        let cfg = KSegmentsConfig { k, ..KSegmentsConfig::default() };
+        Self::with_config(cfg, strategy)
+    }
+
+    pub fn config(&self) -> &KSegmentsConfig {
+        &self.cfg
+    }
+
+    pub fn strategy(&self) -> RetryStrategy {
+        self.strategy
+    }
+
+    /// Current fit for a task (refit lazily when the history advanced);
+    /// `None` below `min_train`. Public for tests/observability.
+    pub fn fit_for(&mut self, task_type: &str) -> Option<DynSegFit> {
+        let h = self.histories.get(task_type)?;
+        if h.len() < self.cfg.min_train {
+            return None;
+        }
+        let version = h.total_seen();
+        if let Some((v, fit)) = self.fits.get(task_type) {
+            if *v == version {
+                return Some(fit.clone());
+            }
+        }
+        let input = h.fit_input();
+        let n = input.x.len();
+        let t = self.cfg.t_resample;
+
+        // Mean usage curve over the window (column means of the
+        // peak-resampled rows) — the curve the change points come from.
+        let mut mean_curve = vec![0.0f64; t];
+        for row in &input.series {
+            for (m, y) in mean_curve.iter_mut().zip(row) {
+                *m += y;
+            }
+        }
+        for m in mean_curve.iter_mut() {
+            *m /= n as f64;
+        }
+        let bounds = greedy_segment_bounds(&mean_curve, self.cfg.k);
+
+        // Runtime model + conservative offset (identical to NativeFitter).
+        let rt = LinReg::fit(&input.x, &input.runtime);
+        let mut rt_offset = 0.0f64;
+        for (&xi, &ri) in input.x.iter().zip(&input.runtime) {
+            rt_offset = rt_offset.max(rt.predict(xi) - ri);
+        }
+
+        // Per-segment peak regressions over the SHARED change-point
+        // bounds + max-underprediction offsets.
+        let peaks: Vec<Vec<f64>> = input
+            .series
+            .iter()
+            .map(|row| seg_peaks_with_bounds(row, &bounds))
+            .collect();
+        let mut seg = Vec::with_capacity(bounds.len());
+        let mut seg_off = Vec::with_capacity(bounds.len());
+        let mut col = vec![0.0; n];
+        for s in 0..bounds.len() {
+            for (row, p) in peaks.iter().enumerate() {
+                col[row] = p[s];
+            }
+            let lr = LinReg::fit(&input.x, &col);
+            let mut off = 0.0f64;
+            for (&xi, &yi) in input.x.iter().zip(col.iter()) {
+                off = off.max(yi - lr.predict(xi));
+            }
+            seg.push(lr);
+            seg_off.push(off);
+        }
+
+        let mut fit = DynSegFit { rt, rt_offset, bounds, seg, seg_off };
+        if !self.cfg.use_offsets {
+            fit.rt_offset = 0.0;
+            fit.seg_off.iter_mut().for_each(|o| *o = 0.0);
+        }
+        self.fits.insert(task_type.to_string(), (version, fit.clone()));
+        Some(fit)
+    }
+}
+
+impl MemoryPredictor for DynSegPredictor {
+    fn name(&self) -> String {
+        format!("KS+ DynSeg {}", self.strategy.label())
+    }
+
+    fn prime(&mut self, task_type: &str, default: MemMiB) {
+        self.defaults.set(task_type, default);
+    }
+
+    fn predict(&mut self, task_type: &str, input_mib: f64) -> Allocation {
+        let default = self.defaults.get(task_type);
+        let Some(fit) = self.fit_for(task_type) else {
+            return Allocation::Static(default);
+        };
+        let rt = fit.predict_runtime(input_mib).max(1.0);
+        let time_bounds = index_bounds_to_time(rt, self.cfg.t_resample, &fit.bounds);
+        let f = StepFunction::monotone_clamped_with_bounds(
+            time_bounds,
+            fit.predict_segments(input_mib),
+            self.cfg.min_alloc,
+            self.cfg.node_max,
+        );
+        Allocation::Dynamic(f)
+    }
+
+    fn on_failure(
+        &mut self,
+        _task_type: &str,
+        _input_mib: f64,
+        failed: &Allocation,
+        info: &FailureInfo,
+    ) -> Allocation {
+        // Same escalation contract as k-Segments: the step function is
+        // interchangeable, so the retry strategies apply unchanged.
+        let l = self.cfg.retry_factor;
+        match failed {
+            Allocation::Static(m) => {
+                Allocation::Static(MemMiB((m.0 * l).min(self.cfg.node_max.0)))
+            }
+            Allocation::Dynamic(f) => {
+                let seg = f.segment_at(info.time_s);
+                let k = f.k();
+                let (from, to) = match self.strategy {
+                    RetryStrategy::Selective => (seg, seg + 1),
+                    RetryStrategy::Partial => (seg, k),
+                };
+                let mut next = f.scale_segments(from, to, l, self.cfg.node_max);
+                if next.value_at(info.time_s) <= info.used_mib {
+                    let need = (info.used_mib * 1.05).min(self.cfg.node_max.0);
+                    let mut values = next.values().to_vec();
+                    let hi = to.min(values.len());
+                    for v in values[from..hi].iter_mut() {
+                        *v = v.max(need);
+                    }
+                    next = StepFunction::monotone_clamped_with_bounds(
+                        next.bounds().to_vec(),
+                        values,
+                        self.cfg.min_alloc,
+                        self.cfg.node_max,
+                    );
+                }
+                Allocation::Dynamic(next)
+            }
+        }
+    }
+
+    fn observe(&mut self, run: &TaskRun) {
+        self.histories.push(run);
+    }
+
+    fn decision(&mut self, task_type: &str) -> Option<crate::telemetry::DecisionDetail> {
+        // fit_for() is cached per history version, so calling it here
+        // is deterministically idempotent — predict() is unaffected.
+        let window_len = self.histories.get(task_type).map_or(0, |h| h.len());
+        let fit = self.fit_for(task_type)?;
+        let t = self.cfg.t_resample as f64;
+        Some(crate::telemetry::DecisionDetail {
+            model: format!("dynseg-k{}", fit.k()),
+            scores: Vec::new(),
+            offset_mib: fit.seg_off.iter().copied().fold(0.0, f64::max),
+            segment_bounds: fit.bounds.iter().map(|&(_, hi)| hi as f64 / t).collect(),
+            window_len,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::UsageSeries;
+    use crate::units::Seconds;
+
+    /// Late-spike profile: flat 100 MiB for 62.5 % of the runtime, then
+    /// a spike to `200 + input` — the shape equal-width segmentation is
+    /// worst at: the change point (grid index 160 of 256) sits strictly
+    /// inside an equal-width k = 4 bin ([128, 192)).
+    fn spike_run(input: f64) -> TaskRun {
+        let n = 80usize;
+        let peak = 200.0 + input;
+        let series: Vec<f64> = (0..n).map(|i| if i < 50 { 100.0 } else { peak }).collect();
+        TaskRun {
+            task_type: "t".into(),
+            input_mib: input,
+            runtime: Seconds(n as f64 * 2.0),
+            series: UsageSeries::new(2.0, series),
+            seq: 0,
+        }
+    }
+
+    fn trained() -> DynSegPredictor {
+        let mut p = DynSegPredictor::native(4, RetryStrategy::Selective);
+        p.prime("t", MemMiB(8192.0));
+        for i in 0..16 {
+            p.observe(&spike_run(100.0 + 50.0 * i as f64));
+        }
+        p
+    }
+
+    #[test]
+    fn untrained_returns_default() {
+        let mut p = DynSegPredictor::native(4, RetryStrategy::Selective);
+        p.prime("t", MemMiB(4096.0));
+        assert_eq!(p.predict("t", 100.0), Allocation::Static(MemMiB(4096.0)));
+        p.observe(&spike_run(100.0));
+        assert!(!p.predict("t", 100.0).is_dynamic());
+    }
+
+    #[test]
+    fn change_point_lands_on_the_spike() {
+        let mut p = trained();
+        let fit = p.fit_for("t").unwrap();
+        // the flat→spike jump is at sample 50/80 = index 160/256 of the
+        // resample grid; the first boundary must sit exactly there
+        assert!(fit.k() >= 2);
+        assert_eq!(fit.bounds[0].0, 0);
+        assert_eq!(fit.bounds[0].1, 160, "bounds {:?}", fit.bounds);
+        let Allocation::Dynamic(f) = p.predict("t", 400.0) else {
+            panic!("expected dynamic allocation")
+        };
+        assert!(f.is_monotone());
+        // early segment hugs the flat 100 MiB level, late covers ~600
+        assert!(f.values()[0] <= 150.0, "{:?}", f.values());
+        assert!(*f.values().last().unwrap() >= 0.9 * 600.0, "{:?}", f.values());
+    }
+
+    #[test]
+    fn beats_equal_width_on_late_spike() {
+        use crate::predictors::ksegments::KSegmentsPredictor;
+        use crate::scoring::{simulate_trace, SimConfig};
+        use crate::trace::Trace;
+
+        // Inputs CYCLE (period 20, even) so every scored run's exact
+        // (input, peak) pair already sits in the training window: the
+        // max-underprediction offsets then cover each scored run
+        // exactly and the comparison is retry-free and deterministic
+        // (no float knife-edge on `used > alloc`). The ±3 % sawtooth
+        // keeps the regressions honest without a trend to chase.
+        let mut trace = Trace::new();
+        trace.set_default("t", MemMiB(8192.0));
+        for i in 0..60u64 {
+            let x = 100.0 + 25.0 * (i % 20) as f64;
+            let mut r = spike_run(x);
+            let noise = if i % 2 == 0 { 1.03 } else { 0.97 };
+            let samples: Vec<f64> =
+                r.series.samples().iter().map(|s| s * noise).collect();
+            r.series = UsageSeries::new(2.0, samples);
+            r.seq = i;
+            trace.push(r);
+        }
+        trace.sort();
+        let cfg = SimConfig { min_runs: 1, ..SimConfig::with_training_frac(0.5) };
+        let mut kseg = KSegmentsPredictor::native(4, RetryStrategy::Selective);
+        let mut dseg = DynSegPredictor::native(4, RetryStrategy::Selective);
+        let rk = simulate_trace(&trace, &mut kseg, &cfg);
+        let rd = simulate_trace(&trace, &mut dseg, &cfg);
+        assert_eq!(rk.total_retries(), 0, "equal-width retried");
+        assert_eq!(rd.total_retries(), 0, "dynseg retried");
+        let (w_kseg, w_dseg) = (rk.avg_wastage_gbs(), rd.avg_wastage_gbs());
+        assert!(
+            w_dseg < w_kseg,
+            "dynseg {w_dseg} should beat equal-width {w_kseg} on a late spike"
+        );
+    }
+
+    #[test]
+    fn flat_profile_degenerates_to_one_segment() {
+        let mut p = DynSegPredictor::native(8, RetryStrategy::Selective);
+        p.prime("t", MemMiB(8192.0));
+        for i in 0..8 {
+            let series = vec![300.0; 50];
+            p.observe(&TaskRun {
+                task_type: "t".into(),
+                input_mib: 100.0 + i as f64,
+                runtime: Seconds(100.0),
+                series: UsageSeries::new(2.0, series),
+                seq: i,
+            });
+        }
+        let Allocation::Dynamic(f) = p.predict("t", 104.0) else {
+            panic!()
+        };
+        assert_eq!(f.k(), 1, "constant curve needs no change points");
+        assert!((f.value_at(10.0) - 300.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn selective_retry_scales_failed_segment() {
+        let mut p = trained();
+        let alloc = p.predict("t", 400.0);
+        let Allocation::Dynamic(f) = &alloc else { panic!() };
+        let before = f.values().to_vec();
+        let t_fail = f.bounds()[0] * 0.5; // inside segment 0
+        let info = FailureInfo::oom(t_fail, before[0] + 1.0, 1);
+        let Allocation::Dynamic(g) = p.on_failure("t", 400.0, &alloc, &info) else {
+            panic!()
+        };
+        assert!(g.values()[0] >= before[0] * 2.0 * 0.999);
+        assert!(g.is_monotone());
+    }
+
+    #[test]
+    fn failure_makes_progress_beyond_observed_usage() {
+        let mut p = trained();
+        let alloc = p.predict("t", 400.0);
+        let Allocation::Dynamic(f) = &alloc else { panic!() };
+        let info = FailureInfo::oom(f.bounds()[0] * 0.5, f.values()[0] * 10.0, 1);
+        let next = p.on_failure("t", 400.0, &alloc, &info);
+        assert!(next.value_at(info.time_s) > info.used_mib);
+    }
+
+    #[test]
+    fn static_default_failure_doubles() {
+        let mut p = DynSegPredictor::native(4, RetryStrategy::Partial);
+        p.prime("t", MemMiB(1000.0));
+        let alloc = p.predict("t", 50.0);
+        let info = FailureInfo::oom(3.0, 1500.0, 1);
+        let next = p.on_failure("t", 50.0, &alloc, &info);
+        assert_eq!(next, Allocation::Static(MemMiB(2000.0)));
+    }
+
+    #[test]
+    fn respects_node_ceiling_and_floor() {
+        let cfg = KSegmentsConfig { node_max: MemMiB(500.0), ..KSegmentsConfig::default() };
+        let mut p = DynSegPredictor::with_config(cfg, RetryStrategy::Selective);
+        p.prime("t", MemMiB(100.0));
+        for i in 0..8 {
+            p.observe(&spike_run(1000.0 + i as f64 * 200.0)); // peaks ≫ 500
+        }
+        let Allocation::Dynamic(f) = p.predict("t", 2000.0) else {
+            panic!()
+        };
+        assert!(f.max_value() <= 500.0);
+        assert!(f.values()[0] >= crate::predictors::MIN_ALLOC.0);
+    }
+
+    #[test]
+    fn name_reflects_strategy() {
+        assert_eq!(
+            DynSegPredictor::native(4, RetryStrategy::Selective).name(),
+            "KS+ DynSeg Selective"
+        );
+        assert_eq!(
+            DynSegPredictor::native(4, RetryStrategy::Partial).name(),
+            "KS+ DynSeg Partial"
+        );
+    }
+}

@@ -1,0 +1,182 @@
+//! The streaming trace-source abstraction shared by every layer.
+//!
+//! The paper evaluates on nf-core traces captured by a Nextflow
+//! monitoring extension; everything downstream consumes the
+//! [`Trace`](crate::trace::Trace) data model. [`TraceSource`] is the
+//! seam between the two: a chunked, rewindable iterator of
+//! [`TaskRun`]s in arrival order, so no surface requires a trace to be
+//! fully materialized in memory before anything can run.
+//!
+//! This module holds only the trait, the in-memory reference
+//! implementation and the [`materialize`] bridge back to the batch
+//! surfaces. The file-backed implementations (`JsonlReader`,
+//! `NextflowDirSource`), the shape-sniffing `open_source` opener and
+//! the streaming replay engine live in the serve layer
+//! (`ksegments-serve::ingest`), which re-exports everything here so
+//! the historical `ksegments::ingest::TraceSource` path still works.
+
+use anyhow::Result;
+
+use crate::trace::{TaskRun, Trace};
+use crate::units::MemMiB;
+
+/// Default [`TraceSource::next_chunk`] request size used by the CLI
+/// and the replay surfaces.
+pub const DEFAULT_CHUNK: usize = 256;
+
+/// A streaming source of task runs in arrival order.
+///
+/// The contract every consumer relies on: runs of one task type are
+/// yielded oldest-first (the online-learning order), and the
+/// concatenation of all chunks is the full stream. Sources that read a
+/// `ksegments ingest` output file (or any
+/// [`crate::trace::write_trace_jsonl_ordered`] file) additionally
+/// yield the *global* submission order, which is what the scheduler's
+/// arrival stream consumes.
+pub trait TraceSource: Send {
+    /// Human-readable origin (a path, `"in-memory"`, ...).
+    fn origin(&self) -> String;
+
+    /// Developer-default allocations known for this source, sorted by
+    /// task type (may be empty; Nextflow traces carry the requested
+    /// `memory` per process).
+    fn defaults(&self) -> Vec<(String, MemMiB)>;
+
+    /// Pull the next chunk of at most `max` runs. An empty vector
+    /// means the stream is exhausted.
+    fn next_chunk(&mut self, max: usize) -> Result<Vec<TaskRun>>;
+
+    /// Restart the stream from the beginning (re-opens files).
+    fn rewind(&mut self) -> Result<()>;
+}
+
+/// A [`TraceSource`] over an already-materialized run list — the
+/// adapter that lets every streaming consumer also accept an in-memory
+/// [`Trace`] (and the reference implementation the streaming readers
+/// are tested against).
+#[derive(Debug, Clone)]
+pub struct InMemorySource {
+    defaults: Vec<(String, MemMiB)>,
+    runs: Vec<TaskRun>,
+    pos: usize,
+}
+
+impl InMemorySource {
+    /// Stream a trace's runs in global submission (`seq`) order.
+    pub fn from_trace(trace: &Trace) -> InMemorySource {
+        let defaults = trace
+            .task_types()
+            .filter_map(|ty| trace.default_alloc(ty).map(|m| (ty.to_string(), m)))
+            .collect();
+        let runs = trace.all_runs_ordered().into_iter().cloned().collect();
+        InMemorySource { defaults, runs, pos: 0 }
+    }
+
+    /// Stream an explicit run list in the order given.
+    pub fn from_runs(defaults: Vec<(String, MemMiB)>, runs: Vec<TaskRun>) -> InMemorySource {
+        InMemorySource { defaults, runs, pos: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.runs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.runs.is_empty()
+    }
+}
+
+impl TraceSource for InMemorySource {
+    fn origin(&self) -> String {
+        format!("in-memory ({} runs)", self.runs.len())
+    }
+
+    fn defaults(&self) -> Vec<(String, MemMiB)> {
+        self.defaults.clone()
+    }
+
+    fn next_chunk(&mut self, max: usize) -> Result<Vec<TaskRun>> {
+        let end = (self.pos + max.max(1)).min(self.runs.len());
+        let chunk = self.runs[self.pos..end].to_vec();
+        self.pos = end;
+        Ok(chunk)
+    }
+
+    fn rewind(&mut self) -> Result<()> {
+        self.pos = 0;
+        Ok(())
+    }
+}
+
+/// Drain a source into a fully materialized [`Trace`] (defaults
+/// applied, runs sorted per type) — the bridge back to the batch
+/// surfaces (the evaluation grid, figure regeneration).
+pub fn materialize(src: &mut dyn TraceSource) -> Result<Trace> {
+    let mut trace = Trace::new();
+    for (ty, mem) in src.defaults() {
+        trace.set_default(&ty, mem);
+    }
+    loop {
+        let chunk = src.next_chunk(DEFAULT_CHUNK)?;
+        if chunk.is_empty() {
+            break;
+        }
+        for run in chunk {
+            trace.push(run);
+        }
+    }
+    trace.sort();
+    Ok(trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::UsageSeries;
+    use crate::units::Seconds;
+
+    fn toy_trace() -> Trace {
+        let mut t = Trace::new();
+        t.set_default("w/a", MemMiB(1000.0));
+        for seq in 0..5u64 {
+            t.push(TaskRun {
+                task_type: if seq % 2 == 0 { "w/a".into() } else { "w/b".into() },
+                input_mib: 10.0 * seq as f64,
+                runtime: Seconds(4.0),
+                series: UsageSeries::new(2.0, vec![1.0, 2.0 + seq as f64]),
+                seq,
+            });
+        }
+        t.sort();
+        t
+    }
+
+    #[test]
+    fn in_memory_source_streams_in_seq_order() {
+        let t = toy_trace();
+        let mut src = InMemorySource::from_trace(&t);
+        assert_eq!(src.defaults(), vec![("w/a".to_string(), MemMiB(1000.0))]);
+        let mut seqs = Vec::new();
+        loop {
+            let chunk = src.next_chunk(2).unwrap();
+            if chunk.is_empty() {
+                break;
+            }
+            assert!(chunk.len() <= 2);
+            seqs.extend(chunk.iter().map(|r| r.seq));
+        }
+        assert_eq!(seqs, vec![0, 1, 2, 3, 4]);
+        // exhausted stays exhausted until rewind
+        assert!(src.next_chunk(8).unwrap().is_empty());
+        src.rewind().unwrap();
+        assert_eq!(src.next_chunk(8).unwrap().len(), 5);
+    }
+
+    #[test]
+    fn materialize_round_trips_the_trace() {
+        let t = toy_trace();
+        let mut src = InMemorySource::from_trace(&t);
+        let back = materialize(&mut src).unwrap();
+        assert_eq!(back, t);
+    }
+}

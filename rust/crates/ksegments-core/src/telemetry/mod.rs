@@ -1,0 +1,125 @@
+//! Cross-cutting observability: run tracing, metrics, provenance.
+//!
+//! Three pillars (DESIGN.md §12):
+//!
+//! * **Run tracing** ([`sink`]) — [`TraceSink`] + a streaming Chrome
+//!   `trace_event`/Perfetto JSON writer. The scheduler, the replay
+//!   engine and the sharded prediction service emit begin/end/instant
+//!   spans; `schedule --trace-out run.json` opens directly in
+//!   <https://ui.perfetto.dev> or `chrome://tracing`.
+//! * **Metrics** ([`registry`]) — counters/gauges/fixed-bucket
+//!   histograms with Prometheus text exposition and a JSON snapshot
+//!   (`--metrics-out FILE`).
+//! * **Provenance** ([`provenance`]) — optional per-decision JSONL
+//!   audit records (`--provenance-out FILE`).
+//!
+//! The golden rule: telemetry **observes, never influences**. Enabling
+//! any sink leaves every `SchedReport`/`MethodReport` bit-identical to
+//! the untraced run (`tests/telemetry.rs` pins this), and scheduler/
+//! replay events are stamped with **simulated** time — the wall clock
+//! appears only in bench snapshots and service-thread spans.
+//!
+//! This module is engine-agnostic: the mapping from discrete-event
+//! engine events onto these sinks (`trace_engine_event`) lives in the
+//! sched layer (`ksegments_sched::telemetry_ext`) and is re-exported
+//! by the `ksegments` facade under the historical
+//! `ksegments::telemetry` path.
+
+pub mod provenance;
+pub mod registry;
+pub mod sink;
+
+pub use provenance::{DecisionDetail, ProvenanceLog};
+pub use registry::{Histogram, Registry};
+pub use sink::{
+    chrome_trace_to_string, write_chrome_trace, ArgValue, ChromeTraceSink, NullSink, TraceEvent,
+    TraceSink, VecSink,
+};
+
+use std::io;
+
+/// The telemetry attachments of one scheduler run: a trace sink
+/// (default [`NullSink`]) plus an optional provenance log. Owned by
+/// the run so the engine needs no lifetime plumbing.
+pub struct RunTelemetry {
+    pub trace: Box<dyn TraceSink>,
+    pub provenance: Option<ProvenanceLog>,
+}
+
+impl RunTelemetry {
+    /// Everything off — the allocation-free default.
+    pub fn off() -> RunTelemetry {
+        RunTelemetry { trace: Box::new(NullSink), provenance: None }
+    }
+
+    pub fn with_trace(sink: Box<dyn TraceSink>) -> RunTelemetry {
+        RunTelemetry { trace: sink, provenance: None }
+    }
+
+    /// Close both attachments, surfacing the first deferred I/O error.
+    pub fn finish(&mut self) -> io::Result<()> {
+        self.trace.finish()?;
+        if let Some(p) = &mut self.provenance {
+            p.finish()?;
+        }
+        Ok(())
+    }
+}
+
+impl Default for RunTelemetry {
+    fn default() -> Self {
+        RunTelemetry::off()
+    }
+}
+
+/// FNV-1a 64-bit hash (same constants as the coordinator's shard
+/// router).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
+/// Async-span id for one task run: type hash mixed with the run seq,
+/// masked to 48 bits so a JSON f64 round-trip is exact.
+pub fn span_id(task_type: &str, seq: u64) -> u64 {
+    (fnv1a64(task_type.as_bytes()) ^ seq.wrapping_mul(0x9e37_79b9_7f4a_7c15)) & 0xffff_ffff_ffff
+}
+
+/// Simulated seconds → trace microseconds.
+pub fn sim_ts_us(now_s: f64) -> u64 {
+    (now_s * 1e6).round().max(0.0) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_ids_are_stable_and_distinct() {
+        assert_eq!(span_id("a", 1), span_id("a", 1));
+        assert_ne!(span_id("a", 1), span_id("a", 2));
+        assert_ne!(span_id("a", 1), span_id("b", 1));
+        assert!(span_id("wf/align", u64::MAX) <= 0xffff_ffff_ffff);
+    }
+
+    #[test]
+    fn sim_time_maps_to_microseconds() {
+        assert_eq!(sim_ts_us(0.0), 0);
+        assert_eq!(sim_ts_us(1.5), 1_500_000);
+        assert_eq!(sim_ts_us(-1.0), 0, "clamped, never underflows");
+    }
+
+    #[test]
+    fn run_telemetry_off_is_disabled_and_finishes() {
+        let mut tel = RunTelemetry::off();
+        assert!(!tel.trace.enabled());
+        assert!(tel.provenance.is_none());
+        tel.finish().unwrap();
+        let def = RunTelemetry::default();
+        assert!(!def.trace.enabled());
+    }
+}

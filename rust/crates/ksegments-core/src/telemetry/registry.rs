@@ -1,0 +1,396 @@
+//! Metrics registry — counters, gauges and fixed-bucket histograms
+//! with Prometheus text exposition and a JSON snapshot.
+//!
+//! The registry is deliberately lock-free: every thread/shard owns a
+//! private `Registry` (or plain counter struct) and partials are
+//! folded with [`Registry::merge`] after the joins — the same
+//! merge-in-deterministic-order discipline as
+//! [`crate::wastage::MethodReport`]. Nothing here synchronizes, so
+//! recording a metric costs a `BTreeMap` lookup at worst and can never
+//! perturb scheduling or prediction.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::io;
+
+use crate::util::json::JsonWriter;
+
+/// Fixed-bucket histogram. `bounds` are finite upper bounds (ascending,
+/// `le` semantics); one extra overflow bucket catches everything above
+/// the last bound. Mergeable when the bounds match exactly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    /// `bounds.len() + 1` counts; the last is the `+Inf` bucket.
+    counts: Vec<u64>,
+    sum: f64,
+    count: u64,
+}
+
+impl Histogram {
+    pub fn new(bounds: &[f64]) -> Histogram {
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly ascending"
+        );
+        Histogram {
+            bounds: bounds.to_vec(),
+            counts: vec![0; bounds.len() + 1],
+            sum: 0.0,
+            count: 0,
+        }
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        let idx = self.bounds.iter().position(|&b| v <= b).unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum += v;
+        self.count += 1;
+    }
+
+    /// Fold another histogram with **identical bounds** into this one.
+    /// Counts add, so merging is permutation-invariant.
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.bounds, other.bounds, "merging histograms with different buckets");
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.sum += other.sum;
+        self.count += other.count;
+    }
+
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    /// Per-bucket (non-cumulative) counts, overflow bucket last.
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+}
+
+/// A named collection of counters, gauges and histograms.
+///
+/// Metric names may carry Prometheus-style labels inline:
+/// `sched_oom_kills{policy="static-peak"}`. Exposition splits the name
+/// at the first `{` to place `# TYPE` lines and to splice `le` into
+/// histogram bucket labels.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Histogram>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn counter_add(&mut self, name: &str, v: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    pub fn gauge_set(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    /// Record one observation; the histogram is created with `bounds`
+    /// on first use (later calls must pass the same bounds).
+    pub fn observe(&mut self, name: &str, bounds: &[f64], v: f64) {
+        self.hists
+            .entry(name.to_string())
+            .or_insert_with(|| Histogram::new(bounds))
+            .observe(v);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.hists.get(name)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.hists.is_empty()
+    }
+
+    /// Fold another registry into this one: counters and histogram
+    /// buckets add; gauges take the other side's value (last write
+    /// wins, like a scrape).
+    pub fn merge(&mut self, other: &Registry) {
+        for (k, v) in &other.counters {
+            self.counter_add(k, *v);
+        }
+        for (k, v) in &other.gauges {
+            self.gauges.insert(k.clone(), *v);
+        }
+        for (k, h) in &other.hists {
+            match self.hists.get_mut(k) {
+                Some(mine) => mine.merge(h),
+                None => {
+                    self.hists.insert(k.clone(), h.clone());
+                }
+            }
+        }
+    }
+
+    /// Prometheus text exposition format.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut last_base = String::new();
+        for (name, v) in &self.counters {
+            let (base, _) = split_labels(name);
+            if base != last_base {
+                let _ = writeln!(out, "# TYPE {base} counter");
+                last_base = base.to_string();
+            }
+            let _ = writeln!(out, "{name} {v}");
+        }
+        last_base.clear();
+        for (name, v) in &self.gauges {
+            let (base, _) = split_labels(name);
+            if base != last_base {
+                let _ = writeln!(out, "# TYPE {base} gauge");
+                last_base = base.to_string();
+            }
+            let _ = writeln!(out, "{name} {v}");
+        }
+        last_base.clear();
+        for (name, h) in &self.hists {
+            let (base, labels) = split_labels(name);
+            if base != last_base {
+                let _ = writeln!(out, "# TYPE {base} histogram");
+                last_base = base.to_string();
+            }
+            let mut cum = 0u64;
+            for (i, b) in h.bounds().iter().enumerate() {
+                cum += h.counts()[i];
+                let _ = writeln!(out, "{} {cum}", bucket_name(base, labels, &fmt_bound(*b)));
+            }
+            cum += *h.counts().last().expect("histogram has an overflow bucket");
+            let _ = writeln!(out, "{} {cum}", bucket_name(base, labels, "+Inf"));
+            let _ = writeln!(out, "{}_sum{} {}", base, brace(labels), h.sum());
+            let _ = writeln!(out, "{}_count{} {}", base, brace(labels), h.count());
+        }
+        out
+    }
+
+    /// Compact JSON snapshot (counters/gauges/histograms).
+    pub fn to_json(&self) -> String {
+        let buf = self.write_json(Vec::new()).expect("in-memory JSON write cannot fail");
+        String::from_utf8(buf).expect("JSON is UTF-8")
+    }
+
+    fn write_json<W: io::Write>(&self, w: W) -> io::Result<W> {
+        let mut j = JsonWriter::new(w);
+        j.begin_obj()?;
+        j.key("counters")?;
+        j.begin_obj()?;
+        for (k, v) in &self.counters {
+            j.field_u64(k, *v)?;
+        }
+        j.end_obj()?;
+        j.key("gauges")?;
+        j.begin_obj()?;
+        for (k, v) in &self.gauges {
+            j.field_f64(k, *v)?;
+        }
+        j.end_obj()?;
+        j.key("histograms")?;
+        j.begin_obj()?;
+        for (k, h) in &self.hists {
+            j.key(k)?;
+            j.begin_obj()?;
+            j.key("bounds")?;
+            j.begin_arr()?;
+            for b in h.bounds() {
+                j.f64_val(*b)?;
+            }
+            j.end_arr()?;
+            j.key("counts")?;
+            j.begin_arr()?;
+            for c in h.counts() {
+                j.u64_val(*c)?;
+            }
+            j.end_arr()?;
+            j.field_f64("sum", h.sum())?;
+            j.field_u64("count", h.count())?;
+            j.end_obj()?;
+        }
+        j.end_obj()?;
+        j.end_obj()?;
+        j.finish()
+    }
+}
+
+/// Split `name{labels}` into (`name`, `Some("labels")`).
+fn split_labels(name: &str) -> (&str, Option<&str>) {
+    match name.find('{') {
+        Some(i) => (&name[..i], name[i + 1..].strip_suffix('}')),
+        None => (name, None),
+    }
+}
+
+fn brace(labels: Option<&str>) -> String {
+    match labels {
+        Some(l) => format!("{{{l}}}"),
+        None => String::new(),
+    }
+}
+
+fn bucket_name(base: &str, labels: Option<&str>, le: &str) -> String {
+    match labels {
+        Some(l) => format!("{base}_bucket{{{l},le=\"{le}\"}}"),
+        None => format!("{base}_bucket{{le=\"{le}\"}}"),
+    }
+}
+
+fn fmt_bound(b: f64) -> String {
+    if b.fract() == 0.0 && b.abs() < 1e15 {
+        format!("{}", b as i64)
+    } else {
+        format!("{b}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn counters_and_gauges_record() {
+        let mut r = Registry::new();
+        assert!(r.is_empty());
+        r.counter_add("events", 3);
+        r.counter_add("events", 4);
+        r.gauge_set("util", 0.25);
+        r.gauge_set("util", 0.5);
+        assert_eq!(r.counter("events"), 7);
+        assert_eq!(r.counter("missing"), 0);
+        assert_eq!(r.gauge("util"), Some(0.5));
+        assert!(!r.is_empty());
+    }
+
+    #[test]
+    fn histogram_buckets_have_le_semantics() {
+        let mut h = Histogram::new(&[1.0, 5.0]);
+        for v in [0.5, 1.0, 2.0, 100.0] {
+            h.observe(v);
+        }
+        // 1.0 lands in the le=1 bucket (inclusive upper bound)
+        assert_eq!(h.counts(), &[2, 1, 1]);
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 103.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_merge_is_permutation_invariant() {
+        // integer-valued observations: f64 addition is exact, so even
+        // `sum` is order-independent
+        let obs = [1.0, 7.0, 3.0, 2.0, 9.0, 4.0];
+        let bounds = [2.0, 5.0];
+        let mut parts: Vec<Histogram> = obs
+            .iter()
+            .map(|&v| {
+                let mut h = Histogram::new(&bounds);
+                h.observe(v);
+                h
+            })
+            .collect();
+        let mut fwd = Histogram::new(&bounds);
+        for p in &parts {
+            fwd.merge(p);
+        }
+        parts.reverse();
+        let mut rev = Histogram::new(&bounds);
+        for p in &parts {
+            rev.merge(p);
+        }
+        assert_eq!(fwd, rev);
+        assert_eq!(fwd.counts(), &[2, 2, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "different buckets")]
+    fn histogram_merge_rejects_mismatched_bounds() {
+        let mut a = Histogram::new(&[1.0]);
+        a.merge(&Histogram::new(&[2.0]));
+    }
+
+    #[test]
+    fn registry_merge_folds_all_kinds() {
+        let mut a = Registry::new();
+        a.counter_add("c", 1);
+        a.observe("h", &[10.0], 3.0);
+        let mut b = Registry::new();
+        b.counter_add("c", 2);
+        b.gauge_set("g", 9.0);
+        b.observe("h", &[10.0], 30.0);
+        b.observe("h2", &[1.0], 0.5);
+        a.merge(&b);
+        assert_eq!(a.counter("c"), 3);
+        assert_eq!(a.gauge("g"), Some(9.0));
+        assert_eq!(a.histogram("h").unwrap().counts(), &[1, 1]);
+        assert_eq!(a.histogram("h2").unwrap().count(), 1);
+    }
+
+    #[test]
+    fn prometheus_exposition_renders_all_sections() {
+        let mut r = Registry::new();
+        r.counter_add("sched_oom_kills{policy=\"static-peak\"}", 2);
+        r.counter_add("sched_oom_kills{policy=\"segment-wise\"}", 1);
+        r.gauge_set("sched_util", 0.5);
+        r.observe("wait_s", &[1.0, 5.0], 0.5);
+        r.observe("wait_s", &[1.0, 5.0], 99.0);
+        let text = r.to_prometheus();
+        // one TYPE line per base name, not per labeled series
+        assert_eq!(text.matches("# TYPE sched_oom_kills counter").count(), 1);
+        assert!(text.contains("sched_oom_kills{policy=\"static-peak\"} 2"), "{text}");
+        assert!(text.contains("# TYPE sched_util gauge"), "{text}");
+        assert!(text.contains("# TYPE wait_s histogram"), "{text}");
+        assert!(text.contains("wait_s_bucket{le=\"1\"} 1"), "{text}");
+        assert!(text.contains("wait_s_bucket{le=\"5\"} 1"), "{text}");
+        assert!(text.contains("wait_s_bucket{le=\"+Inf\"} 2"), "{text}");
+        assert!(text.contains("wait_s_sum 99.5"), "{text}");
+        assert!(text.contains("wait_s_count 2"), "{text}");
+    }
+
+    #[test]
+    fn labeled_histogram_splices_le_into_labels() {
+        let mut r = Registry::new();
+        r.observe("wait_s{policy=\"both\"}", &[1.0], 0.5);
+        let text = r.to_prometheus();
+        assert!(text.contains("wait_s_bucket{policy=\"both\",le=\"1\"} 1"), "{text}");
+        assert!(text.contains("wait_s_sum{policy=\"both\"} 0.5"), "{text}");
+    }
+
+    #[test]
+    fn json_snapshot_parses_back() {
+        let mut r = Registry::new();
+        r.counter_add("c", 7);
+        r.gauge_set("g", 1.5);
+        r.observe("h", &[2.0], 1.0);
+        let v = Json::parse(&r.to_json()).expect("valid JSON");
+        assert_eq!(v.get("counters").get("c").as_u64(), Some(7));
+        assert_eq!(v.get("gauges").get("g").as_f64(), Some(1.5));
+        let h = v.get("histograms").get("h");
+        assert_eq!(h.get("count").as_u64(), Some(1));
+        assert_eq!(h.get("bounds").as_arr().unwrap().len(), 1);
+        assert_eq!(h.get("counts").as_arr().unwrap().len(), 2);
+    }
+}

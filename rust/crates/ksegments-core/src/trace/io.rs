@@ -1,0 +1,384 @@
+//! Trace persistence: CSV (one row per sample, like the paper's
+//! published k-Segments-traces repository) and JSON-lines (one object
+//! per run, convenient for tooling and the streaming
+//! `JsonlReader` in the serve layer).
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::{TaskRun, Trace, UsageSeries};
+use crate::units::{MemMiB, Seconds};
+use crate::util::json::Json;
+
+/// One record of the JSONL trace format.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonlRecord {
+    /// A developer-default allocation for a task type.
+    Default { task_type: String, mem: MemMiB },
+    /// One observed execution.
+    Run(TaskRun),
+}
+
+fn default_record(task_type: &str, mem: MemMiB) -> Json {
+    Json::obj(vec![
+        ("kind", "default".into()),
+        ("task_type", task_type.into()),
+        ("default_mib", mem.0.into()),
+    ])
+}
+
+/// The canonical JSONL `run` record — the single shape
+/// [`parse_jsonl_record`] accepts, shared by the trace writers and the
+/// checkpoint writer so the formats cannot drift apart.
+pub(crate) fn run_record(run: &TaskRun) -> Json {
+    Json::obj(vec![
+        ("kind", "run".into()),
+        ("task_type", run.task_type.as_str().into()),
+        ("seq", run.seq.into()),
+        ("input_mib", run.input_mib.into()),
+        ("runtime_s", run.runtime.0.into()),
+        ("interval_s", run.series.interval().0.into()),
+        ("samples_mib", Json::arr_f64(run.series.samples())),
+    ])
+}
+
+/// Parse and validate one line of the JSONL trace format.
+///
+/// Every malformed-record path errors here — unparseable JSON, missing
+/// or mistyped fields, unknown `kind`, and physically impossible
+/// values (negative `runtime_s` / `input_mib`, non-positive
+/// `interval_s`, negative or non-finite samples). Callers attach the
+/// line number via [`anyhow::Context`], so any malformed line is
+/// reported with its position regardless of which check tripped.
+pub fn parse_jsonl_record(line: &str) -> Result<JsonlRecord> {
+    let rec = Json::parse(line).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let kind = rec.get("kind").as_str().unwrap_or("");
+    let ty = rec
+        .get("task_type")
+        .as_str()
+        .context("missing task_type")?
+        .to_string();
+    match kind {
+        "default" => {
+            let mem = rec.get("default_mib").as_f64().context("default_mib")?;
+            ensure!(
+                mem.is_finite() && mem >= 0.0,
+                "negative or non-finite default_mib {mem}"
+            );
+            Ok(JsonlRecord::Default { task_type: ty, mem: MemMiB(mem) })
+        }
+        "run" => {
+            let runtime = rec.get("runtime_s").as_f64().context("runtime_s")?;
+            ensure!(
+                runtime.is_finite() && runtime >= 0.0,
+                "negative or non-finite runtime_s {runtime}"
+            );
+            let interval = rec.get("interval_s").as_f64().context("interval_s")?;
+            ensure!(
+                interval.is_finite() && interval > 0.0,
+                "non-positive or non-finite interval_s {interval}"
+            );
+            let input = rec.get("input_mib").as_f64().context("input_mib")?;
+            ensure!(
+                input.is_finite() && input >= 0.0,
+                "negative or non-finite input_mib {input}"
+            );
+            let samples: Vec<f64> = rec
+                .get("samples_mib")
+                .as_arr()
+                .context("samples_mib")?
+                .iter()
+                .map(|v| v.as_f64().context("non-numeric sample"))
+                .collect::<Result<_>>()?;
+            ensure!(
+                samples.iter().all(|s| s.is_finite() && *s >= 0.0),
+                "negative or non-finite sample in samples_mib"
+            );
+            Ok(JsonlRecord::Run(TaskRun {
+                task_type: ty,
+                input_mib: input,
+                runtime: Seconds(runtime),
+                series: UsageSeries::new(interval, samples),
+                seq: rec.get("seq").as_u64().context("seq")?,
+            }))
+        }
+        other => bail!("unknown kind {other:?}"),
+    }
+}
+
+/// Write a trace as JSON lines: a `default` record per task type with a
+/// configured default, then a `run` record per execution, grouped by
+/// task type.
+pub fn write_trace_jsonl(trace: &Trace, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path).context("creating jsonl trace")?);
+    for ty in trace.task_types().map(String::from).collect::<Vec<_>>() {
+        if let Some(mem) = trace.default_alloc(&ty) {
+            writeln!(w, "{}", default_record(&ty, mem))?;
+        }
+        for run in trace.runs_of(&ty) {
+            writeln!(w, "{}", run_record(run))?;
+        }
+    }
+    Ok(())
+}
+
+/// Write a trace as JSON lines in **replay order**: every `default`
+/// record first (sorted by task type), then every run sorted by global
+/// submission order (`seq`) — the order a streaming
+/// [`crate::source::TraceSource`] yields, so a `ksegments ingest`
+/// output file replays through `ksegments replay` and the scheduler's
+/// arrival stream without re-sorting.
+pub fn write_trace_jsonl_ordered(trace: &Trace, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path).context("creating jsonl trace")?);
+    for ty in trace.task_types() {
+        if let Some(mem) = trace.default_alloc(ty) {
+            writeln!(w, "{}", default_record(ty, mem))?;
+        }
+    }
+    for run in trace.all_runs_ordered() {
+        writeln!(w, "{}", run_record(run))?;
+    }
+    Ok(())
+}
+
+/// Read a JSONL trace written by [`write_trace_jsonl`] (or
+/// [`write_trace_jsonl_ordered`]; record order does not matter — runs
+/// are re-sorted by `seq` per type).
+pub fn read_trace_jsonl(path: &Path) -> Result<Trace> {
+    let r = BufReader::new(File::open(path).context("opening jsonl trace")?);
+    let mut trace = Trace::new();
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let rec = parse_jsonl_record(&line)
+            .with_context(|| format!("jsonl line {}", lineno + 1))?;
+        match rec {
+            JsonlRecord::Default { task_type, mem } => trace.set_default(&task_type, mem),
+            JsonlRecord::Run(run) => trace.push(run),
+        }
+    }
+    trace.sort();
+    Ok(trace)
+}
+
+/// Write a trace as CSV with one row per monitoring sample:
+/// `task_type,seq,input_mib,runtime_s,interval_s,sample_idx,mem_mib`.
+pub fn write_trace_csv(trace: &Trace, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path).context("creating csv trace")?);
+    writeln!(w, "task_type,seq,input_mib,runtime_s,interval_s,sample_idx,mem_mib")?;
+    for ty in trace.task_types().map(String::from).collect::<Vec<_>>() {
+        for run in trace.runs_of(&ty) {
+            for (i, v) in run.series.samples().iter().enumerate() {
+                writeln!(
+                    w,
+                    "{},{},{},{},{},{},{}",
+                    run.task_type,
+                    run.seq,
+                    run.input_mib,
+                    run.runtime.0,
+                    run.series.interval().0,
+                    i,
+                    v
+                )?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Read a CSV trace written by [`write_trace_csv`].
+pub fn read_trace_csv(path: &Path) -> Result<Trace> {
+    let r = BufReader::new(File::open(path).context("opening csv trace")?);
+    let mut lines = r.lines();
+    let header = lines.next().transpose()?.unwrap_or_default();
+    if !header.starts_with("task_type,seq,") {
+        bail!("unrecognized trace csv header: {header:?}");
+    }
+    // accumulate rows into runs keyed by (type, seq)
+    let mut current: Option<(String, u64, f64, f64, f64, Vec<f64>)> = None;
+    let mut trace = Trace::new();
+    fn flush(cur: &mut Option<(String, u64, f64, f64, f64, Vec<f64>)>, trace: &mut Trace) {
+        if let Some((ty, seq, input, rt, iv, samples)) = cur.take() {
+            trace.push(TaskRun {
+                task_type: ty,
+                input_mib: input,
+                runtime: Seconds(rt),
+                series: UsageSeries::new(iv, samples),
+                seq,
+            });
+        }
+    }
+    for (lineno, line) in lines.enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let f: Vec<&str> = line.split(',').collect();
+        if f.len() != 7 {
+            bail!("csv line {}: expected 7 fields, got {}", lineno + 2, f.len());
+        }
+        let (ty, seq) = (f[0].to_string(), f[1].parse::<u64>()?);
+        let (input, rt, iv) = (f[2].parse()?, f[3].parse()?, f[4].parse()?);
+        let mem: f64 = f[6].parse()?;
+        match &mut current {
+            Some((cty, cseq, _, _, _, samples)) if *cty == ty && *cseq == seq => {
+                samples.push(mem)
+            }
+            _ => {
+                flush(&mut current, &mut trace);
+                current = Some((ty, seq, input, rt, iv, vec![mem]));
+            }
+        }
+    }
+    flush(&mut current, &mut trace);
+    trace.sort();
+    Ok(trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace() -> Trace {
+        let mut t = Trace::new();
+        t.set_default("wf/a", MemMiB(4096.0));
+        for seq in 0..3u64 {
+            t.push(TaskRun {
+                task_type: "wf/a".into(),
+                input_mib: 100.0 + seq as f64,
+                runtime: Seconds(6.0),
+                series: UsageSeries::new(2.0, vec![1.0, 5.0 + seq as f64, 2.0]),
+                seq,
+            });
+        }
+        t.push(TaskRun {
+            task_type: "wf/b".into(),
+            input_mib: 9.0,
+            runtime: Seconds(2.0),
+            series: UsageSeries::new(2.0, vec![7.0]),
+            seq: 3,
+        });
+        t
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let dir = std::env::temp_dir().join("ksegments_test_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.jsonl");
+        let t = sample_trace();
+        write_trace_jsonl(&t, &path).unwrap();
+        let back = read_trace_jsonl(&path).unwrap();
+        assert_eq!(back.n_types(), 2);
+        assert_eq!(back.n_runs(), 4);
+        assert_eq!(back.runs_of("wf/a"), t.runs_of("wf/a"));
+        assert_eq!(back.default_alloc("wf/a"), Some(MemMiB(4096.0)));
+    }
+
+    #[test]
+    fn ordered_jsonl_roundtrips_and_streams_in_seq_order() {
+        let dir = std::env::temp_dir().join("ksegments_test_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace_ordered.jsonl");
+        let t = sample_trace();
+        write_trace_jsonl_ordered(&t, &path).unwrap();
+        // same trace back through the grouped reader
+        let back = read_trace_jsonl(&path).unwrap();
+        assert_eq!(back, t);
+        // file order: defaults first, then runs by seq
+        let text = std::fs::read_to_string(&path).unwrap();
+        let kinds: Vec<bool> = text.lines().map(|l| l.contains("\"kind\":\"run\"")).collect();
+        assert_eq!(kinds, vec![false, true, true, true, true]);
+        let seqs: Vec<usize> = text
+            .lines()
+            .filter(|l| l.contains("\"kind\":\"run\""))
+            .map(|l| match parse_jsonl_record(l).unwrap() {
+                JsonlRecord::Run(r) => r.seq as usize,
+                other => panic!("{other:?}"),
+            })
+            .collect();
+        assert_eq!(seqs, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("ksegments_test_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.csv");
+        let t = sample_trace();
+        write_trace_csv(&t, &path).unwrap();
+        let back = read_trace_csv(&path).unwrap();
+        assert_eq!(back.n_runs(), 4);
+        assert_eq!(back.runs_of("wf/b")[0].series.samples(), &[7.0]);
+        // CSV does not carry defaults
+        assert_eq!(back.default_alloc("wf/a"), None);
+    }
+
+    #[test]
+    fn csv_rejects_bad_header() {
+        let dir = std::env::temp_dir().join("ksegments_test_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.csv");
+        std::fs::write(&path, "nope\n1,2,3\n").unwrap();
+        assert!(read_trace_csv(&path).is_err());
+    }
+
+    #[test]
+    fn jsonl_rejects_unknown_kind() {
+        let dir = std::env::temp_dir().join("ksegments_test_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.jsonl");
+        std::fs::write(&path, "{\"kind\":\"wat\",\"task_type\":\"x\"}\n").unwrap();
+        assert!(read_trace_jsonl(&path).is_err());
+    }
+
+    /// Regression: every malformed-record path must carry the line
+    /// number, not just unparseable JSON (the original code attached it
+    /// only to `Json::parse` failures).
+    #[test]
+    fn jsonl_errors_carry_line_numbers_on_all_paths() {
+        let dir = std::env::temp_dir().join("ksegments_test_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let ok_default = "{\"kind\":\"default\",\"task_type\":\"a\",\"default_mib\":10}";
+        let ok_run = "{\"kind\":\"run\",\"task_type\":\"a\",\"seq\":0,\"input_mib\":1,\
+                      \"runtime_s\":4,\"interval_s\":2,\"samples_mib\":[1,2]}";
+        let cases: &[(&str, &str)] = &[
+            // (malformed third line, expected fragment)
+            ("{not json", "json"),
+            ("{\"kind\":\"run\",\"seq\":0}", "task_type"),
+            ("{\"kind\":\"wat\",\"task_type\":\"x\"}", "unknown kind"),
+            (
+                "{\"kind\":\"run\",\"task_type\":\"a\",\"seq\":0,\"input_mib\":1,\
+                 \"runtime_s\":-4,\"interval_s\":2,\"samples_mib\":[1]}",
+                "runtime_s",
+            ),
+            (
+                "{\"kind\":\"run\",\"task_type\":\"a\",\"seq\":0,\"input_mib\":1,\
+                 \"runtime_s\":4,\"interval_s\":-2,\"samples_mib\":[1]}",
+                "interval_s",
+            ),
+            (
+                "{\"kind\":\"run\",\"task_type\":\"a\",\"seq\":0,\"input_mib\":1,\
+                 \"runtime_s\":4,\"interval_s\":2,\"samples_mib\":[1,-3]}",
+                "sample",
+            ),
+            ("{\"kind\":\"default\",\"task_type\":\"a\",\"default_mib\":-1}", "default_mib"),
+        ];
+        for (i, (bad, expect)) in cases.iter().enumerate() {
+            let path = dir.join(format!("bad_line_{i}.jsonl"));
+            std::fs::write(&path, format!("{ok_default}\n{ok_run}\n{bad}\n")).unwrap();
+            let err = read_trace_jsonl(&path).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("line 3"), "case {i}: missing line number in {msg:?}");
+            assert!(
+                msg.to_lowercase().contains(&expect.to_lowercase()),
+                "case {i}: missing {expect:?} in {msg:?}"
+            );
+        }
+    }
+}

@@ -1,0 +1,6 @@
+//! Small self-contained utilities (offline-build substitutes for
+//! common ecosystem crates — see the dependency note in Cargo.toml).
+
+pub mod json;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,204 @@
+//! Small descriptive-statistics helpers shared by metrics and the
+//! bench harness.
+//!
+//! One percentile implementation serves every caller — the ensemble's
+//! percentile sub-model, the bench timer, and the scheduler's
+//! `SchedReport` queue-wait quantiles — so "p95"
+//! means the same thing everywhere. Quantiles are **linear
+//! interpolation** over the sorted order statistics (numpy's default,
+//! R type 7): the q-th percentile of n samples sits at fractional rank
+//! `(q/100)·(n−1)` and interpolates between its two neighbors. The
+//! previous nearest-rank rounding picked an arbitrary neighbor for
+//! even-length medians and small-window quantiles.
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation (0 for n < 2).
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Linear-interpolation percentile of an unsorted slice; `q` is
+/// clamped to [0, 100], empty input yields 0. Sorts a copy — callers
+/// querying many quantiles of the same data should build a
+/// [`SortedSamples`] once instead.
+///
+/// # Example
+///
+/// ```
+/// use ksegments::util::stats::percentile;
+///
+/// // the interpolated even-length median
+/// assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0], 50.0), 2.5);
+/// ```
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    let mut s = xs.to_vec();
+    s.sort_by(f64::total_cmp);
+    percentile_sorted(&s, q)
+}
+
+/// [`percentile`] over an **already ascending-sorted** slice — no copy,
+/// no sort. The shared kernel behind [`percentile`] and
+/// [`SortedSamples::percentile`].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let q = q.clamp(0.0, 100.0);
+    let rank = (q / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    // lo == hi at integer ranks (incl. q = 0 and q = 100)
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+/// A sample set sorted **once** for repeated quantile queries — the
+/// fix for percentile hot paths that re-sorted the full vector on
+/// every call (see `benches/hotpath.rs` `stats/percentile`).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SortedSamples {
+    sorted: Vec<f64>,
+}
+
+impl SortedSamples {
+    /// Sort a copy of `xs` (NaNs order via `total_cmp`).
+    pub fn new(xs: &[f64]) -> SortedSamples {
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(f64::total_cmp);
+        SortedSamples { sorted }
+    }
+
+    /// q-th percentile in O(1) (after the one-time sort).
+    pub fn percentile(&self, q: f64) -> f64 {
+        percentile_sorted(&self.sorted, q)
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    /// The ascending samples.
+    pub fn as_slice(&self) -> &[f64] {
+        &self.sorted
+    }
+}
+
+/// Pearson correlation (0 when degenerate).
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    if x.len() < 2 {
+        return 0.0;
+    }
+    let (mx, my) = (mean(x), mean(y));
+    let mut cov = 0.0;
+    let mut vx = 0.0;
+    let mut vy = 0.0;
+    for (&a, &b) in x.iter().zip(y) {
+        cov += (a - mx) * (b - my);
+        vx += (a - mx) * (a - mx);
+        vy += (b - my) * (b - my);
+    }
+    if vx <= 0.0 || vy <= 0.0 {
+        0.0
+    } else {
+        cov / (vx.sqrt() * vy.sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+        assert_eq!(std(&[5.0]), 0.0);
+        assert!((std(&[1.0, -1.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_on_odd_length() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    /// The headline regression: an even-length median interpolates
+    /// instead of rounding to an arbitrary neighbor.
+    #[test]
+    fn even_length_median_interpolates() {
+        assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0], 50.0), 2.5);
+        assert_eq!(percentile(&[4.0, 1.0, 3.0, 2.0], 50.0), 2.5, "order must not matter");
+        assert_eq!(percentile(&[10.0, 20.0], 50.0), 15.0);
+    }
+
+    #[test]
+    fn q_between_ranks_interpolates_linearly() {
+        let xs = [10.0, 20.0, 30.0, 40.0, 50.0];
+        // rank = 0.95·4 = 3.8 → 40 + 0.8·10
+        assert!((percentile(&xs, 95.0) - 48.0).abs() < 1e-12);
+        // rank = 0.25·4 = 1.0 → exactly the order statistic
+        assert_eq!(percentile(&xs, 25.0), 20.0);
+        // rank = 0.10·4 = 0.4 → 10 + 0.4·10
+        assert!((percentile(&xs, 10.0) - 14.0).abs() < 1e-12);
+        // two samples: q=25 sits a quarter of the way up
+        assert_eq!(percentile(&[10.0, 20.0], 25.0), 12.5);
+    }
+
+    #[test]
+    fn extreme_and_degenerate_quantiles() {
+        assert_eq!(percentile(&[7.0], 0.0), 7.0);
+        assert_eq!(percentile(&[7.0], 50.0), 7.0);
+        assert_eq!(percentile(&[7.0], 100.0), 7.0);
+        let xs = [2.0, 8.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 2.0);
+        assert_eq!(percentile(&xs, 100.0), 8.0);
+        // out-of-range q clamps instead of panicking
+        assert_eq!(percentile(&xs, -10.0), 2.0);
+        assert_eq!(percentile(&xs, 250.0), 8.0);
+    }
+
+    #[test]
+    fn sorted_samples_match_percentile() {
+        let xs = [9.0, 1.0, 5.0, 3.0, 7.0, 2.0];
+        let s = SortedSamples::new(&xs);
+        assert_eq!(s.len(), 6);
+        assert!(!s.is_empty());
+        for q in [0.0, 10.0, 25.0, 50.0, 77.7, 95.0, 100.0] {
+            assert_eq!(s.percentile(q), percentile(&xs, q), "q={q}");
+        }
+        assert_eq!(s.as_slice(), &[1.0, 2.0, 3.0, 5.0, 7.0, 9.0]);
+        let empty = SortedSamples::new(&[]);
+        assert!(empty.is_empty());
+        assert_eq!(empty.percentile(50.0), 0.0);
+    }
+
+    #[test]
+    fn pearson_perfect_and_degenerate() {
+        let x = [1.0, 2.0, 3.0];
+        let y = [10.0, 20.0, 30.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+        let yneg = [30.0, 20.0, 10.0];
+        assert!((pearson(&x, &yneg) + 1.0).abs() < 1e-12);
+        assert_eq!(pearson(&[1.0, 1.0], &[2.0, 3.0]), 0.0);
+    }
+}

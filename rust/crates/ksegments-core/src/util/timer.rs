@@ -1,0 +1,174 @@
+//! Minimal criterion-style timing harness (the offline crate cache has
+//! no criterion). Used by the `cargo bench` targets and the §Perf pass.
+//!
+//! Also home of [`Stopwatch`] — the workspace's **only** sanctioned
+//! wall-clock. Every simulated result (SchedReport, MethodReport,
+//! trace events from the engine or replay) is a function of the seed
+//! alone; wall time may only appear in `BENCH_*.json` snapshots and in
+//! service-thread trace spans, and both must read it through a
+//! `Stopwatch` so the boundary stays greppable (DESIGN.md §12).
+
+use std::time::{Duration, Instant};
+
+/// The single sanctioned wall-clock. Construct with
+/// [`Stopwatch::start`] and read elapsed time in the unit you need —
+/// never call `Instant::now()` directly outside this type.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ns(&self) -> f64 {
+        self.start.elapsed().as_nanos() as f64
+    }
+
+    /// Whole microseconds since start — the unit of Chrome trace `ts`.
+    pub fn elapsed_us(&self) -> u64 {
+        self.start.elapsed().as_micros() as u64
+    }
+}
+
+/// One benchmark's measurements.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub samples_ns: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn mean_ns(&self) -> f64 {
+        crate::util::stats::mean(&self.samples_ns)
+    }
+
+    pub fn p50_ns(&self) -> f64 {
+        crate::util::stats::percentile(&self.samples_ns, 50.0)
+    }
+
+    pub fn p95_ns(&self) -> f64 {
+        crate::util::stats::percentile(&self.samples_ns, 95.0)
+    }
+
+    pub fn std_ns(&self) -> f64 {
+        crate::util::stats::std(&self.samples_ns)
+    }
+
+    /// criterion-like one-liner.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} time: [{}  p50 {}  p95 {}] ±{} ({} samples)",
+            self.name,
+            fmt_ns(self.mean_ns()),
+            fmt_ns(self.p50_ns()),
+            fmt_ns(self.p95_ns()),
+            fmt_ns(self.std_ns()),
+            self.samples_ns.len(),
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} µs", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+/// Run `f` repeatedly: a warmup, then `samples` timed samples of
+/// `iters_per_sample` iterations each. The closure's return value is
+/// black-boxed to keep the optimizer honest.
+pub fn bench<T>(
+    name: &str,
+    samples: usize,
+    iters_per_sample: usize,
+    mut f: impl FnMut() -> T,
+) -> Measurement {
+    // warmup
+    for _ in 0..iters_per_sample.min(3) {
+        black_box(f());
+    }
+    let mut samples_ns = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let sw = Stopwatch::start();
+        for _ in 0..iters_per_sample {
+            black_box(f());
+        }
+        samples_ns.push(sw.elapsed_ns() / iters_per_sample as f64);
+    }
+    let m = Measurement { name: name.to_string(), iters: samples * iters_per_sample, samples_ns };
+    println!("{}", m.report());
+    m
+}
+
+/// Time a single long-running call (for whole-figure benches).
+pub fn time_once<T>(name: &str, f: impl FnOnce() -> T) -> (T, Duration) {
+    let sw = Stopwatch::start();
+    let out = black_box(f());
+    let dt = sw.elapsed();
+    println!("{:<44} wall: {}", name, fmt_ns(dt.as_nanos() as f64));
+    (out, dt)
+}
+
+/// `std::hint::black_box` wrapper (stable since 1.66).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let m = bench("noop", 5, 10, || 1 + 1);
+        assert_eq!(m.samples_ns.len(), 5);
+        assert!(m.mean_ns() >= 0.0);
+        assert!(m.p95_ns() >= m.p50_ns() * 0.5);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, dt) = time_once("t", || 42);
+        assert_eq!(v, 42);
+        assert!(dt.as_nanos() > 0);
+    }
+
+    #[test]
+    fn stopwatch_units_agree() {
+        let sw = Stopwatch::start();
+        let _ = black_box((0..1000).sum::<u64>());
+        let ns = sw.elapsed_ns();
+        let s = sw.elapsed_s();
+        let us = sw.elapsed_us();
+        assert!(ns >= 0.0);
+        // later reads see monotonically non-decreasing time
+        assert!(s * 1e9 >= ns * 0.5);
+        assert!(us as f64 >= ns / 1e3 - 1.0, "µs and ns reads must agree");
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("µs"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(2e9).ends_with(" s"));
+    }
+}

@@ -1,0 +1,358 @@
+//! Wastage accounting and report tables — the quantities plotted in
+//! the paper's Fig. 7 (wastage, lowest-wastage wins, retries).
+//!
+//! Formerly the top-level `metrics` module; renamed to `wastage` when
+//! the workspace split landed, because "metrics" collided with the
+//! operational counters in [`crate::telemetry::registry`]. This module
+//! is *evaluation results* (how much memory a method wasted); the
+//! registry is *run observability* (counters/gauges/histograms about
+//! the process itself). The `ksegments` facade still exposes the old
+//! `ksegments::metrics` path as an alias.
+
+use crate::telemetry::Registry;
+use crate::units::GbSeconds;
+use crate::util::stats;
+
+/// Per-task-type metrics for one method at one training fraction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskReport {
+    pub task_type: String,
+    pub n_scored: usize,
+    pub total_wastage: GbSeconds,
+    pub total_retries: u64,
+    /// Per-run wastage samples (GB·s), kept for win counting and
+    /// dispersion statistics.
+    pub per_run_wastage: Vec<f64>,
+}
+
+impl TaskReport {
+    pub fn new(task_type: &str) -> TaskReport {
+        TaskReport {
+            task_type: task_type.to_string(),
+            n_scored: 0,
+            total_wastage: GbSeconds::ZERO,
+            total_retries: 0,
+            per_run_wastage: Vec::new(),
+        }
+    }
+
+    pub fn record(&mut self, wastage: GbSeconds, retries: u32) {
+        self.n_scored += 1;
+        self.total_wastage += wastage;
+        self.total_retries += retries as u64;
+        self.per_run_wastage.push(wastage.0);
+    }
+
+    /// Average wastage per scored run (GB·s) — Fig. 7a's unit.
+    pub fn avg_wastage_gbs(&self) -> f64 {
+        if self.n_scored == 0 {
+            0.0
+        } else {
+            self.total_wastage.0 / self.n_scored as f64
+        }
+    }
+
+    /// Average retries per scored run — Fig. 7c's unit.
+    pub fn avg_retries(&self) -> f64 {
+        if self.n_scored == 0 {
+            0.0
+        } else {
+            self.total_retries as f64 / self.n_scored as f64
+        }
+    }
+
+    /// Fold another report for the **same task type** into this one
+    /// (e.g. per-shard or per-cell partial reports). Totals add; the
+    /// per-run samples are concatenated in the order given.
+    pub fn merge(&mut self, other: TaskReport) {
+        assert_eq!(self.task_type, other.task_type, "merging different task types");
+        self.n_scored += other.n_scored;
+        self.total_wastage += other.total_wastage;
+        self.total_retries += other.total_retries;
+        self.per_run_wastage.extend(other.per_run_wastage);
+    }
+}
+
+/// All evaluated tasks for one method at one training fraction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MethodReport {
+    pub method: String,
+    pub training_frac: f64,
+    pub tasks: Vec<TaskReport>,
+}
+
+impl MethodReport {
+    pub fn new(method: &str, training_frac: f64, tasks: Vec<TaskReport>) -> MethodReport {
+        MethodReport { method: method.to_string(), training_frac, tasks }
+    }
+
+    pub fn total_wastage_gbs(&self) -> f64 {
+        self.tasks.iter().map(|t| t.total_wastage.0).sum()
+    }
+
+    /// Mean over tasks of per-task average wastage — the Fig. 7a bar.
+    pub fn avg_wastage_gbs(&self) -> f64 {
+        stats::mean(&self.tasks.iter().map(|t| t.avg_wastage_gbs()).collect::<Vec<_>>())
+    }
+
+    pub fn total_retries(&self) -> u64 {
+        self.tasks.iter().map(|t| t.total_retries).sum()
+    }
+
+    /// Mean over tasks of per-task average retries — the Fig. 7c bar.
+    pub fn avg_retries(&self) -> f64 {
+        stats::mean(&self.tasks.iter().map(|t| t.avg_retries()).collect::<Vec<_>>())
+    }
+
+    pub fn task(&self, ty: &str) -> Option<&TaskReport> {
+        self.tasks.iter().find(|t| t.task_type == ty)
+    }
+
+    /// Fold another report (same method, same fraction) into this one.
+    ///
+    /// Task types present in both are combined via [`TaskReport::merge`]
+    /// (per-shard partials of one type); new types are appended in the
+    /// order they arrive, so disjoint task sets (e.g. the second
+    /// workflow's types) reproduce the old concatenation exactly.
+    pub fn merge(&mut self, other: MethodReport) {
+        assert_eq!(self.method, other.method, "merging different methods");
+        assert!(
+            (self.training_frac - other.training_frac).abs() < 1e-12,
+            "merging different training fractions"
+        );
+        for task in other.tasks {
+            match self.tasks.iter_mut().find(|t| t.task_type == task.task_type) {
+                Some(mine) => mine.merge(task),
+                None => self.tasks.push(task),
+            }
+        }
+    }
+
+    /// Export replay results into a metrics [`Registry`] under
+    /// `{method,task}` labels: scored/retry counters plus an
+    /// average-wastage gauge per task type, and method-level rollups.
+    /// Purely observational — reads `&self`, writes only into `reg`.
+    pub fn export_metrics(&self, reg: &mut Registry) {
+        for t in &self.tasks {
+            let l = format!("{{method=\"{}\",task=\"{}\"}}", self.method, t.task_type);
+            reg.counter_add(&format!("replay_scored{l}"), t.n_scored as u64);
+            reg.counter_add(&format!("replay_retries{l}"), t.total_retries);
+            reg.gauge_set(&format!("replay_avg_wastage_gbs{l}"), t.avg_wastage_gbs());
+        }
+        let l = format!("{{method=\"{}\"}}", self.method);
+        reg.counter_add(
+            &format!("replay_scored_total{l}"),
+            self.tasks.iter().map(|t| t.n_scored as u64).sum(),
+        );
+        reg.counter_add(&format!("replay_retries_total{l}"), self.total_retries());
+        reg.gauge_set(&format!("replay_avg_wastage_gbs_mean{l}"), self.avg_wastage_gbs());
+    }
+
+    /// Merge an ordered sequence of per-cell reports into one; `None`
+    /// for an empty sequence. The grid uses this to combine per-trace
+    /// cells in deterministic trace order.
+    pub fn merged(reports: impl IntoIterator<Item = MethodReport>) -> Option<MethodReport> {
+        let mut it = reports.into_iter();
+        let mut acc = it.next()?;
+        for rep in it {
+            acc.merge(rep);
+        }
+        Some(acc)
+    }
+}
+
+/// Fig. 7b: per method, the number of tasks on which it achieves the
+/// lowest average wastage. Ties award a point to every tied method
+/// (paper: "If two methods both have the least wastage, they both get
+/// one point").
+pub fn count_wins(reports: &[MethodReport]) -> Vec<(String, usize)> {
+    let mut wins: Vec<(String, usize)> = reports.iter().map(|r| (r.method.clone(), 0)).collect();
+    if reports.is_empty() {
+        return wins;
+    }
+    // all reports must cover the same task set
+    let tasks: Vec<&str> = reports[0].tasks.iter().map(|t| t.task_type.as_str()).collect();
+    for ty in tasks {
+        let scores: Vec<f64> = reports
+            .iter()
+            .map(|r| r.task(ty).map(|t| t.avg_wastage_gbs()).unwrap_or(f64::INFINITY))
+            .collect();
+        let best = scores.iter().copied().fold(f64::INFINITY, f64::min);
+        for (i, &s) in scores.iter().enumerate() {
+            // relative tie tolerance: identical within 1e-9
+            if (s - best).abs() <= 1e-9 * best.max(1e-12) {
+                wins[i].1 += 1;
+            }
+        }
+    }
+    wins
+}
+
+/// Render a Fig. 7-style table: one row per method, one column per
+/// training fraction, via an accessor.
+pub fn render_table(
+    title: &str,
+    fractions: &[f64],
+    rows: &[(String, Vec<f64>)],
+    unit: &str,
+) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("## {title}\n\n"));
+    out.push_str("| method |");
+    for f in fractions {
+        out.push_str(&format!(" {:.0}% train |", f * 100.0));
+    }
+    out.push('\n');
+    out.push_str("|---|");
+    for _ in fractions {
+        out.push_str("---|");
+    }
+    out.push('\n');
+    for (method, vals) in rows {
+        out.push_str(&format!("| {method} |"));
+        for v in vals {
+            out.push_str(&format!(" {v:.3} |"));
+        }
+        out.push('\n');
+    }
+    out.push_str(&format!("\n(unit: {unit})\n"));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(ty: &str, wastages: &[f64], retries: &[u32]) -> TaskReport {
+        let mut t = TaskReport::new(ty);
+        for (w, r) in wastages.iter().zip(retries) {
+            t.record(GbSeconds(*w), *r);
+        }
+        t
+    }
+
+    #[test]
+    fn task_report_averages() {
+        let t = task("a", &[1.0, 3.0], &[0, 2]);
+        assert_eq!(t.n_scored, 2);
+        assert_eq!(t.avg_wastage_gbs(), 2.0);
+        assert_eq!(t.avg_retries(), 1.0);
+    }
+
+    #[test]
+    fn empty_task_report_is_zero() {
+        let t = TaskReport::new("a");
+        assert_eq!(t.avg_wastage_gbs(), 0.0);
+        assert_eq!(t.avg_retries(), 0.0);
+    }
+
+    #[test]
+    fn method_report_aggregates() {
+        let r = MethodReport::new(
+            "m",
+            0.5,
+            vec![task("a", &[2.0], &[1]), task("b", &[4.0], &[3])],
+        );
+        assert_eq!(r.total_wastage_gbs(), 6.0);
+        assert_eq!(r.avg_wastage_gbs(), 3.0);
+        assert_eq!(r.total_retries(), 4);
+        assert_eq!(r.avg_retries(), 2.0);
+        assert!(r.task("a").is_some());
+        assert!(r.task("zzz").is_none());
+    }
+
+    #[test]
+    fn task_report_merge_adds_totals() {
+        let mut a = task("a", &[1.0, 2.0], &[0, 1]);
+        let b = task("a", &[3.0], &[2]);
+        a.merge(b);
+        assert_eq!(a.n_scored, 3);
+        assert_eq!(a.total_wastage.0, 6.0);
+        assert_eq!(a.total_retries, 3);
+        assert_eq!(a.per_run_wastage, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "merging different task types")]
+    fn task_report_merge_rejects_mismatched_types() {
+        let mut a = task("a", &[1.0], &[0]);
+        a.merge(task("b", &[1.0], &[0]));
+    }
+
+    #[test]
+    fn method_report_merge_disjoint_appends() {
+        let mut a = MethodReport::new("m", 0.5, vec![task("a", &[1.0], &[0])]);
+        a.merge(MethodReport::new("m", 0.5, vec![task("b", &[2.0], &[1])]));
+        let types: Vec<&str> = a.tasks.iter().map(|t| t.task_type.as_str()).collect();
+        assert_eq!(types, vec!["a", "b"]);
+        assert_eq!(a.total_wastage_gbs(), 3.0);
+    }
+
+    #[test]
+    fn method_report_merge_combines_shared_types() {
+        let mut a = MethodReport::new("m", 0.5, vec![task("a", &[1.0], &[0])]);
+        a.merge(MethodReport::new("m", 0.5, vec![task("a", &[2.0], &[3])]));
+        assert_eq!(a.tasks.len(), 1);
+        assert_eq!(a.tasks[0].n_scored, 2);
+        assert_eq!(a.tasks[0].total_retries, 3);
+        assert_eq!(a.total_wastage_gbs(), 3.0);
+    }
+
+    #[test]
+    fn merged_over_sequence() {
+        assert!(MethodReport::merged(std::iter::empty()).is_none());
+        let reps = vec![
+            MethodReport::new("m", 0.5, vec![task("a", &[1.0], &[0])]),
+            MethodReport::new("m", 0.5, vec![task("b", &[2.0], &[0])]),
+            MethodReport::new("m", 0.5, vec![task("a", &[4.0], &[1])]),
+        ];
+        let m = MethodReport::merged(reps).unwrap();
+        assert_eq!(m.tasks.len(), 2);
+        assert_eq!(m.total_wastage_gbs(), 7.0);
+        assert_eq!(m.total_retries(), 1);
+    }
+
+    #[test]
+    fn export_metrics_labels_method_and_task() {
+        let r = MethodReport::new(
+            "k-Segments",
+            0.5,
+            vec![task("a", &[2.0, 4.0], &[1, 0]), task("b", &[6.0], &[2])],
+        );
+        let mut reg = Registry::new();
+        r.export_metrics(&mut reg);
+        assert_eq!(reg.counter("replay_scored{method=\"k-Segments\",task=\"a\"}"), 2);
+        assert_eq!(reg.counter("replay_retries{method=\"k-Segments\",task=\"b\"}"), 2);
+        assert_eq!(
+            reg.gauge("replay_avg_wastage_gbs{method=\"k-Segments\",task=\"a\"}"),
+            Some(3.0)
+        );
+        assert_eq!(reg.counter("replay_scored_total{method=\"k-Segments\"}"), 3);
+        assert_eq!(reg.gauge("replay_avg_wastage_gbs_mean{method=\"k-Segments\"}"), Some(4.5));
+    }
+
+    #[test]
+    fn win_counting_with_ties() {
+        let m1 = MethodReport::new("m1", 0.5, vec![task("a", &[1.0], &[0]), task("b", &[5.0], &[0])]);
+        let m2 = MethodReport::new("m2", 0.5, vec![task("a", &[1.0], &[0]), task("b", &[2.0], &[0])]);
+        let wins = count_wins(&[m1, m2]);
+        assert_eq!(wins, vec![("m1".to_string(), 1), ("m2".to_string(), 2)]);
+    }
+
+    #[test]
+    fn win_counting_empty() {
+        assert!(count_wins(&[]).is_empty());
+    }
+
+    #[test]
+    fn table_rendering() {
+        let rows = vec![
+            ("Default".to_string(), vec![3.0, 2.9]),
+            ("k-Segments Selective".to_string(), vec![1.0, 0.8]),
+        ];
+        let t = render_table("Fig 7a", &[0.25, 0.5], &rows, "GB·s");
+        assert!(t.contains("| Default | 3.000 | 2.900 |"));
+        assert!(t.contains("25% train"));
+        assert!(t.contains("GB·s"));
+    }
+}

@@ -1,0 +1,260 @@
+//! Trace generation: turns a [`WorkflowSpec`] into a [`Trace`] of
+//! interval-sampled executions, deterministically from a seed.
+
+use crate::rng::Rng;
+use crate::trace::{TaskRun, Trace, UsageSeries};
+use crate::workload::spec::{TaskTypeSpec, WorkflowSpec};
+
+/// Monitoring interval of the synthetic sampler — the paper's default
+/// of 2 seconds (§IV-A).
+pub const MONITOR_INTERVAL_S: f64 = 2.0;
+
+/// Hard cap on samples per run (a 4 h run at 2 s is 7200 samples; the
+/// cap only guards against pathological noise draws).
+const MAX_SAMPLES: usize = 20_000;
+
+/// Ground-truth usage curve for one execution: the type's temporal
+/// profile scaled to this run's peak, with per-sample multiplicative
+/// wiggle. Returned as interval samples (MiB).
+pub fn ground_truth_curve(
+    spec: &TaskTypeSpec,
+    peak_mib: f64,
+    runtime_s: f64,
+    interval_s: f64,
+    rng: &mut Rng,
+) -> Vec<f64> {
+    let n = ((runtime_s / interval_s).ceil() as usize).clamp(1, MAX_SAMPLES);
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        // mid-interval phase; the final sample can sit at phase 1.0
+        let phase = ((i as f64 + 0.5) * interval_s / runtime_s).min(1.0);
+        let rel = spec.profile.value(phase);
+        let wiggle = 1.0 + spec.wiggle_sigma * rng.normal();
+        out.push((peak_mib * rel * wiggle.max(0.2)).max(0.5));
+    }
+    out
+}
+
+/// Synthesize one execution of a task type from an already-forked rng
+/// stream: input size, noised runtime and peak (with the occasional
+/// data-dependent blowup), and the interval-sampled ground-truth
+/// curve. Shared by [`generate_workflow_trace`] (wave-interleaved
+/// traces) and the sched layer's `WorkflowSource` (per-instance DAG
+/// executions) so both draw from the same distributions.
+pub fn synth_execution(spec: &TaskTypeSpec, rng: &mut Rng, seq: u64) -> TaskRun {
+    let input_mib = rng.lognormal(spec.input_mu, spec.input_sigma);
+    let rt_noise = (spec.noise_sigma * rng.normal()).exp();
+    let runtime_s =
+        ((spec.rt_base.0 + spec.rt_per_mib * input_mib) * rt_noise).max(MONITOR_INTERVAL_S);
+    let peak_noise = (spec.noise_sigma * rng.normal()).exp();
+    // occasional data-dependent blowup (heavy tail; see spec)
+    let spike = if rng.f64() < spec.spike_prob {
+        rng.uniform(1.2, 1.45)
+    } else {
+        1.0
+    };
+    let peak_mib = (spec.peak_base.0 + spec.peak_per_mib * input_mib) * peak_noise * spike;
+
+    let samples = ground_truth_curve(spec, peak_mib, runtime_s, MONITOR_INTERVAL_S, rng);
+    let series = UsageSeries::new(MONITOR_INTERVAL_S, samples);
+    // runtime := j·f, consistent with the paper's runtime model
+    let runtime = series.duration();
+    TaskRun { task_type: spec.name.clone(), input_mib, runtime, series, seq }
+}
+
+/// Generate the full trace of one workflow execution.
+///
+/// Executions are interleaved in waves that respect the DAG's
+/// topological levels (upstream types start earlier), mirroring how a
+/// SWMS releases ready tasks — this is what makes the *online*
+/// evaluation protocol meaningful: by the time a downstream type is
+/// scored, its earlier executions (and upstream ones) have been
+/// observed.
+pub fn generate_workflow_trace(wf: &WorkflowSpec, seed: u64) -> Trace {
+    wf.validate().expect("invalid workflow spec");
+    let root = Rng::new(seed).fork(&wf.name);
+
+    // Rank types by topological level for wave ordering.
+    let levels = wf.levels();
+    let mut level_of = vec![0usize; wf.tasks.len()];
+    for (lvl, members) in levels.iter().enumerate() {
+        for &m in members {
+            level_of[m] = lvl;
+        }
+    }
+    let mut order: Vec<usize> = (0..wf.tasks.len()).collect();
+    order.sort_by_key(|&i| (level_of[i], i));
+
+    let mut trace = Trace::new();
+    for t in &wf.tasks {
+        trace.set_default(&t.name, t.default_mem);
+    }
+
+    let max_exec = wf.tasks.iter().map(|t| t.n_executions).max().unwrap_or(0);
+    let mut seq: u64 = 0;
+    for wave in 0..max_exec {
+        for &ti in &order {
+            let spec = &wf.tasks[ti];
+            if wave >= spec.n_executions {
+                continue;
+            }
+            let mut rng = root.fork(&format!("{}#{}", spec.name, wave));
+            trace.push(synth_execution(spec, &mut rng, seq));
+            seq += 1;
+        }
+    }
+    trace.sort();
+    trace
+}
+
+/// Convenience: generate both paper workflows into one trace set.
+pub fn generate_paper_traces(seed: u64) -> Vec<(String, Trace)> {
+    use crate::workload::catalog::{eager_workflow, sarek_workflow};
+    vec![
+        ("eager".to_string(), generate_workflow_trace(&eager_workflow(), seed)),
+        ("sarek".to_string(), generate_workflow_trace(&sarek_workflow(), seed)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::units::{MemMiB, Seconds};
+    use crate::workload::catalog::{eager_workflow, sarek_workflow};
+    use crate::workload::profiles::ProfileShape;
+
+    fn small_spec() -> TaskTypeSpec {
+        TaskTypeSpec {
+            name: "w/t".into(),
+            profile: ProfileShape::RampUp { alpha: 1.0 },
+            rt_base: Seconds(20.0),
+            rt_per_mib: 0.05,
+            peak_base: MemMiB(100.0),
+            peak_per_mib: 0.5,
+            noise_sigma: 0.1,
+            spike_prob: 0.0,
+            wiggle_sigma: 0.02,
+            input_mu: 6.0,
+            input_sigma: 0.5,
+            n_executions: 30,
+            default_mem: MemMiB(4096.0),
+        }
+    }
+
+    #[test]
+    fn curve_has_expected_length_and_positivity() {
+        let mut rng = Rng::new(1);
+        let c = ground_truth_curve(&small_spec(), 500.0, 100.0, 2.0, &mut rng);
+        assert_eq!(c.len(), 50);
+        assert!(c.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn curve_peak_close_to_target() {
+        let mut rng = Rng::new(2);
+        let c = ground_truth_curve(&small_spec(), 1000.0, 200.0, 2.0, &mut rng);
+        let peak = c.iter().copied().fold(0.0, f64::max);
+        assert!((peak - 1000.0).abs() / 1000.0 < 0.15, "peak={peak}");
+    }
+
+    #[test]
+    fn trace_generation_is_deterministic() {
+        let wf = eager_workflow();
+        let a = generate_workflow_trace(&wf, 42);
+        let b = generate_workflow_trace(&wf, 42);
+        assert_eq!(a.n_runs(), b.n_runs());
+        for ty in a.task_types() {
+            assert_eq!(a.runs_of(ty), b.runs_of(ty), "type {ty}");
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let wf = eager_workflow();
+        let a = generate_workflow_trace(&wf, 1);
+        let b = generate_workflow_trace(&wf, 2);
+        let ra = &a.runs_of("eager/fastqc")[0];
+        let rb = &b.runs_of("eager/fastqc")[0];
+        assert_ne!(ra.input_mib, rb.input_mib);
+    }
+
+    #[test]
+    fn execution_counts_match_spec() {
+        let wf = eager_workflow();
+        let t = generate_workflow_trace(&wf, 7);
+        for spec in &wf.tasks {
+            assert_eq!(t.runs_of(&spec.name).len(), spec.n_executions, "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn defaults_never_fail() {
+        // The paper's Fig. 7c: the default baseline has zero retries.
+        for (name, trace) in generate_paper_traces(42) {
+            for ty in trace.task_types().map(String::from).collect::<Vec<_>>() {
+                let default = trace.default_alloc(&ty).unwrap();
+                for run in trace.runs_of(&ty) {
+                    assert!(
+                        run.peak().0 <= default.0,
+                        "{name}/{ty} seq {}: peak {} exceeds default {}",
+                        run.seq,
+                        run.peak(),
+                        default
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn input_size_correlates_with_peak() {
+        // the learnability assumption: corr(input, peak) must be strong
+        let wf = sarek_workflow();
+        let t = generate_workflow_trace(&wf, 11);
+        let runs = t.runs_of("sarek/gatk4_baserecalibrator");
+        let n = runs.len() as f64;
+        let mx = runs.iter().map(|r| r.input_mib).sum::<f64>() / n;
+        let my = runs.iter().map(|r| r.peak().0).sum::<f64>() / n;
+        let mut cov = 0.0;
+        let mut vx = 0.0;
+        let mut vy = 0.0;
+        for r in runs {
+            let dx = r.input_mib - mx;
+            let dy = r.peak().0 - my;
+            cov += dx * dy;
+            vx += dx * dx;
+            vy += dy * dy;
+        }
+        let corr = cov / (vx.sqrt() * vy.sqrt());
+        assert!(corr > 0.5, "corr={corr}");
+    }
+
+    #[test]
+    fn upstream_types_appear_before_downstream_in_seq_order() {
+        let wf = eager_workflow();
+        let t = generate_workflow_trace(&wf, 3);
+        let first_seq = |ty: &str| t.runs_of(ty).iter().map(|r| r.seq).min().unwrap();
+        // fastqc (level 0) strictly before bwa_align (level 3+)
+        assert!(first_seq("eager/fastqc") < first_seq("eager/bwa_align"));
+    }
+
+    #[test]
+    fn wave_interleaving_spreads_types() {
+        // within the first 2*n_types sequence slots, many distinct types
+        let wf = sarek_workflow();
+        let t = generate_workflow_trace(&wf, 5);
+        let all = t.all_runs_ordered();
+        let first: std::collections::HashSet<&str> =
+            all[..40].iter().map(|r| r.task_type.as_str()).collect();
+        assert!(first.len() > 10, "only {} types in first 40 runs", first.len());
+    }
+
+    #[test]
+    fn runtime_equals_series_duration() {
+        let wf = eager_workflow();
+        let t = generate_workflow_trace(&wf, 9);
+        for run in t.runs_of("eager/adapter_removal") {
+            assert_eq!(run.runtime, run.series.duration());
+        }
+    }
+}

@@ -1,0 +1,259 @@
+//! Task-type and workflow specifications for the synthetic workloads.
+
+use crate::units::{MemMiB, Seconds};
+use crate::workload::profiles::ProfileShape;
+
+/// Everything the generator needs to synthesize one task type's
+/// executions. Scaling laws are linear in input size (the assumption
+/// shared by the paper and all learned baselines), with multiplicative
+/// log-normal noise.
+#[derive(Debug, Clone)]
+pub struct TaskTypeSpec {
+    /// Qualified name, e.g. `"eager/adapter_removal"`.
+    pub name: String,
+    /// Temporal usage profile.
+    pub profile: ProfileShape,
+    /// Runtime = `rt_base + rt_per_mib · input`, noised.
+    pub rt_base: Seconds,
+    pub rt_per_mib: f64, // seconds per MiB of input
+    /// Peak = `peak_base + peak_per_mib · input`, noised.
+    pub peak_base: MemMiB,
+    pub peak_per_mib: f64, // MiB of memory per MiB of input
+    /// Multiplicative noise sigma (log-space) on runtime and peak.
+    pub noise_sigma: f64,
+    /// Probability that a run is a "blowup": its peak is multiplied by
+    /// a factor in [1.25, 1.7]. Real genomics tools show such
+    /// data-dependent memory spikes (duplicated reads, pathological
+    /// references); they are what makes pure mean+σ offsetting fail.
+    pub spike_prob: f64,
+    /// Per-sample temporal wiggle sigma (fraction of local usage).
+    pub wiggle_sigma: f64,
+    /// Input size distribution: log-normal over MiB.
+    pub input_mu: f64,
+    pub input_sigma: f64,
+    /// Number of executions in the trace.
+    pub n_executions: usize,
+    /// Workflow developers' default allocation (the sanity baseline) —
+    /// deliberately generous so the default never fails (Fig. 7c shows
+    /// zero default retries).
+    pub default_mem: MemMiB,
+}
+
+impl TaskTypeSpec {
+    /// Expected input size (median of the log-normal), MiB.
+    pub fn median_input_mib(&self) -> f64 {
+        self.input_mu.exp()
+    }
+
+    /// Nominal (un-noised) runtime at the median input.
+    pub fn nominal_runtime(&self) -> Seconds {
+        Seconds(self.rt_base.0 + self.rt_per_mib * self.median_input_mib())
+    }
+
+    /// Nominal (un-noised) peak at the median input.
+    pub fn nominal_peak(&self) -> MemMiB {
+        MemMiB(self.peak_base.0 + self.peak_per_mib * self.median_input_mib())
+    }
+
+    /// Sanity checks used by catalog tests.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.name.is_empty() {
+            return Err("empty name".into());
+        }
+        if self.rt_base.0 < 0.0 || self.rt_per_mib < 0.0 {
+            return Err(format!("{}: negative runtime scaling", self.name));
+        }
+        if self.peak_base.0 <= 0.0 || self.peak_per_mib < 0.0 {
+            return Err(format!("{}: non-positive peak scaling", self.name));
+        }
+        if self.n_executions == 0 {
+            return Err(format!("{}: zero executions", self.name));
+        }
+        if self.default_mem.0 < self.nominal_peak().0 {
+            return Err(format!(
+                "{}: default {} below nominal peak {} — the sanity baseline must not fail",
+                self.name,
+                self.default_mem,
+                self.nominal_peak()
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// A workflow: named task types plus dependency edges (indices into
+/// `tasks`). The DAG drives submission order in the generated trace
+/// (upstream types are submitted in earlier waves, mirroring how
+/// Nextflow releases tasks as their inputs become ready).
+#[derive(Debug, Clone)]
+pub struct WorkflowSpec {
+    pub name: String,
+    pub tasks: Vec<TaskTypeSpec>,
+    /// `(from, to)` edges: `to` consumes outputs of `from`.
+    pub edges: Vec<(usize, usize)>,
+}
+
+impl WorkflowSpec {
+    /// Topological levels (Kahn). Panics on cycles — workflow DAGs are
+    /// author-time constants, validated by tests.
+    pub fn levels(&self) -> Vec<Vec<usize>> {
+        let n = self.tasks.len();
+        let mut indeg = vec![0usize; n];
+        let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for &(f, t) in &self.edges {
+            assert!(f < n && t < n, "edge index out of range");
+            adj[f].push(t);
+            indeg[t] += 1;
+        }
+        let mut level: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut levels = Vec::new();
+        let mut seen = 0;
+        while !level.is_empty() {
+            seen += level.len();
+            let mut next = Vec::new();
+            for &u in &level {
+                for &v in &adj[u] {
+                    indeg[v] -= 1;
+                    if indeg[v] == 0 {
+                        next.push(v);
+                    }
+                }
+            }
+            levels.push(std::mem::take(&mut level));
+            level = next;
+        }
+        assert_eq!(seen, n, "workflow '{}' has a cycle", self.name);
+        levels
+    }
+
+    pub fn task_index(&self, name: &str) -> Option<usize> {
+        self.tasks.iter().position(|t| t.name == name)
+    }
+
+    /// Parent adjacency: `parents()[v]` lists every `u` with an edge
+    /// `(u, v)` — the tasks whose outputs `v` consumes, i.e. the
+    /// completions a dependency-gated scheduler waits for before
+    /// releasing `v` (the sched layer's `WorkflowSource`).
+    pub fn parents(&self) -> Vec<Vec<usize>> {
+        let mut parents: Vec<Vec<usize>> = vec![Vec::new(); self.tasks.len()];
+        for &(f, t) in &self.edges {
+            assert!(f < self.tasks.len() && t < self.tasks.len(), "edge index out of range");
+            parents[t].push(f);
+        }
+        parents
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        for t in &self.tasks {
+            t.validate()?;
+        }
+        let mut names: Vec<&str> = self.tasks.iter().map(|t| t.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        if names.len() != self.tasks.len() {
+            return Err(format!("workflow '{}' has duplicate task names", self.name));
+        }
+        // levels() panics on cycles; catch via catch_unwind-free check:
+        let n = self.tasks.len();
+        for &(f, t) in &self.edges {
+            if f >= n || t >= n {
+                return Err(format!("workflow '{}' edge out of range", self.name));
+            }
+            if f == t {
+                return Err(format!("workflow '{}' self-loop at {f}", self.name));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str) -> TaskTypeSpec {
+        TaskTypeSpec {
+            name: name.into(),
+            profile: ProfileShape::RampUp { alpha: 1.0 },
+            rt_base: Seconds(10.0),
+            rt_per_mib: 0.01,
+            peak_base: MemMiB(100.0),
+            peak_per_mib: 0.5,
+            noise_sigma: 0.1,
+            spike_prob: 0.0,
+            wiggle_sigma: 0.02,
+            input_mu: 6.0,
+            input_sigma: 0.5,
+            n_executions: 10,
+            default_mem: MemMiB(8192.0),
+        }
+    }
+
+    #[test]
+    fn nominal_quantities() {
+        let s = spec("a");
+        let med = s.median_input_mib();
+        assert!((med - 6.0f64.exp()).abs() < 1e-9);
+        assert!((s.nominal_runtime().0 - (10.0 + 0.01 * med)).abs() < 1e-9);
+        assert!((s.nominal_peak().0 - (100.0 + 0.5 * med)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn validate_rejects_undersized_default() {
+        let mut s = spec("a");
+        s.default_mem = MemMiB(1.0);
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn levels_of_diamond() {
+        let wf = WorkflowSpec {
+            name: "w".into(),
+            tasks: vec![spec("a"), spec("b"), spec("c"), spec("d")],
+            edges: vec![(0, 1), (0, 2), (1, 3), (2, 3)],
+        };
+        let lv = wf.levels();
+        assert_eq!(lv, vec![vec![0], vec![1, 2], vec![3]]);
+        assert!(wf.validate().is_ok());
+    }
+
+    #[test]
+    fn parents_of_diamond() {
+        let wf = WorkflowSpec {
+            name: "w".into(),
+            tasks: vec![spec("a"), spec("b"), spec("c"), spec("d")],
+            edges: vec![(0, 1), (0, 2), (1, 3), (2, 3)],
+        };
+        assert_eq!(
+            wf.parents(),
+            vec![vec![], vec![0], vec![0], vec![1, 2]]
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "cycle")]
+    fn cycle_detected() {
+        let wf = WorkflowSpec {
+            name: "w".into(),
+            tasks: vec![spec("a"), spec("b")],
+            edges: vec![(0, 1), (1, 0)],
+        };
+        wf.levels();
+    }
+
+    #[test]
+    fn validate_rejects_duplicates_and_self_loops() {
+        let wf = WorkflowSpec {
+            name: "w".into(),
+            tasks: vec![spec("a"), spec("a")],
+            edges: vec![],
+        };
+        assert!(wf.validate().is_err());
+        let wf2 = WorkflowSpec {
+            name: "w".into(),
+            tasks: vec![spec("a")],
+            edges: vec![(0, 0)],
+        };
+        assert!(wf2.validate().is_err());
+    }
+}

@@ -1,0 +1,496 @@
+//! Cluster and resource-manager model.
+//!
+//! The paper's experiments ran on nodes with 128 GB of memory; the
+//! resource manager (Slurm/Kubernetes in the paper's framing) admits a
+//! task onto a node only if its requested memory fits, and the PPM
+//! baseline's failure policy is "assign a node's maximum amount of
+//! memory" — so node capacity is load-bearing for reproducing Fig. 7
+//! (it is exactly what makes original PPM waste so much, §IV-E).
+//!
+//! Beyond the single-node evaluation setup, the cluster supports
+//! **heterogeneous** node specs and **grow-able** reservations: the
+//! discrete-event scheduler ([`crate::sched`]) places a task with its
+//! first-segment allocation and grows the reservation in place at each
+//! segment boundary of the k-Segments step function. Growing can fail
+//! under contention — that is the scheduler's `grow_denials` signal.
+//!
+//! Nodes also have a **lifecycle** ([`NodeState`]): the failure-domain
+//! scheduler takes nodes down (loss) and back up (rejoin), and the
+//! autoscaler appends new nodes and retires idle ones. Node indexes
+//! are stable forever — a vacated node stays in the roster as `Down`
+//! or `Retired` so outstanding [`Reservation`] handles and per-node
+//! ledgers never dangle; any reserve or grow against a non-`Up` node
+//! is a denial, never a panic or a silent success.
+
+mod profile;
+
+pub use profile::TimeProfile;
+
+use ksegments_core::units::MemMiB;
+
+/// Static description of one node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeSpec {
+    pub mem: MemMiB,
+    pub cores: u32,
+}
+
+impl NodeSpec {
+    /// The paper's testbed: 128 GB DDR4, 16C/32T EPYC 7282.
+    pub fn paper_testbed() -> NodeSpec {
+        NodeSpec { mem: MemMiB::from_gib(128.0), cores: 32 }
+    }
+}
+
+/// Lifecycle of a node in the roster. Indexes are stable: a node is
+/// never removed from the cluster's vector, only marked `Down`
+/// (failed, will rejoin) or `Retired` (autoscaled away, permanent).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeState {
+    Up,
+    Down,
+    Retired,
+}
+
+/// A node with live memory accounting.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub spec: NodeSpec,
+    reserved: f64, // MiB
+    state: NodeState,
+    /// Monotone counters for observability.
+    pub admitted: u64,
+    pub rejected: u64,
+}
+
+impl Node {
+    pub fn new(spec: NodeSpec) -> Node {
+        Node { spec, reserved: 0.0, state: NodeState::Up, admitted: 0, rejected: 0 }
+    }
+
+    pub fn state(&self) -> NodeState {
+        self.state
+    }
+
+    pub fn is_up(&self) -> bool {
+        self.state == NodeState::Up
+    }
+
+    pub fn free(&self) -> MemMiB {
+        MemMiB((self.spec.mem.0 - self.reserved).max(0.0))
+    }
+
+    pub fn reserved(&self) -> MemMiB {
+        MemMiB(self.reserved)
+    }
+
+    /// Try to reserve `mem`; returns false (and counts a rejection) if
+    /// it does not fit. A non-`Up` node denies without counting a
+    /// rejection — it was never really probed as capacity.
+    pub fn reserve(&mut self, mem: MemMiB) -> bool {
+        if !self.is_up() {
+            return false;
+        }
+        if mem.0 <= 0.0 {
+            return true;
+        }
+        if self.reserved + mem.0 <= self.spec.mem.0 + 1e-9 {
+            self.reserved += mem.0;
+            self.admitted += 1;
+            true
+        } else {
+            self.rejected += 1;
+            false
+        }
+    }
+
+    /// Grow an existing reservation in place by `delta` MiB. Unlike
+    /// [`Self::reserve`], a denied grow does not count as a rejection —
+    /// it is a contention event the scheduler accounts separately.
+    /// A grow against a vacated (down or retired) node is a denial,
+    /// never a panic or a silent success.
+    pub fn grow(&mut self, delta: MemMiB) -> bool {
+        if !self.is_up() {
+            return false;
+        }
+        if delta.0 <= 0.0 {
+            return true;
+        }
+        if self.reserved + delta.0 <= self.spec.mem.0 + 1e-9 {
+            self.reserved += delta.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn release(&mut self, mem: MemMiB) {
+        self.reserved = (self.reserved - mem.0).max(0.0);
+    }
+}
+
+/// Reservation handle returned by the resource manager; releasing it
+/// returns the memory to its node. `mem` tracks the *current* size,
+/// including any grows applied since placement.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Reservation {
+    pub node_idx: usize,
+    pub mem: MemMiB,
+}
+
+/// A cluster with first-fit placement — the substrate the simulated
+/// SWMS submits to. Nodes may be heterogeneous.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    nodes: Vec<Node>,
+    /// Placement attempts that failed on **every** node (the
+    /// cluster-wide rejection the scheduler's queue-wait comes from).
+    pub failed_placements: u64,
+}
+
+impl Cluster {
+    /// Homogeneous cluster of `n_nodes` identical nodes.
+    pub fn new(n_nodes: usize, spec: NodeSpec) -> Cluster {
+        Self::heterogeneous((0..n_nodes).map(|_| spec).collect())
+    }
+
+    /// Cluster from an explicit (possibly heterogeneous) node list.
+    pub fn heterogeneous(specs: Vec<NodeSpec>) -> Cluster {
+        assert!(!specs.is_empty(), "cluster needs at least one node");
+        Cluster { nodes: specs.into_iter().map(Node::new).collect(), failed_placements: 0 }
+    }
+
+    /// Single paper-testbed node (the evaluation setup).
+    pub fn paper_testbed() -> Cluster {
+        Cluster::new(1, NodeSpec::paper_testbed())
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    /// Capacity of the largest node — what "assign the node's maximum
+    /// memory" resolves to for the PPM failure policy, and the ceiling
+    /// any placeable allocation must respect.
+    pub fn node_max_mem(&self) -> MemMiB {
+        self.nodes
+            .iter()
+            .map(|n| n.spec.mem)
+            .fold(MemMiB::ZERO, MemMiB::max)
+    }
+
+    /// First-fit reservation across nodes.
+    ///
+    /// Every node probed before the successful one counts a rejection
+    /// on that node (previously the free-memory pre-check short-
+    /// circuited `Node::reserve`, making per-node rejections invisible);
+    /// an attempt that fits nowhere additionally increments
+    /// [`Self::failed_placements`].
+    pub fn reserve(&mut self, mem: MemMiB) -> Option<Reservation> {
+        for (i, node) in self.nodes.iter_mut().enumerate() {
+            if !node.is_up() {
+                continue; // vacated nodes are not capacity, not probes
+            }
+            if node.reserve(mem) {
+                return Some(Reservation { node_idx: i, mem });
+            }
+        }
+        self.failed_placements += 1;
+        None
+    }
+
+    /// Targeted reservation on one node (the scheduler picks nodes via
+    /// its time-indexed ledgers, then reserves here); rejections count
+    /// on that node as with first-fit probing.
+    pub fn reserve_on(&mut self, node_idx: usize, mem: MemMiB) -> Option<Reservation> {
+        if self.nodes[node_idx].reserve(mem) {
+            Some(Reservation { node_idx, mem })
+        } else {
+            None
+        }
+    }
+
+    /// Mutable node access for scheduler-level accounting (e.g.
+    /// counting a ledger rejection on the node that was probed).
+    pub fn node_mut(&mut self, node_idx: usize) -> &mut Node {
+        &mut self.nodes[node_idx]
+    }
+
+    /// Grow `r` in place by `delta`; false (reservation unchanged) if
+    /// the node cannot supply the delta.
+    pub fn grow(&mut self, r: &mut Reservation, delta: MemMiB) -> bool {
+        if self.nodes[r.node_idx].grow(delta) {
+            r.mem += delta;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn release(&mut self, r: Reservation) {
+        self.nodes[r.node_idx].release(r.mem);
+    }
+
+    /// Total free memory across nodes.
+    pub fn total_free(&self) -> MemMiB {
+        self.nodes.iter().map(|n| n.free()).sum()
+    }
+
+    /// Total reserved memory across nodes.
+    pub fn total_reserved(&self) -> MemMiB {
+        self.nodes.iter().map(|n| n.reserved()).sum()
+    }
+
+    /// Total memory capacity across nodes.
+    pub fn total_capacity(&self) -> MemMiB {
+        self.nodes.iter().map(|n| n.spec.mem).sum()
+    }
+
+    /// Sum of per-node rejection counters (probes that did not fit).
+    pub fn total_rejections(&self) -> u64 {
+        self.nodes.iter().map(|n| n.rejected).sum()
+    }
+
+    // ---- node lifecycle (failure domains & autoscaling) ----
+
+    /// Append a new node to the roster, created `Down` (provisioning);
+    /// it becomes capacity when [`Self::set_up`] fires after the
+    /// autoscaler's lag. Returns the new node's stable index.
+    pub fn add_node(&mut self, spec: NodeSpec) -> usize {
+        let mut n = Node::new(spec);
+        n.state = NodeState::Down;
+        self.nodes.push(n);
+        self.nodes.len() - 1
+    }
+
+    /// Mark a node lost. Its reservations are the caller's problem —
+    /// the scheduler kills and requeues residents — but the node
+    /// itself denies all placement and grow traffic until it rejoins.
+    pub fn set_down(&mut self, node_idx: usize) {
+        let n = &mut self.nodes[node_idx];
+        if n.state == NodeState::Up {
+            n.state = NodeState::Down;
+        }
+    }
+
+    /// Bring a `Down` node back `Up`. A `Retired` node stays retired —
+    /// a rejoin scheduled before retirement must not resurrect it.
+    pub fn set_up(&mut self, node_idx: usize) {
+        let n = &mut self.nodes[node_idx];
+        if n.state == NodeState::Down {
+            n.state = NodeState::Up;
+        }
+    }
+
+    /// Permanently remove a node from service (autoscale-down). The
+    /// caller must only retire idle nodes; this is debug-asserted.
+    pub fn retire(&mut self, node_idx: usize) {
+        let n = &mut self.nodes[node_idx];
+        debug_assert!(n.reserved <= 1e-9, "retiring a node with live reservations");
+        n.state = NodeState::Retired;
+    }
+
+    /// Number of nodes currently serving (state `Up`).
+    pub fn n_up(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_up()).count()
+    }
+
+    /// Memory capacity of the nodes currently serving — the live
+    /// denominator for utilization under failures and autoscaling.
+    pub fn up_capacity(&self) -> MemMiB {
+        self.nodes
+            .iter()
+            .filter(|n| n.is_up())
+            .map(|n| n.spec.mem)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_is_128_gib() {
+        let c = Cluster::paper_testbed();
+        assert_eq!(c.node_max_mem(), MemMiB::from_gib(128.0));
+        assert_eq!(c.n_nodes(), 1);
+    }
+
+    #[test]
+    fn reserve_and_release() {
+        let mut c = Cluster::new(1, NodeSpec { mem: MemMiB(1000.0), cores: 4 });
+        let r = c.reserve(MemMiB(600.0)).unwrap();
+        assert_eq!(c.total_free(), MemMiB(400.0));
+        assert!(c.reserve(MemMiB(500.0)).is_none());
+        c.release(r);
+        assert_eq!(c.total_free(), MemMiB(1000.0));
+    }
+
+    #[test]
+    fn first_fit_spills_to_second_node() {
+        let mut c = Cluster::new(2, NodeSpec { mem: MemMiB(1000.0), cores: 4 });
+        let _a = c.reserve(MemMiB(800.0)).unwrap();
+        let b = c.reserve(MemMiB(800.0)).unwrap();
+        assert_eq!(b.node_idx, 1);
+    }
+
+    #[test]
+    fn rejection_counting() {
+        let mut n = Node::new(NodeSpec { mem: MemMiB(100.0), cores: 1 });
+        assert!(n.reserve(MemMiB(80.0)));
+        assert!(!n.reserve(MemMiB(30.0)));
+        assert_eq!(n.admitted, 1);
+        assert_eq!(n.rejected, 1);
+        assert_eq!(n.free(), MemMiB(20.0));
+    }
+
+    #[test]
+    fn probed_nodes_count_rejections() {
+        // Node 0 is full; a request that lands on node 1 must still
+        // count a rejection on node 0 (this was the invisible-rejection
+        // bug: the free() pre-check skipped Node::reserve entirely).
+        let mut c = Cluster::new(2, NodeSpec { mem: MemMiB(1000.0), cores: 4 });
+        let _ = c.reserve(MemMiB(900.0)).unwrap();
+        let r = c.reserve(MemMiB(500.0)).unwrap();
+        assert_eq!(r.node_idx, 1);
+        assert_eq!(c.nodes()[0].rejected, 1);
+        assert_eq!(c.nodes()[1].rejected, 0);
+        assert_eq!(c.total_rejections(), 1);
+        assert_eq!(c.failed_placements, 0);
+    }
+
+    #[test]
+    fn cluster_wide_failure_counts_every_node_and_the_attempt() {
+        let mut c = Cluster::new(3, NodeSpec { mem: MemMiB(100.0), cores: 1 });
+        assert!(c.reserve(MemMiB(500.0)).is_none());
+        assert_eq!(c.total_rejections(), 3);
+        assert_eq!(c.failed_placements, 1);
+        assert!(c.reserve(MemMiB(500.0)).is_none());
+        assert_eq!(c.total_rejections(), 6);
+        assert_eq!(c.failed_placements, 2);
+    }
+
+    #[test]
+    fn heterogeneous_nodes_and_first_fit() {
+        let mut c = Cluster::heterogeneous(vec![
+            NodeSpec { mem: MemMiB(100.0), cores: 1 },
+            NodeSpec { mem: MemMiB(1000.0), cores: 8 },
+        ]);
+        assert_eq!(c.node_max_mem(), MemMiB(1000.0));
+        assert_eq!(c.total_capacity(), MemMiB(1100.0));
+        // does not fit node 0, lands on node 1 and counts the probe
+        let r = c.reserve(MemMiB(400.0)).unwrap();
+        assert_eq!(r.node_idx, 1);
+        assert_eq!(c.nodes()[0].rejected, 1);
+        assert_eq!(c.total_reserved(), MemMiB(400.0));
+    }
+
+    #[test]
+    fn grow_reservation_in_place() {
+        let mut c = Cluster::new(1, NodeSpec { mem: MemMiB(1000.0), cores: 4 });
+        let mut r = c.reserve(MemMiB(300.0)).unwrap();
+        assert!(c.grow(&mut r, MemMiB(200.0)));
+        assert_eq!(r.mem, MemMiB(500.0));
+        assert_eq!(c.total_reserved(), MemMiB(500.0));
+        // over capacity: denied, reservation unchanged, no rejection
+        assert!(!c.grow(&mut r, MemMiB(600.0)));
+        assert_eq!(r.mem, MemMiB(500.0));
+        assert_eq!(c.total_rejections(), 0);
+        // releasing the grown reservation returns everything
+        c.release(r);
+        assert_eq!(c.total_free(), MemMiB(1000.0));
+    }
+
+    #[test]
+    fn reserve_on_targets_one_node() {
+        let mut c = Cluster::new(2, NodeSpec { mem: MemMiB(1000.0), cores: 4 });
+        let r = c.reserve_on(1, MemMiB(600.0)).unwrap();
+        assert_eq!(r.node_idx, 1);
+        assert_eq!(c.nodes()[0].reserved(), MemMiB(0.0));
+        // node 0 would fit, but a targeted reserve does not spill
+        assert!(c.reserve_on(1, MemMiB(600.0)).is_none());
+        assert_eq!(c.nodes()[1].rejected, 1);
+        c.node_mut(1).rejected += 1; // scheduler-level ledger rejection
+        assert_eq!(c.nodes()[1].rejected, 2);
+    }
+
+    #[test]
+    fn release_never_goes_negative() {
+        let mut n = Node::new(NodeSpec { mem: MemMiB(100.0), cores: 1 });
+        n.release(MemMiB(50.0));
+        assert_eq!(n.free(), MemMiB(100.0));
+    }
+
+    #[test]
+    fn zero_reservation_is_free() {
+        let mut n = Node::new(NodeSpec { mem: MemMiB(100.0), cores: 1 });
+        assert!(n.reserve(MemMiB(0.0)));
+        assert_eq!(n.reserved(), MemMiB(0.0));
+        assert!(n.grow(MemMiB(0.0)));
+    }
+
+    #[test]
+    fn grow_against_vacated_node_is_denied() {
+        // Satellite bugfix: a step-function grow landing after its node
+        // was lost (or autoscaled away) must be a denial — not a panic,
+        // not a silent success that inflates a dead node's ledger.
+        let mut c = Cluster::new(1, NodeSpec { mem: MemMiB(1000.0), cores: 4 });
+        let mut r = c.reserve(MemMiB(300.0)).unwrap();
+        c.set_down(0);
+        assert!(!c.grow(&mut r, MemMiB(1.0)), "grow on a down node must deny");
+        assert_eq!(r.mem, MemMiB(300.0), "denied grow must leave the handle unchanged");
+        assert_eq!(c.nodes()[0].reserved(), MemMiB(300.0));
+        // releasing the stranded reservation still works (accounting
+        // survives the node's death), and zero-delta grows deny too
+        assert!(!c.grow(&mut r, MemMiB(0.0)));
+        c.release(r);
+        assert_eq!(c.nodes()[0].reserved(), MemMiB(0.0));
+    }
+
+    #[test]
+    fn node_lifecycle_up_down_retired() {
+        let mut c = Cluster::new(2, NodeSpec { mem: MemMiB(1000.0), cores: 4 });
+        assert_eq!(c.n_up(), 2);
+        assert_eq!(c.up_capacity(), MemMiB(2000.0));
+        c.set_down(0);
+        assert_eq!(c.nodes()[0].state(), NodeState::Down);
+        assert_eq!(c.n_up(), 1);
+        assert_eq!(c.up_capacity(), MemMiB(1000.0));
+        // first-fit skips the down node without counting probes
+        let r = c.reserve(MemMiB(500.0)).unwrap();
+        assert_eq!(r.node_idx, 1);
+        assert_eq!(c.nodes()[0].rejected, 0);
+        // rejoin restores capacity at the same stable index
+        c.set_up(0);
+        assert!(c.nodes()[0].is_up());
+        assert_eq!(c.up_capacity(), MemMiB(2000.0));
+        // a retired node never rejoins, even if a rejoin fires later
+        c.release(r);
+        c.retire(1);
+        assert_eq!(c.nodes()[1].state(), NodeState::Retired);
+        c.set_up(1);
+        assert_eq!(c.nodes()[1].state(), NodeState::Retired);
+        assert_eq!(c.total_capacity(), MemMiB(2000.0), "roster indexes stay stable");
+        assert_eq!(c.up_capacity(), MemMiB(1000.0));
+    }
+
+    #[test]
+    fn autoscaled_node_joins_down_then_serves() {
+        let mut c = Cluster::new(1, NodeSpec { mem: MemMiB(1000.0), cores: 4 });
+        let idx = c.add_node(NodeSpec { mem: MemMiB(1000.0), cores: 4 });
+        assert_eq!(idx, 1);
+        // provisioning: not capacity yet
+        assert_eq!(c.n_up(), 1);
+        assert!(!c.nodes()[idx].is_up());
+        assert!(c.reserve_on(idx, MemMiB(100.0)).is_none());
+        assert_eq!(c.nodes()[idx].rejected, 0, "a provisioning node is not a probe");
+        c.set_up(idx);
+        assert_eq!(c.n_up(), 2);
+        assert!(c.reserve_on(idx, MemMiB(100.0)).is_some());
+    }
+}

@@ -1,0 +1,271 @@
+//! Structured event log for the workflow engine — the observability
+//! surface a production SWMS integration would scrape (counters alone
+//! hide *which* task retried and why).
+
+use ksegments_core::units::MemMiB;
+
+/// One engine event, in occurrence order.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EngineEvent {
+    /// Task submitted with a predicted (peak) allocation.
+    Submitted { task_type: String, seq: u64, requested: MemMiB },
+    /// Resource manager could not place the request immediately.
+    Queued { task_type: String, seq: u64, requested: MemMiB },
+    /// Attempt failed by under-allocation at `time_s`.
+    Failed {
+        task_type: String,
+        seq: u64,
+        attempt: u32,
+        time_s: f64,
+        used: MemMiB,
+        allocated: MemMiB,
+    },
+    /// Run completed (possibly after retries).
+    Completed { task_type: String, seq: u64, attempts: u32 },
+    /// Scheduler: attempt placed on `node` at simulated time `time_s`
+    /// with its initial reservation ([`crate::sched`]).
+    Placed { task_type: String, seq: u64, node: usize, time_s: f64, reserved: MemMiB },
+    /// Scheduler: attempt OOM-killed at `time_s` (ground-truth usage
+    /// exceeded the reservation); the task is requeued with an
+    /// escalated allocation.
+    OomKilled { task_type: String, seq: u64, attempt: u32, time_s: f64 },
+    /// Scheduler: a segment-boundary grow request was denied by the
+    /// node (memory contention, not a misprediction); the task is
+    /// requeued with a full-peak reservation.
+    GrowDenied { task_type: String, seq: u64, segment: usize, time_s: f64 },
+    /// Scheduler (DAG mode): every parent of this task in workflow
+    /// instance `instance` has completed, so the task is released to
+    /// the resource manager at `time_s`. Roots are released when their
+    /// instance arrives.
+    Released { task_type: String, seq: u64, instance: u64, time_s: f64 },
+    /// Scheduler (DAG mode): the last task of workflow instance
+    /// `instance` completed at `time_s`; `makespan_s` is measured from
+    /// the instance's arrival. `task_type()` reports the workflow
+    /// name, `seq()` the instance ordinal.
+    WorkflowDone { workflow: String, instance: u64, tasks: u32, time_s: f64, makespan_s: f64 },
+    /// Scheduler: attempt killed because its node was lost; the task
+    /// is requeued **blamelessly** (same allocation, same attempt
+    /// number — the predictor is never told).
+    NodeLost { task_type: String, seq: u64, attempt: u32, node: usize, time_s: f64 },
+    /// Scheduler: attempt evicted to make room for a higher-priority
+    /// task; requeued blamelessly like a node loss.
+    Preempted { task_type: String, seq: u64, attempt: u32, node: usize, time_s: f64 },
+    /// Scheduler: node `node` went down, killing `killed` resident
+    /// attempts. `task_type()` reports `"cluster"`, `seq()` the node.
+    NodeFailed { node: usize, killed: u32, time_s: f64 },
+    /// Scheduler: node `node` came (back) up — a post-failure rejoin
+    /// or an autoscaled node finishing provisioning.
+    NodeJoined { node: usize, time_s: f64 },
+    /// Scheduler: the autoscaler retired idle node `node`.
+    NodeRetired { node: usize, time_s: f64 },
+}
+
+impl EngineEvent {
+    pub fn task_type(&self) -> &str {
+        match self {
+            EngineEvent::Submitted { task_type, .. }
+            | EngineEvent::Queued { task_type, .. }
+            | EngineEvent::Failed { task_type, .. }
+            | EngineEvent::Completed { task_type, .. }
+            | EngineEvent::Placed { task_type, .. }
+            | EngineEvent::OomKilled { task_type, .. }
+            | EngineEvent::GrowDenied { task_type, .. }
+            | EngineEvent::Released { task_type, .. }
+            | EngineEvent::NodeLost { task_type, .. }
+            | EngineEvent::Preempted { task_type, .. } => task_type,
+            EngineEvent::WorkflowDone { workflow, .. } => workflow,
+            EngineEvent::NodeFailed { .. }
+            | EngineEvent::NodeJoined { .. }
+            | EngineEvent::NodeRetired { .. } => "cluster",
+        }
+    }
+
+    pub fn seq(&self) -> u64 {
+        match self {
+            EngineEvent::Submitted { seq, .. }
+            | EngineEvent::Queued { seq, .. }
+            | EngineEvent::Failed { seq, .. }
+            | EngineEvent::Completed { seq, .. }
+            | EngineEvent::Placed { seq, .. }
+            | EngineEvent::OomKilled { seq, .. }
+            | EngineEvent::GrowDenied { seq, .. }
+            | EngineEvent::Released { seq, .. }
+            | EngineEvent::NodeLost { seq, .. }
+            | EngineEvent::Preempted { seq, .. } => *seq,
+            EngineEvent::WorkflowDone { instance, .. } => *instance,
+            EngineEvent::NodeFailed { node, .. }
+            | EngineEvent::NodeJoined { node, .. }
+            | EngineEvent::NodeRetired { node, .. } => *node as u64,
+        }
+    }
+}
+
+/// Append-only event log with query helpers.
+#[derive(Debug, Clone, Default)]
+pub struct EventLog {
+    events: Vec<EngineEvent>,
+    /// Cap to bound memory in long soaks (0 = unbounded). When hit, the
+    /// oldest half is dropped (coarse ring semantics; counters in
+    /// `EngineReport` stay exact).
+    cap: usize,
+}
+
+impl EventLog {
+    pub fn new() -> EventLog {
+        EventLog::default()
+    }
+
+    pub fn with_cap(cap: usize) -> EventLog {
+        EventLog { events: Vec::new(), cap }
+    }
+
+    pub fn push(&mut self, ev: EngineEvent) {
+        if self.cap > 0 && self.events.len() >= self.cap {
+            self.events.drain(..self.cap / 2);
+        }
+        self.events.push(ev);
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &EngineEvent> {
+        self.events.iter()
+    }
+
+    /// All failures of a task type, in order.
+    pub fn failures_of(&self, task_type: &str) -> Vec<&EngineEvent> {
+        self.events
+            .iter()
+            .filter(|e| matches!(e, EngineEvent::Failed { .. }) && e.task_type() == task_type)
+            .collect()
+    }
+
+    /// Runs that needed more than one attempt.
+    pub fn retried_runs(&self) -> Vec<(String, u64, u32)> {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                EngineEvent::Completed { task_type, seq, attempts } if *attempts > 1 => {
+                    Some((task_type.clone(), *seq, *attempts))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn failed(ty: &str, seq: u64, attempt: u32) -> EngineEvent {
+        EngineEvent::Failed {
+            task_type: ty.into(),
+            seq,
+            attempt,
+            time_s: 1.0,
+            used: MemMiB(200.0),
+            allocated: MemMiB(100.0),
+        }
+    }
+
+    #[test]
+    fn push_and_query() {
+        let mut log = EventLog::new();
+        log.push(EngineEvent::Submitted { task_type: "a".into(), seq: 0, requested: MemMiB(1.0) });
+        log.push(failed("a", 0, 1));
+        log.push(EngineEvent::Completed { task_type: "a".into(), seq: 0, attempts: 2 });
+        log.push(EngineEvent::Completed { task_type: "b".into(), seq: 1, attempts: 1 });
+        assert_eq!(log.len(), 4);
+        assert_eq!(log.failures_of("a").len(), 1);
+        assert!(log.failures_of("b").is_empty());
+        assert_eq!(log.retried_runs(), vec![("a".to_string(), 0, 2)]);
+    }
+
+    #[test]
+    fn accessors() {
+        let e = failed("x", 7, 3);
+        assert_eq!(e.task_type(), "x");
+        assert_eq!(e.seq(), 7);
+    }
+
+    #[test]
+    fn scheduler_event_accessors() {
+        let placed = EngineEvent::Placed {
+            task_type: "s".into(),
+            seq: 9,
+            node: 2,
+            time_s: 4.0,
+            reserved: MemMiB(512.0),
+        };
+        let oom =
+            EngineEvent::OomKilled { task_type: "s".into(), seq: 9, attempt: 1, time_s: 8.0 };
+        let denied =
+            EngineEvent::GrowDenied { task_type: "s".into(), seq: 9, segment: 2, time_s: 6.0 };
+        let released =
+            EngineEvent::Released { task_type: "s".into(), seq: 9, instance: 3, time_s: 2.0 };
+        for e in [&placed, &oom, &denied, &released] {
+            assert_eq!(e.task_type(), "s");
+            assert_eq!(e.seq(), 9);
+        }
+    }
+
+    #[test]
+    fn failure_domain_event_accessors() {
+        let lost = EngineEvent::NodeLost {
+            task_type: "s".into(),
+            seq: 9,
+            attempt: 2,
+            node: 1,
+            time_s: 5.0,
+        };
+        let evicted = EngineEvent::Preempted {
+            task_type: "s".into(),
+            seq: 9,
+            attempt: 1,
+            node: 0,
+            time_s: 6.0,
+        };
+        for e in [&lost, &evicted] {
+            assert_eq!(e.task_type(), "s");
+            assert_eq!(e.seq(), 9);
+        }
+        let failed = EngineEvent::NodeFailed { node: 3, killed: 2, time_s: 7.0 };
+        let joined = EngineEvent::NodeJoined { node: 3, time_s: 8.0 };
+        let retired = EngineEvent::NodeRetired { node: 3, time_s: 9.0 };
+        for e in [&failed, &joined, &retired] {
+            assert_eq!(e.task_type(), "cluster");
+            assert_eq!(e.seq(), 3);
+        }
+    }
+
+    #[test]
+    fn workflow_done_reports_workflow_and_instance() {
+        let done = EngineEvent::WorkflowDone {
+            workflow: "eager".into(),
+            instance: 4,
+            tasks: 18,
+            time_s: 99.0,
+            makespan_s: 42.0,
+        };
+        assert_eq!(done.task_type(), "eager");
+        assert_eq!(done.seq(), 4);
+    }
+
+    #[test]
+    fn cap_drops_oldest_half() {
+        let mut log = EventLog::with_cap(4);
+        for i in 0..6 {
+            log.push(EngineEvent::Completed { task_type: "t".into(), seq: i, attempts: 1 });
+        }
+        assert!(log.len() <= 4 + 1);
+        // oldest events gone
+        assert!(log.iter().all(|e| e.seq() >= 2));
+    }
+}

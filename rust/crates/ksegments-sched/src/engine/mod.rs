@@ -1,0 +1,279 @@
+//! The SWMS execution engine — the Fig. 2 / Fig. 6 loop of the paper,
+//! wired end to end.
+//!
+//! `sim` answers "how good is a predictor" with the paper's offline
+//! evaluation protocol; this module is the *system*: a Nextflow-like
+//! engine that, per task execution,
+//!
+//! 1. asks the predictor for an allocation (Fig. 2 "predicted resource
+//!    allocation function"),
+//! 2. reserves memory on the [`Cluster`] through the resource manager,
+//! 3. "executes" the task against its ground-truth usage curve,
+//!    sampling cgroup-style metrics into the [`TsDb`] at the
+//!    monitoring interval,
+//! 4. on under-allocation, applies the predictor's failure strategy
+//!    and retries,
+//! 5. on completion, reconstructs the run's series **from the TSDB**
+//!    (not from the generator) and feeds it back into the model —
+//!    closing the paper's online loop.
+
+mod events;
+
+pub use events::{EngineEvent, EventLog};
+
+use crate::cluster::Cluster;
+use ksegments_core::monitoring::Sampler;
+use ksegments_core::predictors::{Allocation, MemoryPredictor};
+use ksegments_core::scoring::{simulate_attempt, AttemptOutcome};
+use ksegments_core::trace::{TaskRun, Trace};
+use ksegments_core::tsdb::{SeriesKey, TsDb};
+use ksegments_core::units::{GbSeconds, MemMiB};
+
+/// Counters the engine reports after a workflow execution.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EngineReport {
+    pub completed: u64,
+    pub attempts: u64,
+    pub retries: u64,
+    /// Reservation requests the resource manager had to queue (no
+    /// capacity at submission).
+    pub queued: u64,
+    pub wastage: GbSeconds,
+    pub monitor_points: u64,
+}
+
+impl EngineReport {
+    pub fn retry_rate(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.retries as f64 / self.completed as f64
+        }
+    }
+}
+
+/// The workflow engine: predictor + cluster + monitoring pipeline.
+pub struct WorkflowEngine<P: MemoryPredictor> {
+    pub predictor: P,
+    pub cluster: Cluster,
+    pub sampler: Sampler,
+    pub tsdb: TsDb,
+    pub events: EventLog,
+    max_attempts: u32,
+}
+
+impl<P: MemoryPredictor> WorkflowEngine<P> {
+    pub fn new(predictor: P, cluster: Cluster) -> Self {
+        WorkflowEngine {
+            predictor,
+            cluster,
+            sampler: Sampler::default(),
+            tsdb: TsDb::new(),
+            events: EventLog::new(),
+            max_attempts: 40,
+        }
+    }
+
+    /// Execute every run of a trace in submission order, returning the
+    /// aggregate report. `runs` play the role of the real workload; the
+    /// predictor only ever sees what the monitoring pipeline recorded.
+    pub fn run_trace(&mut self, trace: &Trace) -> EngineReport {
+        for ty in trace.task_types() {
+            if let Some(mem) = trace.default_alloc(ty) {
+                self.predictor.prime(ty, mem);
+            }
+        }
+        let mut report = EngineReport::default();
+        for run in trace.all_runs_ordered() {
+            self.execute_run(run, &mut report);
+        }
+        report
+    }
+
+    fn execute_run(&mut self, run: &TaskRun, report: &mut EngineReport) {
+        let mut alloc = self.predictor.predict(&run.task_type, run.input_mib);
+        let node_max = self.cluster.node_max_mem();
+        self.events.push(EngineEvent::Submitted {
+            task_type: run.task_type.clone(),
+            seq: run.seq,
+            requested: MemMiB(alloc.max_value()),
+        });
+        let mut attempt = 1u32;
+        loop {
+            // Resource-manager admission: reserve the allocation's peak.
+            let want = MemMiB(alloc.max_value().min(node_max.0));
+            let reservation = match self.cluster.reserve(want) {
+                Some(r) => r,
+                None => {
+                    // No capacity: in a real cluster the task queues; in
+                    // this sequential engine the previous release always
+                    // frees capacity, so this only fires on oversized
+                    // requests. Count it and clamp to what fits.
+                    report.queued += 1;
+                    self.events.push(EngineEvent::Queued {
+                        task_type: run.task_type.clone(),
+                        seq: run.seq,
+                        requested: want,
+                    });
+                    let fallback = self.cluster.total_free().min(node_max);
+                    self.cluster
+                        .reserve(fallback)
+                        .expect("fallback reservation must fit")
+                }
+            };
+
+            report.attempts += 1;
+            let outcome = simulate_attempt(&run.series, &alloc, attempt);
+
+            // Monitoring: sample what the container actually used, up
+            // to the failure instant if the attempt died.
+            let horizon = match &outcome {
+                AttemptOutcome::Success { .. } => run.runtime.0,
+                AttemptOutcome::Failure { info, .. } => info.time_s,
+            };
+            let key = SeriesKey::mem(&run.task_type, run.seq);
+            if horizon > 0.0 && outcome.is_success() {
+                report.monitor_points += self
+                    .sampler
+                    .sample_run(&mut self.tsdb, &key, horizon, |t| run.series.value_at(t))
+                    as u64;
+            }
+
+            report.wastage += GbSeconds(MemMiB(outcome.wastage_mibs()).as_gb());
+            self.cluster.release(reservation);
+
+            match outcome {
+                AttemptOutcome::Success { .. } => {
+                    report.completed += 1;
+                    self.events.push(EngineEvent::Completed {
+                        task_type: run.task_type.clone(),
+                        seq: run.seq,
+                        attempts: attempt,
+                    });
+                    // Close the loop from the TSDB, not the generator.
+                    let observed = self.sampler.series_from_db(&self.tsdb, &key);
+                    let observed_run = TaskRun {
+                        task_type: run.task_type.clone(),
+                        input_mib: run.input_mib,
+                        runtime: observed.duration(),
+                        series: observed,
+                        seq: run.seq,
+                    };
+                    self.predictor.observe(&observed_run);
+                    return;
+                }
+                AttemptOutcome::Failure { info, .. } => {
+                    report.retries += 1;
+                    self.events.push(EngineEvent::Failed {
+                        task_type: run.task_type.clone(),
+                        seq: run.seq,
+                        attempt,
+                        time_s: info.time_s,
+                        used: MemMiB(info.used_mib),
+                        allocated: MemMiB(alloc.value_at(info.time_s)),
+                    });
+                    if attempt >= self.max_attempts {
+                        alloc = Allocation::Static(node_max);
+                    } else {
+                        alloc = self
+                            .predictor
+                            .on_failure(&run.task_type, run.input_mib, &alloc, &info);
+                    }
+                    attempt += 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use ksegments_core::predictors::default_config::DefaultConfigPredictor;
+    use ksegments_core::predictors::ksegments::{KSegmentsPredictor, RetryStrategy};
+    use ksegments_core::trace::UsageSeries;
+    use ksegments_core::units::Seconds;
+
+    fn toy_trace(n: usize) -> Trace {
+        let mut t = Trace::new();
+        t.set_default("w/t", MemMiB(1000.0));
+        for i in 0..n {
+            let input = 50.0 + 10.0 * i as f64;
+            let peak = 100.0 + input;
+            let samples: Vec<f64> = (0..8).map(|j| peak * (j + 1) as f64 / 8.0).collect();
+            t.push(TaskRun {
+                task_type: "w/t".into(),
+                input_mib: input,
+                runtime: Seconds(16.0),
+                series: UsageSeries::new(2.0, samples),
+                seq: i as u64,
+            });
+        }
+        t.sort();
+        t
+    }
+
+    #[test]
+    fn engine_completes_all_runs() {
+        let mut e = WorkflowEngine::new(DefaultConfigPredictor::new(), Cluster::paper_testbed());
+        let rep = e.run_trace(&toy_trace(20));
+        assert_eq!(rep.completed, 20);
+        assert_eq!(rep.retries, 0);
+        assert_eq!(rep.attempts, 20);
+        assert!(rep.wastage.0 > 0.0);
+        assert!(rep.monitor_points >= 20 * 8);
+    }
+
+    #[test]
+    fn monitoring_feeds_the_model() {
+        let mut e = WorkflowEngine::new(
+            KSegmentsPredictor::native(4, RetryStrategy::Selective),
+            Cluster::paper_testbed(),
+        );
+        let rep = e.run_trace(&toy_trace(30));
+        assert_eq!(rep.completed, 30);
+        // after enough observations the predictor must be dynamic
+        let alloc = e.predictor.predict("w/t", 200.0);
+        assert!(alloc.is_dynamic(), "predictor never left default mode");
+        // tsdb holds one mem series per completed run
+        assert_eq!(e.tsdb.run_ids("w/t", "mem_mib").len(), 30);
+    }
+
+    #[test]
+    fn retries_counted_and_recovered() {
+        // default primed far below real peaks -> first runs fail & retry
+        let mut trace = toy_trace(10);
+        trace.set_default("w/t", MemMiB(10.0));
+        let mut e = WorkflowEngine::new(DefaultConfigPredictor::new(), Cluster::paper_testbed());
+        let rep = e.run_trace(&trace);
+        assert_eq!(rep.completed, 10);
+        assert!(rep.retries > 0);
+        assert!(rep.attempts > 10);
+        assert!(rep.retry_rate() > 0.0);
+    }
+
+    #[test]
+    fn event_log_records_lifecycle() {
+        let mut trace = toy_trace(5);
+        trace.set_default("w/t", MemMiB(10.0)); // force failures
+        let mut e = WorkflowEngine::new(DefaultConfigPredictor::new(), Cluster::paper_testbed());
+        let rep = e.run_trace(&trace);
+        // one Submitted and one Completed per run
+        let subs = e.events.iter().filter(|ev| matches!(ev, EngineEvent::Submitted { .. })).count();
+        let comps = e.events.iter().filter(|ev| matches!(ev, EngineEvent::Completed { .. })).count();
+        assert_eq!(subs as u64, rep.completed);
+        assert_eq!(comps as u64, rep.completed);
+        // failures in the log match the retry counter
+        let fails = e.events.iter().filter(|ev| matches!(ev, EngineEvent::Failed { .. })).count();
+        assert_eq!(fails as u64, rep.retries);
+        assert!(!e.events.retried_runs().is_empty());
+        assert!(!e.events.failures_of("w/t").is_empty());
+    }
+
+    #[test]
+    fn cluster_is_clean_after_run() {
+        let mut e = WorkflowEngine::new(DefaultConfigPredictor::new(), Cluster::paper_testbed());
+        let _ = e.run_trace(&toy_trace(5));
+        assert_eq!(e.cluster.total_free(), e.cluster.node_max_mem());
+    }
+}

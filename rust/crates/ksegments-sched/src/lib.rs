@@ -1,0 +1,32 @@
+//! Scheduling layer of the ksegments workspace: what memory
+//! prediction buys a cluster, not just a single task.
+//!
+//! `ksegments-core` scores predictors in isolation; this crate puts
+//! them inside a shared cluster and measures the system-level
+//! consequences — packing density, queue waits, makespan, and how
+//! allocation mistakes ripple through dependency DAGs and node
+//! failures:
+//!
+//! * [`cluster`] — node specs and the reservation ledger.
+//! * [`engine`] — the discrete-event engine: placement, memory-usage
+//!   tracking against reservations, OOM kills, segment-boundary grow
+//!   requests, node loss/join/retire and preemption, emitting
+//!   [`engine::events::EngineEvent`]s.
+//! * [`sched`] — scheduling policies ([`sched::ReservationPolicy`]:
+//!   static-peak vs segment-wise), the trace/stream/DAG entry points
+//!   and the (policy × predictor × load) sweep grids.
+//! * [`throughput`] — rendered sweep tables for the CLI and reports.
+//! * [`telemetry_ext`] — maps engine events onto the core telemetry
+//!   sinks (the engine-aware half of run tracing).
+//!
+//! The `ksegments` facade re-exports these modules under their
+//! historical single-crate paths (`ksegments::sched`,
+//! `ksegments::engine`, `ksegments::cluster`,
+//! `ksegments::telemetry::trace_engine_event`,
+//! `ksegments::bench_harness::throughput`).
+
+pub mod cluster;
+pub mod engine;
+pub mod sched;
+pub mod telemetry_ext;
+pub mod throughput;

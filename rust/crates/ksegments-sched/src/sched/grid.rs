@@ -1,0 +1,636 @@
+//! Parallel scheduling sweeps on the same worker pool as the
+//! evaluation grid: [`SchedGrid`] over (policy × predictor × cluster
+//! size × arrival rate) for independent arrivals, [`DagGrid`] over
+//! (policy × predictor × cluster size × concurrent-workflow count) for
+//! dependency-gated workflow instances, and [`FailureGrid`] over
+//! (predictor × failure rate × autoscale lag) for the failure-domain
+//! adversity sweeps.
+//!
+//! All mirror [`ksegments_sim::parallel::EvalGrid`]: cells are
+//! enumerated in a canonical major order and executed via
+//! [`parallel_map`]; every cell builds a fresh predictor and a fresh
+//! cluster (and, for [`DagGrid`], regenerates its instances from the
+//! seed), so results are bit-identical for any worker count.
+
+use crate::cluster::NodeSpec;
+use crate::sched::{
+    schedule_trace, schedule_workflows, AutoscaleConfig, ReservationPolicy, SchedConfig,
+    SchedReport, WorkflowSource,
+};
+use ksegments_core::trace::Trace;
+use ksegments_core::units::Seconds;
+use ksegments_core::workload::WorkflowSpec;
+use ksegments_sim::parallel::{parallel_map, PredictorFactory};
+
+/// Index quadruple identifying one cell of a [`SchedGrid`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SchedCell {
+    pub policy_idx: usize,
+    pub method_idx: usize,
+    pub nodes_idx: usize,
+    pub arrival_idx: usize,
+}
+
+/// The sweep axes: reservation policies × predictor factories × node
+/// counts × mean inter-arrival gaps, over a shared set of traces.
+pub struct SchedGrid<'a> {
+    policies: Vec<ReservationPolicy>,
+    methods: Vec<PredictorFactory>,
+    traces: &'a [Trace],
+    node_counts: Vec<usize>,
+    interarrivals: Vec<f64>,
+    /// Template for per-cell configs (policy/nodes/interarrival are
+    /// overwritten per cell; node specs replicate `node_spec`).
+    base: SchedConfig,
+    node_spec: NodeSpec,
+}
+
+/// Results of a [`SchedGrid`] run, in [`SchedGrid::cells`] order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedGridResults {
+    pub cells: Vec<SchedCell>,
+    pub reports: Vec<SchedReport>,
+}
+
+impl SchedGridResults {
+    /// Report of one cell by axis indices.
+    pub fn report(
+        &self,
+        policy_idx: usize,
+        method_idx: usize,
+        nodes_idx: usize,
+        arrival_idx: usize,
+    ) -> Option<&SchedReport> {
+        self.cells
+            .iter()
+            .position(|c| {
+                c.policy_idx == policy_idx
+                    && c.method_idx == method_idx
+                    && c.nodes_idx == nodes_idx
+                    && c.arrival_idx == arrival_idx
+            })
+            .map(|i| &self.reports[i])
+    }
+}
+
+impl<'a> SchedGrid<'a> {
+    pub fn new(
+        policies: Vec<ReservationPolicy>,
+        methods: Vec<PredictorFactory>,
+        traces: &'a [Trace],
+        node_counts: Vec<usize>,
+        interarrivals: Vec<f64>,
+    ) -> Self {
+        assert!(!policies.is_empty(), "grid needs at least one policy");
+        assert!(!methods.is_empty(), "grid needs at least one predictor factory");
+        assert!(!traces.is_empty(), "grid needs at least one trace");
+        assert!(!node_counts.is_empty(), "grid needs at least one cluster size");
+        assert!(!interarrivals.is_empty(), "grid needs at least one arrival rate");
+        SchedGrid {
+            policies,
+            methods,
+            traces,
+            node_counts,
+            interarrivals,
+            base: SchedConfig::default(),
+            node_spec: NodeSpec::paper_testbed(),
+        }
+    }
+
+    /// Override the per-cell config template (seed, training fraction,
+    /// arrival determinism, ...) and the replicated node spec.
+    pub fn with_base(mut self, base: SchedConfig, node_spec: NodeSpec) -> Self {
+        self.base = base;
+        self.node_spec = node_spec;
+        self
+    }
+
+    pub fn n_cells(&self) -> usize {
+        self.policies.len() * self.methods.len() * self.node_counts.len() * self.interarrivals.len()
+    }
+
+    /// Cell enumeration in canonical order: policy-major, then method,
+    /// then cluster size, then arrival rate.
+    pub fn cells(&self) -> Vec<SchedCell> {
+        let mut out = Vec::with_capacity(self.n_cells());
+        for policy_idx in 0..self.policies.len() {
+            for method_idx in 0..self.methods.len() {
+                for nodes_idx in 0..self.node_counts.len() {
+                    for arrival_idx in 0..self.interarrivals.len() {
+                        out.push(SchedCell { policy_idx, method_idx, nodes_idx, arrival_idx });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn cell_config(&self, c: SchedCell) -> SchedConfig {
+        SchedConfig {
+            policy: self.policies[c.policy_idx],
+            nodes: vec![self.node_spec; self.node_counts[c.nodes_idx]],
+            mean_interarrival: Seconds(self.interarrivals[c.arrival_idx]),
+            ..self.base.clone()
+        }
+    }
+
+    /// Execute every cell on `workers` threads; per-trace reports are
+    /// merged in trace order within each cell.
+    pub fn run(&self, workers: usize) -> SchedGridResults {
+        let cells = self.cells();
+        let reports = parallel_map(cells.len(), workers, |i| {
+            let c = cells[i];
+            let cfg = self.cell_config(c);
+            SchedReport::merged(self.traces.iter().map(|trace| {
+                let mut predictor = (self.methods[c.method_idx])();
+                schedule_trace(trace, predictor.as_mut(), &cfg)
+            }))
+            .expect("at least one trace per cell")
+        });
+        SchedGridResults { cells, reports }
+    }
+}
+
+/// Index quadruple identifying one cell of a [`DagGrid`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DagCell {
+    pub policy_idx: usize,
+    pub method_idx: usize,
+    pub nodes_idx: usize,
+    pub instances_idx: usize,
+}
+
+/// Results of a [`DagGrid`] run, in [`DagGrid::cells`] order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DagGridResults {
+    pub cells: Vec<DagCell>,
+    pub reports: Vec<SchedReport>,
+}
+
+impl DagGridResults {
+    /// Report of one cell by axis indices.
+    pub fn report(
+        &self,
+        policy_idx: usize,
+        method_idx: usize,
+        nodes_idx: usize,
+        instances_idx: usize,
+    ) -> Option<&SchedReport> {
+        self.cells
+            .iter()
+            .position(|c| {
+                c.policy_idx == policy_idx
+                    && c.method_idx == method_idx
+                    && c.nodes_idx == nodes_idx
+                    && c.instances_idx == instances_idx
+            })
+            .map(|i| &self.reports[i])
+    }
+}
+
+/// The dependency-gated sweep: reservation policies × predictor
+/// factories × cluster sizes × **concurrent workflow instance
+/// counts**, all scheduling DAG executions of one [`WorkflowSpec`]
+/// through [`schedule_workflows`].
+pub struct DagGrid<'a> {
+    policies: Vec<ReservationPolicy>,
+    methods: Vec<PredictorFactory>,
+    wf: &'a WorkflowSpec,
+    node_counts: Vec<usize>,
+    instance_counts: Vec<usize>,
+    base: SchedConfig,
+    node_spec: NodeSpec,
+}
+
+impl<'a> DagGrid<'a> {
+    pub fn new(
+        policies: Vec<ReservationPolicy>,
+        methods: Vec<PredictorFactory>,
+        wf: &'a WorkflowSpec,
+        node_counts: Vec<usize>,
+        instance_counts: Vec<usize>,
+    ) -> Self {
+        assert!(!policies.is_empty(), "grid needs at least one policy");
+        assert!(!methods.is_empty(), "grid needs at least one predictor factory");
+        assert!(!node_counts.is_empty(), "grid needs at least one cluster size");
+        assert!(!instance_counts.is_empty(), "grid needs at least one instance count");
+        DagGrid {
+            policies,
+            methods,
+            wf,
+            node_counts,
+            instance_counts,
+            base: SchedConfig::default(),
+            node_spec: NodeSpec::paper_testbed(),
+        }
+    }
+
+    /// Override the per-cell config template (seed, arrival shape, ...)
+    /// and the replicated node spec.
+    pub fn with_base(mut self, base: SchedConfig, node_spec: NodeSpec) -> Self {
+        self.base = base;
+        self.node_spec = node_spec;
+        self
+    }
+
+    pub fn n_cells(&self) -> usize {
+        self.policies.len()
+            * self.methods.len()
+            * self.node_counts.len()
+            * self.instance_counts.len()
+    }
+
+    /// Canonical policy-major cell order (then method, cluster size,
+    /// instance count).
+    pub fn cells(&self) -> Vec<DagCell> {
+        let mut out = Vec::with_capacity(self.n_cells());
+        for policy_idx in 0..self.policies.len() {
+            for method_idx in 0..self.methods.len() {
+                for nodes_idx in 0..self.node_counts.len() {
+                    for instances_idx in 0..self.instance_counts.len() {
+                        out.push(DagCell { policy_idx, method_idx, nodes_idx, instances_idx });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Execute every cell on `workers` threads. Each cell regenerates
+    /// its [`WorkflowSource`] from `base.seed` — the instances of two
+    /// cells with equal instance counts are identical draws, so the
+    /// policy/method axes compare like against like.
+    pub fn run(&self, workers: usize) -> DagGridResults {
+        let cells = self.cells();
+        let reports = parallel_map(cells.len(), workers, |i| {
+            let c = cells[i];
+            let cfg = SchedConfig {
+                policy: self.policies[c.policy_idx],
+                nodes: vec![self.node_spec; self.node_counts[c.nodes_idx]],
+                ..self.base.clone()
+            };
+            let src =
+                WorkflowSource::from_spec(self.wf, cfg.seed, self.instance_counts[c.instances_idx]);
+            let mut predictor = (self.methods[c.method_idx])();
+            schedule_workflows(src, predictor.as_mut(), &cfg)
+        });
+        DagGridResults { cells, reports }
+    }
+}
+
+/// Index triple identifying one cell of a [`FailureGrid`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FailureCell {
+    pub method_idx: usize,
+    /// Index into the failure-rate axis (`fail_rates`).
+    pub rate_idx: usize,
+    /// Index into the autoscale-lag axis (`lags`).
+    pub lag_idx: usize,
+}
+
+/// The failure-domain sweep: predictor factories × node-failure rates
+/// × autoscale lags, at a fixed reservation policy. A rate of `0`
+/// disables injection (the control column); a lag of `None` disables
+/// the autoscaler (the fixed-roster control row).
+pub struct FailureGrid<'a> {
+    methods: Vec<PredictorFactory>,
+    traces: &'a [Trace],
+    /// Failures per second; `0.0` = injection off.
+    fail_rates: Vec<f64>,
+    /// Autoscaler provisioning lag in seconds; `None` = autoscaler off.
+    lags: Vec<Option<f64>>,
+    base: SchedConfig,
+    node_spec: NodeSpec,
+    n_nodes: usize,
+}
+
+/// Results of a [`FailureGrid`] run, in [`FailureGrid::cells`] order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FailureGridResults {
+    pub cells: Vec<FailureCell>,
+    pub reports: Vec<SchedReport>,
+}
+
+impl FailureGridResults {
+    /// Report of one cell by axis indices.
+    pub fn report(
+        &self,
+        method_idx: usize,
+        rate_idx: usize,
+        lag_idx: usize,
+    ) -> Option<&SchedReport> {
+        self.cells
+            .iter()
+            .position(|c| {
+                c.method_idx == method_idx && c.rate_idx == rate_idx && c.lag_idx == lag_idx
+            })
+            .map(|i| &self.reports[i])
+    }
+}
+
+impl<'a> FailureGrid<'a> {
+    pub fn new(
+        methods: Vec<PredictorFactory>,
+        traces: &'a [Trace],
+        fail_rates: Vec<f64>,
+        lags: Vec<Option<f64>>,
+    ) -> Self {
+        assert!(!methods.is_empty(), "grid needs at least one predictor factory");
+        assert!(!traces.is_empty(), "grid needs at least one trace");
+        assert!(!fail_rates.is_empty(), "grid needs at least one failure rate");
+        assert!(!lags.is_empty(), "grid needs at least one autoscale lag");
+        FailureGrid {
+            methods,
+            traces,
+            fail_rates,
+            lags,
+            base: SchedConfig::default(),
+            node_spec: NodeSpec::paper_testbed(),
+            n_nodes: 2,
+        }
+    }
+
+    /// Override the per-cell config template, node spec, and base
+    /// roster size.
+    pub fn with_base(mut self, base: SchedConfig, node_spec: NodeSpec, n_nodes: usize) -> Self {
+        self.base = base;
+        self.node_spec = node_spec;
+        self.n_nodes = n_nodes.max(1);
+        self
+    }
+
+    pub fn n_cells(&self) -> usize {
+        self.methods.len() * self.fail_rates.len() * self.lags.len()
+    }
+
+    /// Canonical method-major cell order (then rate, then lag).
+    pub fn cells(&self) -> Vec<FailureCell> {
+        let mut out = Vec::with_capacity(self.n_cells());
+        for method_idx in 0..self.methods.len() {
+            for rate_idx in 0..self.fail_rates.len() {
+                for lag_idx in 0..self.lags.len() {
+                    out.push(FailureCell { method_idx, rate_idx, lag_idx });
+                }
+            }
+        }
+        out
+    }
+
+    fn cell_config(&self, c: FailureCell) -> SchedConfig {
+        let rate = self.fail_rates[c.rate_idx];
+        SchedConfig {
+            nodes: vec![self.node_spec; self.n_nodes],
+            fail_mtbf: Seconds(if rate > 0.0 { 1.0 / rate } else { 0.0 }),
+            autoscale: self.lags[c.lag_idx]
+                .map(|lag| AutoscaleConfig { lag: Seconds(lag), ..AutoscaleConfig::default() }),
+            ..self.base.clone()
+        }
+    }
+
+    /// Execute every cell on `workers` threads; per-trace reports are
+    /// merged in trace order within each cell.
+    pub fn run(&self, workers: usize) -> FailureGridResults {
+        let cells = self.cells();
+        let reports = parallel_map(cells.len(), workers, |i| {
+            let c = cells[i];
+            let cfg = self.cell_config(c);
+            SchedReport::merged(self.traces.iter().map(|trace| {
+                let mut predictor = (self.methods[c.method_idx])();
+                schedule_trace(trace, predictor.as_mut(), &cfg)
+            }))
+            .expect("at least one trace per cell")
+        });
+        FailureGridResults { cells, reports }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use ksegments_core::predictors::default_config::DefaultConfigPredictor;
+    use ksegments_core::predictors::ppm::PpmPredictor;
+    use ksegments_core::trace::{TaskRun, UsageSeries};
+    use ksegments_core::units::MemMiB;
+
+    fn toy_trace(ty: &str, n: usize) -> Trace {
+        let mut t = Trace::new();
+        t.set_default(ty, MemMiB(2000.0));
+        for i in 0..n {
+            let input = 100.0 + 10.0 * i as f64;
+            let peak = 10.0 + input;
+            let samples: Vec<f64> = (0..10).map(|j| peak * (j + 1) as f64 / 10.0).collect();
+            t.push(TaskRun {
+                task_type: ty.to_string(),
+                input_mib: input,
+                runtime: Seconds(20.0),
+                series: UsageSeries::new(2.0, samples),
+                seq: i as u64,
+            });
+        }
+        t.sort();
+        t
+    }
+
+    fn toy_grid(traces: &[Trace]) -> SchedGrid<'_> {
+        let methods: Vec<PredictorFactory> = vec![
+            Box::new(|| Box::new(DefaultConfigPredictor::new())),
+            Box::new(|| Box::new(PpmPredictor::improved())),
+        ];
+        SchedGrid::new(
+            vec![ReservationPolicy::StaticPeak, ReservationPolicy::SegmentWise],
+            methods,
+            traces,
+            vec![1, 2],
+            vec![2.0, 8.0],
+        )
+    }
+
+    #[test]
+    fn cell_enumeration_is_policy_major() {
+        let traces = vec![toy_trace("a/x", 20)];
+        let grid = toy_grid(&traces);
+        let cells = grid.cells();
+        assert_eq!(cells.len(), 2 * 2 * 2 * 2);
+        assert_eq!(
+            cells[0],
+            SchedCell { policy_idx: 0, method_idx: 0, nodes_idx: 0, arrival_idx: 0 }
+        );
+        assert_eq!(
+            cells[1],
+            SchedCell { policy_idx: 0, method_idx: 0, nodes_idx: 0, arrival_idx: 1 }
+        );
+        assert_eq!(
+            cells[15],
+            SchedCell { policy_idx: 1, method_idx: 1, nodes_idx: 1, arrival_idx: 1 }
+        );
+    }
+
+    #[test]
+    fn grid_results_independent_of_worker_count() {
+        let traces = vec![toy_trace("a/x", 25), toy_trace("b/y", 25)];
+        let grid = toy_grid(&traces);
+        let seq = grid.run(1);
+        for workers in [2, 4] {
+            assert_eq!(grid.run(workers), seq, "workers={workers} diverged");
+        }
+    }
+
+    fn tiny_workflow() -> WorkflowSpec {
+        use ksegments_core::units::Seconds as S;
+        use ksegments_core::workload::{ProfileShape, TaskTypeSpec};
+        let t = |name: &str| TaskTypeSpec {
+            name: format!("w/{name}"),
+            profile: ProfileShape::RampUp { alpha: 1.0 },
+            rt_base: S(10.0),
+            rt_per_mib: 0.01,
+            peak_base: MemMiB(200.0),
+            peak_per_mib: 0.3,
+            noise_sigma: 0.1,
+            spike_prob: 0.0,
+            wiggle_sigma: 0.02,
+            input_mu: 5.0,
+            input_sigma: 0.4,
+            n_executions: 4,
+            default_mem: MemMiB(2048.0),
+        };
+        WorkflowSpec {
+            name: "w".into(),
+            tasks: vec![t("a"), t("b"), t("c")],
+            edges: vec![(0, 1), (0, 2)],
+        }
+    }
+
+    #[test]
+    fn dag_grid_enumerates_and_runs_deterministically() {
+        let wf = tiny_workflow();
+        let methods: Vec<PredictorFactory> = vec![
+            Box::new(|| Box::new(DefaultConfigPredictor::new())),
+            Box::new(|| Box::new(PpmPredictor::improved())),
+        ];
+        let grid = DagGrid::new(
+            vec![ReservationPolicy::StaticPeak, ReservationPolicy::SegmentWise],
+            methods,
+            &wf,
+            vec![1],
+            vec![1, 3],
+        )
+        .with_base(
+            SchedConfig { seed: 7, ..SchedConfig::default() },
+            NodeSpec { mem: MemMiB(4096.0), cores: 8 },
+        );
+        assert_eq!(grid.n_cells(), 2 * 2 * 1 * 2);
+        let cells = grid.cells();
+        assert_eq!(
+            cells[0],
+            DagCell { policy_idx: 0, method_idx: 0, nodes_idx: 0, instances_idx: 0 }
+        );
+        assert_eq!(
+            cells[7],
+            DagCell { policy_idx: 1, method_idx: 1, nodes_idx: 0, instances_idx: 1 }
+        );
+        let seq = grid.run(1);
+        for workers in [2, 4] {
+            assert_eq!(grid.run(workers), seq, "workers={workers} diverged");
+        }
+        // every cell completes all its workflow instances and tasks
+        for (c, rep) in seq.cells.iter().zip(&seq.reports) {
+            let n_inst = [1u64, 3][c.instances_idx];
+            assert_eq!(rep.workflows_submitted, n_inst, "cell {c:?}");
+            assert_eq!(rep.workflows_completed, n_inst, "cell {c:?}");
+            assert_eq!(rep.submitted, n_inst * 3, "cell {c:?}");
+            assert_eq!(rep.completed, rep.submitted, "cell {c:?}");
+        }
+        // axis lookup
+        let r = seq.report(1, 0, 0, 1).unwrap();
+        assert_eq!(r.policy, "segment-wise");
+        assert_eq!(r.workflows_completed, 3);
+        assert!(seq.report(9, 0, 0, 0).is_none());
+    }
+
+    #[test]
+    fn every_cell_schedules_every_task() {
+        let traces = vec![toy_trace("a/x", 25), toy_trace("b/y", 25)];
+        let grid = toy_grid(&traces);
+        let res = grid.run(2);
+        // training_frac 0.5 → 12 + 12 scored runs per cell (floor(25/2))
+        for rep in &res.reports {
+            assert_eq!(rep.submitted, 26);
+            assert_eq!(rep.completed, 26);
+        }
+        // cell lookup by axes
+        let r = res.report(1, 0, 1, 1).unwrap();
+        assert_eq!(r.policy, "segment-wise");
+        assert_eq!(r.n_nodes, 2);
+        assert_eq!(r.mean_interarrival_s, 8.0);
+        assert!(res.report(5, 0, 0, 0).is_none());
+    }
+
+    #[test]
+    fn failure_grid_cell_order_and_config_wiring() {
+        let traces = vec![toy_trace("a/x", 20)];
+        let methods: Vec<PredictorFactory> = vec![
+            Box::new(|| Box::new(DefaultConfigPredictor::new())),
+            Box::new(|| Box::new(PpmPredictor::improved())),
+        ];
+        let grid = FailureGrid::new(methods, &traces, vec![0.0, 0.1], vec![None, Some(7.0)]);
+        assert_eq!(grid.n_cells(), 2 * 2 * 2);
+        let cells = grid.cells();
+        assert_eq!(cells[0], FailureCell { method_idx: 0, rate_idx: 0, lag_idx: 0 });
+        assert_eq!(cells[1], FailureCell { method_idx: 0, rate_idx: 0, lag_idx: 1 });
+        assert_eq!(cells[7], FailureCell { method_idx: 1, rate_idx: 1, lag_idx: 1 });
+        // axis values reach the per-cell config: rate 0 / lag None are
+        // the controls, rate 0.1 → mtbf 10 s, lag Some(7) → autoscaler
+        let clean = grid.cell_config(cells[0]);
+        assert_eq!(clean.fail_mtbf, Seconds(0.0));
+        assert_eq!(clean.autoscale, None);
+        let harsh = grid.cell_config(cells[7]);
+        assert!((harsh.fail_mtbf.0 - 10.0).abs() < 1e-12);
+        let auto = harsh.autoscale.expect("autoscale wired through");
+        assert_eq!(auto.lag, Seconds(7.0));
+        assert_eq!(auto.queue_per_node, AutoscaleConfig::default().queue_per_node);
+        assert_eq!(auto.max_nodes, AutoscaleConfig::default().max_nodes);
+    }
+
+    #[test]
+    fn failure_grid_conserves_and_is_worker_independent() {
+        let traces = vec![toy_trace("a/x", 20), toy_trace("b/y", 20)];
+        let mut any_failures = false;
+        for seed in [11u64, 12, 13] {
+            let methods: Vec<PredictorFactory> =
+                vec![Box::new(|| Box::new(PpmPredictor::improved()))];
+            let grid = FailureGrid::new(methods, &traces, vec![0.0, 0.05], vec![None, Some(10.0)])
+                .with_base(
+                    SchedConfig { seed, fail_downtime: Seconds(5.0), ..SchedConfig::default() },
+                    NodeSpec { mem: MemMiB(4096.0), cores: 8 },
+                    2,
+                );
+            let seq = grid.run(1);
+            for workers in [4, 8] {
+                assert_eq!(grid.run(workers), seq, "seed={seed} workers={workers} diverged");
+            }
+            for (c, r) in seq.cells.iter().zip(&seq.reports) {
+                // every admission ends in exactly one outcome, even
+                // under injected node loss
+                assert_eq!(r.completed, r.submitted, "cell {c:?}");
+                assert_eq!(
+                    r.admitted,
+                    r.completed + r.oom_kills + r.grow_denials + r.preempted + r.node_lost,
+                    "cell {c:?}"
+                );
+                if c.rate_idx == 0 {
+                    assert_eq!(r.node_failures, 0, "control column saw failures: {c:?}");
+                    assert_eq!(r.node_lost, 0, "control column lost tasks: {c:?}");
+                } else {
+                    any_failures |= r.node_failures > 0;
+                }
+                if c.lag_idx == 0 {
+                    assert_eq!(r.nodes_added, 0, "autoscaler off but nodes added: {c:?}");
+                }
+            }
+            // axis lookup
+            assert!(seq.report(0, 1, 1).is_some());
+            assert!(seq.report(1, 0, 0).is_none());
+        }
+        assert!(any_failures, "no seed produced a node failure at mtbf 20s");
+    }
+}

@@ -1,0 +1,591 @@
+//! Scheduler-level metrics: what a cluster operator sees — makespan,
+//! queue waits, admission/kill counters, utilization, wastage.
+//!
+//! [`SchedReport`] merges like [`ksegments_core::wastage::MethodReport`]: the
+//! parallel grid runs one cell per (policy × predictor × cluster ×
+//! arrival × trace) and folds per-trace partials together in trace
+//! order. Counters and integrals add, makespan and peak utilization
+//! take the max, queue-wait samples concatenate. All derived
+//! statistics (mean/percentile waits, utilization, throughput) are
+//! therefore permutation-invariant up to float-addition reordering —
+//! locked down by the property tests in `tests/sched_integration.rs`.
+
+use ksegments_core::telemetry::Registry;
+use ksegments_core::units::{GbSeconds, Seconds};
+use ksegments_core::util::stats;
+use ksegments_core::util::stats::SortedSamples;
+
+/// Queue-wait histogram buckets (seconds) used by
+/// [`SchedReport::export_metrics`] — fixed so that partial registries
+/// from different runs always merge.
+pub const QUEUE_WAIT_BUCKETS_S: &[f64] = &[0.5, 1.0, 2.0, 5.0, 10.0, 30.0, 60.0, 120.0];
+
+/// An instance counts as a **straggler** when its achieved makespan
+/// exceeds this multiple of its critical-path length — it spent more
+/// time queued, retried or contended than actually computing.
+pub const STRAGGLER_FACTOR: f64 = 2.0;
+
+/// Aggregate result of scheduling one trace (or several merged traces)
+/// on a simulated cluster.
+///
+/// Accounting identities (asserted by tests):
+///
+/// * every scheduled task eventually leaves the system:
+///   `completed == submitted`;
+/// * every admitted attempt ends exactly one way:
+///   `admitted == completed + oom_kills + grow_denials + preempted + node_lost`;
+/// * every placement attempt either admits or rejects:
+///   `placement_attempts == admitted + rejected`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedReport {
+    /// Reservation policy name ("static-peak" / "segment-wise").
+    pub policy: String,
+    /// Predictor display name.
+    pub method: String,
+    /// Cluster size the cell ran with.
+    pub n_nodes: usize,
+    /// Mean inter-arrival time of the arrival stream (seconds).
+    pub mean_interarrival_s: f64,
+    /// Tasks submitted to the scheduler (the scored arrival stream).
+    pub submitted: u64,
+    /// Tasks that finished (every task does, via retry escalation).
+    pub completed: u64,
+    /// Successful placements (attempt starts).
+    pub admitted: u64,
+    /// Cluster-wide placement attempts that fit on no node.
+    pub rejected: u64,
+    /// Total placement attempts (`admitted + rejected`).
+    pub placement_attempts: u64,
+    /// Attempts killed by the OOM killer and requeued (ground-truth
+    /// usage exceeded the reservation before the attempt ended).
+    pub oom_kills: u64,
+    /// Attempts killed because a segment-boundary grow was denied
+    /// under contention and requeued with a full-peak reservation.
+    pub grow_denials: u64,
+    /// Attempts evicted by a higher-priority placement and requeued
+    /// **blamelessly** (same allocation, same attempt number).
+    pub preempted: u64,
+    /// Attempts killed because their node was lost; requeued
+    /// blamelessly like preemptions.
+    pub node_lost: u64,
+    /// Injected node-loss events (each takes one node down).
+    pub node_failures: u64,
+    /// Nodes the autoscaler brought into service (joins after lag).
+    pub nodes_added: u64,
+    /// Idle autoscaled nodes the autoscaler retired.
+    pub nodes_retired: u64,
+    /// Discrete events the engine processed — the denominator of the
+    /// scheduler events/s perf snapshot (`BENCH_sched.json`).
+    pub events_processed: u64,
+    /// Maximum number of concurrently running attempts — the direct
+    /// "how many tasks co-locate" packing signal.
+    pub peak_running: u64,
+    /// Time from first arrival epoch (t = 0) to the last completion.
+    pub makespan: Seconds,
+    /// Reserved-minus-used wastage over all attempts (failed attempts
+    /// waste their full reservation integral, as in [`ksegments_core::scoring`]).
+    pub total_wastage: GbSeconds,
+    /// Per-admission queue wait (seconds from enqueue to placement).
+    pub queue_waits: Vec<f64>,
+    /// Integral of reserved memory over time (GB·s).
+    pub reserved_integral_gbs: f64,
+    /// Integral of **up** cluster capacity over the run (GB·s) — the
+    /// utilization denominator. With a fixed, always-up roster this is
+    /// capacity × makespan; under failures and autoscaling the
+    /// denominator tracks the live roster.
+    pub capacity_integral_gbs: f64,
+    /// Peak of (reserved / capacity) over the run.
+    pub peak_util_frac: f64,
+    /// Workflow instances that arrived (0 = independent-arrivals mode;
+    /// every field below is empty/zero then).
+    pub workflows_submitted: u64,
+    /// Workflow instances whose last task finally completed.
+    pub workflows_completed: u64,
+    /// Per completed instance, in completion order: seconds from the
+    /// instance's arrival to its last task's final completion.
+    pub workflow_makespans: Vec<f64>,
+    /// Per completed instance (same order): critical-path length — the
+    /// longest runtime chain through its DAG, the retry-free
+    /// infinite-cluster lower bound on the achieved makespan.
+    pub workflow_critical_paths: Vec<f64>,
+    /// Per completed instance (same order): seconds from arrival to
+    /// the instance's **first** task completion.
+    pub workflow_first_completions: Vec<f64>,
+    /// Instances whose makespan exceeded [`STRAGGLER_FACTOR`] × their
+    /// critical path.
+    pub workflow_stragglers: u64,
+}
+
+impl SchedReport {
+    pub fn new(
+        policy: &str,
+        method: &str,
+        n_nodes: usize,
+        mean_interarrival_s: f64,
+    ) -> SchedReport {
+        SchedReport {
+            policy: policy.to_string(),
+            method: method.to_string(),
+            n_nodes,
+            mean_interarrival_s,
+            submitted: 0,
+            completed: 0,
+            admitted: 0,
+            rejected: 0,
+            placement_attempts: 0,
+            oom_kills: 0,
+            grow_denials: 0,
+            preempted: 0,
+            node_lost: 0,
+            node_failures: 0,
+            nodes_added: 0,
+            nodes_retired: 0,
+            events_processed: 0,
+            peak_running: 0,
+            makespan: Seconds::ZERO,
+            total_wastage: GbSeconds::ZERO,
+            queue_waits: Vec::new(),
+            reserved_integral_gbs: 0.0,
+            capacity_integral_gbs: 0.0,
+            peak_util_frac: 0.0,
+            workflows_submitted: 0,
+            workflows_completed: 0,
+            workflow_makespans: Vec::new(),
+            workflow_critical_paths: Vec::new(),
+            workflow_first_completions: Vec::new(),
+            workflow_stragglers: 0,
+        }
+    }
+
+    /// Mean queue wait per admission (seconds; 0 if nothing admitted).
+    pub fn mean_queue_wait_s(&self) -> f64 {
+        stats::mean(&self.queue_waits)
+    }
+
+    /// p-th percentile queue wait (seconds). Sorts per call — querying
+    /// several quantiles of one report should go through
+    /// [`Self::queue_wait_percentiles`] instead.
+    pub fn queue_wait_percentile_s(&self, p: f64) -> f64 {
+        stats::percentile(&self.queue_waits, p)
+    }
+
+    /// The queue-wait samples sorted **once** for repeated quantile
+    /// queries — what the summary line and the per-row throughput
+    /// tables use instead of re-sorting the full vector per call.
+    pub fn queue_wait_percentiles(&self) -> SortedSamples {
+        SortedSamples::new(&self.queue_waits)
+    }
+
+    /// Mean achieved workflow makespan (seconds; 0 without instances).
+    pub fn mean_workflow_makespan_s(&self) -> f64 {
+        stats::mean(&self.workflow_makespans)
+    }
+
+    /// Mean critical-path length across completed instances.
+    pub fn mean_critical_path_s(&self) -> f64 {
+        stats::mean(&self.workflow_critical_paths)
+    }
+
+    /// Mean of per-instance `makespan / critical path` — 1.0 means
+    /// every instance ran as fast as its DAG allows; the excess is
+    /// queueing, contention and retry propagation. 0 without instances.
+    pub fn critical_path_stretch(&self) -> f64 {
+        if self.workflow_makespans.is_empty() {
+            return 0.0;
+        }
+        let ratios: Vec<f64> = self
+            .workflow_makespans
+            .iter()
+            .zip(&self.workflow_critical_paths)
+            .filter(|(_, &cp)| cp > 0.0)
+            .map(|(&m, &cp)| m / cp)
+            .collect();
+        stats::mean(&ratios)
+    }
+
+    /// Mean time from instance arrival to its first task completion.
+    pub fn mean_time_to_first_completion_s(&self) -> f64 {
+        stats::mean(&self.workflow_first_completions)
+    }
+
+    /// Time-averaged cluster memory utilization in [0, 1].
+    pub fn utilization(&self) -> f64 {
+        if self.capacity_integral_gbs <= 0.0 {
+            0.0
+        } else {
+            self.reserved_integral_gbs / self.capacity_integral_gbs
+        }
+    }
+
+    /// Completed tasks per hour of makespan — the throughput headline.
+    pub fn throughput_per_hour(&self) -> f64 {
+        if self.makespan.0 <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 * 3600.0 / self.makespan.0
+        }
+    }
+
+    /// Fold another report of the **same configuration** into this one
+    /// (per-trace partials of one grid cell).
+    pub fn merge(&mut self, other: SchedReport) {
+        assert_eq!(self.policy, other.policy, "merging different policies");
+        assert_eq!(self.method, other.method, "merging different methods");
+        assert_eq!(self.n_nodes, other.n_nodes, "merging different cluster sizes");
+        assert!(
+            (self.mean_interarrival_s - other.mean_interarrival_s).abs() < 1e-12,
+            "merging different arrival rates"
+        );
+        self.submitted += other.submitted;
+        self.completed += other.completed;
+        self.admitted += other.admitted;
+        self.rejected += other.rejected;
+        self.placement_attempts += other.placement_attempts;
+        self.oom_kills += other.oom_kills;
+        self.grow_denials += other.grow_denials;
+        self.preempted += other.preempted;
+        self.node_lost += other.node_lost;
+        self.node_failures += other.node_failures;
+        self.nodes_added += other.nodes_added;
+        self.nodes_retired += other.nodes_retired;
+        self.events_processed += other.events_processed;
+        self.peak_running = self.peak_running.max(other.peak_running);
+        self.makespan = self.makespan.max(other.makespan);
+        self.total_wastage += other.total_wastage;
+        self.queue_waits.extend(other.queue_waits);
+        self.reserved_integral_gbs += other.reserved_integral_gbs;
+        self.capacity_integral_gbs += other.capacity_integral_gbs;
+        self.peak_util_frac = self.peak_util_frac.max(other.peak_util_frac);
+        self.workflows_submitted += other.workflows_submitted;
+        self.workflows_completed += other.workflows_completed;
+        self.workflow_makespans.extend(other.workflow_makespans);
+        self.workflow_critical_paths.extend(other.workflow_critical_paths);
+        self.workflow_first_completions.extend(other.workflow_first_completions);
+        self.workflow_stragglers += other.workflow_stragglers;
+    }
+
+    /// Merge an ordered sequence of per-trace reports; `None` for an
+    /// empty sequence.
+    pub fn merged(reports: impl IntoIterator<Item = SchedReport>) -> Option<SchedReport> {
+        let mut it = reports.into_iter();
+        let mut acc = it.next()?;
+        for rep in it {
+            acc.merge(rep);
+        }
+        Some(acc)
+    }
+
+    /// Export the report into a metrics [`Registry`] under
+    /// `{policy,method}` labels — counters for the accounting
+    /// identities, gauges for the derived ratios and a fixed-bucket
+    /// queue-wait histogram ([`QUEUE_WAIT_BUCKETS_S`]). Purely
+    /// observational: reads `&self`, writes only into `reg`.
+    pub fn export_metrics(&self, reg: &mut Registry) {
+        let l = format!("{{policy=\"{}\",method=\"{}\"}}", self.policy, self.method);
+        for (name, v) in [
+            ("sched_submitted", self.submitted),
+            ("sched_completed", self.completed),
+            ("sched_admitted", self.admitted),
+            ("sched_rejected", self.rejected),
+            ("sched_placement_attempts", self.placement_attempts),
+            ("sched_oom_kills", self.oom_kills),
+            ("sched_grow_denials", self.grow_denials),
+            ("sched_preempted", self.preempted),
+            ("sched_node_lost", self.node_lost),
+            ("sched_node_failures", self.node_failures),
+            ("sched_nodes_added", self.nodes_added),
+            ("sched_nodes_retired", self.nodes_retired),
+            ("sched_events_processed", self.events_processed),
+            ("sched_workflows_submitted", self.workflows_submitted),
+            ("sched_workflows_completed", self.workflows_completed),
+            ("sched_workflow_stragglers", self.workflow_stragglers),
+        ] {
+            reg.counter_add(&format!("{name}{l}"), v);
+        }
+        for (name, v) in [
+            ("sched_makespan_s", self.makespan.0),
+            ("sched_utilization_frac", self.utilization()),
+            ("sched_peak_util_frac", self.peak_util_frac),
+            ("sched_peak_running", self.peak_running as f64),
+            ("sched_throughput_per_hour", self.throughput_per_hour()),
+            ("sched_total_wastage_gbs", self.total_wastage.0),
+        ] {
+            reg.gauge_set(&format!("{name}{l}"), v);
+        }
+        for &w in &self.queue_waits {
+            reg.observe(&format!("sched_queue_wait_s{l}"), QUEUE_WAIT_BUCKETS_S, w);
+        }
+    }
+
+    /// One-line operator summary (plus a workflow line in DAG mode).
+    pub fn summary(&self) -> String {
+        let waits = self.queue_wait_percentiles();
+        let mut s = format!(
+            "{} · {} · {} nodes · ia={:.1}s: {}/{} done, makespan {}, \
+             util {:.1}% (peak {:.1}%), peak-concurrent {}, wait mean {:.1}s p95 {:.1}s, \
+             {} oom, {} grow-denied, {} preempted, {} node-lost, {} rejected, wastage {}",
+            self.policy,
+            self.method,
+            self.n_nodes,
+            self.mean_interarrival_s,
+            self.completed,
+            self.submitted,
+            self.makespan,
+            100.0 * self.utilization(),
+            100.0 * self.peak_util_frac,
+            self.peak_running,
+            self.mean_queue_wait_s(),
+            waits.percentile(95.0),
+            self.oom_kills,
+            self.grow_denials,
+            self.preempted,
+            self.node_lost,
+            self.rejected,
+            self.total_wastage,
+        );
+        if self.node_failures > 0 || self.nodes_added > 0 || self.nodes_retired > 0 {
+            s.push_str(&format!(
+                "\n  cluster: {} node failure(s), {} node(s) autoscaled in, {} retired",
+                self.node_failures, self.nodes_added, self.nodes_retired,
+            ));
+        }
+        if self.workflows_submitted > 0 {
+            let spans = SortedSamples::new(&self.workflow_makespans);
+            s.push_str(&format!(
+                "\n  workflows: {}/{} done, wf-makespan mean {:.1}s p95 {:.1}s \
+                 (critical path mean {:.1}s, stretch x{:.2}), first-completion mean {:.1}s, \
+                 {} straggler(s)",
+                self.workflows_completed,
+                self.workflows_submitted,
+                self.mean_workflow_makespan_s(),
+                spans.percentile(95.0),
+                self.mean_critical_path_s(),
+                self.critical_path_stretch(),
+                self.mean_time_to_first_completion_s(),
+                self.workflow_stragglers,
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rep(waits: &[f64], completed: u64, makespan: f64) -> SchedReport {
+        let mut r = SchedReport::new("segment-wise", "m", 4, 5.0);
+        r.submitted = completed;
+        r.completed = completed;
+        r.admitted = completed;
+        r.placement_attempts = completed;
+        r.makespan = Seconds(makespan);
+        r.queue_waits = waits.to_vec();
+        r.reserved_integral_gbs = 10.0;
+        r.capacity_integral_gbs = 40.0;
+        r.peak_util_frac = 0.5;
+        r
+    }
+
+    #[test]
+    fn derived_statistics() {
+        let r = rep(&[0.0, 2.0, 4.0], 30, 3600.0);
+        assert_eq!(r.mean_queue_wait_s(), 2.0);
+        assert_eq!(r.utilization(), 0.25);
+        assert_eq!(r.throughput_per_hour(), 30.0);
+        assert_eq!(r.queue_wait_percentile_s(100.0), 4.0);
+    }
+
+    #[test]
+    fn empty_report_is_zero() {
+        // Satellite bugfix: every ratio metric on a degenerate report
+        // must be exactly 0.0 — never NaN/inf from a 0/0.
+        let r = SchedReport::new("static-peak", "m", 1, 1.0);
+        assert_eq!(r.mean_queue_wait_s(), 0.0);
+        assert_eq!(r.utilization(), 0.0);
+        assert_eq!(r.throughput_per_hour(), 0.0);
+        assert_eq!(r.critical_path_stretch(), 0.0);
+        assert_eq!(r.mean_workflow_makespan_s(), 0.0);
+        assert_eq!(r.queue_wait_percentile_s(95.0), 0.0);
+        assert!(r.summary().contains("0/0 done"), "empty summary must render");
+    }
+
+    #[test]
+    fn zero_makespan_merge_stays_finite() {
+        // Satellite bugfix: merging zero-duration partials (a trace
+        // whose every cell was empty) keeps makespan 0 and every
+        // derived ratio 0.0 — the 0-completed/0-makespan division is
+        // guarded, not propagated.
+        let a = SchedReport::new("segment-wise", "m", 2, 1.0);
+        let b = SchedReport::new("segment-wise", "m", 2, 1.0);
+        let m = SchedReport::merged(vec![a, b]).unwrap();
+        assert_eq!(m.makespan, Seconds::ZERO);
+        assert_eq!(m.throughput_per_hour(), 0.0);
+        assert_eq!(m.utilization(), 0.0);
+        assert_eq!(m.critical_path_stretch(), 0.0);
+        assert!(m.throughput_per_hour().is_finite());
+        assert!(m.summary().contains("makespan"), "zero-makespan summary must render");
+
+        // a zero-makespan partial merged into a real one is harmless
+        let mut real = rep(&[1.0], 5, 50.0);
+        real.merge(SchedReport::new("segment-wise", "m", 4, 5.0));
+        assert_eq!(real.makespan, Seconds(50.0));
+        assert_eq!(real.throughput_per_hour(), 360.0);
+    }
+
+    #[test]
+    fn zero_critical_path_is_skipped_not_divided() {
+        // An instance with cp == 0 must not poison the stretch mean.
+        let r = wf_rep(&[100.0, 200.0], &[0.0, 100.0], 0);
+        assert!((r.critical_path_stretch() - 2.0).abs() < 1e-12);
+        let all_zero = wf_rep(&[100.0], &[0.0], 0);
+        assert_eq!(all_zero.critical_path_stretch(), 0.0);
+        assert!(all_zero.critical_path_stretch().is_finite());
+    }
+
+    #[test]
+    fn failure_domain_counters_merge_and_render() {
+        let mut a = rep(&[1.0], 10, 100.0);
+        a.preempted = 2;
+        a.node_lost = 1;
+        a.node_failures = 1;
+        a.events_processed = 50;
+        let mut b = rep(&[2.0], 5, 80.0);
+        b.preempted = 1;
+        b.node_lost = 3;
+        b.node_failures = 2;
+        b.nodes_added = 1;
+        b.nodes_retired = 1;
+        b.events_processed = 30;
+        a.merge(b);
+        assert_eq!(a.preempted, 3);
+        assert_eq!(a.node_lost, 4);
+        assert_eq!(a.node_failures, 3);
+        assert_eq!(a.nodes_added, 1);
+        assert_eq!(a.nodes_retired, 1);
+        assert_eq!(a.events_processed, 80);
+        let s = a.summary();
+        assert!(s.contains("3 preempted"), "{s}");
+        assert!(s.contains("4 node-lost"), "{s}");
+        assert!(s.contains("3 node failure(s)"), "{s}");
+
+        // without failure-domain activity the cluster line is absent
+        let plain = rep(&[1.0], 5, 50.0).summary();
+        assert!(!plain.contains("cluster:"), "{plain}");
+    }
+
+    #[test]
+    fn merge_adds_counters_and_maxes_extremes() {
+        let mut a = rep(&[1.0], 10, 100.0);
+        let mut b = rep(&[3.0], 20, 250.0);
+        b.peak_util_frac = 0.9;
+        b.oom_kills = 2;
+        a.merge(b);
+        assert_eq!(a.completed, 30);
+        assert_eq!(a.oom_kills, 2);
+        assert_eq!(a.makespan, Seconds(250.0));
+        assert_eq!(a.peak_util_frac, 0.9);
+        assert_eq!(a.queue_waits, vec![1.0, 3.0]);
+        assert_eq!(a.reserved_integral_gbs, 20.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "merging different policies")]
+    fn merge_rejects_mismatched_policy() {
+        let mut a = rep(&[], 1, 1.0);
+        let mut b = rep(&[], 1, 1.0);
+        b.policy = "static-peak".into();
+        a.merge(b);
+    }
+
+    #[test]
+    fn merged_over_sequence() {
+        assert!(SchedReport::merged(std::iter::empty()).is_none());
+        let m = SchedReport::merged(vec![rep(&[1.0], 1, 10.0), rep(&[2.0], 2, 5.0)]).unwrap();
+        assert_eq!(m.completed, 3);
+        assert_eq!(m.makespan, Seconds(10.0));
+    }
+
+    #[test]
+    fn summary_renders() {
+        let s = rep(&[1.0], 5, 50.0).summary();
+        assert!(s.contains("segment-wise"));
+        assert!(s.contains("5/5 done"));
+        assert!(!s.contains("workflows:"), "no workflow line without instances");
+    }
+
+    #[test]
+    fn queue_wait_percentiles_sort_once_and_agree() {
+        let r = rep(&[4.0, 0.0, 2.0, 6.0], 4, 10.0);
+        let sorted = r.queue_wait_percentiles();
+        for q in [0.0, 25.0, 50.0, 95.0, 100.0] {
+            assert_eq!(sorted.percentile(q), r.queue_wait_percentile_s(q), "q={q}");
+        }
+        // the interpolated even-length median
+        assert_eq!(sorted.percentile(50.0), 3.0);
+    }
+
+    fn wf_rep(makespans: &[f64], cps: &[f64], stragglers: u64) -> SchedReport {
+        let mut r = rep(&[], makespans.len() as u64, 100.0);
+        r.workflows_submitted = makespans.len() as u64;
+        r.workflows_completed = makespans.len() as u64;
+        r.workflow_makespans = makespans.to_vec();
+        r.workflow_critical_paths = cps.to_vec();
+        r.workflow_first_completions = makespans.iter().map(|m| m / 2.0).collect();
+        r.workflow_stragglers = stragglers;
+        r
+    }
+
+    #[test]
+    fn workflow_metrics_derive_and_merge() {
+        let r = wf_rep(&[100.0, 300.0], &[100.0, 100.0], 1);
+        assert_eq!(r.mean_workflow_makespan_s(), 200.0);
+        assert_eq!(r.mean_critical_path_s(), 100.0);
+        assert!((r.critical_path_stretch() - 2.0).abs() < 1e-12);
+        assert_eq!(r.mean_time_to_first_completion_s(), 100.0);
+        let s = r.summary();
+        assert!(s.contains("workflows: 2/2 done"), "{s}");
+        assert!(s.contains("1 straggler"), "{s}");
+
+        let mut a = wf_rep(&[100.0], &[50.0], 1);
+        a.merge(wf_rep(&[40.0], &[40.0], 0));
+        assert_eq!(a.workflows_submitted, 2);
+        assert_eq!(a.workflows_completed, 2);
+        assert_eq!(a.workflow_makespans, vec![100.0, 40.0]);
+        assert_eq!(a.workflow_critical_paths, vec![50.0, 40.0]);
+        assert_eq!(a.workflow_stragglers, 1);
+    }
+
+    #[test]
+    fn export_metrics_labels_policy_and_method() {
+        let mut r = rep(&[0.4, 3.0, 200.0], 30, 3600.0);
+        r.oom_kills = 2;
+        let mut reg = Registry::new();
+        r.export_metrics(&mut reg);
+        let l = "{policy=\"segment-wise\",method=\"m\"}";
+        assert_eq!(reg.counter(&format!("sched_completed{l}")), 30);
+        assert_eq!(reg.counter(&format!("sched_oom_kills{l}")), 2);
+        assert_eq!(reg.gauge(&format!("sched_makespan_s{l}")), Some(3600.0));
+        assert_eq!(reg.gauge(&format!("sched_utilization_frac{l}")), Some(0.25));
+        let h = reg.histogram(&format!("sched_queue_wait_s{l}")).expect("wait histogram");
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.bounds(), QUEUE_WAIT_BUCKETS_S);
+        // 0.4 → le=0.5 bucket, 3.0 → le=5, 200.0 → overflow
+        assert_eq!(h.counts()[0], 1);
+        assert_eq!(*h.counts().last().unwrap(), 1);
+        // exposition renders the spliced-label histogram
+        let prom = reg.to_prometheus();
+        assert!(
+            prom.contains("sched_queue_wait_s_bucket{policy=\"segment-wise\",method=\"m\",le=\"0.5\"} 1"),
+            "{prom}"
+        );
+    }
+
+    #[test]
+    fn empty_workflow_metrics_are_zero() {
+        let r = SchedReport::new("static-peak", "m", 1, 1.0);
+        assert_eq!(r.mean_workflow_makespan_s(), 0.0);
+        assert_eq!(r.critical_path_stretch(), 0.0);
+        assert_eq!(r.mean_time_to_first_completion_s(), 0.0);
+    }
+}

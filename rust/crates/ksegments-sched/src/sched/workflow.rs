@@ -1,0 +1,343 @@
+//! Dependency-gated workflow instances for the cluster scheduler.
+//!
+//! The paper's cluster argument is about a *workflow engine*: a task
+//! is not an independent arrival, it becomes runnable only when its
+//! parents in the DAG have produced their outputs. [`WorkflowSource`]
+//! materializes that structure for the discrete-event engine: N
+//! concurrent executions ("instances") of a workflow, each carrying
+//! one run per task plus the parent edges the engine gates releases
+//! on. An OOM-killed parent retries before it counts as completed, so
+//! memory underprediction delays everything downstream of it — the
+//! critical-path propagation an independent-arrivals model hides.
+//!
+//! Two constructors:
+//!
+//! * [`WorkflowSource::from_spec`] — synthesize instances of a
+//!   [`WorkflowSpec`] (the paper's eager/sarek catalogs), one
+//!   execution of every task type per instance, deterministically from
+//!   a seed via the same [`ksegments_core::workload::synth_execution`]
+//!   distributions the trace generator uses;
+//! * [`WorkflowSource::from_trace`] — infer a DAG from an ingested
+//!   trace (e.g. a Nextflow `trace.txt` via
+//!   `read_nextflow_dir` in the serve layer): task types are ranked into
+//!   process levels by their first submission (`seq`), instance `i`
+//!   takes each type's `i`-th run, and every task depends on the
+//!   previous level present in its instance — a conservative
+//!   chain-of-levels reading of the pipeline's process order.
+
+use ksegments_core::rng::Rng;
+use ksegments_core::trace::{TaskRun, Trace};
+use ksegments_core::units::MemMiB;
+use ksegments_core::workload::{synth_execution, WorkflowSpec};
+
+/// One task of a workflow instance: its (ground-truth) run plus the
+/// indices of the tasks in the **same instance** that must complete
+/// before it is released.
+#[derive(Debug, Clone)]
+pub struct DagTask {
+    pub run: TaskRun,
+    pub parents: Vec<usize>,
+}
+
+/// One execution of a whole workflow: a DAG of [`DagTask`]s.
+#[derive(Debug, Clone)]
+pub struct WorkflowInstance {
+    /// Workflow name (shared by all instances of a source).
+    pub name: String,
+    /// Instance ordinal (0-based submission order).
+    pub index: u64,
+    pub tasks: Vec<DagTask>,
+}
+
+impl WorkflowInstance {
+    /// Topological order over the parent edges (Kahn). Panics on a
+    /// cycle — instances are built from validated specs or from
+    /// by-construction-acyclic level chains.
+    fn topo_order(&self) -> Vec<usize> {
+        let n = self.tasks.len();
+        let mut indeg = vec![0usize; n];
+        let mut children: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (t, task) in self.tasks.iter().enumerate() {
+            for &p in &task.parents {
+                assert!(p < n, "parent index out of range");
+                children[p].push(t);
+                indeg[t] += 1;
+            }
+        }
+        let mut order: Vec<usize> = Vec::with_capacity(n);
+        let mut ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        while let Some(u) = ready.pop() {
+            order.push(u);
+            for &v in &children[u] {
+                indeg[v] -= 1;
+                if indeg[v] == 0 {
+                    ready.push(v);
+                }
+            }
+        }
+        assert_eq!(order.len(), n, "workflow instance '{}' has a cycle", self.name);
+        order
+    }
+
+    /// Critical-path length (seconds): the longest chain of task
+    /// runtimes through the DAG — the instance's makespan lower bound
+    /// on an infinite, retry-free cluster. The achieved makespan is
+    /// compared against this in [`super::SchedReport`].
+    pub fn critical_path_s(&self) -> f64 {
+        let mut finish = vec![0.0f64; self.tasks.len()];
+        for t in self.topo_order() {
+            let ready_at = self.tasks[t]
+                .parents
+                .iter()
+                .map(|&p| finish[p])
+                .fold(0.0f64, f64::max);
+            finish[t] = ready_at + self.tasks[t].run.runtime.0;
+        }
+        finish.iter().copied().fold(0.0, f64::max)
+    }
+}
+
+/// N concurrent instances of a workflow, plus the developer defaults
+/// the predictor is primed with — the DAG-mode arrival stream of
+/// [`super::schedule_workflows`].
+#[derive(Debug, Clone)]
+pub struct WorkflowSource {
+    pub instances: Vec<WorkflowInstance>,
+    defaults: Vec<(String, MemMiB)>,
+}
+
+impl WorkflowSource {
+    /// Synthesize `n_instances` executions of `wf`, deterministically
+    /// from `seed`. Task `t` of instance `i` gets the globally unique
+    /// `seq = i · n_tasks + t`; the rng stream is forked per
+    /// `(task type, instance)` so instances are independent draws from
+    /// the same per-type distributions as [`ksegments_core::workload::generate_workflow_trace`].
+    pub fn from_spec(wf: &WorkflowSpec, seed: u64, n_instances: usize) -> WorkflowSource {
+        wf.validate().expect("invalid workflow spec");
+        let parents = wf.parents();
+        // distinct fork label from the trace generator: DAG instances
+        // are a different experiment axis, not a trace prefix
+        let root = Rng::new(seed).fork(&wf.name).fork("dag-instances");
+        let n_tasks = wf.tasks.len();
+        let instances = (0..n_instances)
+            .map(|i| {
+                let tasks = wf
+                    .tasks
+                    .iter()
+                    .enumerate()
+                    .map(|(t, spec)| {
+                        let mut rng = root.fork(&format!("{}#{}", spec.name, i));
+                        let seq = (i * n_tasks + t) as u64;
+                        let run = synth_execution(spec, &mut rng, seq);
+                        DagTask { run, parents: parents[t].clone() }
+                    })
+                    .collect();
+                WorkflowInstance { name: wf.name.clone(), index: i as u64, tasks }
+            })
+            .collect();
+        let defaults = wf
+            .tasks
+            .iter()
+            .map(|t| (t.name.clone(), t.default_mem))
+            .collect();
+        WorkflowSource { instances, defaults }
+    }
+
+    /// Infer a chain-of-levels DAG from an ingested trace: task types
+    /// are ranked by the `seq` of their first run (Nextflow submits a
+    /// process's first task only once its inputs exist, so first
+    /// submission order is a topological order of the process graph);
+    /// instance `i` takes the `i`-th run of every type that has one,
+    /// and each task's parent is the task from the nearest earlier
+    /// level present in the same instance. `n_instances` is capped at
+    /// the deepest type's run count.
+    pub fn from_trace(name: &str, trace: &Trace, n_instances: usize) -> WorkflowSource {
+        // types in first-submission order
+        let mut levels: Vec<(u64, &str)> = trace
+            .task_types()
+            .filter_map(|ty| trace.runs_of(ty).iter().map(|r| r.seq).min().map(|s| (s, ty)))
+            .collect();
+        levels.sort_unstable();
+        let max_runs = levels
+            .iter()
+            .map(|(_, ty)| trace.runs_of(ty).len())
+            .max()
+            .unwrap_or(0);
+        let n_instances = n_instances.min(max_runs);
+        let n_tasks = levels.len();
+        let mut instances = Vec::with_capacity(n_instances);
+        for i in 0..n_instances {
+            let mut tasks: Vec<DagTask> = Vec::new();
+            for (l, &(_, ty)) in levels.iter().enumerate() {
+                let runs = trace.runs_of(ty);
+                let Some(run) = runs.get(i) else { continue };
+                let mut run = run.clone();
+                // re-key seq so it is globally unique across instances
+                run.seq = (i * n_tasks + l) as u64;
+                // chain: depend on the previous level present in this
+                // instance (roots when this is the first one)
+                let parents = if tasks.is_empty() { vec![] } else { vec![tasks.len() - 1] };
+                tasks.push(DagTask { run, parents });
+            }
+            instances.push(WorkflowInstance { name: name.to_string(), index: i as u64, tasks });
+        }
+        let defaults = trace
+            .task_types()
+            .filter_map(|ty| trace.default_alloc(ty).map(|m| (ty.to_string(), m)))
+            .collect();
+        WorkflowSource { instances, defaults }
+    }
+
+    /// Assemble a source from hand-built instances — custom DAGs,
+    /// oracle tests, or engine integrations that already know their
+    /// dependency structure.
+    pub fn from_instances(
+        instances: Vec<WorkflowInstance>,
+        defaults: Vec<(String, MemMiB)>,
+    ) -> WorkflowSource {
+        WorkflowSource { instances, defaults }
+    }
+
+    /// Developer defaults the scheduler primes the predictor with.
+    pub fn defaults(&self) -> &[(String, MemMiB)] {
+        &self.defaults
+    }
+
+    pub fn n_instances(&self) -> usize {
+        self.instances.len()
+    }
+
+    /// Total tasks across all instances.
+    pub fn n_tasks(&self) -> usize {
+        self.instances.iter().map(|i| i.tasks.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use ksegments_core::trace::UsageSeries;
+    use ksegments_core::units::Seconds;
+    use ksegments_core::workload::eager_workflow;
+
+    #[test]
+    fn from_spec_is_deterministic_and_complete() {
+        let wf = eager_workflow();
+        let a = WorkflowSource::from_spec(&wf, 42, 3);
+        let b = WorkflowSource::from_spec(&wf, 42, 3);
+        assert_eq!(a.n_instances(), 3);
+        assert_eq!(a.n_tasks(), 3 * wf.tasks.len());
+        assert_eq!(a.defaults().len(), wf.tasks.len());
+        for (ia, ib) in a.instances.iter().zip(&b.instances) {
+            assert_eq!(ia.tasks.len(), ib.tasks.len());
+            for (ta, tb) in ia.tasks.iter().zip(&ib.tasks) {
+                assert_eq!(ta.run, tb.run);
+                assert_eq!(ta.parents, tb.parents);
+            }
+        }
+        // instances draw different executions
+        assert_ne!(
+            a.instances[0].tasks[0].run.input_mib,
+            a.instances[1].tasks[0].run.input_mib
+        );
+        // seqs are globally unique and dense
+        let mut seqs: Vec<u64> = a
+            .instances
+            .iter()
+            .flat_map(|i| i.tasks.iter().map(|t| t.run.seq))
+            .collect();
+        seqs.sort_unstable();
+        assert_eq!(seqs, (0..a.n_tasks() as u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn critical_path_of_diamond() {
+        fn task(rt: f64, parents: Vec<usize>) -> DagTask {
+            DagTask {
+                run: TaskRun {
+                    task_type: "w/t".into(),
+                    input_mib: 1.0,
+                    runtime: Seconds(rt),
+                    series: UsageSeries::new(rt, vec![10.0]),
+                    seq: 0,
+                },
+                parents,
+            }
+        }
+        let inst = WorkflowInstance {
+            name: "w".into(),
+            index: 0,
+            tasks: vec![
+                task(10.0, vec![]),
+                task(5.0, vec![0]),
+                task(20.0, vec![0]),
+                task(1.0, vec![1, 2]),
+            ],
+        };
+        // longest chain: 10 + 20 + 1
+        assert!((inst.critical_path_s() - 31.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "cycle")]
+    fn cyclic_instance_panics() {
+        let run = TaskRun {
+            task_type: "w/t".into(),
+            input_mib: 1.0,
+            runtime: Seconds(1.0),
+            series: UsageSeries::new(1.0, vec![1.0]),
+            seq: 0,
+        };
+        let inst = WorkflowInstance {
+            name: "w".into(),
+            index: 0,
+            tasks: vec![
+                DagTask { run: run.clone(), parents: vec![1] },
+                DagTask { run, parents: vec![0] },
+            ],
+        };
+        inst.critical_path_s();
+    }
+
+    #[test]
+    fn from_trace_builds_level_chain() {
+        let mut trace = Trace::new();
+        trace.set_default("A", MemMiB(1000.0));
+        // A first (seqs 0,2), then B (seqs 1,3), C has a single run
+        for (ty, seq) in [("A", 0u64), ("B", 1), ("A", 2), ("B", 3), ("C", 4)] {
+            trace.push(TaskRun {
+                task_type: ty.into(),
+                input_mib: 1.0,
+                runtime: Seconds(4.0),
+                series: UsageSeries::new(2.0, vec![50.0, 100.0]),
+                seq,
+            });
+        }
+        trace.sort();
+        let src = WorkflowSource::from_trace("nf", &trace, 5);
+        // capped at the deepest type's run count (A and B have 2)
+        assert_eq!(src.n_instances(), 2);
+        let i0 = &src.instances[0];
+        assert_eq!(i0.tasks.len(), 3, "instance 0 has A, B and C");
+        assert_eq!(i0.tasks[0].run.task_type, "A");
+        assert_eq!(i0.tasks[0].parents, Vec::<usize>::new());
+        assert_eq!(i0.tasks[1].run.task_type, "B");
+        assert_eq!(i0.tasks[1].parents, vec![0]);
+        assert_eq!(i0.tasks[2].run.task_type, "C");
+        assert_eq!(i0.tasks[2].parents, vec![1]);
+        // instance 1 misses C; B still chains to A
+        let i1 = &src.instances[1];
+        assert_eq!(i1.tasks.len(), 2);
+        assert_eq!(i1.tasks[1].parents, vec![0]);
+        // seqs unique across the source
+        let mut seqs: Vec<u64> = src
+            .instances
+            .iter()
+            .flat_map(|i| i.tasks.iter().map(|t| t.run.seq))
+            .collect();
+        seqs.sort_unstable();
+        seqs.dedup();
+        assert_eq!(seqs.len(), src.n_tasks());
+        assert_eq!(src.defaults(), &[("A".to_string(), MemMiB(1000.0))]);
+    }
+}

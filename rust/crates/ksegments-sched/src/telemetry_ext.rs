@@ -1,0 +1,287 @@
+//! Scheduler-side telemetry: mapping [`EngineEvent`]s onto the trace
+//! model defined in `ksegments_core::telemetry`.
+//!
+//! The core crate owns the sinks, span-id scheme and time mapping;
+//! this module owns the one function that knows about the
+//! discrete-event engine's vocabulary, so the core layer never links
+//! the engine. Re-exported by the `ksegments` facade under the
+//! historical `ksegments::telemetry::trace_engine_event` path.
+
+use ksegments_core::telemetry::{sim_ts_us, span_id, ArgValue, TraceEvent, TraceSink};
+
+use crate::engine::events::EngineEvent;
+
+/// Map one engine event to its trace representation. Task lifecycles
+/// become async spans — `'b'` at placement, `'e'` at completion or
+/// kill (matched by `(cat, id)`) — and everything else becomes an
+/// instant, so OOM storms, preemption cascades, node churn and DAG
+/// gating all show up as timeline tracks per node (`tid`).
+pub fn trace_engine_event(sink: &mut dyn TraceSink, ev: &EngineEvent, now_s: f64) {
+    let ts = sim_ts_us(now_s);
+    match ev {
+        EngineEvent::Submitted { task_type, seq, requested } => {
+            sink.event(&TraceEvent {
+                name: task_type.clone(),
+                cat: "arrival",
+                ph: 'i',
+                ts_us: ts,
+                pid: 0,
+                tid: 0,
+                id: None,
+                args: vec![
+                    ("seq", ArgValue::U64(*seq)),
+                    ("requested_mib", ArgValue::F64(requested.0)),
+                ],
+            });
+        }
+        EngineEvent::Queued { task_type, seq, requested } => {
+            sink.event(&TraceEvent {
+                name: task_type.clone(),
+                cat: "queue",
+                ph: 'i',
+                ts_us: ts,
+                pid: 0,
+                tid: 0,
+                id: None,
+                args: vec![
+                    ("seq", ArgValue::U64(*seq)),
+                    ("requested_mib", ArgValue::F64(requested.0)),
+                ],
+            });
+        }
+        EngineEvent::Failed { task_type, seq, attempt, used, allocated, .. } => {
+            sink.event(&TraceEvent {
+                name: task_type.clone(),
+                cat: "kill",
+                ph: 'i',
+                ts_us: ts,
+                pid: 0,
+                tid: 0,
+                id: None,
+                args: vec![
+                    ("seq", ArgValue::U64(*seq)),
+                    ("attempt", ArgValue::U64(u64::from(*attempt))),
+                    ("used_mib", ArgValue::F64(used.0)),
+                    ("allocated_mib", ArgValue::F64(allocated.0)),
+                ],
+            });
+        }
+        EngineEvent::Placed { task_type, seq, node, reserved, .. } => {
+            sink.event(&TraceEvent {
+                name: task_type.clone(),
+                cat: "task",
+                ph: 'b',
+                ts_us: ts,
+                pid: 0,
+                tid: *node as u32,
+                id: Some(span_id(task_type, *seq)),
+                args: vec![
+                    ("seq", ArgValue::U64(*seq)),
+                    ("node", ArgValue::U64(*node as u64)),
+                    ("reserved_mib", ArgValue::F64(reserved.0)),
+                ],
+            });
+        }
+        EngineEvent::Completed { task_type, seq, attempts } => {
+            sink.event(&TraceEvent {
+                name: task_type.clone(),
+                cat: "task",
+                ph: 'e',
+                ts_us: ts,
+                pid: 0,
+                tid: 0,
+                id: Some(span_id(task_type, *seq)),
+                args: vec![
+                    ("seq", ArgValue::U64(*seq)),
+                    ("attempts", ArgValue::U64(u64::from(*attempts))),
+                ],
+            });
+        }
+        EngineEvent::OomKilled { task_type, seq, attempt, .. } => {
+            end_span_with_kill(sink, ts, task_type, *seq, *attempt, "oom-kill", 0);
+        }
+        EngineEvent::GrowDenied { task_type, seq, segment, .. } => {
+            end_span_with_kill(sink, ts, task_type, *seq, *segment as u32, "grow-denied", 0);
+        }
+        EngineEvent::NodeLost { task_type, seq, attempt, node, .. } => {
+            end_span_with_kill(sink, ts, task_type, *seq, *attempt, "node-lost-kill", *node as u32);
+        }
+        EngineEvent::Preempted { task_type, seq, attempt, node, .. } => {
+            end_span_with_kill(sink, ts, task_type, *seq, *attempt, "preempt-kill", *node as u32);
+        }
+        EngineEvent::Released { task_type, seq, instance, .. } => {
+            sink.event(&TraceEvent {
+                name: task_type.clone(),
+                cat: "dag",
+                ph: 'i',
+                ts_us: ts,
+                pid: 0,
+                tid: 0,
+                id: None,
+                args: vec![
+                    ("seq", ArgValue::U64(*seq)),
+                    ("instance", ArgValue::U64(*instance)),
+                ],
+            });
+        }
+        EngineEvent::WorkflowDone { workflow, instance, tasks, makespan_s, .. } => {
+            sink.event(&TraceEvent {
+                name: workflow.clone(),
+                cat: "dag",
+                ph: 'i',
+                ts_us: ts,
+                pid: 0,
+                tid: 0,
+                id: None,
+                args: vec![
+                    ("instance", ArgValue::U64(*instance)),
+                    ("tasks", ArgValue::U64(u64::from(*tasks))),
+                    ("makespan_s", ArgValue::F64(*makespan_s)),
+                ],
+            });
+        }
+        EngineEvent::NodeFailed { node, killed, .. } => {
+            let mut e = TraceEvent::instant("node-failed", "node", ts, *node as u32);
+            e.args = vec![("killed", ArgValue::U64(u64::from(*killed)))];
+            sink.event(&e);
+        }
+        EngineEvent::NodeJoined { node, .. } => {
+            sink.event(&TraceEvent::instant("node-joined", "node", ts, *node as u32));
+        }
+        EngineEvent::NodeRetired { node, .. } => {
+            sink.event(&TraceEvent::instant("node-retired", "node", ts, *node as u32));
+        }
+    }
+}
+
+/// A killed attempt: close its `'b'` span and drop a kill marker.
+fn end_span_with_kill(
+    sink: &mut dyn TraceSink,
+    ts: u64,
+    task_type: &str,
+    seq: u64,
+    detail: u32,
+    kill_name: &'static str,
+    tid: u32,
+) {
+    sink.event(&TraceEvent {
+        name: task_type.to_string(),
+        cat: "task",
+        ph: 'e',
+        ts_us: ts,
+        pid: 0,
+        tid,
+        id: Some(span_id(task_type, seq)),
+        args: Vec::new(),
+    });
+    sink.event(&TraceEvent {
+        name: kill_name.to_string(),
+        cat: "kill",
+        ph: 'i',
+        ts_us: ts,
+        pid: 0,
+        tid,
+        id: None,
+        args: vec![("seq", ArgValue::U64(seq)), ("detail", ArgValue::U64(u64::from(detail)))],
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use ksegments_core::telemetry::VecSink;
+    use ksegments_core::units::MemMiB;
+
+    #[test]
+    fn placement_and_completion_form_a_span() {
+        let mut sink = VecSink::new();
+        let placed = EngineEvent::Placed {
+            task_type: "t".into(),
+            seq: 9,
+            node: 2,
+            time_s: 4.0,
+            reserved: MemMiB(512.0),
+        };
+        let done = EngineEvent::Completed { task_type: "t".into(), seq: 9, attempts: 1 };
+        trace_engine_event(&mut sink, &placed, 4.0);
+        trace_engine_event(&mut sink, &done, 9.0);
+        assert_eq!(sink.events.len(), 2);
+        let (b, e) = (&sink.events[0], &sink.events[1]);
+        assert_eq!(b.ph, 'b');
+        assert_eq!(e.ph, 'e');
+        assert_eq!(b.id, e.id, "begin/end must share the span id");
+        assert_eq!(b.cat, e.cat);
+        assert_eq!(b.tid, 2, "placement is tracked on its node");
+        assert!(e.ts_us > b.ts_us);
+    }
+
+    #[test]
+    fn kills_end_the_span_and_mark_the_cause() {
+        let mut sink = VecSink::new();
+        let oom =
+            EngineEvent::OomKilled { task_type: "t".into(), seq: 3, attempt: 1, time_s: 8.0 };
+        trace_engine_event(&mut sink, &oom, 8.0);
+        assert_eq!(sink.events.len(), 2);
+        assert_eq!(sink.events[0].ph, 'e');
+        assert_eq!(sink.events[0].id, Some(span_id("t", 3)));
+        assert_eq!(sink.events[1].ph, 'i');
+        assert_eq!(sink.events[1].name, "oom-kill");
+        assert_eq!(sink.events[1].cat, "kill");
+    }
+
+    #[test]
+    fn every_variant_maps_to_at_least_one_event() {
+        let variants: Vec<EngineEvent> = vec![
+            EngineEvent::Submitted { task_type: "t".into(), seq: 0, requested: MemMiB(1.0) },
+            EngineEvent::Queued { task_type: "t".into(), seq: 0, requested: MemMiB(1.0) },
+            EngineEvent::Failed {
+                task_type: "t".into(),
+                seq: 0,
+                attempt: 1,
+                time_s: 1.0,
+                used: MemMiB(2.0),
+                allocated: MemMiB(1.0),
+            },
+            EngineEvent::Completed { task_type: "t".into(), seq: 0, attempts: 1 },
+            EngineEvent::Placed {
+                task_type: "t".into(),
+                seq: 0,
+                node: 0,
+                time_s: 1.0,
+                reserved: MemMiB(1.0),
+            },
+            EngineEvent::OomKilled { task_type: "t".into(), seq: 0, attempt: 1, time_s: 1.0 },
+            EngineEvent::GrowDenied { task_type: "t".into(), seq: 0, segment: 1, time_s: 1.0 },
+            EngineEvent::Released { task_type: "t".into(), seq: 0, instance: 0, time_s: 1.0 },
+            EngineEvent::WorkflowDone {
+                workflow: "w".into(),
+                instance: 0,
+                tasks: 3,
+                time_s: 9.0,
+                makespan_s: 9.0,
+            },
+            EngineEvent::NodeLost {
+                task_type: "t".into(),
+                seq: 0,
+                attempt: 1,
+                node: 0,
+                time_s: 1.0,
+            },
+            EngineEvent::Preempted {
+                task_type: "t".into(),
+                seq: 0,
+                attempt: 1,
+                node: 0,
+                time_s: 1.0,
+            },
+            EngineEvent::NodeFailed { node: 0, killed: 1, time_s: 1.0 },
+            EngineEvent::NodeJoined { node: 0, time_s: 1.0 },
+            EngineEvent::NodeRetired { node: 0, time_s: 1.0 },
+        ];
+        for ev in &variants {
+            let mut sink = VecSink::new();
+            trace_engine_event(&mut sink, ev, 1.0);
+            assert!(!sink.events.is_empty(), "{ev:?} produced no trace event");
+        }
+    }
+}

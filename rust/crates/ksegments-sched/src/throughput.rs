@@ -1,0 +1,479 @@
+//! Throughput-vs-policy tables: the scheduling counterpart of the
+//! Fig. 7 harness — what does segment-wise packing buy a cluster
+//! operator at different load levels?
+//!
+//! Two row families, shared by the CLI (`ksegments schedule --sweep` /
+//! `schedule --dag ... --sweep`) and `ksegments report`:
+//!
+//! * [`run_throughput`] — independent arrivals: (policy × predictor ×
+//!   arrival rate) via [`SchedGrid`]; makespan, mean queue wait, peak
+//!   concurrency;
+//! * [`run_dag_throughput`] — dependency-gated workflow instances:
+//!   (policy × predictor × concurrent-instance count) via [`DagGrid`];
+//!   per-instance workflow makespan, critical-path stretch and
+//!   straggler counts, where an OOM-ing predictor now pays along the
+//!   critical path instead of just in per-task retries;
+//! * [`run_failure_sweep`] — cluster adversity: (predictor × node
+//!   failure rate × autoscale lag) via [`FailureGrid`]; how much
+//!   makespan and wastage each predictor pays when nodes die under it
+//!   and how much an autoscaler claws back. Also the workload behind
+//!   the `BENCH_sched.json` scheduler-throughput snapshot
+//!   (`bench_sched_json` in the facade's bench harness).
+
+use ksegments_core::predictors::MemoryPredictor;
+use ksegments_core::units::MemMiB;
+use ksegments_core::workload::{eager_workflow, generate_workflow_trace};
+use ksegments_sim::figures::{makers_for_keys, FitterChoice};
+use ksegments_sim::parallel::PredictorFactory;
+
+use crate::cluster::NodeSpec;
+use crate::sched::{
+    DagGrid, DagGridResults, FailureGrid, FailureGridResults, ReservationPolicy, SchedConfig,
+    SchedGrid, SchedGridResults,
+};
+
+/// One sweep's rendered axes plus the raw per-cell reports.
+pub struct ThroughputResults {
+    pub interarrivals: Vec<f64>,
+    pub policies: Vec<ReservationPolicy>,
+    pub methods: Vec<String>,
+    pub results: SchedGridResults,
+}
+
+/// `--method` keys of the sweep roster: the two time-varying methods
+/// (whose Dynamic allocations the segment-wise policy exploits —
+/// k-Segments and KS+ DynSeg), the strongest static competitors
+/// (PPM Improved, Sizey Ensemble), and the HTCondor `3 * MemoryUsage`
+/// production heuristic (whose enormous static headroom is the
+/// packing-density anti-pattern the sweeps quantify). Every method
+/// runs under both policies — static allocations are unaffected by
+/// the policy choice, which makes the static rows the control.
+pub const THROUGHPUT_KEYS: &[&str] =
+    &["ksegments-selective", "dynseg", "ppm-improved", "ensemble", "condor"];
+
+/// The sweep roster as thread-safe factories, in [`THROUGHPUT_KEYS`]
+/// order.
+pub fn throughput_makers() -> Vec<PredictorFactory> {
+    makers_for_keys(THROUGHPUT_KEYS, FitterChoice::Native)
+}
+
+/// Run the throughput sweep on the eager-like workflow: 2 policies ×
+/// 4 predictors × the given mean inter-arrival gaps, on a small
+/// cluster sized so that packing pressure is real (2 × 32 GiB).
+pub fn run_throughput(seed: u64, interarrivals: &[f64], workers: usize) -> ThroughputResults {
+    let traces = vec![generate_workflow_trace(&eager_workflow(), seed)];
+    let policies = vec![ReservationPolicy::StaticPeak, ReservationPolicy::SegmentWise];
+    let base = SchedConfig { seed, training_frac: 0.5, ..SchedConfig::default() };
+    let node = NodeSpec { mem: MemMiB::from_gib(32.0), cores: 32 };
+    let grid = SchedGrid::new(
+        policies.clone(),
+        throughput_makers(),
+        &traces,
+        vec![2],
+        interarrivals.to_vec(),
+    )
+    .with_base(base, node);
+    let results = grid.run(workers);
+    // row labels in THROUGHPUT_KEYS order (display names, not keys)
+    let methods = throughput_makers().iter().map(|mk| mk().name()).collect();
+    ThroughputResults { interarrivals: interarrivals.to_vec(), policies, methods, results }
+}
+
+/// Markdown table shared by all sweep families: one labelled row per
+/// swept combination, one column per swept point.
+fn render_sweep_table(
+    title: &str,
+    unit: &str,
+    row_header: &str,
+    col_labels: &[String],
+    row_labels: &[String],
+    cell: impl Fn(usize, usize) -> f64,
+) -> String {
+    let mut out = format!("## {title}\n\n| {row_header} |");
+    for label in col_labels {
+        out.push_str(&format!(" {label} |"));
+    }
+    out.push_str("\n|---|");
+    for _ in col_labels {
+        out.push_str("---|");
+    }
+    out.push('\n');
+    for (r, row) in row_labels.iter().enumerate() {
+        out.push_str(&format!("| {row} |"));
+        for c in 0..col_labels.len() {
+            out.push_str(&format!(" {:.3} |", cell(r, c)));
+        }
+        out.push('\n');
+    }
+    out.push_str(&format!("\n(unit: {unit})\n"));
+    out
+}
+
+/// Row labels for the (policy × method) families.
+fn policy_method_rows(policies: &[ReservationPolicy], methods: &[String]) -> Vec<String> {
+    let mut out = Vec::with_capacity(policies.len() * methods.len());
+    for policy in policies {
+        for method in methods {
+            out.push(format!("{} · {}", policy.name(), method));
+        }
+    }
+    out
+}
+
+impl ThroughputResults {
+    fn cell(&self, p: usize, m: usize, a: usize) -> &crate::sched::SchedReport {
+        self.results.report(p, m, 0, a).expect("cell present")
+    }
+
+    fn render_metric(
+        &self,
+        title: &str,
+        unit: &str,
+        get: impl Fn(&crate::sched::SchedReport) -> f64,
+    ) -> String {
+        let cols: Vec<String> =
+            self.interarrivals.iter().map(|ia| format!("ia={ia:.0}s")).collect();
+        let rows = policy_method_rows(&self.policies, &self.methods);
+        let n_methods = self.methods.len();
+        render_sweep_table(title, unit, "policy · method", &cols, &rows, |r, a| {
+            get(self.cell(r / n_methods, r % n_methods, a))
+        })
+    }
+
+    /// The headline table: makespan per policy × arrival rate.
+    pub fn render_makespan(&self) -> String {
+        self.render_metric(
+            "Throughput — makespan by policy × arrival rate",
+            "seconds until the last task completes",
+            |r| r.makespan.0,
+        )
+    }
+
+    pub fn render_queue_wait(&self) -> String {
+        self.render_metric(
+            "Throughput — mean queue wait by policy × arrival rate",
+            "seconds from enqueue to placement, mean over admissions",
+            |r| r.mean_queue_wait_s(),
+        )
+    }
+
+    pub fn render_packing(&self) -> String {
+        self.render_metric(
+            "Throughput — peak concurrent tasks by policy × arrival rate",
+            "max tasks co-located on the cluster",
+            |r| r.peak_running as f64,
+        )
+    }
+
+    /// One-line summary per cell, for the CLI.
+    pub fn render_summaries(&self) -> String {
+        let mut out = String::new();
+        for r in &self.results.reports {
+            out.push_str(&r.summary());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// One DAG sweep's rendered axes plus the raw per-cell reports.
+pub struct DagThroughputResults {
+    pub workflow: String,
+    pub instance_counts: Vec<usize>,
+    pub policies: Vec<ReservationPolicy>,
+    pub methods: Vec<String>,
+    pub results: DagGridResults,
+}
+
+/// Run the dependency-gated sweep on a paper workflow: 2 policies ×
+/// the [`THROUGHPUT_KEYS`] roster × the given concurrent-instance
+/// counts, on the same packing-pressure cluster as [`run_throughput`]
+/// (2 × 32 GiB). Instances arrive gapped by the default
+/// inter-arrival; tasks inside an instance release only as their
+/// parents complete.
+pub fn run_dag_throughput(
+    wf: &ksegments_core::workload::WorkflowSpec,
+    seed: u64,
+    instance_counts: &[usize],
+    workers: usize,
+) -> DagThroughputResults {
+    let policies = vec![ReservationPolicy::StaticPeak, ReservationPolicy::SegmentWise];
+    let base = SchedConfig { seed, ..SchedConfig::default() };
+    let node = NodeSpec { mem: MemMiB::from_gib(32.0), cores: 32 };
+    let grid = DagGrid::new(
+        policies.clone(),
+        throughput_makers(),
+        wf,
+        vec![2],
+        instance_counts.to_vec(),
+    )
+    .with_base(base, node);
+    let results = grid.run(workers);
+    let methods = throughput_makers().iter().map(|mk| mk().name()).collect();
+    DagThroughputResults {
+        workflow: wf.name.clone(),
+        instance_counts: instance_counts.to_vec(),
+        policies,
+        methods,
+        results,
+    }
+}
+
+impl DagThroughputResults {
+    fn cell(&self, p: usize, m: usize, i: usize) -> &crate::sched::SchedReport {
+        self.results.report(p, m, 0, i).expect("cell present")
+    }
+
+    fn render_metric(
+        &self,
+        title: &str,
+        unit: &str,
+        get: impl Fn(&crate::sched::SchedReport) -> f64,
+    ) -> String {
+        let title = format!("{title} ({})", self.workflow);
+        let unit = format!("{unit}; N = concurrent workflow instances");
+        let cols: Vec<String> = self.instance_counts.iter().map(|n| format!("N={n}")).collect();
+        let rows = policy_method_rows(&self.policies, &self.methods);
+        let n_methods = self.methods.len();
+        render_sweep_table(&title, &unit, "policy · method", &cols, &rows, |r, i| {
+            get(self.cell(r / n_methods, r % n_methods, i))
+        })
+    }
+
+    /// The headline table: mean per-instance workflow makespan.
+    pub fn render_workflow_makespan(&self) -> String {
+        self.render_metric(
+            "DAG throughput — mean workflow makespan by policy × instance count",
+            "seconds from instance arrival to its last completion, mean over instances",
+            |r| r.mean_workflow_makespan_s(),
+        )
+    }
+
+    /// Mean makespan / critical-path ratio (1.0 = DAG-speed).
+    pub fn render_stretch(&self) -> String {
+        self.render_metric(
+            "DAG throughput — critical-path stretch by policy × instance count",
+            "mean per-instance makespan / critical-path length",
+            |r| r.critical_path_stretch(),
+        )
+    }
+
+    /// Straggler instances (makespan > 2× critical path).
+    pub fn render_stragglers(&self) -> String {
+        self.render_metric(
+            "DAG throughput — straggler instances by policy × instance count",
+            "instances whose makespan exceeded 2x their critical path",
+            |r| r.workflow_stragglers as f64,
+        )
+    }
+
+    /// One-line summary per cell, for the CLI.
+    pub fn render_summaries(&self) -> String {
+        let mut out = String::new();
+        for r in &self.results.reports {
+            out.push_str(&r.summary());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Default failure-rate axis (failures per second; 0 = none). The
+/// non-zero points are MTBF 500 s and MTBF 100 s — mild and harsh
+/// relative to the eager trace's ~20–200 s task runtimes.
+pub const FAILURE_SWEEP_RATES: &[f64] = &[0.0, 0.002, 0.01];
+
+/// Default autoscale-lag axis: fixed roster vs a 30 s provisioning lag.
+pub const FAILURE_SWEEP_LAGS: &[Option<f64>] = &[None, Some(30.0)];
+
+/// One failure sweep's rendered axes plus the raw per-cell reports.
+pub struct FailureSweepResults {
+    pub fail_rates: Vec<f64>,
+    pub lags: Vec<Option<f64>>,
+    pub methods: Vec<String>,
+    pub results: FailureGridResults,
+}
+
+/// Run the failure-domain sweep on the eager-like workflow trace: the
+/// [`THROUGHPUT_KEYS`] roster × [`FAILURE_SWEEP_RATES`] ×
+/// [`FAILURE_SWEEP_LAGS`], on the same packing-pressure cluster as
+/// [`run_throughput`] (2 × 32 GiB base roster).
+pub fn run_failure_sweep(seed: u64, workers: usize) -> FailureSweepResults {
+    run_failure_sweep_axes(seed, FAILURE_SWEEP_RATES, FAILURE_SWEEP_LAGS, workers)
+}
+
+/// [`run_failure_sweep`] with explicit axes (tests and the CLI's
+/// `--fail-rate` override).
+pub fn run_failure_sweep_axes(
+    seed: u64,
+    fail_rates: &[f64],
+    lags: &[Option<f64>],
+    workers: usize,
+) -> FailureSweepResults {
+    let traces = vec![generate_workflow_trace(&eager_workflow(), seed)];
+    let base = SchedConfig { seed, training_frac: 0.5, ..SchedConfig::default() };
+    let node = NodeSpec { mem: MemMiB::from_gib(32.0), cores: 32 };
+    let grid =
+        FailureGrid::new(throughput_makers(), &traces, fail_rates.to_vec(), lags.to_vec())
+            .with_base(base, node, 2);
+    let results = grid.run(workers);
+    let methods = throughput_makers().iter().map(|mk| mk().name()).collect();
+    FailureSweepResults {
+        fail_rates: fail_rates.to_vec(),
+        lags: lags.to_vec(),
+        methods,
+        results,
+    }
+}
+
+impl FailureSweepResults {
+    fn cell(&self, m: usize, r: usize, l: usize) -> &crate::sched::SchedReport {
+        self.results.report(m, r, l).expect("cell present")
+    }
+
+    fn roster_label(lag: Option<f64>) -> String {
+        match lag {
+            None => "fixed roster".to_string(),
+            Some(l) => format!("autoscale lag={l:.0}s"),
+        }
+    }
+
+    fn render_metric(
+        &self,
+        title: &str,
+        unit: &str,
+        get: impl Fn(&crate::sched::SchedReport) -> f64,
+    ) -> String {
+        let cols: Vec<String> = self
+            .fail_rates
+            .iter()
+            .map(|&r| {
+                if r > 0.0 {
+                    format!("mtbf={:.0}s", 1.0 / r)
+                } else {
+                    "no failures".to_string()
+                }
+            })
+            .collect();
+        let mut rows = Vec::with_capacity(self.methods.len() * self.lags.len());
+        for method in &self.methods {
+            for &lag in &self.lags {
+                rows.push(format!("{} · {}", method, Self::roster_label(lag)));
+            }
+        }
+        let n_lags = self.lags.len();
+        render_sweep_table(title, unit, "method · roster", &cols, &rows, |row, col| {
+            get(self.cell(row / n_lags, col, row % n_lags))
+        })
+    }
+
+    /// The headline table: makespan under increasing failure pressure.
+    pub fn render_makespan(&self) -> String {
+        self.render_metric(
+            "Failure domains — makespan by failure rate × roster policy",
+            "seconds until the last task completes",
+            |r| r.makespan.0,
+        )
+    }
+
+    /// Blameless kills absorbed (node-lost + preempted requeues).
+    pub fn render_disruption(&self) -> String {
+        self.render_metric(
+            "Failure domains — blameless kills by failure rate × roster policy",
+            "task attempts killed by node loss or preemption (requeued, not escalated)",
+            |r| (r.node_lost + r.preempted) as f64,
+        )
+    }
+
+    /// Wastage including the partial work thrown away by kills.
+    pub fn render_wastage(&self) -> String {
+        self.render_metric(
+            "Failure domains — wastage by failure rate × roster policy",
+            "GB·s reserved-but-unused plus work lost to kills",
+            |r| r.total_wastage.0,
+        )
+    }
+
+    /// One-line summary per cell, for the CLI.
+    pub fn render_summaries(&self) -> String {
+        let mut out = String::new();
+        for r in &self.results.reports {
+            out.push_str(&r.summary());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dag_sweep_renders_all_tables() {
+        let t = run_dag_throughput(&eager_workflow(), 42, &[2], 2);
+        assert_eq!(t.methods.len(), THROUGHPUT_KEYS.len());
+        let mk = t.render_workflow_makespan();
+        assert!(mk.contains("static-peak · k-Segments Selective"));
+        assert!(mk.contains("segment-wise · Sizey Ensemble"));
+        assert!(mk.contains("N=2"));
+        assert!(mk.contains("(eager)"));
+        assert!(t.render_stretch().contains("critical-path stretch"));
+        assert!(t.render_stragglers().contains("straggler"));
+        assert!(t.render_summaries().contains("workflows: 2/2 done"));
+        for r in &t.results.reports {
+            assert_eq!(r.workflows_completed, 2);
+            assert_eq!(r.completed, r.submitted);
+            // stretch is a ratio ≥ 1 whenever instances completed
+            assert!(r.critical_path_stretch() >= 1.0 - 1e-9);
+        }
+    }
+
+    #[test]
+    fn sweep_renders_all_tables() {
+        // one arrival rate keeps this test cheap; report/CLI sweep more
+        let t = run_throughput(42, &[2.0], 2);
+        assert_eq!(t.methods.len(), THROUGHPUT_KEYS.len());
+        let mk = t.render_makespan();
+        assert!(mk.contains("static-peak · k-Segments Selective"));
+        assert!(mk.contains("segment-wise · PPM Improved"));
+        assert!(mk.contains("segment-wise · KS+ DynSeg Selective"));
+        assert!(mk.contains("static-peak · Sizey Ensemble"));
+        assert!(mk.contains("static-peak · HTCondor 3x"));
+        assert!(mk.contains("ia=2s"));
+        assert!(t.render_queue_wait().contains("queue wait"));
+        assert!(t.render_packing().contains("peak concurrent"));
+        assert!(!t.render_summaries().is_empty());
+        // every task completes in every cell
+        for r in &t.results.reports {
+            assert_eq!(r.completed, r.submitted);
+        }
+    }
+
+    #[test]
+    fn failure_sweep_renders_and_conserves() {
+        // small axes keep this cheap; report/CLI sweep the full grid
+        let t = run_failure_sweep_axes(42, &[0.0, 0.01], &[Some(30.0)], 2);
+        assert_eq!(t.methods.len(), THROUGHPUT_KEYS.len());
+        let mk = t.render_makespan();
+        assert!(mk.contains("no failures"));
+        assert!(mk.contains("mtbf=100s"));
+        assert!(mk.contains("k-Segments Selective · autoscale lag=30s"));
+        assert!(mk.contains("HTCondor 3x · autoscale lag=30s"));
+        assert!(t.render_disruption().contains("blameless kills"));
+        assert!(t.render_wastage().contains("wastage"));
+        assert!(!t.render_summaries().is_empty());
+        for (c, r) in t.results.cells.iter().zip(&t.results.reports) {
+            assert_eq!(r.completed, r.submitted, "cell {c:?}");
+            assert_eq!(
+                r.admitted,
+                r.completed + r.oom_kills + r.grow_denials + r.preempted + r.node_lost,
+                "cell {c:?}"
+            );
+            if c.rate_idx == 0 {
+                assert_eq!(r.node_failures, 0, "control cell saw failures: {c:?}");
+            }
+        }
+    }
+
+}

@@ -1,0 +1,677 @@
+//! The prediction service — the long-running coordinator a SWMS talks
+//! to (the deployment shape of Fig. 2/6), sharded for throughput.
+//!
+//! N model threads (shards) each own a private predictor (and through
+//! it the PJRT runtime, which wants single-threaded use). Task types
+//! are hash-partitioned across shards, so all traffic for one type
+//! flows through one shard's FIFO channel — which preserves the online
+//! contract: completions a client sends before a predict are ingested
+//! before that predict is answered. SWMS-side clients hold a cheap
+//! clonable [`ServiceHandle`] and talk to the shards over channels:
+//!
+//! * [`ServiceHandle::predict`] — blocking request/response, the
+//!   submission-time path;
+//! * [`ServiceHandle::report_failure`] — blocking, returns the retry
+//!   allocation per the predictor's failure strategy;
+//! * [`ServiceHandle::complete`] — fire-and-forget completion
+//!   ingestion; each shard drains all queued requests per wakeup, so a
+//!   burst of completions is folded into the model as one batch before
+//!   the thread sleeps again.
+//!
+//! [`PredictionService`] (the original single-model deployment) is the
+//! `shards = 1` case of the same code path. The offline crate cache
+//! has no tokio; the service uses std threads and mpsc channels, which
+//! for this request pattern (model owner per shard, many blocking
+//! callers) is the same architecture tokio's actor pattern would
+//! express.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use ksegments_core::predictors::{Allocation, FailureInfo, MemoryPredictor};
+use ksegments_core::telemetry::{ArgValue, Registry, TraceEvent};
+use ksegments_core::trace::TaskRun;
+use ksegments_core::units::MemMiB;
+use ksegments_core::util::timer::Stopwatch;
+
+/// Requests understood by a shard's model thread.
+enum Request {
+    Prime { task_type: String, default: MemMiB },
+    Predict { task_type: String, input_mib: f64, reply: Sender<Allocation> },
+    Failure {
+        task_type: String,
+        input_mib: f64,
+        failed: Allocation,
+        info: FailureInfo,
+        reply: Sender<Allocation>,
+    },
+    Complete { run: Box<TaskRun> },
+    Stats { reply: Sender<ServiceStats> },
+    Shutdown,
+}
+
+/// Observability counters maintained per shard; aggregate across
+/// shards with [`ServiceStats::merge`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServiceStats {
+    pub predictions: u64,
+    pub completions: u64,
+    pub failures: u64,
+    /// Model-thread wakeups: batched draining means this can be far
+    /// below the total request count under bursty traffic.
+    pub wakeups: u64,
+}
+
+impl ServiceStats {
+    /// Add another shard's counters into this one.
+    pub fn merge(&mut self, other: ServiceStats) {
+        self.predictions += other.predictions;
+        self.completions += other.completions;
+        self.failures += other.failures;
+        self.wakeups += other.wakeups;
+    }
+
+    /// Sum of per-shard stats.
+    pub fn aggregated(per_shard: &[ServiceStats]) -> ServiceStats {
+        let mut total = ServiceStats::default();
+        for s in per_shard {
+            total.merge(*s);
+        }
+        total
+    }
+}
+
+/// Export per-shard counters (labelled `shard="N"`) plus the
+/// aggregate into a metrics registry.
+pub fn export_service_metrics(per_shard: &[ServiceStats], reg: &mut Registry) {
+    for (s, st) in per_shard.iter().enumerate() {
+        reg.counter_add(&format!("service_predictions{{shard=\"{s}\"}}"), st.predictions);
+        reg.counter_add(&format!("service_completions{{shard=\"{s}\"}}"), st.completions);
+        reg.counter_add(&format!("service_failures{{shard=\"{s}\"}}"), st.failures);
+        reg.counter_add(&format!("service_wakeups{{shard=\"{s}\"}}"), st.wakeups);
+    }
+    let total = ServiceStats::aggregated(per_shard);
+    reg.counter_add("service_predictions_total", total.predictions);
+    reg.counter_add("service_completions_total", total.completions);
+    reg.counter_add("service_failures_total", total.failures);
+    reg.counter_add("service_wakeups_total", total.wakeups);
+    reg.gauge_set("service_shards", per_shard.len() as f64);
+}
+
+/// FNV-1a partition of task types over shards — the same type always
+/// lands on the same shard, which is what carries the per-type FIFO
+/// guarantee. Public because the streaming replay engine
+/// ([`crate::ingest::replay`]) shards its workers with the same
+/// function, so a replayed type lands on the same shard index it would
+/// occupy in the live service.
+pub fn shard_of(task_type: &str, n_shards: usize) -> usize {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in task_type.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    (h % n_shards as u64) as usize
+}
+
+/// Clonable client handle; routes every request to the owning shard.
+#[derive(Clone)]
+pub struct ServiceHandle {
+    txs: Vec<Sender<Request>>,
+}
+
+impl ServiceHandle {
+    fn tx_for(&self, task_type: &str) -> &Sender<Request> {
+        &self.txs[shard_of(task_type, self.txs.len())]
+    }
+
+    pub fn prime(&self, task_type: &str, default: MemMiB) {
+        let _ = self.tx_for(task_type).send(Request::Prime {
+            task_type: task_type.to_string(),
+            default,
+        });
+    }
+
+    /// Submission-time allocation request (blocking). Panics if the
+    /// service is down; see [`ServiceHandle::try_predict`] for the
+    /// non-panicking variant.
+    pub fn predict(&self, task_type: &str, input_mib: f64) -> Allocation {
+        self.try_predict(task_type, input_mib)
+            .expect("prediction service is down")
+    }
+
+    /// Submission-time allocation request; `None` once the service has
+    /// shut down (callers racing a shutdown fall back to defaults).
+    pub fn try_predict(&self, task_type: &str, input_mib: f64) -> Option<Allocation> {
+        let (reply, rx) = channel();
+        self.tx_for(task_type)
+            .send(Request::Predict { task_type: task_type.to_string(), input_mib, reply })
+            .ok()?;
+        rx.recv().ok()
+    }
+
+    /// Failure-strategy request (blocking). Panics if the service is
+    /// down; see [`ServiceHandle::try_report_failure`].
+    pub fn report_failure(
+        &self,
+        task_type: &str,
+        input_mib: f64,
+        failed: Allocation,
+        info: FailureInfo,
+    ) -> Allocation {
+        self.try_report_failure(task_type, input_mib, failed, info)
+            .expect("prediction service is down")
+    }
+
+    /// Failure-strategy request; `None` once the service has shut down.
+    pub fn try_report_failure(
+        &self,
+        task_type: &str,
+        input_mib: f64,
+        failed: Allocation,
+        info: FailureInfo,
+    ) -> Option<Allocation> {
+        let (reply, rx) = channel();
+        self.tx_for(task_type)
+            .send(Request::Failure {
+                task_type: task_type.to_string(),
+                input_mib,
+                failed,
+                info,
+                reply,
+            })
+            .ok()?;
+        rx.recv().ok()
+    }
+
+    /// Completion ingestion (non-blocking; silently dropped after
+    /// shutdown).
+    pub fn complete(&self, run: TaskRun) {
+        let _ = self.tx_for(&run.task_type).send(Request::Complete { run: Box::new(run) });
+    }
+
+    /// Stream a [`TraceSource`] through the service: prime its
+    /// defaults, then predict + complete every run in arrival order,
+    /// chunk by chunk — the service-side replay path, which never
+    /// materializes the trace. Returns the number of runs fed; errors
+    /// if the source fails or the service is already down.
+    ///
+    /// [`TraceSource`]: crate::ingest::TraceSource
+    pub fn replay_source(
+        &self,
+        src: &mut dyn crate::ingest::TraceSource,
+        chunk: usize,
+    ) -> anyhow::Result<u64> {
+        for (ty, mem) in src.defaults() {
+            self.prime(&ty, mem);
+        }
+        let mut fed = 0u64;
+        loop {
+            let batch = src.next_chunk(chunk.max(1))?;
+            if batch.is_empty() {
+                return Ok(fed);
+            }
+            for run in batch {
+                if self.try_predict(&run.task_type, run.input_mib).is_none() {
+                    anyhow::bail!("prediction service shut down mid-replay");
+                }
+                self.complete(run);
+                fed += 1;
+            }
+        }
+    }
+
+    /// Aggregated counters across all shards (blocking).
+    pub fn stats(&self) -> ServiceStats {
+        ServiceStats::aggregated(&self.per_shard_stats())
+    }
+
+    /// Per-shard counters (blocking; a shard that already shut down
+    /// reports zeros).
+    pub fn per_shard_stats(&self) -> Vec<ServiceStats> {
+        self.txs
+            .iter()
+            .map(|tx| {
+                let (reply, rx) = channel();
+                if tx.send(Request::Stats { reply }).is_err() {
+                    return ServiceStats::default();
+                }
+                rx.recv().unwrap_or_default()
+            })
+            .collect()
+    }
+}
+
+/// The running sharded service; join it via
+/// [`ShardedPredictionService::shutdown`] or let `Drop` do it.
+pub struct ShardedPredictionService {
+    handle: ServiceHandle,
+    threads: Vec<JoinHandle<(ServiceStats, Vec<TraceEvent>)>>,
+}
+
+impl ShardedPredictionService {
+    /// Spawn `n_shards` model threads, each owning the predictor the
+    /// factory builds for its shard index.
+    pub fn spawn(
+        n_shards: usize,
+        factory: impl Fn(usize) -> Box<dyn MemoryPredictor>,
+    ) -> ShardedPredictionService {
+        Self::spawn_opts((0..n_shards).map(&factory).collect(), false)
+    }
+
+    /// [`ShardedPredictionService::spawn`] with per-wakeup trace spans
+    /// collected on every shard; retrieve them with
+    /// [`ShardedPredictionService::shutdown_with_trace`]. Service
+    /// spans are **wall-clock**-stamped (the one sanctioned use of
+    /// wall time in a trace — DESIGN.md §12) and observation-only:
+    /// predictions and counters are unchanged.
+    pub fn spawn_traced(
+        n_shards: usize,
+        factory: impl Fn(usize) -> Box<dyn MemoryPredictor>,
+    ) -> ShardedPredictionService {
+        Self::spawn_opts((0..n_shards).map(&factory).collect(), true)
+    }
+
+    /// Spawn one shard per provided predictor (at least one).
+    pub fn spawn_with(predictors: Vec<Box<dyn MemoryPredictor>>) -> ShardedPredictionService {
+        Self::spawn_opts(predictors, false)
+    }
+
+    fn spawn_opts(
+        predictors: Vec<Box<dyn MemoryPredictor>>,
+        traced: bool,
+    ) -> ShardedPredictionService {
+        assert!(!predictors.is_empty(), "service needs at least one shard");
+        let epoch = Stopwatch::start();
+        let mut txs = Vec::with_capacity(predictors.len());
+        let mut threads = Vec::with_capacity(predictors.len());
+        for (s, predictor) in predictors.into_iter().enumerate() {
+            let (tx, rx) = channel();
+            let trace = traced.then_some((epoch, s as u32));
+            let thread = std::thread::Builder::new()
+                .name(format!("ksegments-shard-{s}"))
+                .spawn(move || model_loop(predictor, rx, trace))
+                .expect("spawning shard model thread");
+            txs.push(tx);
+            threads.push(thread);
+        }
+        ShardedPredictionService { handle: ServiceHandle { txs }, threads }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.handle.txs.len()
+    }
+
+    pub fn handle(&self) -> ServiceHandle {
+        self.handle.clone()
+    }
+
+    /// Stop all shards and return their aggregated final counters.
+    pub fn shutdown(mut self) -> ServiceStats {
+        ServiceStats::aggregated(&self.shutdown_stats())
+    }
+
+    /// Stop all shards and return the per-shard final counters, in
+    /// shard order.
+    pub fn shutdown_per_shard(mut self) -> Vec<ServiceStats> {
+        self.shutdown_stats()
+    }
+
+    /// Stop all shards, returning per-shard counters plus the merged
+    /// wakeup trace (empty unless spawned via
+    /// [`ShardedPredictionService::spawn_traced`]), sorted by
+    /// timestamp then shard track.
+    pub fn shutdown_with_trace(mut self) -> (Vec<ServiceStats>, Vec<TraceEvent>) {
+        let mut stats = Vec::with_capacity(self.threads.len());
+        let mut trace = Vec::new();
+        for (s, t) in self.join_shards() {
+            stats.push(s);
+            trace.extend(t);
+        }
+        trace.sort_by_key(|e| (e.ts_us, e.tid));
+        (stats, trace)
+    }
+
+    fn shutdown_stats(&mut self) -> Vec<ServiceStats> {
+        self.join_shards().into_iter().map(|(s, _)| s).collect()
+    }
+
+    fn join_shards(&mut self) -> Vec<(ServiceStats, Vec<TraceEvent>)> {
+        for tx in &self.handle.txs {
+            let _ = tx.send(Request::Shutdown);
+        }
+        self.threads
+            .drain(..)
+            .map(|t| t.join().expect("shard model thread panicked"))
+            .collect()
+    }
+}
+
+impl Drop for ShardedPredictionService {
+    fn drop(&mut self) {
+        if !self.threads.is_empty() {
+            for tx in &self.handle.txs {
+                let _ = tx.send(Request::Shutdown);
+            }
+            for t in self.threads.drain(..) {
+                let _ = t.join();
+            }
+        }
+    }
+}
+
+/// The single-model deployment — exactly the sharded service with one
+/// shard (same model loop, same handle type).
+pub struct PredictionService {
+    inner: ShardedPredictionService,
+}
+
+impl PredictionService {
+    /// Spawn the model thread around any predictor.
+    pub fn spawn(predictor: Box<dyn MemoryPredictor>) -> PredictionService {
+        PredictionService { inner: ShardedPredictionService::spawn_with(vec![predictor]) }
+    }
+
+    pub fn handle(&self) -> ServiceHandle {
+        self.inner.handle()
+    }
+
+    /// Stop the model thread and return its final counters.
+    pub fn shutdown(self) -> ServiceStats {
+        self.inner.shutdown()
+    }
+}
+
+/// One shard's model loop: block on the first request of a wakeup,
+/// then drain everything already queued and process the batch in
+/// arrival order (so completion bursts cost one wakeup, and ordering
+/// guarantees are untouched). With `trace` set, every wakeup is
+/// recorded as a wall-clock async span on the shard's track.
+fn model_loop(
+    mut predictor: Box<dyn MemoryPredictor>,
+    rx: Receiver<Request>,
+    trace: Option<(Stopwatch, u32)>,
+) -> (ServiceStats, Vec<TraceEvent>) {
+    let mut stats = ServiceStats::default();
+    let mut events: Vec<TraceEvent> = Vec::new();
+    let mut batch = Vec::new();
+    'serve: while let Ok(first) = rx.recv() {
+        stats.wakeups += 1;
+        let begin_us = trace.map(|(epoch, _)| epoch.elapsed_us());
+        batch.clear();
+        batch.push(first);
+        while let Ok(more) = rx.try_recv() {
+            batch.push(more);
+        }
+        let n_batch = batch.len() as u64;
+        for req in batch.drain(..) {
+            match req {
+                Request::Prime { task_type, default } => predictor.prime(&task_type, default),
+                Request::Predict { task_type, input_mib, reply } => {
+                    stats.predictions += 1;
+                    let _ = reply.send(predictor.predict(&task_type, input_mib));
+                }
+                Request::Failure { task_type, input_mib, failed, info, reply } => {
+                    stats.failures += 1;
+                    let _ = reply.send(predictor.on_failure(&task_type, input_mib, &failed, &info));
+                }
+                Request::Complete { run } => {
+                    stats.completions += 1;
+                    predictor.observe(&run);
+                }
+                Request::Stats { reply } => {
+                    let _ = reply.send(stats);
+                }
+                Request::Shutdown => break 'serve,
+            }
+        }
+        if let (Some((epoch, shard)), Some(ts_b)) = (trace, begin_us) {
+            let id = ((u64::from(shard) << 32) | (stats.wakeups - 1)) & 0xffff_ffff_ffff;
+            let ts_e = epoch.elapsed_us().max(ts_b);
+            for (ph, ts) in [('b', ts_b), ('e', ts_e)] {
+                events.push(TraceEvent {
+                    name: "wakeup".to_string(),
+                    cat: "service",
+                    ph,
+                    ts_us: ts,
+                    pid: 0,
+                    tid: shard,
+                    id: Some(id),
+                    args: if ph == 'b' {
+                        vec![("batch", ArgValue::U64(n_batch))]
+                    } else {
+                        Vec::new()
+                    },
+                });
+            }
+        }
+    }
+    (stats, events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use ksegments_core::predictors::default_config::DefaultConfigPredictor;
+    use ksegments_core::predictors::ksegments::{KSegmentsPredictor, RetryStrategy};
+    use ksegments_core::trace::UsageSeries;
+    use ksegments_core::units::Seconds;
+
+    fn run_of(ty: &str, input: f64, peak: f64) -> TaskRun {
+        let samples: Vec<f64> = (0..8).map(|j| peak * (j + 1) as f64 / 8.0).collect();
+        TaskRun {
+            task_type: ty.into(),
+            input_mib: input,
+            runtime: Seconds(16.0),
+            series: UsageSeries::new(2.0, samples),
+            seq: 0,
+        }
+    }
+
+    fn run(input: f64, peak: f64) -> TaskRun {
+        run_of("w/t", input, peak)
+    }
+
+    #[test]
+    fn predict_roundtrip() {
+        let svc = PredictionService::spawn(Box::new(DefaultConfigPredictor::new()));
+        let h = svc.handle();
+        h.prime("w/t", MemMiB(2048.0));
+        assert_eq!(h.predict("w/t", 10.0), Allocation::Static(MemMiB(2048.0)));
+        let stats = svc.shutdown();
+        assert_eq!(stats.predictions, 1);
+    }
+
+    #[test]
+    fn completions_train_the_model() {
+        let svc = PredictionService::spawn(Box::new(KSegmentsPredictor::native(
+            4,
+            RetryStrategy::Selective,
+        )));
+        let h = svc.handle();
+        h.prime("w/t", MemMiB(2048.0));
+        for i in 0..12 {
+            h.complete(run(100.0 + 10.0 * i as f64, 200.0 + 10.0 * i as f64));
+        }
+        // channel is FIFO: by the time predict is answered, all
+        // completions have been ingested
+        let alloc = h.predict("w/t", 150.0);
+        assert!(alloc.is_dynamic());
+        let stats = svc.shutdown();
+        assert_eq!(stats.completions, 12);
+    }
+
+    #[test]
+    fn failure_path_returns_escalated_allocation() {
+        let svc = PredictionService::spawn(Box::new(DefaultConfigPredictor::new()));
+        let h = svc.handle();
+        let failed = Allocation::Static(MemMiB(100.0));
+        let info = FailureInfo::oom(1.0, 150.0, 1);
+        let next = h.report_failure("w/t", 10.0, failed, info);
+        assert_eq!(next, Allocation::Static(MemMiB(200.0)));
+        assert_eq!(svc.shutdown().failures, 1);
+    }
+
+    #[test]
+    fn many_clients_share_the_service() {
+        let svc = PredictionService::spawn(Box::new(DefaultConfigPredictor::new()));
+        let mut joins = Vec::new();
+        for i in 0..8 {
+            let h = svc.handle();
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..50 {
+                    let _ = h.predict(&format!("w/t{i}"), 1.0);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(svc.shutdown().predictions, 400);
+    }
+
+    #[test]
+    fn drop_shuts_down_cleanly() {
+        let svc = PredictionService::spawn(Box::new(DefaultConfigPredictor::new()));
+        let h = svc.handle();
+        drop(svc);
+        // handle calls after shutdown must not panic the caller thread
+        // (send fails silently for fire-and-forget)
+        h.complete(run(1.0, 1.0));
+        assert!(h.try_predict("w/t", 1.0).is_none());
+    }
+
+    #[test]
+    fn shard_routing_is_stable_and_total() {
+        for n in 1..8 {
+            for ty in ["a", "b/c", "eager/qualimap", "sarek/bwamem", ""] {
+                let s = shard_of(ty, n);
+                assert!(s < n);
+                assert_eq!(s, shard_of(ty, n), "routing must be deterministic");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_service_partitions_types_and_aggregates_stats() {
+        let svc = ShardedPredictionService::spawn(4, |_| Box::new(DefaultConfigPredictor::new()));
+        assert_eq!(svc.n_shards(), 4);
+        let h = svc.handle();
+        for i in 0..32 {
+            let ty = format!("w/t{i}");
+            h.prime(&ty, MemMiB(512.0));
+            assert_eq!(h.predict(&ty, 1.0), Allocation::Static(MemMiB(512.0)));
+            h.complete(run_of(&ty, 1.0, 100.0));
+        }
+        let per_shard = svc.shutdown_per_shard();
+        assert_eq!(per_shard.len(), 4);
+        let total = ServiceStats::aggregated(&per_shard);
+        assert_eq!(total.predictions, 32);
+        assert_eq!(total.completions, 32);
+        // with 32 hashed types over 4 shards, no shard should be idle
+        assert!(per_shard.iter().all(|s| s.predictions > 0), "{per_shard:?}");
+    }
+
+    #[test]
+    fn sharded_completions_before_predict_per_type() {
+        // FIFO per task type must hold with multiple shards: the
+        // completions routed to a type's shard are ingested before the
+        // predict sent afterwards by the same client.
+        let svc = ShardedPredictionService::spawn(3, |_| {
+            Box::new(KSegmentsPredictor::native(4, RetryStrategy::Selective))
+        });
+        let h = svc.handle();
+        for ty in ["w/a", "w/b", "w/c", "w/d"] {
+            h.prime(ty, MemMiB(2048.0));
+            for i in 0..12 {
+                h.complete(run_of(ty, 100.0 + 10.0 * i as f64, 200.0 + 10.0 * i as f64));
+            }
+            assert!(h.predict(ty, 150.0).is_dynamic(), "{ty} predict ran before completions");
+        }
+        assert_eq!(svc.shutdown().completions, 48);
+    }
+
+    #[test]
+    fn replay_source_streams_defaults_and_runs() {
+        let mut trace = ksegments_core::trace::Trace::new();
+        trace.set_default("w/t", MemMiB(2048.0));
+        for i in 0..12u64 {
+            let mut r = run(100.0 + 10.0 * i as f64, 200.0 + 10.0 * i as f64);
+            r.seq = i;
+            trace.push(r);
+        }
+        trace.sort();
+        let mut src = crate::ingest::InMemorySource::from_trace(&trace);
+        let svc = ShardedPredictionService::spawn(2, |_| {
+            Box::new(KSegmentsPredictor::native(4, RetryStrategy::Selective))
+        });
+        let h = svc.handle();
+        let fed = h.replay_source(&mut src, 5).unwrap();
+        assert_eq!(fed, 12);
+        // all completions ingested before this predict (per-type FIFO)
+        assert!(h.predict("w/t", 150.0).is_dynamic());
+        let stats = svc.shutdown();
+        assert_eq!(stats.completions, 12);
+        assert_eq!(stats.predictions, 13);
+    }
+
+    #[test]
+    fn traced_service_records_wakeup_spans() {
+        let svc =
+            ShardedPredictionService::spawn_traced(2, |_| Box::new(DefaultConfigPredictor::new()));
+        let h = svc.handle();
+        h.prime("w/a", MemMiB(512.0));
+        for _ in 0..5 {
+            let _ = h.predict("w/a", 1.0);
+        }
+        let (stats, trace) = svc.shutdown_with_trace();
+        assert_eq!(ServiceStats::aggregated(&stats).predictions, 5);
+        assert!(!trace.is_empty());
+        let begins = trace.iter().filter(|e| e.ph == 'b').count();
+        let ends = trace.iter().filter(|e| e.ph == 'e').count();
+        assert_eq!(begins, ends, "every wakeup span must close");
+        assert!(trace.iter().all(|e| e.cat == "service"));
+        assert!(trace.windows(2).all(|w| w[0].ts_us <= w[1].ts_us), "merged trace sorted");
+    }
+
+    #[test]
+    fn untraced_service_collects_no_trace() {
+        let svc = ShardedPredictionService::spawn(2, |_| Box::new(DefaultConfigPredictor::new()));
+        let h = svc.handle();
+        h.prime("w/a", MemMiB(512.0));
+        let _ = h.predict("w/a", 1.0);
+        let (stats, trace) = svc.shutdown_with_trace();
+        assert!(trace.is_empty());
+        assert_eq!(ServiceStats::aggregated(&stats).predictions, 1);
+    }
+
+    #[test]
+    fn service_metrics_export_labels_shards() {
+        let per_shard = vec![
+            ServiceStats { predictions: 3, completions: 2, failures: 1, wakeups: 4 },
+            ServiceStats { predictions: 5, completions: 0, failures: 0, wakeups: 2 },
+        ];
+        let mut reg = ksegments_core::telemetry::Registry::new();
+        export_service_metrics(&per_shard, &mut reg);
+        assert_eq!(reg.counter("service_predictions{shard=\"0\"}"), 3);
+        assert_eq!(reg.counter("service_predictions{shard=\"1\"}"), 5);
+        assert_eq!(reg.counter("service_predictions_total"), 8);
+        assert_eq!(reg.counter("service_wakeups_total"), 6);
+        assert_eq!(reg.gauge("service_shards"), Some(2.0));
+        let prom = reg.to_prometheus();
+        assert!(prom.contains("service_predictions{shard=\"0\"} 3"), "{prom}");
+    }
+
+    #[test]
+    fn batched_draining_counts_fewer_wakeups_than_requests() {
+        let svc = PredictionService::spawn(Box::new(DefaultConfigPredictor::new()));
+        let h = svc.handle();
+        for i in 0..200 {
+            h.complete(run(i as f64, 100.0));
+        }
+        let stats = svc.shutdown();
+        assert_eq!(stats.completions, 200);
+        // batching can never take MORE wakeups than messages (+1 for
+        // the shutdown); under any real schedule it takes far fewer
+        assert!(stats.wakeups <= stats.completions + 1, "{stats:?}");
+    }
+}

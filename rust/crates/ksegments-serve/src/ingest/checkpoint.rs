@@ -1,0 +1,403 @@
+//! Predictor checkpointing: persist the fitted per-task-type state so
+//! a replay (or a restarted prediction service) warm-starts instead of
+//! re-learning from scratch.
+//!
+//! Every predictor in the zoo derives its fitted state — regressions,
+//! peak distributions, historical-error offsets — deterministically
+//! from (a) the primed developer defaults and (b) its sliding window
+//! of observed runs. A [`Checkpoint`] therefore records exactly that:
+//! per task type, the default plus the most recent
+//! [`Checkpoint::window_cap`] observed runs (and the lifetime
+//! observation count, which drives warm-up accounting). Restoring is
+//! [`Checkpoint::restore_into`]: replay `prime` + `observe` into a
+//! fresh [`MemoryPredictor`] — which reproduces the predictor's
+//! internal state *exactly* whenever its own history window is no
+//! larger than the checkpoint's (the largest window in the crate is
+//! 1024, the default cap).
+//!
+//! The JSONL layout is deterministic (types sorted, runs oldest
+//! first), so two equal checkpoints serialize to identical bytes —
+//! what the warm-vs-cold replay test in `tests/ingest_replay.rs`
+//! pins down.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use ksegments_core::predictors::MemoryPredictor;
+use ksegments_core::trace::{parse_jsonl_record, run_record, JsonlRecord, TaskRun};
+use ksegments_core::units::MemMiB;
+use ksegments_core::util::json::Json;
+
+/// Format marker + version of the checkpoint header line.
+const FORMAT: &str = "ksegments-checkpoint";
+const VERSION: u64 = 1;
+
+/// Per-task-type persisted state.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TypeState {
+    /// Primed developer default (MiB), if any.
+    pub default_mib: Option<f64>,
+    /// Lifetime observation count (not capped by the window).
+    pub total_seen: u64,
+    /// The most recent observed runs, oldest first.
+    pub runs: VecDeque<TaskRun>,
+}
+
+/// Serialized predictor state: defaults + sliding run windows per task
+/// type. See the module docs for the exactness guarantee.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    window_cap: usize,
+    types: BTreeMap<String, TypeState>,
+}
+
+impl Checkpoint {
+    /// Default per-type window — matches the largest predictor history
+    /// window in the crate (PPM/LR keep 1024 runs), so restoring is
+    /// exact for the whole zoo.
+    pub const DEFAULT_WINDOW: usize = 1024;
+
+    pub fn new(window_cap: usize) -> Checkpoint {
+        Checkpoint { window_cap: window_cap.max(1), types: BTreeMap::new() }
+    }
+
+    pub fn window_cap(&self) -> usize {
+        self.window_cap
+    }
+
+    pub fn n_types(&self) -> usize {
+        self.types.len()
+    }
+
+    /// Lifetime observation count summed over types.
+    pub fn total_seen(&self) -> u64 {
+        self.types.values().map(|s| s.total_seen).sum()
+    }
+
+    /// Per-type state, sorted by task type.
+    pub fn types(&self) -> &BTreeMap<String, TypeState> {
+        &self.types
+    }
+
+    /// Record (or overwrite) a task type's developer default.
+    pub fn record_default(&mut self, task_type: &str, mem: MemMiB) {
+        self.types.entry(task_type.to_string()).or_default().default_mib = Some(mem.0);
+    }
+
+    /// Record an observed run, evicting the oldest once the type's
+    /// window is full. `>=` (not `==`): a state seeded by
+    /// [`Checkpoint::insert_state`] from a wider-windowed checkpoint
+    /// must shrink back under this cap, not grow without bound.
+    pub fn record(&mut self, run: &TaskRun) {
+        let st = self.types.entry(run.task_type.clone()).or_default();
+        while st.runs.len() >= self.window_cap {
+            st.runs.pop_front();
+        }
+        st.runs.push_back(run.clone());
+        st.total_seen += 1;
+    }
+
+    /// Seed a type's state wholesale (shard restore path); replaces
+    /// any existing state for the type. A state wider than this
+    /// checkpoint's window is trimmed to the most recent
+    /// `window_cap` runs so [`Checkpoint::save`] output stays loadable.
+    pub fn insert_state(&mut self, task_type: String, mut state: TypeState) {
+        while state.runs.len() > self.window_cap {
+            state.runs.pop_front();
+        }
+        self.types.insert(task_type, state);
+    }
+
+    /// Fold another checkpoint covering a **disjoint** task-type set
+    /// into this one (per-shard partials).
+    pub fn merge_disjoint(&mut self, other: Checkpoint) {
+        for (ty, st) in other.types {
+            let prev = self.types.insert(ty.clone(), st);
+            assert!(prev.is_none(), "checkpoint shards overlap on task type {ty:?}");
+        }
+    }
+
+    /// Warm-start a fresh predictor: prime every recorded default,
+    /// then replay every windowed run through `observe`, types in
+    /// sorted order, runs oldest first.
+    pub fn restore_into(&self, predictor: &mut dyn MemoryPredictor) {
+        for (ty, st) in &self.types {
+            if let Some(d) = st.default_mib {
+                predictor.prime(ty, MemMiB(d));
+            }
+            for run in &st.runs {
+                predictor.observe(run);
+            }
+        }
+    }
+
+    /// Write the checkpoint as JSONL (header, then per type a `type`
+    /// record followed by its `run` records, oldest first).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut w = BufWriter::new(
+            File::create(path).with_context(|| format!("creating {}", path.display()))?,
+        );
+        let header = Json::obj(vec![
+            ("format", FORMAT.into()),
+            ("version", VERSION.into()),
+            ("window_cap", (self.window_cap as u64).into()),
+        ]);
+        writeln!(w, "{header}")?;
+        for (ty, st) in &self.types {
+            let mut fields: Vec<(&str, Json)> = vec![
+                ("kind", "type".into()),
+                ("task_type", ty.as_str().into()),
+                ("total_seen", st.total_seen.into()),
+            ];
+            if let Some(d) = st.default_mib {
+                fields.push(("default_mib", d.into()));
+            }
+            writeln!(w, "{}", Json::obj(fields))?;
+            for run in &st.runs {
+                writeln!(w, "{}", run_record(run))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Read a checkpoint written by [`Checkpoint::save`]; every
+    /// malformed line errors with its position.
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let r = BufReader::new(
+            File::open(path).with_context(|| format!("opening checkpoint {}", path.display()))?,
+        );
+        let mut lines = r.lines().enumerate();
+        let (_, header) = lines.next().context("empty checkpoint file")?;
+        let header = Json::parse(&header?).map_err(|e| anyhow::anyhow!("header: {e}"))?;
+        ensure!(
+            header.get("format").as_str() == Some(FORMAT),
+            "not a ksegments checkpoint (missing format marker)"
+        );
+        ensure!(
+            header.get("version").as_u64() == Some(VERSION),
+            "unsupported checkpoint version {:?}",
+            header.get("version")
+        );
+        let window_cap = header
+            .get("window_cap")
+            .as_u64()
+            .context("header window_cap")? as usize;
+        let mut ck = Checkpoint::new(window_cap);
+        let mut current: Option<String> = None;
+        for (i, line) in lines {
+            let lineno = i + 1;
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let parsed = Json::parse(&line)
+                .map_err(|e| anyhow::anyhow!("checkpoint line {lineno}: {e}"))?;
+            match parsed.get("kind").as_str() {
+                Some("type") => {
+                    let ty = parsed
+                        .get("task_type")
+                        .as_str()
+                        .with_context(|| format!("checkpoint line {lineno}: task_type"))?
+                        .to_string();
+                    let st = TypeState {
+                        default_mib: parsed.get("default_mib").as_f64(),
+                        total_seen: parsed
+                            .get("total_seen")
+                            .as_u64()
+                            .with_context(|| format!("checkpoint line {lineno}: total_seen"))?,
+                        runs: VecDeque::new(),
+                    };
+                    ck.types.insert(ty.clone(), st);
+                    current = Some(ty);
+                }
+                Some("run") => {
+                    let rec = parse_jsonl_record(&line)
+                        .with_context(|| format!("checkpoint line {lineno}"))?;
+                    let JsonlRecord::Run(run) = rec else {
+                        bail!("checkpoint line {lineno}: expected a run record");
+                    };
+                    let ty = current
+                        .as_ref()
+                        .with_context(|| format!("checkpoint line {lineno}: run before type"))?;
+                    ensure!(
+                        run.task_type == *ty,
+                        "checkpoint line {lineno}: run of type {:?} under section {ty:?}",
+                        run.task_type
+                    );
+                    let st = ck.types.get_mut(ty).expect("section exists");
+                    ensure!(
+                        st.runs.len() < window_cap,
+                        "checkpoint line {lineno}: more runs than window_cap {window_cap}"
+                    );
+                    st.runs.push_back(run);
+                }
+                other => bail!("checkpoint line {lineno}: unknown kind {other:?}"),
+            }
+        }
+        Ok(ck)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use ksegments_core::predictors::ppm::PpmPredictor;
+    use ksegments_core::predictors::Allocation;
+    use ksegments_core::trace::UsageSeries;
+    use ksegments_core::units::Seconds;
+
+    fn run(ty: &str, seq: u64, peak: f64) -> TaskRun {
+        TaskRun {
+            task_type: ty.into(),
+            input_mib: 10.0 * seq as f64,
+            runtime: Seconds(4.0),
+            series: UsageSeries::new(2.0, vec![peak / 2.0, peak]),
+            seq,
+        }
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("ksegments_test_checkpoint");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn window_evicts_oldest_but_counts_all() {
+        let mut ck = Checkpoint::new(3);
+        for seq in 0..5 {
+            ck.record(&run("a", seq, 100.0 + seq as f64));
+        }
+        let st = &ck.types()["a"];
+        assert_eq!(st.total_seen, 5);
+        assert_eq!(st.runs.len(), 3);
+        assert_eq!(st.runs[0].seq, 2);
+        assert_eq!(ck.total_seen(), 5);
+    }
+
+    #[test]
+    fn save_load_roundtrip_is_exact_and_deterministic() {
+        let mut ck = Checkpoint::new(8);
+        ck.record_default("b", MemMiB(2048.0));
+        for seq in 0..4 {
+            ck.record(&run("a", seq, 123.456 + seq as f64 / 3.0));
+            ck.record(&run("b", seq + 10, 77.7 * seq as f64));
+        }
+        let path = tmp("roundtrip.jsonl");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back, ck);
+        // byte-determinism: saving the loaded checkpoint reproduces the
+        // file exactly
+        let path2 = tmp("roundtrip2.jsonl");
+        back.save(&path2).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), std::fs::read(&path2).unwrap());
+    }
+
+    #[test]
+    fn restore_reproduces_predictor_state() {
+        // train a PPM directly vs via checkpoint restore: predictions
+        // must coincide (PPM's window is 1024 >= ours)
+        let mut direct = PpmPredictor::improved();
+        let mut ck = Checkpoint::new(Checkpoint::DEFAULT_WINDOW);
+        direct.prime("a", MemMiB(4096.0));
+        ck.record_default("a", MemMiB(4096.0));
+        for seq in 0..12 {
+            let r = run("a", seq, 100.0 + 25.0 * (seq % 4) as f64);
+            direct.observe(&r);
+            ck.record(&r);
+        }
+        let mut restored = PpmPredictor::improved();
+        ck.restore_into(&mut restored);
+        for input in [0.0, 50.0, 500.0] {
+            assert_eq!(direct.predict("a", input), restored.predict("a", input));
+        }
+        // untrained type falls back to the restored default
+        assert_eq!(restored.predict("a", 1.0), direct.predict("a", 1.0));
+        let mut blank = PpmPredictor::improved();
+        Checkpoint::new(4).restore_into(&mut blank);
+        assert_eq!(blank.predict("zzz", 1.0), Allocation::Static(MemMiB::from_gib(8.0)));
+    }
+
+    /// Regression: restoring a wide-window checkpoint into a narrower
+    /// one must keep the window bounded (the eviction test used to be
+    /// `==`, which a pre-seeded oversized state slipped past) and the
+    /// result must stay loadable after save.
+    #[test]
+    fn narrow_window_bounds_restored_state() {
+        let mut wide = Checkpoint::new(8);
+        for seq in 0..8 {
+            wide.record(&run("a", seq, 10.0 + seq as f64));
+        }
+        let mut narrow = Checkpoint::new(3);
+        narrow.insert_state("a".into(), wide.types()["a"].clone());
+        assert_eq!(narrow.types()["a"].runs.len(), 3, "insert_state must trim");
+        assert_eq!(narrow.types()["a"].runs[0].seq, 5, "most recent runs kept");
+        for seq in 8..20 {
+            narrow.record(&run("a", seq, 10.0 + seq as f64));
+            assert!(narrow.types()["a"].runs.len() <= 3, "window grew past cap");
+        }
+        assert_eq!(narrow.types()["a"].total_seen, 8 + 12);
+        let path = tmp("narrow.jsonl");
+        narrow.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), narrow);
+    }
+
+    #[test]
+    fn merge_disjoint_unions_types() {
+        let mut a = Checkpoint::new(4);
+        a.record(&run("a", 0, 1.0));
+        let mut b = Checkpoint::new(4);
+        b.record(&run("b", 1, 2.0));
+        a.merge_disjoint(b);
+        assert_eq!(a.n_types(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "overlap")]
+    fn merge_rejects_overlap() {
+        let mut a = Checkpoint::new(4);
+        a.record(&run("a", 0, 1.0));
+        let mut b = Checkpoint::new(4);
+        b.record(&run("a", 1, 2.0));
+        a.merge_disjoint(b);
+    }
+
+    #[test]
+    fn load_rejects_malformed_files() {
+        let not_ours = tmp("not_ours.jsonl");
+        std::fs::write(&not_ours, "{\"kind\":\"run\"}\n").unwrap();
+        assert!(Checkpoint::load(&not_ours).is_err());
+
+        let bad_run = tmp("bad_run.jsonl");
+        std::fs::write(
+            &bad_run,
+            format!(
+                "{{\"format\":\"{FORMAT}\",\"version\":1,\"window_cap\":4}}\n\
+                 {{\"kind\":\"type\",\"task_type\":\"a\",\"total_seen\":1}}\n\
+                 {{\"kind\":\"run\",\"task_type\":\"MISMATCH\",\"seq\":0,\"input_mib\":1,\
+                 \"runtime_s\":4,\"interval_s\":2,\"samples_mib\":[1]}}\n"
+            ),
+        )
+        .unwrap();
+        let err = Checkpoint::load(&bad_run).unwrap_err();
+        assert!(format!("{err:#}").contains("line 3"), "{err:#}");
+
+        let orphan = tmp("orphan.jsonl");
+        std::fs::write(
+            &orphan,
+            format!(
+                "{{\"format\":\"{FORMAT}\",\"version\":1,\"window_cap\":4}}\n\
+                 {{\"kind\":\"run\",\"task_type\":\"a\",\"seq\":0,\"input_mib\":1,\
+                 \"runtime_s\":4,\"interval_s\":2,\"samples_mib\":[1]}}\n"
+            ),
+        )
+        .unwrap();
+        let err = Checkpoint::load(&orphan).unwrap_err();
+        assert!(format!("{err:#}").contains("run before type"), "{err:#}");
+    }
+}

@@ -1,0 +1,215 @@
+//! Streaming JSON-lines trace reader — [`read_trace_jsonl`] without
+//! the materialization: runs are yielded chunk by chunk in file order,
+//! so a multi-gigabyte trace replays in constant memory.
+//!
+//! [`ksegments_core::trace::write_trace_jsonl_ordered`] files (what `ksegments
+//! ingest` emits) stream in global submission order; plain
+//! [`ksegments_core::trace::write_trace_jsonl`] files stream grouped by task
+//! type, which still satisfies the per-type ordering contract of
+//! [`super::TraceSource`] (and is sufficient for every per-task-type
+//! consumer — only the scheduler's arrival stream cares about the
+//! global order).
+//!
+//! [`read_trace_jsonl`]: ksegments_core::trace::read_trace_jsonl
+
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use ksegments_core::trace::{parse_jsonl_record, JsonlRecord, TaskRun};
+use ksegments_core::units::MemMiB;
+
+use super::TraceSource;
+
+/// A [`TraceSource`] streaming a JSONL trace file line by line.
+pub struct JsonlReader {
+    path: PathBuf,
+    /// All `default` records, collected by a cheap line-scan pass at
+    /// open so [`TraceSource::defaults`] is available before the first
+    /// chunk (the format allows defaults anywhere in the file).
+    defaults: Vec<(String, MemMiB)>,
+    reader: Option<BufReader<File>>,
+    lineno: usize,
+}
+
+impl JsonlReader {
+    /// Open a JSONL trace file for streaming. The file is scanned once
+    /// for `default` records (and early syntax errors on them); run
+    /// records are parsed lazily per [`TraceSource::next_chunk`].
+    ///
+    /// The scan is a full sequential pass by design: the grouped
+    /// [`write_trace_jsonl`] layout interleaves each type's default
+    /// with its runs, so stopping at the first run record would
+    /// silently lose every later type's default. The pass is cheap —
+    /// lines are only JSON-parsed when they can be default records —
+    /// and the streaming read that follows is typically served from
+    /// the page cache.
+    ///
+    /// [`write_trace_jsonl`]: ksegments_core::trace::write_trace_jsonl
+    pub fn open(path: &Path) -> Result<JsonlReader> {
+        let mut defaults_map = std::collections::BTreeMap::new();
+        let scan = BufReader::new(
+            File::open(path).with_context(|| format!("opening jsonl trace {}", path.display()))?,
+        );
+        for (lineno, line) in scan.lines().enumerate() {
+            let line = line?;
+            let trimmed = line.trim();
+            if trimmed.is_empty() || !trimmed.contains("\"default\"") {
+                continue;
+            }
+            let rec = parse_jsonl_record(trimmed)
+                .with_context(|| format!("jsonl line {}", lineno + 1))?;
+            if let JsonlRecord::Default { task_type, mem } = rec {
+                defaults_map.insert(task_type, mem);
+            }
+        }
+        let mut reader = JsonlReader {
+            path: path.to_path_buf(),
+            defaults: defaults_map.into_iter().collect(),
+            reader: None,
+            lineno: 0,
+        };
+        reader.rewind()?;
+        Ok(reader)
+    }
+}
+
+impl TraceSource for JsonlReader {
+    fn origin(&self) -> String {
+        self.path.display().to_string()
+    }
+
+    fn defaults(&self) -> Vec<(String, MemMiB)> {
+        self.defaults.clone()
+    }
+
+    fn next_chunk(&mut self, max: usize) -> Result<Vec<TaskRun>> {
+        let mut out = Vec::new();
+        let Some(reader) = self.reader.as_mut() else {
+            return Ok(out); // exhausted
+        };
+        let mut line = String::new();
+        while out.len() < max.max(1) {
+            line.clear();
+            let n = reader
+                .read_line(&mut line)
+                .with_context(|| format!("reading {}", self.path.display()))?;
+            if n == 0 {
+                self.reader = None; // EOF
+                break;
+            }
+            self.lineno += 1;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let rec = parse_jsonl_record(line.trim())
+                .with_context(|| format!("jsonl line {}", self.lineno))?;
+            match rec {
+                // defaults were surfaced by the open-time scan
+                JsonlRecord::Default { .. } => continue,
+                JsonlRecord::Run(run) => out.push(run),
+            }
+        }
+        Ok(out)
+    }
+
+    fn rewind(&mut self) -> Result<()> {
+        self.reader = Some(BufReader::new(File::open(&self.path).with_context(|| {
+            format!("reopening jsonl trace {}", self.path.display())
+        })?));
+        self.lineno = 0;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use ksegments_core::trace::{write_trace_jsonl_ordered, Trace, UsageSeries};
+    use ksegments_core::units::Seconds;
+
+    fn toy_trace() -> Trace {
+        let mut t = Trace::new();
+        t.set_default("w/b", MemMiB(2000.0));
+        t.set_default("w/a", MemMiB(1000.0));
+        for seq in 0..7u64 {
+            t.push(TaskRun {
+                task_type: if seq % 2 == 0 { "w/a".into() } else { "w/b".into() },
+                input_mib: 5.0 * seq as f64,
+                runtime: Seconds(6.0),
+                series: UsageSeries::new(2.0, vec![1.0, 4.0 + seq as f64, 2.0]),
+                seq,
+            });
+        }
+        t.sort();
+        t
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("ksegments_test_jsonl");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn streams_ordered_file_in_seq_order() {
+        let t = toy_trace();
+        let path = tmp("ordered.jsonl");
+        write_trace_jsonl_ordered(&t, &path).unwrap();
+        let mut src = JsonlReader::open(&path).unwrap();
+        assert_eq!(
+            src.defaults(),
+            vec![
+                ("w/a".to_string(), MemMiB(1000.0)),
+                ("w/b".to_string(), MemMiB(2000.0)),
+            ]
+        );
+        let mut all = Vec::new();
+        loop {
+            let chunk = src.next_chunk(3).unwrap();
+            if chunk.is_empty() {
+                break;
+            }
+            all.extend(chunk);
+        }
+        let seqs: Vec<u64> = all.iter().map(|r| r.seq).collect();
+        assert_eq!(seqs, vec![0, 1, 2, 3, 4, 5, 6]);
+        // round-trip equality against the in-memory model
+        let expected: Vec<TaskRun> = t.all_runs_ordered().into_iter().cloned().collect();
+        assert_eq!(all, expected);
+    }
+
+    #[test]
+    fn rewind_restarts_the_stream() {
+        let t = toy_trace();
+        let path = tmp("rewind.jsonl");
+        write_trace_jsonl_ordered(&t, &path).unwrap();
+        let mut src = JsonlReader::open(&path).unwrap();
+        let first = src.next_chunk(100).unwrap();
+        assert_eq!(first.len(), 7);
+        assert!(src.next_chunk(1).unwrap().is_empty());
+        src.rewind().unwrap();
+        let again = src.next_chunk(100).unwrap();
+        assert_eq!(again, first);
+    }
+
+    #[test]
+    fn malformed_run_line_reports_position() {
+        let path = tmp("bad.jsonl");
+        std::fs::write(
+            &path,
+            "{\"kind\":\"run\",\"task_type\":\"a\",\"seq\":0,\"input_mib\":1,\
+             \"runtime_s\":4,\"interval_s\":2,\"samples_mib\":[1]}\n\
+             {\"kind\":\"run\",\"task_type\":\"a\",\"seq\":1,\"input_mib\":1,\
+             \"runtime_s\":-4,\"interval_s\":2,\"samples_mib\":[1]}\n",
+        )
+        .unwrap();
+        let mut src = JsonlReader::open(&path).unwrap();
+        let err = src.next_chunk(10).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 2"), "{msg:?}");
+        assert!(msg.contains("runtime_s"), "{msg:?}");
+    }
+}

@@ -1,0 +1,93 @@
+//! Trace ingestion and streaming replay — the path from a real
+//! workflow engine's monitoring output into every evaluation surface.
+//!
+//! The paper evaluates on nf-core traces captured by a Nextflow
+//! monitoring extension; everything else in the workspace consumes the
+//! [`Trace`] data model. This module closes the gap between the two
+//! and removes the requirement that a trace be fully materialized in
+//! memory before anything can run:
+//!
+//! * **parsers** ([`nextflow`]): Nextflow-style `trace.txt` TSV (task
+//!   names, `realtime`, `peak_rss`, requested `memory`, input-size
+//!   columns, with `KB`/`MB`/`GB` unit suffixes via
+//!   [`MemMiB::parse`]) plus per-task monitoring sample CSVs,
+//!   normalized into [`TaskRun`]/`UsageSeries`;
+//! * **the [`TraceSource`] trait** (defined in
+//!   `ksegments_core::source`, re-exported here): a chunked,
+//!   rewindable iterator of [`TaskRun`]s in arrival order, with
+//!   [`InMemorySource`], [`JsonlReader`] (streaming JSON-lines) and
+//!   [`NextflowDirSource`] implementations — consumed by the streaming
+//!   replay engine ([`replay_source`]), the scheduler's arrival stream
+//!   (`schedule_stream`) and the prediction service
+//!   ([`crate::coordinator::ServiceHandle::replay_source`]);
+//! * **predictor checkpointing** ([`Checkpoint`]): the fitted
+//!   per-task-type state — primed defaults plus the sliding window of
+//!   observed runs every predictor derives its fit and offsets from —
+//!   serialized as JSONL, so a replay (or a restarted service) can
+//!   warm-start instead of re-learning from scratch.
+//!
+//! CLI entry points: `ksegments ingest <dir>` (normalize a Nextflow
+//! trace directory to replay-ordered JSONL) and `ksegments replay
+//! --source <path> --method <key> [--checkpoint <path>]`.
+
+pub mod checkpoint;
+pub mod jsonl;
+pub mod nextflow;
+pub mod replay;
+
+pub use checkpoint::Checkpoint;
+pub use jsonl::JsonlReader;
+pub use nextflow::{read_nextflow_dir, NextflowDirSource};
+pub use replay::{replay_source, ReplayConfig, ReplayOutcome};
+
+// The trait and in-memory adapter live in the core layer so the
+// scheduler and evaluation grid can consume sources without linking
+// the serve stack; re-exported here to keep the historical
+// `ksegments::ingest::*` paths intact.
+pub use ksegments_core::source::{materialize, InMemorySource, TraceSource, DEFAULT_CHUNK};
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use ksegments_core::trace::{read_trace_csv, TaskRun, Trace};
+use ksegments_core::units::MemMiB;
+
+/// Open a path as a [`TraceSource`] by sniffing its shape: a directory
+/// is a Nextflow trace dir (`trace.txt` [+ `samples/`]), a `.jsonl`
+/// file streams through [`JsonlReader`], a `.csv` file is read whole
+/// (the CSV layout interleaves runs, so it cannot stream) and served
+/// from memory.
+pub fn open_source(path: &Path) -> Result<Box<dyn TraceSource>> {
+    if path.is_dir() {
+        return Ok(Box::new(NextflowDirSource::open(path)?));
+    }
+    match path.extension().and_then(|e| e.to_str()) {
+        Some("jsonl") => Ok(Box::new(JsonlReader::open(path)?)),
+        Some("csv") => {
+            let trace = read_trace_csv(path)
+                .with_context(|| format!("reading csv trace {}", path.display()))?;
+            Ok(Box::new(InMemorySource::from_trace(&trace)))
+        }
+        _ => bail!(
+            "cannot open {} as a trace source (expected a Nextflow trace \
+             directory, a .jsonl file or a .csv file)",
+            path.display()
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_source_rejects_unknown_shapes() {
+        let dir = std::env::temp_dir().join("ksegments_test_ingest");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.parquet");
+        std::fs::write(&path, b"nope").unwrap();
+        assert!(open_source(&path).is_err());
+        assert!(open_source(&dir.join("missing.jsonl")).is_err());
+    }
+}

@@ -1,0 +1,639 @@
+//! Nextflow trace ingestion: `trace.txt` TSV + per-task monitoring
+//! sample CSVs, normalized into the crate's [`Trace`] model.
+//!
+//! ## Accepted layout
+//!
+//! ```text
+//! <dir>/trace.txt          tab-separated, one header line + one row
+//!                          per task execution (Nextflow `-with-trace`)
+//! <dir>/samples/<id>.csv   optional per-task monitoring dump keyed by
+//! <dir>/monitoring/<id>.csv  the row's task_id column (either subdir)
+//! ```
+//!
+//! From `trace.txt` we read, by header name: the task type (`process`,
+//! falling back to `name` with its ` (tag)` suffix stripped), `status`
+//! (only `COMPLETED` rows become runs), `realtime` (duration syntax:
+//! `350ms`, `2.5s`, `1m 30s`, `1h 2m`), `peak_rss` and the requested
+//! `memory` (unit-suffixed via [`MemMiB::parse`]; `memory` becomes the
+//! task type's developer default), and the input size (`input_size`,
+//! else `rchar`, else `read_bytes`). Rows are ordered by the `submit`
+//! (else `start`) column when **every** completed row has a numeric
+//! value — epoch millis in Nextflow's raw mode — else the whole file
+//! keeps its on-disk order (mixing timestamp and file-index keys would
+//! missort the gap rows); the resulting rank is the run's global `seq`.
+//!
+//! A task with a monitoring CSV (`time_s,rss` rows, unit suffixes
+//! allowed, uniform sampling assumed) gets its real usage series; a
+//! task without one gets a flat single-sample series at `peak_rss`
+//! over `realtime` — peak-faithful, so static baselines and wastage
+//! accounting stay meaningful on plain `trace.txt`-only dumps.
+//!
+//! Real nf-core dumps are messy: durations come as `350ms`, `12.5s`
+//! or `1m 30s`; optional cells (`peak_rss`, `memory`, the input-size
+//! columns, `submit`) are `-` or empty for cached/virtual tasks. All
+//! of these parse; what cannot be made sense of — a malformed number,
+//! an unknown unit, or a row whose memory usage is unreconstructable
+//! (`-` peak_rss **and** no monitoring CSV) — fails with the
+//! `trace.txt` line number instead of being silently skipped or
+//! panicking downstream.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use ksegments_core::trace::{TaskRun, Trace, UsageSeries};
+use ksegments_core::units::{MemMiB, Seconds};
+
+use super::TraceSource;
+
+/// Minimum runtime / sampling interval floor (seconds): `0ms` rows
+/// must still produce a valid [`UsageSeries`].
+const MIN_INTERVAL_S: f64 = 1e-3;
+
+/// Parse a Nextflow duration: whitespace-separated tokens of
+/// `<number><unit>` with units `ms`, `s`, `m`, `h`, `d` (a bare number
+/// is seconds). Examples: `"350ms"`, `"2.5s"`, `"1m 30s"`, `"1h 2m"`.
+pub fn parse_duration_s(s: &str) -> Result<f64> {
+    let t = s.trim();
+    ensure!(!t.is_empty(), "empty duration");
+    let mut total = 0.0f64;
+    for tok in t.split_whitespace() {
+        let split = tok
+            .find(|c: char| c.is_ascii_alphabetic())
+            .unwrap_or(tok.len());
+        let (num, unit) = (&tok[..split], &tok[split..]);
+        let v: f64 = num
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad number in duration {s:?}"))?;
+        ensure!(v.is_finite() && v >= 0.0, "negative or non-finite duration {s:?}");
+        let secs = match unit.to_ascii_lowercase().as_str() {
+            "" | "s" | "sec" => v,
+            "ms" => v / 1e3,
+            "m" | "min" => v * 60.0,
+            "h" => v * 3600.0,
+            "d" => v * 86400.0,
+            other => bail!("unknown duration unit {other:?} in {s:?}"),
+        };
+        total += secs;
+    }
+    Ok(total)
+}
+
+/// One `trace.txt` row of interest, pending its usage series.
+#[derive(Debug, Clone)]
+struct IndexRow {
+    task_id: String,
+    task_type: String,
+    input_mib: f64,
+    runtime_s: f64,
+    /// `None` when the cell was `-`/empty — fine as long as a
+    /// monitoring CSV exists, a line-numbered error otherwise.
+    peak_rss_mib: Option<f64>,
+    /// 1-based `trace.txt` line, for errors raised after indexing.
+    lineno: usize,
+    seq: u64,
+}
+
+/// A [`TraceSource`] over a Nextflow trace directory.
+///
+/// `trace.txt` is indexed entirely at [`NextflowDirSource::open`] (it
+/// is the small file); the per-task monitoring CSVs — the bulk of the
+/// data — are read lazily, chunk by chunk, as the stream is consumed.
+pub struct NextflowDirSource {
+    dir: PathBuf,
+    index: Vec<IndexRow>,
+    defaults: Vec<(String, MemMiB)>,
+    skipped: usize,
+    pos: usize,
+}
+
+/// Is the field present (Nextflow writes `-` for not-available)?
+fn present(field: &str) -> Option<String> {
+    let t = field.trim();
+    if t.is_empty() || t == "-" {
+        None
+    } else {
+        Some(t.to_string())
+    }
+}
+
+/// Extract column `c` of row `f`, treating `-`/empty as absent.
+fn field(f: &[&str], c: Option<usize>) -> Option<String> {
+    c.and_then(|i| f.get(i)).copied().and_then(present)
+}
+
+impl NextflowDirSource {
+    /// Index `<dir>/trace.txt`; fails with row/line context on any
+    /// malformed field.
+    pub fn open(dir: &Path) -> Result<NextflowDirSource> {
+        let path = dir.join("trace.txt");
+        let r = BufReader::new(
+            File::open(&path).with_context(|| format!("opening {}", path.display()))?,
+        );
+        let mut lines = r.lines();
+        let header = lines
+            .next()
+            .transpose()?
+            .context("empty trace.txt (missing header)")?;
+        let cols: Vec<String> = header
+            .trim_end_matches(['\r', '\n'])
+            .split('\t')
+            .map(|c| c.trim().to_string())
+            .collect();
+        let col = |name: &str| cols.iter().position(|c| c == name);
+        let c_name = col("name");
+        let c_process = col("process");
+        ensure!(
+            c_name.is_some() || c_process.is_some(),
+            "trace.txt header has neither a name nor a process column: {header:?}"
+        );
+        let c_realtime = col("realtime")
+            .or_else(|| col("duration"))
+            .context("trace.txt header lacks a realtime/duration column")?;
+        let c_status = col("status");
+        let c_task_id = col("task_id");
+        let c_peak = col("peak_rss");
+        let c_memory = col("memory");
+        let c_input = col("input_size").or_else(|| col("rchar")).or_else(|| col("read_bytes"));
+        let c_order = col("submit").or_else(|| col("start"));
+
+        // (order_key, file_idx, row): sorted into the arrival order.
+        // order_key stays None when the submit/start field is missing
+        // or non-numeric — mixing file indices with epoch timestamps
+        // would sort those rows to the front, so any gap falls the
+        // whole file back to file order.
+        let mut rows: Vec<(Option<f64>, usize, IndexRow)> = Vec::new();
+        let mut defaults: BTreeMap<String, MemMiB> = BTreeMap::new();
+        let mut skipped = 0usize;
+        for (i, line) in lines.enumerate() {
+            let lineno = i + 2; // 1-based, after the header
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let f: Vec<&str> = line.trim_end_matches(['\r', '\n']).split('\t').collect();
+            ensure!(
+                f.len() == cols.len(),
+                "trace.txt line {lineno}: expected {} tab-separated fields, got {}",
+                cols.len(),
+                f.len()
+            );
+            if let Some(status) = field(&f, c_status) {
+                if status != "COMPLETED" {
+                    skipped += 1;
+                    continue;
+                }
+            }
+            let task_type = match field(&f, c_process) {
+                Some(p) => p,
+                None => {
+                    let name = field(&f, c_name)
+                        .with_context(|| format!("trace.txt line {lineno}: empty name"))?;
+                    // "ALIGN (sample_3)" -> "ALIGN"
+                    name.split(" (").next().unwrap_or(&name).to_string()
+                }
+            };
+            let runtime_s = {
+                let raw = field(&f, Some(c_realtime))
+                    .with_context(|| format!("trace.txt line {lineno}: missing realtime"))?;
+                parse_duration_s(&raw)
+                    .with_context(|| format!("trace.txt line {lineno}: realtime"))?
+                    .max(MIN_INTERVAL_S)
+            };
+            let peak_rss_mib = match field(&f, c_peak) {
+                Some(raw) => Some(
+                    MemMiB::parse(&raw)
+                        .map_err(|e| anyhow::anyhow!("trace.txt line {lineno}: peak_rss: {e}"))?
+                        .0,
+                ),
+                None => None,
+            };
+            if let Some(raw) = field(&f, c_memory) {
+                let mem = MemMiB::parse(&raw)
+                    .map_err(|e| anyhow::anyhow!("trace.txt line {lineno}: memory: {e}"))?;
+                // requested memory is the developer default; keep the
+                // largest request seen for the type
+                defaults
+                    .entry(task_type.clone())
+                    .and_modify(|m| *m = m.max(mem))
+                    .or_insert(mem);
+            }
+            let input_mib = match field(&f, c_input) {
+                Some(raw) => {
+                    MemMiB::parse(&raw)
+                        .map_err(|e| anyhow::anyhow!("trace.txt line {lineno}: input size: {e}"))?
+                        .0
+                }
+                None => 0.0,
+            };
+            let task_id = field(&f, c_task_id).unwrap_or_else(|| format!("row{lineno}"));
+            let order_key = field(&f, c_order)
+                .and_then(|raw| raw.parse::<f64>().ok())
+                .filter(|k| k.is_finite());
+            rows.push((
+                order_key,
+                i,
+                IndexRow {
+                    task_id,
+                    task_type,
+                    input_mib,
+                    runtime_s,
+                    peak_rss_mib,
+                    lineno,
+                    seq: 0,
+                },
+            ));
+        }
+        if rows.iter().all(|(k, _, _)| k.is_some()) {
+            rows.sort_by(|a, b| {
+                let (ka, kb) = (a.0.expect("checked"), b.0.expect("checked"));
+                ka.total_cmp(&kb).then(a.1.cmp(&b.1))
+            });
+        } // else: incomparable keys — keep file order
+        let index = rows
+            .into_iter()
+            .enumerate()
+            .map(|(seq, (_, _, mut row))| {
+                row.seq = seq as u64;
+                row
+            })
+            .collect();
+        Ok(NextflowDirSource {
+            dir: dir.to_path_buf(),
+            index,
+            defaults: defaults.into_iter().collect(),
+            skipped,
+            pos: 0,
+        })
+    }
+
+    /// Completed rows indexed (== runs the stream will yield).
+    pub fn n_rows(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Rows skipped because their status was not `COMPLETED`.
+    pub fn skipped_rows(&self) -> usize {
+        self.skipped
+    }
+
+    /// Load a row's usage series: its monitoring CSV when one exists,
+    /// else a flat single-sample series at `peak_rss` over `realtime`.
+    /// A row with neither (`-` peak_rss, no CSV) has no memory
+    /// information at all — that is a line-numbered error, not a
+    /// silent zero-usage run.
+    fn series_for(&self, row: &IndexRow) -> Result<UsageSeries> {
+        for sub in ["samples", "monitoring"] {
+            let path = self.dir.join(sub).join(format!("{}.csv", row.task_id));
+            if path.is_file() {
+                return read_samples_csv(&path, row.runtime_s);
+            }
+        }
+        let peak = row.peak_rss_mib.with_context(|| {
+            format!(
+                "trace.txt line {}: peak_rss is missing and task {} has no \
+                 monitoring CSV — the row carries no memory information",
+                row.lineno, row.task_id
+            )
+        })?;
+        Ok(UsageSeries::new(row.runtime_s.max(MIN_INTERVAL_S), vec![peak]))
+    }
+}
+
+/// Parse one monitoring sample CSV: a header line, then `time,rss`
+/// rows (times in seconds, ascending and uniformly spaced; rss with an
+/// optional unit suffix). The sampling interval is inferred from the
+/// time column; a single-row file covers the whole runtime.
+fn read_samples_csv(path: &Path, runtime_s: f64) -> Result<UsageSeries> {
+    let r = BufReader::new(
+        File::open(path).with_context(|| format!("opening {}", path.display()))?,
+    );
+    let mut times: Vec<f64> = Vec::new();
+    let mut samples: Vec<f64> = Vec::new();
+    for (i, line) in r.lines().enumerate() {
+        let lineno = i + 1;
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || i == 0 {
+            // header (required) — tolerate any two-column header text
+            if i == 0 {
+                ensure!(
+                    t.contains(','),
+                    "{} line 1: expected a time,rss header",
+                    path.display()
+                );
+            }
+            continue;
+        }
+        let (ts, ms) = t
+            .split_once(',')
+            .with_context(|| format!("{} line {lineno}: expected time,rss", path.display()))?;
+        let time: f64 = ts
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("{} line {lineno}: bad time {ts:?}", path.display()))?;
+        ensure!(
+            time.is_finite() && times.last().is_none_or(|prev| time > *prev),
+            "{} line {lineno}: times must be finite and strictly increasing",
+            path.display()
+        );
+        let mem = MemMiB::parse(ms)
+            .map_err(|e| anyhow::anyhow!("{} line {lineno}: rss: {e}", path.display()))?;
+        times.push(time);
+        samples.push(mem.0);
+    }
+    ensure!(!samples.is_empty(), "{}: no sample rows", path.display());
+    let interval = if times.len() >= 2 {
+        (times[times.len() - 1] - times[0]) / (times.len() - 1) as f64
+    } else {
+        runtime_s
+    };
+    Ok(UsageSeries::new(interval.max(MIN_INTERVAL_S), samples))
+}
+
+impl TraceSource for NextflowDirSource {
+    fn origin(&self) -> String {
+        self.dir.display().to_string()
+    }
+
+    fn defaults(&self) -> Vec<(String, MemMiB)> {
+        self.defaults.clone()
+    }
+
+    fn next_chunk(&mut self, max: usize) -> Result<Vec<TaskRun>> {
+        let end = (self.pos + max.max(1)).min(self.index.len());
+        let mut out = Vec::with_capacity(end - self.pos);
+        for row in &self.index[self.pos..end] {
+            let series = self.series_for(row).with_context(|| {
+                format!("loading monitoring series for task {}", row.task_id)
+            })?;
+            out.push(TaskRun {
+                task_type: row.task_type.clone(),
+                input_mib: row.input_mib,
+                runtime: Seconds(row.runtime_s),
+                series,
+                seq: row.seq,
+            });
+        }
+        self.pos = end;
+        Ok(out)
+    }
+
+    fn rewind(&mut self) -> Result<()> {
+        self.pos = 0;
+        Ok(())
+    }
+}
+
+/// Parse a whole Nextflow trace directory into a materialized
+/// [`Trace`] — `ksegments ingest`'s core, and the batch-surface bridge.
+pub fn read_nextflow_dir(dir: &Path) -> Result<Trace> {
+    let mut src = NextflowDirSource::open(dir)?;
+    super::materialize(&mut src)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn duration_syntax() {
+        assert_eq!(parse_duration_s("42").unwrap(), 42.0);
+        assert_eq!(parse_duration_s("350ms").unwrap(), 0.35);
+        assert_eq!(parse_duration_s("2.5s").unwrap(), 2.5);
+        assert_eq!(parse_duration_s("1m 30s").unwrap(), 90.0);
+        assert_eq!(parse_duration_s("1h 2m").unwrap(), 3720.0);
+        assert_eq!(parse_duration_s("1d").unwrap(), 86400.0);
+        assert_eq!(parse_duration_s(" 3s ").unwrap(), 3.0);
+    }
+
+    #[test]
+    fn duration_rejects_garbage() {
+        for bad in ["", "  ", "abc", "-1s", "1parsec", "1h3x"] {
+            assert!(parse_duration_s(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    fn write_dir(name: &str, trace_txt: &str, samples: &[(&str, &str)]) -> PathBuf {
+        let dir = std::env::temp_dir().join("ksegments_test_nextflow").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(dir.join("samples")).unwrap();
+        std::fs::write(dir.join("trace.txt"), trace_txt).unwrap();
+        for (id, body) in samples {
+            std::fs::write(dir.join("samples").join(format!("{id}.csv")), body).unwrap();
+        }
+        dir
+    }
+
+    const HEADER: &str =
+        "task_id\thash\tprocess\ttag\tname\tstatus\texit\tsubmit\trealtime\tpeak_rss\tmemory\trchar";
+
+    fn row(
+        id: u32,
+        process: &str,
+        status: &str,
+        submit: u64,
+        realtime: &str,
+        peak: &str,
+        mem: &str,
+        rchar: &str,
+    ) -> String {
+        format!(
+            "{id}\tha/sh{id}\t{process}\ts{id}\t{process} (s{id})\t{status}\t0\t{submit}\t\
+             {realtime}\t{peak}\t{mem}\t{rchar}"
+        )
+    }
+
+    #[test]
+    fn parses_trace_txt_with_samples_and_fallback() {
+        let trace_txt = format!(
+            "{HEADER}\n{}\n{}\n{}\n{}\n",
+            row(1, "ALIGN", "COMPLETED", 1000, "20s", "400 MB", "2 GB", "100 MB"),
+            row(2, "QUANT", "COMPLETED", 2000, "1m 10s", "1.5 GB", "4 GB", "250 MB"),
+            row(3, "ALIGN", "FAILED", 2500, "5s", "100 MB", "2 GB", "50 MB"),
+            row(4, "ALIGN", "COMPLETED", 3000, "22s", "450 MB", "2 GB", "120 MB"),
+        );
+        let dir = write_dir(
+            "basic",
+            &trace_txt,
+            &[("1", "time_s,rss\n0,100 MB\n2,250 MB\n4,400 MB\n")],
+        );
+        let mut src = NextflowDirSource::open(&dir).unwrap();
+        assert_eq!(src.n_rows(), 3);
+        assert_eq!(src.skipped_rows(), 1);
+        // defaults from the requested-memory column
+        let defaults = src.defaults();
+        assert_eq!(defaults.len(), 2);
+        assert_eq!(defaults[0].0, "ALIGN");
+        assert!((defaults[0].1 .0 - MemMiB::parse("2 GB").unwrap().0).abs() < 1e-9);
+        let runs = src.next_chunk(100).unwrap();
+        assert_eq!(runs.len(), 3);
+        // arrival order by submit; seq assigned by rank
+        assert_eq!(runs[0].task_type, "ALIGN");
+        assert_eq!(runs[1].task_type, "QUANT");
+        assert_eq!(runs[2].task_type, "ALIGN");
+        assert_eq!(runs.iter().map(|r| r.seq).collect::<Vec<_>>(), vec![0, 1, 2]);
+        // task 1 has a real series (interval inferred = 2 s)
+        assert_eq!(runs[0].series.len(), 3);
+        assert_eq!(runs[0].series.interval().0, 2.0);
+        assert!((runs[0].peak().0 - MemMiB::parse("400 MB").unwrap().0).abs() < 1e-9);
+        // task 4 falls back to a flat peak_rss series over realtime
+        assert_eq!(runs[2].series.len(), 1);
+        assert_eq!(runs[2].series.interval().0, 22.0);
+        assert!((runs[2].peak().0 - MemMiB::parse("450 MB").unwrap().0).abs() < 1e-9);
+        // runtimes parsed from duration syntax
+        assert_eq!(runs[1].runtime, Seconds(70.0));
+        // input sizes from rchar
+        assert!((runs[0].input_mib - MemMiB::parse("100 MB").unwrap().0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn read_dir_materializes_sorted_trace() {
+        let trace_txt = format!(
+            "{HEADER}\n{}\n{}\n",
+            // out-of-order submit columns: row order must not matter
+            row(2, "B", "COMPLETED", 5000, "4s", "100 MB", "1 GB", "10 MB"),
+            row(1, "A", "COMPLETED", 1000, "4s", "200 MB", "1 GB", "10 MB"),
+        );
+        let dir = write_dir("sorted", &trace_txt, &[]);
+        let trace = read_nextflow_dir(&dir).unwrap();
+        assert_eq!(trace.n_runs(), 2);
+        assert_eq!(trace.runs_of("A")[0].seq, 0);
+        assert_eq!(trace.runs_of("B")[0].seq, 1);
+    }
+
+    /// Regression: a row with a missing submit timestamp must not sort
+    /// to the front of epoch-milli rows (file-index keys are on a
+    /// different scale) — one gap falls the whole file back to file
+    /// order.
+    #[test]
+    fn missing_submit_falls_back_to_file_order() {
+        let trace_txt = format!(
+            "{HEADER}\n{}\n{}\n{}\n",
+            row(1, "A", "COMPLETED", 1700000002000, "4s", "100 MB", "1 GB", "10 MB"),
+            // '-' submit: under key-mixing this row would win seq 0
+            "2\tha/sh2\tB\ts2\tB (s2)\tCOMPLETED\t0\t-\t4s\t100 MB\t1 GB\t10 MB",
+            row(3, "C", "COMPLETED", 1700000001000, "4s", "100 MB", "1 GB", "10 MB"),
+        );
+        let dir = write_dir("mixedsubmit", &trace_txt, &[]);
+        let mut src = NextflowDirSource::open(&dir).unwrap();
+        let runs = src.next_chunk(10).unwrap();
+        let order: Vec<&str> = runs.iter().map(|r| r.task_type.as_str()).collect();
+        assert_eq!(order, vec!["A", "B", "C"], "file order must be kept");
+        // fully numeric submits do sort by timestamp (C before A)
+        let trace_txt = format!(
+            "{HEADER}\n{}\n{}\n",
+            row(1, "A", "COMPLETED", 1700000002000, "4s", "100 MB", "1 GB", "10 MB"),
+            row(3, "C", "COMPLETED", 1700000001000, "4s", "100 MB", "1 GB", "10 MB"),
+        );
+        let dir = write_dir("numericsubmit", &trace_txt, &[]);
+        let mut src = NextflowDirSource::open(&dir).unwrap();
+        let runs = src.next_chunk(10).unwrap();
+        let order: Vec<&str> = runs.iter().map(|r| r.task_type.as_str()).collect();
+        assert_eq!(order, vec!["C", "A"]);
+    }
+
+    #[test]
+    fn malformed_rows_report_their_line() {
+        let trace_txt = format!(
+            "{HEADER}\n{}\n{}\n",
+            row(1, "A", "COMPLETED", 1000, "4s", "100 MB", "1 GB", "10 MB"),
+            row(2, "A", "COMPLETED", 2000, "4s", "100 XB", "1 GB", "10 MB"),
+        );
+        let dir = write_dir("badmem", &trace_txt, &[]);
+        let err = NextflowDirSource::open(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("line 3"), "{err:#}");
+
+        let dir = write_dir("badfields", &format!("{HEADER}\na\tb\n"), &[]);
+        let err = NextflowDirSource::open(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("line 2"), "{err:#}");
+    }
+
+    /// The nf-core reality pass: `ms` durations, bare-second decimals
+    /// and `-` optional cells all parse through the full pipeline.
+    #[test]
+    fn real_nextflow_forms_parse_end_to_end() {
+        let trace_txt = format!(
+            "{HEADER}\n{}\n{}\n{}\n",
+            row(1, "A", "COMPLETED", 1000, "750ms", "100 MB", "1 GB", "10 MB"),
+            row(2, "A", "COMPLETED", 2000, "12.5s", "120 MB", "1 GB", "12 MB"),
+            // '-' in every optional column; the samples CSV supplies
+            // the usage series
+            "3\tha/sh3\tB\ts3\tB (s3)\tCOMPLETED\t0\t3000\t1m 30s\t-\t-\t-",
+        );
+        let dir = write_dir(
+            "nfforms",
+            &trace_txt,
+            &[("3", "time_s,rss\n0,600 MB\n45,900 MB\n")],
+        );
+        let mut src = NextflowDirSource::open(&dir).unwrap();
+        let runs = src.next_chunk(10).unwrap();
+        assert_eq!(runs.len(), 3);
+        assert!((runs[0].runtime.0 - 0.75).abs() < 1e-9, "750ms realtime");
+        assert!((runs[1].runtime.0 - 12.5).abs() < 1e-9, "12.5s realtime");
+        assert_eq!(runs[2].runtime, Seconds(90.0));
+        assert_eq!(runs[2].series.len(), 2, "series from the CSV despite '-' peak_rss");
+        assert!((runs[2].peak().0 - MemMiB::parse("900 MB").unwrap().0).abs() < 1e-9);
+        assert_eq!(runs[2].input_mib, 0.0, "'-' input defaults to 0");
+        // '-' memory contributes no default for B
+        assert!(src.defaults().iter().all(|(ty, _)| ty != "B"));
+    }
+
+    /// A row with neither a peak_rss value nor a monitoring CSV has no
+    /// memory information — that must be a line-numbered error, not a
+    /// silent zero-usage run.
+    #[test]
+    fn missing_peak_without_csv_is_a_line_numbered_error() {
+        let trace_txt = format!(
+            "{HEADER}\n{}\n{}\n",
+            row(1, "A", "COMPLETED", 1000, "4s", "100 MB", "1 GB", "10 MB"),
+            "2\tha/sh2\tA\ts2\tA (s2)\tCOMPLETED\t0\t2000\t4s\t-\t1 GB\t10 MB",
+        );
+        let dir = write_dir("nopeak", &trace_txt, &[]);
+        let mut src = NextflowDirSource::open(&dir).unwrap();
+        let err = src.next_chunk(10).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 3"), "{msg:?}");
+        assert!(msg.contains("peak_rss"), "{msg:?}");
+    }
+
+    /// `-` realtime on a COMPLETED row is unrecoverable and must carry
+    /// its line number too.
+    #[test]
+    fn missing_realtime_is_a_line_numbered_error() {
+        let trace_txt = format!(
+            "{HEADER}\n{}\n",
+            "2\tha/sh2\tA\ts2\tA (s2)\tCOMPLETED\t0\t2000\t-\t100 MB\t1 GB\t10 MB",
+        );
+        let dir = write_dir("nort", &trace_txt, &[]);
+        let err = NextflowDirSource::open(&dir).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 2"), "{msg:?}");
+        assert!(msg.contains("realtime"), "{msg:?}");
+    }
+
+    #[test]
+    fn malformed_sample_csv_reports_file_and_line() {
+        let trace_txt = format!(
+            "{HEADER}\n{}\n",
+            row(1, "A", "COMPLETED", 1000, "4s", "100 MB", "1 GB", "10 MB"),
+        );
+        let dir = write_dir("badcsv", &trace_txt, &[("1", "time_s,rss\n0,100 MB\n2,garbage\n")]);
+        let mut src = NextflowDirSource::open(&dir).unwrap();
+        let err = src.next_chunk(10).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 3"), "{msg:?}");
+        assert!(msg.contains("task 1"), "{msg:?}");
+    }
+
+    #[test]
+    fn missing_trace_txt_errors() {
+        let dir = std::env::temp_dir().join("ksegments_test_nextflow").join("empty");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(NextflowDirSource::open(&dir).is_err());
+    }
+}

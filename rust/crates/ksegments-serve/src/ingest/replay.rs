@@ -1,0 +1,379 @@
+//! Streaming replay: drive a [`TraceSource`] through a predictor
+//! online — the §IV evaluation protocol without a materialized trace,
+//! parallel across task types, and resumable via [`Checkpoint`]s.
+//!
+//! ## Sharded execution model
+//!
+//! Every predictor in the zoo is a collection of independent
+//! per-task-type models, so replay parallelism comes from partitioning
+//! *task types* (with the service's FNV hash,
+//! [`crate::coordinator::shard_of`]), never from splitting one type's
+//! run sequence: the main thread pulls chunks from the source in
+//! arrival order and routes each run to its owning shard thread, which
+//! owns a private predictor instance and scores its types' runs
+//! through the exact [`ksegments_core::scoring::score_run`] retry loop. A type's
+//! run sequence — the only ordering the online contract cares about —
+//! is identical for any worker count, and per-shard partial results
+//! are merged in sorted task-type order, so a replay's
+//! [`MethodReport`] and final [`Checkpoint`] are **bit-identical at
+//! any worker count** (pinned by `tests/ingest_replay.rs`).
+//!
+//! ## Warm-up and warm start
+//!
+//! The first [`ReplayConfig::warmup_per_type`] runs of each previously
+//! unseen type are folded into the model unscored (the streaming
+//! analogue of the paper's training fraction). Passing a
+//! [`Checkpoint`] restores each type's defaults and run window before
+//! the stream starts and resumes its lifetime observation count, so a
+//! replay split into N checkpointed sessions ends in the same
+//! predictor state as one uninterrupted replay.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver};
+
+use anyhow::Result;
+
+use crate::coordinator::shard_of;
+use ksegments_core::predictors::MemoryPredictor;
+use ksegments_core::scoring::{score_run, SimConfig};
+use ksegments_core::telemetry::{ArgValue, TraceEvent};
+use ksegments_core::trace::TaskRun;
+use ksegments_core::units::MemMiB;
+use ksegments_core::wastage::{MethodReport, TaskReport};
+
+use super::checkpoint::{Checkpoint, TypeState};
+use super::{TraceSource, DEFAULT_CHUNK};
+
+/// Thread-safe predictor constructor for the replay shards (the same
+/// shape as the sim layer’s `PredictorFactory`, borrowed).
+pub type MakePredictor = dyn Fn() -> Box<dyn MemoryPredictor> + Sync;
+
+/// Streaming-replay parameters.
+#[derive(Debug, Clone)]
+pub struct ReplayConfig {
+    /// Leading runs of each unseen task type folded into the model
+    /// unscored (warm-up). Checkpointed types resume their lifetime
+    /// count, so already-warm types score immediately.
+    pub warmup_per_type: usize,
+    /// Source chunk size (I/O granularity; no effect on results).
+    pub chunk: usize,
+    /// Retry-loop safety valve, as in [`SimConfig::max_attempts`].
+    pub max_attempts: u32,
+    /// Node capacity: allocations above this are clamped.
+    pub node_max: MemMiB,
+    /// Per-type window of the emitted checkpoint.
+    pub checkpoint_window: usize,
+    /// Collect per-run trace events ([`ReplayOutcome::trace_events`]).
+    /// Off by default; purely observational — scores, checkpoints and
+    /// counters are bit-identical either way. Replay has no simulated
+    /// clock, so events are stamped with the run's arrival `seq`
+    /// (microsecond slot per run), which also makes the collected
+    /// trace worker-count independent.
+    pub collect_trace: bool,
+}
+
+impl Default for ReplayConfig {
+    fn default() -> Self {
+        ReplayConfig {
+            warmup_per_type: 2,
+            chunk: DEFAULT_CHUNK,
+            max_attempts: 40,
+            node_max: MemMiB::from_gib(128.0),
+            checkpoint_window: Checkpoint::DEFAULT_WINDOW,
+            collect_trace: false,
+        }
+    }
+}
+
+impl ReplayConfig {
+    fn sim_config(&self) -> SimConfig {
+        SimConfig {
+            training_frac: 0.0,
+            max_attempts: self.max_attempts,
+            min_runs: 0,
+            node_max: self.node_max,
+        }
+    }
+}
+
+/// What a replay produces: the scored report, the final predictor
+/// state, and stream accounting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplayOutcome {
+    /// Wastage/retries per task type, sorted by type
+    /// (`training_frac` is reported as 0 — warm-up is count-based).
+    pub report: MethodReport,
+    /// Final predictor state (defaults + run windows), warm-start
+    /// input for the next session.
+    pub checkpoint: Checkpoint,
+    /// Runs consumed from the source.
+    pub runs_replayed: u64,
+    /// Of those, runs folded in unscored as warm-up.
+    pub runs_warmup: u64,
+    /// Per-run trace events (only when [`ReplayConfig::collect_trace`]
+    /// is set), merged across shards and sorted by `(ts, name)` —
+    /// `seq`-stamped, so identical at any worker count.
+    pub trace_events: Vec<TraceEvent>,
+}
+
+enum ShardMsg {
+    /// Seed a type from a checkpoint (sent before any runs).
+    Restore(String, TypeState),
+    /// Prime a developer default.
+    Prime(String, MemMiB),
+    /// A batch of this shard's runs, in arrival order.
+    Runs(Vec<TaskRun>),
+}
+
+struct ShardOut {
+    tasks: BTreeMap<String, TaskReport>,
+    checkpoint: Checkpoint,
+    replayed: u64,
+    warmup: u64,
+    trace: Vec<TraceEvent>,
+}
+
+fn shard_loop(
+    make: &MakePredictor,
+    cfg: &ReplayConfig,
+    sim_cfg: &SimConfig,
+    rx: Receiver<ShardMsg>,
+) -> ShardOut {
+    let mut predictor = make();
+    let mut checkpoint = Checkpoint::new(cfg.checkpoint_window);
+    let mut tasks: BTreeMap<String, TaskReport> = BTreeMap::new();
+    let mut seen: BTreeMap<String, u64> = BTreeMap::new();
+    let (mut replayed, mut warmup) = (0u64, 0u64);
+    let mut trace: Vec<TraceEvent> = Vec::new();
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            ShardMsg::Restore(ty, st) => {
+                if let Some(d) = st.default_mib {
+                    predictor.prime(&ty, MemMiB(d));
+                }
+                for run in &st.runs {
+                    predictor.observe(run);
+                }
+                seen.insert(ty.clone(), st.total_seen);
+                checkpoint.insert_state(ty, st);
+            }
+            ShardMsg::Prime(ty, mem) => {
+                predictor.prime(&ty, mem);
+                checkpoint.record_default(&ty, mem);
+            }
+            ShardMsg::Runs(batch) => {
+                for run in batch {
+                    let n = seen.entry(run.task_type.clone()).or_insert(0);
+                    if *n < cfg.warmup_per_type as u64 {
+                        predictor.observe(&run);
+                        warmup += 1;
+                        if cfg.collect_trace {
+                            trace.push(TraceEvent::instant(&run.task_type, "warmup", run.seq, 0));
+                        }
+                    } else {
+                        let score = score_run(predictor.as_mut(), &run, sim_cfg);
+                        if cfg.collect_trace {
+                            let mut ev = TraceEvent::instant(&run.task_type, "replay", run.seq, 0);
+                            ev.args = vec![
+                                ("seq", ArgValue::U64(run.seq)),
+                                ("wastage_gbs", ArgValue::F64(score.wastage.0)),
+                                ("retries", ArgValue::U64(u64::from(score.retries))),
+                            ];
+                            trace.push(ev);
+                        }
+                        tasks
+                            .entry(run.task_type.clone())
+                            .or_insert_with(|| TaskReport::new(&run.task_type))
+                            .record(score.wastage, score.retries);
+                    }
+                    *n += 1;
+                    replayed += 1;
+                    checkpoint.record(&run);
+                }
+            }
+        }
+    }
+    ShardOut { tasks, checkpoint, replayed, warmup, trace }
+}
+
+/// Replay a source through `workers` type-sharded predictor instances;
+/// see the module docs for the execution model and guarantees.
+///
+/// `start_from` warm-starts every shard from a prior session's
+/// [`Checkpoint`]; the returned checkpoint always reflects the state
+/// *after* this replay (restored state + this stream's runs).
+pub fn replay_source(
+    src: &mut dyn TraceSource,
+    make: &MakePredictor,
+    cfg: &ReplayConfig,
+    workers: usize,
+    start_from: Option<&Checkpoint>,
+) -> Result<ReplayOutcome> {
+    let workers = workers.max(1);
+    let method = make().name();
+    let sim_cfg = cfg.sim_config();
+
+    let mut stream_err: Option<anyhow::Error> = None;
+    let mut tasks: BTreeMap<String, TaskReport> = BTreeMap::new();
+    let mut checkpoint = Checkpoint::new(cfg.checkpoint_window);
+    let (mut runs_replayed, mut runs_warmup) = (0u64, 0u64);
+    let mut trace_events: Vec<TraceEvent> = Vec::new();
+
+    std::thread::scope(|scope| {
+        let sim_ref = &sim_cfg;
+        let mut txs = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let (tx, rx) = channel::<ShardMsg>();
+            txs.push(tx);
+            handles.push(scope.spawn(move || shard_loop(make, cfg, sim_ref, rx)));
+        }
+        // 1. seed checkpointed state, then source defaults (overriding)
+        if let Some(ck) = start_from {
+            for (ty, st) in ck.types() {
+                let _ = txs[shard_of(ty, workers)].send(ShardMsg::Restore(ty.clone(), st.clone()));
+            }
+        }
+        for (ty, mem) in src.defaults() {
+            let _ = txs[shard_of(&ty, workers)].send(ShardMsg::Prime(ty, mem));
+        }
+        // 2. stream chunks, routing each run to its type's shard
+        loop {
+            match src.next_chunk(cfg.chunk.max(1)) {
+                Err(e) => {
+                    stream_err = Some(e);
+                    break;
+                }
+                Ok(batch) if batch.is_empty() => break,
+                Ok(batch) => {
+                    let mut per: Vec<Vec<TaskRun>> = (0..workers).map(|_| Vec::new()).collect();
+                    for run in batch {
+                        per[shard_of(&run.task_type, workers)].push(run);
+                    }
+                    for (s, part) in per.into_iter().enumerate() {
+                        if !part.is_empty() {
+                            let _ = txs[s].send(ShardMsg::Runs(part));
+                        }
+                    }
+                }
+            }
+        }
+        // 3. close the channels and merge shard partials (disjoint
+        //    types; BTreeMaps keep everything in sorted-type order)
+        drop(txs);
+        for h in handles {
+            let out = h.join().expect("replay shard panicked");
+            tasks.extend(out.tasks);
+            checkpoint.merge_disjoint(out.checkpoint);
+            runs_replayed += out.replayed;
+            runs_warmup += out.warmup;
+            trace_events.extend(out.trace);
+        }
+    });
+    if let Some(e) = stream_err {
+        return Err(e.context("replaying trace source"));
+    }
+    // seq-stamped ts are unique per run, so this is a total order —
+    // the merged trace is identical at any worker count
+    trace_events.sort_by(|a, b| (a.ts_us, &a.name).cmp(&(b.ts_us, &b.name)));
+
+    let report = MethodReport::new(&method, 0.0, tasks.into_values().collect());
+    Ok(ReplayOutcome { report, checkpoint, runs_replayed, runs_warmup, trace_events })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ingest::InMemorySource;
+    use ksegments_core::predictors::ppm::PpmPredictor;
+    use ksegments_core::trace::{Trace, UsageSeries};
+    use ksegments_core::units::Seconds;
+
+    fn ramp_trace(types: &[&str], runs_per_type: usize) -> Trace {
+        let mut t = Trace::new();
+        let mut seq = 0u64;
+        for i in 0..runs_per_type {
+            for (k, ty) in types.iter().enumerate() {
+                t.set_default(ty, MemMiB(1000.0 * (k + 1) as f64));
+                let peak = 100.0 + 10.0 * i as f64 + 50.0 * k as f64;
+                let samples: Vec<f64> = (0..8).map(|j| peak * (j + 1) as f64 / 8.0).collect();
+                t.push(TaskRun {
+                    task_type: ty.to_string(),
+                    input_mib: 50.0 + 5.0 * i as f64,
+                    runtime: Seconds(16.0),
+                    series: UsageSeries::new(2.0, samples),
+                    seq,
+                });
+                seq += 1;
+            }
+        }
+        t.sort();
+        t
+    }
+
+    fn make() -> Box<dyn MemoryPredictor> {
+        Box::new(PpmPredictor::improved())
+    }
+
+    #[test]
+    fn replay_is_worker_count_independent() {
+        let trace = ramp_trace(&["w/a", "w/b", "w/c", "w/d", "w/e"], 12);
+        let cfg = ReplayConfig { chunk: 7, ..ReplayConfig::default() };
+        let mut src = InMemorySource::from_trace(&trace);
+        let base = replay_source(&mut src, &make, &cfg, 1, None).unwrap();
+        assert_eq!(base.runs_replayed, 60);
+        assert_eq!(base.runs_warmup, 10);
+        for workers in [2, 4, 8] {
+            src.rewind().unwrap();
+            let out = replay_source(&mut src, &make, &cfg, workers, None).unwrap();
+            assert_eq!(out, base, "workers={workers} diverged");
+        }
+    }
+
+    #[test]
+    fn warm_start_matches_uninterrupted_replay() {
+        let trace = ramp_trace(&["w/a", "w/b", "w/c"], 10);
+        let cfg = ReplayConfig::default();
+        // cold: one uninterrupted replay
+        let mut cold_src = InMemorySource::from_trace(&trace);
+        let cold = replay_source(&mut cold_src, &make, &cfg, 2, None).unwrap();
+        // split: first half, checkpoint, then second half warm-started
+        let all: Vec<TaskRun> = trace.all_runs_ordered().into_iter().cloned().collect();
+        let defaults = InMemorySource::from_trace(&trace).defaults();
+        let (a, b) = all.split_at(all.len() / 2);
+        let mut src_a = InMemorySource::from_runs(defaults.clone(), a.to_vec());
+        let first = replay_source(&mut src_a, &make, &cfg, 3, None).unwrap();
+        let mut src_b = InMemorySource::from_runs(defaults, b.to_vec());
+        let second = replay_source(&mut src_b, &make, &cfg, 1, Some(&first.checkpoint)).unwrap();
+        // final predictor state identical to the uninterrupted run
+        assert_eq!(second.checkpoint, cold.checkpoint);
+        // and the split sessions scored exactly the cold run's tally
+        assert_eq!(first.runs_replayed + second.runs_replayed, cold.runs_replayed);
+        assert_eq!(first.runs_warmup + second.runs_warmup, cold.runs_warmup);
+    }
+
+    #[test]
+    fn checkpointed_types_skip_warmup() {
+        let trace = ramp_trace(&["w/a"], 6);
+        let cfg = ReplayConfig { warmup_per_type: 4, ..ReplayConfig::default() };
+        let mut src = InMemorySource::from_trace(&trace);
+        let first = replay_source(&mut src, &make, &cfg, 1, None).unwrap();
+        assert_eq!(first.runs_warmup, 4);
+        assert_eq!(first.report.tasks[0].n_scored, 2);
+        // replaying again from the checkpoint: the type is warm, every
+        // run scores
+        src.rewind().unwrap();
+        let second = replay_source(&mut src, &make, &cfg, 1, Some(&first.checkpoint)).unwrap();
+        assert_eq!(second.runs_warmup, 0);
+        assert_eq!(second.report.tasks[0].n_scored, 6);
+    }
+
+    #[test]
+    fn empty_source_gives_empty_outcome() {
+        let mut src = InMemorySource::from_runs(Vec::new(), Vec::new());
+        let out = replay_source(&mut src, &make, &ReplayConfig::default(), 4, None).unwrap();
+        assert_eq!(out.runs_replayed, 0);
+        assert!(out.report.tasks.is_empty());
+        assert_eq!(out.checkpoint.n_types(), 0);
+    }
+}

@@ -1,0 +1,23 @@
+//! Serving layer of the ksegments workspace: the path from a real
+//! workflow engine into (and back out of) the prediction core.
+//!
+//! `ksegments-core` defines the data model and the streaming
+//! [`TraceSource`](ksegments_core::source::TraceSource) seam; this
+//! crate owns everything that touches files, threads and long-lived
+//! state:
+//!
+//! * [`ingest`] — Nextflow `trace.txt` + monitoring-CSV parsers, the
+//!   streaming JSONL reader, shape-sniffing [`ingest::open_source`],
+//!   the online replay engine ([`ingest::replay_source`]) and
+//!   predictor [`ingest::Checkpoint`]s for warm starts.
+//! * [`coordinator`] — the sharded in-process prediction service: a
+//!   router hashing task types onto worker shards, each owning a
+//!   private predictor, with request/response plumbing, telemetry
+//!   spans and merged metrics.
+//!
+//! The `ksegments` facade re-exports both modules under their
+//! historical single-crate paths (`ksegments::ingest`,
+//! `ksegments::coordinator`).
+
+pub mod coordinator;
+pub mod ingest;

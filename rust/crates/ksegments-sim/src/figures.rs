@@ -1,0 +1,514 @@
+//! Figure regeneration harness: one entry point per figure of the
+//! paper's evaluation (DESIGN.md §5 experiment index).
+//!
+//! Used by both the CLI (`ksegments fig7` etc.) and the `cargo bench`
+//! targets, and its rendered tables are what EXPERIMENTS.md records.
+
+use crate::parallel::{eval_cell, parallel_map, EvalGrid, PredictorFactory};
+use ksegments_core::ml::fitter::KsegFitter;
+use ksegments_core::predictors::adaptive_k::AdaptiveKPredictor;
+use ksegments_core::predictors::condor::CondorTriple;
+use ksegments_core::predictors::default_config::DefaultConfigPredictor;
+use ksegments_core::predictors::dynseg::DynSegPredictor;
+use ksegments_core::predictors::ensemble::EnsemblePredictor;
+use ksegments_core::predictors::ksegments::{KSegmentsConfig, KSegmentsPredictor, RetryStrategy};
+use ksegments_core::predictors::lr_witt::LrWittPredictor;
+use ksegments_core::predictors::ppm::PpmPredictor;
+use ksegments_core::predictors::MemoryPredictor;
+use ksegments_core::scoring::simulate_attempt;
+use ksegments_core::trace::Trace;
+use ksegments_core::units::{GbSeconds, MemMiB};
+use ksegments_core::wastage::{count_wins, render_table, MethodReport};
+use ksegments_core::workload::{eager_workflow, generate_workflow_trace, sarek_workflow};
+
+/// Which backend the k-Segments fit runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FitterChoice {
+    /// Pure-rust mirror (always available).
+    Native,
+    /// AOT JAX + Pallas module via PJRT (requires `make artifacts`).
+    Xla,
+}
+
+fn ksegments(choice: FitterChoice, k: usize, strategy: RetryStrategy) -> Box<dyn MemoryPredictor> {
+    match choice {
+        FitterChoice::Native => Box::new(KSegmentsPredictor::native(k, strategy)),
+        FitterChoice::Xla => {
+            let fitter: Box<dyn KsegFitter> = match ksegments_core::runtime::XlaFitter::load_default() {
+                Ok(f) => Box::new(f),
+                Err(e) => {
+                    eprintln!("warning: XLA fitter unavailable ({e:#}); using native fit");
+                    Box::new(ksegments_core::ml::fitter::NativeFitter)
+                }
+            };
+            let cfg = KSegmentsConfig { k, ..KSegmentsConfig::default() };
+            Box::new(KSegmentsPredictor::with_fitter(fitter, cfg, strategy))
+        }
+    }
+}
+
+/// CLI keys of the Fig. 7 predictor-zoo roster, in table-row order:
+/// the paper's §IV-C lineup plus the follow-up-literature competitors
+/// (Sizey ensemble, KS+ dynamic segmentation) and the HTCondor
+/// `3 * MemoryUsage` production heuristic.
+pub const METHOD_KEYS: &[&str] = &[
+    "default",
+    "ppm",
+    "ppm-improved",
+    "lr",
+    "ksegments-selective",
+    "ksegments-partial",
+    "ensemble",
+    "dynseg",
+    "condor",
+];
+
+/// Keys accepted by `--method` but not part of the default roster.
+pub const EXTRA_METHOD_KEYS: &[&str] = &["ksegments-adaptive"];
+
+/// Build one predictor by CLI key (`None` for unknown keys). The
+/// single source of truth for key → predictor, shared by the roster,
+/// the grid factories, and the CLI's `--method` plumbing.
+pub fn make_method(key: &str, choice: FitterChoice) -> Option<Box<dyn MemoryPredictor>> {
+    Some(match key {
+        "default" => Box::new(DefaultConfigPredictor::new()),
+        "ppm" => Box::new(PpmPredictor::original()),
+        "ppm-improved" => Box::new(PpmPredictor::improved()),
+        "lr" => Box::new(LrWittPredictor::paper_baseline()),
+        "ksegments-selective" => ksegments(choice, 4, RetryStrategy::Selective),
+        "ksegments-partial" => ksegments(choice, 4, RetryStrategy::Partial),
+        "ksegments-adaptive" => Box::new(AdaptiveKPredictor::native(RetryStrategy::Selective)),
+        "ensemble" => Box::new(EnsemblePredictor::new()),
+        "dynseg" => Box::new(DynSegPredictor::native(4, RetryStrategy::Selective)),
+        "condor" => Box::new(CondorTriple::new()),
+        _ => return None,
+    })
+}
+
+/// Resolve a `--method` selection — `"all"`, one key, or a comma list —
+/// into canonical roster keys (errors on unknown names).
+pub fn resolve_methods(selection: &str) -> Result<Vec<&'static str>, String> {
+    if selection == "all" {
+        return Ok(METHOD_KEYS.to_vec());
+    }
+    let mut out = Vec::new();
+    for part in selection.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let key = METHOD_KEYS
+            .iter()
+            .chain(EXTRA_METHOD_KEYS)
+            .find(|k| **k == part)
+            .ok_or_else(|| {
+                format!(
+                    "unknown method {part:?} (expected \"all\" or any of: {}, {})",
+                    METHOD_KEYS.join(", "),
+                    EXTRA_METHOD_KEYS.join(", ")
+                )
+            })?;
+        out.push(*key);
+    }
+    if out.is_empty() {
+        return Err("empty method selection".into());
+    }
+    Ok(out)
+}
+
+/// Thread-safe factories for a resolved key list, in the given order.
+pub fn makers_for_keys(keys: &[&'static str], choice: FitterChoice) -> Vec<PredictorFactory> {
+    keys.iter()
+        .map(|&key| {
+            // membership check only — constructing a predictor here
+            // would load (and drop) the XLA artifacts once per key
+            assert!(
+                METHOD_KEYS.contains(&key) || EXTRA_METHOD_KEYS.contains(&key),
+                "unresolved method key {key:?}"
+            );
+            Box::new(move || make_method(key, choice).expect("resolved key")) as PredictorFactory
+        })
+        .collect()
+}
+
+/// The full Fig. 7 method roster (paper §IV-C + the predictor zoo).
+pub fn method_roster(choice: FitterChoice) -> Vec<Box<dyn MemoryPredictor>> {
+    METHOD_KEYS
+        .iter()
+        .map(|k| make_method(k, choice).expect("roster key"))
+        .collect()
+}
+
+/// Names in roster order (stable across runs; used by tables).
+pub fn method_names() -> Vec<String> {
+    method_roster(FitterChoice::Native)
+        .iter()
+        .map(|m| m.name())
+        .collect()
+}
+
+/// The two paper workflows generated at a seed.
+pub fn paper_traces(seed: u64) -> Vec<Trace> {
+    vec![
+        generate_workflow_trace(&eager_workflow(), seed),
+        generate_workflow_trace(&sarek_workflow(), seed),
+    ]
+}
+
+/// One method × one fraction over all workflows, merged into one
+/// report covering all 33 evaluated tasks.
+///
+/// Each workflow gets a fresh predictor instance (the paper trains per
+/// task type and types are namespaced per workflow, but a fresh
+/// instance also resets any cross-task state) — the same per-cell unit
+/// the parallel [`EvalGrid`] executes, merged in trace order.
+pub fn evaluate_method(
+    make: &dyn Fn() -> Box<dyn MemoryPredictor>,
+    traces: &[Trace],
+    frac: f64,
+) -> MethodReport {
+    MethodReport::merged(traces.iter().map(|trace| eval_cell(make, trace, frac)))
+        .expect("at least one trace")
+}
+
+/// Full Fig. 7 grid: every method × every training fraction.
+pub struct Fig7Results {
+    pub fractions: Vec<f64>,
+    /// `by_fraction[i][m]` = report of method m at fraction i.
+    pub by_fraction: Vec<Vec<MethodReport>>,
+}
+
+/// The Fig. 7 roster as thread-safe factories, in roster order — the
+/// method axis of the parallel [`EvalGrid`].
+pub fn fig7_makers(choice: FitterChoice) -> Vec<PredictorFactory> {
+    makers_for_keys(METHOD_KEYS, choice)
+}
+
+/// Run the full Fig. 7 grid (9 methods × 3 fractions × 2 workflows =
+/// 54 independent cells) on `workers` threads. Results are identical
+/// for any worker count (see `tests/parallel_determinism.rs`).
+pub fn run_fig7(seed: u64, choice: FitterChoice, workers: usize) -> Fig7Results {
+    run_fig7_selected(seed, choice, workers, METHOD_KEYS)
+}
+
+/// [`run_fig7`] over a `--method` subset of the roster (resolved via
+/// [`resolve_methods`]), keeping the given key order as row order.
+pub fn run_fig7_selected(
+    seed: u64,
+    choice: FitterChoice,
+    workers: usize,
+    keys: &[&'static str],
+) -> Fig7Results {
+    let traces = paper_traces(seed);
+    let grid = EvalGrid::new(makers_for_keys(keys, choice), &traces, vec![0.25, 0.5, 0.75]);
+    let results = grid.run(workers);
+    Fig7Results { fractions: results.fractions, by_fraction: results.by_fraction }
+}
+
+impl Fig7Results {
+    fn rows(&self, get: impl Fn(&MethodReport) -> f64) -> Vec<(String, Vec<f64>)> {
+        let n_methods = self.by_fraction[0].len();
+        (0..n_methods)
+            .map(|m| {
+                (
+                    self.by_fraction[0][m].method.clone(),
+                    self.by_fraction.iter().map(|frs| get(&frs[m])).collect(),
+                )
+            })
+            .collect()
+    }
+
+    /// Fig. 7a: average wastage (GB·s) per method × fraction.
+    pub fn render_wastage(&self) -> String {
+        render_table(
+            "Fig 7a — average wastage per task",
+            &self.fractions,
+            &self.rows(|r| r.avg_wastage_gbs()),
+            "GB·s, mean over evaluated tasks",
+        )
+    }
+
+    /// Fig. 7b: lowest-wastage win counts per method × fraction.
+    pub fn render_wins(&self) -> String {
+        let rows: Vec<(String, Vec<f64>)> = {
+            let per_frac: Vec<Vec<(String, usize)>> =
+                self.by_fraction.iter().map(|frs| count_wins(frs)).collect();
+            let n_methods = per_frac[0].len();
+            (0..n_methods)
+                .map(|m| {
+                    (
+                        per_frac[0][m].0.clone(),
+                        per_frac.iter().map(|w| w[m].1 as f64).collect(),
+                    )
+                })
+                .collect()
+        };
+        render_table(
+            "Fig 7b — # tasks with lowest wastage",
+            &self.fractions,
+            &rows,
+            "count over evaluated tasks (ties award both)",
+        )
+    }
+
+    /// Fig. 7c: average retries per method × fraction.
+    pub fn render_retries(&self) -> String {
+        render_table(
+            "Fig 7c — average retries per task",
+            &self.fractions,
+            &self.rows(|r| r.avg_retries()),
+            "retries per scored run, mean over evaluated tasks",
+        )
+    }
+
+    /// §IV-D headline: wastage reduction of the k-Segments strategies
+    /// vs the best baseline at the given fraction (paper: 75 % →
+    /// 29.48 % Selective / 22.39 % Partial vs PPM Improved).
+    pub fn headline(&self, frac: f64) -> String {
+        let idx = self
+            .fractions
+            .iter()
+            .position(|f| (f - frac).abs() < 1e-9)
+            .expect("fraction not in grid");
+        let reports = &self.by_fraction[idx];
+        let is_ours = |name: &str| name.starts_with("k-Segments");
+        // competitors = everything that is neither ours nor the sanity
+        // default — including the zoo rows (Sizey, KS+), so the
+        // headline is a true head-to-head against the strongest rival
+        let Some((best_base, base_w)) = reports
+            .iter()
+            .filter(|r| !is_ours(&r.method) && r.method != "Default")
+            .map(|r| (r.method.clone(), r.avg_wastage_gbs()))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        else {
+            return format!(
+                "headline @ {:.0}% training — no baseline rows in this method selection\n",
+                frac * 100.0
+            );
+        };
+        let mut out = format!(
+            "headline @ {:.0}% training — best baseline: {} ({:.3} GB·s)\n",
+            frac * 100.0,
+            best_base,
+            base_w
+        );
+        for r in reports.iter().filter(|r| is_ours(&r.method)) {
+            let w = r.avg_wastage_gbs();
+            let red = 100.0 * (1.0 - w / base_w);
+            out.push_str(&format!(
+                "  {:<24} {:.3} GB·s  => wastage reduction {:+.2}%\n",
+                r.method, w, red
+            ));
+        }
+        out
+    }
+}
+
+/// Fig. 8: per-task wastage as a function of k (50 % training).
+pub struct Fig8Results {
+    pub task: String,
+    /// `(k, avg wastage GB·s)` pairs.
+    pub sweep: Vec<(usize, f64)>,
+}
+
+pub fn run_fig8(
+    seed: u64,
+    choice: FitterChoice,
+    task: &str,
+    ks: &[usize],
+    workers: usize,
+) -> Fig8Results {
+    let trace = generate_workflow_trace(&eager_workflow(), seed)
+        .filtered(|ty| ty == task);
+    assert!(trace.n_types() == 1, "task {task} not found in eager trace");
+    // one independent cell per k, on the same worker pool as fig7
+    let sweep = parallel_map(ks.len(), workers, |i| {
+        let k = ks[i];
+        let rep = eval_cell(&|| ksegments(choice, k, RetryStrategy::Selective), &trace, 0.5);
+        (k, rep.avg_wastage_gbs())
+    });
+    Fig8Results { task: task.to_string(), sweep }
+}
+
+impl Fig8Results {
+    /// ASCII rendering of the sweep (one bar per k).
+    pub fn render(&self) -> String {
+        let max = self.sweep.iter().map(|(_, w)| *w).fold(f64::MIN, f64::max);
+        let mut out = format!("## Fig 8 — wastage vs k: {}\n\n", self.task);
+        for (k, w) in &self.sweep {
+            let bar = "#".repeat(((w / max) * 50.0).round() as usize);
+            out.push_str(&format!("k={k:>2} {w:>10.3} GB·s |{bar}\n"));
+        }
+        let best = self
+            .sweep
+            .iter()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        out.push_str(&format!("\nglobal optimum at k={} ({:.3} GB·s)\n", best.0, best.1));
+        out
+    }
+}
+
+/// Fig. 4: the predicted step function for adapter removal (k = 4)
+/// next to the task's real usage curve.
+pub fn run_fig4(seed: u64, choice: FitterChoice) -> String {
+    let task = "eager/adapter_removal";
+    let trace = generate_workflow_trace(&eager_workflow(), seed).filtered(|ty| ty == task);
+    let runs = trace.runs_of(task);
+    let n_train = runs.len() / 2;
+    let mut m = ksegments(choice, 4, RetryStrategy::Selective);
+    m.prime(task, trace.default_alloc(task).unwrap());
+    for run in &runs[..n_train] {
+        m.observe(run);
+    }
+    let probe = &runs[n_train];
+    let alloc = m.predict(task, probe.input_mib);
+    let ksegments_core::predictors::Allocation::Dynamic(f) = &alloc else {
+        return "model not trained enough for a dynamic allocation".into();
+    };
+    let mut out = format!(
+        "## Fig 4 — k-Segments (k=4) on {task}\n\ninput = {:.1} MiB, true runtime = {}, predicted runtime = {}\n\n",
+        probe.input_mib,
+        probe.runtime,
+        f.predicted_runtime()
+    );
+    out.push_str("segment boundaries (s): ");
+    for b in f.bounds() {
+        out.push_str(&format!("{b:.0} "));
+    }
+    out.push_str("\nsegment allocations (MiB): ");
+    for v in f.values() {
+        out.push_str(&format!("{v:.0} "));
+    }
+    out.push('\n');
+    // ASCII overlay: allocation (#) vs usage (*) over time
+    let width = 64usize;
+    let rt = probe.runtime.0.max(f.predicted_runtime().0);
+    let peak = f.max_value().max(probe.series.peak());
+    out.push_str("\ntime →  (#: allocated, *: used)\n");
+    for row in (0..12).rev() {
+        let level = peak * (row as f64 + 0.5) / 12.0;
+        let mut line = String::with_capacity(width);
+        for col in 0..width {
+            let t = rt * col as f64 / width as f64;
+            let a = f.value_at(t);
+            let u = probe.series.value_at(t);
+            line.push(if u >= level {
+                '*'
+            } else if a >= level {
+                '#'
+            } else {
+                ' '
+            });
+        }
+        out.push_str(&format!("{level:>9.0} |{line}\n"));
+    }
+    out
+}
+
+/// Fig. 1: the optimization potential of time-varying allocation on a
+/// single bell-shaped execution — peak-static vs usage-hugging.
+pub fn run_fig1(seed: u64) -> String {
+    let task = "eager/damageprofiler"; // bell profile, like Fig. 1
+    let trace = generate_workflow_trace(&eager_workflow(), seed).filtered(|ty| ty == task);
+    let run = &trace.runs_of(task)[0];
+    let dt = run.series.interval().0;
+    let peak = run.series.peak();
+    let used: f64 = run.series.samples().iter().map(|u| u * dt).sum();
+    let static_alloc = peak * run.runtime.0;
+    let optimal_over = 0.0;
+    let static_over = static_alloc - used;
+    let default_alloc = trace.default_alloc(task).unwrap().0 * run.runtime.0;
+    let default_over = default_alloc - used;
+    let gbs = |mibs: f64| GbSeconds(MemMiB(mibs).as_gb()).0;
+    // sanity: the optimal-peak allocation really succeeds
+    let ok = simulate_attempt(
+        &run.series,
+        &ksegments_core::predictors::Allocation::Static(MemMiB(peak)),
+        1,
+    )
+    .is_success();
+    assert!(ok);
+    format!(
+        "## Fig 1 — optimization potential ({task}, one execution)\n\n\
+         runtime: {}, peak usage f(p): {:.0} MiB\n\
+         used memory integral:            {:>10.2} GB·s\n\
+         optimal (alloc == usage):        {:>10.2} GB·s over-allocation\n\
+         best static peak (q = f(p)):     {:>10.2} GB·s over-allocation\n\
+         workflow default:                {:>10.2} GB·s over-allocation\n\
+         => potential unlocked by time-varying allocation: {:.1}% of the static-peak wastage\n",
+        run.runtime,
+        peak,
+        gbs(used),
+        gbs(optimal_over),
+        gbs(static_over),
+        gbs(default_over),
+        100.0 * (1.0 - gbs(optimal_over) / gbs(static_over).max(1e-12)),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roster_has_nine_methods_with_unique_names() {
+        let names = method_names();
+        assert_eq!(names.len(), METHOD_KEYS.len());
+        assert_eq!(names.len(), 9);
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 9);
+        assert!(names.contains(&"PPM Improved".to_string()));
+        assert!(names.contains(&"k-Segments Selective".to_string()));
+        assert!(names.contains(&"Sizey Ensemble".to_string()));
+        assert!(names.contains(&"KS+ DynSeg Selective".to_string()));
+        assert!(names.contains(&"HTCondor 3x".to_string()));
+    }
+
+    #[test]
+    fn method_keys_all_construct() {
+        for key in METHOD_KEYS.iter().chain(EXTRA_METHOD_KEYS) {
+            assert!(make_method(key, FitterChoice::Native).is_some(), "key {key}");
+        }
+        assert!(make_method("nope", FitterChoice::Native).is_none());
+    }
+
+    #[test]
+    fn method_selection_resolution() {
+        assert_eq!(resolve_methods("all").unwrap(), METHOD_KEYS.to_vec());
+        assert_eq!(
+            resolve_methods("ensemble,dynseg").unwrap(),
+            vec!["ensemble", "dynseg"]
+        );
+        assert_eq!(
+            resolve_methods(" ksegments-adaptive ").unwrap(),
+            vec!["ksegments-adaptive"]
+        );
+        assert!(resolve_methods("bogus").is_err());
+        assert!(resolve_methods("").is_err());
+    }
+
+    #[test]
+    fn fig1_reports_positive_potential() {
+        let s = run_fig1(42);
+        assert!(s.contains("optimization potential"));
+        assert!(s.contains("100.0%")); // optimal removes all static waste
+    }
+
+    #[test]
+    fn fig8_sweep_shapes() {
+        let r = run_fig8(42, FitterChoice::Native, "eager/adapter_removal", &[1, 2, 4], 2);
+        assert_eq!(r.sweep.len(), 3);
+        // more segments must not be catastrophically worse on the ramp
+        let w1 = r.sweep[0].1;
+        let w4 = r.sweep[2].1;
+        assert!(w4 < w1, "k=4 ({w4}) should beat k=1 ({w1}) on a ramp profile");
+        assert!(r.render().contains("global optimum"));
+    }
+
+    #[test]
+    fn fig4_produces_step_function_plot() {
+        let s = run_fig4(42, FitterChoice::Native);
+        assert!(s.contains("segment allocations"));
+        assert!(s.contains('#'));
+        assert!(s.contains('*'));
+    }
+}

@@ -1,0 +1,25 @@
+//! Batch evaluation layer of the ksegments workspace: the worker-pool
+//! grid and the paper-figure harness.
+//!
+//! `ksegments-core` scores one predictor over one trace; this crate
+//! fans that kernel out and turns the results into the paper's
+//! artifacts:
+//!
+//! * [`parallel`] — the deterministic fixed-pool [`parallel::parallel_map`],
+//!   the (method × trace × training-fraction) [`parallel::EvalGrid`]
+//!   and the streaming-source bridge [`parallel::eval_sources`].
+//!   `workers = 1` and `workers = N` are bit-identical by
+//!   construction.
+//! * [`figures`] — the method roster (`--method` keys → predictor
+//!   factories) and the Fig. 1/4/7/8 regeneration entry points.
+//! * [`ablation`] — component knock-out sweeps over the k-Segments
+//!   configuration space.
+//!
+//! Downstream, `ksegments-sched` reuses the roster and pool for its
+//! scheduler sweeps, and the `ksegments` facade re-exports these
+//! modules under the historical `ksegments::sim` and
+//! `ksegments::bench_harness` paths.
+
+pub mod ablation;
+pub mod figures;
+pub mod parallel;

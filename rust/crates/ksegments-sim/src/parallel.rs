@@ -1,0 +1,294 @@
+//! Parallel evaluation engine — the paper's §IV grid (predictor ×
+//! trace × training fraction) is embarrassingly parallel, so the
+//! figure harness executes it on a fixed-size std-thread worker pool
+//! instead of one long sequential loop.
+//!
+//! Determinism is load-bearing (every number in EXPERIMENTS.md is
+//! regenerated from a fixed seed): each grid cell builds a **fresh**
+//! predictor and reads a shared immutable trace, so its result depends
+//! only on the cell's inputs, never on scheduling; results are
+//! re-ordered by cell index before any merge. `workers = 1` and
+//! `workers = N` therefore produce bit-identical [`MethodReport`]s —
+//! `tests/parallel_determinism.rs` locks this down.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use ksegments_core::predictors::MemoryPredictor;
+use ksegments_core::scoring::{simulate_trace, SimConfig};
+use ksegments_core::trace::Trace;
+use ksegments_core::wastage::MethodReport;
+
+/// A thread-safe predictor constructor: each grid cell (and each
+/// service shard) builds its own private model instance from one of
+/// these, so no model state is ever shared between threads.
+pub type PredictorFactory = Box<dyn Fn() -> Box<dyn MemoryPredictor> + Send + Sync>;
+
+/// Default worker-pool size: one worker per available core.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Order-preserving parallel map over `0..n` on a fixed-size pool of
+/// `workers` std threads.
+///
+/// Work is claimed dynamically (atomic counter), so stragglers don't
+/// serialise the pool, but the output vector is always `[f(0), f(1),
+/// ..., f(n-1)]` regardless of which worker computed which index.
+/// `workers <= 1` degenerates to a plain sequential map with no thread
+/// setup. A panic in any `f(i)` propagates to the caller.
+pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = workers.max(1).min(n.max(1));
+    if workers == 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<(usize, T)>> = Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i);
+                results.lock().unwrap().push((i, r));
+            });
+        }
+    });
+    let mut pairs = results.into_inner().unwrap();
+    pairs.sort_by_key(|(i, _)| *i);
+    debug_assert_eq!(pairs.len(), n);
+    pairs.into_iter().map(|(_, r)| r).collect()
+}
+
+/// Evaluate an [`EvalGrid`] over streaming [`TraceSource`]s.
+///
+/// The grid's protocol needs random access — every (method, fraction)
+/// cell re-reads every trace — so a one-pass stream cannot feed it
+/// directly (that is the serve layer's `replay_source`'s job). What
+/// streaming buys the grid is *ingestion*: each source is drained
+/// exactly once into a shared immutable [`Trace`] here, and the
+/// parallel cells then read those; an ingested Nextflow directory and
+/// a generated workload are interchangeable grid axes.
+///
+/// [`TraceSource`]: ksegments_core::source::TraceSource
+pub fn eval_sources(
+    sources: &mut [Box<dyn ksegments_core::source::TraceSource>],
+    methods: Vec<PredictorFactory>,
+    fractions: Vec<f64>,
+    workers: usize,
+) -> anyhow::Result<GridResults> {
+    let traces = sources
+        .iter_mut()
+        .map(|s| ksegments_core::source::materialize(s.as_mut()))
+        .collect::<anyhow::Result<Vec<Trace>>>()?;
+    Ok(EvalGrid::new(methods, &traces, fractions).run(workers))
+}
+
+/// Evaluate one grid cell: a fresh predictor from `make`, run online
+/// over `trace` at training fraction `frac`.
+///
+/// This is the single unit of work shared by the parallel grid, the
+/// ablation suite, and `evaluate_method` — there is exactly one code
+/// path that turns (factory, trace, fraction) into a [`MethodReport`].
+pub fn eval_cell(
+    make: &dyn Fn() -> Box<dyn MemoryPredictor>,
+    trace: &Trace,
+    frac: f64,
+) -> MethodReport {
+    let cfg = SimConfig::with_training_frac(frac);
+    let mut predictor = make();
+    simulate_trace(trace, predictor.as_mut(), &cfg)
+}
+
+/// Index triple identifying one cell of an [`EvalGrid`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EvalCell {
+    pub frac_idx: usize,
+    pub method_idx: usize,
+    pub trace_idx: usize,
+}
+
+/// The full evaluation grid of the paper's §IV: every predictor
+/// factory × every training fraction × every workflow trace.
+///
+/// Per-trace cells of the same (method, fraction) are merged in trace
+/// order after the parallel run, reproducing the sequential
+/// `evaluate_method` result bit for bit.
+pub struct EvalGrid<'a> {
+    methods: Vec<PredictorFactory>,
+    traces: &'a [Trace],
+    fractions: Vec<f64>,
+}
+
+/// Results of an [`EvalGrid`] run, indexed `[fraction][method]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GridResults {
+    pub fractions: Vec<f64>,
+    pub by_fraction: Vec<Vec<MethodReport>>,
+}
+
+impl<'a> EvalGrid<'a> {
+    pub fn new(methods: Vec<PredictorFactory>, traces: &'a [Trace], fractions: Vec<f64>) -> Self {
+        assert!(!methods.is_empty(), "grid needs at least one predictor factory");
+        assert!(!traces.is_empty(), "grid needs at least one trace");
+        assert!(!fractions.is_empty(), "grid needs at least one training fraction");
+        EvalGrid { methods, traces, fractions }
+    }
+
+    pub fn n_cells(&self) -> usize {
+        self.methods.len() * self.traces.len() * self.fractions.len()
+    }
+
+    /// Cell enumeration in canonical order: fraction-major, then
+    /// method, then trace. This order is the contract the result
+    /// indexing relies on.
+    pub fn cells(&self) -> Vec<EvalCell> {
+        let mut out = Vec::with_capacity(self.n_cells());
+        for frac_idx in 0..self.fractions.len() {
+            for method_idx in 0..self.methods.len() {
+                for trace_idx in 0..self.traces.len() {
+                    out.push(EvalCell { frac_idx, method_idx, trace_idx });
+                }
+            }
+        }
+        out
+    }
+
+    /// Execute every cell on `workers` threads and merge per-trace
+    /// reports (in trace order) into one report per (fraction, method).
+    pub fn run(&self, workers: usize) -> GridResults {
+        let cells = self.cells();
+        let reports = parallel_map(cells.len(), workers, |i| {
+            let c = cells[i];
+            eval_cell(
+                self.methods[c.method_idx].as_ref(),
+                &self.traces[c.trace_idx],
+                self.fractions[c.frac_idx],
+            )
+        });
+        // cells() is fraction-major → method → trace, so consecutive
+        // chunks of n_traces reports belong to one (fraction, method)
+        let n_traces = self.traces.len();
+        let mut it = reports.into_iter();
+        let mut by_fraction = Vec::with_capacity(self.fractions.len());
+        for _ in 0..self.fractions.len() {
+            let mut row = Vec::with_capacity(self.methods.len());
+            for _ in 0..self.methods.len() {
+                let per_trace: Vec<MethodReport> = it.by_ref().take(n_traces).collect();
+                row.push(MethodReport::merged(per_trace).expect("at least one trace per cell"));
+            }
+            by_fraction.push(row);
+        }
+        GridResults { fractions: self.fractions.clone(), by_fraction }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use ksegments_core::predictors::default_config::DefaultConfigPredictor;
+    use ksegments_core::predictors::ppm::PpmPredictor;
+    use ksegments_core::trace::{TaskRun, UsageSeries};
+    use ksegments_core::units::{MemMiB, Seconds};
+
+    fn toy_trace(ty: &str, n: usize) -> Trace {
+        let mut t = Trace::new();
+        t.set_default(ty, MemMiB(2000.0));
+        for i in 0..n {
+            let input = 100.0 + 10.0 * i as f64;
+            let peak = 10.0 + input;
+            let samples: Vec<f64> = (0..10).map(|j| peak * (j + 1) as f64 / 10.0).collect();
+            t.push(TaskRun {
+                task_type: ty.to_string(),
+                input_mib: input,
+                runtime: Seconds(20.0),
+                series: UsageSeries::new(2.0, samples),
+                seq: i as u64,
+            });
+        }
+        t.sort();
+        t
+    }
+
+    fn toy_grid(traces: &[Trace]) -> EvalGrid<'_> {
+        let methods: Vec<PredictorFactory> = vec![
+            Box::new(|| Box::new(DefaultConfigPredictor::new())),
+            Box::new(|| Box::new(PpmPredictor::improved())),
+        ];
+        EvalGrid::new(methods, traces, vec![0.25, 0.5])
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        for workers in [1, 2, 4, 9] {
+            let out = parallel_map(100, workers, |i| i * i);
+            assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn parallel_map_empty_and_oversubscribed() {
+        assert!(parallel_map(0, 8, |i| i).is_empty());
+        assert_eq!(parallel_map(3, 64, |i| i + 1), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn cell_enumeration_is_fraction_major() {
+        let traces = vec![toy_trace("a/x", 25), toy_trace("b/y", 25)];
+        let grid = toy_grid(&traces);
+        let cells = grid.cells();
+        assert_eq!(cells.len(), 2 * 2 * 2);
+        assert_eq!(cells[0], EvalCell { frac_idx: 0, method_idx: 0, trace_idx: 0 });
+        assert_eq!(cells[1], EvalCell { frac_idx: 0, method_idx: 0, trace_idx: 1 });
+        assert_eq!(cells[2], EvalCell { frac_idx: 0, method_idx: 1, trace_idx: 0 });
+        assert_eq!(cells[7], EvalCell { frac_idx: 1, method_idx: 1, trace_idx: 1 });
+    }
+
+    #[test]
+    fn grid_results_independent_of_worker_count() {
+        let traces = vec![toy_trace("a/x", 30), toy_trace("b/y", 30)];
+        let grid = toy_grid(&traces);
+        let seq = grid.run(1);
+        for workers in [2, 4, 8] {
+            assert_eq!(grid.run(workers), seq, "workers={workers} diverged");
+        }
+    }
+
+    #[test]
+    fn eval_sources_matches_direct_grid() {
+        let traces = vec![toy_trace("a/x", 30), toy_trace("b/y", 30)];
+        let direct = toy_grid(&traces).run(2);
+        let mut sources: Vec<Box<dyn ksegments_core::source::TraceSource>> = traces
+            .iter()
+            .map(|t| {
+                Box::new(ksegments_core::source::InMemorySource::from_trace(t))
+                    as Box<dyn ksegments_core::source::TraceSource>
+            })
+            .collect();
+        let methods: Vec<PredictorFactory> = vec![
+            Box::new(|| Box::new(DefaultConfigPredictor::new())),
+            Box::new(|| Box::new(PpmPredictor::improved())),
+        ];
+        let streamed = eval_sources(&mut sources, methods, vec![0.25, 0.5], 4).unwrap();
+        assert_eq!(streamed, direct);
+    }
+
+    #[test]
+    fn grid_merges_traces_per_cell() {
+        let traces = vec![toy_trace("a/x", 30), toy_trace("b/y", 30)];
+        let grid = toy_grid(&traces);
+        let res = grid.run(2);
+        assert_eq!(res.by_fraction.len(), 2);
+        assert_eq!(res.by_fraction[0].len(), 2);
+        // each merged report covers both task types, in trace order
+        let rep = &res.by_fraction[0][0];
+        let types: Vec<&str> = rep.tasks.iter().map(|t| t.task_type.as_str()).collect();
+        assert_eq!(types, vec!["a/x", "b/y"]);
+    }
+}

@@ -1,0 +1,62 @@
+//! Benchmark + figure-regeneration harness.
+//!
+//! * [`timer`] — minimal criterion-style measurement (offline cache has
+//!   no criterion) and [`timer::Stopwatch`], the workspace's only
+//!   sanctioned wall-clock (lives in `ksegments_core::util::timer`);
+//! * [`bench`] — `ksegments bench`: one `BENCH_<area>.json` perf
+//!   snapshot per area (sched / replay / grid / service), the
+//!   committed perf trajectory CI diffs against;
+//! * [`figures`] — one entry point per paper figure (Fig. 1, 4, 7a–c,
+//!   8), shared by the CLI and the `cargo bench` targets (lives in
+//!   `ksegments_sim`);
+//! * [`throughput`] — the scheduling sweeps: makespan / queue-wait /
+//!   packing tables per (policy × predictor × arrival rate), the
+//!   dependency-gated workflow tables per (policy × predictor ×
+//!   concurrent-instance count), and the failure-domain adversity
+//!   tables per (predictor × failure rate × autoscale lag) with the
+//!   `BENCH_sched.json` scheduler-throughput snapshot (lives in
+//!   `ksegments_sched`, plus [`throughput::bench_sched_json`] here).
+//!
+//! [`bench`] and [`report`] are the two aggregation surfaces that need
+//! sim + sched + serve at once, which is why they live in the facade
+//! crate rather than any single layer.
+
+pub mod bench;
+pub mod report;
+
+pub use ksegments_core::util::timer;
+pub use ksegments_sim::{ablation, figures};
+
+/// Scheduling sweep tables (re-export of `ksegments_sched::throughput`
+/// plus the facade-level [`throughput::bench_sched_json`] alias, which
+/// needs the cross-layer bench areas).
+pub mod throughput {
+    pub use ksegments_sched::throughput::*;
+
+    /// Run the failure sweep as a scheduler micro-benchmark and render
+    /// the `BENCH_sched.json` snapshot — a thin alias of the `sched`
+    /// area of [`crate::bench_harness::bench::run_bench_area`], kept
+    /// for the `bench-sched` CLI spelling. CI runs this per push so
+    /// scheduler-throughput regressions show up as a diffable number.
+    pub fn bench_sched_json(seed: u64, workers: usize) -> String {
+        crate::bench_harness::bench::run_bench_area("sched", seed, workers)
+            .expect("sched is a known bench area")
+            .to_json()
+    }
+}
+
+pub use bench::{run_bench_area, sched_snapshot, BenchSnapshot, BENCH_AREAS, BENCH_SCHEMA_VERSION};
+
+// `bench` the timer *function* (value namespace) coexists with
+// `bench` the snapshot *module* (type namespace), as it always has.
+pub use ksegments_core::util::timer::{bench, black_box, time_once, Measurement, Stopwatch};
+pub use ksegments_sim::figures::{
+    evaluate_method, fig7_makers, make_method, makers_for_keys, method_names, method_roster,
+    paper_traces, resolve_methods, run_fig1, run_fig4, run_fig7, run_fig7_selected, run_fig8,
+    Fig7Results, Fig8Results, FitterChoice, EXTRA_METHOD_KEYS, METHOD_KEYS,
+};
+pub use throughput::{
+    bench_sched_json, run_dag_throughput, run_failure_sweep, run_failure_sweep_axes,
+    run_throughput, throughput_makers, DagThroughputResults, FailureSweepResults,
+    ThroughputResults, FAILURE_SWEEP_LAGS, FAILURE_SWEEP_RATES,
+};

@@ -1,0 +1,161 @@
+//! # ksegments — dynamic memory prediction for scientific workflow tasks
+//!
+//! Production-grade reproduction of Bader et al., *Predicting Dynamic
+//! Memory Requirements for Scientific Workflow Tasks* (2023).
+//!
+//! This crate is the **compatibility facade** over the layered
+//! workspace: `ksegments-core` (data model, predictors, scoring) ←
+//! `ksegments-sim` (parallel grids, figures) ← `ksegments-sched`
+//! (cluster + discrete-event scheduler), with `ksegments-serve`
+//! (ingestion, replay, the prediction service) alongside. Every public
+//! path of the pre-workspace single crate is re-exported here
+//! unchanged, so downstream code — and this package's own tests,
+//! benches and examples — keep compiling against `ksegments::…` while
+//! a SWMS that only needs prediction can link `ksegments-core` alone.
+//! See DESIGN.md §13 for the crate DAG.
+//!
+//! The workspace implements the complete system the paper describes:
+//!
+//! * the **k-Segments** method — runtime prediction + per-segment peak
+//!   regressions merged into a monotone step allocation function, with
+//!   Selective and Partial retry strategies ([`predictors::ksegments`]);
+//! * every **baseline** it is evaluated against — workflow defaults,
+//!   Tovar et al.'s PPM (+ the paper's Improved variant), and Witt
+//!   et al.'s feedback-loop linear regression — plus the follow-up
+//!   literature's **predictor zoo**: a Sizey-style scored model
+//!   ensemble and KS+-style dynamic change-point segmentation
+//!   ([`predictors`]);
+//! * the **substrate**: a Nextflow-like workflow engine
+//!   ([`workflow`], [`engine`]), a cluster/resource-manager model
+//!   ([`cluster`]), a cgroup-style monitoring pipeline with an
+//!   in-memory time-series store ([`monitoring`], [`tsdb`]), and a
+//!   synthetic nf-core workload generator calibrated to the paper's
+//!   eager/sarek traces ([`workload`]);
+//! * the **evaluation harness**: the online simulator and wastage
+//!   accounting of §IV ([`sim`], [`metrics`]), the **parallel
+//!   evaluation engine** that runs the predictor × trace × fraction
+//!   grid on a worker pool with bit-identical results at any worker
+//!   count ([`sim::parallel`]), and the figure regeneration code
+//!   ([`bench_harness`]);
+//! * the **cluster scheduler**: a deterministic discrete-event
+//!   simulator that turns segment-wise predictions into throughput —
+//!   timed arrival streams, multi-node packing under static-peak vs
+//!   segment-wise reservation policies with time-indexed admission,
+//!   OOM-kill/requeue retry loops under real contention, and a
+//!   (policy × predictor × cluster × arrival) sweep grid ([`sched`]);
+//! * the **ingestion & replay layer**: parsers for Nextflow-style
+//!   `trace.txt` + monitoring dumps, the streaming
+//!   [`ingest::TraceSource`] abstraction feeding the replay engine,
+//!   the scheduler and the service without materializing traces, and
+//!   JSONL predictor checkpoints for warm-started replays
+//!   ([`ingest`]);
+//! * the **telemetry layer**: structured run tracing in the Chrome
+//!   `trace_event` format (open any scheduler run in Perfetto), a
+//!   Prometheus/JSON metrics registry, and per-decision prediction
+//!   provenance logs ([`telemetry`]);
+//! * the **prediction service**: the long-running coordinator a SWMS
+//!   submits to, with task types hash-partitioned across N model
+//!   threads ([`coordinator`]);
+//! * the **AOT runtime bridge**: the batched model fit is lowered from
+//!   JAX + Pallas to HLO at build time and executed through the PJRT
+//!   CPU client on the online-learning path ([`runtime`]), with a
+//!   bit-mirrored native implementation in [`ml`] used for
+//!   differential testing and as a general-shape fallback.
+//!
+//! See `DESIGN.md` for the paper→module mapping and `EXPERIMENTS.md`
+//! for reproduced-vs-paper results.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use ksegments::prelude::*;
+//!
+//! // Generate an eager-like trace and evaluate k-Segments on it.
+//! let trace = ksegments::workload::generate_workflow_trace(
+//!     &ksegments::workload::eager_workflow(), 42);
+//! let cfg = ksegments::sim::SimConfig::default();
+//! let mut method = ksegments::predictors::ksegments::KSegmentsPredictor::native(
+//!     4, ksegments::predictors::ksegments::RetryStrategy::Selective);
+//! let report = ksegments::sim::simulate_trace(&trace, &mut method, &cfg);
+//! println!("wastage = {:.2} GB·s", report.total_wastage_gbs());
+//! ```
+
+pub mod bench_harness;
+
+// Prediction-side foundation (ksegments-core), under its historical
+// module names. `wastage` is also exposed under its new canonical
+// name; `metrics` below is the compatibility alias.
+pub use ksegments_core::{
+    ml, monitoring, predictors, rng, runtime, trace, tsdb, units, util, wastage, workload,
+};
+
+// Scheduling layer (ksegments-sched).
+pub use ksegments_sched::{cluster, engine, sched};
+
+// Serving layer (ksegments-serve). `ingest` re-exports the core
+// `source` items (TraceSource, InMemorySource, materialize) next to
+// the file-backed readers, so the historical flat paths survive.
+pub use ksegments_serve::{coordinator, ingest};
+
+/// Wastage accounting and report tables (compatibility alias).
+///
+/// The canonical home is [`wastage`] (`ksegments_core::wastage`) —
+/// renamed from `metrics` when the workspace split landed, because the
+/// old name collided with the operational metrics registry in
+/// [`telemetry::registry`]. This alias keeps `ksegments::metrics::…`
+/// paths compiling; new code should prefer [`wastage`].
+pub mod metrics {
+    pub use ksegments_core::wastage::*;
+}
+
+/// The online evaluation protocol and its parallel fan-out.
+///
+/// Stitches the historical `ksegments::sim` surface back together
+/// from two workspace layers: the single-run scoring kernel
+/// (`ksegments_core::scoring`) and the worker-pool grid
+/// (`ksegments_sim::parallel`).
+pub mod sim {
+    pub use ksegments_core::scoring::*;
+    pub use ksegments_sim::parallel;
+    pub use ksegments_sim::parallel::{
+        default_workers, eval_cell, eval_sources, parallel_map, EvalCell, EvalGrid, GridResults,
+        PredictorFactory,
+    };
+}
+
+/// Cross-cutting observability: run tracing, metrics, provenance.
+///
+/// The engine-agnostic primitives live in `ksegments_core::telemetry`;
+/// the engine-event mapping ([`trace_engine_event`]) lives in
+/// `ksegments_sched::telemetry_ext`. Both are re-exported here under
+/// the historical flat path.
+///
+/// [`trace_engine_event`]: ksegments_sched::telemetry_ext::trace_engine_event
+pub mod telemetry {
+    pub use ksegments_core::telemetry::*;
+    pub use ksegments_sched::telemetry_ext::trace_engine_event;
+}
+
+/// Workflow DAG specifications (re-export; lives in [`workload`]).
+pub mod workflow {
+    pub use crate::workload::{TaskTypeSpec, WorkflowSpec};
+}
+
+/// Most-used types, re-exported for downstream convenience.
+pub mod prelude {
+    pub use crate::ingest::{replay_source, Checkpoint, InMemorySource, TraceSource};
+    pub use crate::metrics::{MethodReport, TaskReport};
+    pub use crate::ml::step_fn::StepFunction;
+    pub use crate::predictors::{Allocation, FailureInfo, MemoryPredictor};
+    pub use crate::sched::{
+        schedule_stream, schedule_trace, schedule_workflows, ReservationPolicy, SchedConfig,
+        SchedReport, WorkflowSource,
+    };
+    pub use crate::sim::{simulate_trace, SimConfig};
+    pub use crate::telemetry::{
+        ChromeTraceSink, NullSink, Registry, RunTelemetry, TraceEvent, TraceSink, VecSink,
+    };
+    pub use crate::trace::{TaskRun, Trace, UsageSeries};
+    pub use crate::units::{GbSeconds, MemMiB, Seconds};
+    pub use crate::workload::{eager_workflow, generate_workflow_trace, sarek_workflow};
+}

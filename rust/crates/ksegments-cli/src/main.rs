@@ -20,6 +20,8 @@
 //! ksegments bench-sched [--out FILE]              # BENCH_sched.json snapshot
 //! ksegments ingest    DIR [--out FILE]            # Nextflow trace -> jsonl
 //! ksegments replay    --source PATH --method M    # streaming replay
+//! ksegments serve-tcp [--addr H:P] [--shards N]   # TCP prediction service
+//! ksegments loadgen   --source PATH [--qps Q]     # TCP load generator
 //! ```
 //!
 //! (Arg parsing is hand-rolled: the offline crate cache has no clap;
@@ -60,6 +62,13 @@ USAGE:
   ksegments validate-runtime
   ksegments serve     [--seed N] [--shards N] [--workers N] [--source PATH]
                       [--trace-out FILE] [--metrics-out FILE]
+  ksegments serve-tcp [--addr HOST:PORT] [--shards N] [--method METHOD]
+                      [--max-frame BYTES] [--checkpoint FILE]
+                      [--checkpoint-out FILE] [--port-file FILE]
+                      [--metrics-out FILE]
+  ksegments loadgen   --source PATH [--addr HOST:PORT] [--connections N]
+                      [--qps Q] [--duration D] [--shutdown]
+                      [--shards N] [--method METHOD] [--bench-out FILE]
   ksegments schedule  [--nodes N] [--node-gib G] [--arrival SECS]
                       [--policy static|segment|both] [--method METHOD]
                       [--frac F] [--seed N] [--workflow W]
@@ -123,6 +132,27 @@ bench runs the perf areas (sched | replay | grid | service; repeat
 --out-dir — the committed perf trajectory CI diffs against.
 bench-sched is the sched area under its original name (engine
 events/s).
+
+serve-tcp binds the prediction service behind the length-prefixed
+JSONL TCP protocol (DESIGN.md §14): predict / complete /
+report_failure / replay / stats / shutdown frames, pipelined per
+connection with in-order responses. --addr defaults to 127.0.0.1:0
+(ephemeral; the bound address is printed, and --port-file FILE writes
+the port for scripts). --checkpoint warm-starts the predictors;
+--checkpoint-out saves the (restored + newly observed) state on
+drain, byte-identical to an uninterrupted run. The process exits when
+a client sends a shutdown frame.
+
+loadgen replays a trace source against a server over --connections
+TCP connections at an aggregate --qps (0 = unthrottled), reporting
+p50/p99/p999 predict latency and served throughput. --duration D
+(e.g. 2s, 500ms) rewinds the source until D has elapsed; --shutdown
+drains the server afterwards; --bench-out FILE writes a
+BENCH_serve.json perf snapshot. Without --addr it spawns an
+in-process serve-tcp (--shards/--method apply) and drains it when
+done. Task types are routed to connections with the service's own
+shard hash, so a TCP replay's predictions and final stats are
+bit-identical to the in-process replay of the same source.
 
 ingest normalizes a Nextflow trace directory (trace.txt [+ samples/])
 into the crate's replay-ordered JSONL trace format.
@@ -393,6 +423,184 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let mut reg = ksegments::telemetry::Registry::new();
         ksegments::coordinator::export_service_metrics(&per_shard, &mut reg);
         write_metrics(&reg, path)?;
+    }
+    Ok(())
+}
+
+/// Parse a human duration: `2s`, `500ms`, or bare seconds (`1.5`).
+fn parse_duration_s(s: &str) -> Result<f64> {
+    let (num, scale) = if let Some(v) = s.strip_suffix("ms") {
+        (v, 1e-3)
+    } else if let Some(v) = s.strip_suffix('s') {
+        (v, 1.0)
+    } else {
+        (s, 1.0)
+    };
+    let v: f64 = num
+        .trim()
+        .parse()
+        .with_context(|| format!("invalid duration {s:?} (expected e.g. 2s, 500ms)"))?;
+    if !v.is_finite() || v < 0.0 {
+        bail!("duration must be finite and non-negative, got {s:?}");
+    }
+    Ok(v * scale)
+}
+
+/// Resolve `--method` (validated now, so a typo fails before binding)
+/// into a per-shard predictor factory.
+fn shard_factory(
+    args: &Args,
+) -> Result<(String, impl Fn(usize) -> Box<dyn MemoryPredictor>)> {
+    let method = args
+        .kv
+        .get("method")
+        .map(String::as_str)
+        .unwrap_or("ksegments-selective")
+        .to_string();
+    method_by_name(&method, args.fitter())?;
+    let choice = args.fitter();
+    let key = method.clone();
+    let factory =
+        move |_: usize| method_by_name(&key, choice).expect("method validated at startup");
+    Ok((method, factory))
+}
+
+fn cmd_serve_tcp(args: &Args) -> Result<()> {
+    use ksegments::net::{export_net_metrics, NetServer, NetServerConfig};
+
+    let addr = args.kv.get("addr").map(String::as_str).unwrap_or("127.0.0.1:0");
+    let shards = args.shards();
+    let (method, factory) = shard_factory(args)?;
+    let mut cfg = NetServerConfig::default();
+    if let Some(v) = args.kv.get("max-frame") {
+        cfg.max_frame = v.parse::<usize>().context("--max-frame (bytes)")?.max(64);
+    }
+    if let Some(p) = args.kv.get("checkpoint") {
+        let ck = ksegments::ingest::Checkpoint::load(&PathBuf::from(p))?;
+        println!(
+            "warm start: {} task types, {} runs seen, from {p}",
+            ck.n_types(),
+            ck.total_seen()
+        );
+        cfg.restore = Some(ck);
+    }
+    cfg.checkpoint_out = args.kv.get("checkpoint-out").map(PathBuf::from);
+    let svc = ShardedPredictionService::spawn(shards, factory);
+    let server = NetServer::spawn(addr, svc, cfg)?;
+    let local = server.local_addr();
+    println!("serving on {local} ({shards} shards, method {method}); drain with a shutdown frame");
+    if let Some(p) = args.kv.get("port-file") {
+        std::fs::write(p, format!("{}\n", local.port())).with_context(|| p.clone())?;
+    }
+    let report = server.wait()?;
+    for (s, stats) in report.per_shard.iter().enumerate() {
+        println!(
+            "shard {s}: {} predictions, {} completions, {} failures, {} wakeups",
+            stats.predictions, stats.completions, stats.failures, stats.wakeups
+        );
+    }
+    let total = report.total();
+    println!(
+        "drained: {} predictions, {} completions, {} failures over {} connections \
+         ({} frames, {} protocol errors)",
+        total.predictions,
+        total.completions,
+        total.failures,
+        report.net.connections,
+        report.net.frames,
+        report.net.errors
+    );
+    if let Some(p) = &report.checkpoint_out {
+        println!("checkpoint -> {}", p.display());
+    }
+    if let Some(path) = args.kv.get("metrics-out") {
+        let mut reg = ksegments::telemetry::Registry::new();
+        ksegments::coordinator::export_service_metrics(&report.per_shard, &mut reg);
+        export_net_metrics(&report.net, &mut reg);
+        write_metrics(&reg, path)?;
+    }
+    Ok(())
+}
+
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    use ksegments::net::{run_loadgen, LoadgenConfig, NetServer, NetServerConfig};
+
+    let src_path = PathBuf::from(
+        args.kv
+            .get("source")
+            .context("--source required (a .jsonl/.csv trace or a Nextflow trace dir)")?,
+    );
+    let mut src = ksegments::ingest::open_source(&src_path)?;
+    let mut cfg = LoadgenConfig::default();
+    if let Some(c) = args.kv.get("connections") {
+        cfg.connections = c.parse::<usize>().context("--connections")?.max(1);
+    }
+    if let Some(q) = args.kv.get("qps") {
+        cfg.qps = q.parse::<f64>().context("--qps")?;
+        if !cfg.qps.is_finite() || cfg.qps < 0.0 {
+            bail!("--qps must be finite and >= 0 (0 = unthrottled)");
+        }
+    }
+    if let Some(d) = args.kv.get("duration") {
+        cfg.duration_s = Some(parse_duration_s(d)?);
+    }
+    cfg.send_shutdown = args.flag("shutdown");
+
+    // target an external server, or spawn one in-process
+    let (addr, spawned) = match args.kv.get("addr") {
+        Some(a) => (a.clone(), None),
+        None => {
+            let shards = args.shards();
+            let (method, factory) = shard_factory(args)?;
+            let svc = ShardedPredictionService::spawn(shards, factory);
+            let server = NetServer::spawn("127.0.0.1:0", svc, NetServerConfig::default())?;
+            let a = server.local_addr().to_string();
+            println!("spawned in-process server on {a} ({shards} shards, method {method})");
+            (a, Some(server))
+        }
+    };
+    let report = run_loadgen(&addr, src.as_mut(), &cfg)?;
+    println!(
+        "loadgen: {} runs over {} connections in {:.2}s wall — {:.0} predictions/s",
+        report.runs_fed, report.connections, report.wall_s, report.predict_rps
+    );
+    println!(
+        "predict latency: p50 {:.3} ms  p99 {:.3} ms  p999 {:.3} ms ({} errors)",
+        report.p50_ms, report.p99_ms, report.p999_ms, report.errors
+    );
+    println!(
+        "server totals: {} predictions, {} completions, {} failures",
+        report.stats.predictions, report.stats.completions, report.stats.failures
+    );
+    if let Some(server) = spawned {
+        // the shutdown frame (if sent) already set the stop flag;
+        // stop() is idempotent on top of it and joins either way
+        let sreport = server.stop()?;
+        println!(
+            "in-process server drained ({} connections, {} frames, {} protocol errors)",
+            sreport.net.connections, sreport.net.frames, sreport.net.errors
+        );
+    }
+    if let Some(path) = args.kv.get("bench-out") {
+        let snap = ksegments::bench_harness::BenchSnapshot {
+            area: "serve",
+            seed: args.seed(),
+            workers: report.connections,
+            counts: vec![
+                ("runs_fed", report.runs_fed),
+                ("predictions", report.stats.predictions),
+                ("completions", report.stats.completions),
+                ("errors", report.errors),
+            ],
+            wall_s: report.wall_s,
+            throughput: report.predict_rps,
+            throughput_unit: "predictions_per_s",
+        };
+        std::fs::write(path, format!("{}\n", snap.to_json())).with_context(|| path.clone())?;
+        println!("wrote serving benchmark snapshot to {path}");
+    }
+    if report.errors > 0 {
+        bail!("{} request errors during loadgen", report.errors);
     }
     Ok(())
 }
@@ -874,6 +1082,8 @@ fn real_main() -> Result<()> {
         }
         "validate-runtime" => cmd_validate_runtime(),
         "serve" => cmd_serve(&args),
+        "serve-tcp" => cmd_serve_tcp(&args),
+        "loadgen" => cmd_loadgen(&args),
         "schedule" => cmd_schedule(&args),
         "bench" => cmd_bench(&args),
         "bench-sched" => {

@@ -30,10 +30,11 @@ fn default_record(task_type: &str, mem: MemMiB) -> Json {
     ])
 }
 
-/// The canonical JSONL `run` record — the single shape
-/// [`parse_jsonl_record`] accepts, shared by the trace writers and the
-/// checkpoint writer so the formats cannot drift apart.
-pub(crate) fn run_record(run: &TaskRun) -> Json {
+/// The canonical JSON `run` record — the single shape
+/// [`parse_jsonl_record`] accepts, shared by the trace writers, the
+/// checkpoint writer and the network wire protocol so the formats
+/// cannot drift apart.
+pub fn run_record(run: &TaskRun) -> Json {
     Json::obj(vec![
         ("kind", "run".into()),
         ("task_type", run.task_type.as_str().into()),
@@ -70,43 +71,55 @@ pub fn parse_jsonl_record(line: &str) -> Result<JsonlRecord> {
             );
             Ok(JsonlRecord::Default { task_type: ty, mem: MemMiB(mem) })
         }
-        "run" => {
-            let runtime = rec.get("runtime_s").as_f64().context("runtime_s")?;
-            ensure!(
-                runtime.is_finite() && runtime >= 0.0,
-                "negative or non-finite runtime_s {runtime}"
-            );
-            let interval = rec.get("interval_s").as_f64().context("interval_s")?;
-            ensure!(
-                interval.is_finite() && interval > 0.0,
-                "non-positive or non-finite interval_s {interval}"
-            );
-            let input = rec.get("input_mib").as_f64().context("input_mib")?;
-            ensure!(
-                input.is_finite() && input >= 0.0,
-                "negative or non-finite input_mib {input}"
-            );
-            let samples: Vec<f64> = rec
-                .get("samples_mib")
-                .as_arr()
-                .context("samples_mib")?
-                .iter()
-                .map(|v| v.as_f64().context("non-numeric sample"))
-                .collect::<Result<_>>()?;
-            ensure!(
-                samples.iter().all(|s| s.is_finite() && *s >= 0.0),
-                "negative or non-finite sample in samples_mib"
-            );
-            Ok(JsonlRecord::Run(TaskRun {
-                task_type: ty,
-                input_mib: input,
-                runtime: Seconds(runtime),
-                series: UsageSeries::new(interval, samples),
-                seq: rec.get("seq").as_u64().context("seq")?,
-            }))
-        }
+        "run" => Ok(JsonlRecord::Run(run_from_json(&rec)?)),
         other => bail!("unknown kind {other:?}"),
     }
+}
+
+/// Validate + convert an already-parsed JSON object into a
+/// [`TaskRun`] — the shared kernel behind [`parse_jsonl_record`]'s
+/// `run` arm and the network protocol's `complete`/`replay` request
+/// frames. Accepts exactly the [`run_record`] shape; the `kind` field
+/// is ignored here (the JSONL reader dispatches on it beforehand).
+pub fn run_from_json(rec: &Json) -> Result<TaskRun> {
+    let ty = rec
+        .get("task_type")
+        .as_str()
+        .context("missing task_type")?
+        .to_string();
+    let runtime = rec.get("runtime_s").as_f64().context("runtime_s")?;
+    ensure!(
+        runtime.is_finite() && runtime >= 0.0,
+        "negative or non-finite runtime_s {runtime}"
+    );
+    let interval = rec.get("interval_s").as_f64().context("interval_s")?;
+    ensure!(
+        interval.is_finite() && interval > 0.0,
+        "non-positive or non-finite interval_s {interval}"
+    );
+    let input = rec.get("input_mib").as_f64().context("input_mib")?;
+    ensure!(
+        input.is_finite() && input >= 0.0,
+        "negative or non-finite input_mib {input}"
+    );
+    let samples: Vec<f64> = rec
+        .get("samples_mib")
+        .as_arr()
+        .context("samples_mib")?
+        .iter()
+        .map(|v| v.as_f64().context("non-numeric sample"))
+        .collect::<Result<_>>()?;
+    ensure!(
+        samples.iter().all(|s| s.is_finite() && *s >= 0.0),
+        "negative or non-finite sample in samples_mib"
+    );
+    Ok(TaskRun {
+        task_type: ty,
+        input_mib: input,
+        runtime: Seconds(runtime),
+        series: UsageSeries::new(interval, samples),
+        seq: rec.get("seq").as_u64().context("seq")?,
+    })
 }
 
 /// Write a trace as JSON lines: a `default` record per task type with a

@@ -11,10 +11,9 @@ mod io;
 mod series;
 
 pub use io::{
-    parse_jsonl_record, read_trace_csv, read_trace_jsonl, write_trace_csv, write_trace_jsonl,
-    write_trace_jsonl_ordered, JsonlRecord,
+    parse_jsonl_record, read_trace_csv, read_trace_jsonl, run_from_json, run_record,
+    write_trace_csv, write_trace_jsonl, write_trace_jsonl_ordered, JsonlRecord,
 };
-pub(crate) use io::run_record;
 pub use series::UsageSeries;
 
 use std::collections::BTreeMap;

@@ -46,6 +46,11 @@ enum Request {
         reply: Sender<Allocation>,
     },
     Complete { run: Box<TaskRun> },
+    /// Checkpoint warm-start: feed a historical run into the model
+    /// without counting it as new traffic (the completion counter is
+    /// untouched, so stats after a warm restart reflect only what the
+    /// restarted service actually served).
+    Restore { run: Box<TaskRun> },
     Stats { reply: Sender<ServiceStats> },
     Shutdown,
 }
@@ -220,13 +225,37 @@ impl ServiceHandle {
         }
     }
 
-    /// Aggregated counters across all shards (blocking).
+    /// Warm-start every shard from a saved predictor checkpoint: prime
+    /// each recorded default, then feed each windowed run (oldest
+    /// first) through the owning shard's `observe` — the channel-level
+    /// mirror of [`Checkpoint::restore_into`]. Restored history never
+    /// bumps the service counters, so stats after a warm restart count
+    /// only new traffic; per-type FIFO routing guarantees any request
+    /// sent afterwards observes the fully restored state.
+    ///
+    /// [`Checkpoint::restore_into`]: crate::ingest::Checkpoint::restore_into
+    pub fn restore_checkpoint(&self, ck: &crate::ingest::Checkpoint) {
+        for (ty, st) in ck.types() {
+            if let Some(d) = st.default_mib {
+                self.prime(ty, MemMiB(d));
+            }
+            for run in &st.runs {
+                let _ = self.tx_for(ty).send(Request::Restore { run: Box::new(run.clone()) });
+            }
+        }
+    }
+
+    /// Aggregated counters across all shards (blocking) — the live
+    /// snapshot-while-running path: the model threads keep serving,
+    /// and per-shard FIFO ordering makes each shard's answer exact as
+    /// of every request that shard had ingested when it replied.
     pub fn stats(&self) -> ServiceStats {
         ServiceStats::aggregated(&self.per_shard_stats())
     }
 
     /// Per-shard counters (blocking; a shard that already shut down
-    /// reports zeros).
+    /// reports zeros). See [`ServiceHandle::try_per_shard_stats`] for
+    /// the variant that reports a partial roster as unavailable.
     pub fn per_shard_stats(&self) -> Vec<ServiceStats> {
         self.txs
             .iter()
@@ -236,6 +265,22 @@ impl ServiceHandle {
                     return ServiceStats::default();
                 }
                 rx.recv().unwrap_or_default()
+            })
+            .collect()
+    }
+
+    /// Live per-shard snapshot; `None` once any shard has shut down —
+    /// unlike [`ServiceHandle::per_shard_stats`], a dead shard makes
+    /// the whole snapshot unavailable instead of being silently
+    /// reported as zeros (what the network `stats` frame relies on to
+    /// never under-report totals).
+    pub fn try_per_shard_stats(&self) -> Option<Vec<ServiceStats>> {
+        self.txs
+            .iter()
+            .map(|tx| {
+                let (reply, rx) = channel();
+                tx.send(Request::Stats { reply }).ok()?;
+                rx.recv().ok()
             })
             .collect()
     }
@@ -303,6 +348,13 @@ impl ShardedPredictionService {
 
     pub fn handle(&self) -> ServiceHandle {
         self.handle.clone()
+    }
+
+    /// Live aggregated counters without stopping the service — the
+    /// snapshot-while-running path (the network `stats` frame and any
+    /// in-process observer poll this while traffic is flowing).
+    pub fn stats(&self) -> ServiceStats {
+        self.handle.stats()
     }
 
     /// Stop all shards and return their aggregated final counters.
@@ -418,6 +470,7 @@ fn model_loop(
                     stats.completions += 1;
                     predictor.observe(&run);
                 }
+                Request::Restore { run } => predictor.observe(&run),
                 Request::Stats { reply } => {
                     let _ = reply.send(stats);
                 }
@@ -673,5 +726,70 @@ mod tests {
         // batching can never take MORE wakeups than messages (+1 for
         // the shutdown); under any real schedule it takes far fewer
         assert!(stats.wakeups <= stats.completions + 1, "{stats:?}");
+    }
+
+    #[test]
+    fn live_stats_snapshot_while_running() {
+        let svc = ShardedPredictionService::spawn(2, |_| Box::new(DefaultConfigPredictor::new()));
+        let h = svc.handle();
+        h.prime("w/a", MemMiB(512.0));
+        for _ in 0..5 {
+            let _ = h.predict("w/a", 1.0);
+        }
+        // snapshot without stopping: the per-shard FIFO means every
+        // predict answered so far is already counted
+        let live = svc.stats();
+        assert_eq!(live.predictions, 5);
+        let per_shard = h.try_per_shard_stats().expect("all shards up");
+        assert_eq!(per_shard.len(), 2);
+        assert_eq!(ServiceStats::aggregated(&per_shard).predictions, 5);
+        // the service keeps serving after a snapshot
+        let _ = h.predict("w/a", 1.0);
+        assert_eq!(svc.shutdown().predictions, 6);
+    }
+
+    #[test]
+    fn try_per_shard_stats_unavailable_after_shutdown() {
+        let svc = ShardedPredictionService::spawn(2, |_| Box::new(DefaultConfigPredictor::new()));
+        let h = svc.handle();
+        drop(svc);
+        // the lossy variant silently zeroes dead shards ...
+        assert_eq!(ServiceStats::aggregated(&h.per_shard_stats()), ServiceStats::default());
+        // ... the strict one refuses to under-report
+        assert!(h.try_per_shard_stats().is_none());
+    }
+
+    #[test]
+    fn restore_checkpoint_reproduces_observed_state() {
+        use crate::ingest::Checkpoint;
+
+        // train one service directly ...
+        let direct = PredictionService::spawn(Box::new(KSegmentsPredictor::native(
+            4,
+            RetryStrategy::Selective,
+        )));
+        let hd = direct.handle();
+        hd.prime("w/t", MemMiB(2048.0));
+        let mut ck = Checkpoint::new(Checkpoint::DEFAULT_WINDOW);
+        ck.record_default("w/t", MemMiB(2048.0));
+        for i in 0..12 {
+            let r = run(100.0 + 10.0 * i as f64, 200.0 + 10.0 * i as f64);
+            ck.record(&r);
+            hd.complete(r);
+        }
+        let direct_alloc = hd.predict("w/t", 150.0);
+
+        // ... and warm-start a fresh one from the checkpoint alone
+        let warm = PredictionService::spawn(Box::new(KSegmentsPredictor::native(
+            4,
+            RetryStrategy::Selective,
+        )));
+        let hw = warm.handle();
+        hw.restore_checkpoint(&ck);
+        assert_eq!(hw.predict("w/t", 150.0), direct_alloc);
+        // restored history is not new traffic: only the probe counts
+        let stats = warm.shutdown();
+        assert_eq!(stats.completions, 0);
+        assert_eq!(stats.predictions, 1);
     }
 }

@@ -14,10 +14,16 @@
 //!   router hashing task types onto worker shards, each owning a
 //!   private predictor, with request/response plumbing, telemetry
 //!   spans and merged metrics.
+//! * [`net`] — the TCP front of the coordinator: a length-prefixed
+//!   JSONL wire protocol ([`net::NetServer`]/[`net::NetClient`]) with
+//!   per-connection pipelining, typed protocol errors, graceful drain,
+//!   checkpoint-backed warm restart, and a QPS-paced multi-connection
+//!   load generator ([`net::run_loadgen`]).
 //!
-//! The `ksegments` facade re-exports both modules under their
+//! The `ksegments` facade re-exports these modules under their
 //! historical single-crate paths (`ksegments::ingest`,
-//! `ksegments::coordinator`).
+//! `ksegments::coordinator`, `ksegments::net`).
 
 pub mod coordinator;
 pub mod ingest;
+pub mod net;

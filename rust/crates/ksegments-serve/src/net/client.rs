@@ -1,0 +1,158 @@
+//! Blocking client for the TCP prediction protocol.
+//!
+//! [`NetClient`] mirrors the in-process [`ServiceHandle`] surface
+//! (prime / predict / report_failure / complete / replay / stats /
+//! shutdown) over one connection. The raw [`NetClient::send_request`]
+//! / [`NetClient::recv_response`] pair exposes the pipelining the
+//! protocol guarantees — write N frames, then read N in-order
+//! responses — which the conformance tests and the load generator both
+//! lean on.
+//!
+//! [`ServiceHandle`]: crate::coordinator::ServiceHandle
+
+use std::io::{BufReader, Write};
+use std::net::TcpStream;
+
+use anyhow::{bail, Context, Result};
+
+use ksegments_core::predictors::{Allocation, FailureInfo};
+use ksegments_core::trace::{run_record, TaskRun};
+use ksegments_core::units::MemMiB;
+use ksegments_core::util::json::Json;
+
+use crate::coordinator::ServiceStats;
+use crate::net::frame::{
+    alloc_to_json, failure_info_to_json, parse_response, read_frame, NetResponse, LEN_PREFIX,
+    MAX_FRAME_DEFAULT,
+};
+
+/// One connection to a [`NetServer`], with monotonically increasing
+/// request ids.
+///
+/// [`NetServer`]: crate::net::NetServer
+pub struct NetClient {
+    w: TcpStream,
+    r: BufReader<TcpStream>,
+    next_id: u64,
+    max_frame: usize,
+}
+
+impl NetClient {
+    pub fn connect(addr: &str) -> Result<NetClient> {
+        let w = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        let _ = w.set_nodelay(true);
+        let r = BufReader::new(w.try_clone().context("cloning stream for reads")?);
+        Ok(NetClient { w, r, next_id: 0, max_frame: MAX_FRAME_DEFAULT })
+    }
+
+    /// Send one request frame without waiting for its response; the
+    /// pipelining half of the protocol. Returns the id to match the
+    /// eventual response against.
+    pub fn send_request(&mut self, method: &str, mut fields: Vec<(&str, Json)>) -> Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        fields.push(("method", method.into()));
+        fields.push(("id", id.into()));
+        let payload = Json::obj(fields).to_string();
+        let mut buf = Vec::with_capacity(LEN_PREFIX + payload.len());
+        buf.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+        buf.extend_from_slice(payload.as_bytes());
+        self.w.write_all(&buf).context("writing request frame")?;
+        Ok(id)
+    }
+
+    /// Read the next response frame (in request order).
+    pub fn recv_response(&mut self) -> Result<NetResponse> {
+        let payload = read_frame(&mut self.r, self.max_frame)
+            .context("reading response frame")?
+            .context("server closed the connection")?;
+        parse_response(&payload).map_err(|e| anyhow::anyhow!("malformed response: {e}"))
+    }
+
+    /// Send one request and read its response (success or typed
+    /// error), verifying the echoed id.
+    pub fn call(&mut self, method: &str, fields: Vec<(&str, Json)>) -> Result<NetResponse> {
+        let id = self.send_request(method, fields)?;
+        let resp = self.recv_response()?;
+        if resp.id != Some(id) {
+            bail!("response id {:?} does not match request id {id}", resp.id);
+        }
+        Ok(resp)
+    }
+
+    fn expect_ok(&mut self, method: &str, fields: Vec<(&str, Json)>) -> Result<NetResponse> {
+        let resp = self.call(method, fields)?;
+        if !resp.ok {
+            let (code, msg) = resp.error.unwrap_or_default();
+            bail!("{method} failed: {code}: {msg}");
+        }
+        Ok(resp)
+    }
+
+    // -- typed surface -----------------------------------------------------
+
+    pub fn prime(&mut self, task_type: &str, default: MemMiB) -> Result<()> {
+        self.expect_ok(
+            "prime",
+            vec![("task_type", task_type.into()), ("default_mib", default.0.into())],
+        )?;
+        Ok(())
+    }
+
+    pub fn predict(&mut self, task_type: &str, input_mib: f64) -> Result<Allocation> {
+        self.expect_ok(
+            "predict",
+            vec![("task_type", task_type.into()), ("input_mib", input_mib.into())],
+        )?
+        .alloc
+        .context("predict response without an allocation")
+    }
+
+    pub fn report_failure(
+        &mut self,
+        task_type: &str,
+        input_mib: f64,
+        failed: &Allocation,
+        info: &FailureInfo,
+    ) -> Result<Allocation> {
+        self.expect_ok(
+            "report_failure",
+            vec![
+                ("task_type", task_type.into()),
+                ("input_mib", input_mib.into()),
+                ("failed", alloc_to_json(failed)),
+                ("info", failure_info_to_json(info)),
+            ],
+        )?
+        .alloc
+        .context("report_failure response without an allocation")
+    }
+
+    pub fn complete(&mut self, run: &TaskRun) -> Result<()> {
+        self.expect_ok("complete", vec![("run", run_record(run))])?;
+        Ok(())
+    }
+
+    /// Batched replay of `runs` through the server's chunked replay
+    /// path; returns how many runs the server fed.
+    pub fn replay(&mut self, runs: &[TaskRun]) -> Result<u64> {
+        let arr = Json::Arr(runs.iter().map(run_record).collect());
+        self.expect_ok("replay", vec![("runs", arr)])?
+            .fed
+            .context("replay response without a fed count")
+    }
+
+    /// Live `(aggregated, per_shard)` service counters.
+    pub fn stats(&mut self) -> Result<(ServiceStats, Vec<ServiceStats>)> {
+        let resp = self.expect_ok("stats", Vec::new())?;
+        let total = resp.stats.context("stats response without totals")?;
+        Ok((total, resp.per_shard))
+    }
+
+    /// Ask the server to drain; the ack arrives before the server
+    /// closes.
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        self.expect_ok("shutdown", Vec::new())?;
+        Ok(())
+    }
+}

@@ -1,0 +1,790 @@
+//! Wire grammar of the TCP prediction protocol.
+//!
+//! A **frame** is a 4-byte big-endian `u32` length prefix followed by
+//! exactly that many bytes of UTF-8 JSON — one request or response
+//! object per frame, no framing inside the payload. The length prefix
+//! never counts itself, and a declared length above the server's frame
+//! cap is a protocol error *before* any allocation of that size
+//! happens ([`take_frame`] checks the prefix alone).
+//!
+//! Every request carries a client-chosen `id` echoed verbatim in its
+//! response, and every frame gets **exactly one** response, in request
+//! order per connection — which is what makes pipelining safe: a
+//! client may write any number of frames before reading.
+//!
+//! Malformed input never panics and never kills the connection unless
+//! resynchronization is impossible: [`ErrCode::recoverable`] documents
+//! which errors leave the stream usable. Responses are serialized
+//! through the streaming [`JsonWriter`] into a caller-owned buffer, so
+//! the server's hot path performs no per-response tree allocation.
+
+use std::io::{self, Read, Write};
+
+use ksegments_core::predictors::{Allocation, FailureCause, FailureInfo};
+use ksegments_core::trace::{run_from_json, run_record, TaskRun};
+use ksegments_core::units::MemMiB;
+use ksegments_core::util::json::{Json, JsonWriter};
+
+use crate::coordinator::ServiceStats;
+
+/// Bytes of the length prefix.
+pub const LEN_PREFIX: usize = 4;
+
+/// Default hard cap on a frame's payload size (4 MiB) — a `replay`
+/// frame of a few thousand runs fits comfortably; a corrupt or hostile
+/// prefix is rejected before any buffer grows to match it.
+pub const MAX_FRAME_DEFAULT: usize = 4 << 20;
+
+/// Typed protocol error codes, exactly as they appear on the wire in
+/// `error.code`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrCode {
+    /// The length prefix declared a payload above the server's cap.
+    /// Not recoverable: the stream cannot be resynchronized.
+    FrameTooLarge,
+    /// The peer closed the connection mid-frame (a dangling length
+    /// prefix or a short payload). Reported once, then the connection
+    /// closes.
+    TruncatedFrame,
+    /// The payload is not valid UTF-8.
+    InvalidUtf8,
+    /// The payload is not valid JSON.
+    BadJson,
+    /// Valid JSON, but `method` names no known request.
+    UnknownMethod,
+    /// Known method with missing or malformed fields.
+    BadRequest,
+    /// The prediction service shut down underneath the request.
+    Unavailable,
+}
+
+impl ErrCode {
+    /// The wire spelling of the code.
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrCode::FrameTooLarge => "frame_too_large",
+            ErrCode::TruncatedFrame => "truncated_frame",
+            ErrCode::InvalidUtf8 => "invalid_utf8",
+            ErrCode::BadJson => "bad_json",
+            ErrCode::UnknownMethod => "unknown_method",
+            ErrCode::BadRequest => "bad_request",
+            ErrCode::Unavailable => "unavailable",
+        }
+    }
+
+    /// True when the connection remains usable after the error
+    /// response: framing was intact, only the payload was bad.
+    pub fn recoverable(self) -> bool {
+        !matches!(self, ErrCode::FrameTooLarge | ErrCode::TruncatedFrame)
+    }
+}
+
+/// A typed protocol error, rendered as
+/// `{"id":N|null,"ok":false,"error":{"code":...,"message":...}}`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetError {
+    pub code: ErrCode,
+    pub message: String,
+    /// The request id, when parsing got far enough to extract one.
+    pub id: Option<u64>,
+}
+
+impl NetError {
+    pub fn new(code: ErrCode, message: impl Into<String>) -> NetError {
+        NetError { code, message: message.into(), id: None }
+    }
+
+    pub fn with_id(code: ErrCode, message: impl Into<String>, id: u64) -> NetError {
+        NetError { code, message: message.into(), id: Some(id) }
+    }
+}
+
+/// A parsed request frame (the `id` is returned alongside by
+/// [`parse_request`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum NetRequest {
+    /// Register a developer default for a task type.
+    Prime { task_type: String, default: MemMiB },
+    /// Submission-time allocation request.
+    Predict { task_type: String, input_mib: f64 },
+    /// Failure-strategy request: returns the retry allocation.
+    ReportFailure {
+        task_type: String,
+        input_mib: f64,
+        failed: Allocation,
+        info: FailureInfo,
+    },
+    /// Completion ingestion (one observed run).
+    Complete { run: Box<TaskRun> },
+    /// Batched replay: predict + complete every run, in order.
+    Replay { runs: Vec<TaskRun> },
+    /// Live counters snapshot.
+    Stats,
+    /// Graceful drain: ack, then stop accepting and join.
+    Shutdown,
+}
+
+// -- frame I/O -------------------------------------------------------------
+
+/// Write one frame (length prefix + payload) as a single buffer write.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> io::Result<()> {
+    let mut buf = Vec::with_capacity(LEN_PREFIX + payload.len());
+    buf.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+    buf.extend_from_slice(payload);
+    w.write_all(&buf)
+}
+
+/// Blocking frame read: `Ok(None)` on clean EOF at a frame boundary,
+/// an `UnexpectedEof` error on EOF mid-frame, `InvalidData` when the
+/// prefix exceeds `max_frame`.
+pub fn read_frame<R: Read>(r: &mut R, max_frame: usize) -> io::Result<Option<Vec<u8>>> {
+    let mut prefix = [0u8; LEN_PREFIX];
+    let mut got = 0;
+    while got < LEN_PREFIX {
+        match r.read(&mut prefix[got..])? {
+            0 if got == 0 => return Ok(None),
+            0 => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "connection closed inside a frame length prefix",
+                ))
+            }
+            n => got += n,
+        }
+    }
+    let len = u32::from_be_bytes(prefix) as usize;
+    if len > max_frame {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame of {len} bytes exceeds the {max_frame}-byte cap"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(Some(payload))
+}
+
+/// Incremental frame extraction for the server's accumulation buffer:
+/// split one complete frame off the front of `pending`, `Ok(None)`
+/// when more bytes are needed, a [`ErrCode::FrameTooLarge`] error as
+/// soon as the prefix alone proves the frame oversized.
+pub fn take_frame(pending: &mut Vec<u8>, max_frame: usize) -> Result<Option<Vec<u8>>, NetError> {
+    if pending.len() < LEN_PREFIX {
+        return Ok(None);
+    }
+    let len = u32::from_be_bytes([pending[0], pending[1], pending[2], pending[3]]) as usize;
+    if len > max_frame {
+        return Err(NetError::new(
+            ErrCode::FrameTooLarge,
+            format!("declared frame length {len} exceeds the {max_frame}-byte cap"),
+        ));
+    }
+    if pending.len() < LEN_PREFIX + len {
+        return Ok(None);
+    }
+    let payload = pending[LEN_PREFIX..LEN_PREFIX + len].to_vec();
+    pending.drain(..LEN_PREFIX + len);
+    Ok(Some(payload))
+}
+
+// -- request parsing -------------------------------------------------------
+
+fn field_str(doc: &Json, key: &str, id: u64) -> Result<String, NetError> {
+    doc.get(key).as_str().map(str::to_string).ok_or_else(|| {
+        NetError::with_id(ErrCode::BadRequest, format!("missing string field {key:?}"), id)
+    })
+}
+
+fn field_f64(doc: &Json, key: &str, id: u64) -> Result<f64, NetError> {
+    let v = doc.get(key).as_f64().ok_or_else(|| {
+        NetError::with_id(ErrCode::BadRequest, format!("missing numeric field {key:?}"), id)
+    })?;
+    if !v.is_finite() || v < 0.0 {
+        return Err(NetError::with_id(
+            ErrCode::BadRequest,
+            format!("field {key:?} must be finite and non-negative, got {v}"),
+            id,
+        ));
+    }
+    Ok(v)
+}
+
+/// Parse + validate one request payload into `(id, request)`. Every
+/// malformed-input path lands here as a typed [`NetError`] — the
+/// server never panics on wire input.
+pub fn parse_request(payload: &[u8]) -> Result<(u64, NetRequest), NetError> {
+    let text = std::str::from_utf8(payload)
+        .map_err(|e| NetError::new(ErrCode::InvalidUtf8, format!("payload is not UTF-8: {e}")))?;
+    let doc = Json::parse(text).map_err(|e| NetError::new(ErrCode::BadJson, e.to_string()))?;
+    let id = doc.get("id").as_u64();
+    let Some(method) = doc.get("method").as_str() else {
+        return Err(NetError {
+            code: ErrCode::BadRequest,
+            message: "missing string field \"method\"".to_string(),
+            id,
+        });
+    };
+    let Some(id) = id else {
+        return Err(NetError::new(
+            ErrCode::BadRequest,
+            "missing numeric field \"id\"".to_string(),
+        ));
+    };
+    let req = match method {
+        "prime" => NetRequest::Prime {
+            task_type: field_str(&doc, "task_type", id)?,
+            default: MemMiB(field_f64(&doc, "default_mib", id)?),
+        },
+        "predict" => NetRequest::Predict {
+            task_type: field_str(&doc, "task_type", id)?,
+            input_mib: field_f64(&doc, "input_mib", id)?,
+        },
+        "report_failure" => NetRequest::ReportFailure {
+            task_type: field_str(&doc, "task_type", id)?,
+            input_mib: field_f64(&doc, "input_mib", id)?,
+            failed: parse_alloc(doc.get("failed"))
+                .map_err(|e| NetError::with_id(ErrCode::BadRequest, format!("failed: {e}"), id))?,
+            info: parse_failure_info(doc.get("info"))
+                .map_err(|e| NetError::with_id(ErrCode::BadRequest, format!("info: {e}"), id))?,
+        },
+        "complete" => NetRequest::Complete {
+            run: Box::new(run_from_json(doc.get("run")).map_err(|e| {
+                NetError::with_id(ErrCode::BadRequest, format!("run: {e:#}"), id)
+            })?),
+        },
+        "replay" => {
+            let arr = doc.get("runs").as_arr().ok_or_else(|| {
+                NetError::with_id(ErrCode::BadRequest, "missing array field \"runs\"", id)
+            })?;
+            let runs = arr
+                .iter()
+                .enumerate()
+                .map(|(i, r)| {
+                    run_from_json(r).map_err(|e| {
+                        NetError::with_id(ErrCode::BadRequest, format!("runs[{i}]: {e:#}"), id)
+                    })
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            NetRequest::Replay { runs }
+        }
+        "stats" => NetRequest::Stats,
+        "shutdown" => NetRequest::Shutdown,
+        other => {
+            return Err(NetError::with_id(
+                ErrCode::UnknownMethod,
+                format!("unknown method {other:?}"),
+                id,
+            ))
+        }
+    };
+    Ok((id, req))
+}
+
+// -- allocation / failure-info wire forms ----------------------------------
+
+/// `{"kind":"static","mib":X}` or
+/// `{"kind":"dynamic","bounds":[...],"values":[...]}` (the
+/// [`StepFunction`] arrays, reconstructed through its validating
+/// constructor).
+///
+/// [`StepFunction`]: ksegments_core::ml::step_fn::StepFunction
+pub fn parse_alloc(doc: &Json) -> Result<Allocation, String> {
+    match doc.get("kind").as_str() {
+        Some("static") => {
+            let mib = doc.get("mib").as_f64().ok_or("static allocation needs \"mib\"")?;
+            if !mib.is_finite() || mib < 0.0 {
+                return Err(format!("allocation mib must be finite and non-negative, got {mib}"));
+            }
+            Ok(Allocation::Static(MemMiB(mib)))
+        }
+        Some("dynamic") => {
+            let nums = |key: &str| -> Result<Vec<f64>, String> {
+                doc.get(key)
+                    .as_arr()
+                    .ok_or_else(|| format!("dynamic allocation needs array {key:?}"))?
+                    .iter()
+                    .map(|v| v.as_f64().ok_or_else(|| format!("non-numeric entry in {key:?}")))
+                    .collect()
+            };
+            let step = ksegments_core::ml::step_fn::StepFunction::try_new(
+                nums("bounds")?,
+                nums("values")?,
+            )?;
+            Ok(Allocation::Dynamic(step))
+        }
+        other => Err(format!("unknown allocation kind {other:?}")),
+    }
+}
+
+/// The client-side [`Json`] form of an allocation (requests are built
+/// as trees; only server responses stream through [`JsonWriter`]).
+pub fn alloc_to_json(alloc: &Allocation) -> Json {
+    match alloc {
+        Allocation::Static(m) => {
+            Json::obj(vec![("kind", "static".into()), ("mib", m.0.into())])
+        }
+        Allocation::Dynamic(f) => Json::obj(vec![
+            ("kind", "dynamic".into()),
+            ("bounds", Json::arr_f64(f.bounds())),
+            ("values", Json::arr_f64(f.values())),
+        ]),
+    }
+}
+
+/// `{"time_s":T,"used_mib":U,"attempt":A,"cause":"oom"|...}`.
+pub fn parse_failure_info(doc: &Json) -> Result<FailureInfo, String> {
+    let num = |key: &str| -> Result<f64, String> {
+        let v = doc.get(key).as_f64().ok_or_else(|| format!("missing numeric field {key:?}"))?;
+        if !v.is_finite() || v < 0.0 {
+            return Err(format!("field {key:?} must be finite and non-negative, got {v}"));
+        }
+        Ok(v)
+    };
+    let cause = match doc.get("cause").as_str() {
+        Some("oom") | None => FailureCause::Oom,
+        Some("node-lost") => FailureCause::NodeLost,
+        Some("preempted") => FailureCause::Preempted,
+        Some(other) => return Err(format!("unknown failure cause {other:?}")),
+    };
+    Ok(FailureInfo {
+        time_s: num("time_s")?,
+        used_mib: num("used_mib")?,
+        attempt: doc
+            .get("attempt")
+            .as_u64()
+            .ok_or("missing numeric field \"attempt\"")?
+            .min(u32::MAX as u64) as u32,
+        cause,
+    })
+}
+
+/// The client-side [`Json`] form of a [`FailureInfo`].
+pub fn failure_info_to_json(info: &FailureInfo) -> Json {
+    Json::obj(vec![
+        ("time_s", info.time_s.into()),
+        ("used_mib", info.used_mib.into()),
+        ("attempt", u64::from(info.attempt).into()),
+        ("cause", info.cause.name().into()),
+    ])
+}
+
+// -- response serialization (server side, streaming) -----------------------
+
+fn frame_start(buf: &mut Vec<u8>) {
+    buf.clear();
+    buf.extend_from_slice(&[0u8; LEN_PREFIX]);
+}
+
+fn frame_finish(buf: &mut [u8]) {
+    let len = (buf.len() - LEN_PREFIX) as u32;
+    buf[..LEN_PREFIX].copy_from_slice(&len.to_be_bytes());
+}
+
+fn write_alloc<W: io::Write>(w: &mut JsonWriter<W>, alloc: &Allocation) -> io::Result<()> {
+    w.begin_obj()?;
+    match alloc {
+        Allocation::Static(m) => {
+            w.field_str("kind", "static")?;
+            w.field_f64("mib", m.0)?;
+        }
+        Allocation::Dynamic(f) => {
+            w.field_str("kind", "dynamic")?;
+            w.key("bounds")?;
+            w.begin_arr()?;
+            for &b in f.bounds() {
+                w.f64_val(b)?;
+            }
+            w.end_arr()?;
+            w.key("values")?;
+            w.begin_arr()?;
+            for &v in f.values() {
+                w.f64_val(v)?;
+            }
+            w.end_arr()?;
+        }
+    }
+    w.end_obj()
+}
+
+fn write_stats_obj<W: io::Write>(w: &mut JsonWriter<W>, s: &ServiceStats) -> io::Result<()> {
+    w.begin_obj()?;
+    w.field_u64("predictions", s.predictions)?;
+    w.field_u64("completions", s.completions)?;
+    w.field_u64("failures", s.failures)?;
+    w.field_u64("wakeups", s.wakeups)?;
+    w.end_obj()
+}
+
+/// `{"id":N,"ok":true}` — the ack for `prime`/`complete`/`shutdown`.
+/// Like every `write_*_frame`, serializes a complete frame (length
+/// prefix included) into the reused `buf`.
+pub fn write_ok_frame(buf: &mut Vec<u8>, id: u64) -> io::Result<()> {
+    frame_start(buf);
+    let mut w = JsonWriter::new(&mut *buf);
+    w.begin_obj()?;
+    w.field_u64("id", id)?;
+    w.field_bool("ok", true)?;
+    w.end_obj()?;
+    w.finish()?;
+    frame_finish(buf);
+    Ok(())
+}
+
+/// `{"id":N,"ok":true,"alloc":{...}}` — `predict`/`report_failure`.
+pub fn write_alloc_frame(buf: &mut Vec<u8>, id: u64, alloc: &Allocation) -> io::Result<()> {
+    frame_start(buf);
+    let mut w = JsonWriter::new(&mut *buf);
+    w.begin_obj()?;
+    w.field_u64("id", id)?;
+    w.field_bool("ok", true)?;
+    w.key("alloc")?;
+    write_alloc(&mut w, alloc)?;
+    w.end_obj()?;
+    w.finish()?;
+    frame_finish(buf);
+    Ok(())
+}
+
+/// `{"id":N,"ok":true,"fed":K}` — the `replay` batch response.
+pub fn write_fed_frame(buf: &mut Vec<u8>, id: u64, fed: u64) -> io::Result<()> {
+    frame_start(buf);
+    let mut w = JsonWriter::new(&mut *buf);
+    w.begin_obj()?;
+    w.field_u64("id", id)?;
+    w.field_bool("ok", true)?;
+    w.field_u64("fed", fed)?;
+    w.end_obj()?;
+    w.finish()?;
+    frame_finish(buf);
+    Ok(())
+}
+
+/// `{"id":N,"ok":true,"stats":{...},"per_shard":[{...},...]}`.
+pub fn write_stats_frame(
+    buf: &mut Vec<u8>,
+    id: u64,
+    total: &ServiceStats,
+    per_shard: &[ServiceStats],
+) -> io::Result<()> {
+    frame_start(buf);
+    let mut w = JsonWriter::new(&mut *buf);
+    w.begin_obj()?;
+    w.field_u64("id", id)?;
+    w.field_bool("ok", true)?;
+    w.key("stats")?;
+    write_stats_obj(&mut w, total)?;
+    w.key("per_shard")?;
+    w.begin_arr()?;
+    for s in per_shard {
+        write_stats_obj(&mut w, s)?;
+    }
+    w.end_arr()?;
+    w.end_obj()?;
+    w.finish()?;
+    frame_finish(buf);
+    Ok(())
+}
+
+/// `{"id":N|null,"ok":false,"error":{"code":...,"message":...}}`.
+pub fn write_error_frame(buf: &mut Vec<u8>, err: &NetError) -> io::Result<()> {
+    frame_start(buf);
+    let mut w = JsonWriter::new(&mut *buf);
+    w.begin_obj()?;
+    w.key("id")?;
+    match err.id {
+        Some(id) => w.u64_val(id)?,
+        None => w.null_val()?,
+    }
+    w.field_bool("ok", false)?;
+    w.key("error")?;
+    w.begin_obj()?;
+    w.field_str("code", err.code.name())?;
+    w.field_str("message", &err.message)?;
+    w.end_obj()?;
+    w.end_obj()?;
+    w.finish()?;
+    frame_finish(buf);
+    Ok(())
+}
+
+// -- response parsing (client side) ----------------------------------------
+
+/// A parsed response frame; exactly the fields the responding method
+/// emits are populated.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetResponse {
+    /// The echoed request id (`None` only on pre-id protocol errors).
+    pub id: Option<u64>,
+    pub ok: bool,
+    pub alloc: Option<Allocation>,
+    pub fed: Option<u64>,
+    pub stats: Option<ServiceStats>,
+    pub per_shard: Vec<ServiceStats>,
+    /// `(code, message)` of an error response.
+    pub error: Option<(String, String)>,
+}
+
+fn parse_stats_obj(doc: &Json) -> Result<ServiceStats, String> {
+    let num = |key: &str| doc.get(key).as_u64().ok_or_else(|| format!("stats field {key:?}"));
+    Ok(ServiceStats {
+        predictions: num("predictions")?,
+        completions: num("completions")?,
+        failures: num("failures")?,
+        wakeups: num("wakeups")?,
+    })
+}
+
+/// Parse one response payload (the client-side mirror of the
+/// `write_*_frame` family, without their length prefixes).
+pub fn parse_response(payload: &[u8]) -> Result<NetResponse, String> {
+    let text = std::str::from_utf8(payload).map_err(|e| e.to_string())?;
+    let doc = Json::parse(text).map_err(|e| e.to_string())?;
+    let ok = doc.get("ok").as_bool().ok_or("missing \"ok\"")?;
+    let alloc = match doc.get("alloc") {
+        Json::Null => None,
+        a => Some(parse_alloc(a)?),
+    };
+    let stats = match doc.get("stats") {
+        Json::Null => None,
+        s => Some(parse_stats_obj(s)?),
+    };
+    let per_shard = match doc.get("per_shard").as_arr() {
+        Some(arr) => arr.iter().map(parse_stats_obj).collect::<Result<Vec<_>, _>>()?,
+        None => Vec::new(),
+    };
+    let error = match doc.get("error") {
+        Json::Null => None,
+        e => Some((
+            e.get("code").as_str().ok_or("error without code")?.to_string(),
+            e.get("message").as_str().unwrap_or("").to_string(),
+        )),
+    };
+    Ok(NetResponse {
+        id: doc.get("id").as_u64(),
+        ok,
+        alloc,
+        fed: doc.get("fed").as_u64(),
+        stats,
+        per_shard,
+        error,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use ksegments_core::ml::step_fn::StepFunction;
+    use ksegments_core::trace::UsageSeries;
+    use ksegments_core::units::Seconds;
+
+    fn payload(buf: &[u8]) -> &[u8] {
+        let len = u32::from_be_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+        assert_eq!(buf.len(), LEN_PREFIX + len, "prefix matches payload");
+        &buf[LEN_PREFIX..]
+    }
+
+    fn req(doc: Json) -> Result<(u64, NetRequest), NetError> {
+        parse_request(doc.to_string().as_bytes())
+    }
+
+    #[test]
+    fn take_frame_assembles_incrementally() {
+        let mut pending = Vec::new();
+        let mut framed = Vec::new();
+        write_frame(&mut framed, b"{\"x\":1}").unwrap();
+        // drip-feed byte by byte: no frame until the last byte lands
+        for (i, b) in framed.iter().enumerate() {
+            pending.push(*b);
+            let got = take_frame(&mut pending, 1024).unwrap();
+            if i + 1 < framed.len() {
+                assert!(got.is_none(), "no frame after {} bytes", i + 1);
+            } else {
+                assert_eq!(got.as_deref(), Some(b"{\"x\":1}".as_ref()));
+            }
+        }
+        assert!(pending.is_empty());
+    }
+
+    #[test]
+    fn take_frame_rejects_oversized_prefix_before_payload() {
+        let mut pending = 5000u32.to_be_bytes().to_vec();
+        let err = take_frame(&mut pending, 4096).unwrap_err();
+        assert_eq!(err.code, ErrCode::FrameTooLarge);
+        assert!(!err.code.recoverable());
+    }
+
+    #[test]
+    fn read_frame_roundtrip_and_eof() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"abc").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut r = io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut r, 64).unwrap().as_deref(), Some(b"abc".as_ref()));
+        assert_eq!(read_frame(&mut r, 64).unwrap().as_deref(), Some(b"".as_ref()));
+        assert!(read_frame(&mut r, 64).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn parse_every_request_kind() {
+        let (id, r) = req(Json::obj(vec![
+            ("method", "prime".into()),
+            ("id", 7u64.into()),
+            ("task_type", "w/t".into()),
+            ("default_mib", 2048.0.into()),
+        ]))
+        .unwrap();
+        assert_eq!(id, 7);
+        assert_eq!(r, NetRequest::Prime { task_type: "w/t".into(), default: MemMiB(2048.0) });
+
+        let (_, r) = req(Json::obj(vec![
+            ("method", "predict".into()),
+            ("id", 8u64.into()),
+            ("task_type", "w/t".into()),
+            ("input_mib", 10.0.into()),
+        ]))
+        .unwrap();
+        assert_eq!(r, NetRequest::Predict { task_type: "w/t".into(), input_mib: 10.0 });
+
+        let run = TaskRun {
+            task_type: "w/t".into(),
+            input_mib: 10.0,
+            runtime: Seconds(4.0),
+            series: UsageSeries::new(2.0, vec![50.0, 100.0]),
+            seq: 3,
+        };
+        let (_, r) = req(Json::obj(vec![
+            ("method", "complete".into()),
+            ("id", 9u64.into()),
+            ("run", run_record(&run)),
+        ]))
+        .unwrap();
+        assert_eq!(r, NetRequest::Complete { run: Box::new(run.clone()) });
+
+        let (_, r) = req(Json::obj(vec![
+            ("method", "replay".into()),
+            ("id", 10u64.into()),
+            ("runs", Json::Arr(vec![run_record(&run), run_record(&run)])),
+        ]))
+        .unwrap();
+        assert_eq!(r, NetRequest::Replay { runs: vec![run.clone(), run] });
+
+        let (_, r) = req(Json::obj(vec![
+            ("method", "report_failure".into()),
+            ("id", 11u64.into()),
+            ("task_type", "w/t".into()),
+            ("input_mib", 10.0.into()),
+            ("failed", alloc_to_json(&Allocation::Static(MemMiB(100.0)))),
+            ("info", failure_info_to_json(&FailureInfo::oom(1.0, 150.0, 1))),
+        ]))
+        .unwrap();
+        assert_eq!(
+            r,
+            NetRequest::ReportFailure {
+                task_type: "w/t".into(),
+                input_mib: 10.0,
+                failed: Allocation::Static(MemMiB(100.0)),
+                info: FailureInfo::oom(1.0, 150.0, 1),
+            }
+        );
+
+        for (m, want) in [("stats", NetRequest::Stats), ("shutdown", NetRequest::Shutdown)] {
+            let (_, r) =
+                req(Json::obj(vec![("method", m.into()), ("id", 1u64.into())])).unwrap();
+            assert_eq!(r, want);
+        }
+    }
+
+    #[test]
+    fn malformed_requests_get_typed_codes() {
+        let e = parse_request(&[0xff, 0xfe, 0x80]).unwrap_err();
+        assert_eq!(e.code, ErrCode::InvalidUtf8);
+        assert!(e.code.recoverable());
+
+        let e = parse_request(b"{not json").unwrap_err();
+        assert_eq!(e.code, ErrCode::BadJson);
+
+        let e = req(Json::obj(vec![("method", "frobnicate".into()), ("id", 1u64.into())]))
+            .unwrap_err();
+        assert_eq!(e.code, ErrCode::UnknownMethod);
+        assert_eq!(e.id, Some(1), "unknown method still echoes the id");
+
+        // missing id
+        let e = req(Json::obj(vec![("method", "stats".into())])).unwrap_err();
+        assert_eq!(e.code, ErrCode::BadRequest);
+        assert_eq!(e.id, None);
+
+        // known method, missing field
+        let e = req(Json::obj(vec![("method", "predict".into()), ("id", 2u64.into())]))
+            .unwrap_err();
+        assert_eq!(e.code, ErrCode::BadRequest);
+        assert_eq!(e.id, Some(2));
+
+        // non-finite numeric field
+        let e = req(Json::obj(vec![
+            ("method", "predict".into()),
+            ("id", 3u64.into()),
+            ("task_type", "w/t".into()),
+            ("input_mib", (-1.0).into()),
+        ]))
+        .unwrap_err();
+        assert_eq!(e.code, ErrCode::BadRequest);
+    }
+
+    #[test]
+    fn alloc_roundtrips_both_kinds() {
+        let stat = Allocation::Static(MemMiB(512.0));
+        assert_eq!(parse_alloc(&alloc_to_json(&stat)).unwrap(), stat);
+        let dyn_ = Allocation::Dynamic(StepFunction::new(
+            vec![10.0, 20.0, 30.0],
+            vec![100.0, 200.0, 150.0],
+        ));
+        assert_eq!(parse_alloc(&dyn_to_json_roundtrip(&dyn_)).unwrap(), dyn_);
+        // the validating constructor rejects a malformed step function
+        let bad = Json::obj(vec![
+            ("kind", "dynamic".into()),
+            ("bounds", Json::arr_f64(&[20.0, 10.0])),
+            ("values", Json::arr_f64(&[1.0, 2.0])),
+        ]);
+        assert!(parse_alloc(&bad).is_err());
+    }
+
+    fn dyn_to_json_roundtrip(a: &Allocation) -> Json {
+        // exercise the streaming writer against the tree parser: the
+        // wire bytes a server emits must parse back to the same value
+        let mut buf = Vec::new();
+        write_alloc_frame(&mut buf, 1, a).unwrap();
+        let resp = parse_response(payload(&buf)).unwrap();
+        alloc_to_json(&resp.alloc.unwrap())
+    }
+
+    #[test]
+    fn response_frames_parse_back() {
+        let mut buf = Vec::new();
+        write_ok_frame(&mut buf, 42).unwrap();
+        let r = parse_response(payload(&buf)).unwrap();
+        assert_eq!((r.id, r.ok), (Some(42), true));
+
+        buf.clear();
+        write_fed_frame(&mut buf, 5, 14).unwrap();
+        let r = parse_response(payload(&buf)).unwrap();
+        assert_eq!(r.fed, Some(14));
+
+        let per_shard = vec![
+            ServiceStats { predictions: 3, completions: 2, failures: 1, wakeups: 4 },
+            ServiceStats { predictions: 5, completions: 0, failures: 0, wakeups: 2 },
+        ];
+        let total = ServiceStats::aggregated(&per_shard);
+        buf.clear();
+        write_stats_frame(&mut buf, 6, &total, &per_shard).unwrap();
+        let r = parse_response(payload(&buf)).unwrap();
+        assert_eq!(r.stats, Some(total));
+        assert_eq!(r.per_shard, per_shard);
+
+        buf.clear();
+        write_error_frame(&mut buf, &NetError::new(ErrCode::BadJson, "nope")).unwrap();
+        let r = parse_response(payload(&buf)).unwrap();
+        assert!(!r.ok);
+        assert_eq!(r.id, None);
+        assert_eq!(r.error, Some(("bad_json".to_string(), "nope".to_string())));
+    }
+}

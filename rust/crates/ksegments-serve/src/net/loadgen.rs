@@ -1,0 +1,211 @@
+//! Load generator for the TCP prediction service.
+//!
+//! Replays any [`TraceSource`] against a running server over N
+//! connections at a target aggregate QPS, timing every predict
+//! round-trip. Latency here is **wall time** by design: it measures
+//! the served protocol stack (socket, framing, shard queue, model),
+//! not simulated workflow time — the sanctioned exception of DESIGN.md
+//! §12, same as the coordinator's wakeup spans.
+//!
+//! Runs are routed to connections with the same FNV hash the service
+//! uses for shards ([`shard_of`] over `connections`), so each task
+//! type's traffic stays on one connection in arrival order — which
+//! preserves the per-type predict-after-complete contract and makes a
+//! TCP replay's predictions and final counters bit-identical to the
+//! in-process [`ServiceHandle::replay_source`] at any connection
+//! count.
+//!
+//! [`ServiceHandle::replay_source`]: crate::coordinator::ServiceHandle::replay_source
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use ksegments_core::source::{TraceSource, DEFAULT_CHUNK};
+use ksegments_core::trace::TaskRun;
+use ksegments_core::units::MemMiB;
+use ksegments_core::util::stats::percentile;
+use ksegments_core::util::timer::Stopwatch;
+
+use crate::coordinator::{shard_of, ServiceStats};
+use crate::net::client::NetClient;
+
+/// Knobs for [`run_loadgen`].
+pub struct LoadgenConfig {
+    /// Client connections (and dispatch partitions).
+    pub connections: usize,
+    /// Target aggregate dispatch rate; `0.0` = unthrottled.
+    pub qps: f64,
+    /// Keep replaying (rewinding the source) until this much wall time
+    /// has passed; `None` = a single pass over the source.
+    pub duration_s: Option<f64>,
+    /// Send a `shutdown` frame once done (after collecting stats).
+    pub send_shutdown: bool,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> LoadgenConfig {
+        LoadgenConfig { connections: 2, qps: 0.0, duration_s: None, send_shutdown: false }
+    }
+}
+
+/// What a loadgen run measured.
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    pub connections: usize,
+    /// Runs fully served (predict answered + completion acked).
+    pub runs_fed: u64,
+    /// Request failures of any kind, as seen by the clients.
+    pub errors: u64,
+    pub wall_s: f64,
+    /// Predict round-trip latency percentiles, milliseconds.
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub p999_ms: f64,
+    /// Served predicts per second of wall time — the saturation
+    /// throughput when `qps` is 0.
+    pub predict_rps: f64,
+    /// Aggregated live service counters after the replay.
+    pub stats: ServiceStats,
+    pub per_shard: Vec<ServiceStats>,
+}
+
+enum Job {
+    Prime(String, MemMiB),
+    Run(Box<TaskRun>),
+}
+
+/// Replay `src` against the server at `addr` per `cfg`.
+pub fn run_loadgen(
+    addr: &str,
+    src: &mut dyn TraceSource,
+    cfg: &LoadgenConfig,
+) -> Result<LoadgenReport> {
+    let n = cfg.connections.max(1);
+    let mut txs: Vec<Sender<Job>> = Vec::with_capacity(n);
+    let mut workers = Vec::with_capacity(n);
+    for i in 0..n {
+        let (tx, rx) = channel();
+        let addr = addr.to_string();
+        let worker = std::thread::Builder::new()
+            .name(format!("ksegments-loadgen-{i}"))
+            .spawn(move || worker_loop(&addr, rx))
+            .context("spawning loadgen worker")?;
+        txs.push(tx);
+        workers.push(worker);
+    }
+
+    // primes first, routed like the runs, so each connection primes
+    // its own types before replaying them (channel FIFO does the rest)
+    src.rewind()?;
+    for (ty, mem) in src.defaults() {
+        let s = shard_of(&ty, n);
+        txs[s].send(Job::Prime(ty, mem)).map_err(|_| anyhow!("worker {s} exited early"))?;
+    }
+
+    let sw = Stopwatch::start();
+    let mut dispatched = 0u64;
+    let mut empty_passes = 0u32;
+    'dispatch: loop {
+        let chunk = src.next_chunk(DEFAULT_CHUNK)?;
+        if chunk.is_empty() {
+            match cfg.duration_s {
+                Some(d) if sw.elapsed_s() < d => {
+                    empty_passes += 1;
+                    if empty_passes > 1 {
+                        bail!("source {} yields no runs", src.origin());
+                    }
+                    src.rewind()?;
+                    continue;
+                }
+                _ => break,
+            }
+        }
+        empty_passes = 0;
+        for run in chunk {
+            if let Some(d) = cfg.duration_s {
+                if sw.elapsed_s() >= d {
+                    break 'dispatch;
+                }
+            }
+            if cfg.qps > 0.0 {
+                let ahead = dispatched as f64 / cfg.qps - sw.elapsed_s();
+                if ahead > 0.0 {
+                    std::thread::sleep(Duration::from_secs_f64(ahead));
+                }
+            }
+            let s = shard_of(&run.task_type, n);
+            txs[s]
+                .send(Job::Run(Box::new(run)))
+                .map_err(|_| anyhow!("worker {s} exited early"))?;
+            dispatched += 1;
+        }
+    }
+
+    drop(txs);
+    let mut runs_fed = 0u64;
+    let mut errors = 0u64;
+    let mut latencies_ms: Vec<f64> = Vec::new();
+    for worker in workers {
+        let (fed, errs, lat) =
+            worker.join().map_err(|_| anyhow!("loadgen worker panicked"))??;
+        runs_fed += fed;
+        errors += errs;
+        latencies_ms.extend(lat);
+    }
+    let wall_s = sw.elapsed_s();
+
+    // a fresh control connection for the final counters + drain
+    let mut control = NetClient::connect(addr)?;
+    let (stats, per_shard) = control.stats()?;
+    if cfg.send_shutdown {
+        control.shutdown_server()?;
+    }
+
+    Ok(LoadgenReport {
+        connections: n,
+        runs_fed,
+        errors,
+        wall_s,
+        p50_ms: percentile(&latencies_ms, 50.0),
+        p99_ms: percentile(&latencies_ms, 99.0),
+        p999_ms: percentile(&latencies_ms, 99.9),
+        predict_rps: if wall_s > 0.0 { runs_fed as f64 / wall_s } else { 0.0 },
+        stats,
+        per_shard,
+    })
+}
+
+/// One connection's replay loop: predict (timed) then complete, per
+/// run, in dispatch order.
+fn worker_loop(addr: &str, rx: Receiver<Job>) -> Result<(u64, u64, Vec<f64>)> {
+    let mut client = NetClient::connect(addr)?;
+    let mut fed = 0u64;
+    let mut errors = 0u64;
+    let mut latencies_ms = Vec::new();
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Prime(ty, mem) => {
+                if client.prime(&ty, mem).is_err() {
+                    errors += 1;
+                }
+            }
+            Job::Run(run) => {
+                let sw = Stopwatch::start();
+                match client.predict(&run.task_type, run.input_mib) {
+                    Ok(_) => {
+                        latencies_ms.push(sw.elapsed_s() * 1e3);
+                        if client.complete(&run).is_ok() {
+                            fed += 1;
+                        } else {
+                            errors += 1;
+                        }
+                    }
+                    Err(_) => errors += 1,
+                }
+            }
+        }
+    }
+    Ok((fed, errors, latencies_ms))
+}

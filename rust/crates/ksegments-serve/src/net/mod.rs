@@ -1,0 +1,37 @@
+//! Network-facing prediction service: a length-prefixed JSONL
+//! protocol over TCP in front of the sharded coordinator — the wire
+//! that lets a workflow engine consume predictions as a service
+//! (ROADMAP item 1; Fig. 2's deployment shape, reachable from outside
+//! the process).
+//!
+//! Layers, bottom-up:
+//!
+//! * [`frame`] — the wire grammar: 4-byte big-endian length prefix +
+//!   one JSON object; request parsing with typed [`ErrCode`]s;
+//!   streaming response serialization through
+//!   [`JsonWriter`](ksegments_core::util::json::JsonWriter);
+//! * [`server`] — [`NetServer`]: accept loop, per-connection
+//!   pipelining with in-order responses, graceful drain, checkpoint
+//!   warm restart, [`NetCounters`] telemetry export;
+//! * [`client`] — [`NetClient`]: the blocking typed client, mirroring
+//!   the in-process `ServiceHandle` surface;
+//! * [`loadgen`] — [`run_loadgen`]: N-connection QPS-paced replay of
+//!   any `TraceSource` with p50/p99/p999 latency reporting.
+//!
+//! See DESIGN.md §14 for the frame grammar, error code table, and
+//! drain/restart semantics.
+
+pub mod client;
+pub mod frame;
+pub mod loadgen;
+pub mod server;
+
+pub use client::NetClient;
+pub use frame::{
+    parse_request, parse_response, read_frame, take_frame, write_frame, ErrCode, NetError,
+    NetRequest, NetResponse, MAX_FRAME_DEFAULT,
+};
+pub use loadgen::{run_loadgen, LoadgenConfig, LoadgenReport};
+pub use server::{
+    export_net_metrics, NetCounters, NetServer, NetServerConfig, NetSnapshot, ServerReport,
+};

@@ -1,0 +1,504 @@
+//! The TCP front-end of the sharded prediction service.
+//!
+//! One accept thread plus one std thread per connection — the same
+//! "blocking callers around channel-owned models" architecture as the
+//! coordinator itself, so the per-type FIFO contract carries through
+//! unchanged: a connection's frames are parsed and dispatched in
+//! arrival order, and each gets exactly one response in that order
+//! (pipelining-safe). Malformed frames answer with a typed error and,
+//! when the framing itself is intact, the connection keeps serving.
+//!
+//! **Drain semantics.** A `shutdown` frame (or [`NetServer::stop`])
+//! flips a shared flag: the listener stops accepting, every connection
+//! finishes answering the frames it has already buffered (bounded by
+//! `drain_timeout_ms`), the shards are joined for their final
+//! counters, and — when configured — the predictor checkpoint is
+//! saved. Responses written before the close are never abandoned.
+//!
+//! **Warm restart.** With [`NetServerConfig::restore`] set, the
+//! service is primed from an [`ingest::Checkpoint`] before the
+//! listener accepts its first connection, and with `checkpoint_out`
+//! set the server keeps recording (starting from the restored state),
+//! so `restore(ck_half) + remaining traffic` saves byte-identical
+//! state to an uninterrupted run — checkpoint serialization is
+//! deterministic.
+//!
+//! [`ingest::Checkpoint`]: crate::ingest::Checkpoint
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use ksegments_core::source::{InMemorySource, DEFAULT_CHUNK};
+use ksegments_core::telemetry::Registry;
+use ksegments_core::util::timer::Stopwatch;
+
+use crate::coordinator::{ServiceHandle, ServiceStats, ShardedPredictionService};
+use crate::ingest::Checkpoint;
+use crate::net::frame::{
+    take_frame, write_alloc_frame, write_error_frame, write_fed_frame, write_ok_frame,
+    write_stats_frame, ErrCode, NetError, NetRequest, MAX_FRAME_DEFAULT,
+};
+
+/// Tuning knobs for [`NetServer::spawn`].
+pub struct NetServerConfig {
+    /// Hard cap on any frame's payload size.
+    pub max_frame: usize,
+    /// Socket read timeout — the cadence at which idle connections
+    /// notice the stop flag.
+    pub read_timeout_ms: u64,
+    /// After stop, how long a connection keeps answering frames it has
+    /// already buffered before closing anyway.
+    pub drain_timeout_ms: u64,
+    /// Warm-start the predictors from this checkpoint before accepting.
+    pub restore: Option<Checkpoint>,
+    /// Record primes/completions and save the checkpoint here on drain.
+    pub checkpoint_out: Option<PathBuf>,
+}
+
+impl Default for NetServerConfig {
+    fn default() -> NetServerConfig {
+        NetServerConfig {
+            max_frame: MAX_FRAME_DEFAULT,
+            read_timeout_ms: 25,
+            drain_timeout_ms: 2000,
+            restore: None,
+            checkpoint_out: None,
+        }
+    }
+}
+
+/// Network-layer counters, shared across all connection threads.
+#[derive(Default)]
+pub struct NetCounters {
+    pub connections: AtomicU64,
+    pub frames: AtomicU64,
+    pub responses: AtomicU64,
+    pub errors: AtomicU64,
+    pub predictions: AtomicU64,
+    pub completions: AtomicU64,
+    pub failures: AtomicU64,
+    pub replayed_runs: AtomicU64,
+}
+
+/// A plain-value snapshot of [`NetCounters`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct NetSnapshot {
+    pub connections: u64,
+    pub frames: u64,
+    pub responses: u64,
+    pub errors: u64,
+    pub predictions: u64,
+    pub completions: u64,
+    pub failures: u64,
+    pub replayed_runs: u64,
+}
+
+impl NetCounters {
+    pub fn snapshot(&self) -> NetSnapshot {
+        NetSnapshot {
+            connections: self.connections.load(Ordering::SeqCst),
+            frames: self.frames.load(Ordering::SeqCst),
+            responses: self.responses.load(Ordering::SeqCst),
+            errors: self.errors.load(Ordering::SeqCst),
+            predictions: self.predictions.load(Ordering::SeqCst),
+            completions: self.completions.load(Ordering::SeqCst),
+            failures: self.failures.load(Ordering::SeqCst),
+            replayed_runs: self.replayed_runs.load(Ordering::SeqCst),
+        }
+    }
+
+    fn bump(field: &AtomicU64) {
+        field.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+/// Export the network counters into a metrics registry (the
+/// service-shard counters export separately via
+/// [`export_service_metrics`]).
+///
+/// [`export_service_metrics`]: crate::coordinator::export_service_metrics
+pub fn export_net_metrics(net: &NetSnapshot, reg: &mut Registry) {
+    reg.counter_add("net_connections_total", net.connections);
+    reg.counter_add("net_frames_total", net.frames);
+    reg.counter_add("net_responses_total", net.responses);
+    reg.counter_add("net_errors_total", net.errors);
+    reg.counter_add("net_predictions_total", net.predictions);
+    reg.counter_add("net_completions_total", net.completions);
+    reg.counter_add("net_failures_total", net.failures);
+    reg.counter_add("net_replayed_runs_total", net.replayed_runs);
+}
+
+/// What a drained server hands back: the shards' final counters, the
+/// network-layer counters, and where the checkpoint was saved (if
+/// configured).
+#[derive(Debug)]
+pub struct ServerReport {
+    /// Final per-shard service counters, in shard order.
+    pub per_shard: Vec<ServiceStats>,
+    pub net: NetSnapshot,
+    pub checkpoint_out: Option<PathBuf>,
+}
+
+impl ServerReport {
+    /// Aggregated service counters across shards.
+    pub fn total(&self) -> ServiceStats {
+        ServiceStats::aggregated(&self.per_shard)
+    }
+}
+
+/// A running TCP server; join it with [`NetServer::wait`] (blocks
+/// until a `shutdown` frame drains it) or [`NetServer::stop`].
+pub struct NetServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    counters: Arc<NetCounters>,
+    handle: ServiceHandle,
+    accept: JoinHandle<Result<ServerReport>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port), warm
+    /// the service from `cfg.restore` if set, and start accepting.
+    /// Takes ownership of the service: drain joins its shards.
+    pub fn spawn(
+        addr: &str,
+        svc: ShardedPredictionService,
+        cfg: NetServerConfig,
+    ) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr().context("resolving bound address")?;
+        listener.set_nonblocking(true).context("setting listener non-blocking")?;
+        let handle = svc.handle();
+        if let Some(ck) = &cfg.restore {
+            handle.restore_checkpoint(ck);
+        }
+        let NetServerConfig {
+            max_frame,
+            read_timeout_ms,
+            drain_timeout_ms,
+            restore,
+            checkpoint_out,
+        } = cfg;
+        let ckpt = checkpoint_out.as_ref().map(|_| {
+            Arc::new(Mutex::new(
+                restore.unwrap_or_else(|| Checkpoint::new(Checkpoint::DEFAULT_WINDOW)),
+            ))
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let counters = Arc::new(NetCounters::default());
+        let conn_cfg = ConnConfig { max_frame, read_timeout_ms, drain_timeout_ms };
+        let accept = {
+            let stop = stop.clone();
+            let counters = counters.clone();
+            std::thread::Builder::new()
+                .name("ksegments-net-accept".to_string())
+                .spawn(move || {
+                    accept_loop(listener, svc, stop, counters, ckpt, conn_cfg, checkpoint_out)
+                })
+                .context("spawning accept thread")?
+        };
+        Ok(NetServer { addr: local, stop, counters, handle, accept })
+    }
+
+    /// The actually bound address (resolves ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// An in-process handle to the fronted service (tests use this to
+    /// observe live stats without a connection).
+    pub fn handle(&self) -> ServiceHandle {
+        self.handle.clone()
+    }
+
+    /// Live network-layer counters.
+    pub fn net_snapshot(&self) -> NetSnapshot {
+        self.counters.snapshot()
+    }
+
+    /// Block until a `shutdown` frame (or [`NetServer::stop`] from
+    /// another thread holding the struct) drains the server.
+    pub fn wait(self) -> Result<ServerReport> {
+        self.accept.join().map_err(|_| anyhow!("accept thread panicked"))?
+    }
+
+    /// Request drain from the host process and join.
+    pub fn stop(self) -> Result<ServerReport> {
+        self.stop.store(true, Ordering::SeqCst);
+        self.wait()
+    }
+}
+
+/// Per-connection knobs, copied out of [`NetServerConfig`].
+#[derive(Clone, Copy)]
+struct ConnConfig {
+    max_frame: usize,
+    read_timeout_ms: u64,
+    drain_timeout_ms: u64,
+}
+
+type SharedCheckpoint = Option<Arc<Mutex<Checkpoint>>>;
+
+fn accept_loop(
+    listener: TcpListener,
+    svc: ShardedPredictionService,
+    stop: Arc<AtomicBool>,
+    counters: Arc<NetCounters>,
+    ckpt: SharedCheckpoint,
+    cfg: ConnConfig,
+    checkpoint_out: Option<PathBuf>,
+) -> Result<ServerReport> {
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                NetCounters::bump(&counters.connections);
+                let h = svc.handle();
+                let stop = stop.clone();
+                let counters = counters.clone();
+                let ckpt = ckpt.clone();
+                let conn = std::thread::Builder::new()
+                    .name("ksegments-net-conn".to_string())
+                    .spawn(move || {
+                        // a connection-level I/O error (peer reset,
+                        // write to a closed socket) ends that
+                        // connection only, never the server
+                        let _ = serve_connection(stream, h, stop, counters, ckpt, cfg);
+                    })
+                    .context("spawning connection thread")?;
+                conns.push(conn);
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(e).context("accepting connection"),
+        }
+    }
+    // drain: no new connections, existing ones answer what they have
+    drop(listener);
+    for conn in conns {
+        let _ = conn.join();
+    }
+    let per_shard = svc.shutdown_per_shard();
+    let checkpoint_out = match (checkpoint_out, ckpt) {
+        (Some(path), Some(ck)) => {
+            let ck = ck.lock().expect("checkpoint lock poisoned");
+            ck.save(&path).with_context(|| format!("saving checkpoint {}", path.display()))?;
+            Some(path)
+        }
+        _ => None,
+    };
+    Ok(ServerReport { per_shard, net: counters.snapshot(), checkpoint_out })
+}
+
+fn serve_connection(
+    mut stream: TcpStream,
+    h: ServiceHandle,
+    stop: Arc<AtomicBool>,
+    counters: Arc<NetCounters>,
+    ckpt: SharedCheckpoint,
+    cfg: ConnConfig,
+) -> io::Result<()> {
+    let _ = stream.set_nodelay(true);
+    stream.set_read_timeout(Some(Duration::from_millis(cfg.read_timeout_ms.max(1))))?;
+    let mut pending: Vec<u8> = Vec::new();
+    let mut resp: Vec<u8> = Vec::new();
+    let mut tmp = [0u8; 16 * 1024];
+    let mut drain_clock: Option<Stopwatch> = None;
+    loop {
+        // answer every complete frame already buffered, in order
+        loop {
+            match take_frame(&mut pending, cfg.max_frame) {
+                Ok(Some(payload)) => {
+                    handle_frame(&payload, &h, &stop, &counters, &ckpt, &mut resp)?;
+                    stream.write_all(&resp)?;
+                }
+                Ok(None) => break,
+                Err(err) => {
+                    // framing is lost: typed error, then close
+                    NetCounters::bump(&counters.errors);
+                    NetCounters::bump(&counters.responses);
+                    write_error_frame(&mut resp, &err)?;
+                    let _ = stream.write_all(&resp);
+                    return Ok(());
+                }
+            }
+        }
+        if stop.load(Ordering::SeqCst) {
+            if pending.is_empty() {
+                return Ok(());
+            }
+            let clock = drain_clock.get_or_insert_with(Stopwatch::start);
+            if clock.elapsed_s() * 1000.0 > cfg.drain_timeout_ms as f64 {
+                return Ok(());
+            }
+        }
+        match stream.read(&mut tmp) {
+            Ok(0) => {
+                if !pending.is_empty() {
+                    // EOF inside a frame: report it, best-effort
+                    NetCounters::bump(&counters.errors);
+                    NetCounters::bump(&counters.responses);
+                    write_error_frame(
+                        &mut resp,
+                        &NetError::new(
+                            ErrCode::TruncatedFrame,
+                            "connection closed inside a frame",
+                        ),
+                    )?;
+                    let _ = stream.write_all(&resp);
+                }
+                return Ok(());
+            }
+            Ok(n) => pending.extend_from_slice(&tmp[..n]),
+            Err(e) if is_wait(&e) => {}
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Read errors that just mean "no bytes yet" under a read timeout.
+fn is_wait(e: &io::Error) -> bool {
+    matches!(
+        e.kind(),
+        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut | io::ErrorKind::Interrupted
+    )
+}
+
+/// Dispatch one parsed frame and serialize its response into `resp`
+/// (a fully framed buffer, reused across frames).
+fn handle_frame(
+    payload: &[u8],
+    h: &ServiceHandle,
+    stop: &AtomicBool,
+    counters: &NetCounters,
+    ckpt: &SharedCheckpoint,
+    resp: &mut Vec<u8>,
+) -> io::Result<()> {
+    NetCounters::bump(&counters.frames);
+    NetCounters::bump(&counters.responses);
+    let unavailable = |resp: &mut Vec<u8>, counters: &NetCounters, id: u64| {
+        NetCounters::bump(&counters.errors);
+        write_error_frame(
+            resp,
+            &NetError::with_id(ErrCode::Unavailable, "prediction service is down", id),
+        )
+    };
+    let (id, req) = match crate::net::frame::parse_request(payload) {
+        Ok(parsed) => parsed,
+        Err(err) => {
+            NetCounters::bump(&counters.errors);
+            return write_error_frame(resp, &err);
+        }
+    };
+    match req {
+        NetRequest::Prime { task_type, default } => {
+            if let Some(ck) = ckpt {
+                ck.lock().expect("checkpoint lock poisoned").record_default(&task_type, default);
+            }
+            h.prime(&task_type, default);
+            write_ok_frame(resp, id)
+        }
+        NetRequest::Predict { task_type, input_mib } => {
+            match h.try_predict(&task_type, input_mib) {
+                Some(alloc) => {
+                    NetCounters::bump(&counters.predictions);
+                    write_alloc_frame(resp, id, &alloc)
+                }
+                None => unavailable(resp, counters, id),
+            }
+        }
+        NetRequest::ReportFailure { task_type, input_mib, failed, info } => {
+            match h.try_report_failure(&task_type, input_mib, failed, info) {
+                Some(alloc) => {
+                    NetCounters::bump(&counters.failures);
+                    write_alloc_frame(resp, id, &alloc)
+                }
+                None => unavailable(resp, counters, id),
+            }
+        }
+        NetRequest::Complete { run } => {
+            if let Some(ck) = ckpt {
+                ck.lock().expect("checkpoint lock poisoned").record(&run);
+            }
+            NetCounters::bump(&counters.completions);
+            h.complete(*run);
+            write_ok_frame(resp, id)
+        }
+        NetRequest::Replay { runs } => {
+            if let Some(ck) = ckpt {
+                let mut ck = ck.lock().expect("checkpoint lock poisoned");
+                for run in &runs {
+                    ck.record(run);
+                }
+            }
+            let mut src = InMemorySource::from_runs(Vec::new(), runs);
+            match h.replay_source(&mut src, DEFAULT_CHUNK) {
+                Ok(fed) => {
+                    counters.predictions.fetch_add(fed, Ordering::SeqCst);
+                    counters.completions.fetch_add(fed, Ordering::SeqCst);
+                    counters.replayed_runs.fetch_add(fed, Ordering::SeqCst);
+                    write_fed_frame(resp, id, fed)
+                }
+                Err(e) => {
+                    NetCounters::bump(&counters.errors);
+                    write_error_frame(
+                        resp,
+                        &NetError::with_id(ErrCode::Unavailable, e.to_string(), id),
+                    )
+                }
+            }
+        }
+        NetRequest::Stats => match h.try_per_shard_stats() {
+            Some(per_shard) => {
+                write_stats_frame(resp, id, &ServiceStats::aggregated(&per_shard), &per_shard)
+            }
+            None => unavailable(resp, counters, id),
+        },
+        NetRequest::Shutdown => {
+            stop.store(true, Ordering::SeqCst);
+            write_ok_frame(resp, id)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn net_metrics_export_names() {
+        let snap = NetSnapshot {
+            connections: 2,
+            frames: 10,
+            responses: 10,
+            errors: 1,
+            predictions: 4,
+            completions: 4,
+            failures: 0,
+            replayed_runs: 3,
+        };
+        let mut reg = Registry::new();
+        export_net_metrics(&snap, &mut reg);
+        assert_eq!(reg.counter("net_connections_total"), 2);
+        assert_eq!(reg.counter("net_frames_total"), 10);
+        assert_eq!(reg.counter("net_errors_total"), 1);
+        assert_eq!(reg.counter("net_replayed_runs_total"), 3);
+    }
+
+    #[test]
+    fn config_default_is_sane() {
+        let cfg = NetServerConfig::default();
+        assert_eq!(cfg.max_frame, MAX_FRAME_DEFAULT);
+        assert!(cfg.restore.is_none());
+        assert!(cfg.checkpoint_out.is_none());
+        assert!(cfg.drain_timeout_ms >= cfg.read_timeout_ms);
+    }
+}

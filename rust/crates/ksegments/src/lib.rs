@@ -55,7 +55,10 @@
 //!   provenance logs ([`telemetry`]);
 //! * the **prediction service**: the long-running coordinator a SWMS
 //!   submits to, with task types hash-partitioned across N model
-//!   threads ([`coordinator`]);
+//!   threads ([`coordinator`]), fronted by a length-prefixed JSONL
+//!   wire protocol over TCP with pipelining, typed protocol errors,
+//!   graceful drain, checkpoint warm restart and a QPS-paced load
+//!   generator ([`net`], `ksegments serve-tcp` / `ksegments loadgen`);
 //! * the **AOT runtime bridge**: the batched model fit is lowered from
 //!   JAX + Pallas to HLO at build time and executed through the PJRT
 //!   CPU client on the online-learning path ([`runtime`]), with a
@@ -95,7 +98,7 @@ pub use ksegments_sched::{cluster, engine, sched};
 // Serving layer (ksegments-serve). `ingest` re-exports the core
 // `source` items (TraceSource, InMemorySource, materialize) next to
 // the file-backed readers, so the historical flat paths survive.
-pub use ksegments_serve::{coordinator, ingest};
+pub use ksegments_serve::{coordinator, ingest, net};
 
 /// Wastage accounting and report tables (compatibility alias).
 ///
@@ -146,6 +149,7 @@ pub mod prelude {
     pub use crate::ingest::{replay_source, Checkpoint, InMemorySource, TraceSource};
     pub use crate::metrics::{MethodReport, TaskReport};
     pub use crate::ml::step_fn::StepFunction;
+    pub use crate::net::{NetClient, NetServer, NetServerConfig};
     pub use crate::predictors::{Allocation, FailureInfo, MemoryPredictor};
     pub use crate::sched::{
         schedule_stream, schedule_trace, schedule_workflows, ReservationPolicy, SchedConfig,

@@ -18,6 +18,10 @@ fn compile_surface(
     _xla: &ksegments::runtime::XlaFitter,
     _ckpt: &ksegments::ingest::Checkpoint,
     _svc: &ksegments::coordinator::ShardedPredictionService,
+    _srv: &ksegments::net::NetServer,
+    _netc: &ksegments::net::NetClient,
+    _lgcfg: &ksegments::net::LoadgenConfig,
+    _frame_err: ksegments::net::ErrCode,
     _spec: &ksegments::workflow::WorkflowSpec,
     _grid: &ksegments::sim::EvalGrid,
     _cell: ksegments::sim::EvalCell,
@@ -36,6 +40,10 @@ fn compile_surface_fns() {
         ksegments::bench_harness::run_failure_sweep;
     let _ = ksegments::ingest::open_source;
     let _ = ksegments::ingest::read_nextflow_dir;
+    let _ = ksegments::net::run_loadgen;
+    let _ = ksegments::net::parse_request;
+    let _ = ksegments::net::export_net_metrics;
+    let _: usize = ksegments::net::MAX_FRAME_DEFAULT;
     let _ = ksegments::telemetry::write_chrome_trace;
     let _ = ksegments::sched::schedule_stream;
     let _ = ksegments::sched::schedule_workflows;

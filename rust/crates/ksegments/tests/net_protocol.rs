@@ -1,0 +1,374 @@
+//! Protocol conformance suite for the TCP prediction service
+//! (`ksegments::net`), over real loopback sockets throughout:
+//!
+//! * every request kind round-trips with exact counters;
+//! * malformed frames — truncated length prefix, truncated payload,
+//!   oversized frame, invalid UTF-8, bad JSON, unknown method, missing
+//!   fields — each get a typed error and never kill the server or a
+//!   sibling connection;
+//! * pipelined requests come back in request order;
+//! * a multi-connection TCP replay of the Nextflow fixture is
+//!   bit-identical to the in-process `ServiceHandle::replay_source`;
+//! * the live `stats` frame snapshots a running server and is exact
+//!   after drain;
+//! * drain mid-stream + checkpoint warm restart reproduces the
+//!   uninterrupted server's predictions and checkpoint byte-for-byte.
+
+use std::io::Write;
+use std::net::{Shutdown, TcpStream};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use ksegments::bench_harness::{make_method, FitterChoice};
+use ksegments::coordinator::{ServiceStats, ShardedPredictionService};
+use ksegments::ingest::{materialize, Checkpoint, NextflowDirSource, TraceSource};
+use ksegments::net::{
+    parse_response, read_frame, run_loadgen, LoadgenConfig, NetClient, NetServer, NetServerConfig,
+    MAX_FRAME_DEFAULT,
+};
+use ksegments::predictors::{Allocation, FailureInfo, MemoryPredictor};
+use ksegments::trace::{TaskRun, UsageSeries};
+use ksegments::units::{MemMiB, Seconds};
+
+fn fixture_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/nextflow")
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("ksegments_test_net_protocol");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn kseg(_shard: usize) -> Box<dyn MemoryPredictor> {
+    make_method("ksegments-selective", FitterChoice::Native).expect("roster key")
+}
+
+fn spawn_server(shards: usize, cfg: NetServerConfig) -> NetServer {
+    let svc = ShardedPredictionService::spawn(shards, kseg);
+    NetServer::spawn("127.0.0.1:0", svc, cfg).expect("binding loopback server")
+}
+
+fn mk_run(ty: &str, input: f64, peak: f64, seq: u64) -> TaskRun {
+    let samples: Vec<f64> = (0..8).map(|j| peak * (j + 1) as f64 / 8.0).collect();
+    TaskRun {
+        task_type: ty.into(),
+        input_mib: input,
+        runtime: Seconds(16.0),
+        series: UsageSeries::new(2.0, samples),
+        seq,
+    }
+}
+
+/// Counters with the scheduling-dependent wakeups masked out.
+fn sans_wakeups(s: &ServiceStats) -> (u64, u64, u64) {
+    (s.predictions, s.completions, s.failures)
+}
+
+/// Write one length-prefixed frame with an arbitrary payload.
+fn raw_send(s: &mut TcpStream, payload: &[u8]) {
+    let mut buf = Vec::with_capacity(4 + payload.len());
+    buf.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+    buf.extend_from_slice(payload);
+    s.write_all(&buf).unwrap();
+}
+
+/// Read the next frame and require a typed error; returns (id, code).
+fn raw_recv_err(s: &mut TcpStream) -> (Option<u64>, String) {
+    let payload = read_frame(s, MAX_FRAME_DEFAULT)
+        .expect("reading error frame")
+        .expect("server closed before answering");
+    let resp = parse_response(&payload).expect("parsing error frame");
+    assert!(!resp.ok, "expected a typed error, got ok: {payload:?}");
+    let (code, _msg) = resp.error.expect("error frame without an error body");
+    (resp.id, code)
+}
+
+#[test]
+fn every_request_kind_round_trips_over_loopback() {
+    let server = spawn_server(2, NetServerConfig::default());
+    let addr = server.local_addr().to_string();
+    let mut c = NetClient::connect(&addr).unwrap();
+
+    c.prime("wire/A", MemMiB(2048.0)).unwrap();
+    let cold = c.predict("wire/A", 100.0).unwrap();
+    assert!(!cold.is_dynamic(), "untrained predict should fall back to the static default");
+
+    for i in 0..12u64 {
+        c.complete(&mk_run("wire/A", 100.0 + i as f64, 200.0 + 10.0 * i as f64, i)).unwrap();
+    }
+    // per-type FIFO: this predict is answered after all 12 completions
+    let warm = c.predict("wire/A", 150.0).unwrap();
+    assert!(warm.is_dynamic(), "trained predict stayed static: {warm:?}");
+
+    let failed = Allocation::Static(MemMiB(100.0));
+    let info = FailureInfo::oom(1.0, 400.0, 1);
+    let next = c.report_failure("wire/A", 150.0, &failed, &info).unwrap();
+    assert!(next.max_value() > 0.0);
+
+    // batched replay through the server's chunked replay path
+    let runs: Vec<TaskRun> =
+        (0..5).map(|i| mk_run("wire/B", 10.0 * i as f64, 100.0, i as u64)).collect();
+    assert_eq!(c.replay(&runs).unwrap(), 5);
+
+    let (total, per_shard) = c.stats().unwrap();
+    assert_eq!(per_shard.len(), 2);
+    assert_eq!(total, ServiceStats::aggregated(&per_shard));
+    assert_eq!(total.predictions, 2 + 5, "2 direct + 5 replay-internal predicts");
+    assert_eq!(total.completions, 12 + 5);
+    assert_eq!(total.failures, 1);
+
+    c.shutdown_server().unwrap();
+    let report = server.wait().unwrap();
+    assert_eq!(sans_wakeups(&report.total()), (7, 17, 1));
+    assert_eq!(report.net.replayed_runs, 5);
+    assert_eq!(report.net.errors, 0);
+}
+
+#[test]
+fn malformed_frames_get_typed_errors_without_collateral() {
+    let server = spawn_server(2, NetServerConfig::default());
+    let addr = server.local_addr().to_string();
+    // a well-behaved bystander connection, open across every abuse case
+    let mut bystander = NetClient::connect(&addr).unwrap();
+    bystander.prime("mal/ok", MemMiB(512.0)).unwrap();
+
+    // recoverable malformations: typed error, connection keeps serving
+    let mut s = TcpStream::connect(&addr).unwrap();
+    raw_send(&mut s, &[0xff, 0xfe, 0x01]);
+    assert_eq!(raw_recv_err(&mut s), (None, "invalid_utf8".into()));
+    raw_send(&mut s, b"{\"method\":");
+    assert_eq!(raw_recv_err(&mut s), (None, "bad_json".into()));
+    raw_send(&mut s, b"{\"method\":\"teleport\",\"id\":7}");
+    assert_eq!(raw_recv_err(&mut s), (Some(7), "unknown_method".into()));
+    raw_send(&mut s, b"{\"method\":\"predict\",\"id\":8}");
+    assert_eq!(raw_recv_err(&mut s), (Some(8), "bad_request".into()));
+    raw_send(&mut s, b"{\"id\":9}");
+    assert_eq!(raw_recv_err(&mut s), (Some(9), "bad_request".into()));
+    // ... and a valid request on the same connection still works
+    raw_send(&mut s, b"{\"method\":\"stats\",\"id\":10}");
+    let payload = read_frame(&mut s, MAX_FRAME_DEFAULT).unwrap().unwrap();
+    let resp = parse_response(&payload).unwrap();
+    assert!(resp.ok, "recoverable errors must not poison the connection");
+    assert_eq!(resp.id, Some(10));
+    drop(s);
+
+    // oversized frame: the length prefix alone condemns it; typed
+    // error, then the server hangs up — framing is unrecoverable
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.write_all(&(MAX_FRAME_DEFAULT as u32 + 1).to_be_bytes()).unwrap();
+    assert_eq!(raw_recv_err(&mut s), (None, "frame_too_large".into()));
+    assert!(read_frame(&mut s, MAX_FRAME_DEFAULT).unwrap().is_none(), "expected close");
+
+    // truncated length prefix: peer closes after 2 of 4 prefix bytes
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.write_all(&[0x00, 0x00]).unwrap();
+    s.shutdown(Shutdown::Write).unwrap();
+    assert_eq!(raw_recv_err(&mut s), (None, "truncated_frame".into()));
+    assert!(read_frame(&mut s, MAX_FRAME_DEFAULT).unwrap().is_none(), "expected close");
+
+    // truncated payload: 10 bytes declared, 3 delivered
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.write_all(&10u32.to_be_bytes()).unwrap();
+    s.write_all(b"abc").unwrap();
+    s.shutdown(Shutdown::Write).unwrap();
+    assert_eq!(raw_recv_err(&mut s), (None, "truncated_frame".into()));
+
+    // the bystander never noticed any of it
+    let alloc = bystander.predict("mal/ok", 1.0).unwrap();
+    assert!(alloc.max_value() > 0.0);
+    bystander.shutdown_server().unwrap();
+    let report = server.wait().unwrap();
+    assert_eq!(report.net.errors, 8, "5 parse errors + oversized + 2 truncations");
+    assert_eq!(report.total().predictions, 1, "abuse must not reach the model threads");
+}
+
+#[test]
+fn pipelined_requests_come_back_in_order() {
+    let server = spawn_server(3, NetServerConfig::default());
+    let addr = server.local_addr().to_string();
+    let mut c = NetClient::connect(&addr).unwrap();
+    c.prime("pipe/A", MemMiB(1024.0)).unwrap();
+
+    const N: usize = 64;
+    let mut ids = Vec::with_capacity(N);
+    for i in 0..N {
+        let fields = vec![("task_type", "pipe/A".into()), ("input_mib", (i as f64).into())];
+        ids.push(c.send_request("predict", fields).unwrap());
+    }
+    for (i, id) in ids.into_iter().enumerate() {
+        let resp = c.recv_response().unwrap();
+        assert_eq!(resp.id, Some(id), "response #{i} out of order");
+        assert!(resp.ok);
+        assert!(resp.alloc.is_some(), "predict response #{i} without an allocation");
+    }
+
+    c.shutdown_server().unwrap();
+    let report = server.wait().unwrap();
+    assert_eq!(report.total().predictions, N as u64);
+}
+
+/// Acceptance criterion: replaying the fixture over TCP ends in the
+/// same final counters (per shard, wakeups aside) and the same trained
+/// per-type predictions as the in-process replay — at 1 connection and
+/// at 8.
+#[test]
+fn tcp_replay_is_bit_identical_to_in_process_replay() {
+    const TYPES: [&str; 3] = ["ALIGN", "FILTER", "QUANT"];
+
+    // in-process baseline
+    let svc = ShardedPredictionService::spawn(4, kseg);
+    let h = svc.handle();
+    let mut src = NextflowDirSource::open(&fixture_dir()).unwrap();
+    let fed = h.replay_source(&mut src, 5).unwrap();
+    assert_eq!(fed, 14);
+    let base_shards = h.per_shard_stats();
+    let base_preds: Vec<Allocation> =
+        TYPES.iter().map(|ty| h.predict(ty, 150.0)).collect();
+    svc.shutdown();
+
+    for conns in [1usize, 8] {
+        let server = spawn_server(4, NetServerConfig::default());
+        let addr = server.local_addr().to_string();
+        let mut src = NextflowDirSource::open(&fixture_dir()).unwrap();
+        let cfg = LoadgenConfig { connections: conns, ..LoadgenConfig::default() };
+        let report = run_loadgen(&addr, &mut src, &cfg).unwrap();
+        assert_eq!(report.runs_fed, 14, "connections={conns}");
+        assert_eq!(report.errors, 0, "connections={conns}");
+        assert_eq!(report.connections, conns);
+
+        assert_eq!(report.per_shard.len(), base_shards.len());
+        for (s, (tcp, base)) in report.per_shard.iter().zip(&base_shards).enumerate() {
+            assert_eq!(
+                sans_wakeups(tcp),
+                sans_wakeups(base),
+                "shard {s} diverged at connections={conns}"
+            );
+        }
+        // trained model state is identical too, not just the counters
+        let mut probe = NetClient::connect(&addr).unwrap();
+        for (ty, base_alloc) in TYPES.iter().zip(&base_preds) {
+            let got = probe.predict(ty, 150.0).unwrap();
+            assert_eq!(&got, base_alloc, "{ty} diverged at connections={conns}");
+        }
+        probe.shutdown_server().unwrap();
+        server.wait().unwrap();
+    }
+}
+
+#[test]
+fn tcp_stats_snapshot_while_running_and_exact_after_drain() {
+    const RUNS: u64 = 300;
+    let server = spawn_server(2, NetServerConfig::default());
+    let addr = server.local_addr().to_string();
+
+    let feeder = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut c = NetClient::connect(&addr).unwrap();
+            c.prime("live/A", MemMiB(256.0)).unwrap();
+            for i in 0..RUNS {
+                c.complete(&mk_run("live/A", i as f64, 50.0, i)).unwrap();
+            }
+        })
+    };
+
+    // live snapshots from a second connection while traffic flows
+    let mut watcher = NetClient::connect(&addr).unwrap();
+    let mut snapshots = Vec::new();
+    for _ in 0..50 {
+        let (total, _) = watcher.stats().unwrap();
+        snapshots.push(total.completions);
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(
+        snapshots.windows(2).all(|w| w[0] <= w[1]),
+        "live completions went backwards: {snapshots:?}"
+    );
+
+    // feeder drained: every completion was acked, so per-shard FIFO
+    // makes the next stats snapshot exact
+    feeder.join().expect("feeder panicked");
+    let (total, per_shard) = watcher.stats().unwrap();
+    assert_eq!(total.completions, RUNS);
+    assert_eq!(total, ServiceStats::aggregated(&per_shard));
+
+    watcher.shutdown_server().unwrap();
+    assert_eq!(server.wait().unwrap().total().completions, RUNS);
+}
+
+/// Acceptance criterion: serve half the fixture, drain with a
+/// checkpoint, warm-restart from it and serve the rest — predictions
+/// and the final checkpoint are byte-identical to one uninterrupted
+/// server lifetime.
+#[test]
+fn drain_plus_checkpoint_warm_restart_is_byte_identical() {
+    let mut src = NextflowDirSource::open(&fixture_dir()).unwrap();
+    let defaults = src.defaults();
+    let trace = materialize(&mut src).unwrap();
+    let ordered: Vec<TaskRun> = trace.all_runs_ordered().into_iter().cloned().collect();
+    assert_eq!(ordered.len(), 14);
+    let types: Vec<String> = defaults.iter().map(|(ty, _)| ty.clone()).collect();
+
+    let ck_full = tmp("ck_full.jsonl");
+    let ck_half = tmp("ck_half.jsonl");
+    let ck_resumed = tmp("ck_resumed.jsonl");
+
+    // uninterrupted reference: all 14 runs in one server lifetime
+    let cfg =
+        NetServerConfig { checkpoint_out: Some(ck_full.clone()), ..NetServerConfig::default() };
+    let server = spawn_server(4, cfg);
+    let addr = server.local_addr().to_string();
+    let mut c = NetClient::connect(&addr).unwrap();
+    for (ty, mem) in &defaults {
+        c.prime(ty, *mem).unwrap();
+    }
+    for run in &ordered {
+        c.complete(run).unwrap();
+    }
+    let base: Vec<Allocation> = types.iter().map(|ty| c.predict(ty, 150.0).unwrap()).collect();
+    c.shutdown_server().unwrap();
+    server.wait().unwrap();
+
+    // first half, then a graceful drain mid-stream
+    let cfg =
+        NetServerConfig { checkpoint_out: Some(ck_half.clone()), ..NetServerConfig::default() };
+    let server = spawn_server(4, cfg);
+    let addr = server.local_addr().to_string();
+    let mut c = NetClient::connect(&addr).unwrap();
+    for (ty, mem) in &defaults {
+        c.prime(ty, *mem).unwrap();
+    }
+    for run in &ordered[..7] {
+        c.complete(run).unwrap();
+    }
+    c.shutdown_server().unwrap();
+    server.wait().unwrap();
+
+    // warm restart from the mid-stream checkpoint, serve the rest
+    let cfg = NetServerConfig {
+        restore: Some(Checkpoint::load(&ck_half).unwrap()),
+        checkpoint_out: Some(ck_resumed.clone()),
+        ..NetServerConfig::default()
+    };
+    let server = spawn_server(4, cfg);
+    let addr = server.local_addr().to_string();
+    let mut c = NetClient::connect(&addr).unwrap();
+    for run in &ordered[7..] {
+        c.complete(run).unwrap();
+    }
+    let resumed: Vec<Allocation> =
+        types.iter().map(|ty| c.predict(ty, 150.0).unwrap()).collect();
+    // restored history never recounts: stats cover new traffic only
+    let (total, _) = c.stats().unwrap();
+    assert_eq!(total.completions, 7);
+    c.shutdown_server().unwrap();
+    server.wait().unwrap();
+
+    assert_eq!(resumed, base, "post-restart predictions diverged from uninterrupted");
+    let full = std::fs::read(&ck_full).unwrap();
+    let half = std::fs::read(&ck_half).unwrap();
+    let resumed_bytes = std::fs::read(&ck_resumed).unwrap();
+    assert_ne!(full, half, "the mid-stream checkpoint should be a strict prefix of history");
+    assert_eq!(resumed_bytes, full, "resumed checkpoint differs from uninterrupted");
+}

@@ -160,6 +160,70 @@ fn single_shard_matches_prediction_service_totals() {
     assert_eq!(a.failures, b.failures);
 }
 
+/// Many concurrent `stats` readers against a service under live
+/// write traffic: every snapshot is internally consistent and
+/// monotone per reader, and once the writers drain the very next
+/// snapshot is exact — the service-side path behind the wire
+/// protocol's `stats` frame.
+#[test]
+fn concurrent_stats_readers_see_monotone_then_exact_totals() {
+    const WRITERS: usize = 4;
+    const READERS: usize = 4;
+    const RUNS_PER_WRITER: u64 = 200;
+
+    let svc = ShardedPredictionService::spawn(3, |_| Box::new(DefaultConfigPredictor::new()));
+    let done = Arc::new(AtomicBool::new(false));
+
+    let mut writers = Vec::new();
+    for c in 0..WRITERS {
+        let h = svc.handle();
+        writers.push(std::thread::spawn(move || {
+            let ty = format!("snap/w{c}");
+            h.prime(&ty, MemMiB(128.0));
+            for i in 0..RUNS_PER_WRITER {
+                let _ = h.predict(&ty, i as f64);
+                h.complete(mk_run(&ty, i as f64, 50.0, i));
+            }
+        }));
+    }
+    let mut readers = Vec::new();
+    for _ in 0..READERS {
+        let h = svc.handle();
+        let done = Arc::clone(&done);
+        readers.push(std::thread::spawn(move || {
+            let mut polls = 0u64;
+            let mut last = 0u64;
+            while !done.load(Ordering::Relaxed) {
+                let s = h.stats();
+                assert!(
+                    s.completions >= last,
+                    "completions went backwards: {last} -> {}",
+                    s.completions
+                );
+                last = s.completions;
+                polls += 1;
+            }
+            polls
+        }));
+    }
+    for w in writers {
+        w.join().expect("writer panicked");
+    }
+    // writers joined: every complete is enqueued, so per-shard FIFO
+    // makes this live snapshot exact — no quiescing sleep needed
+    let live = svc.handle().stats();
+    assert_eq!(live.predictions, WRITERS as u64 * RUNS_PER_WRITER);
+    assert_eq!(live.completions, WRITERS as u64 * RUNS_PER_WRITER);
+    done.store(true, Ordering::Relaxed);
+    for r in readers {
+        let polls = r.join().expect("reader panicked");
+        assert!(polls > 0, "a reader never got a snapshot in");
+    }
+    let fin = svc.shutdown();
+    assert_eq!(fin.predictions, live.predictions);
+    assert_eq!(fin.completions, live.completions);
+}
+
 /// Aggregated stats observed through a live handle equal the sum of
 /// per-shard stats at shutdown once traffic has quiesced.
 #[test]

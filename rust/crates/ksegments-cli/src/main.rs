@@ -307,7 +307,7 @@ fn cmd_fig8(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_validate_runtime() -> Result<()> {
+fn cmd_validate_runtime(args: &Args) -> Result<()> {
     use ksegments::ml::fitter::FitInput;
     let mut xla = XlaFitter::load_default()?;
     let (n_hist, t_max) = (xla.manifest().n_hist, xla.manifest().t_max);
@@ -316,7 +316,8 @@ fn cmd_validate_runtime() -> Result<()> {
         xla.manifest().fits.keys().collect::<Vec<_>>()
     );
     let mut native = NativeFitter;
-    let mut rng = ksegments::rng::Rng::new(7);
+    // rng-discipline: roots come from --seed, streams from fork()
+    let mut rng = ksegments::rng::Rng::new(args.seed()).fork("validate-runtime");
     let mut worst: f64 = 0.0;
     for k in [1usize, 2, 4, 8, 16] {
         let mut input = FitInput::default();
@@ -1080,7 +1081,7 @@ fn real_main() -> Result<()> {
             }
             Ok(())
         }
-        "validate-runtime" => cmd_validate_runtime(),
+        "validate-runtime" => cmd_validate_runtime(&args),
         "serve" => cmd_serve(&args),
         "serve-tcp" => cmd_serve_tcp(&args),
         "loadgen" => cmd_loadgen(&args),

@@ -10,13 +10,17 @@
 //! accounts wastage and retries, and the [`wastage`] report types the
 //! paper's Fig. 7 plots.
 //!
-//! Everything here is dependency-light and engine-agnostic: no thread
-//! pools, no discrete-event engine, no file-format sniffing. Those
+//! Everything here is dependency-light and engine-agnostic: no
+//! discrete-event engine, no file-format sniffing, no sockets. Those
 //! live in the higher workspace layers — `ksegments-sim` (parallel
 //! evaluation grids, figure regeneration), `ksegments-sched` (cluster
 //! + scheduler), `ksegments-serve` (ingestion, replay, the prediction
 //! service) — and the `ksegments` facade crate re-exports all of them
-//! under the historical single-crate paths.
+//! under the historical single-crate paths. The one piece of shared
+//! fan-out infrastructure, the deterministic [`parallel`] worker pool,
+//! lives here precisely because sim, sched and serve are peers: the
+//! crate DAG (enforced by `ksegments-lint`) lets them depend on core
+//! only.
 //!
 //! Module map:
 //!
@@ -32,7 +36,10 @@
 //!   XLA-backed drop-in behind the `xla` feature), and fitter
 //!   selection.
 //! * [`predictors`] — the paper's method roster behind one
-//!   [`predictors::MemoryPredictor`] trait.
+//!   [`predictors::MemoryPredictor`] trait, with the CLI-key registry
+//!   in [`predictors::roster`].
+//! * [`parallel`] — the deterministic order-preserving worker pool
+//!   every grid and sweep fans out on.
 //! * [`scoring`] — the online evaluation protocol (predict → attempt
 //!   → retry) for a single predictor over a single trace.
 //! * [`wastage`] — per-task and per-method wastage/retry reports
@@ -44,6 +51,7 @@
 
 pub mod monitoring;
 pub mod ml;
+pub mod parallel;
 pub mod predictors;
 pub mod rng;
 pub mod runtime;

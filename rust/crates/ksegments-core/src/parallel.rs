@@ -1,0 +1,87 @@
+//! The deterministic fixed-size worker pool shared by every fan-out
+//! surface in the workspace — the sim evaluation grid, the scheduler
+//! sweep grids, and the streaming replay engine all claim work through
+//! [`parallel_map`].
+//!
+//! It lives in the core layer (rather than `ksegments-sim`, its
+//! pre-split home) because the crate DAG enforced by `ksegments-lint`
+//! allows sim, sched and serve to depend on core only: a shared pool
+//! anywhere higher would force a sideways dependency between peers.
+//!
+//! Determinism is load-bearing (every number in EXPERIMENTS.md is
+//! regenerated from a fixed seed): callers must make each work item a
+//! pure function of its index, and [`parallel_map`] re-orders results
+//! by index before returning, so `workers = 1` and `workers = N` are
+//! bit-identical by construction — `tests/parallel_determinism.rs`
+//! locks this down for every grid built on top.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::predictors::MemoryPredictor;
+
+/// A thread-safe predictor constructor: each grid cell (and each
+/// service shard) builds its own private model instance from one of
+/// these, so no model state is ever shared between threads.
+pub type PredictorFactory = Box<dyn Fn() -> Box<dyn MemoryPredictor> + Send + Sync>;
+
+/// Default worker-pool size: one worker per available core.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Order-preserving parallel map over `0..n` on a fixed-size pool of
+/// `workers` std threads.
+///
+/// Work is claimed dynamically (atomic counter), so stragglers don't
+/// serialise the pool, but the output vector is always `[f(0), f(1),
+/// ..., f(n-1)]` regardless of which worker computed which index.
+/// `workers <= 1` degenerates to a plain sequential map with no thread
+/// setup. A panic in any `f(i)` propagates to the caller.
+pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = workers.max(1).min(n.max(1));
+    if workers == 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<(usize, T)>> = Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i);
+                results.lock().unwrap().push((i, r));
+            });
+        }
+    });
+    let mut pairs = results.into_inner().unwrap();
+    pairs.sort_by_key(|(i, _)| *i);
+    debug_assert_eq!(pairs.len(), n);
+    pairs.into_iter().map(|(_, r)| r).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        for workers in [1, 2, 4, 9] {
+            let out = parallel_map(100, workers, |i| i * i);
+            assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn parallel_map_empty_and_oversubscribed() {
+        assert!(parallel_map(0, 8, |i| i).is_empty());
+        assert_eq!(parallel_map(3, 64, |i| i + 1), vec![1, 2, 3]);
+    }
+}

@@ -25,6 +25,7 @@ pub mod history;
 pub mod ksegments;
 pub mod lr_witt;
 pub mod ppm;
+pub mod roster;
 
 use crate::ml::step_fn::StepFunction;
 use crate::trace::TaskRun;

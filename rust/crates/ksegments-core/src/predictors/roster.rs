@@ -1,0 +1,191 @@
+//! The predictor-zoo roster: CLI `--method` keys → predictor
+//! constructors, the single source of truth shared by the figure
+//! grids (`ksegments-sim`), the scheduler sweeps (`ksegments-sched`)
+//! and the CLI's `--method` plumbing.
+//!
+//! Pre-split this lived in `ksegments_sim::figures`; it moved into the
+//! core layer because the sched sweeps need it too and the crate DAG
+//! (enforced by `ksegments-lint`'s `layering` pass) forbids a
+//! sideways sched → sim edge. `figures` re-exports everything here, so
+//! the historical paths keep compiling.
+
+use crate::ml::fitter::KsegFitter;
+use crate::parallel::PredictorFactory;
+use crate::predictors::adaptive_k::AdaptiveKPredictor;
+use crate::predictors::condor::CondorTriple;
+use crate::predictors::default_config::DefaultConfigPredictor;
+use crate::predictors::dynseg::DynSegPredictor;
+use crate::predictors::ensemble::EnsemblePredictor;
+use crate::predictors::ksegments::{KSegmentsConfig, KSegmentsPredictor, RetryStrategy};
+use crate::predictors::lr_witt::LrWittPredictor;
+use crate::predictors::ppm::PpmPredictor;
+use crate::predictors::MemoryPredictor;
+
+/// Which backend the k-Segments fit runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FitterChoice {
+    /// Pure-rust mirror (always available).
+    Native,
+    /// AOT JAX + Pallas module via PJRT (requires `make artifacts`).
+    Xla,
+}
+
+/// A k-Segments predictor at an explicit `k` on the chosen fit
+/// backend — the parameterized constructor behind the two fixed-`k`
+/// roster keys, exported for the fig-4/fig-8 `k` sweeps.
+// The degraded-mode warning below is one of the two sanctioned stderr
+// sites in this crate (the other is the equivalent fallback inside
+// `runtime`): a silent fallback would misattribute XLA-vs-native
+// results, and core has no logging facility by design.
+#[allow(clippy::print_stderr)]
+pub fn make_ksegments(
+    choice: FitterChoice,
+    k: usize,
+    strategy: RetryStrategy,
+) -> Box<dyn MemoryPredictor> {
+    match choice {
+        FitterChoice::Native => Box::new(KSegmentsPredictor::native(k, strategy)),
+        FitterChoice::Xla => {
+            let fitter: Box<dyn KsegFitter> = match crate::runtime::XlaFitter::load_default() {
+                Ok(f) => Box::new(f),
+                Err(e) => {
+                    eprintln!("warning: XLA fitter unavailable ({e:#}); using native fit");
+                    Box::new(crate::ml::fitter::NativeFitter)
+                }
+            };
+            let cfg = KSegmentsConfig { k, ..KSegmentsConfig::default() };
+            Box::new(KSegmentsPredictor::with_fitter(fitter, cfg, strategy))
+        }
+    }
+}
+
+/// CLI keys of the Fig. 7 predictor-zoo roster, in table-row order:
+/// the paper's §IV-C lineup plus the follow-up-literature competitors
+/// (Sizey ensemble, KS+ dynamic segmentation) and the HTCondor
+/// `3 * MemoryUsage` production heuristic.
+pub const METHOD_KEYS: &[&str] = &[
+    "default",
+    "ppm",
+    "ppm-improved",
+    "lr",
+    "ksegments-selective",
+    "ksegments-partial",
+    "ensemble",
+    "dynseg",
+    "condor",
+];
+
+/// Keys accepted by `--method` but not part of the default roster.
+pub const EXTRA_METHOD_KEYS: &[&str] = &["ksegments-adaptive"];
+
+/// Build one predictor by CLI key (`None` for unknown keys). The
+/// single source of truth for key → predictor, shared by the roster,
+/// the grid factories, and the CLI's `--method` plumbing.
+pub fn make_method(key: &str, choice: FitterChoice) -> Option<Box<dyn MemoryPredictor>> {
+    Some(match key {
+        "default" => Box::new(DefaultConfigPredictor::new()),
+        "ppm" => Box::new(PpmPredictor::original()),
+        "ppm-improved" => Box::new(PpmPredictor::improved()),
+        "lr" => Box::new(LrWittPredictor::paper_baseline()),
+        "ksegments-selective" => make_ksegments(choice, 4, RetryStrategy::Selective),
+        "ksegments-partial" => make_ksegments(choice, 4, RetryStrategy::Partial),
+        "ksegments-adaptive" => Box::new(AdaptiveKPredictor::native(RetryStrategy::Selective)),
+        "ensemble" => Box::new(EnsemblePredictor::new()),
+        "dynseg" => Box::new(DynSegPredictor::native(4, RetryStrategy::Selective)),
+        "condor" => Box::new(CondorTriple::new()),
+        _ => return None,
+    })
+}
+
+/// Resolve a `--method` selection — `"all"`, one key, or a comma list —
+/// into canonical roster keys (errors on unknown names).
+pub fn resolve_methods(selection: &str) -> Result<Vec<&'static str>, String> {
+    if selection == "all" {
+        return Ok(METHOD_KEYS.to_vec());
+    }
+    let mut out = Vec::new();
+    for part in selection.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let key = METHOD_KEYS
+            .iter()
+            .chain(EXTRA_METHOD_KEYS)
+            .find(|k| **k == part)
+            .ok_or_else(|| {
+                format!(
+                    "unknown method {part:?} (expected \"all\" or any of: {}, {})",
+                    METHOD_KEYS.join(", "),
+                    EXTRA_METHOD_KEYS.join(", ")
+                )
+            })?;
+        out.push(*key);
+    }
+    if out.is_empty() {
+        return Err("empty method selection".into());
+    }
+    Ok(out)
+}
+
+/// Thread-safe factories for a resolved key list, in the given order.
+pub fn makers_for_keys(keys: &[&'static str], choice: FitterChoice) -> Vec<PredictorFactory> {
+    keys.iter()
+        .map(|&key| {
+            // membership check only — constructing a predictor here
+            // would load (and drop) the XLA artifacts once per key
+            assert!(
+                METHOD_KEYS.contains(&key) || EXTRA_METHOD_KEYS.contains(&key),
+                "unresolved method key {key:?}"
+            );
+            Box::new(move || make_method(key, choice).expect("resolved key")) as PredictorFactory
+        })
+        .collect()
+}
+
+/// The full Fig. 7 method roster (paper §IV-C + the predictor zoo).
+pub fn method_roster(choice: FitterChoice) -> Vec<Box<dyn MemoryPredictor>> {
+    METHOD_KEYS
+        .iter()
+        .map(|k| make_method(k, choice).expect("roster key"))
+        .collect()
+}
+
+/// Names in roster order (stable across runs; used by tables).
+pub fn method_names() -> Vec<String> {
+    method_roster(FitterChoice::Native)
+        .iter()
+        .map(|m| m.name())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_roster_key_constructs() {
+        for key in METHOD_KEYS.iter().chain(EXTRA_METHOD_KEYS) {
+            assert!(make_method(key, FitterChoice::Native).is_some(), "key {key:?}");
+        }
+        assert!(make_method("no-such-method", FitterChoice::Native).is_none());
+    }
+
+    #[test]
+    fn resolve_methods_all_and_lists() {
+        assert_eq!(resolve_methods("all").unwrap(), METHOD_KEYS.to_vec());
+        assert_eq!(resolve_methods("dynseg, condor").unwrap(), vec!["dynseg", "condor"]);
+        assert!(resolve_methods("nope").is_err());
+        assert!(resolve_methods("").is_err());
+    }
+
+    #[test]
+    fn makers_build_the_named_method() {
+        let makers = makers_for_keys(&["ppm-improved", "condor"], FitterChoice::Native);
+        assert_eq!(makers.len(), 2);
+        let names: Vec<String> = makers.iter().map(|mk| mk().name()).collect();
+        assert_eq!(names, method_names_for(&["ppm-improved", "condor"]));
+    }
+
+    fn method_names_for(keys: &[&str]) -> Vec<String> {
+        keys.iter()
+            .map(|k| make_method(k, FitterChoice::Native).unwrap().name())
+            .collect()
+    }
+}

@@ -238,6 +238,10 @@ impl KsegFitter for XlaFitter {
         "xla-pjrt"
     }
 
+    // Sanctioned stderr site (the other is the roster's fallback
+    // warning): a silent XLA→native fallback would misattribute
+    // benchmark results, and core has no logging facility by design.
+    #[allow(clippy::print_stderr)]
     fn fit(&mut self, input: &FitInput, k: usize) -> FitResult {
         let usable = self.registry.manifest.fits.contains_key(&k)
             && input.series.first().map(Vec::len) == Some(self.registry.manifest.t_max);

@@ -1,0 +1,144 @@
+//! Diagnostics and the two report renderers.
+//!
+//! The JSON form is schema-stable (`ksegments-lint-v1`) so CI can
+//! archive it and `tools/lint_check.py` can diff runs, exactly like
+//! the bench snapshot flow. Ordering is deterministic: violations and
+//! suppressions sort by (path, line, rule).
+
+use std::fmt::Write as _;
+
+/// One rule violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Rule id, e.g. `wallclock`.
+    pub rule: &'static str,
+    /// Workspace-relative path, e.g. `crates/ksegments-core/src/rng.rs`.
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub message: String,
+}
+
+/// A finding that a `lint:allow(rule)` converted into a non-violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Suppression {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: usize,
+}
+
+fn sort_key<'a>(rule: &'a str, path: &'a str, line: usize) -> (&'a str, usize, &'a str) {
+    (path, line, rule)
+}
+
+pub(crate) fn sort_diags(diags: &mut [Diagnostic]) {
+    diags.sort_by(|a, b| sort_key(a.rule, &a.path, a.line).cmp(&sort_key(b.rule, &b.path, b.line)));
+}
+
+pub(crate) fn sort_suppressions(sups: &mut [Suppression]) {
+    sups.sort_by(|a, b| sort_key(a.rule, &a.path, a.line).cmp(&sort_key(b.rule, &b.path, b.line)));
+}
+
+/// `path:line: [rule] message` lines plus a one-line summary.
+pub fn render_human(report: &crate::Report) -> String {
+    let mut out = String::new();
+    for d in &report.diags {
+        let _ = writeln!(out, "{}:{}: [{}] {}", d.path, d.line, d.rule, d.message);
+    }
+    let _ = writeln!(
+        out,
+        "{} violation(s), {} suppression(s), {} file(s) scanned",
+        report.diags.len(),
+        report.suppressed.len(),
+        report.files_scanned
+    );
+    out
+}
+
+/// Minimal JSON string escaping (the report contains paths and short
+/// ASCII messages; anything exotic still escapes correctly).
+fn json_str(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// The `ksegments-lint-v1` report document.
+pub fn render_json(report: &crate::Report) -> String {
+    let mut out = String::new();
+    out.push_str("{\"schema\":\"ksegments-lint-v1\"");
+    let _ = write!(out, ",\"files_scanned\":{}", report.files_scanned);
+    out.push_str(",\"rules\":[");
+    for (i, r) in crate::rules::RULE_IDS.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        json_str(&mut out, r);
+    }
+    out.push_str("],\"violations\":[");
+    for (i, d) in report.diags.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str("{\"rule\":");
+        json_str(&mut out, d.rule);
+        out.push_str(",\"path\":");
+        json_str(&mut out, &d.path);
+        let _ = write!(out, ",\"line\":{}", d.line);
+        out.push_str(",\"message\":");
+        json_str(&mut out, &d.message);
+        out.push('}');
+    }
+    out.push_str("],\"suppressions\":[");
+    for (i, s) in report.suppressed.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str("{\"rule\":");
+        json_str(&mut out, s.rule);
+        out.push_str(",\"path\":");
+        json_str(&mut out, &s.path);
+        let _ = write!(out, ",\"line\":{}", s.line);
+        out.push('}');
+    }
+    out.push_str("]}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_escapes_specials() {
+        let mut s = String::new();
+        json_str(&mut s, "a\"b\\c\nd");
+        assert_eq!(s, "\"a\\\"b\\\\c\\nd\"");
+    }
+
+    #[test]
+    fn diags_sort_by_path_line_rule() {
+        let mut ds = vec![
+            Diagnostic { rule: "b", path: "z.rs".into(), line: 1, message: String::new() },
+            Diagnostic { rule: "a", path: "a.rs".into(), line: 9, message: String::new() },
+            Diagnostic { rule: "a", path: "a.rs".into(), line: 2, message: String::new() },
+        ];
+        sort_diags(&mut ds);
+        assert_eq!(
+            ds.iter().map(|d| (d.path.as_str(), d.line)).collect::<Vec<_>>(),
+            vec![("a.rs", 2), ("a.rs", 9), ("z.rs", 1)]
+        );
+    }
+}

@@ -1,0 +1,203 @@
+//! The engine: walk the workspace, scrub every `.rs` file, run every
+//! rule, apply `lint:allow` filtering, and collect a [`Report`].
+//!
+//! Files under `tests/`, `benches/` and `examples/` are test context
+//! wholesale (same standing as `#[cfg(test)]` spans): the invariants
+//! police shipped code paths, not harnesses. The walk order is
+//! sorted, so reports are byte-identical across runs and machines.
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::diag::{sort_diags, sort_suppressions, Diagnostic, Suppression};
+use crate::lexer::scrub;
+use crate::rules::{all_rules, layering, FileCtx};
+
+/// Outcome of a lint run.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Violations, sorted by (path, line, rule).
+    pub diags: Vec<Diagnostic>,
+    /// Findings waived by `lint:allow`, same order.
+    pub suppressed: Vec<Suppression>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.diags.is_empty()
+    }
+}
+
+/// Lint one in-memory source file. `force_test` marks the whole file
+/// as test context (what the walker does for `tests/`, `benches/`,
+/// `examples/`). Returns (violations, suppressions), sorted.
+pub fn check_source(
+    krate: &str,
+    rel_path: &str,
+    src: &str,
+    force_test: bool,
+) -> (Vec<Diagnostic>, Vec<Suppression>) {
+    let mut file = scrub(src);
+    if force_test {
+        for line in &mut file.lines {
+            line.in_test = true;
+        }
+    }
+    let display = format!("crates/{krate}/{rel_path}");
+    let ctx = FileCtx { krate, rel_path, display_path: &display, file: &file };
+    let mut raw = Vec::new();
+    for rule in all_rules() {
+        rule.check(&ctx, &mut raw);
+    }
+    let mut diags = Vec::new();
+    let mut sups = Vec::new();
+    for d in raw {
+        let allowed = d
+            .line
+            .checked_sub(1)
+            .and_then(|i| file.lines.get(i))
+            .is_some_and(|l| l.allows_rule(d.rule));
+        if allowed {
+            sups.push(Suppression { rule: d.rule, path: d.path, line: d.line });
+        } else {
+            diags.push(d);
+        }
+    }
+    sort_diags(&mut diags);
+    sort_suppressions(&mut sups);
+    (diags, sups)
+}
+
+/// Locate the workspace root (the directory holding `crates/`):
+/// `start` itself, `start/rust`, or the nearest ancestor of either.
+pub fn find_root(start: &Path) -> Option<PathBuf> {
+    let mut cur = Some(start.to_path_buf());
+    while let Some(dir) = cur {
+        if dir.join("crates/ksegments-core").is_dir() {
+            return Some(dir);
+        }
+        if dir.join("rust/crates/ksegments-core").is_dir() {
+            return Some(dir.join("rust"));
+        }
+        cur = dir.parent().map(Path::to_path_buf);
+    }
+    None
+}
+
+/// Lint the whole workspace under `root` (the directory holding
+/// `crates/`).
+pub fn run_workspace(root: &Path) -> io::Result<Report> {
+    let mut report = Report::default();
+    let crates_dir = root.join("crates");
+    for crate_dir in sorted_dirs(&crates_dir)? {
+        let manifest_path = crate_dir.join("Cargo.toml");
+        let Ok(manifest) = fs::read_to_string(&manifest_path) else {
+            continue;
+        };
+        let dir_name = file_name(&crate_dir);
+        let krate = package_name(&manifest).unwrap_or_else(|| dir_name.clone());
+        let display_manifest = format!("crates/{dir_name}/Cargo.toml");
+        report
+            .diags
+            .extend(layering::check_manifest(&krate, &display_manifest, &manifest));
+        for (sub, force_test) in
+            [("src", false), ("tests", true), ("benches", true), ("examples", true)]
+        {
+            let sub_dir = crate_dir.join(sub);
+            if !sub_dir.is_dir() {
+                continue;
+            }
+            for path in rust_files(&sub_dir)? {
+                let src = fs::read_to_string(&path)?;
+                let rel = format!("{sub}/{}", rel_to(&path, &sub_dir));
+                let (diags, sups) = check_source(&krate, &rel, &src, force_test);
+                report.files_scanned += 1;
+                report.diags.extend(diags);
+                report.suppressed.extend(sups);
+            }
+        }
+    }
+    sort_diags(&mut report.diags);
+    sort_suppressions(&mut report.suppressed);
+    Ok(report)
+}
+
+fn file_name(p: &Path) -> String {
+    p.file_name().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default()
+}
+
+fn rel_to(path: &Path, base: &Path) -> String {
+    path.strip_prefix(base)
+        .unwrap_or(path)
+        .to_string_lossy()
+        .replace(std::path::MAIN_SEPARATOR, "/")
+}
+
+/// `name = "..."` from the `[package]` section.
+fn package_name(manifest: &str) -> Option<String> {
+    let mut in_package = false;
+    for raw in manifest.lines() {
+        let line = raw.trim();
+        if line.starts_with('[') {
+            in_package = line == "[package]";
+            continue;
+        }
+        if in_package && line.starts_with("name") {
+            let (_, rest) = line.split_once('=')?;
+            return Some(rest.trim().trim_matches('"').to_string());
+        }
+    }
+    None
+}
+
+fn sorted_dirs(dir: &Path) -> io::Result<Vec<PathBuf>> {
+    let mut out: Vec<PathBuf> = fs::read_dir(dir)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.is_dir())
+        .collect();
+    out.sort();
+    Ok(out)
+}
+
+/// All `.rs` files under `dir`, recursively, sorted.
+fn rust_files(dir: &Path) -> io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![dir.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        let mut entries: Vec<PathBuf> =
+            fs::read_dir(&d)?.filter_map(|e| e.ok().map(|e| e.path())).collect();
+        entries.sort();
+        for p in entries {
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn package_name_parses() {
+        let toml = "[package]\nname = \"ksegments-core\"\nversion = \"0.1.0\"\n";
+        assert_eq!(package_name(toml).as_deref(), Some("ksegments-core"));
+        assert_eq!(package_name("[workspace]\nmembers = []\n"), None);
+    }
+
+    #[test]
+    fn force_test_waives_all_rules() {
+        let src = "fn t() { let _ = std::time::Instant::now(); }\n";
+        let (diags, _) = check_source("ksegments-sim", "tests/x.rs", src, true);
+        assert!(diags.is_empty());
+        let (diags, _) = check_source("ksegments-sim", "src/x.rs", src, false);
+        assert_eq!(diags.len(), 1);
+    }
+}

@@ -1,0 +1,451 @@
+//! Source scrubbing: turn a `.rs` file into per-line *code* text with
+//! comments and string/char-literal contents blanked out (columns and
+//! line structure preserved), plus the per-line comment text, the
+//! `#[cfg(test)]` span map and the `lint:allow(...)` suppressions.
+//!
+//! The scrubber is a hand-rolled state machine, not a full lexer: the
+//! rules only need to know "this text is code" vs "this text is a
+//! comment or literal". It understands nested block comments, raw
+//! strings (`r#"…"#`, any hash depth, `b`-prefixed too), escaped
+//! string/char literals, and the char-literal/lifetime ambiguity.
+
+/// One scrubbed source line.
+#[derive(Debug, Default, Clone)]
+pub struct Line {
+    /// Source text with comments and literal contents replaced by
+    /// spaces; string delimiters are kept so rules can see something
+    /// was there.
+    pub code: String,
+    /// Concatenated comment text of the line (for `lint:allow`).
+    pub comment: String,
+    /// Inside a `#[cfg(test)]`-gated item (or a test-only file).
+    pub in_test: bool,
+    /// Rules suppressed on this line: its own trailing `lint:allow`
+    /// plus any from standalone comment lines directly above.
+    pub allows: Vec<String>,
+}
+
+impl Line {
+    pub fn allows_rule(&self, rule: &str) -> bool {
+        self.allows.iter().any(|a| a == rule)
+    }
+}
+
+/// A whole scrubbed file.
+#[derive(Debug, Default)]
+pub struct ScrubbedFile {
+    pub lines: Vec<Line>,
+}
+
+impl ScrubbedFile {
+    /// Scrubbed code rejoined with newlines (used by the span scan).
+    fn joined_code(&self) -> String {
+        let mut out = String::new();
+        for (i, l) in self.lines.iter().enumerate() {
+            if i > 0 {
+                out.push('\n');
+            }
+            out.push_str(&l.code);
+        }
+        out
+    }
+}
+
+/// Scrub `src` and compute test spans + suppressions.
+pub fn scrub(src: &str) -> ScrubbedFile {
+    let mut file = scrub_text(src);
+    mark_cfg_test_spans(&mut file);
+    attach_allows(&mut file);
+    file
+}
+
+enum St {
+    Code,
+    LineComment,
+    Block(u32),
+    Str,
+    RawStr(usize),
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+fn scrub_text(src: &str) -> ScrubbedFile {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut lines: Vec<Line> = vec![Line::default()];
+    let mut st = St::Code;
+    let mut i = 0;
+    macro_rules! cur {
+        () => {
+            lines.last_mut().expect("never empty")
+        };
+    }
+    while i < n {
+        let c = chars[i];
+        let next = if i + 1 < n { chars[i + 1] } else { '\0' };
+        if c == '\n' {
+            if matches!(st, St::LineComment) {
+                st = St::Code;
+            }
+            lines.push(Line::default());
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                if c == '/' && next == '/' {
+                    st = St::LineComment;
+                    cur!().code.push_str("  ");
+                    i += 2;
+                } else if c == '/' && next == '*' {
+                    st = St::Block(1);
+                    cur!().code.push_str("  ");
+                    i += 2;
+                } else if c == '"' {
+                    st = St::Str;
+                    cur!().code.push('"');
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && (i == 0 || !is_ident(chars[i - 1])) {
+                    // raw string r#*" (optionally b-prefixed), byte
+                    // string b", or byte char b' — else a plain ident
+                    let mut j = i;
+                    if chars[j] == 'b' {
+                        j += 1;
+                    }
+                    let mut hashes = 0;
+                    if j < n && chars[j] == 'r' {
+                        j += 1;
+                        while j < n && chars[j] == '#' {
+                            hashes += 1;
+                            j += 1;
+                        }
+                    }
+                    if j < n && chars[j] == '"' && (hashes > 0 || j > i) {
+                        for _ in i..j {
+                            cur!().code.push(' ');
+                        }
+                        cur!().code.push('"');
+                        st = if j > i && (chars[j - 1] == 'r' || chars[j - 1] == '#') {
+                            St::RawStr(hashes)
+                        } else {
+                            St::Str
+                        };
+                        i = j + 1;
+                    } else if c == 'b' && next == '\'' {
+                        // byte char literal b'x' / b'\n'
+                        cur!().code.push(' ');
+                        i += 1; // the '\'' branch below handles the rest
+                    } else {
+                        cur!().code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    if next == '\\' {
+                        // escaped char literal: scan to the closing quote
+                        let mut j = i + 2;
+                        while j < n && chars[j] != '\'' && chars[j] != '\n' {
+                            j += 1;
+                        }
+                        cur!().code.push('\'');
+                        for _ in (i + 1)..j {
+                            cur!().code.push(' ');
+                        }
+                        if j < n && chars[j] == '\'' {
+                            cur!().code.push('\'');
+                            j += 1;
+                        }
+                        i = j;
+                    } else if i + 2 < n && chars[i + 2] == '\'' && next != '\'' && next != '\n' {
+                        cur!().code.push('\'');
+                        cur!().code.push(' ');
+                        cur!().code.push('\'');
+                        i += 3;
+                    } else {
+                        // lifetime or loop label
+                        cur!().code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    cur!().code.push(c);
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                cur!().comment.push(c);
+                cur!().code.push(' ');
+                i += 1;
+            }
+            St::Block(depth) => {
+                if c == '*' && next == '/' {
+                    st = if depth == 1 { St::Code } else { St::Block(depth - 1) };
+                    cur!().code.push_str("  ");
+                    i += 2;
+                } else if c == '/' && next == '*' {
+                    st = St::Block(depth + 1);
+                    cur!().code.push_str("  ");
+                    i += 2;
+                } else {
+                    cur!().comment.push(c);
+                    cur!().code.push(' ');
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    if next == '\n' {
+                        i += 1; // line continuation: newline handled above
+                    } else {
+                        cur!().code.push_str("  ");
+                        i += 2;
+                    }
+                } else if c == '"' {
+                    cur!().code.push('"');
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    cur!().code.push(' ');
+                    i += 1;
+                }
+            }
+            St::RawStr(hashes) => {
+                let closed = c == '"'
+                    && i + hashes < n
+                    && chars[i + 1..i + 1 + hashes].iter().all(|&h| h == '#');
+                if closed {
+                    cur!().code.push('"');
+                    for _ in 0..hashes {
+                        cur!().code.push(' ');
+                    }
+                    st = St::Code;
+                    i += 1 + hashes;
+                } else {
+                    cur!().code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    ScrubbedFile { lines }
+}
+
+/// Mark every line covered by a `#[cfg(test)]`-gated item.
+fn mark_cfg_test_spans(file: &mut ScrubbedFile) {
+    let joined = file.joined_code();
+    let chars: Vec<char> = joined.chars().collect();
+    let line_of: Vec<usize> = {
+        let mut v = Vec::with_capacity(chars.len());
+        let mut l = 0;
+        for &c in &chars {
+            v.push(l);
+            if c == '\n' {
+                l += 1;
+            }
+        }
+        v
+    };
+    let n = chars.len();
+    let mut i = 0;
+    while i < n {
+        if chars[i] != '#' {
+            i += 1;
+            continue;
+        }
+        let attr_start = i;
+        let mut j = i + 1;
+        while j < n && chars[j].is_whitespace() {
+            j += 1;
+        }
+        if j >= n || chars[j] != '[' {
+            i += 1;
+            continue;
+        }
+        // read the attribute body up to its matching ']'
+        let mut depth = 0usize;
+        let body_start = j;
+        while j < n {
+            match chars[j] {
+                '[' => depth += 1,
+                ']' => {
+                    if depth <= 1 {
+                        break;
+                    }
+                    depth -= 1;
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        let body: String = chars[body_start..j.min(n)].iter().collect();
+        i = j.saturating_add(1);
+        if !(contains_word(&body, "cfg") && contains_word(&body, "test")) {
+            continue;
+        }
+        // skip further attributes, then span the gated item: to the
+        // matching '}' of its first '{', or to a top-level ';'
+        let mut k = i;
+        loop {
+            while k < n && chars[k].is_whitespace() {
+                k += 1;
+            }
+            if k < n && chars[k] == '#' {
+                let mut d = 0usize;
+                while k < n {
+                    match chars[k] {
+                        '[' => d += 1,
+                        ']' => {
+                            if d <= 1 {
+                                break;
+                            }
+                            d -= 1;
+                        }
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                k += 1;
+            } else {
+                break;
+            }
+        }
+        let mut end = k;
+        let mut brace = 0i64;
+        while end < n {
+            match chars[end] {
+                '{' => brace += 1,
+                '}' => {
+                    brace -= 1;
+                    if brace == 0 {
+                        break;
+                    }
+                }
+                ';' if brace == 0 => break,
+                _ => {}
+            }
+            end += 1;
+        }
+        let first = line_of.get(attr_start).copied().unwrap_or(0);
+        let last = line_of.get(end.min(n.saturating_sub(1))).copied().unwrap_or(first);
+        for l in first..=last.min(file.lines.len().saturating_sub(1)) {
+            file.lines[l].in_test = true;
+        }
+        i = end.saturating_add(1);
+    }
+}
+
+/// Word-boundary containment check on scrubbed text.
+pub fn contains_word(text: &str, word: &str) -> bool {
+    find_word(text, word).is_some()
+}
+
+/// Byte offset of the first word-boundary occurrence of `word`.
+pub fn find_word(text: &str, word: &str) -> Option<usize> {
+    let bytes = text.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = text[from..].find(word) {
+        let start = from + pos;
+        let end = start + word.len();
+        let before_ok = start == 0 || !is_ident(bytes[start - 1] as char);
+        let after_ok = end >= bytes.len() || !is_ident(bytes[end] as char);
+        if before_ok && after_ok {
+            return Some(start);
+        }
+        from = start + 1;
+    }
+    None
+}
+
+/// Parse every `lint:allow(rule, rule2)` group out of comment text.
+fn parse_allows(comment: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = comment;
+    while let Some(pos) = rest.find("lint:allow(") {
+        let after = &rest[pos + "lint:allow(".len()..];
+        if let Some(close) = after.find(')') {
+            for part in after[..close].split(',') {
+                let rule = part.trim();
+                if !rule.is_empty() {
+                    out.push(rule.to_string());
+                }
+            }
+            rest = &after[close + 1..];
+        } else {
+            break;
+        }
+    }
+    out
+}
+
+/// Attach allows: a comment on a code line suppresses that line; a
+/// standalone comment line (no code) suppresses the next code line.
+/// Consecutive standalone comment lines accumulate.
+fn attach_allows(file: &mut ScrubbedFile) {
+    let mut pending: Vec<String> = Vec::new();
+    for line in &mut file.lines {
+        let own = parse_allows(&line.comment);
+        if line.code.trim().is_empty() {
+            pending.extend(own);
+        } else {
+            line.allows = own;
+            line.allows.append(&mut pending);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_blanked() {
+        let f = scrub("let x = \"Instant::now()\"; // Instant::now()\nInstant::now();\n");
+        assert!(!f.lines[0].code.contains("Instant"));
+        assert!(f.lines[0].comment.contains("Instant::now()"));
+        assert!(f.lines[1].code.contains("Instant::now()"));
+    }
+
+    #[test]
+    fn nested_block_comments_and_raw_strings() {
+        let src = "/* a /* b */ still */ code1\nlet s = r#\"quote \" inside\"#; code2\n";
+        let f = scrub(src);
+        assert!(f.lines[0].code.contains("code1"));
+        assert!(!f.lines[0].code.contains("still"));
+        assert!(f.lines[1].code.contains("code2"));
+        assert!(!f.lines[1].code.contains("inside"));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let f = scrub("fn f<'a>(x: &'a str) { let c = 'x'; let d = '\\n'; }\n");
+        let code = &f.lines[0].code;
+        assert!(code.contains("<'a>"), "lifetime kept: {code}");
+        assert!(!code.contains('x') || !code.contains("'x'"), "char blanked: {code}");
+    }
+
+    #[test]
+    fn multiline_string_stays_scrubbed() {
+        let f = scrub("let s = \"line one\nInstant::now()\nend\"; done();\n");
+        assert!(!f.lines[1].code.contains("Instant"));
+        assert!(f.lines[2].code.contains("done()"));
+    }
+
+    #[test]
+    fn cfg_test_span_covers_module() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn after() {}\n";
+        let f = scrub(src);
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[1].in_test && f.lines[2].in_test && f.lines[3].in_test);
+        assert!(f.lines[4].in_test);
+        assert!(!f.lines[5].in_test);
+    }
+
+    #[test]
+    fn allows_trailing_and_standalone() {
+        let src = "a(); // lint:allow(rule-a)\n// lint:allow(rule-b)\nb();\nc();\n";
+        let f = scrub(src);
+        assert!(f.lines[0].allows_rule("rule-a"));
+        assert!(f.lines[2].allows_rule("rule-b"));
+        assert!(!f.lines[3].allows_rule("rule-b"));
+    }
+}

@@ -1,0 +1,31 @@
+//! In-repo invariant linter for the ksegments workspace.
+//!
+//! `cargo run -p ksegments-lint` tokenizes every `.rs` file in the
+//! workspace and runs a small rule engine over the scrubbed source
+//! (comments and string/char literals blanked, `#[cfg(test)]` spans
+//! tracked). The passes encode the invariants the repo's documentation
+//! promises but `rustc` cannot check:
+//!
+//! | rule id         | invariant                                           |
+//! |-----------------|-----------------------------------------------------|
+//! | `wallclock`     | `Instant::now`/`SystemTime::now` only in the timer  |
+//! | `rng-discipline`| no literal RNG seeds outside tests                  |
+//! | `map-iter-order`| no HashMap/HashSet in order-sensitive modules       |
+//! | `panic-policy`  | no unwrap/expect/panic!/indexing in `serve/src/net` |
+//! | `layering`      | the crate DAG of DESIGN.md §13 holds                |
+//!
+//! A finding on a line carrying `// lint:allow(rule)` — trailing, or
+//! on a standalone comment line directly above — is recorded as a
+//! suppression instead of a violation. Suppressions are deliberate,
+//! reviewed escape hatches; the meta-test in `tests/engine.rs` pins
+//! which rules are allowed to have any at all.
+//!
+//! See DESIGN.md §15 for the policy rationale and how to add a pass.
+
+pub mod diag;
+pub mod engine;
+pub mod lexer;
+pub mod rules;
+
+pub use diag::{render_human, render_json, Diagnostic, Suppression};
+pub use engine::{check_source, run_workspace, Report};

@@ -1,0 +1,104 @@
+//! `ksegments-lint` — run the invariant passes over the workspace.
+//!
+//! Exit codes: 0 clean, 1 violations found, 2 usage or I/O error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use ksegments_lint::{render_human, render_json, rules};
+
+const USAGE: &str = "\
+ksegments-lint: in-repo invariant linter (DESIGN.md \u{a7}15)
+
+USAGE:
+    cargo run -p ksegments-lint [--] [OPTIONS]
+
+OPTIONS:
+    --root <dir>       workspace root holding crates/ (default: auto-
+                       detect from the working directory upward)
+    --format <fmt>     human (default) or json (ksegments-lint-v1)
+    --list-rules       print the rule ids and exit
+    --help             this text
+
+Suppress a finding with a trailing `// lint:allow(rule)` comment, or
+one on a standalone comment line directly above, with the reason
+alongside. The meta-test in crates/ksegments-lint/tests/engine.rs
+pins which rules may carry suppressions at all.
+";
+
+struct Args {
+    root: Option<PathBuf>,
+    json: bool,
+    list_rules: bool,
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut args = Args { root: None, json: false, list_rules: false };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => {
+                let v = it.next().ok_or("--root needs a directory")?;
+                args.root = Some(PathBuf::from(v));
+            }
+            "--format" => match it.next().as_deref() {
+                Some("human") => args.json = false,
+                Some("json") => args.json = true,
+                other => return Err(format!("--format expects human|json, got {other:?}")),
+            },
+            "--list-rules" => args.list_rules = true,
+            "--help" | "-h" => {
+                print!("{USAGE}");
+                std::process::exit(0);
+            }
+            other => return Err(format!("unknown argument {other:?} (see --help)")),
+        }
+    }
+    Ok(args)
+}
+
+fn main() -> ExitCode {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    if args.list_rules {
+        for id in rules::RULE_IDS {
+            println!("{id}");
+        }
+        return ExitCode::SUCCESS;
+    }
+    let root = match args.root {
+        Some(r) => r,
+        None => {
+            let cwd = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+            match ksegments_lint::engine::find_root(&cwd) {
+                Some(r) => r,
+                None => {
+                    eprintln!("error: no crates/ directory found; pass --root");
+                    return ExitCode::from(2);
+                }
+            }
+        }
+    };
+    let report = match ksegments_lint::run_workspace(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: scanning {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    if args.json {
+        println!("{}", render_json(&report));
+    } else {
+        print!("{}", render_human(&report));
+    }
+    if report.clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

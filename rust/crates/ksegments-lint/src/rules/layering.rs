@@ -1,0 +1,130 @@
+//! `layering`: the PR-8 crate DAG must hold — `ksegments-core`
+//! depends on nothing internal, `sim`/`sched`/`serve` are peers that
+//! depend only on core, the `ksegments` facade sits on all four, the
+//! CLI on the facade, and the linter on nothing. Enforced twice:
+//! `use`/path references in non-test `.rs` code (this [`Rule`]), and
+//! `[dependencies]` entries in each crate manifest
+//! ([`check_manifest`], driven by the engine). `[dev-dependencies]`
+//! are exempt — the core→facade doc-test cycle is sanctioned.
+
+use super::{allowed_deps, FileCtx, Rule};
+use crate::diag::Diagnostic;
+use crate::lexer::find_word;
+
+/// Internal crates as they appear in `.rs` paths (underscored).
+const CRATE_IDENTS: &[(&str, &str)] = &[
+    ("ksegments_core", "ksegments-core"),
+    ("ksegments_sim", "ksegments-sim"),
+    ("ksegments_sched", "ksegments-sched"),
+    ("ksegments_serve", "ksegments-serve"),
+];
+
+fn dep_ok(krate: &str, dep: &str) -> bool {
+    dep == krate || allowed_deps(krate).is_some_and(|deps| deps.contains(&dep))
+}
+
+fn violation(ctx: &FileCtx<'_>, line: usize, dep: &str) -> Diagnostic {
+    Diagnostic {
+        rule: "layering",
+        path: ctx.display_path.to_string(),
+        line,
+        message: format!(
+            "{} must not reference {dep}: the crate DAG allows {:?} \
+             (DESIGN.md \u{a7}13)",
+            ctx.krate,
+            allowed_deps(ctx.krate).unwrap_or(&[])
+        ),
+    }
+}
+
+pub struct Layering;
+
+impl Rule for Layering {
+    fn id(&self) -> &'static str {
+        "layering"
+    }
+
+    fn check(&self, ctx: &FileCtx<'_>, out: &mut Vec<Diagnostic>) {
+        for (idx, line) in ctx.file.lines.iter().enumerate() {
+            if line.in_test {
+                continue;
+            }
+            for (ident, dep) in CRATE_IDENTS {
+                if find_word(&line.code, ident).is_some() && !dep_ok(ctx.krate, dep) {
+                    out.push(violation(ctx, idx + 1, dep));
+                }
+            }
+            // the facade crate's ident is a prefix of the others, so
+            // match `ksegments::` paths explicitly — and only as a
+            // path ROOT: `predictors::ksegments::…` is core's own
+            // k-segments module, not the facade crate
+            let mut from = 0;
+            while let Some(off) = find_word(&line.code[from..], "ksegments") {
+                let pos = from + off;
+                let after = &line.code[pos + "ksegments".len()..];
+                let nested = pos > 0 && line.code.as_bytes()[pos - 1] == b':';
+                if after.starts_with("::") && !nested && !dep_ok(ctx.krate, "ksegments") {
+                    out.push(violation(ctx, idx + 1, "ksegments"));
+                }
+                from = pos + "ksegments".len();
+            }
+        }
+    }
+}
+
+/// Check one crate manifest's `[dependencies]` section against the
+/// DAG. `display_path` names the Cargo.toml in diagnostics.
+pub fn check_manifest(krate: &str, display_path: &str, toml_src: &str) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let mut in_deps = false;
+    for (idx, raw) in toml_src.lines().enumerate() {
+        let line = raw.trim();
+        if line.starts_with('[') {
+            in_deps = line == "[dependencies]";
+            continue;
+        }
+        if !in_deps || line.starts_with('#') {
+            continue;
+        }
+        // `ksegments-core.workspace = true` or `ksegments-core = {…}`
+        let key: String = line
+            .chars()
+            .take_while(|c| c.is_alphanumeric() || *c == '-' || *c == '_')
+            .collect();
+        if key.starts_with("ksegments") && !dep_ok(krate, &key) {
+            out.push(Diagnostic {
+                rule: "layering",
+                path: display_path.to_string(),
+                line: idx + 1,
+                message: format!(
+                    "{krate} must not depend on {key}: the crate DAG allows {:?} \
+                     (DESIGN.md \u{a7}13)",
+                    allowed_deps(krate).unwrap_or(&[])
+                ),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_sideways_edge_is_flagged() {
+        let toml = "[package]\nname = \"ksegments-sched\"\n\n[dependencies]\n\
+                    ksegments-core.workspace = true\nksegments-sim.workspace = true\n";
+        let diags = check_manifest("ksegments-sched", "x/Cargo.toml", toml);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].line, 6);
+        assert!(diags[0].message.contains("ksegments-sim"));
+    }
+
+    #[test]
+    fn manifest_dev_deps_are_exempt() {
+        let toml = "[dependencies]\nksegments-core.workspace = true\n\n\
+                    [dev-dependencies]\nksegments.workspace = true\n";
+        assert!(check_manifest("ksegments-sim", "x/Cargo.toml", toml).is_empty());
+    }
+}

@@ -1,0 +1,69 @@
+//! `map-iter-order`: modules whose output feeds reports, merges,
+//! grids or checkpoints must not use `HashMap`/`HashSet` at all —
+//! their iteration order is randomized per process, so any loop over
+//! one is a nondeterminism bug waiting for a reorder. The sanctioned
+//! substitutes are `BTreeMap`/`BTreeSet` or index-keyed `Vec`s.
+//!
+//! The pass bans the *types*, not just `.iter()` calls: a token-level
+//! linter cannot see through method calls (`values()`, `extend`,
+//! `from_iter`, serialization helpers), and every observed
+//! determinism bug in the literature starts with the map existing.
+
+use super::{FileCtx, Rule};
+use crate::diag::Diagnostic;
+use crate::lexer::contains_word;
+
+/// (crate, rel-path prefix) pairs of the order-sensitive modules.
+/// A trailing `/` makes the entry a directory prefix.
+const SCOPED: &[(&str, &str)] = &[
+    ("ksegments-core", "src/wastage.rs"),
+    ("ksegments-core", "src/telemetry/"),
+    ("ksegments-core", "src/parallel.rs"),
+    ("ksegments-sim", "src/"),
+    ("ksegments-sched", "src/sched/"),
+    ("ksegments-serve", "src/ingest/"),
+    ("ksegments-serve", "src/coordinator/"),
+];
+
+pub(crate) fn in_scope(krate: &str, rel_path: &str) -> bool {
+    SCOPED.iter().any(|(k, prefix)| {
+        *k == krate
+            && if prefix.ends_with('/') {
+                rel_path.starts_with(prefix)
+            } else {
+                rel_path == *prefix
+            }
+    })
+}
+
+pub struct MapIterOrder;
+
+impl Rule for MapIterOrder {
+    fn id(&self) -> &'static str {
+        "map-iter-order"
+    }
+
+    fn check(&self, ctx: &FileCtx<'_>, out: &mut Vec<Diagnostic>) {
+        if !in_scope(ctx.krate, ctx.rel_path) {
+            return;
+        }
+        for (idx, line) in ctx.file.lines.iter().enumerate() {
+            if line.in_test {
+                continue;
+            }
+            for ty in ["HashMap", "HashSet"] {
+                if contains_word(&line.code, ty) {
+                    out.push(Diagnostic {
+                        rule: self.id(),
+                        path: ctx.display_path.to_string(),
+                        line: idx + 1,
+                        message: format!(
+                            "{ty} in an order-sensitive module (iteration order is \
+                             nondeterministic); use BTreeMap/BTreeSet or index-keyed Vecs"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,69 @@
+//! The rule registry. Each pass is a [`Rule`] over one scrubbed file;
+//! the `layering` pass additionally checks crate manifests (see
+//! [`layering::check_manifest`]).
+//!
+//! To add a pass: implement [`Rule`] in a new submodule, add its id to
+//! [`RULE_IDS`], register it in [`all_rules`], and give it known-good
+//! and known-bad fixtures in `tests/engine.rs` (the engine test fails
+//! any rule id without a firing fixture).
+
+pub mod layering;
+pub mod map_iter_order;
+pub mod panic_policy;
+pub mod rng_discipline;
+pub mod wallclock;
+
+use crate::diag::Diagnostic;
+use crate::lexer::ScrubbedFile;
+
+/// Everything a rule may look at for one file.
+pub struct FileCtx<'a> {
+    /// Package name, e.g. `ksegments-serve`.
+    pub krate: &'a str,
+    /// Path inside the crate directory, e.g. `src/net/frame.rs`,
+    /// always with forward slashes.
+    pub rel_path: &'a str,
+    /// Repo-relative display path for diagnostics.
+    pub display_path: &'a str,
+    pub file: &'a ScrubbedFile,
+}
+
+pub trait Rule {
+    fn id(&self) -> &'static str;
+    /// Emit raw findings; the engine applies `lint:allow` filtering.
+    fn check(&self, ctx: &FileCtx<'_>, out: &mut Vec<Diagnostic>);
+}
+
+/// Every rule id, in registry order (stable for reports).
+pub const RULE_IDS: &[&str] =
+    &["layering", "map-iter-order", "panic-policy", "rng-discipline", "wallclock"];
+
+pub fn all_rules() -> Vec<Box<dyn Rule>> {
+    vec![
+        Box::new(layering::Layering),
+        Box::new(map_iter_order::MapIterOrder),
+        Box::new(panic_policy::PanicPolicy),
+        Box::new(rng_discipline::RngDiscipline),
+        Box::new(wallclock::Wallclock),
+    ]
+}
+
+/// The crate DAG of DESIGN.md §13, shared by the layering pass and
+/// its manifest check: internal crates each crate may depend on.
+/// `ksegments-lint` itself is pinned to nothing — the linter must
+/// build before everything else.
+pub const CRATE_DAG: &[(&str, &[&str])] = &[
+    ("ksegments-core", &[]),
+    ("ksegments-sim", &["ksegments-core"]),
+    ("ksegments-sched", &["ksegments-core"]),
+    ("ksegments-serve", &["ksegments-core"]),
+    ("ksegments", &["ksegments-core", "ksegments-sim", "ksegments-sched", "ksegments-serve"]),
+    ("ksegments-cli", &["ksegments"]),
+    ("ksegments-lint", &[]),
+];
+
+/// Allowed internal deps for `krate` (None for unknown crates — the
+/// engine reports those separately rather than guessing).
+pub fn allowed_deps(krate: &str) -> Option<&'static [&'static str]> {
+    CRATE_DAG.iter().find(|(k, _)| *k == krate).map(|(_, deps)| *deps)
+}

@@ -1,0 +1,119 @@
+//! `panic-policy`: request paths in the TCP front-end
+//! (`ksegments-serve/src/net/**`) must never panic — a panicking
+//! connection thread poisons shared state and silently drops every
+//! queued frame, where the protocol demands a typed error response
+//! (`bad_request`, `unavailable`, …). Banned in non-test code there:
+//! `unwrap`/`expect`, the panicking macros, and slice/array indexing
+//! (each `[i]` is an implicit assert). Guarded indexing that a human
+//! has proven in-bounds carries a `lint:allow(panic-policy)` with the
+//! proof in a comment.
+
+use super::{FileCtx, Rule};
+use crate::diag::Diagnostic;
+
+const CALLS: &[&str] = &[".unwrap()", ".expect("];
+const MACROS: &[&str] = &["panic!(", "unreachable!(", "todo!(", "unimplemented!("];
+
+/// Keywords that may directly precede `[` in type or expression
+/// position without forming an index expression (`&mut [u8]`, …).
+const NON_INDEX_WORDS: &[&str] = &[
+    "mut", "dyn", "ref", "as", "in", "return", "else", "match", "impl", "where", "move", "const",
+    "static", "break", "continue", "if", "while", "loop", "for", "let", "box", "unsafe", "async",
+    "await", "yield", "true", "false",
+];
+
+fn in_scope(ctx: &FileCtx<'_>) -> bool {
+    ctx.krate == "ksegments-serve" && ctx.rel_path.starts_with("src/net/")
+}
+
+/// Find index expressions: a `[` whose previous non-space character
+/// ends an identifier, `]`, or `)` — excluding keyword prefixes.
+fn has_indexing(code: &str) -> bool {
+    let chars: Vec<char> = code.chars().collect();
+    for (i, &c) in chars.iter().enumerate() {
+        if c != '[' {
+            continue;
+        }
+        let mut j = i;
+        while j > 0 && chars[j - 1] == ' ' {
+            j -= 1;
+        }
+        if j == 0 {
+            continue;
+        }
+        let prev = chars[j - 1];
+        if prev == ']' || prev == ')' {
+            return true;
+        }
+        if prev.is_alphanumeric() || prev == '_' {
+            // back up over the identifier and screen out keywords
+            let end = j;
+            let mut start = j;
+            while start > 0 && (chars[start - 1].is_alphanumeric() || chars[start - 1] == '_') {
+                start -= 1;
+            }
+            let word: String = chars[start..end].iter().collect();
+            if !NON_INDEX_WORDS.contains(&word.as_str()) {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+pub struct PanicPolicy;
+
+impl Rule for PanicPolicy {
+    fn id(&self) -> &'static str {
+        "panic-policy"
+    }
+
+    fn check(&self, ctx: &FileCtx<'_>, out: &mut Vec<Diagnostic>) {
+        if !in_scope(ctx) {
+            return;
+        }
+        for (idx, line) in ctx.file.lines.iter().enumerate() {
+            if line.in_test {
+                continue;
+            }
+            let mut hits: Vec<String> = Vec::new();
+            for pat in CALLS.iter().chain(MACROS) {
+                if line.code.contains(pat) {
+                    hits.push(format!("`{}`", pat.trim_end_matches('(')));
+                }
+            }
+            if has_indexing(&line.code) {
+                hits.push("slice/array indexing".to_string());
+            }
+            for what in hits {
+                out.push(Diagnostic {
+                    rule: self.id(),
+                    path: ctx.display_path.to_string(),
+                    line: idx + 1,
+                    message: format!(
+                        "{what} on a request path; answer with a typed protocol error \
+                         (bad_request/unavailable) instead of panicking"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_detector_basics() {
+        assert!(has_indexing("let x = buf[0];"));
+        assert!(has_indexing("let s = &pending[4..n];"));
+        assert!(has_indexing("f()[1]"));
+        assert!(has_indexing("m[k][j]"));
+        assert!(!has_indexing("fn f(p: &[u8]) -> &mut [u8] {"));
+        assert!(!has_indexing("let a = [0u8; 4];"));
+        assert!(!has_indexing("#[derive(Debug)]"));
+        assert!(!has_indexing("vec![1, 2]"));
+        assert!(!has_indexing("let v: Vec<[f64; 3]> = Vec::new();"));
+    }
+}

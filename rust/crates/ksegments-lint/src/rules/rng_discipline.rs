@@ -1,0 +1,45 @@
+//! `rng-discipline`: randomness is replayable only when every stream
+//! descends from the run's `--seed` root through `Rng::fork(label)`.
+//! A literal seed baked into non-test code (`Rng::new(42)`) silently
+//! decouples that code path from the seed the experiment records, so
+//! it is banned outside `#[cfg(test)]` (tests pin literal seeds on
+//! purpose).
+
+use super::{FileCtx, Rule};
+use crate::diag::Diagnostic;
+
+pub struct RngDiscipline;
+
+/// True when the text after `Rng::new(` starts with a numeric literal.
+fn literal_arg(after: &str) -> bool {
+    after.trim_start().starts_with(|c: char| c.is_ascii_digit())
+}
+
+impl Rule for RngDiscipline {
+    fn id(&self) -> &'static str {
+        "rng-discipline"
+    }
+
+    fn check(&self, ctx: &FileCtx<'_>, out: &mut Vec<Diagnostic>) {
+        for (idx, line) in ctx.file.lines.iter().enumerate() {
+            if line.in_test {
+                continue;
+            }
+            let mut rest = line.code.as_str();
+            while let Some(pos) = rest.find("Rng::new(") {
+                let after = &rest[pos + "Rng::new(".len()..];
+                if literal_arg(after) {
+                    out.push(Diagnostic {
+                        rule: self.id(),
+                        path: ctx.display_path.to_string(),
+                        line: idx + 1,
+                        message: "literal RNG seed; the root seed comes from --seed \
+                                  and every stream from Rng::fork(label)"
+                            .to_string(),
+                    });
+                }
+                rest = after;
+            }
+        }
+    }
+}

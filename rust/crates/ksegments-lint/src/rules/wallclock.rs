@@ -1,0 +1,47 @@
+//! `wallclock`: `Instant::now()` / `SystemTime::now()` are legal only
+//! in the timer module (`ksegments-core/src/util/timer.rs`), whose
+//! `Stopwatch` is the single sanctioned wall-clock site. Everything
+//! else must take time as data (event-clock seconds, recorded traces)
+//! or go through `Stopwatch` — reading the wall clock anywhere else
+//! breaks bit-identical replay. Test code is exempt.
+
+use super::{FileCtx, Rule};
+use crate::diag::Diagnostic;
+
+const PATTERNS: &[&str] = &["Instant::now", "SystemTime::now"];
+
+fn sanctioned(ctx: &FileCtx<'_>) -> bool {
+    ctx.krate == "ksegments-core" && ctx.rel_path == "src/util/timer.rs"
+}
+
+pub struct Wallclock;
+
+impl Rule for Wallclock {
+    fn id(&self) -> &'static str {
+        "wallclock"
+    }
+
+    fn check(&self, ctx: &FileCtx<'_>, out: &mut Vec<Diagnostic>) {
+        if sanctioned(ctx) {
+            return;
+        }
+        for (idx, line) in ctx.file.lines.iter().enumerate() {
+            if line.in_test {
+                continue;
+            }
+            for pat in PATTERNS {
+                if line.code.contains(pat) {
+                    out.push(Diagnostic {
+                        rule: self.id(),
+                        path: ctx.display_path.to_string(),
+                        line: idx + 1,
+                        message: format!(
+                            "{pat}() outside the sanctioned timer module \
+                             (util/timer.rs); route timing through Stopwatch"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}

@@ -6,7 +6,7 @@
 //! (predictor × failure rate × autoscale lag) for the failure-domain
 //! adversity sweeps.
 //!
-//! All mirror [`ksegments_sim::parallel::EvalGrid`]: cells are
+//! All mirror the sim evaluation grid (`EvalGrid`): cells are
 //! enumerated in a canonical major order and executed via
 //! [`parallel_map`]; every cell builds a fresh predictor and a fresh
 //! cluster (and, for [`DagGrid`], regenerates its instances from the
@@ -20,7 +20,7 @@ use crate::sched::{
 use ksegments_core::trace::Trace;
 use ksegments_core::units::Seconds;
 use ksegments_core::workload::WorkflowSpec;
-use ksegments_sim::parallel::{parallel_map, PredictorFactory};
+use ksegments_core::parallel::{parallel_map, PredictorFactory};
 
 /// Index quadruple identifying one cell of a [`SchedGrid`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

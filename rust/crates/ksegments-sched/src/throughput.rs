@@ -23,8 +23,8 @@
 use ksegments_core::predictors::MemoryPredictor;
 use ksegments_core::units::MemMiB;
 use ksegments_core::workload::{eager_workflow, generate_workflow_trace};
-use ksegments_sim::figures::{makers_for_keys, FitterChoice};
-use ksegments_sim::parallel::PredictorFactory;
+use ksegments_core::parallel::PredictorFactory;
+use ksegments_core::predictors::roster::{makers_for_keys, FitterChoice};
 
 use crate::cluster::NodeSpec;
 use crate::sched::{

@@ -141,7 +141,8 @@ pub fn read_frame<R: Read>(r: &mut R, max_frame: usize) -> io::Result<Option<Vec
     let mut prefix = [0u8; LEN_PREFIX];
     let mut got = 0;
     while got < LEN_PREFIX {
-        match r.read(&mut prefix[got..])? {
+        // in bounds: the loop guard keeps got < LEN_PREFIX
+        match r.read(&mut prefix[got..])? { // lint:allow(panic-policy)
             0 if got == 0 => return Ok(None),
             0 => {
                 return Err(io::Error::new(
@@ -172,7 +173,9 @@ pub fn take_frame(pending: &mut Vec<u8>, max_frame: usize) -> Result<Option<Vec<
     if pending.len() < LEN_PREFIX {
         return Ok(None);
     }
-    let len = u32::from_be_bytes([pending[0], pending[1], pending[2], pending[3]]) as usize;
+    // in bounds: the early return above guarantees LEN_PREFIX bytes
+    let prefix = [pending[0], pending[1], pending[2], pending[3]]; // lint:allow(panic-policy)
+    let len = u32::from_be_bytes(prefix) as usize;
     if len > max_frame {
         return Err(NetError::new(
             ErrCode::FrameTooLarge,
@@ -182,7 +185,8 @@ pub fn take_frame(pending: &mut Vec<u8>, max_frame: usize) -> Result<Option<Vec<
     if pending.len() < LEN_PREFIX + len {
         return Ok(None);
     }
-    let payload = pending[LEN_PREFIX..LEN_PREFIX + len].to_vec();
+    // in bounds: the length check above guarantees LEN_PREFIX + len bytes
+    let payload = pending[LEN_PREFIX..LEN_PREFIX + len].to_vec(); // lint:allow(panic-policy)
     pending.drain(..LEN_PREFIX + len);
     Ok(Some(payload))
 }
@@ -377,7 +381,9 @@ fn frame_start(buf: &mut Vec<u8>) {
 
 fn frame_finish(buf: &mut [u8]) {
     let len = (buf.len() - LEN_PREFIX) as u32;
-    buf[..LEN_PREFIX].copy_from_slice(&len.to_be_bytes());
+    // in bounds: every buf passed here was opened by frame_start,
+    // which reserves the LEN_PREFIX placeholder bytes
+    buf[..LEN_PREFIX].copy_from_slice(&len.to_be_bytes()); // lint:allow(panic-policy)
 }
 
 fn write_alloc<W: io::Write>(w: &mut JsonWriter<W>, alloc: &Allocation) -> io::Result<()> {

@@ -287,15 +287,28 @@ fn accept_loop(
         let _ = conn.join();
     }
     let per_shard = svc.shutdown_per_shard();
-    let checkpoint_out = match (checkpoint_out, ckpt) {
-        (Some(path), Some(ck)) => {
-            let ck = ck.lock().expect("checkpoint lock poisoned");
-            ck.save(&path).with_context(|| format!("saving checkpoint {}", path.display()))?;
-            Some(path)
-        }
-        _ => None,
-    };
+    let checkpoint_out = save_checkpoint_on_drain(checkpoint_out, ckpt)?;
     Ok(ServerReport { per_shard, net: counters.snapshot(), checkpoint_out })
+}
+
+/// Save the drain-time checkpoint when both a path and a recorder are
+/// configured. A poisoned recorder (a connection thread panicked
+/// mid-record) is a hard drain error, never a panic — and never a
+/// torn checkpoint file.
+fn save_checkpoint_on_drain(
+    checkpoint_out: Option<PathBuf>,
+    ckpt: SharedCheckpoint,
+) -> Result<Option<PathBuf>> {
+    match (checkpoint_out, ckpt) {
+        (Some(path), Some(ck)) => {
+            let ck = ck
+                .lock()
+                .map_err(|_| anyhow!("checkpoint recorder poisoned; refusing to save"))?;
+            ck.save(&path).with_context(|| format!("saving checkpoint {}", path.display()))?;
+            Ok(Some(path))
+        }
+        _ => Ok(None),
+    }
 }
 
 fn serve_connection(
@@ -357,7 +370,8 @@ fn serve_connection(
                 }
                 return Ok(());
             }
-            Ok(n) => pending.extend_from_slice(&tmp[..n]),
+            // in bounds: read() returns at most tmp.len() bytes
+            Ok(n) => pending.extend_from_slice(&tmp[..n]), // lint:allow(panic-policy)
             Err(e) if is_wait(&e) => {}
             Err(e) => return Err(e),
         }
@@ -391,6 +405,18 @@ fn handle_frame(
             &NetError::with_id(ErrCode::Unavailable, "prediction service is down", id),
         )
     };
+    // panic-policy: a poisoned checkpoint recorder (a connection
+    // thread panicked mid-record) answers with a typed error instead
+    // of panicking this thread too; the request is NOT applied to the
+    // service either, so recorded state and live state cannot diverge
+    // from each other
+    let poisoned = |resp: &mut Vec<u8>, counters: &NetCounters, id: u64| {
+        NetCounters::bump(&counters.errors);
+        write_error_frame(
+            resp,
+            &NetError::with_id(ErrCode::Unavailable, "checkpoint recorder poisoned", id),
+        )
+    };
     let (id, req) = match crate::net::frame::parse_request(payload) {
         Ok(parsed) => parsed,
         Err(err) => {
@@ -401,7 +427,10 @@ fn handle_frame(
     match req {
         NetRequest::Prime { task_type, default } => {
             if let Some(ck) = ckpt {
-                ck.lock().expect("checkpoint lock poisoned").record_default(&task_type, default);
+                match ck.lock() {
+                    Ok(mut ck) => ck.record_default(&task_type, default),
+                    Err(_) => return poisoned(resp, counters, id),
+                }
             }
             h.prime(&task_type, default);
             write_ok_frame(resp, id)
@@ -426,7 +455,10 @@ fn handle_frame(
         }
         NetRequest::Complete { run } => {
             if let Some(ck) = ckpt {
-                ck.lock().expect("checkpoint lock poisoned").record(&run);
+                match ck.lock() {
+                    Ok(mut ck) => ck.record(&run),
+                    Err(_) => return poisoned(resp, counters, id),
+                }
             }
             NetCounters::bump(&counters.completions);
             h.complete(*run);
@@ -434,9 +466,13 @@ fn handle_frame(
         }
         NetRequest::Replay { runs } => {
             if let Some(ck) = ckpt {
-                let mut ck = ck.lock().expect("checkpoint lock poisoned");
-                for run in &runs {
-                    ck.record(run);
+                match ck.lock() {
+                    Ok(mut ck) => {
+                        for run in &runs {
+                            ck.record(run);
+                        }
+                    }
+                    Err(_) => return poisoned(resp, counters, id),
                 }
             }
             let mut src = InMemorySource::from_runs(Vec::new(), runs);
@@ -472,6 +508,128 @@ fn handle_frame(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    use ksegments_core::predictors::default_config::DefaultConfigPredictor;
+    use ksegments_core::trace::{run_record, TaskRun, UsageSeries};
+    use ksegments_core::units::Seconds;
+    use ksegments_core::util::json::Json;
+
+    use crate::net::frame::{parse_response, NetResponse, LEN_PREFIX};
+
+    /// A checkpoint recorder whose mutex has been poisoned by a
+    /// panicking holder — the failure mode the typed `unavailable`
+    /// responses in `handle_frame` and the drain-save error path guard
+    /// against (regression tests for the former `expect()` sites).
+    fn poisoned_ckpt() -> Arc<Mutex<Checkpoint>> {
+        let ck = Arc::new(Mutex::new(Checkpoint::new(Checkpoint::DEFAULT_WINDOW)));
+        let c2 = ck.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = c2.lock().unwrap();
+            panic!("poisoning the recorder on purpose");
+        })
+        .join();
+        assert!(ck.lock().is_err(), "recorder must start poisoned");
+        ck
+    }
+
+    fn toy_run(seq: u64) -> TaskRun {
+        TaskRun {
+            task_type: "wf/task".into(),
+            input_mib: 10.0,
+            runtime: Seconds(4.0),
+            series: UsageSeries::new(2.0, vec![50.0, 100.0]),
+            seq,
+        }
+    }
+
+    /// Dispatch one request through `handle_frame` against a poisoned
+    /// recorder; returns the parsed response plus the net and service
+    /// counters after the call.
+    fn dispatch_poisoned(doc: Json) -> (NetResponse, NetSnapshot, ServiceStats) {
+        let svc = ShardedPredictionService::spawn(1, |_| Box::new(DefaultConfigPredictor::new()));
+        let h = svc.handle();
+        let stop = AtomicBool::new(false);
+        let counters = NetCounters::default();
+        let ckpt: SharedCheckpoint = Some(poisoned_ckpt());
+        let mut resp = Vec::new();
+        handle_frame(doc.to_string().as_bytes(), &h, &stop, &counters, &ckpt, &mut resp)
+            .expect("writing into a Vec cannot fail");
+        let parsed = parse_response(&resp[LEN_PREFIX..]).expect("well-formed response frame");
+        let net = counters.snapshot();
+        let stats = ServiceStats::aggregated(&svc.shutdown_per_shard());
+        (parsed, net, stats)
+    }
+
+    fn assert_poisoned_error(resp: &NetResponse, id: u64) {
+        assert!(!resp.ok);
+        assert_eq!(resp.id, Some(id));
+        let (code, msg) = resp.error.as_ref().expect("typed error body");
+        assert_eq!(code, "unavailable");
+        assert_eq!(msg, "checkpoint recorder poisoned");
+    }
+
+    #[test]
+    fn prime_on_poisoned_recorder_is_typed_error_not_panic() {
+        let doc = Json::obj(vec![
+            ("method", "prime".into()),
+            ("id", 7u64.into()),
+            ("task_type", "wf/task".into()),
+            ("default_mib", 2048.0.into()),
+        ]);
+        let (resp, net, stats) = dispatch_poisoned(doc);
+        assert_poisoned_error(&resp, 7);
+        assert_eq!(net.errors, 1);
+        // the prime was NOT applied: recorded state and live state
+        // stay in lockstep even when the recorder is lost
+        assert_eq!(stats.completions, 0);
+    }
+
+    #[test]
+    fn complete_on_poisoned_recorder_is_typed_error_not_panic() {
+        let doc = Json::obj(vec![
+            ("method", "complete".into()),
+            ("id", 8u64.into()),
+            ("run", run_record(&toy_run(0))),
+        ]);
+        let (resp, net, stats) = dispatch_poisoned(doc);
+        assert_poisoned_error(&resp, 8);
+        assert_eq!(net.errors, 1);
+        assert_eq!(net.completions, 0, "completion counter must not advance");
+        assert_eq!(stats.completions, 0, "service must not observe the run");
+    }
+
+    #[test]
+    fn replay_on_poisoned_recorder_is_typed_error_not_panic() {
+        let doc = Json::obj(vec![
+            ("method", "replay".into()),
+            ("id", 9u64.into()),
+            ("runs", Json::Arr(vec![run_record(&toy_run(0)), run_record(&toy_run(1))])),
+        ]);
+        let (resp, net, stats) = dispatch_poisoned(doc);
+        assert_poisoned_error(&resp, 9);
+        assert_eq!(net.errors, 1);
+        assert_eq!(net.replayed_runs, 0, "no run may be fed past the failed record");
+        assert_eq!(stats.predictions, 0);
+        assert_eq!(stats.completions, 0);
+    }
+
+    #[test]
+    fn drain_save_on_poisoned_recorder_is_error_not_panic() {
+        let dir = std::env::temp_dir().join("ksegments_poisoned_drain_test");
+        let path = dir.join("ck.json");
+        let err = save_checkpoint_on_drain(Some(path.clone()), Some(poisoned_ckpt()))
+            .expect_err("poisoned recorder must fail the drain");
+        assert!(err.to_string().contains("poisoned"), "unexpected error: {err:#}");
+        assert!(!path.exists(), "no torn checkpoint file may be written");
+    }
+
+    #[test]
+    fn drain_save_without_checkpoint_is_noop() {
+        assert!(matches!(save_checkpoint_on_drain(None, None), Ok(None)));
+        let ck = Arc::new(Mutex::new(Checkpoint::new(4)));
+        // recorder configured but no output path: nothing to save
+        assert!(matches!(save_checkpoint_on_drain(None, Some(ck)), Ok(None)));
+    }
 
     #[test]
     fn net_metrics_export_names() {

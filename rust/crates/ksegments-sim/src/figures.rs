@@ -5,15 +5,7 @@
 //! targets, and its rendered tables are what EXPERIMENTS.md records.
 
 use crate::parallel::{eval_cell, parallel_map, EvalGrid, PredictorFactory};
-use ksegments_core::ml::fitter::KsegFitter;
-use ksegments_core::predictors::adaptive_k::AdaptiveKPredictor;
-use ksegments_core::predictors::condor::CondorTriple;
-use ksegments_core::predictors::default_config::DefaultConfigPredictor;
-use ksegments_core::predictors::dynseg::DynSegPredictor;
-use ksegments_core::predictors::ensemble::EnsemblePredictor;
-use ksegments_core::predictors::ksegments::{KSegmentsConfig, KSegmentsPredictor, RetryStrategy};
-use ksegments_core::predictors::lr_witt::LrWittPredictor;
-use ksegments_core::predictors::ppm::PpmPredictor;
+use ksegments_core::predictors::ksegments::RetryStrategy;
 use ksegments_core::predictors::MemoryPredictor;
 use ksegments_core::scoring::simulate_attempt;
 use ksegments_core::trace::Trace;
@@ -21,127 +13,14 @@ use ksegments_core::units::{GbSeconds, MemMiB};
 use ksegments_core::wastage::{count_wins, render_table, MethodReport};
 use ksegments_core::workload::{eager_workflow, generate_workflow_trace, sarek_workflow};
 
-/// Which backend the k-Segments fit runs on.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum FitterChoice {
-    /// Pure-rust mirror (always available).
-    Native,
-    /// AOT JAX + Pallas module via PJRT (requires `make artifacts`).
-    Xla,
-}
-
-fn ksegments(choice: FitterChoice, k: usize, strategy: RetryStrategy) -> Box<dyn MemoryPredictor> {
-    match choice {
-        FitterChoice::Native => Box::new(KSegmentsPredictor::native(k, strategy)),
-        FitterChoice::Xla => {
-            let fitter: Box<dyn KsegFitter> = match ksegments_core::runtime::XlaFitter::load_default() {
-                Ok(f) => Box::new(f),
-                Err(e) => {
-                    eprintln!("warning: XLA fitter unavailable ({e:#}); using native fit");
-                    Box::new(ksegments_core::ml::fitter::NativeFitter)
-                }
-            };
-            let cfg = KSegmentsConfig { k, ..KSegmentsConfig::default() };
-            Box::new(KSegmentsPredictor::with_fitter(fitter, cfg, strategy))
-        }
-    }
-}
-
-/// CLI keys of the Fig. 7 predictor-zoo roster, in table-row order:
-/// the paper's §IV-C lineup plus the follow-up-literature competitors
-/// (Sizey ensemble, KS+ dynamic segmentation) and the HTCondor
-/// `3 * MemoryUsage` production heuristic.
-pub const METHOD_KEYS: &[&str] = &[
-    "default",
-    "ppm",
-    "ppm-improved",
-    "lr",
-    "ksegments-selective",
-    "ksegments-partial",
-    "ensemble",
-    "dynseg",
-    "condor",
-];
-
-/// Keys accepted by `--method` but not part of the default roster.
-pub const EXTRA_METHOD_KEYS: &[&str] = &["ksegments-adaptive"];
-
-/// Build one predictor by CLI key (`None` for unknown keys). The
-/// single source of truth for key → predictor, shared by the roster,
-/// the grid factories, and the CLI's `--method` plumbing.
-pub fn make_method(key: &str, choice: FitterChoice) -> Option<Box<dyn MemoryPredictor>> {
-    Some(match key {
-        "default" => Box::new(DefaultConfigPredictor::new()),
-        "ppm" => Box::new(PpmPredictor::original()),
-        "ppm-improved" => Box::new(PpmPredictor::improved()),
-        "lr" => Box::new(LrWittPredictor::paper_baseline()),
-        "ksegments-selective" => ksegments(choice, 4, RetryStrategy::Selective),
-        "ksegments-partial" => ksegments(choice, 4, RetryStrategy::Partial),
-        "ksegments-adaptive" => Box::new(AdaptiveKPredictor::native(RetryStrategy::Selective)),
-        "ensemble" => Box::new(EnsemblePredictor::new()),
-        "dynseg" => Box::new(DynSegPredictor::native(4, RetryStrategy::Selective)),
-        "condor" => Box::new(CondorTriple::new()),
-        _ => return None,
-    })
-}
-
-/// Resolve a `--method` selection — `"all"`, one key, or a comma list —
-/// into canonical roster keys (errors on unknown names).
-pub fn resolve_methods(selection: &str) -> Result<Vec<&'static str>, String> {
-    if selection == "all" {
-        return Ok(METHOD_KEYS.to_vec());
-    }
-    let mut out = Vec::new();
-    for part in selection.split(',').map(str::trim).filter(|s| !s.is_empty()) {
-        let key = METHOD_KEYS
-            .iter()
-            .chain(EXTRA_METHOD_KEYS)
-            .find(|k| **k == part)
-            .ok_or_else(|| {
-                format!(
-                    "unknown method {part:?} (expected \"all\" or any of: {}, {})",
-                    METHOD_KEYS.join(", "),
-                    EXTRA_METHOD_KEYS.join(", ")
-                )
-            })?;
-        out.push(*key);
-    }
-    if out.is_empty() {
-        return Err("empty method selection".into());
-    }
-    Ok(out)
-}
-
-/// Thread-safe factories for a resolved key list, in the given order.
-pub fn makers_for_keys(keys: &[&'static str], choice: FitterChoice) -> Vec<PredictorFactory> {
-    keys.iter()
-        .map(|&key| {
-            // membership check only — constructing a predictor here
-            // would load (and drop) the XLA artifacts once per key
-            assert!(
-                METHOD_KEYS.contains(&key) || EXTRA_METHOD_KEYS.contains(&key),
-                "unresolved method key {key:?}"
-            );
-            Box::new(move || make_method(key, choice).expect("resolved key")) as PredictorFactory
-        })
-        .collect()
-}
-
-/// The full Fig. 7 method roster (paper §IV-C + the predictor zoo).
-pub fn method_roster(choice: FitterChoice) -> Vec<Box<dyn MemoryPredictor>> {
-    METHOD_KEYS
-        .iter()
-        .map(|k| make_method(k, choice).expect("roster key"))
-        .collect()
-}
-
-/// Names in roster order (stable across runs; used by tables).
-pub fn method_names() -> Vec<String> {
-    method_roster(FitterChoice::Native)
-        .iter()
-        .map(|m| m.name())
-        .collect()
-}
+// The `--method` key registry moved to the core layer (the sched
+// sweeps need it too, and the crate DAG forbids a sideways sched → sim
+// edge); re-exported here so the historical `figures::…` paths keep
+// compiling.
+pub use ksegments_core::predictors::roster::{
+    make_ksegments, make_method, makers_for_keys, method_names, method_roster, resolve_methods,
+    FitterChoice, EXTRA_METHOD_KEYS, METHOD_KEYS,
+};
 
 /// The two paper workflows generated at a seed.
 pub fn paper_traces(seed: u64) -> Vec<Trace> {
@@ -320,7 +199,7 @@ pub fn run_fig8(
     // one independent cell per k, on the same worker pool as fig7
     let sweep = parallel_map(ks.len(), workers, |i| {
         let k = ks[i];
-        let rep = eval_cell(&|| ksegments(choice, k, RetryStrategy::Selective), &trace, 0.5);
+        let rep = eval_cell(&|| make_ksegments(choice, k, RetryStrategy::Selective), &trace, 0.5);
         (k, rep.avg_wastage_gbs())
     });
     Fig8Results { task: task.to_string(), sweep }
@@ -352,7 +231,7 @@ pub fn run_fig4(seed: u64, choice: FitterChoice) -> String {
     let trace = generate_workflow_trace(&eager_workflow(), seed).filtered(|ty| ty == task);
     let runs = trace.runs_of(task);
     let n_train = runs.len() / 2;
-    let mut m = ksegments(choice, 4, RetryStrategy::Selective);
+    let mut m = make_ksegments(choice, 4, RetryStrategy::Selective);
     m.prime(task, trace.default_alloc(task).unwrap());
     for run in &runs[..n_train] {
         m.observe(run);

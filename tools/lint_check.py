@@ -1,0 +1,101 @@
+#!/usr/bin/env python3
+"""Gate a fresh `ksegments-lint --format json` report against the
+committed invariants file.
+
+Usage: lint_check.py LINT_invariants.json FRESH_report.json
+
+Policy (mirrors tools/bench_check.py and DESIGN.md §15):
+  * schema must match exactly ("ksegments-lint-v1");
+  * violations must be empty -- the linter already exits non-zero on
+    any, this re-checks the artifact so the gate holds even if the
+    report was produced out-of-band;
+  * every suppression's rule must be on the committed whitelist
+    (today: panic-policy only -- the determinism passes carry zero
+    waivers, pinned again by the crate's own meta-test);
+  * per-file suppression COUNTS must match the committed map exactly.
+    Line numbers churn with unrelated edits, so they are context, not
+    gated. Adding or removing a `lint:allow` means editing
+    rust/LINT_invariants.json in the same PR -- that diff is the
+    review surface;
+  * files_scanned must not drop below min_files_scanned (a walker
+    regression that skips half the tree would otherwise pass
+    vacuously);
+  * a baseline marked "provisional": true records the fresh report and
+    passes (same placeholder convention as BENCH_*.json).
+"""
+
+import argparse
+import json
+import sys
+from collections import Counter
+
+
+def load(path):
+    try:
+        with open(path, encoding="utf-8") as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        sys.exit(f"lint_check: cannot read {path}: {e}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="committed LINT_invariants.json")
+    ap.add_argument("fresh", help="fresh ksegments-lint --format json report")
+    args = ap.parse_args()
+
+    base = load(args.baseline)
+    fresh = load(args.fresh)
+
+    if base.get("provisional"):
+        print("lint_check: baseline is provisional -- recording only, no gate.")
+        print(json.dumps(fresh, indent=2, sort_keys=True))
+        print(f'lint_check: commit this as {args.baseline} (with '
+              '"provisional": false) to arm the gate.')
+        return
+
+    failures = []
+    want_schema = base.get("schema")
+    if fresh.get("schema") != want_schema:
+        failures.append(f"schema mismatch: committed {want_schema!r}, "
+                        f"fresh {fresh.get('schema')!r}")
+
+    for v in fresh.get("violations", []):
+        failures.append(f"violation: {v.get('path')}:{v.get('line')} "
+                        f"[{v.get('rule')}] {v.get('message')}")
+
+    allowed_rules = set(base.get("suppression_rules", []))
+    got_counts = Counter()
+    for s in fresh.get("suppressions", []):
+        rule, path = s.get("rule"), s.get("path")
+        if rule not in allowed_rules:
+            failures.append(
+                f"suppression of {rule!r} at {path}:{s.get('line')} -- only "
+                f"{sorted(allowed_rules)} may carry lint:allow waivers")
+        got_counts[path] += 1
+
+    want_counts = {k: int(v) for k, v in base.get("suppressions", {}).items()}
+    for path in sorted(set(want_counts) | set(got_counts)):
+        want, got = want_counts.get(path, 0), got_counts.get(path, 0)
+        if want != got:
+            failures.append(
+                f"suppression count for {path}: committed {want}, fresh {got} "
+                "(update rust/LINT_invariants.json in the same PR that adds or "
+                "removes a lint:allow)")
+
+    floor = int(base.get("min_files_scanned", 0))
+    scanned = int(fresh.get("files_scanned", 0))
+    if scanned < floor:
+        failures.append(f"files_scanned {scanned} below floor {floor} -- the "
+                        "workspace walker is skipping files")
+
+    if failures:
+        for f in failures:
+            print(f"lint_check: FAIL: {f}", file=sys.stderr)
+        sys.exit(1)
+    print(f"lint_check: OK ({scanned} files, 0 violations, "
+          f"{sum(got_counts.values())} suppressions matching the committed map).")
+
+
+if __name__ == "__main__":
+    main()
